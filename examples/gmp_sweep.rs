@@ -1,0 +1,45 @@
+//! GMP sweep (§3.2): explore the throughput/memory/communication
+//! trade-off space that the group-MP extension opens up — the "sweet
+//! spot between pure DP and different MP group sizes" the conclusion
+//! claims was unavailable in previous work.
+//!
+//! Sweeps mp over {1, 2, 4, 8} on an 8-machine cluster (calibrated
+//! mode; pass `numeric` as argv[1] for full numeric fidelity) and
+//! prints throughput, per-worker memory, and the comm-time breakdown.
+//!
+//! ```bash
+//! cargo run --release --example gmp_sweep [numeric]
+//! ```
+
+use splitbrain::bench::{fig7b, fig7c, Fidelity};
+use splitbrain::coordinator::ClusterConfig;
+use splitbrain::runtime::RuntimeClient;
+
+fn main() -> anyhow::Result<()> {
+    let numeric = std::env::args().nth(1).as_deref() == Some("numeric");
+    let fidelity = if numeric {
+        Fidelity::Numeric { steps: 3 }
+    } else {
+        Fidelity::Calibrated
+    };
+    let rt = RuntimeClient::load("artifacts")?;
+    let base = ClusterConfig::default();
+
+    println!("== GMP sweep on 8 machines ({:?}) ==\n", fidelity);
+    let (comm_table, _) = fig7b(&rt, fidelity, &base)?;
+    println!("communication overhead vs MP group size (Fig. 7b):\n{}", comm_table.render());
+
+    let (trade_table, raw) = fig7c(&rt, fidelity, &base)?;
+    println!("throughput / memory trade-off (Fig. 7c):\n{}", trade_table.render());
+
+    // The headline trade-off, spelled out.
+    let (mp1_mem, mp1_ips) = (raw[0].1, raw[0].2);
+    for &(mp, mem, ips) in raw.iter().skip(1) {
+        println!(
+            "mp={mp}: {:.0}% of pure-DP throughput for {:.0}% of its parameter memory",
+            ips / mp1_ips * 100.0,
+            mem / mp1_mem * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Memory-stability diagnostic: executes one artifact in a tight loop
+//! and reports RSS growth per call. Used to find (and now guard against
+//! regressions of) the input-buffer leak in the vendored xla crate's
+//! C++ shim (`execute()` released input PjRtBuffers without freeing —
+//! see vendor/xla/xla_rs/xla_rs.cc and EXPERIMENTS.md §Perf L3).
+//!
+//! ```bash
+//! cargo run --release --example leakcheck [artifact] [iters]
+//! ```
+use splitbrain::runtime::{DType, HostTensor, RuntimeClient};
+use splitbrain::util::Rng;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+fn main() -> anyhow::Result<()> {
+    let rt = RuntimeClient::load("artifacts")?;
+    let name = std::env::args().nth(1).unwrap_or("fc1_fwd_k2".into());
+    let iters: usize = std::env::args().nth(2).map(|s| s.parse().unwrap()).unwrap_or(50);
+    let exe = rt.executable(&name)?;
+    let mut rng = Rng::new(1);
+    let inputs: Vec<HostTensor> = exe.spec().inputs.iter().map(|s| match s.dtype {
+        DType::F32 => HostTensor::f32(s.shape.clone(), rng.normal_vec(s.numel(), 0.02)),
+        DType::I32 => HostTensor::i32(s.shape.clone(), (0..s.numel()).map(|i| (i%10) as i32).collect()),
+    }).collect();
+    exe.run(&inputs)?;
+    let r0 = rss_mb();
+    for i in 0..iters {
+        exe.run(&inputs)?;
+        if (i+1) % 10 == 0 { println!("{name} iter {}: rss {:.1} MB (Δ {:.2} MB/iter)", i+1, rss_mb(), (rss_mb()-r0)/(i+1) as f64); }
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Partition inspector: Table 1 + the automatic network transformation
+//! of Listing 1 / Fig. 3, for every MP group size.
+//!
+//! Pure host-side (no artifacts needed):
+//! ```bash
+//! cargo run --release --example partition_inspect
+//! ```
+
+use splitbrain::bench::table1;
+use splitbrain::model::{ccr, partition_network, vgg11, Layer, PartitionConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Table 1: layer-wise parameters of the VGG variant ==\n");
+    println!("{}", table1().render());
+
+    println!("== CCR partitioning decisions (Listing 1 line 25) ==\n");
+    for l in vgg11().flatten() {
+        if let Layer::Linear { name, .. } = l {
+            let c = ccr::ccr(l);
+            println!(
+                "  {name}: ccr = {c:8.2}  -> {}",
+                if c > ccr::DEFAULT_CCR_THRESHOLD { "PARTITION" } else { "replicate" }
+            );
+        }
+    }
+
+    for mp in [1usize, 2, 4, 8] {
+        let t = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )?;
+        println!(
+            "\n== transformed network, mp={mp} (Fig. 3{}) ==",
+            if mp == 1 { " — identity: pure DP" } else { "" }
+        );
+        print!("{}", t.render());
+        println!(
+            "   per-worker weights: {} ({:.1}% of the local model)",
+            t.weight_count(),
+            t.weight_count() as f64 / 6_987_456.0 * 100.0
+        );
+    }
+    Ok(())
+}

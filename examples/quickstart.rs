@@ -1,0 +1,52 @@
+//! Quickstart: train the VGG-11 CIFAR variant on a 2-worker hybrid
+//! cluster (one MP group of 2) for 20 steps and print the loss curve.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use splitbrain::coordinator::{Cluster, ClusterConfig};
+use splitbrain::runtime::RuntimeClient;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Connect the PJRT runtime to the AOT artifacts.
+    let rt = RuntimeClient::load("artifacts")?;
+    println!(
+        "runtime: {} | batch {} | artifacts: {}",
+        rt.platform(),
+        rt.manifest.batch,
+        rt.manifest.artifacts.len()
+    );
+
+    // 2. Configure the cluster: 2 workers, MP group size 2 — the
+    //    smallest hybrid topology (Fig. 4's walkthrough).
+    let cfg = ClusterConfig {
+        n_workers: 2,
+        mp: 2,
+        lr: 0.02,
+        momentum: 0.9,
+        avg_period: 10,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut cluster = Cluster::new(&rt, cfg)?;
+    println!(
+        "cluster: {} workers, {} MP group(s); per-worker params {:.2} MB\n",
+        cluster.cfg.n_workers,
+        cluster.topo.n_groups(),
+        cluster.memory_report().param_mb()
+    );
+
+    // 3. Train.
+    for step in 1..=20 {
+        let m = cluster.step()?;
+        println!(
+            "step {step:>3}  loss {:.4}  (compute {:.0} ms + mp-comm {:.2} ms)",
+            m.loss,
+            m.compute_secs * 1e3,
+            m.mp_comm_secs * 1e3
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,291 @@
+"""AOT bridge: lower every SplitBrain execution segment to HLO *text*
+plus a manifest the Rust runtime parses.
+
+Why text, not ``lowered.compile().serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` rust crate binds) rejects
+(``proto.id() <= INT_MAX``). ``HloModuleProto::from_text_file`` re-parses
+and reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts produced (batch size B, MP group sizes K in --mp-sizes):
+
+  conv_fwd / conv_bwd        data-parallel conv front (any K)
+  full_step / full_eval      pure-DP fused step (mp=1 fast path)
+  head_step / head_fwd       replicated FC2 + softmax head (any K)
+  fc{0,1}_{fwd,bwd}_k{K}     MP shard segments, one set per K
+
+Each artifact is lowered with ``return_tuple=True``; the Rust side
+unwraps the tuple. The manifest (artifacts/manifest.txt) records, per
+artifact: file name and the name/dtype/shape of every input and output,
+in call order — the only contract the Rust runtime needs.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def conv_param_specs():
+    specs, names = [], []
+    for i, (cin, cout) in enumerate(model.CONV_CHANNELS):
+        specs += [spec((3, 3, cin, cout)), spec((cout,))]
+        names += [f"cw{i}", f"cb{i}"]
+    return specs, names
+
+
+def fc_param_specs(k: int = 1):
+    """FC0/FC1 column shards for group size k; FC2 replicated."""
+    (d0i, d0o), (d1i, d1o), (d2i, d2o) = model.FC_DIMS
+    specs = [
+        spec((d0i, d0o // k)),
+        spec((d0o // k,)),
+        spec((d1i, d1o // k)),
+        spec((d1o // k,)),
+        spec((d2i, d2o)),
+        spec((d2o,)),
+    ]
+    names = ["fw0", "fb0", "fw1", "fb1", "fw2", "fb2"]
+    return specs, names
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.lines = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, in_specs, in_names, out_names):
+        """Lower fn(*in_specs), write <name>.hlo.txt, append manifest."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+
+        out_specs = jax.eval_shape(fn, *in_specs)
+        flat, _ = jax.tree_util.tree_flatten(out_specs)
+        assert len(flat) == len(out_names), (name, len(flat), out_names)
+
+        self.lines.append(f"artifact {name} file={fname} sha256={digest}")
+        for n, s in zip(in_names, in_specs):
+            dims = ",".join(str(d) for d in s.shape) or "scalar"
+            self.lines.append(f"in {n} {s.dtype} {dims}")
+        for n, s in zip(out_names, flat):
+            dims = ",".join(str(d) for d in s.shape) or "scalar"
+            self.lines.append(f"out {n} {s.dtype} {dims}")
+        self.lines.append("end")
+        print(f"  {name:<16} {len(text)/1024:8.1f} KiB  {len(in_specs)} in / {len(flat)} out")
+
+    def finish(self, header_lines):
+        path = os.path.join(self.out_dir, "manifest.txt")
+        with open(path, "w") as f:
+            f.write("\n".join(header_lines + self.lines) + "\n")
+        print(f"wrote {path}")
+
+
+def build(out_dir: str, batch: int, mp_sizes, use_pallas_conv: bool):
+    em = Emitter(out_dir)
+    cp_specs, cp_names = conv_param_specs()
+    x_spec = spec((batch, model.IMG, model.IMG, 3))
+    lab_spec = spec((batch,), I32)
+    act_spec = spec((batch, model.FEATURE_DIM))
+
+    conv_grad_names = [f"g{n}" for n in cp_names]
+
+    # --- conv front (shared by every topology) ---
+    em.emit(
+        "conv_fwd",
+        lambda *a: model.conv_front_fwd(a[:-1], a[-1], use_pallas_conv=use_pallas_conv),
+        cp_specs + [x_spec],
+        cp_names + ["x"],
+        ["act"],
+    )
+    em.emit(
+        "conv_bwd",
+        lambda *a: model.conv_front_bwd(
+            a[:-2], a[-2], a[-1], use_pallas_conv=use_pallas_conv
+        ),
+        cp_specs + [x_spec, act_spec],
+        cp_names + ["x", "g_act"],
+        conv_grad_names,
+    )
+
+    # --- pure-DP fused step (mp=1) ---
+    fc_specs, fc_names = fc_param_specs(1)
+    fc_grad_names = [f"g{n}" for n in fc_names]
+    nc = len(cp_specs)
+    em.emit(
+        "full_step",
+        lambda *a: model.full_step(a[:nc], a[nc : nc + 6], a[-2], a[-1]),
+        cp_specs + fc_specs + [x_spec, lab_spec],
+        cp_names + fc_names + ["x", "labels"],
+        ["loss"] + conv_grad_names + fc_grad_names,
+    )
+    em.emit(
+        "full_eval",
+        lambda *a: model.full_eval(a[:nc], a[nc : nc + 6], a[-2], a[-1]),
+        cp_specs + fc_specs + [x_spec, lab_spec],
+        cp_names + fc_names + ["x", "labels"],
+        ["loss", "correct"],
+    )
+
+    # --- replicated head (any K: h1 is always full width) ---
+    (d2i, d2o) = model.FC_DIMS[2]
+    h1_spec = spec((batch, d2i))
+    em.emit(
+        "head_step",
+        model.head_step,
+        [spec((d2i, d2o)), spec((d2o,)), h1_spec, lab_spec],
+        ["fw2", "fb2", "h1", "labels"],
+        ["loss", "gfw2", "gfb2", "gh1"],
+    )
+    em.emit(
+        "head_fwd",
+        model.head_fwd,
+        [spec((d2i, d2o)), spec((d2o,)), h1_spec, lab_spec],
+        ["fw2", "fb2", "h1", "labels"],
+        ["loss", "correct"],
+    )
+
+    # --- MP shard segments, one set per group size ---
+    # k=1 is emitted too: the "segmented baseline" runs pure DP through
+    # the same Pallas-backed pipeline as the MP paths, so Table 2's
+    # DP-vs-MP comparison holds per-op efficiency constant.
+    (d0i, d0o), (d1i, d1o), _ = model.FC_DIMS
+    for k in mp_sizes:
+        assert d0o % k == 0 and d1o % k == 0 and batch % k == 0, (k, batch)
+        s0, s1 = d0o // k, d1o // k
+        em.emit(
+            f"fc0_fwd_k{k}",
+            model.fc_fwd,
+            [spec((d0i, s0)), spec((s0,)), act_spec],
+            ["fw0", "fb0", "act"],
+            ["h0l"],
+        )
+        em.emit(
+            f"fc0_bwd_k{k}",
+            model.fc_bwd,
+            [spec((d0i, s0)), spec((s0,)), act_spec, spec((batch, s0))],
+            ["fw0", "fb0", "act", "g_h0l"],
+            ["gfw0", "gfb0", "g_act"],
+        )
+        em.emit(
+            f"fc1_fwd_k{k}",
+            model.fc_fwd,
+            [spec((d1i, s1)), spec((s1,)), spec((batch, d1i))],
+            ["fw1", "fb1", "h0"],
+            ["h1l"],
+        )
+        em.emit(
+            f"fc1_bwd_k{k}",
+            model.fc_bwd,
+            [spec((d1i, s1)), spec((s1,)), spec((batch, d1i)), spec((batch, s1))],
+            ["fw1", "fb1", "h0", "g_h1l"],
+            ["gfw1", "gfb1", "g_h0"],
+        )
+        # Scheme-BK baselines (Krizhevsky'14 scheme 1): the FC stack
+        # processes the whole aggregated B*K batch in ONE pass. Same
+        # math, K-fold activation memory — the scalability objection the
+        # paper raises against BK (§3.1). Only needed for k > 1.
+        if k > 1:
+            bk = batch * k
+            em.emit(
+                f"fc0_fwd_k{k}bk",
+                model.fc_fwd,
+                [spec((d0i, s0)), spec((s0,)), spec((bk, d0i))],
+                ["fw0", "fb0", "act"],
+                ["h0l"],
+            )
+            em.emit(
+                f"fc0_bwd_k{k}bk",
+                model.fc_bwd,
+                [spec((d0i, s0)), spec((s0,)), spec((bk, d0i)), spec((bk, s0))],
+                ["fw0", "fb0", "act", "g_h0l"],
+                ["gfw0", "gfb0", "g_act"],
+            )
+            em.emit(
+                f"fc1_fwd_k{k}bk",
+                model.fc_fwd,
+                [spec((d1i, s1)), spec((s1,)), spec((bk, d1i))],
+                ["fw1", "fb1", "h0"],
+                ["h1l"],
+            )
+            em.emit(
+                f"fc1_bwd_k{k}bk",
+                model.fc_bwd,
+                [spec((d1i, s1)), spec((s1,)), spec((bk, d1i)), spec((bk, s1))],
+                ["fw1", "fb1", "h0", "g_h1l"],
+                ["gfw1", "gfb1", "g_h0"],
+            )
+            em.emit(
+                f"head_step_bk{k}",
+                model.head_step,
+                [spec((d2i, d2o)), spec((d2o,)), spec((bk, d2i)), spec((bk,), I32)],
+                ["fw2", "fb2", "h1", "labels"],
+                ["loss", "gfw2", "gfb2", "gh1"],
+            )
+
+    header = [
+        f"splitbrain-artifacts v1",
+        f"batch {batch}",
+        f"mp_sizes {','.join(str(k) for k in mp_sizes)}",
+        f"feature_dim {model.FEATURE_DIM}",
+        f"num_classes {model.NUM_CLASSES}",
+        f"pallas_conv {int(use_pallas_conv)}",
+    ]
+    em.finish(header)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument(
+        "--mp-sizes",
+        default="1,2,4,8",
+        help="comma-separated MP group sizes to emit shard segments for",
+    )
+    ap.add_argument(
+        "--pallas-conv",
+        action="store_true",
+        help="use the L1 Pallas conv kernel in the conv front (slower "
+        "on CPU interpret mode; the FC shards always use Pallas matmul)",
+    )
+    args = ap.parse_args()
+    mp_sizes = [int(s) for s in args.mp_sizes.split(",") if s]
+    print(f"lowering artifacts: batch={args.batch} mp_sizes={mp_sizes}")
+    build(args.out, args.batch, mp_sizes, args.pallas_conv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for SplitBrain's compute hot-spots.
+
+- ``matmul``: tiled MXU matmul with fused bias/relu epilogue — the FC
+  shard fprop/bprop workhorse.
+- ``conv2d_3x3``: im2col-in-VMEM 3x3 SAME convolution — the conv front.
+- ``ref``: pure-jnp oracles pytest compares both kernels against.
+"""
+
+from .conv2d import conv2d_3x3
+from .matmul import matmul
+
+__all__ = ["matmul", "conv2d_3x3"]

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: 3x3 SAME convolution via im2col-in-VMEM + MXU matmul.
+
+SplitBrain keeps convolutional layers data-parallel (they are compute
+heavy but parameter light, §3.1), so the conv front is the per-worker
+compute bottleneck. The TPU-shaped formulation (DESIGN.md
+§Hardware-Adaptation): instead of a CUDA-style thread-per-pixel direct
+convolution, each grid step loads one padded image into VMEM, builds the
+nine shifted views in registers (im2col without materialising the patch
+matrix in HBM), and issues a single (H*W, 9*Cin) @ (9*Cin, Cout) MXU
+matmul.
+
+VMEM per grid step for CIFAR shapes: (34*34*Cin + 9*Cin*Cout + H*W*Cout)
+floats — worst case Cin=Cout=256 at 8x8: ≈ 3.3 MiB, within budget.
+
+Like all L1 kernels this must run ``interpret=True`` on the CPU image;
+pytest checks it against ``ref.conv2d_ref`` (lax.conv) including a
+hypothesis sweep over channel counts and image sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3x3_kernel(x_ref, w_ref, b_ref, o_ref, *, h: int, wdt: int, relu: bool):
+    """One image per grid step. x_ref: (1, h+2, w+2, cin) padded input;
+    w_ref: (9*cin, cout); b_ref: (1, cout); o_ref: (1, h, w, cout)."""
+    cin = x_ref.shape[-1]
+    cout = o_ref.shape[-1]
+    x = x_ref[0]  # (h+2, w+2, cin)
+
+    # Nine shifted views, concatenated along channels -> (h, w, 9*cin).
+    # Offset order (dy, dx) row-major matches the weight reshape in
+    # conv2d()'s wrapper and ref.conv2d_ref's kernel layout.
+    patches = [
+        x[dy : dy + h, dx : dx + wdt, :] for dy in range(3) for dx in range(3)
+    ]
+    col = jnp.concatenate(patches, axis=-1).reshape(h * wdt, 9 * cin)
+
+    out = jnp.dot(col, w_ref[...], preferred_element_type=jnp.float32)
+    out = out + b_ref[...]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[0] = out.reshape(h, wdt, cout).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
+def conv2d_3x3(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    relu: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """3x3 stride-1 SAME conv, NHWC. x: (B,H,W,Cin), w: (3,3,Cin,Cout),
+    b: (Cout,). Returns (B,H,W,Cout)."""
+    bsz, h, wdt, cin = x.shape
+    assert w.shape[:3] == (3, 3, cin), (w.shape, x.shape)
+    cout = w.shape[3]
+
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    # (3,3,cin,cout) -> (9*cin, cout), (dy,dx) row-major to match the
+    # patch concatenation order in the kernel.
+    wmat = w.reshape(9 * cin, cout)
+    bmat = b.reshape(1, cout)
+
+    return pl.pallas_call(
+        functools.partial(_conv3x3_kernel, h=h, wdt=wdt, relu=relu),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, h + 2, wdt + 2, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((9 * cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wdt, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, wdt, cout), x.dtype),
+        interpret=interpret,
+    )(xp, wmat, bmat)
+
+
+def vmem_bytes(h: int, w: int, cin: int, cout: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step (one image)."""
+    return dtype_bytes * (
+        (h + 2) * (w + 2) * cin  # padded input image
+        + 9 * cin * cout  # weight matrix
+        + h * w * 9 * cin  # im2col patch matrix (register/VMEM temp)
+        + h * w * cout  # output tile
+    )

@@ -1,0 +1,183 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+This is the compute hot-spot of SplitBrain's model-parallel FC shards:
+every fprop/bprop through a partitioned ``LINEAR`` layer is one or more
+calls to this kernel (``y = act @ W_k``, ``gW = x^T @ gpre``,
+``gx = gpre @ W^T``).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates
+(M/bm, N/bn, K/bk) with the K axis innermost so a (bm, bn) f32
+accumulator tile lives in VMEM scratch across the K steps, and each
+(bm, bk) @ (bk, bn) step is a single MXU systolic-array pass with
+``preferred_element_type=f32``. Default tiles (bm=128, bn=128, bk=512)
+keep the VMEM working set at bm*bk + bk*bn + 2*bm*bn floats ≈ 832 KiB,
+comfortably inside the ~16 MiB VMEM budget, leaving room for
+double-buffering of the HBM->VMEM input streams.
+
+On this CPU-only image the kernel MUST run with ``interpret=True`` —
+real-TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot
+execute. Correctness is asserted against ``ref.matmul_ref`` in pytest
+(including a hypothesis sweep over shapes/tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, epilogue: str):
+    """Grid point (i, j, k): accumulate x[i,k] @ w[k,j] into the VMEM tile.
+
+    acc_ref persists across the K steps of a fixed (i, j) because the K
+    axis is the innermost grid dimension; the epilogue runs on the last
+    K step only and writes the output tile once.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if epilogue == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _mm_bias_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk: int, epilogue: str):
+    """Same as _mm_kernel but fuses a broadcast bias add in the epilogue."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...] + b_ref[...]
+        if epilogue == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+#: TPU-shaped default tiles (see module docstring): what a real Mosaic
+#: lowering would use. On the CPU-interpret path every *extra grid step*
+#: costs tens of milliseconds of interpreter machinery (measured in
+#: EXPERIMENTS.md §Perf), so the default `bm=bn=bk=None` resolves to a
+#: single-step grid covering the whole problem — numerically identical,
+#: ~20x faster under interpret, and the right choice for this backend.
+TPU_TILES = (128, 128, 512)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("epilogue", "bm", "bn", "bk", "interpret")
+)
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    epilogue: str = "none",
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """``y = epilogue(x @ w + bias)`` via the tiled Pallas kernel.
+
+    Shapes: x (M, K), w (K, N), bias (N,) or None. Arbitrary M/N/K are
+    supported by zero-padding up to the tile grid and slicing the result;
+    zero padding is exact for matmul and the bias/relu epilogue because
+    padded output rows/cols are sliced away.
+
+    Tile sizes default to a single grid step (the CPU-interpret optimum,
+    see `TPU_TILES` note); pass explicit `bm/bn/bk` to exercise real
+    multi-step tiling (the tests sweep this).
+    """
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        x.shape,
+        w.shape,
+    )
+    assert epilogue in ("none", "relu"), epilogue
+    m, kdim = x.shape
+    _, n = w.shape
+
+    # Clamp tiles to the (8-aligned) problem size so tiny operands do not
+    # inflate to a full 128x512 tile of zeros. `None` -> whole problem.
+    bm_ = min(bm or 1 << 30, _ceil_to(m, 8))
+    bn_ = min(bn or 1 << 30, _ceil_to(n, 8))
+    bk_ = min(bk or 1 << 30, _ceil_to(kdim, 8))
+    mp, np_, kp = _ceil_to(m, bm_), _ceil_to(n, bn_), _ceil_to(kdim, bk_)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - kdim))) if (mp, kp) != (m, kdim) else x
+    wp = jnp.pad(w, ((0, kp - kdim), (0, np_ - n))) if (kp, np_) != (kdim, n) else w
+
+    nk = kp // bk_
+    grid = (mp // bm_, np_ // bn_, nk)
+
+    x_spec = pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k))
+    w_spec = pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j))
+    acc_scratch = pltpu.VMEM((bm_, bn_), jnp.float32)
+
+    if bias is not None:
+        assert bias.shape == (n,), bias.shape
+        bp = (jnp.pad(bias, (0, np_ - n)) if np_ != n else bias).reshape(1, np_)
+        b_spec = pl.BlockSpec((1, bn_), lambda i, j, k: (0, j))
+        out = pl.pallas_call(
+            functools.partial(_mm_bias_kernel, nk=nk, epilogue=epilogue),
+            grid=grid,
+            in_specs=[x_spec, w_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+            scratch_shapes=[acc_scratch],
+            interpret=interpret,
+        )(xp, wp, bp)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_mm_kernel, nk=nk, epilogue=epilogue),
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+            scratch_shapes=[acc_scratch],
+            interpret=interpret,
+        )(xp, wp)
+
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM working-set estimate for one grid point (DESIGN.md §Perf):
+    one x tile, one w tile, the f32 accumulator and the output tile."""
+    return dtype_bytes * (bm * bk + bk * bn + 2 * bm * bn)
+
+
+def mxu_utilization_estimate(
+    m: int, n: int, k: int, bm: int, bn: int, bk: int
+) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    return (m * n * k) / float(mp * np_ * kp)

@@ -1,0 +1,76 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the pytest suite (and hypothesis sweeps)
+compare the kernels against. They are intentionally written with plain
+jax.numpy / lax primitives — no Pallas — so a bug cannot be shared
+between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    epilogue: str = "none",
+) -> jax.Array:
+    """y = epilogue(x @ w + bias), f32 accumulation."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    if bias is not None:
+        y = y + bias
+    if epilogue == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, relu: bool = False
+) -> jax.Array:
+    """3x3 stride-1 SAME conv, NHWC, via lax.conv_general_dilated."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def fc_fwd_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """relu(x @ w + b) — the FC shard forward segment."""
+    return jnp.maximum(jnp.dot(x, w) + b, 0.0)
+
+
+def fc_bwd_ref(x, w, b, gy):
+    """Manual VJP of fc_fwd_ref; returns (gw, gb, gx). Ground truth for
+    the Pallas-backed backward segment in model.py."""
+    pre = jnp.dot(x, w) + b
+    gpre = gy * (pre > 0.0)
+    gw = jnp.dot(x.T, gpre)
+    gb = jnp.sum(gpre, axis=0)
+    gx = jnp.dot(gpre, w.T)
+    return gw, gb, gx
+
+
+def head_ref(h, w, b, labels):
+    """Replicated classification head: logits -> log_softmax -> NLL mean.
+    Returns (loss, gw, gb, gh) — ground truth for model.head_step."""
+
+    def loss_fn(h_, w_, b_):
+        logits = jnp.dot(h_, w_) + b_
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+    loss, (gh, gw, gb) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(h, w, b)
+    return loss, gw, gb, gh

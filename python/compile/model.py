@@ -1,0 +1,329 @@
+"""L2: the VGG-11 CIFAR variant (Table 1 of the paper), decomposed into
+the exact execution *segments* the SplitBrain Rust coordinator schedules.
+
+The paper's hybrid scheme (§3.1, scheme B/K of Krizhevsky's "one weird
+trick") splits the network at the first FC layer:
+
+  conv front (data parallel, full replica)        -> conv_front_fwd/bwd
+  [modulo layer: Rust exchanges B/K examples]
+  FC0 4096->1024/K shard, relu                    -> fc0_fwd / fc0_bwd
+  [shard layer: Rust allgathers 1024/K -> 1024]
+  FC1 1024->1024/K shard, relu                    -> fc1_fwd / fc1_bwd
+  [shard layer: Rust allgathers 1024/K -> 1024]
+  FC2 1024->10 replicated + log_softmax + NLL     -> head_step
+  (FC2's CCR is below threshold -> not partitioned; see Listing 1)
+
+All inter-worker communication (modulo, shard, model averaging) lives in
+Rust — each segment here is a pure, single-worker function, so one HLO
+artifact per (segment, K) pair is enough for every cluster topology.
+
+The FC shard segments call the L1 Pallas ``kernels.matmul`` so the
+kernel lowers into the same HLO the Rust runtime executes. Backward
+segments use manual VJPs (Pallas calls are not differentiable), each
+validated against jax autodiff of the reference in pytest.
+
+Parameter convention (flat, in order):
+  conv: (w0,b0, .. w6,b6)  w: (3,3,cin,cout) HWIO, b: (cout,)
+  fc:   w0 (4096,1024) b0 (1024,) w1 (1024,1024) b1 (1024,)
+        w2 (1024,10)  b2 (10,)
+Shards are column slices: w0_k = w0[:, k*1024/K : (k+1)*1024/K].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+from .kernels.conv2d import conv2d_3x3
+
+# ---------------------------------------------------------------------------
+# Architecture constants (Table 1).
+
+CONV_CHANNELS: List[Tuple[int, int]] = [
+    (3, 64),  # Conv0   1728 params
+    (64, 64),  # Conv1  36864
+    (64, 128),  # Conv2  73728
+    (128, 128),  # Conv3 147456
+    (128, 256),  # Conv4 294912
+    (256, 256),  # Conv5 589824
+    (256, 256),  # Conv6 589824
+]
+# Max-pool after conv indices 1, 3 and 6: 32 -> 16 -> 8 -> 4.
+POOL_AFTER = (1, 3, 6)
+IMG = 32
+FEATURE_DIM = 256 * 4 * 4  # 4096
+FC_DIMS: List[Tuple[int, int]] = [(4096, 1024), (1024, 1024), (1024, 10)]
+NUM_CLASSES = 10
+
+
+def param_counts() -> dict:
+    """Layer-wise parameter counts (weights only, as in Table 1)."""
+    out = {}
+    for i, (cin, cout) in enumerate(CONV_CHANNELS):
+        out[f"Conv{i}"] = 9 * cin * cout
+    for i, (din, dout) in enumerate(FC_DIMS):
+        out[f"FC{i}"] = din * dout
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Initialization (He for conv/fc, zeros for biases).
+
+
+def init_params(seed: int = 0):
+    """Returns (conv_params, fc_params) as flat lists of arrays."""
+    key = jax.random.PRNGKey(seed)
+    conv, fc = [], []
+    for cin, cout in CONV_CHANNELS:
+        key, k1 = jax.random.split(key)
+        std = (2.0 / (9 * cin)) ** 0.5
+        conv.append(jax.random.normal(k1, (3, 3, cin, cout), jnp.float32) * std)
+        conv.append(jnp.zeros((cout,), jnp.float32))
+    for din, dout in FC_DIMS:
+        key, k1 = jax.random.split(key)
+        std = (2.0 / din) ** 0.5
+        fc.append(jax.random.normal(k1, (din, dout), jnp.float32) * std)
+        fc.append(jnp.zeros((dout,), jnp.float32))
+    return conv, fc
+
+
+def shard_fc_params(fc: Sequence[jax.Array], k: int, iproc: int):
+    """Column-slice FC0/FC1 for MP shard ``iproc`` of ``k``; FC2 is
+    replicated (below the CCR threshold, Listing 1 line 25)."""
+    w0, b0, w1, b1, w2, b2 = fc
+    s0 = FC_DIMS[0][1] // k
+    s1 = FC_DIMS[1][1] // k
+    return [
+        w0[:, iproc * s0 : (iproc + 1) * s0],
+        b0[iproc * s0 : (iproc + 1) * s0],
+        w1[:, iproc * s1 : (iproc + 1) * s1],
+        b1[iproc * s1 : (iproc + 1) * s1],
+        w2,
+        b2,
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Conv front (data-parallel replica). `use_pallas_conv` swaps in the L1
+# conv kernel; default lax.conv — the paper's partitioning contribution
+# concerns the FC stack, and XLA's native conv keeps artifact sizes and
+# CPU step times representative (DESIGN.md §Perf).
+
+
+def _conv(x, w, b, use_pallas_conv: bool):
+    if use_pallas_conv:
+        return conv2d_3x3(x, w, b, relu=True)
+    y = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return jnp.maximum(y + b, 0.0)
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def conv_front(conv_params: Sequence[jax.Array], x: jax.Array,
+               use_pallas_conv: bool = False) -> jax.Array:
+    """x: (B,32,32,3) -> activations (B,4096)."""
+    h = x
+    for i in range(len(CONV_CHANNELS)):
+        w, b = conv_params[2 * i], conv_params[2 * i + 1]
+        h = _conv(h, w, b, use_pallas_conv)
+        if i in POOL_AFTER:
+            h = _pool(h)
+    return h.reshape(h.shape[0], -1)
+
+
+def conv_front_fwd(conv_params, x, *, use_pallas_conv=False):
+    return (conv_front(conv_params, x, use_pallas_conv),)
+
+
+def conv_front_bwd(conv_params, x, g_act, *, use_pallas_conv=False):
+    """Gradients of the conv front w.r.t. its parameters, given the
+    gradient of the flattened activations. Rematerialises the forward
+    (jax.vjp) — the deliberate memory/compute trade recorded in
+    DESIGN.md §Perf."""
+    _, vjp = jax.vjp(lambda p: conv_front(p, x, use_pallas_conv), list(conv_params))
+    (grads,) = vjp(g_act)
+    return tuple(grads)
+
+
+# ---------------------------------------------------------------------------
+# FC shard segments (model parallel). Forward: Pallas matmul with fused
+# bias+relu. Backward: manual VJP, all three matmuls on the Pallas kernel.
+
+
+def fc_fwd(w, b, x):
+    """relu(x @ w + b) on the Pallas kernel. x: (B, din) full width,
+    w: (din, dout/K) shard."""
+    return (matmul(x, w, b, epilogue="relu"),)
+
+
+def fc_bwd(w, b, x, gy):
+    """Manual VJP of fc_fwd. Returns (gw, gb, gx_partial) where
+    gx_partial is this shard's *partial* gradient w.r.t. the full-width
+    input — the Rust shard/modulo layer reduces partials across the MP
+    group (Fig. 5b)."""
+    pre = matmul(x, w, b, epilogue="none")
+    gpre = gy * (pre > 0.0).astype(gy.dtype)
+    gw = matmul(x.T, gpre)
+    gb = jnp.sum(gpre, axis=0)
+    gx = matmul(gpre, w.T)
+    return gw, gb, gx
+
+
+# ---------------------------------------------------------------------------
+# Replicated head: FC2 + log_softmax + mean NLL, fused fwd+bwd. Every MP
+# group member runs this identically on the allgathered h1 (the shard
+# layer before LOG_SOFTMAX in Listing 1 lines 36-38 restores full width),
+# so its backward input gradient is *complete*, not partial.
+
+
+def head_step(w2, b2, h1, labels):
+    """Returns (loss, gw2, gb2, gh1_full). labels: (B,) int32."""
+    bsz = h1.shape[0]
+    logits = matmul(h1, w2, b2, epilogue="none")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    # Manual softmax-NLL gradient: (softmax - onehot)/B.
+    p = jnp.exp(logp)
+    onehot = jax.nn.one_hot(labels, NUM_CLASSES, dtype=p.dtype)
+    glogits = (p - onehot) / bsz
+    gw2 = matmul(h1.T, glogits)
+    gb2 = jnp.sum(glogits, axis=0)
+    gh1 = matmul(glogits, w2.T)
+    return loss, gw2, gb2, gh1
+
+
+def head_fwd(w2, b2, h1, labels):
+    """Loss + accuracy count only (validation path)."""
+    logits = matmul(h1, w2, b2, epilogue="none")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Pure-DP fast path: one fused loss-and-grads step over the full local
+# model (used when mp=1 — no modulo/shard exchange at all).
+
+
+def full_loss(conv_params, fc_params, x, labels):
+    act = conv_front(conv_params, x)
+    h = act
+    w0, b0, w1, b1, w2, b2 = fc_params
+    h = jnp.maximum(jnp.dot(h, w0) + b0, 0.0)
+    h = jnp.maximum(jnp.dot(h, w1) + b1, 0.0)
+    logits = jnp.dot(h, w2) + b2
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def full_step(conv_params, fc_params, x, labels):
+    """Returns (loss, conv_grads..., fc_grads...) flat."""
+    loss, (gc, gf) = jax.value_and_grad(full_loss, argnums=(0, 1))(
+        list(conv_params), list(fc_params), x, labels
+    )
+    return (loss, *gc, *gf)
+
+
+def full_eval(conv_params, fc_params, x, labels):
+    """(loss, #correct) for validation."""
+    act = conv_front(conv_params, x)
+    w0, b0, w1, b1, w2, b2 = fc_params
+    h = jnp.maximum(jnp.dot(act, w0) + b0, 0.0)
+    h = jnp.maximum(jnp.dot(h, w1) + b1, 0.0)
+    logits = jnp.dot(h, w2) + b2
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Reference hybrid step (pure jnp, single "virtual cluster" in one
+# process): ground truth for the Rust coordinator's numerics. Used by
+# pytest only — never lowered.
+
+
+def hybrid_step_reference(conv_params, fc_params, xs, labels, k: int):
+    """Simulates one SplitBrain step for an MP group of size ``k`` with
+    per-worker batches ``xs[i]: (B,...)``, ``labels[i]: (B,)``.
+
+    Returns (mean_loss, per-worker conv grads, per-shard fc grads) using
+    the modulo-layer schedule: iteration j assembles a full batch from
+    every worker's j-th B/K slice; FC grads accumulate over the K
+    iterations and are divided by K (§3.1 "the gradients are divided by
+    K for the FC layers to learn").
+    """
+    bsz = xs[0].shape[0]
+    size = bsz // k
+    acts = [conv_front(conv_params, xs[i]) for i in range(k)]
+    fcs = [shard_fc_params(fc_params, k, i) for i in range(k)]
+
+    g_acts = [jnp.zeros_like(acts[i]) for i in range(k)]
+    g_fcs = [[jnp.zeros_like(p) for p in fcs[i]] for i in range(k)]
+    losses = []
+
+    for j in range(k):  # modulo iterations
+        # Modulo fprop: full batch = concat of every worker's j-th slice.
+        batch = jnp.concatenate(
+            [acts[i][j * size : (j + 1) * size] for i in range(k)], axis=0
+        )
+        labs = jnp.concatenate(
+            [labels[i][j * size : (j + 1) * size] for i in range(k)], axis=0
+        )
+        # FC0 shards + allgather (shard layer).
+        h0l = [fc_fwd(fcs[i][0], fcs[i][1], batch)[0] for i in range(k)]
+        h0 = jnp.concatenate(h0l, axis=1)
+        # FC1 shards + allgather.
+        h1l = [fc_fwd(fcs[i][2], fcs[i][3], h0)[0] for i in range(k)]
+        h1 = jnp.concatenate(h1l, axis=1)
+        # Replicated head (identical on every worker).
+        loss, gw2, gb2, gh1 = head_step(fcs[0][4], fcs[0][5], h1, labs)
+        losses.append(loss)
+
+        # Shard bwd for FC1: slice the (complete) gh1, then reduce the
+        # partial full-width gradients of h0 across shards.
+        s1 = FC_DIMS[1][1] // k
+        gh0 = jnp.zeros_like(h0)
+        for i in range(k):
+            gw1, gb1, gh0_part = fc_bwd(
+                fcs[i][2], fcs[i][3], h0, gh1[:, i * s1 : (i + 1) * s1]
+            )
+            g_fcs[i][2] += gw1
+            g_fcs[i][3] += gb1
+            gh0 += gh0_part
+        # Shard bwd for FC0 likewise.
+        s0 = FC_DIMS[0][1] // k
+        gbatch = jnp.zeros_like(batch)
+        for i in range(k):
+            gw0, gb0, gb_part = fc_bwd(
+                fcs[i][0], fcs[i][1], batch, gh0[:, i * s0 : (i + 1) * s0]
+            )
+            g_fcs[i][0] += gw0
+            g_fcs[i][1] += gb0
+            gbatch += gb_part
+        for i in range(k):
+            g_fcs[i][4] += gw2
+            g_fcs[i][5] += gb2
+        # Modulo bwd: route each slice of gbatch back to its owner.
+        for i in range(k):
+            g_acts[i] = g_acts[i].at[j * size : (j + 1) * size].set(
+                gbatch[i * size : (i + 1) * size]
+            )
+
+    # LR compensation: FC params saw K assembled batches per step.
+    g_fcs = [[g / k for g in gs] for gs in g_fcs]
+    conv_grads = [
+        conv_front_bwd(conv_params, xs[i], g_acts[i]) for i in range(k)
+    ]
+    return jnp.mean(jnp.stack(losses)), conv_grads, g_fcs

@@ -1,0 +1,103 @@
+"""AOT pipeline tests: manifest format, artifact inventory, HLO sanity.
+
+These run against a fresh lowering into a tmpdir (not the checked-in
+artifacts/), so they validate the generator itself.
+"""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(d), batch=8, mp_sizes=[1, 2], use_pallas_conv=False)
+    return str(d)
+
+
+def parse_manifest(path):
+    header, artifacts, cur = {}, {}, None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            tok = line.split()
+            if tok[0] == "artifact":
+                cur = {"name": tok[1], "ins": [], "outs": []}
+                for kv in tok[2:]:
+                    k, v = kv.split("=", 1)
+                    cur[k] = v
+                artifacts[tok[1]] = cur
+            elif tok[0] == "in":
+                cur["ins"].append((tok[1], tok[2], tok[3]))
+            elif tok[0] == "out":
+                cur["outs"].append((tok[1], tok[2], tok[3]))
+            elif tok[0] == "end":
+                cur = None
+            elif cur is None and len(tok) >= 2:
+                header[tok[0]] = " ".join(tok[1:])
+    return header, artifacts
+
+
+class TestManifest:
+    def test_header(self, outdir):
+        header, _ = parse_manifest(os.path.join(outdir, "manifest.txt"))
+        assert header["batch"] == "8"
+        assert header["mp_sizes"] == "1,2"
+        assert header["feature_dim"] == str(model.FEATURE_DIM)
+
+    def test_expected_artifact_set(self, outdir):
+        _, arts = parse_manifest(os.path.join(outdir, "manifest.txt"))
+        expected = {
+            "conv_fwd", "conv_bwd", "full_step", "full_eval",
+            "head_step", "head_fwd",
+            # k=1 segmented-baseline set (same pipeline as MP paths)
+            "fc0_fwd_k1", "fc0_bwd_k1", "fc1_fwd_k1", "fc1_bwd_k1",
+            # B/K and B scheme segments for k=2
+            "fc0_fwd_k2", "fc0_bwd_k2", "fc1_fwd_k2", "fc1_bwd_k2",
+            # scheme-BK (aggregated B*K batch) baselines for k=2
+            "fc0_fwd_k2bk", "fc0_bwd_k2bk", "fc1_fwd_k2bk", "fc1_bwd_k2bk",
+            "head_step_bk2",
+        }
+        assert set(arts) == expected
+
+    def test_files_exist_and_are_hlo(self, outdir):
+        _, arts = parse_manifest(os.path.join(outdir, "manifest.txt"))
+        for a in arts.values():
+            path = os.path.join(outdir, a["file"])
+            assert os.path.exists(path), path
+            text = open(path).read()
+            assert "ENTRY" in text and "HloModule" in text
+
+    def test_conv_fwd_signature(self, outdir):
+        _, arts = parse_manifest(os.path.join(outdir, "manifest.txt"))
+        a = arts["conv_fwd"]
+        assert len(a["ins"]) == 15  # 7 conv layers * (w, b) + x
+        assert a["ins"][-1] == ("x", "float32", "8,32,32,3")
+        assert a["outs"] == [("act", "float32", f"8,{model.FEATURE_DIM}")]
+
+    def test_fc0_shard_shapes_for_k2(self, outdir):
+        _, arts = parse_manifest(os.path.join(outdir, "manifest.txt"))
+        a = arts["fc0_fwd_k2"]
+        assert ("fw0", "float32", "4096,512") in a["ins"]
+        assert a["outs"] == [("h0l", "float32", "8,512")]
+
+    def test_full_step_grad_arity(self, outdir):
+        _, arts = parse_manifest(os.path.join(outdir, "manifest.txt"))
+        a = arts["full_step"]
+        assert len(a["outs"]) == 1 + 14 + 6  # loss + conv grads + fc grads
+
+    def test_labels_are_i32(self, outdir):
+        _, arts = parse_manifest(os.path.join(outdir, "manifest.txt"))
+        assert ("labels", "int32", "8") in arts["full_step"]["ins"]
+
+
+class TestShapes:
+    def test_batch_divisibility_guard(self, tmp_path):
+        # B=6 not divisible by k=4 must be rejected.
+        with pytest.raises(AssertionError):
+            aot.build(str(tmp_path), batch=6, mp_sizes=[4], use_pallas_conv=False)

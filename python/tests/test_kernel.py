@@ -1,0 +1,193 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+This is the core correctness signal for the compute layer: every matmul
+the Rust hot path executes went through these kernels at lowering time.
+Includes hypothesis sweeps over shapes, tiles and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, conv2d_3x3
+from compile.kernels import ref
+from compile.kernels.matmul import mxu_utilization_estimate, vmem_bytes
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def assert_close(a, b, atol=2e-5, rtol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+
+
+class TestMatmul:
+    def test_square(self):
+        x, w = randf(64, 64), randf(64, 64)
+        assert_close(matmul(x, w), ref.matmul_ref(x, w))
+
+    def test_paper_fc0_shard_shape(self):
+        # The exact FC0 shard shape for K=2 at B=32 (the hot path).
+        x, w, b = randf(32, 4096, scale=0.1), randf(4096, 512, scale=0.02), randf(512)
+        assert_close(
+            matmul(x, w, b, epilogue="relu"),
+            ref.matmul_ref(x, w, b, epilogue="relu"),
+            atol=1e-4,
+            rtol=1e-4,
+        )
+
+    def test_bias_no_relu(self):
+        x, w, b = randf(16, 128), randf(128, 256), randf(256)
+        assert_close(matmul(x, w, b), ref.matmul_ref(x, w, b))
+
+    def test_relu_no_bias(self):
+        x, w = randf(16, 128), randf(128, 256)
+        assert_close(
+            matmul(x, w, epilogue="relu"), ref.matmul_ref(x, w, epilogue="relu")
+        )
+
+    def test_non_divisible_everything(self):
+        x, w, b = randf(7, 33), randf(33, 13), randf(13)
+        assert_close(matmul(x, w, b), ref.matmul_ref(x, w, b))
+
+    def test_single_row_col(self):
+        x, w = randf(1, 100), randf(100, 1)
+        assert_close(matmul(x, w), ref.matmul_ref(x, w))
+
+    def test_k_axis_accumulation_multiple_steps(self):
+        # K=2048 with bk=512 -> 4 accumulation steps over the VMEM tile.
+        x, w = randf(8, 2048, scale=0.05), randf(2048, 64, scale=0.05)
+        assert_close(matmul(x, w, bk=512), ref.matmul_ref(x, w), atol=1e-4, rtol=1e-4)
+
+    def test_custom_tiles_match_default(self):
+        x, w = randf(48, 300), randf(300, 72)
+        assert_close(
+            matmul(x, w, bm=16, bn=24, bk=64), ref.matmul_ref(x, w), atol=1e-4, rtol=1e-4
+        )
+
+    def test_zero_input(self):
+        x, w = jnp.zeros((8, 16)), randf(16, 8)
+        assert_close(matmul(x, w), jnp.zeros((8, 8)))
+
+    def test_relu_clamps_negative(self):
+        x = -jnp.ones((4, 4))
+        w = jnp.eye(4)
+        out = matmul(x, w, epilogue="relu")
+        assert float(jnp.max(out)) == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 96),
+        n=st.integers(1, 70),
+        bias=st.booleans(),
+        epi=st.sampled_from(["none", "relu"]),
+    )
+    def test_hypothesis_shapes(self, m, k, n, bias, epi):
+        x, w = randf(m, k, scale=0.3), randf(k, n, scale=0.3)
+        b = randf(n) if bias else None
+        assert_close(
+            matmul(x, w, b, epilogue=epi),
+            ref.matmul_ref(x, w, b, epilogue=epi),
+            atol=1e-4,
+            rtol=1e-4,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bm=st.sampled_from([8, 16, 32, 128]),
+        bn=st.sampled_from([8, 32, 128]),
+        bk=st.sampled_from([16, 64, 512]),
+    )
+    def test_hypothesis_tiles(self, bm, bn, bk):
+        x, w, b = randf(33, 130, scale=0.2), randf(130, 50, scale=0.2), randf(50)
+        assert_close(
+            matmul(x, w, b, epilogue="relu", bm=bm, bn=bn, bk=bk),
+            ref.matmul_ref(x, w, b, epilogue="relu"),
+            atol=1e-4,
+            rtol=1e-4,
+        )
+
+    def test_vmem_budget_default_tiles(self):
+        # DESIGN.md §Perf: default tiles must fit VMEM with double-buffer room.
+        assert vmem_bytes(128, 128, 512) <= 4 * 1024 * 1024
+
+    def test_mxu_utilization_full_tiles(self):
+        assert mxu_utilization_estimate(128, 128, 512, 128, 128, 512) == 1.0
+
+    def test_mxu_utilization_padded(self):
+        u = mxu_utilization_estimate(32, 10, 100, 32, 16, 128)
+        assert 0 < u < 1
+        assert abs(u - (32 * 10 * 100) / (32 * 16 * 128)) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+
+
+class TestConv2d:
+    def test_cifar_first_layer(self):
+        x, w, b = randf(4, 32, 32, 3), randf(3, 3, 3, 64, scale=0.2), randf(64)
+        assert_close(
+            conv2d_3x3(x, w, b), ref.conv2d_ref(x, w, b), atol=1e-4, rtol=1e-4
+        )
+
+    def test_relu_fused(self):
+        x, w, b = randf(2, 8, 8, 16), randf(3, 3, 16, 32, scale=0.2), randf(32)
+        assert_close(
+            conv2d_3x3(x, w, b, relu=True),
+            ref.conv2d_ref(x, w, b, relu=True),
+            atol=1e-4,
+            rtol=1e-4,
+        )
+
+    def test_deep_channels(self):
+        # The Conv6 shape class: 256 -> 256 at 8x8.
+        x, w, b = randf(1, 8, 8, 256, scale=0.1), randf(3, 3, 256, 256, scale=0.02), randf(256)
+        assert_close(
+            conv2d_3x3(x, w, b), ref.conv2d_ref(x, w, b), atol=1e-3, rtol=1e-3
+        )
+
+    def test_identity_kernel(self):
+        # A center-tap identity filter must reproduce the input exactly.
+        x = randf(2, 6, 6, 4)
+        w = np.zeros((3, 3, 4, 4), np.float32)
+        for c in range(4):
+            w[1, 1, c, c] = 1.0
+        out = conv2d_3x3(x, jnp.asarray(w), jnp.zeros(4))
+        assert_close(out, x)
+
+    def test_batch_independence(self):
+        x, w, b = randf(3, 8, 8, 8), randf(3, 3, 8, 8, scale=0.2), randf(8)
+        full = conv2d_3x3(x, w, b)
+        for i in range(3):
+            single = conv2d_3x3(x[i : i + 1], w, b)
+            assert_close(single, full[i : i + 1])
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        hw=st.sampled_from([4, 5, 8, 11, 16]),
+        cin=st.sampled_from([1, 3, 8, 16]),
+        cout=st.sampled_from([1, 8, 32]),
+        relu=st.booleans(),
+    )
+    def test_hypothesis_conv_shapes(self, b, hw, cin, cout, relu):
+        x = randf(b, hw, hw, cin, scale=0.3)
+        w = randf(3, 3, cin, cout, scale=0.2)
+        bias = randf(cout)
+        assert_close(
+            conv2d_3x3(x, w, bias, relu=relu),
+            ref.conv2d_ref(x, w, bias, relu=relu),
+            atol=1e-4,
+            rtol=1e-4,
+        )

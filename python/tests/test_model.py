@@ -1,0 +1,214 @@
+"""L2 model correctness: segments vs jax autodiff, and the hybrid
+(modulo/shard) decomposition vs monolithic training.
+
+``test_hybrid_matches_monolithic`` is the theorem of the repo: one
+SplitBrain step over an MP group of K workers — modulo exchange, FC
+shards, shard-layer allgather/reduce, replicated head, grad/K — produces
+*bit-level-equivalent-math* gradients to ordinary SGD on the full model:
+  conv grads (worker i)  == grad of mean loss over worker i's local batch
+  fc shard grads (avg/K) == grad of mean loss over the group's K*B batch
+This is exactly what the Rust coordinator's integration tests assert
+again end-to-end through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def randf(*shape, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def assert_close(a, b, atol=1e-4, rtol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=3)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    x = randf(8, 32, 32, 3, scale=0.5)
+    labels = jnp.asarray(RNG.integers(0, 10, 8), jnp.int32)
+    return x, labels
+
+
+# ---------------------------------------------------------------------------
+# Table 1: architecture bookkeeping.
+
+
+class TestArchitecture:
+    def test_param_counts_match_table1(self):
+        counts = model.param_counts()
+        assert counts["Conv0"] == 1728
+        assert counts["Conv1"] == 36864
+        assert counts["Conv2"] == 73728
+        assert counts["Conv3"] == 147456
+        assert counts["Conv4"] == 294912
+        assert counts["Conv5"] == 589824
+        assert counts["Conv6"] == 589824
+        assert counts["FC0"] == 4194304
+        assert counts["FC1"] == 1048576
+        assert counts["FC2"] == 10240
+
+    def test_fc_fraction_is_75_percent(self):
+        counts = model.param_counts()
+        fc = sum(v for k, v in counts.items() if k.startswith("FC"))
+        total = sum(counts.values())
+        assert abs(fc / total * 100 - 75.17) < 0.05  # paper: 75.17%
+
+    def test_feature_dim(self):
+        conv, _ = model.init_params(0)
+        act = model.conv_front(conv, jnp.zeros((2, 32, 32, 3)))
+        assert act.shape == (2, model.FEATURE_DIM)
+
+    def test_shard_shapes(self):
+        _, fc = model.init_params(0)
+        for k in (2, 4, 8):
+            sh = model.shard_fc_params(fc, k, 0)
+            assert sh[0].shape == (4096, 1024 // k)
+            assert sh[2].shape == (1024, 1024 // k)
+            assert sh[4].shape == (1024, 10)  # FC2 replicated
+
+    def test_shards_tile_the_full_matrix(self):
+        _, fc = model.init_params(0)
+        k = 4
+        w0 = jnp.concatenate(
+            [model.shard_fc_params(fc, k, i)[0] for i in range(k)], axis=1
+        )
+        assert_close(w0, fc[0], atol=0, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# Segment-level gradients vs autodiff.
+
+
+class TestSegments:
+    def test_conv_bwd_matches_autodiff(self, params, batch):
+        conv, _ = params
+        x, _ = batch
+        g_act = randf(8, model.FEATURE_DIM, scale=0.01)
+        grads = model.conv_front_bwd(conv, x, g_act)
+
+        def f(p):
+            return jnp.vdot(model.conv_front(p, x), g_act)
+
+        auto = jax.grad(f)(list(conv))
+        for g, a in zip(grads, auto):
+            assert_close(g, a)
+
+    def test_fc_fwd_matches_ref(self):
+        x, w, b = randf(8, 64), randf(64, 32, scale=0.1), randf(32)
+        assert_close(model.fc_fwd(w, b, x)[0], ref.fc_fwd_ref(x, w, b))
+
+    def test_fc_bwd_matches_autodiff(self):
+        x, w, b = randf(8, 64), randf(64, 32, scale=0.1), randf(32)
+        gy = randf(8, 32)
+        gw, gb, gx = model.fc_bwd(w, b, x, gy)
+
+        def f(w_, b_, x_):
+            return jnp.vdot(ref.fc_fwd_ref(x_, w_, b_), gy)
+
+        aw, ab, ax = jax.grad(f, argnums=(0, 1, 2))(w, b, x)
+        assert_close(gw, aw)
+        assert_close(gb, ab)
+        assert_close(gx, ax)
+
+    def test_head_step_matches_ref(self):
+        h = randf(8, 1024, scale=0.2)
+        w, b = randf(1024, 10, scale=0.05), randf(10, scale=0.1)
+        labels = jnp.asarray(RNG.integers(0, 10, 8), jnp.int32)
+        loss, gw, gb, gh = model.head_step(w, b, h, labels)
+        rl, rgw, rgb, rgh = ref.head_ref(h, w, b, labels)
+        assert_close(loss, rl)
+        assert_close(gw, rgw)
+        assert_close(gb, rgb)
+        assert_close(gh, rgh)
+
+    def test_head_fwd_loss_consistent_with_step(self):
+        h = randf(8, 1024, scale=0.2)
+        w, b = randf(1024, 10, scale=0.05), randf(10, scale=0.1)
+        labels = jnp.asarray(RNG.integers(0, 10, 8), jnp.int32)
+        l1, _ = model.head_fwd(w, b, h, labels)
+        l2 = model.head_step(w, b, h, labels)[0]
+        assert_close(l1, l2)
+
+    def test_full_step_loss_positive(self, params, batch):
+        conv, fc = params
+        x, labels = batch
+        out = model.full_step(conv, fc, x, labels)
+        assert float(out[0]) > 0.0
+        assert len(out) == 1 + 14 + 6
+
+    def test_full_eval_correct_bounded(self, params, batch):
+        conv, fc = params
+        x, labels = batch
+        _, correct = model.full_eval(conv, fc, x, labels)
+        assert 0 <= int(correct) <= x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# The decomposition theorem.
+
+
+class TestHybridEquivalence:
+    @pytest.mark.parametrize("k", [2, 4])
+    def test_hybrid_matches_monolithic(self, params, k):
+        conv, fc = params
+        bsz = 8
+        xs = [randf(bsz, 32, 32, 3, scale=0.5) for _ in range(k)]
+        labels = [jnp.asarray(RNG.integers(0, 10, bsz), jnp.int32) for _ in range(k)]
+
+        loss_h, conv_grads, fc_grads = model.hybrid_step_reference(
+            conv, fc, xs, labels, k
+        )
+
+        # (1) conv grads for worker i == autodiff over worker i's batch
+        #     with the full (unsharded) FC params.
+        for i in range(k):
+            out = model.full_step(conv, fc, xs[i], labels[i])
+            auto_conv = out[1 : 1 + 14]
+            for g, a in zip(conv_grads[i], auto_conv):
+                assert_close(g, a, atol=3e-4, rtol=3e-4)
+
+        # (2) fc shard grads (already /K) == sliced autodiff grads of the
+        #     mean loss over the concatenated K*B-example batch.
+        xcat = jnp.concatenate(xs, 0)
+        lcat = jnp.concatenate(labels, 0)
+        out = model.full_step(conv, fc, xcat, lcat)
+        loss_full, gfc_full = out[0], out[15:]
+        s0, s1 = 1024 // k, 1024 // k
+        for i in range(k):
+            gw0, gb0, gw1, gb1, gw2, gb2 = fc_grads[i]
+            assert_close(gw0, gfc_full[0][:, i * s0 : (i + 1) * s0], atol=3e-4, rtol=3e-4)
+            assert_close(gb0, gfc_full[1][i * s0 : (i + 1) * s0], atol=3e-4, rtol=3e-4)
+            assert_close(gw1, gfc_full[2][:, i * s1 : (i + 1) * s1], atol=3e-4, rtol=3e-4)
+            assert_close(gb1, gfc_full[3][i * s1 : (i + 1) * s1], atol=3e-4, rtol=3e-4)
+            assert_close(gw2, gfc_full[4], atol=3e-4, rtol=3e-4)
+            assert_close(gb2, gfc_full[5], atol=3e-4, rtol=3e-4)
+
+        # (3) mean modulo-iteration loss == loss over the full batch.
+        assert_close(loss_h, loss_full, atol=1e-5, rtol=1e-5)
+
+    def test_k1_degenerates_to_local(self, params):
+        conv, fc = params
+        x = randf(8, 32, 32, 3, scale=0.5)
+        labels = jnp.asarray(RNG.integers(0, 10, 8), jnp.int32)
+        loss_h, conv_grads, fc_grads = model.hybrid_step_reference(
+            conv, fc, [x], [labels], 1
+        )
+        out = model.full_step(conv, fc, x, labels)
+        assert_close(loss_h, out[0], atol=1e-5, rtol=1e-5)
+        for g, a in zip(conv_grads[0], out[1:15]):
+            assert_close(g, a, atol=3e-4, rtol=3e-4)
+        for g, a in zip(fc_grads[0], out[15:]):
+            assert_close(g, a, atol=3e-4, rtol=3e-4)

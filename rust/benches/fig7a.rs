@@ -1,0 +1,39 @@
+//! Bench: regenerate **Fig. 7a** — near-linear throughput scaling at
+//! MP group size 2 across machine counts {2,4,8,16,32}.
+//!
+//! The paper's claim: "the throughput scaling with different numbers of
+//! machines for MP group size 2 is nearly linear". We report images/sec
+//! and the speedup relative to perfect linear scaling.
+
+use splitbrain::bench::{fig7a, Fidelity};
+use splitbrain::coordinator::ClusterConfig;
+use splitbrain::runtime::RuntimeClient;
+
+fn main() -> anyhow::Result<()> {
+    let numeric = std::env::args().any(|a| a == "--numeric");
+    let fidelity = if numeric {
+        Fidelity::Numeric { steps: 3 }
+    } else {
+        Fidelity::Calibrated
+    };
+    let rt = RuntimeClient::load("artifacts")?;
+    let base = ClusterConfig::default();
+
+    println!("=== Fig. 7a: throughput scaling at MP=2 ({fidelity:?}) ===\n");
+    let (table, raw) = fig7a(&rt, fidelity, &base)?;
+    println!("{}", table.render());
+
+    // Linearity metric: efficiency at the largest scale.
+    let per_machine_2 = raw[0].1 / raw[0].0 as f64;
+    let last = raw.last().unwrap();
+    let eff = (last.1 / last.0 as f64) / per_machine_2;
+    println!(
+        "parallel efficiency at {} machines: {:.1}% (paper: nearly linear; >85% expected)",
+        last.0,
+        eff * 100.0
+    );
+    if eff < 0.85 {
+        println!("WARNING: scaling fell below the paper's nearly-linear claim");
+    }
+    Ok(())
+}

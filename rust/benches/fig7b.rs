@@ -1,0 +1,55 @@
+//! Bench: regenerate **Fig. 7b** — communication overhead w.r.t. MP
+//! group size on a cluster of eight machines.
+//!
+//! The paper's claims: larger MP group size increases (MP)
+//! communication drastically, while DP exchange volume *shrinks* (fewer
+//! replicated/shard-peer parameters per ring); at mp=2 the total
+//! overhead is comparable to pure DP.
+
+use splitbrain::bench::{fig7b, Fidelity};
+use splitbrain::comm::CommCategory;
+use splitbrain::coordinator::ClusterConfig;
+use splitbrain::runtime::RuntimeClient;
+
+fn main() -> anyhow::Result<()> {
+    let numeric = std::env::args().any(|a| a == "--numeric");
+    let fidelity = if numeric {
+        Fidelity::Numeric { steps: 3 }
+    } else {
+        Fidelity::Calibrated
+    };
+    let rt = RuntimeClient::load("artifacts")?;
+    let base = ClusterConfig::default();
+
+    println!("=== Fig. 7b: communication overhead vs MP group size, 8 machines ({fidelity:?}) ===\n");
+    let (table, raw) = fig7b(&rt, fidelity, &base)?;
+    println!("{}", table.render());
+
+    // Per-category byte breakdown for the largest mp, from the trace.
+    let rep = splitbrain::bench::experiments::run_config(&rt, 8, 8, fidelity, &base)?;
+    println!("per-category volumes at mp=8 (busiest rank, whole run):");
+    for cat in CommCategory::ALL {
+        let b = rep.trace.bytes(cat);
+        if b > 0 {
+            println!(
+                "  {cat:<14} {:>10.2} MB   {:>8.3} ms",
+                b as f64 / 1e6,
+                rep.trace.seconds(cat) * 1e3
+            );
+        }
+    }
+
+    // Paper-shape checks.
+    let mp_comm = |mp: usize| raw.iter().find(|r| r.0 == mp).unwrap().2;
+    let dp_comm = |mp: usize| raw.iter().find(|r| r.0 == mp).unwrap().3;
+    println!("\nshape checks:");
+    println!(
+        "  [{}] MP comm grows drastically with group size (mp8 > 4x mp2)",
+        if mp_comm(8) > 4.0 * mp_comm(2) { "ok" } else { "MISS" }
+    );
+    println!(
+        "  [{}] DP exchange shrinks as mp grows",
+        if dp_comm(8) < dp_comm(1) { "ok" } else { "MISS" }
+    );
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate **Fig. 7c** — throughput trade-off with per-worker
+//! memory usage across MP group sizes on eight machines.
+//!
+//! The paper's claims: pure DP is the throughput ceiling with the most
+//! memory; full MP (Krizhevsky'14, mp=N) is the floor with the least;
+//! GMP exposes the configurable frontier in between while beating
+//! full-MP throughput.
+
+use splitbrain::bench::{fig7c, Fidelity};
+use splitbrain::coordinator::ClusterConfig;
+use splitbrain::runtime::RuntimeClient;
+
+fn main() -> anyhow::Result<()> {
+    let numeric = std::env::args().any(|a| a == "--numeric");
+    let fidelity = if numeric {
+        Fidelity::Numeric { steps: 3 }
+    } else {
+        Fidelity::Calibrated
+    };
+    let rt = RuntimeClient::load("artifacts")?;
+    let base = ClusterConfig::default();
+
+    println!("=== Fig. 7c: throughput vs memory, 8 machines ({fidelity:?}) ===\n");
+    let (table, raw) = fig7c(&rt, fidelity, &base)?;
+    println!("{}", table.render());
+
+    println!("frontier (memory down => throughput down, monotone):");
+    let mut ok = true;
+    for w in raw.windows(2) {
+        let (mp0, mem0, ips0) = w[0];
+        let (mp1, mem1, ips1) = w[1];
+        let mono = mem1 < mem0 && ips1 <= ips0 * 1.05;
+        ok &= mono;
+        println!(
+            "  mp {mp0} -> {mp1}: memory {:.2} -> {:.2} MB, throughput {:.0} -> {:.0} img/s [{}]",
+            mem0, mem1, ips0, ips1,
+            if mono { "ok" } else { "MISS" }
+        );
+    }
+    println!(
+        "\nmemory saving at mp=8: {:.1}% (paper abstract: up to 67%)",
+        (1.0 - raw[3].1 / raw[0].1) * 100.0
+    );
+    if !ok {
+        println!("WARNING: frontier not monotone on this host");
+    }
+    Ok(())
+}

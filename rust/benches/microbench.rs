@@ -1,0 +1,115 @@
+//! Microbenchmarks of the Layer-3 hot path: per-artifact PJRT execution
+//! times, host-side staging (slice/gather/SGD), fabric collectives, and
+//! the tensor<->literal boundary. This is the profile the §Perf
+//! iteration log in EXPERIMENTS.md is based on.
+
+use splitbrain::comm::collective::ring_allreduce_mean;
+use splitbrain::comm::fabric::{Fabric, Tag};
+use splitbrain::coordinator::{ModuloPlan, ShardBwdMode, ShardPlan};
+use splitbrain::runtime::{DType, HostTensor, RuntimeClient};
+use splitbrain::train::Sgd;
+use splitbrain::util::{Rng, Stats, Table, Timer};
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> Stats {
+    let mut s = Stats::new();
+    f(); // warmup
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        s.push(t.elapsed_secs() * 1e3); // ms
+    }
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = RuntimeClient::load("artifacts")?;
+    let b = rt.manifest.batch;
+    let mut rng = Rng::new(3);
+    let mut table = Table::new(vec!["op", "ms/call (mean ± sd)", "notes"]);
+
+    // --- PJRT artifacts ---
+    for name in [
+        "conv_fwd", "conv_bwd", "full_step", "fc0_fwd_k2", "fc0_bwd_k2",
+        "fc1_fwd_k2", "fc1_bwd_k2", "head_step",
+    ] {
+        if rt.manifest.get(name).is_err() {
+            continue;
+        }
+        let exe = rt.executable(name)?;
+        let inputs: Vec<HostTensor> = exe
+            .spec()
+            .inputs
+            .iter()
+            .map(|s| match s.dtype {
+                DType::F32 => HostTensor::f32(s.shape.clone(), rng.normal_vec(s.numel(), 0.02)),
+                DType::I32 => HostTensor::i32(
+                    s.shape.clone(),
+                    (0..s.numel()).map(|i| (i % 10) as i32).collect(),
+                ),
+            })
+            .collect();
+        let stats = bench(5, || {
+            exe.run(&inputs).unwrap();
+        });
+        table.row(vec![name.to_string(), stats.summary(), "PJRT".to_string()]);
+    }
+
+    // --- host-side staging ---
+    let act = HostTensor::f32(vec![b, 4096], rng.normal_vec(b * 4096, 1.0));
+    let s = bench(50, || {
+        std::hint::black_box(act.slice_rows(0, b / 2));
+    });
+    table.row(vec!["slice_rows B/2 x 4096".into(), s.summary(), "host".into()]);
+
+    let s = bench(50, || {
+        std::hint::black_box(act.slice_cols(0, 2048));
+    });
+    table.row(vec!["slice_cols B x 2048".into(), s.summary(), "host".into()]);
+
+    let s = bench(50, || {
+        std::hint::black_box(act.to_literal().unwrap());
+    });
+    table.row(vec!["to_literal B x 4096".into(), s.summary(), "host->PJRT".into()]);
+
+    // --- SGD over the full parameter set ---
+    let mut params = vec![HostTensor::f32(vec![6_990_666], rng.normal_vec(6_990_666, 0.1))];
+    let grads = vec![HostTensor::f32(vec![6_990_666], rng.normal_vec(6_990_666, 0.01))];
+    let mut opt = Sgd::new(0.05, 0.9, 0.0);
+    let s = bench(10, || {
+        opt.step(&mut params, &grads);
+    });
+    table.row(vec!["SGD 7.0M params".into(), s.summary(), "host".into()]);
+
+    // --- fabric collectives (pure host) ---
+    let plan = ModuloPlan::new(vec![0, 1], b, 4096);
+    let acts = vec![act.clone(), act.clone()];
+    let s = bench(20, || {
+        let mut fab = Fabric::new(2);
+        let out = plan.assemble(&mut fab, &acts, 0, Tag::new(1, 0, 0)).unwrap();
+        std::hint::black_box(out);
+    });
+    table.row(vec!["modulo assemble k=2".into(), s.summary(), "fabric".into()]);
+
+    let shard = ShardPlan::new(vec![0, 1], 512, ShardBwdMode::ReducePartials);
+    let parts = vec![
+        HostTensor::f32(vec![b, 512], rng.normal_vec(b * 512, 1.0)),
+        HostTensor::f32(vec![b, 512], rng.normal_vec(b * 512, 1.0)),
+    ];
+    let s = bench(20, || {
+        let mut fab = Fabric::new(2);
+        std::hint::black_box(shard.gather_full(&mut fab, &parts, Tag::new(3, 0, 0)).unwrap());
+    });
+    table.row(vec!["shard gather k=2".into(), s.summary(), "fabric".into()]);
+
+    let mut bufs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(1_745_738, 0.1)).collect();
+    let s = bench(5, || {
+        let mut fab = Fabric::new(8);
+        ring_allreduce_mean(&mut fab, &(0..8).collect::<Vec<_>>(), &mut bufs, 1).unwrap();
+    });
+    table.row(vec!["ring allreduce 8x6.7MB".into(), s.summary(), "fabric".into()]);
+
+    println!("=== L3 hot-path microbenchmarks ===\n{}", table.render());
+    println!("note: PJRT rows are the compute charged to the simulated workers;");
+    println!("fabric/host rows are simulator overhead and must stay far below them.");
+    Ok(())
+}

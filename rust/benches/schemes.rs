@@ -1,0 +1,87 @@
+//! Bench: the §3.1 scheme comparison the paper argues by construction —
+//! BK vs B vs B/K on an 8-machine cluster, sweeping MP group size.
+//!
+//! Expected shape (scheme.rs cost table):
+//! * wire time:  B ≈ K× worse than B/K; BK ≈ B/K (both balanced);
+//! * staging memory: BK ≈ K× worse than both per-round schemes;
+//! * gradients: identical (asserted in the integration tests), so the
+//!   scheme is purely a systems trade — B/K dominates, which is why
+//!   SplitBrain builds on it.
+
+use splitbrain::comm::NetModel;
+use splitbrain::coordinator::{GmpTopology, McastScheme, StepSchedule};
+use splitbrain::model::{partition_network, vgg11, PartitionConfig};
+use splitbrain::runtime::RuntimeClient;
+use splitbrain::train::MemoryReport;
+use splitbrain::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let rt = RuntimeClient::load("artifacts")?;
+    let net = NetModel::default();
+    let b = rt.manifest.batch;
+
+    println!("=== Krizhevsky'14 scheme comparison (8 machines, B={b}) ===\n");
+    let mut t = Table::new(vec![
+        "mp", "scheme", "MP comm ms/step", "modulo staging MB", "activations MB", "rounds",
+    ]);
+    for mp in [2usize, 4, 8] {
+        let tnet = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )?;
+        let topo = GmpTopology::new(8, mp)?;
+        for scheme in [McastScheme::BK, McastScheme::B, McastScheme::BoverK] {
+            let sched =
+                StepSchedule::compile_full(&tnet, topo, &rt.manifest, true, scheme)?;
+            let mem = MemoryReport::of_scheme(&tnet, b, scheme);
+            let staging_mb =
+                scheme.staging_floats(b, mp, sched.boundary_width) as f64 * 4.0 / 1e6;
+            t.row(vec![
+                mp.to_string(),
+                scheme.to_string(),
+                format!("{:.3}", sched.mp_comm_secs(&net) * 1e3),
+                format!("{staging_mb:.2}"),
+                format!("{:.2}", mem.activations as f64 / 1e6),
+                scheme.rounds(mp).to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // Shape checks.
+    let comm = |mp: usize, scheme: McastScheme| -> anyhow::Result<f64> {
+        let tnet = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )?;
+        let sched = StepSchedule::compile_full(
+            &tnet,
+            GmpTopology::new(8, mp)?,
+            &rt.manifest,
+            true,
+            scheme,
+        )?;
+        Ok(sched.mp_comm_secs(&net))
+    };
+    println!("shape checks:");
+    let b_over_k = comm(8, McastScheme::BoverK)?;
+    let b_scheme = comm(8, McastScheme::B)?;
+    let bk = comm(8, McastScheme::BK)?;
+    println!(
+        "  [{}] scheme B wire time >= 4x B/K at mp=8 (serialized sender)",
+        if b_scheme > 4.0 * b_over_k { "ok" } else { "MISS" }
+    );
+    println!(
+        "  [{}] scheme BK wire time within 2x of B/K (balanced, single phase)",
+        if bk < 2.0 * b_over_k { "ok" } else { "MISS" }
+    );
+    let mem_bk = McastScheme::BK.staging_floats(b, 8, 4096);
+    let mem_bok = McastScheme::BoverK.staging_floats(b, 8, 4096);
+    println!(
+        "  [{}] scheme BK staging >= 3x B/K at mp=8 (the paper's memory objection)",
+        if mem_bk > 3 * mem_bok { "ok" } else { "MISS" }
+    );
+    Ok(())
+}

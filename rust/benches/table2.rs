@@ -1,0 +1,90 @@
+//! Bench: regenerate **Table 2** — CIFAR-10 throughput (images/sec)
+//! over machines in {1,2,4,8,16,32} x DP/MP combinations.
+//!
+//! Calibrated mode (default): per-artifact compute times measured on
+//! this host, comm charged by the α–β InfiniBand model; all 15 rows in
+//! around a minute. `--numeric` runs full numeric training steps
+//! instead (slow at 32 workers).
+//!
+//! Shape expectations vs the paper (absolute numbers differ — 2016 Xeon
+//! vs XLA:CPU): pure DP scales ~linearly; mp=2 tracks DP closely;
+//! mp=N collapses (paper: 520 vs 966 img/s at 8 machines); at 32
+//! machines throughput orders as mp=1 > mp=2 > mp=4 > mp=8.
+
+use splitbrain::bench::{table2, table2_paper, Fidelity};
+use splitbrain::coordinator::ClusterConfig;
+use splitbrain::runtime::RuntimeClient;
+
+fn main() -> anyhow::Result<()> {
+    let numeric = std::env::args().any(|a| a == "--numeric");
+    let fidelity = if numeric {
+        Fidelity::Numeric { steps: 3 }
+    } else {
+        Fidelity::Calibrated
+    };
+    let rt = RuntimeClient::load("artifacts")?;
+    let base = ClusterConfig::default();
+
+    println!("=== Table 2: CIFAR-10 throughputs in combinations of DP and MP ({fidelity:?}) ===\n");
+    let (table, raw) = table2(&rt, fidelity, &base)?;
+    println!("{}", table.render());
+
+    // The paper's 2016 GASPI/BSP software regime (per-phase overhead
+    // dominates the wire volume — see NetModel::paper_2016 docs): this
+    // is the regime where the paper's mp=8 collapse appears.
+    let paper_base = splitbrain::coordinator::ClusterConfig {
+        net: splitbrain::comm::NetModel::paper_2016(),
+        ..base.clone()
+    };
+    println!("=== same sweep under the paper-2016 software-overhead regime ===\n");
+    let (ptable, praw) = table2(&rt, fidelity, &paper_base)?;
+    println!("{}", ptable.render());
+
+    // Shape checks the paper's table implies (reported, not asserted,
+    // so a slow host still produces the full table).
+    let ips = |m: usize, dp: usize, mp: usize| {
+        raw.iter()
+            .find(|r| (r.0, r.1, r.2) == (m, dp, mp))
+            .map(|r| r.3)
+            .unwrap()
+    };
+    let pips = |m: usize, dp: usize, mp: usize| {
+        praw.iter()
+            .find(|r| (r.0, r.1, r.2) == (m, dp, mp))
+            .map(|r| r.3)
+            .unwrap()
+    };
+    let paper: std::collections::HashMap<_, _> = table2_paper().into_iter().collect();
+    let mut checks = vec![];
+    checks.push(("DP scales >= 3x from 1 to 4 machines", ips(4, 4, 1) > 3.0 * ips(1, 1, 1)));
+    checks.push(("mp=2 within 15% of pure DP at 8 machines", ips(8, 4, 2) > 0.85 * ips(8, 8, 1)));
+    // The collapse magnitude is attenuated on this host: our compute
+    // per step is ~4x the 2016 testbed's, diluting the fixed per-phase
+    // software overheads that drove the paper's 0.54x.
+    checks.push(("mp=8 visibly collapses at 8 machines under paper-2016 regime (paper: 0.54x)",
+        pips(8, 1, 8) < 0.85 * pips(8, 8, 1)));
+    checks.push(("32-machine ordering mp1 > mp2 > mp4 > mp8 (paper-2016 regime)",
+        pips(32, 32, 1) > pips(32, 16, 2)
+            && pips(32, 16, 2) > pips(32, 8, 4)
+            && pips(32, 8, 4) > pips(32, 8, 8)));
+    println!("shape checks (paper-implied orderings):");
+    let mut fails = 0;
+    for (desc, ok) in checks {
+        println!("  [{}] {desc}", if ok { "ok" } else { "MISS" });
+        fails += (!ok) as usize;
+    }
+
+    // Side-by-side normalized comparison.
+    println!("\nnormalized speedup vs 1 machine (ours | paper):");
+    for (m, dp, mp) in [(2, 2, 1), (4, 4, 1), (8, 8, 1), (16, 16, 1), (32, 32, 1)] {
+        println!(
+            "  {m:>2} machines DP: {:.2}x | {:.2}x",
+            ips(m, dp, mp) / ips(1, 1, 1),
+            paper[&(m, dp, mp)] / paper[&(1, 1, 1)]
+        );
+    }
+    if fails > 0 {
+        println!("\nWARNING: {fails} shape check(s) missed on this host");
+    }
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! One generator per paper table/figure (§5, Table 1/2, Fig. 7a/b/c).
+
+use anyhow::Result;
+
+use crate::coordinator::{calibrated_report, Cluster, ClusterConfig};
+use crate::model::vgg;
+use crate::runtime::RuntimeClient;
+use crate::train::TrainReport;
+use crate::util::Table;
+
+/// How a configuration is costed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Full numeric training steps (real gradients). Slow at large N.
+    Numeric { steps: usize },
+    /// Per-artifact calibration + analytic composition (default for
+    /// sweeps; identical compute/comm model, no training state).
+    Calibrated,
+}
+
+/// Run one (machines, mp) configuration.
+pub fn run_config(
+    rt: &RuntimeClient,
+    n_workers: usize,
+    mp: usize,
+    fidelity: Fidelity,
+    cfg_base: &ClusterConfig,
+) -> Result<TrainReport> {
+    // Segmented mp=1 baseline: identical per-op efficiency across the
+    // DP/MP comparison (see StepSchedule::compile_opts).
+    let cfg = ClusterConfig { n_workers, mp, segmented_mp1: true, ..cfg_base.clone() };
+    match fidelity {
+        Fidelity::Numeric { steps } => {
+            let mut cluster = Cluster::new(rt, cfg)?;
+            cluster.train_steps(steps)
+        }
+        Fidelity::Calibrated => calibrated_report(rt, &cfg, 3),
+    }
+}
+
+/// Table 1: layer-wise parameters of the VGG variant.
+pub fn table1() -> Table {
+    let rows = vgg::table1();
+    let total_w: usize = rows.iter().map(|r| r.2).sum();
+    // The paper's 24.83 / 75.17 split is computed over parameters
+    // *including biases* (1,735,488 conv vs 5,255,178 FC of 6,990,666),
+    // while the per-row counts are weights only — reproduce both.
+    let conv_w: usize = rows.iter().filter(|r| r.0.starts_with("Conv")).map(|r| r.2).sum();
+    let conv_p = conv_w + 1152; // + conv biases
+    let fc_p = (total_w - conv_w) + 2058; // + fc biases
+    let total_p = conv_p + fc_p;
+    let mut t = Table::new(vec!["Layer", "I/O Dimension", "Parameters", "%"]);
+    for (name, io, params) in &rows {
+        let pct = if name == "Conv3" {
+            format!("{:.2}", conv_p as f64 / total_p as f64 * 100.0)
+        } else if name == "FC1" {
+            format!("{:.2}", fc_p as f64 / total_p as f64 * 100.0)
+        } else {
+            String::new()
+        };
+        t.row(vec![name.clone(), io.clone(), params.to_string(), pct]);
+    }
+    t.row(vec![
+        "Total".to_string(),
+        String::new(),
+        total_w.to_string(),
+        "100.00".to_string(),
+    ]);
+    t
+}
+
+/// The (machines, dp, mp) rows of Table 2, in paper order.
+pub fn table2_configs() -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 1, 1),
+        (2, 2, 1),
+        (2, 1, 2),
+        (4, 4, 1),
+        (4, 2, 2),
+        (4, 1, 4),
+        (8, 8, 1),
+        (8, 4, 2),
+        (8, 1, 8),
+        (16, 16, 1),
+        (16, 8, 2),
+        (32, 8, 8),
+        (32, 8, 4),
+        (32, 16, 2),
+        (32, 32, 1),
+    ]
+}
+
+/// Paper Table 2 throughputs (images/sec) keyed by (machines, dp, mp),
+/// used for shape comparison in EXPERIMENTS.md.
+pub fn table2_paper() -> Vec<((usize, usize, usize), f64)> {
+    vec![
+        ((1, 1, 1), 121.99),
+        ((2, 2, 1), 247.43),
+        ((2, 1, 2), 235.72),
+        ((4, 4, 1), 489.62),
+        ((4, 2, 2), 470.1),
+        ((4, 1, 4), 421.0),
+        ((8, 8, 1), 965.92),
+        ((8, 4, 2), 941.84),
+        ((8, 1, 8), 520.0),
+        ((16, 16, 1), 1946.99),
+        ((16, 8, 2), 1863.5),
+        ((32, 8, 8), 2062.84),
+        ((32, 8, 4), 3293.68),
+        ((32, 16, 2), 3695.64),
+        ((32, 32, 1), 3896.27),
+    ]
+}
+
+/// Table 2: throughput over machine counts and DP/MP combinations.
+/// Returns (table, raw (machines, dp, mp, images/sec) rows).
+pub fn table2(
+    rt: &RuntimeClient,
+    fidelity: Fidelity,
+    base: &ClusterConfig,
+) -> Result<(Table, Vec<(usize, usize, usize, f64)>)> {
+    let paper: std::collections::HashMap<_, _> = table2_paper().into_iter().collect();
+    let mut t = Table::new(vec![
+        "Machines", "Dataset", "DP", "MP", "images/sec", "paper img/s", "speedup-vs-1", "paper-speedup",
+    ]);
+    let mut raw = Vec::new();
+    let mut base1 = None;
+    for (m, dp, mp) in table2_configs() {
+        let rep = run_config(rt, m, mp, fidelity, base)?;
+        let ips = rep.images_per_sec();
+        if base1.is_none() {
+            base1 = Some(ips);
+        }
+        let p = paper[&(m, dp, mp)];
+        t.row(vec![
+            m.to_string(),
+            "CIFAR-10".to_string(),
+            dp.to_string(),
+            mp.to_string(),
+            format!("{ips:.2}"),
+            format!("{p:.2}"),
+            format!("{:.2}x", ips / base1.unwrap()),
+            format!("{:.2}x", p / 121.99),
+        ]);
+        raw.push((m, dp, mp, ips));
+    }
+    Ok((t, raw))
+}
+
+/// Fig. 7a: throughput scaling at mp=2 across machine counts.
+pub fn fig7a(
+    rt: &RuntimeClient,
+    fidelity: Fidelity,
+    base: &ClusterConfig,
+) -> Result<(Table, Vec<(usize, f64)>)> {
+    let mut t = Table::new(vec!["Machines", "MP", "images/sec", "speedup", "ideal"]);
+    let mut raw = Vec::new();
+    let mut first = None;
+    for m in [2usize, 4, 8, 16, 32] {
+        let rep = run_config(rt, m, 2, fidelity, base)?;
+        let ips = rep.images_per_sec();
+        if first.is_none() {
+            first = Some(ips / m as f64);
+        }
+        let per1 = first.unwrap();
+        t.row(vec![
+            m.to_string(),
+            "2".to_string(),
+            format!("{ips:.2}"),
+            format!("{:.2}x", ips / per1),
+            format!("{m}.00x"),
+        ]);
+        raw.push((m, ips));
+    }
+    Ok((t, raw))
+}
+
+/// Fig. 7b: communication overhead vs MP group size on 8 machines.
+pub fn fig7b(
+    rt: &RuntimeClient,
+    fidelity: Fidelity,
+    base: &ClusterConfig,
+) -> Result<(Table, Vec<(usize, f64, f64, f64)>)> {
+    let mut t = Table::new(vec![
+        "MP", "compute ms", "MP-comm ms", "DP-comm ms", "comm %", "images/sec",
+    ]);
+    let mut raw = Vec::new();
+    for mp in [1usize, 2, 4, 8] {
+        let rep = run_config(rt, 8, mp, fidelity, base)?;
+        let comp = rep.compute.mean() * 1e3;
+        let mpc = rep.mp_comm.mean() * 1e3;
+        let dpc = rep.dp_comm.mean() * 1e3;
+        t.row(vec![
+            mp.to_string(),
+            format!("{comp:.2}"),
+            format!("{mpc:.3}"),
+            format!("{dpc:.3}"),
+            format!("{:.2}", rep.comm_fraction() * 100.0),
+            format!("{:.2}", rep.images_per_sec()),
+        ]);
+        raw.push((mp, comp, mpc, dpc));
+    }
+    Ok((t, raw))
+}
+
+/// Fig. 7c: throughput vs per-worker parameter memory across mp.
+pub fn fig7c(
+    rt: &RuntimeClient,
+    fidelity: Fidelity,
+    base: &ClusterConfig,
+) -> Result<(Table, Vec<(usize, f64, f64)>)> {
+    use crate::model::{partition_network, vgg11, PartitionConfig};
+    use crate::train::MemoryReport;
+    let mut t = Table::new(vec![
+        "MP", "param MB/worker", "memory saving %", "images/sec", "vs pure DP %",
+    ]);
+    let mut raw = Vec::new();
+    let mut dp_ips = None;
+    for mp in [1usize, 2, 4, 8] {
+        let rep = run_config(rt, 8, mp, fidelity, base)?;
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )?;
+        let mem = MemoryReport::of(&net, rt.manifest.batch);
+        let ips = rep.images_per_sec();
+        if dp_ips.is_none() {
+            dp_ips = Some(ips);
+        }
+        let full_mb = MemoryReport::of(
+            &partition_network(&vgg11(), vec![32, 32, 3], &PartitionConfig::default())?,
+            rt.manifest.batch,
+        )
+        .param_mb();
+        t.row(vec![
+            mp.to_string(),
+            format!("{:.2}", mem.param_mb()),
+            format!("{:.1}", (1.0 - mem.param_mb() / full_mb) * 100.0),
+            format!("{ips:.2}"),
+            format!("{:.1}", ips / dp_ips.unwrap() * 100.0),
+        ]);
+        raw.push((mp, mem.param_mb(), ips));
+    }
+    Ok((t, raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_total() {
+        let t = table1();
+        let s = t.render();
+        assert!(s.contains("4194304"));
+        assert!(s.contains("6987456"));
+        assert!(s.contains("75.17"));
+        assert!(s.contains("24.83"));
+    }
+
+    #[test]
+    fn table2_paper_rows_complete() {
+        assert_eq!(table2_paper().len(), table2_configs().len());
+        for (cfg, _) in table2_paper() {
+            assert!(table2_configs().contains(&cfg));
+        }
+    }
+
+    #[test]
+    fn table2_configs_consistent() {
+        for (m, dp, mp) in table2_configs() {
+            // The paper's Table 2 contains one anomalous row,
+            // (32, DP=8, MP=8): 8*8 != 32. We reproduce the row as
+            // printed (costing it as machines=32, mp=8 -> dp=4) but
+            // don't pretend it's self-consistent.
+            if (m, dp, mp) == (32, 8, 8) {
+                continue;
+            }
+            assert_eq!(m, dp * mp, "({m},{dp},{mp})");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Benchmark support shared by the `cargo bench` harnesses, the CLI
+//! sweeps and the examples: one entry point per paper table/figure,
+//! each returning both the printable table and the raw series.
+//!
+//! Absolute images/sec depend on this machine's XLA:CPU throughput, so
+//! every harness also prints the *normalized* quantities the paper's
+//! claims are about (speedup vs 1 machine, comm fractions, memory
+//! ratios). See EXPERIMENTS.md for the recorded paper-vs-measured runs.
+
+pub mod experiments;
+
+pub use experiments::{
+    fig7a, fig7b, fig7c, run_config, table1, table2, table2_configs, table2_paper, Fidelity,
+};

@@ -1,0 +1,298 @@
+//! Data-moving collectives over the fabric.
+//!
+//! These are the building blocks the coordinator's modulo/shard layers
+//! and the model-averaging step are made of. Data moves for real
+//! (numerics are exact); byte counters on the fabric record exactly what
+//! crossed the wire so the cost model and Fig. 7b stay honest.
+//!
+//! All functions take the *group* as a slice of global ranks; tensors
+//! are indexed by position within the group (BSP: every member
+//! participates in every call).
+
+use anyhow::Result;
+
+use super::fabric::{Fabric, Tag};
+use crate::runtime::HostTensor;
+
+/// Shard-layer fprop (Fig. 5a): every member contributes its
+/// `[B, w_i]` partition; returns the `[B, sum w_i]` full tensor for
+/// each member, assembled in group order.
+pub fn allgather_cols(
+    fabric: &mut Fabric,
+    group: &[usize],
+    parts: &[HostTensor],
+    tag: Tag,
+) -> Result<Vec<HostTensor>> {
+    let k = group.len();
+    assert_eq!(parts.len(), k);
+    let rows = parts[0].shape[0];
+    let widths: Vec<usize> = parts.iter().map(|p| p.shape[1]).collect();
+    let full_w: usize = widths.iter().sum();
+
+    // Post: each member pushes its partition to every other member.
+    for (gi, &src) in group.iter().enumerate() {
+        for &dst in group {
+            if dst != src {
+                fabric.post(src, dst, tag, parts[gi].as_f32().to_vec());
+            }
+        }
+    }
+    // Assemble: local copy for own slice, take for the rest.
+    let mut outs = Vec::with_capacity(k);
+    for (gi, &dst) in group.iter().enumerate() {
+        let mut full = HostTensor::zeros(vec![rows, full_w]);
+        let mut col = 0;
+        for (gj, &src) in group.iter().enumerate() {
+            if gj == gi {
+                full.set_cols(col, &parts[gi]);
+            } else {
+                let data = fabric.take(dst, src, tag)?;
+                full.set_cols(col, &HostTensor::f32(vec![rows, widths[gj]], data));
+            }
+            col += widths[gj];
+        }
+        outs.push(full);
+    }
+    Ok(outs)
+}
+
+/// Shard-layer bprop (Fig. 5b): every member holds a *partial*
+/// full-width gradient `[B, sum w_i]`; member i must end with the
+/// reduced (summed) `[B, w_i]` slice of its own partition. Each member
+/// scatters the foreign slices and reduces what it gathers.
+pub fn reduce_scatter_cols(
+    fabric: &mut Fabric,
+    group: &[usize],
+    fulls: &[HostTensor],
+    widths: &[usize],
+    tag: Tag,
+) -> Result<Vec<HostTensor>> {
+    let k = group.len();
+    assert_eq!(fulls.len(), k);
+    assert_eq!(widths.len(), k);
+    let offsets: Vec<usize> = widths
+        .iter()
+        .scan(0, |acc, &w| {
+            let o = *acc;
+            *acc += w;
+            Some(o)
+        })
+        .collect();
+
+    // Post: member gi pushes slice j of its partial gradient to member j.
+    for (gi, &src) in group.iter().enumerate() {
+        for (gj, &dst) in group.iter().enumerate() {
+            if gj != gi {
+                let slice = fulls[gi].slice_cols(offsets[gj], offsets[gj] + widths[gj]);
+                fabric.post(src, dst, tag, slice.as_f32().to_vec());
+            }
+        }
+    }
+    // Reduce: own slice + k-1 gathered partials.
+    let rows = fulls[0].shape[0];
+    let mut outs = Vec::with_capacity(k);
+    for (gi, &dst) in group.iter().enumerate() {
+        let mut acc = fulls[gi].slice_cols(offsets[gi], offsets[gi] + widths[gi]);
+        for &src in group.iter() {
+            if src != dst {
+                let data = fabric.take(dst, src, tag)?;
+                acc.add_assign(&HostTensor::f32(vec![rows, widths[gi]], data));
+            }
+        }
+        outs.push(acc);
+    }
+    Ok(outs)
+}
+
+/// Ring allreduce-mean over equally-shaped flat buffers (DP model
+/// averaging). Implements the textbook reduce-scatter + allgather ring,
+/// so the fabric's byte counters match the 2·(n-1)/n·V optimum.
+pub fn ring_allreduce_mean(
+    fabric: &mut Fabric,
+    group: &[usize],
+    bufs: &mut [Vec<f32>],
+    tag_base: u16,
+) -> Result<()> {
+    let n = group.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    // Chunk boundaries (last chunk absorbs the remainder).
+    let chunk = len / n;
+    let bounds = |c: usize| -> (usize, usize) {
+        let lo = c * chunk;
+        let hi = if c + 1 == n { len } else { lo + chunk };
+        (lo, hi)
+    };
+
+    // Phase 1: reduce-scatter. Round r: member i sends chunk (i-r) mod n
+    // to its successor, which accumulates.
+    for r in 0..n - 1 {
+        let tag = Tag::new(tag_base, r as u16, 0);
+        for i in 0..n {
+            let c = (i + n - r) % n;
+            let (lo, hi) = bounds(c);
+            let payload = bufs[i][lo..hi].to_vec();
+            fabric.post(group[i], group[(i + 1) % n], tag, payload);
+        }
+        for i in 0..n {
+            let src = group[(i + n - 1) % n];
+            let c = (i + n - 1 + n - r) % n;
+            let (lo, hi) = bounds(c);
+            let data = fabric.take(group[i], src, tag)?;
+            for (a, b) in bufs[i][lo..hi].iter_mut().zip(data.iter()) {
+                *a += *b;
+            }
+        }
+    }
+    // Phase 2: allgather. Round r: member i sends its (now reduced)
+    // chunk (i+1-r) mod n forward.
+    for r in 0..n - 1 {
+        let tag = Tag::new(tag_base, (n + r) as u16, 0);
+        for i in 0..n {
+            let c = (i + 1 + n - r) % n;
+            let (lo, hi) = bounds(c);
+            let payload = bufs[i][lo..hi].to_vec();
+            fabric.post(group[i], group[(i + 1) % n], tag, payload);
+        }
+        for i in 0..n {
+            let src = group[(i + n - 1) % n];
+            let c = (i + n - r) % n;
+            let (lo, hi) = bounds(c);
+            let data = fabric.take(group[i], src, tag)?;
+            bufs[i][lo..hi].copy_from_slice(&data);
+        }
+    }
+    // Mean.
+    let inv = 1.0 / n as f32;
+    for b in bufs.iter_mut() {
+        for v in b.iter_mut() {
+            *v *= inv;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(rows: usize, cols: usize, base: f32) -> HostTensor {
+        HostTensor::f32(
+            vec![rows, cols],
+            (0..rows * cols).map(|i| base + i as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn allgather_assembles_in_group_order() {
+        let mut f = Fabric::new(4);
+        let group = [1, 3]; // global ranks
+        let parts = [tensor(2, 2, 0.0), tensor(2, 2, 100.0)];
+        let outs = allgather_cols(&mut f, &group, &parts, Tag::new(1, 0, 0)).unwrap();
+        assert_eq!(outs.len(), 2);
+        for o in &outs {
+            assert_eq!(o.shape, vec![2, 4]);
+            assert_eq!(o.as_f32(), &[0., 1., 100., 101., 2., 3., 102., 103.]);
+        }
+        assert!(f.drained());
+        // Each member pushed its 2x2 partition to 1 peer: 16 bytes each.
+        assert_eq!(f.total_bytes(), 2 * 16);
+    }
+
+    #[test]
+    fn allgather_uneven_widths() {
+        let mut f = Fabric::new(2);
+        let parts = [tensor(1, 3, 0.0), tensor(1, 1, 9.0)];
+        let outs = allgather_cols(&mut f, &[0, 1], &parts, Tag::new(1, 0, 0)).unwrap();
+        assert_eq!(outs[0].as_f32(), &[0., 1., 2., 9.]);
+    }
+
+    #[test]
+    fn reduce_scatter_sums_partials() {
+        let mut f = Fabric::new(2);
+        let group = [0, 1];
+        // Both members hold a full-width [1,4] partial gradient.
+        let fulls = [
+            HostTensor::f32(vec![1, 4], vec![1., 2., 3., 4.]),
+            HostTensor::f32(vec![1, 4], vec![10., 20., 30., 40.]),
+        ];
+        let outs =
+            reduce_scatter_cols(&mut f, &group, &fulls, &[2, 2], Tag::new(2, 0, 0)).unwrap();
+        // Member 0 owns cols 0..2 summed; member 1 owns cols 2..4.
+        assert_eq!(outs[0].as_f32(), &[11., 22.]);
+        assert_eq!(outs[1].as_f32(), &[33., 44.]);
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn gather_then_reduce_is_identity_on_single_contributor() {
+        // If only member 0's partial is nonzero, reduce-scatter returns
+        // exactly its slices.
+        let mut f = Fabric::new(3);
+        let group = [0, 1, 2];
+        let fulls = [
+            HostTensor::f32(vec![1, 3], vec![5., 6., 7.]),
+            HostTensor::zeros(vec![1, 3]),
+            HostTensor::zeros(vec![1, 3]),
+        ];
+        let outs =
+            reduce_scatter_cols(&mut f, &group, &fulls, &[1, 1, 1], Tag::new(2, 0, 0)).unwrap();
+        assert_eq!(outs[0].as_f32(), &[5.]);
+        assert_eq!(outs[1].as_f32(), &[6.]);
+        assert_eq!(outs[2].as_f32(), &[7.]);
+    }
+
+    #[test]
+    fn ring_allreduce_computes_mean() {
+        let mut f = Fabric::new(4);
+        let group = [0, 1, 2, 3];
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..10).map(|j| (i * 10 + j) as f32).collect())
+            .collect();
+        let expect: Vec<f32> = (0..10)
+            .map(|j| (0..4).map(|i| (i * 10 + j) as f32).sum::<f32>() / 4.0)
+            .collect();
+        ring_allreduce_mean(&mut f, &group, &mut bufs, 7).unwrap();
+        for b in &bufs {
+            for (a, e) in b.iter().zip(expect.iter()) {
+                assert!((a - e).abs() < 1e-5, "{a} vs {e}");
+            }
+        }
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn ring_allreduce_bytes_near_optimal() {
+        let mut f = Fabric::new(4);
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; 1000]).collect();
+        ring_allreduce_mean(&mut f, &[0, 1, 2, 3], &mut bufs, 7).unwrap();
+        // Per-rank optimum: 2*(n-1)/n*V = 2*3/4*4000 = 6000 bytes.
+        let per_rank = f.bytes_from(0);
+        assert!((5900..=6100).contains(&per_rank), "{per_rank}");
+    }
+
+    #[test]
+    fn ring_allreduce_uneven_length() {
+        // len=7 not divisible by n=3: last chunk absorbs remainder.
+        let mut f = Fabric::new(3);
+        let mut bufs: Vec<Vec<f32>> = vec![vec![3.0; 7], vec![6.0; 7], vec![0.0; 7]];
+        ring_allreduce_mean(&mut f, &[0, 1, 2], &mut bufs, 1).unwrap();
+        for b in &bufs {
+            for v in b {
+                assert!((v - 3.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn single_member_group_is_noop() {
+        let mut f = Fabric::new(1);
+        let mut bufs = vec![vec![2.0; 5]];
+        ring_allreduce_mean(&mut f, &[0], &mut bufs, 1).unwrap();
+        assert_eq!(bufs[0], vec![2.0; 5]);
+        assert_eq!(f.total_bytes(), 0);
+    }
+}

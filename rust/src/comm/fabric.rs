@@ -1,0 +1,173 @@
+//! The in-process GASPI-like fabric.
+//!
+//! GPI-2 exposes segments + one-sided `write_notify`: the sender pushes
+//! into a remote segment and posts a notification the receiver waits on.
+//! Here a message is (src, dst, tag) -> payload queue; the BSP schedule
+//! guarantees every `take` follows its `post` within a step, and a
+//! missing notification is a hard error (a schedule bug), never a hang.
+//!
+//! All payload bytes are counted per (src, dst) pair — the numbers the
+//! network cost model and Fig. 7b's overhead breakdown are driven by.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Message tag: disambiguates concurrent exchanges (phase, iteration,
+/// layer). Build with [`Tag::new`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tag(pub u64);
+
+impl Tag {
+    /// Compose a tag from (phase id, modulo iteration, layer id).
+    pub fn new(phase: u16, iter: u16, layer: u16) -> Tag {
+        Tag(((phase as u64) << 32) | ((iter as u64) << 16) | layer as u64)
+    }
+}
+
+/// The fabric: mailboxes + byte counters for `n` ranks.
+#[derive(Debug)]
+pub struct Fabric {
+    n: usize,
+    mail: HashMap<(usize, usize, Tag), Vec<Vec<f32>>>,
+    /// bytes_sent[src][dst]
+    bytes_sent: Vec<Vec<u64>>,
+    msgs_sent: Vec<Vec<u64>>,
+}
+
+impl Fabric {
+    pub fn new(n: usize) -> Fabric {
+        Fabric {
+            n,
+            mail: HashMap::new(),
+            bytes_sent: vec![vec![0; n]; n],
+            msgs_sent: vec![vec![0; n]; n],
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.n
+    }
+
+    /// One-sided write+notify: push `payload` into dst's segment.
+    /// Self-sends are forbidden (local copies are not network traffic).
+    pub fn post(&mut self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
+        assert!(src < self.n && dst < self.n, "rank out of range");
+        assert_ne!(src, dst, "self-send: local data must not cross the fabric");
+        self.bytes_sent[src][dst] += (payload.len() * 4) as u64;
+        self.msgs_sent[src][dst] += 1;
+        self.mail.entry((src, dst, tag)).or_default().push(payload);
+    }
+
+    /// Wait on the notification from (src, tag) and take the payload.
+    /// FIFO per (src, dst, tag).
+    pub fn take(&mut self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
+        match self.mail.get_mut(&(src, dst, tag)) {
+            Some(q) if !q.is_empty() => Ok(q.remove(0)),
+            _ => bail!(
+                "fabric: rank {dst} waiting on missing message from {src} tag {tag:?} — schedule bug"
+            ),
+        }
+    }
+
+    /// True if no undelivered messages remain (asserted at step ends —
+    /// leftover mail means the schedule posted more than it consumed).
+    pub fn drained(&self) -> bool {
+        self.mail.values().all(Vec::is_empty)
+    }
+
+    /// Total bytes sent by `src` since the last reset.
+    pub fn bytes_from(&self, src: usize) -> u64 {
+        self.bytes_sent[src].iter().sum()
+    }
+
+    /// Total bytes over the whole fabric.
+    pub fn total_bytes(&self) -> u64 {
+        (0..self.n).map(|s| self.bytes_from(s)).sum()
+    }
+
+    /// Max bytes sent by any single rank (per-link critical path).
+    pub fn max_bytes_per_rank(&self) -> u64 {
+        (0..self.n).map(|s| self.bytes_from(s)).max().unwrap_or(0)
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs_sent.iter().flatten().sum()
+    }
+
+    pub fn reset_counters(&mut self) {
+        for row in &mut self.bytes_sent {
+            row.fill(0);
+        }
+        for row in &mut self.msgs_sent {
+            row.fill(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn post_take_roundtrip() {
+        let mut f = Fabric::new(2);
+        let t = Tag::new(1, 0, 0);
+        f.post(0, 1, t, vec![1.0, 2.0]);
+        assert_eq!(f.take(1, 0, t).unwrap(), vec![1.0, 2.0]);
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn missing_message_is_error_not_hang() {
+        let mut f = Fabric::new(2);
+        assert!(f.take(1, 0, Tag::new(0, 0, 0)).is_err());
+    }
+
+    #[test]
+    fn fifo_per_channel() {
+        let mut f = Fabric::new(2);
+        let t = Tag::new(0, 0, 0);
+        f.post(0, 1, t, vec![1.0]);
+        f.post(0, 1, t, vec![2.0]);
+        assert_eq!(f.take(1, 0, t).unwrap(), vec![1.0]);
+        assert_eq!(f.take(1, 0, t).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn tags_isolate_channels() {
+        let mut f = Fabric::new(2);
+        f.post(0, 1, Tag::new(0, 0, 1), vec![1.0]);
+        f.post(0, 1, Tag::new(0, 0, 2), vec![2.0]);
+        assert_eq!(f.take(1, 0, Tag::new(0, 0, 2)).unwrap(), vec![2.0]);
+        assert_eq!(f.take(1, 0, Tag::new(0, 0, 1)).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut f = Fabric::new(3);
+        f.post(0, 1, Tag::new(0, 0, 0), vec![0.0; 100]);
+        f.post(0, 2, Tag::new(0, 0, 0), vec![0.0; 50]);
+        f.post(1, 0, Tag::new(0, 0, 0), vec![0.0; 10]);
+        assert_eq!(f.bytes_from(0), 600);
+        assert_eq!(f.bytes_from(1), 40);
+        assert_eq!(f.total_bytes(), 640);
+        assert_eq!(f.max_bytes_per_rank(), 600);
+        assert_eq!(f.total_msgs(), 3);
+        f.reset_counters();
+        assert_eq!(f.total_bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-send")]
+    fn self_send_forbidden() {
+        let mut f = Fabric::new(2);
+        f.post(0, 0, Tag::new(0, 0, 0), vec![1.0]);
+    }
+
+    #[test]
+    fn tag_composition_unique() {
+        assert_ne!(Tag::new(1, 0, 0), Tag::new(0, 1, 0));
+        assert_ne!(Tag::new(0, 1, 0), Tag::new(0, 0, 1));
+    }
+}

@@ -1,0 +1,21 @@
+//! Communication substrate: a GASPI-like in-process fabric, the
+//! collectives SplitBrain's modulo/shard/averaging layers are built
+//! from, the analytic InfiniBand cost model, and per-category tracing.
+//!
+//! The paper runs on GPI-2/GASPI one-sided RDMA over 56 Gbps InfiniBand
+//! (§4, §5.1). This repo simulates the cluster in-process (DESIGN.md §1):
+//! [`fabric`] provides the one-sided write+notify semantics with exact
+//! byte accounting, data moves for real (the numerics are bit-faithful),
+//! and [`netmodel`] charges simulated wire time that the cluster clock
+//! composes with measured PJRT compute time.
+
+pub mod collective;
+pub mod fabric;
+pub mod netmodel;
+pub mod topology;
+pub mod trace;
+
+pub use fabric::Fabric;
+pub use netmodel::NetModel;
+pub use topology::CommGraph;
+pub use trace::{CommCategory, CommTrace};

@@ -1,0 +1,148 @@
+//! Communication graphs for DP parameter exchange (§4: "communication
+//! graph in a peer-to-peer or parameter server fashion").
+//!
+//! The numeric simulator always computes the exact mean (BSP model
+//! averaging); the graph choice changes the *cost* charged by the
+//! network model and the neighbor sets a real deployment would use —
+//! including the MALT-style Halton sequence the related-work section
+//! credits with bandwidth savings.
+
+use super::netmodel::NetModel;
+
+/// DP parameter-exchange topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommGraph {
+    /// Every pair exchanges directly (naive broadcast).
+    FullMesh,
+    /// Bandwidth-optimal ring allreduce (Horovod-style).
+    Ring,
+    /// MALT-style Halton-sequence peers: each rank pushes to ~log2(n)
+    /// pseudo-randomly spread peers per exchange.
+    Halton,
+    /// Centralized parameter server (rank 0 is the server).
+    ParamServer,
+}
+
+impl CommGraph {
+    /// Peers rank `i` pushes parameters to in an `n`-rank exchange.
+    pub fn peers(self, i: usize, n: usize) -> Vec<usize> {
+        assert!(i < n);
+        if n <= 1 {
+            return vec![];
+        }
+        match self {
+            CommGraph::FullMesh => (0..n).filter(|&j| j != i).collect(),
+            CommGraph::Ring => vec![(i + 1) % n],
+            CommGraph::Halton => {
+                let fanout = (n as f64).log2().ceil().max(1.0) as usize;
+                let mut peers = Vec::with_capacity(fanout);
+                for f in 1..=fanout {
+                    // Halton base-2 offsets spread peers over the ring.
+                    let off = (halton2(f) * n as f64).floor() as usize % n;
+                    let p = (i + off.max(1)) % n;
+                    if p != i && !peers.contains(&p) {
+                        peers.push(p);
+                    }
+                }
+                if peers.is_empty() {
+                    peers.push((i + 1) % n);
+                }
+                peers
+            }
+            CommGraph::ParamServer => {
+                if i == 0 {
+                    (1..n).collect() // server pushes the reduced model back
+                } else {
+                    vec![0]
+                }
+            }
+        }
+    }
+
+    /// Modeled wall time of one full-parameter exchange of `bytes`
+    /// across `n` ranks under this graph.
+    pub fn exchange_time(self, net: &NetModel, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        match self {
+            CommGraph::FullMesh => net.exchange(n, (n - 1) as u64 * bytes),
+            CommGraph::Ring => net.ring_allreduce(n, bytes),
+            CommGraph::Halton => {
+                // log2(n) rounds of single-peer pushes, gossip-style.
+                let fanout = (n as f64).log2().ceil().max(1.0) as u64;
+                fanout as f64 * net.exchange(2, bytes)
+            }
+            CommGraph::ParamServer => net.ps_allreduce(n, bytes),
+        }
+    }
+}
+
+/// The f-th element of the base-2 Halton (van der Corput) sequence.
+fn halton2(mut idx: usize) -> f64 {
+    let mut f = 0.5;
+    let mut r = 0.0;
+    while idx > 0 {
+        if idx & 1 == 1 {
+            r += f;
+        }
+        f *= 0.5;
+        idx >>= 1;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fullmesh_peers_everyone() {
+        assert_eq!(CommGraph::FullMesh.peers(1, 4), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn ring_peers_successor() {
+        assert_eq!(CommGraph::Ring.peers(3, 4), vec![0]);
+        assert_eq!(CommGraph::Ring.peers(0, 4), vec![1]);
+    }
+
+    #[test]
+    fn halton_fanout_is_logarithmic() {
+        let peers = CommGraph::Halton.peers(0, 16);
+        assert!(!peers.is_empty() && peers.len() <= 5, "{peers:?}");
+        assert!(peers.iter().all(|&p| p != 0 && p < 16));
+    }
+
+    #[test]
+    fn ps_star_shape() {
+        assert_eq!(CommGraph::ParamServer.peers(3, 4), vec![0]);
+        assert_eq!(CommGraph::ParamServer.peers(0, 4), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn van_der_corput_values() {
+        assert!((halton2(1) - 0.5).abs() < 1e-12);
+        assert!((halton2(2) - 0.25).abs() < 1e-12);
+        assert!((halton2(3) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_cheapest_at_scale() {
+        let net = NetModel::default();
+        let bytes = 28_000_000;
+        let ring = CommGraph::Ring.exchange_time(&net, 16, bytes);
+        let mesh = CommGraph::FullMesh.exchange_time(&net, 16, bytes);
+        let ps = CommGraph::ParamServer.exchange_time(&net, 16, bytes);
+        assert!(ring < mesh && ring < ps, "ring {ring} mesh {mesh} ps {ps}");
+    }
+
+    #[test]
+    fn single_rank_free() {
+        let net = NetModel::default();
+        for g in [CommGraph::FullMesh, CommGraph::Ring, CommGraph::Halton, CommGraph::ParamServer] {
+            assert_eq!(g.exchange_time(&net, 1, 1 << 20), 0.0);
+            assert!(g.peers(0, 1).is_empty());
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Per-category communication accounting — the data behind Fig. 7b's
+//! "communication overhead w.r.t. MP group size" breakdown.
+//!
+//! Every exchange the coordinator performs is attributed to a category;
+//! at reporting time the trace yields bytes, message counts and modeled
+//! wire seconds per category, per step.
+
+use std::fmt;
+
+use super::netmodel::{NetModel, PhaseVolume};
+
+/// What a message was for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommCategory {
+    /// DP model averaging of replicated parameters (conv + FC2).
+    DpAverage,
+    /// Inter-group averaging of FC shard parameters (GMP).
+    ShardAverage,
+    /// Modulo-layer example exchange, fprop (Fig. 4a/4c).
+    ModuloFwd,
+    /// Modulo-layer gradient exchange, bprop (Fig. 4b/4d).
+    ModuloBwd,
+    /// Shard-layer partial-output allgather, fprop (Fig. 5a).
+    ShardFwd,
+    /// Shard-layer gradient reduce, bprop (Fig. 5b).
+    ShardBwd,
+}
+
+impl CommCategory {
+    pub const ALL: [CommCategory; 6] = [
+        CommCategory::DpAverage,
+        CommCategory::ShardAverage,
+        CommCategory::ModuloFwd,
+        CommCategory::ModuloBwd,
+        CommCategory::ShardFwd,
+        CommCategory::ShardBwd,
+    ];
+
+    /// True for categories that exist only because of model parallelism.
+    pub fn is_mp(self) -> bool {
+        !matches!(self, CommCategory::DpAverage)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            CommCategory::DpAverage => 0,
+            CommCategory::ShardAverage => 1,
+            CommCategory::ModuloFwd => 2,
+            CommCategory::ModuloBwd => 3,
+            CommCategory::ShardFwd => 4,
+            CommCategory::ShardBwd => 5,
+        }
+    }
+}
+
+impl fmt::Display for CommCategory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            CommCategory::DpAverage => "dp-average",
+            CommCategory::ShardAverage => "shard-average",
+            CommCategory::ModuloFwd => "modulo-fwd",
+            CommCategory::ModuloBwd => "modulo-bwd",
+            CommCategory::ShardFwd => "shard-fwd",
+            CommCategory::ShardBwd => "shard-bwd",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Accumulated per-category volumes (worst rank per phase, summed over
+/// phases) plus modeled seconds.
+#[derive(Debug, Clone, Default)]
+pub struct CommTrace {
+    bytes: [u64; 6],
+    msgs: [u64; 6],
+    seconds: [f64; 6],
+    phases: [u64; 6],
+}
+
+impl CommTrace {
+    pub fn new() -> CommTrace {
+        CommTrace::default()
+    }
+
+    /// Record one BSP phase: `vols[r]` is rank r's posted volume. The
+    /// modeled time is the slowest rank's (phase barrier); bytes/msgs
+    /// accumulate the *maximum* rank too, so "seconds" and "bytes" stay
+    /// mutually consistent as critical-path quantities.
+    pub fn record_phase(&mut self, cat: CommCategory, net: &NetModel, vols: &[PhaseVolume]) {
+        let i = cat.index();
+        let worst = vols
+            .iter()
+            .copied()
+            .max_by(|a, b| {
+                net.phase_time(*a)
+                    .partial_cmp(&net.phase_time(*b))
+                    .unwrap()
+            })
+            .unwrap_or_default();
+        self.bytes[i] += worst.bytes_out;
+        self.msgs[i] += worst.msgs;
+        self.seconds[i] += net.phase_time(worst);
+        self.phases[i] += 1;
+    }
+
+    /// Record a phase where every rank has identical volume.
+    pub fn record_uniform(
+        &mut self,
+        cat: CommCategory,
+        net: &NetModel,
+        ranks: usize,
+        vol: PhaseVolume,
+    ) {
+        let vols = vec![vol; ranks.max(1)];
+        self.record_phase(cat, net, &vols);
+    }
+
+    pub fn seconds(&self, cat: CommCategory) -> f64 {
+        self.seconds[cat.index()]
+    }
+
+    pub fn bytes(&self, cat: CommCategory) -> u64 {
+        self.bytes[cat.index()]
+    }
+
+    pub fn msgs(&self, cat: CommCategory) -> u64 {
+        self.msgs[cat.index()]
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.seconds.iter().sum()
+    }
+
+    pub fn mp_seconds(&self) -> f64 {
+        CommCategory::ALL
+            .iter()
+            .filter(|c| c.is_mp())
+            .map(|c| self.seconds(*c))
+            .sum()
+    }
+
+    pub fn dp_seconds(&self) -> f64 {
+        self.seconds(CommCategory::DpAverage)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &CommTrace) {
+        for i in 0..6 {
+            self.bytes[i] += other.bytes[i];
+            self.msgs[i] += other.msgs[i];
+            self.seconds[i] += other.seconds[i];
+            self.phases[i] += other.phases[i];
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = CommTrace::default();
+    }
+
+    /// Rows of (category, bytes, msgs, seconds) for reporting.
+    pub fn rows(&self) -> Vec<(CommCategory, u64, u64, f64)> {
+        CommCategory::ALL
+            .iter()
+            .map(|&c| (c, self.bytes(c), self.msgs(c), self.seconds(c)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut t = CommTrace::new();
+        let net = NetModel::default();
+        t.record_uniform(CommCategory::ShardFwd, &net, 4, PhaseVolume::new(3, 3000));
+        assert_eq!(t.bytes(CommCategory::ShardFwd), 3000);
+        assert_eq!(t.msgs(CommCategory::ShardFwd), 3);
+        assert!(t.seconds(CommCategory::ShardFwd) > 0.0);
+        assert_eq!(t.bytes(CommCategory::ShardBwd), 0);
+    }
+
+    #[test]
+    fn phase_takes_worst_rank() {
+        let mut t = CommTrace::new();
+        let net = NetModel::default();
+        t.record_phase(
+            CommCategory::ModuloFwd,
+            &net,
+            &[PhaseVolume::new(1, 100), PhaseVolume::new(1, 900)],
+        );
+        assert_eq!(t.bytes(CommCategory::ModuloFwd), 900);
+    }
+
+    #[test]
+    fn mp_vs_dp_split() {
+        let mut t = CommTrace::new();
+        let net = NetModel::default();
+        t.record_uniform(CommCategory::DpAverage, &net, 2, PhaseVolume::new(1, 1 << 20));
+        t.record_uniform(CommCategory::ShardFwd, &net, 2, PhaseVolume::new(1, 1 << 20));
+        assert!(t.dp_seconds() > 0.0 && t.mp_seconds() > 0.0);
+        assert!((t.total_seconds() - t.dp_seconds() - t.mp_seconds()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let net = NetModel::default();
+        let mut a = CommTrace::new();
+        let mut b = CommTrace::new();
+        a.record_uniform(CommCategory::ShardBwd, &net, 2, PhaseVolume::new(1, 100));
+        b.record_uniform(CommCategory::ShardBwd, &net, 2, PhaseVolume::new(1, 200));
+        a.merge(&b);
+        assert_eq!(a.bytes(CommCategory::ShardBwd), 300);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let net = NetModel::default();
+        let mut t = CommTrace::new();
+        t.record_uniform(CommCategory::DpAverage, &net, 2, PhaseVolume::new(1, 100));
+        t.reset();
+        assert_eq!(t.total_bytes(), 0);
+        assert_eq!(t.total_seconds(), 0.0);
+    }
+
+    #[test]
+    fn all_categories_have_display() {
+        for c in CommCategory::ALL {
+            assert!(!format!("{c}").is_empty());
+        }
+    }
+}

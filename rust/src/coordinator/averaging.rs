@@ -1,0 +1,139 @@
+//! BSP model averaging (§4): every `avg_period` batches the workers
+//! exchange parameters and reduce by averaging.
+//!
+//! Two scopes, matching the GMP design (§3.2):
+//! * replicated parameters (conv + FC2) average across **all N** workers
+//!   — ordinary DP model averaging;
+//! * FC shard parameters average across the **D same-offset peers**,
+//!   one per MP group — "exchanging the model shard parameters for
+//!   model averaging across MP groups".
+//!
+//! The exchange itself is a ring allreduce over the fabric (real data
+//! movement, bandwidth-optimal byte counts).
+
+use anyhow::Result;
+
+use crate::comm::collective::ring_allreduce_mean;
+use crate::comm::Fabric;
+
+use super::group::GmpTopology;
+use super::worker::Worker;
+
+/// Tag namespaces (must not collide with the per-iteration MP tags).
+const TAG_REPLICATED: u16 = 1000;
+const TAG_SHARD_BASE: u16 = 2000;
+
+/// Average replicated parameters across all workers. Returns bytes
+/// pushed by the busiest rank (for the trace).
+pub fn average_replicated(fabric: &mut Fabric, workers: &mut [Worker]) -> Result<u64> {
+    let n = workers.len();
+    if n <= 1 {
+        return Ok(0);
+    }
+    let group: Vec<usize> = (0..n).collect();
+    let mut bufs: Vec<Vec<f32>> = workers.iter().map(|w| w.replicated_flat()).collect();
+    let before = fabric.max_bytes_per_rank();
+    ring_allreduce_mean(fabric, &group, &mut bufs, TAG_REPLICATED)?;
+    let pushed = fabric.max_bytes_per_rank() - before;
+    for (w, buf) in workers.iter_mut().zip(bufs.iter()) {
+        w.set_replicated_flat(buf);
+    }
+    Ok(pushed)
+}
+
+/// Average FC shard parameters across same-offset peers (one ring per
+/// shard offset). Returns bytes pushed by the busiest rank.
+pub fn average_shards(
+    fabric: &mut Fabric,
+    workers: &mut [Worker],
+    topo: &GmpTopology,
+) -> Result<u64> {
+    if topo.mp == 1 || topo.n_groups() <= 1 {
+        return Ok(0);
+    }
+    let before = fabric.max_bytes_per_rank();
+    for offset in 0..topo.mp {
+        let peers = topo.shard_peers(offset);
+        let mut bufs: Vec<Vec<f32>> =
+            peers.iter().map(|&r| workers[r].shards_flat()).collect();
+        ring_allreduce_mean(fabric, &peers, &mut bufs, TAG_SHARD_BASE + offset as u16)?;
+        for (&r, buf) in peers.iter().zip(bufs.iter()) {
+            workers[r].set_shards_flat(buf);
+        }
+    }
+    Ok(fabric.max_bytes_per_rank() - before)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::init_full_params;
+
+    fn workers(n: usize, mp: usize) -> (Vec<Worker>, GmpTopology) {
+        let topo = GmpTopology::new(n, mp).unwrap();
+        let (conv, fc) = init_full_params(5);
+        let ws = (0..n)
+            .map(|r| Worker::new(r, &topo, &conv, &fc, 4, 4096, 0.01, 0.0, 0.0).unwrap())
+            .collect();
+        (ws, topo)
+    }
+
+    #[test]
+    fn replicated_average_converges_to_mean() {
+        let (mut ws, _) = workers(4, 2);
+        // Perturb each worker's conv params differently.
+        for (i, w) in ws.iter_mut().enumerate() {
+            w.conv_params[0].as_f32_mut()[0] = i as f32;
+        }
+        let mut fabric = Fabric::new(4);
+        average_replicated(&mut fabric, &mut ws).unwrap();
+        for w in &ws {
+            assert!((w.conv_params[0].as_f32()[0] - 1.5).abs() < 1e-5);
+        }
+        assert!(fabric.drained());
+    }
+
+    #[test]
+    fn shard_average_stays_within_offset_peers() {
+        let (mut ws, topo) = workers(4, 2);
+        // Offset-0 workers are ranks 0, 2; offset-1 are 1, 3.
+        ws[0].fc_params[0].as_f32_mut()[0] = 10.0;
+        ws[2].fc_params[0].as_f32_mut()[0] = 20.0;
+        ws[1].fc_params[0].as_f32_mut()[0] = 100.0;
+        ws[3].fc_params[0].as_f32_mut()[0] = 200.0;
+        let mut fabric = Fabric::new(4);
+        average_shards(&mut fabric, &mut ws, &topo).unwrap();
+        assert!((ws[0].fc_params[0].as_f32()[0] - 15.0).abs() < 1e-5);
+        assert!((ws[2].fc_params[0].as_f32()[0] - 15.0).abs() < 1e-5);
+        assert!((ws[1].fc_params[0].as_f32()[0] - 150.0).abs() < 1e-5);
+        assert!((ws[3].fc_params[0].as_f32()[0] - 150.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn single_worker_is_noop() {
+        let (mut ws, topo) = workers(1, 1);
+        let mut fabric = Fabric::new(1);
+        assert_eq!(average_replicated(&mut fabric, &mut ws).unwrap(), 0);
+        assert_eq!(average_shards(&mut fabric, &mut ws, &topo).unwrap(), 0);
+    }
+
+    #[test]
+    fn single_group_skips_shard_average() {
+        let (mut ws, topo) = workers(2, 2);
+        let mut fabric = Fabric::new(2);
+        let bytes = average_shards(&mut fabric, &mut ws, &topo).unwrap();
+        assert_eq!(bytes, 0);
+    }
+
+    #[test]
+    fn identical_replicas_stay_identical() {
+        let (mut ws, _) = workers(4, 1);
+        let before = ws[0].replicated_flat();
+        let mut fabric = Fabric::new(4);
+        average_replicated(&mut fabric, &mut ws).unwrap();
+        let after = ws[0].replicated_flat();
+        for (a, b) in before.iter().zip(after.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

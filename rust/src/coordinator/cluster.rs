@@ -1,0 +1,649 @@
+//! The cluster driver: SplitBrain's training loop over the simulated
+//! cluster.
+//!
+//! ## Simulation model (DESIGN.md §1)
+//!
+//! Workers are deterministic state machines driven BSP-phase by
+//! BSP-phase on one OS thread. *Numerics are real*: every segment runs
+//! through PJRT, every exchange moves real bytes through the fabric, so
+//! loss curves and gradients are exactly what an N-machine deployment
+//! would compute. *Time is simulated*: each worker's compute seconds
+//! are measured around its own PJRT/host calls, communication seconds
+//! come from the α–β model over the schedule's per-phase volumes, and
+//! one step costs `max_w(compute_w) + Σ comm phases` on the simulated
+//! clock — the BSP critical path. This avoids the distortion of
+//! oversubscribing N workers' compute onto one machine's cores and is
+//! exactly the quantity Table 2 reports per machine count.
+//!
+//! ## Modes
+//!
+//! * [`Cluster`] — full numeric fidelity (training, losses, tests).
+//! * [`calibrated_report`] — compute times calibrated once per artifact,
+//!   then steps are costed analytically: used by the Table 2 / Fig. 7
+//!   sweeps where 32-worker numeric execution would melt the wall clock
+//!   without changing the reported shape.
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::fabric::{Fabric, Tag};
+use crate::comm::NetModel;
+use crate::data::{BatchIter, Dataset};
+use crate::model::{partition_network, PartitionConfig, TransformedNet, vgg11};
+use crate::runtime::{HostTensor, RuntimeClient};
+use crate::train::{MemoryReport, StepMetrics, TrainReport};
+use crate::util::Timer;
+
+use super::averaging::{average_replicated, average_shards};
+use super::group::GmpTopology;
+use super::modulo::ModuloPlan;
+use super::schedule::StepSchedule;
+use super::scheme::{
+    assemble_bk, assemble_scheme_b, scatter_reduce_bk, scatter_reduce_scheme_b, McastScheme,
+};
+use super::shard::{ShardBwdMode, ShardPlan};
+use super::worker::{init_full_params, Worker};
+
+/// Training-run configuration (§4's trainer parameters).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Total workers N.
+    pub n_workers: usize,
+    /// MP group size (the paper's `mp`; 1 = pure DP).
+    pub mp: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// SGD momentum.
+    pub momentum: f32,
+    /// Global-norm gradient clip (0 = off).
+    pub clip_norm: f32,
+    /// Model-averaging period in batches ("communication batches", §4).
+    pub avg_period: usize,
+    /// Master seed (params, data order).
+    pub seed: u64,
+    /// Network cost model.
+    pub net: NetModel,
+    /// Synthetic dataset size when CIFAR-10 is absent.
+    pub dataset_size: usize,
+    /// Run mp=1 through the same segmented (Pallas-backed) pipeline as
+    /// the MP paths instead of the fused `full_step` fast path. The
+    /// benches set this so Table 2's DP-vs-MP comparison holds per-op
+    /// efficiency constant; numerics are identical either way.
+    pub segmented_mp1: bool,
+    /// §3.1 communication scheme for the modulo layer (default B/K,
+    /// SplitBrain's; B and BK are the Krizhevsky'14 baselines).
+    pub scheme: McastScheme,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_workers: 1,
+            mp: 1,
+            lr: 0.05,
+            momentum: 0.9,
+            clip_norm: 1.0,
+            avg_period: 10,
+            seed: 42,
+            net: NetModel::default(),
+            dataset_size: 2048,
+            segmented_mp1: false,
+            scheme: McastScheme::BoverK,
+        }
+    }
+}
+
+/// The numeric-fidelity cluster.
+pub struct Cluster<'rt> {
+    rt: &'rt RuntimeClient,
+    pub cfg: ClusterConfig,
+    pub topo: GmpTopology,
+    pub schedule: StepSchedule,
+    pub transformed: TransformedNet,
+    workers: Vec<Worker>,
+    iters: Vec<BatchIter>,
+    fabric: Fabric,
+    step_count: usize,
+    batch: usize,
+    /// Fabric counters of the last completed step (before reset):
+    /// (max bytes pushed by one rank, total bytes) — used by tests to
+    /// cross-check the analytic schedule volumes against reality.
+    pub last_fabric_bytes: (u64, u64),
+}
+
+impl<'rt> Cluster<'rt> {
+    /// Build the cluster: partition the VGG variant for `cfg.mp`,
+    /// compile the schedule, initialize identical replicas/shards.
+    pub fn new(rt: &'rt RuntimeClient, cfg: ClusterConfig) -> Result<Cluster<'rt>> {
+        Self::with_dataset(rt, cfg.clone(), crate::data::load_default(cfg.dataset_size, cfg.seed).0)
+    }
+
+    /// Build with an explicit dataset (tests inject toy data here).
+    pub fn with_dataset(
+        rt: &'rt RuntimeClient,
+        cfg: ClusterConfig,
+        data: std::rc::Rc<dyn Dataset>,
+    ) -> Result<Cluster<'rt>> {
+        let topo = GmpTopology::new(cfg.n_workers, cfg.mp)?;
+        if !rt.manifest.supports_mp(cfg.mp) {
+            bail!(
+                "artifacts were not lowered for mp={} (manifest mp_sizes {:?}) — re-run `make artifacts`",
+                cfg.mp,
+                rt.manifest.mp_sizes
+            );
+        }
+        let transformed = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp: cfg.mp, ..Default::default() },
+        )?;
+        let schedule = StepSchedule::compile_full(
+            &transformed,
+            topo,
+            &rt.manifest,
+            cfg.segmented_mp1,
+            cfg.scheme,
+        )?;
+        let batch = rt.manifest.batch;
+
+        let (conv, fc) = init_full_params(cfg.seed);
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        for rank in 0..cfg.n_workers {
+            workers.push(Worker::new(
+                rank,
+                &topo,
+                &conv,
+                &fc,
+                batch,
+                schedule.boundary_width.max(1),
+                cfg.lr,
+                cfg.momentum,
+                cfg.clip_norm,
+            )?);
+        }
+        let iters = (0..cfg.n_workers)
+            .map(|rank| BatchIter::new(data.clone(), batch, rank, cfg.n_workers, cfg.seed))
+            .collect();
+        let fabric = Fabric::new(cfg.n_workers);
+        Ok(Cluster {
+            rt,
+            cfg,
+            topo,
+            schedule,
+            transformed,
+            workers,
+            iters,
+            fabric,
+            step_count: 0,
+            batch,
+            last_fabric_bytes: (0, 0),
+        })
+    }
+
+    /// Per-worker memory accounting (Fig. 7c).
+    pub fn memory_report(&self) -> MemoryReport {
+        MemoryReport::of(&self.transformed, self.batch)
+    }
+
+    /// Run `steps` training steps, returning the aggregated report.
+    pub fn train_steps(&mut self, steps: usize) -> Result<TrainReport> {
+        let mut report = TrainReport::new(self.cfg.n_workers, self.cfg.mp, self.batch);
+        for _ in 0..steps {
+            let m = self.step()?;
+            // Mirror the modeled phases into the trace for Fig. 7b.
+            for p in &self.schedule.mp_phases {
+                for _ in 0..p.times {
+                    report.trace.record_uniform(p.category, &self.cfg.net, p.ranks, p.per_member);
+                }
+            }
+            if self.just_averaged() {
+                for p in &self.schedule.avg_phases {
+                    report.trace.record_uniform(p.category, &self.cfg.net, p.ranks, p.per_member);
+                }
+            }
+            report.push(&m);
+        }
+        Ok(report)
+    }
+
+    fn just_averaged(&self) -> bool {
+        self.cfg.n_workers > 1 && self.step_count % self.cfg.avg_period == 0
+    }
+
+    /// One BSP training step across all groups.
+    pub fn step(&mut self) -> Result<StepMetrics> {
+        for w in &mut self.workers {
+            w.begin_step();
+            w.compute_secs = 0.0;
+        }
+        let batches: Vec<_> = self.iters.iter_mut().map(|it| it.next_batch()).collect();
+
+        if self.cfg.mp == 1 && !self.cfg.segmented_mp1 {
+            self.step_pure_dp(&batches)?;
+        } else {
+            for gid in 0..self.topo.n_groups() {
+                self.step_group(gid, &batches)?;
+            }
+        }
+        self.step_count += 1;
+
+        // Averaging every avg_period steps (counting from step 1).
+        let mut dp_comm = 0.0;
+        if self.just_averaged() {
+            average_replicated(&mut self.fabric, &mut self.workers)?;
+            average_shards(&mut self.fabric, &mut self.workers, &self.topo)?;
+            dp_comm = self.schedule.avg_comm_secs(&self.cfg.net);
+        }
+        if !self.fabric.drained() {
+            bail!("fabric not drained after step {} — schedule bug", self.step_count);
+        }
+        self.last_fabric_bytes = (self.fabric.max_bytes_per_rank(), self.fabric.total_bytes());
+        self.fabric.reset_counters();
+
+        let compute = self
+            .workers
+            .iter()
+            .map(|w| w.compute_secs)
+            .fold(0.0, f64::max);
+        let rounds = self.cfg.scheme.rounds(self.cfg.mp.max(1)) as f64;
+        let loss = self.workers.iter().map(|w| w.loss_acc / rounds).sum::<f64>()
+            / self.workers.len() as f64;
+        Ok(StepMetrics {
+            compute_secs: compute,
+            mp_comm_secs: self.schedule.mp_comm_secs(&self.cfg.net),
+            dp_comm_secs: dp_comm,
+            loss,
+        })
+    }
+
+    /// mp=1 fast path: the fused full_step artifact per worker.
+    fn step_pure_dp(&mut self, batches: &[crate::data::Batch]) -> Result<()> {
+        for (w, batch) in self.workers.iter_mut().zip(batches.iter()) {
+            let t = Timer::start();
+            let mut inputs: Vec<HostTensor> =
+                Vec::with_capacity(w.conv_params.len() + w.fc_params.len() + 2);
+            inputs.extend(w.conv_params.iter().cloned());
+            inputs.extend(w.fc_params.iter().cloned());
+            inputs.push(batch.images.clone());
+            inputs.push(batch.labels.clone());
+            let out = self.rt.run("full_step", &inputs).context("full_step")?;
+            w.loss_acc += out[0].scalar() as f64;
+            let conv_grads = &out[1..15];
+            let fc_grads = &out[15..21];
+            w.update_conv(conv_grads);
+            let fcg: Vec<(usize, HostTensor)> =
+                fc_grads.iter().cloned().enumerate().collect();
+            w.accumulate_fc_grads(&fcg);
+            w.update_fc(1);
+            w.compute_secs += t.elapsed_secs();
+        }
+        Ok(())
+    }
+
+    /// The hybrid path for one MP group: Fig. 3's transformed network,
+    /// phase by phase.
+    fn step_group(&mut self, gid: usize, batches: &[crate::data::Batch]) -> Result<()> {
+        let members = self.topo.members(gid);
+        let k = members.len();
+        let b = self.batch;
+        let boundary = self.schedule.boundary_width;
+        let s0 = self.schedule.shard_widths[0];
+        let s1 = self.schedule.shard_widths[1];
+
+        let modulo = ModuloPlan::new(members.clone(), b, boundary);
+        let modulo_lab = ModuloPlan::new(members.clone(), b, 1);
+        let shard0 = ShardPlan::new(members.clone(), s0, ShardBwdMode::ReducePartials);
+        let shard1 = ShardPlan::new(members.clone(), s1, ShardBwdMode::SliceReplicated);
+
+        // --- conv fwd per member (timed per worker) ---
+        let mut acts = Vec::with_capacity(k);
+        let mut labels_f32 = Vec::with_capacity(k);
+        for (gi, &r) in members.iter().enumerate() {
+            let _ = gi;
+            let w = &mut self.workers[r];
+            let t = Timer::start();
+            let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
+            inputs.push(batches[r].images.clone());
+            let out = self.rt.run("conv_fwd", &inputs).context("conv_fwd")?;
+            w.compute_secs += t.elapsed_secs();
+            acts.push(out.into_iter().next().unwrap());
+            labels_f32.push(HostTensor::f32(
+                vec![b, 1],
+                batches[r].labels.as_i32().iter().map(|&v| v as f32).collect(),
+            ));
+        }
+
+        // --- modulo rounds through the FC stack (scheme-dependent:
+        // B/K and B run K rounds of B examples; BK one round of B*K) ---
+        // k=1 groups have no exchange at all; any scheme degrades to
+        // the local B/K path (which is exactly the local pipeline).
+        let scheme = if k > 1 { self.cfg.scheme } else { McastScheme::BoverK };
+        let rounds = scheme.rounds(k);
+        let fcb = scheme.fc_batch(b, k);
+        let suffix = scheme.artifact_suffix();
+        let head_name = match scheme {
+            McastScheme::BK if k > 1 => format!("head_step_bk{k}"),
+            _ => "head_step".to_string(),
+        };
+        for it in 0..rounds {
+            let it16 = it as u16;
+            let tag = |phase: u16| Tag::new(phase, it16, gid as u16);
+
+            // Modulo fprop: assemble activations + labels.
+            let (assembled, labs) = match scheme {
+                McastScheme::BoverK => (
+                    modulo.assemble(&mut self.fabric, &acts, it, tag(1))?,
+                    modulo_lab.assemble(&mut self.fabric, &labels_f32, it, tag(2))?,
+                ),
+                McastScheme::B => (
+                    assemble_scheme_b(&modulo, &mut self.fabric, &acts, it, tag(1))?,
+                    assemble_scheme_b(&modulo_lab, &mut self.fabric, &labels_f32, it, tag(2))?,
+                ),
+                McastScheme::BK => (
+                    assemble_bk(&modulo, &mut self.fabric, &acts, tag(1))?,
+                    assemble_bk(&modulo_lab, &mut self.fabric, &labels_f32, tag(2))?,
+                ),
+            };
+
+            // FC0 shard fwd.
+            let mut h0l = Vec::with_capacity(k);
+            for (gi, &r) in members.iter().enumerate() {
+                let w = &mut self.workers[r];
+                let t = Timer::start();
+                let out = self.rt.run(
+                    &format!("fc0_fwd_k{k}{suffix}"),
+                    &[w.fc_params[0].clone(), w.fc_params[1].clone(), assembled[gi].clone()],
+                )?;
+                w.compute_secs += t.elapsed_secs();
+                h0l.push(out.into_iter().next().unwrap());
+            }
+            // Shard gather to full width.
+            let h0 = shard0.gather_full(&mut self.fabric, &h0l, tag(3))?;
+
+            // FC1 shard fwd.
+            let mut h1l = Vec::with_capacity(k);
+            for (gi, &r) in members.iter().enumerate() {
+                let w = &mut self.workers[r];
+                let t = Timer::start();
+                let out = self.rt.run(
+                    &format!("fc1_fwd_k{k}{suffix}"),
+                    &[w.fc_params[2].clone(), w.fc_params[3].clone(), h0[gi].clone()],
+                )?;
+                w.compute_secs += t.elapsed_secs();
+                h1l.push(out.into_iter().next().unwrap());
+            }
+            let h1 = shard1.gather_full(&mut self.fabric, &h1l, tag(4))?;
+
+            // Replicated head: loss + gw2 + gb2 + gh1 per member.
+            let mut gh1_full = Vec::with_capacity(k);
+            for (gi, &r) in members.iter().enumerate() {
+                let w = &mut self.workers[r];
+                let labels_i32 = HostTensor::i32(
+                    vec![fcb],
+                    labs[gi].as_f32().iter().map(|&v| v as i32).collect(),
+                );
+                let t = Timer::start();
+                let out = self.rt.run(
+                    &head_name,
+                    &[w.fc_params[4].clone(), w.fc_params[5].clone(), h1[gi].clone(), labels_i32],
+                )?;
+                w.compute_secs += t.elapsed_secs();
+                w.loss_acc += out[0].scalar() as f64;
+                w.accumulate_fc_grads(&[(4, out[1].clone()), (5, out[2].clone())]);
+                gh1_full.push(out[3].clone());
+            }
+
+            // Shard1 bwd: replicated above -> local slice, no wire.
+            let g_h1l = shard1.backward(&mut self.fabric, &gh1_full, tag(5))?;
+
+            // FC1 shard bwd.
+            let mut gh0_partials = Vec::with_capacity(k);
+            for (gi, &r) in members.iter().enumerate() {
+                let w = &mut self.workers[r];
+                let t = Timer::start();
+                let out = self.rt.run(
+                    &format!("fc1_bwd_k{k}{suffix}"),
+                    &[
+                        w.fc_params[2].clone(),
+                        w.fc_params[3].clone(),
+                        h0[gi].clone(),
+                        g_h1l[gi].clone(),
+                    ],
+                )?;
+                w.compute_secs += t.elapsed_secs();
+                w.accumulate_fc_grads(&[(2, out[0].clone()), (3, out[1].clone())]);
+                gh0_partials.push(out[2].clone());
+            }
+
+            // Shard0 bwd: partitioned above -> reduce partials.
+            let g_h0l = shard0.backward(&mut self.fabric, &gh0_partials, tag(6))?;
+
+            // FC0 shard bwd.
+            let mut gbatch_partials = Vec::with_capacity(k);
+            for (gi, &r) in members.iter().enumerate() {
+                let w = &mut self.workers[r];
+                let t = Timer::start();
+                let out = self.rt.run(
+                    &format!("fc0_bwd_k{k}{suffix}"),
+                    &[
+                        w.fc_params[0].clone(),
+                        w.fc_params[1].clone(),
+                        assembled[gi].clone(),
+                        g_h0l[gi].clone(),
+                    ],
+                )?;
+                w.compute_secs += t.elapsed_secs();
+                w.accumulate_fc_grads(&[(0, out[0].clone()), (1, out[1].clone())]);
+                gbatch_partials.push(out[2].clone());
+            }
+
+            // Modulo bprop: route + reduce into each member's g_act.
+            let mut g_acts: Vec<HostTensor> = members
+                .iter()
+                .map(|&r| self.workers[r].g_act.clone())
+                .collect();
+            match scheme {
+                McastScheme::BoverK => modulo.scatter_reduce(
+                    &mut self.fabric, &gbatch_partials, &mut g_acts, it, tag(7),
+                )?,
+                McastScheme::B => scatter_reduce_scheme_b(
+                    &modulo, &mut self.fabric, &gbatch_partials, &mut g_acts, it, tag(7),
+                )?,
+                McastScheme::BK => {
+                    scatter_reduce_bk(
+                        &modulo, &mut self.fabric, &gbatch_partials, &mut g_acts, tag(7),
+                    )?;
+                    // LR consistency: BK's head averaged over B*K
+                    // examples, so the routed gradient is 1/K of the
+                    // per-round schemes' — rescale (scheme.rs docs).
+                    for g in &mut g_acts {
+                        g.scale(k as f32);
+                    }
+                }
+            }
+            for (gi, &r) in members.iter().enumerate() {
+                self.workers[r].g_act = g_acts[gi].clone();
+            }
+        }
+
+        // --- conv bwd + optimizer updates per member ---
+        for &r in &members {
+            let w = &mut self.workers[r];
+            let t = Timer::start();
+            let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
+            inputs.push(batches[r].images.clone());
+            inputs.push(w.g_act.clone());
+            let grads = self.rt.run("conv_bwd", &inputs).context("conv_bwd")?;
+            w.update_conv(&grads);
+            w.update_fc(rounds);
+            w.compute_secs += t.elapsed_secs();
+        }
+        Ok(())
+    }
+
+    /// Evaluate the current model on `n_batches` x batch examples:
+    /// reconstructs the full FC params of group 0 host-side (untimed)
+    /// and runs the fused full_eval. Returns (mean loss, accuracy).
+    pub fn evaluate(&mut self, data: &dyn Dataset, n_batches: usize) -> Result<(f64, f64)> {
+        let full_fc = self.reconstruct_full_fc(0);
+        let conv = self.workers[0].conv_params.clone();
+        let mut total_loss = 0.0;
+        let mut correct = 0i64;
+        let mut seen = 0usize;
+        for bi in 0..n_batches {
+            let idx: Vec<usize> =
+                (0..self.batch).map(|i| (bi * self.batch + i) % data.len()).collect();
+            let batch = data.gather(&idx);
+            let mut inputs: Vec<HostTensor> = conv.to_vec();
+            inputs.extend(full_fc.iter().cloned());
+            inputs.push(batch.images.clone());
+            inputs.push(batch.labels.clone());
+            let out = self.rt.run("full_eval", &inputs)?;
+            total_loss += out[0].scalar() as f64;
+            correct += out[1].scalar() as i64;
+            seen += self.batch;
+        }
+        Ok((total_loss / n_batches as f64, correct as f64 / seen as f64))
+    }
+
+    /// Allgather (host-side, untimed) group `gid`'s FC shards into the
+    /// full FC parameter set.
+    pub fn reconstruct_full_fc(&self, gid: usize) -> Vec<HostTensor> {
+        let members = self.topo.members(gid);
+        let k = members.len();
+        let mut out = Vec::with_capacity(6);
+        for fc_idx in 0..2 {
+            let sw = self.workers[members[0]].fc_params[2 * fc_idx].shape.clone();
+            let (din, s) = (sw[0], sw[1]);
+            let mut w = HostTensor::zeros(vec![din, s * k]);
+            let mut bvec = Vec::with_capacity(s * k);
+            for (gi, &r) in members.iter().enumerate() {
+                w.set_cols(gi * s, &self.workers[r].fc_params[2 * fc_idx]);
+                bvec.extend_from_slice(self.workers[r].fc_params[2 * fc_idx + 1].as_f32());
+            }
+            out.push(w);
+            out.push(HostTensor::f32(vec![s * k], bvec));
+        }
+        out.push(self.workers[members[0]].fc_params[4].clone());
+        out.push(self.workers[members[0]].fc_params[5].clone());
+        out
+    }
+
+    /// Read-only worker access (tests).
+    pub fn worker(&self, rank: usize) -> &Worker {
+        &self.workers[rank]
+    }
+
+    /// Save the global model (worker 0's conv replica + group 0's
+    /// reconstructed full FC stack) to a checkpoint file. Valid at any
+    /// point: replicas agree after averaging; between averagings this
+    /// snapshots worker 0's replica, like the paper's leader would.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        use crate::train::checkpoint;
+        let mut tensors: Vec<HostTensor> = self.workers[0].conv_params.clone();
+        tensors.extend(self.reconstruct_full_fc(0));
+        let names = checkpoint::model_names();
+        let named: Vec<(String, &HostTensor)> = names
+            .into_iter()
+            .zip(tensors.iter())
+            .collect();
+        checkpoint::save(path, &named)
+    }
+
+    /// Restore a checkpoint into every worker (re-sharding the FC stack
+    /// for this cluster's mp) and reset optimizer momentum.
+    pub fn restore_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        use crate::train::checkpoint;
+        let loaded = checkpoint::load(path)?;
+        let names = checkpoint::model_names();
+        if loaded.len() != names.len() {
+            bail!("checkpoint has {} tensors, expected {}", loaded.len(), names.len());
+        }
+        for ((name, _), expect) in loaded.iter().zip(names.iter()) {
+            if name != expect {
+                bail!("checkpoint tensor order mismatch: {name} vs {expect}");
+            }
+        }
+        let tensors: Vec<HostTensor> = loaded.into_iter().map(|(_, t)| t).collect();
+        let conv = &tensors[..14];
+        let fc = &tensors[14..20];
+        for rank in 0..self.cfg.n_workers {
+            let w = &mut self.workers[rank];
+            for (p, t) in w.conv_params.iter_mut().zip(conv.iter()) {
+                if p.shape != t.shape {
+                    bail!("conv shape mismatch in checkpoint: {:?} vs {:?}", p.shape, t.shape);
+                }
+                p.as_f32_mut().copy_from_slice(t.as_f32());
+            }
+            let shard = super::worker::shard_fc(fc, self.topo.mp, self.topo.offset(rank));
+            for (p, t) in w.fc_params.iter_mut().zip(shard.iter()) {
+                p.as_f32_mut().copy_from_slice(t.as_f32());
+            }
+            w.conv_opt.reset();
+            w.fc_opt.reset();
+        }
+        Ok(())
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.step_count
+    }
+}
+
+/// Calibrated throughput estimation for large sweeps: times each
+/// artifact the schedule needs (plus the host-side SGD) once, then costs
+/// `steps` analytically. No training state is built.
+pub fn calibrated_report(
+    rt: &RuntimeClient,
+    cfg: &ClusterConfig,
+    calib_runs: usize,
+) -> Result<TrainReport> {
+    let topo = GmpTopology::new(cfg.n_workers, cfg.mp)?;
+    let transformed = partition_network(
+        &vgg11(),
+        vec![32, 32, 3],
+        &PartitionConfig { mp: cfg.mp, ..Default::default() },
+    )?;
+    let schedule = StepSchedule::compile(&transformed, topo, &rt.manifest)?;
+
+    // --- calibrate artifact times (process-wide cache in the runtime) ---
+    let mut compute_secs = 0.0;
+    for call in &schedule.compute {
+        let per_call = rt.calibrated_secs(&call.artifact, calib_runs)?;
+        compute_secs += per_call * call.calls as f64;
+    }
+    // Host-side SGD cost over the per-worker parameter count.
+    let params = transformed.param_count();
+    let mut p = vec![0.5f32; params];
+    let g = vec![0.1f32; params];
+    let mut v = vec![0.0f32; params];
+    let t = Timer::start();
+    for i in 0..params {
+        v[i] = 0.9 * v[i] + g[i];
+        p[i] -= 0.05 * v[i];
+    }
+    compute_secs += t.elapsed_secs();
+    std::hint::black_box(&p);
+
+    // --- compose the report ---
+    let mut report = TrainReport::new(cfg.n_workers, cfg.mp, rt.manifest.batch);
+    let mp_comm = schedule.mp_comm_secs(&cfg.net);
+    let avg_comm = schedule.avg_comm_secs(&cfg.net) / cfg.avg_period as f64;
+    let steps = 10; // representative sample; all steps identical by construction
+    for _ in 0..steps {
+        report.push(&StepMetrics {
+            compute_secs,
+            mp_comm_secs: mp_comm,
+            dp_comm_secs: avg_comm,
+            loss: f64::NAN,
+        });
+        for ph in &schedule.mp_phases {
+            for _ in 0..ph.times {
+                report.trace.record_uniform(ph.category, &cfg.net, ph.ranks, ph.per_member);
+            }
+        }
+    }
+    for ph in &schedule.avg_phases {
+        report.trace.record_uniform(ph.category, &cfg.net, ph.ranks, ph.per_member);
+    }
+    Ok(report)
+}

@@ -1,0 +1,157 @@
+//! GMP topology (§3.2, Fig. 6): N workers = D data-parallel groups of
+//! mp model-parallel members each.
+//!
+//! Groups are contiguous rank ranges; within a group a member is
+//! identified by its offset (the paper's intra-group `iProc`). The
+//! Fig. 6b mapping — batch-example index -> owning worker — is
+//! `remote = gid*mp + b/size` with `size = B/K`.
+
+use anyhow::{bail, Result};
+
+/// The cluster's DP x MP shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GmpTopology {
+    /// Total workers N.
+    pub n_workers: usize,
+    /// MP group size K (= the paper's `mp` training parameter).
+    pub mp: usize,
+}
+
+impl GmpTopology {
+    pub fn new(n_workers: usize, mp: usize) -> Result<GmpTopology> {
+        if n_workers == 0 || mp == 0 {
+            bail!("workers and mp must be positive");
+        }
+        if n_workers % mp != 0 {
+            bail!("n_workers {n_workers} not divisible by mp group size {mp}");
+        }
+        Ok(GmpTopology { n_workers, mp })
+    }
+
+    /// Number of MP groups (= DP degree across groups).
+    pub fn n_groups(&self) -> usize {
+        self.n_workers / self.mp
+    }
+
+    /// Group id of a worker (Fig. 6b's `gid`).
+    pub fn gid(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.n_workers);
+        rank / self.mp
+    }
+
+    /// Intra-group offset (the paper's `iProc` within the MP group).
+    pub fn offset(&self, rank: usize) -> usize {
+        rank % self.mp
+    }
+
+    /// Global ranks of group `gid`, in offset order.
+    pub fn members(&self, gid: usize) -> Vec<usize> {
+        debug_assert!(gid < self.n_groups());
+        (gid * self.mp..(gid + 1) * self.mp).collect()
+    }
+
+    /// Group members of `rank`'s own group.
+    pub fn group_of(&self, rank: usize) -> Vec<usize> {
+        self.members(self.gid(rank))
+    }
+
+    /// Ranks across all groups holding the same shard offset — the
+    /// peers that average FC shard parameters in GMP (one per group).
+    pub fn shard_peers(&self, offset: usize) -> Vec<usize> {
+        debug_assert!(offset < self.mp);
+        (0..self.n_groups()).map(|g| g * self.mp + offset).collect()
+    }
+
+    /// Fig. 6b: which worker owns batch-example `b` of an assembled
+    /// group batch, from the perspective of `rank`'s group.
+    /// `size = B/K` examples per member.
+    pub fn owner_of_example(&self, rank: usize, b: usize, batch: usize) -> usize {
+        let size = batch / self.mp;
+        debug_assert!(b < batch);
+        self.gid(rank) * self.mp + b / size
+    }
+
+    /// True when the topology degenerates to pure DP (mp = 1).
+    pub fn is_pure_dp(&self) -> bool {
+        self.mp == 1
+    }
+
+    /// True when it degenerates to the single-group scheme of
+    /// Krizhevsky'14 (mp = N).
+    pub fn is_single_group(&self) -> bool {
+        self.mp == self.n_workers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_workers_mp2_matches_fig6a() {
+        // Fig. 6a: four workers form two MP groups of size two.
+        let t = GmpTopology::new(4, 2).unwrap();
+        assert_eq!(t.n_groups(), 2);
+        assert_eq!(t.members(0), vec![0, 1]);
+        assert_eq!(t.members(1), vec![2, 3]);
+        assert_eq!(t.gid(2), 1);
+        assert_eq!(t.offset(3), 1);
+    }
+
+    #[test]
+    fn fig6b_owner_mapping() {
+        // N=4, mp=2, B=8 -> size=4. For a rank in group 1, example 5
+        // belongs to gid*mp + 5/4 = 2 + 1 = rank 3.
+        let t = GmpTopology::new(4, 2).unwrap();
+        assert_eq!(t.owner_of_example(2, 5, 8), 3);
+        assert_eq!(t.owner_of_example(2, 3, 8), 2);
+        // Group 0 sees ranks 0/1.
+        assert_eq!(t.owner_of_example(0, 5, 8), 1);
+        assert_eq!(t.owner_of_example(1, 0, 8), 0);
+    }
+
+    #[test]
+    fn fig4_mapping_single_group() {
+        // The K=2, B=2 walkthrough of Fig. 4: worker P0 owns b0, P1
+        // owns b1 (remote = b / (B/K) = b).
+        let t = GmpTopology::new(2, 2).unwrap();
+        assert_eq!(t.owner_of_example(0, 0, 2), 0);
+        assert_eq!(t.owner_of_example(0, 1, 2), 1);
+        assert_eq!(t.owner_of_example(1, 0, 2), 0);
+    }
+
+    #[test]
+    fn shard_peers_span_groups() {
+        let t = GmpTopology::new(8, 2).unwrap();
+        assert_eq!(t.shard_peers(0), vec![0, 2, 4, 6]);
+        assert_eq!(t.shard_peers(1), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let dp = GmpTopology::new(4, 1).unwrap();
+        assert!(dp.is_pure_dp());
+        assert_eq!(dp.n_groups(), 4);
+        let single = GmpTopology::new(4, 4).unwrap();
+        assert!(single.is_single_group());
+        assert_eq!(single.n_groups(), 1);
+    }
+
+    #[test]
+    fn divisibility_enforced() {
+        assert!(GmpTopology::new(6, 4).is_err());
+        assert!(GmpTopology::new(0, 1).is_err());
+        assert!(GmpTopology::new(4, 0).is_err());
+    }
+
+    #[test]
+    fn members_and_offsets_are_consistent() {
+        let t = GmpTopology::new(12, 4).unwrap();
+        for rank in 0..12 {
+            let g = t.gid(rank);
+            let members = t.members(g);
+            assert_eq!(members[t.offset(rank)], rank);
+            assert_eq!(t.group_of(rank), members);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The SplitBrain coordinator — the paper's Layer-3 contribution.
+//!
+//! - [`group`] — GMP topology: N workers = D groups x mp members (Fig. 6)
+//! - [`modulo`] — the modulo layer L_M: B/K example scheduling (Fig. 4)
+//! - [`shard`] — the shard layer L_S: partition gather/reduce (Fig. 5)
+//! - [`schedule`] — the compiled per-step plan + analytic comm volumes
+//! - [`averaging`] — BSP model averaging (replicated across N, shards across groups)
+//! - [`worker`] — per-worker parameter/optimizer/accumulator state
+//! - [`cluster`] — the numeric simulator + calibrated throughput mode
+
+pub mod averaging;
+pub mod cluster;
+pub mod group;
+pub mod modulo;
+pub mod planner;
+pub mod schedule;
+pub mod scheme;
+pub mod shard;
+pub mod worker;
+
+pub use cluster::{calibrated_report, Cluster, ClusterConfig};
+pub use group::GmpTopology;
+pub use modulo::ModuloPlan;
+pub use planner::{best, plan, CostModel, PlanOption, PlanRequest};
+pub use schedule::StepSchedule;
+pub use scheme::McastScheme;
+pub use shard::{ShardBwdMode, ShardPlan};

@@ -1,0 +1,285 @@
+//! The modulo layer L_M (§3.1, Fig. 4): stateful scheduling of the B/K
+//! example broadcast across the K modulo iterations.
+//!
+//! fprop (iteration k): every group member contributes rows
+//! `[k·size, (k+1)·size)` of its local activations; the assembled batch
+//! places member j's contribution at rows `[j·size, (j+1)·size)`
+//! (owner mapping of Fig. 6b). Local rows are copied, remote rows are
+//! gathered over the fabric while the local slice is scattered —
+//! "broadcast by scattering ... gathered back simultaneously".
+//!
+//! bprop (iteration k): the assembled-batch gradient is routed back:
+//! rows owned by member j are sent to j, which *reduces* (sums) the
+//! copies from all members — the partial-gradient semantics of the
+//! partitioned FC0 below (Fig. 4b) — and accumulates the result into
+//! rows `[k·size, (k+1)·size)` of its local activation gradient.
+
+use anyhow::Result;
+
+use crate::comm::fabric::{Fabric, Tag};
+use crate::runtime::HostTensor;
+
+/// Compile-time facts of a modulo exchange for one MP group.
+#[derive(Debug, Clone)]
+pub struct ModuloPlan {
+    /// Global ranks of the group, offset order.
+    pub group: Vec<usize>,
+    /// Local batch size B (the FC stack always sees B examples).
+    pub batch: usize,
+    /// Feature width at the DP/MP boundary (4096 for the VGG variant).
+    pub width: usize,
+}
+
+impl ModuloPlan {
+    pub fn new(group: Vec<usize>, batch: usize, width: usize) -> ModuloPlan {
+        assert!(!group.is_empty());
+        assert_eq!(batch % group.len(), 0, "B must be a multiple of K");
+        ModuloPlan { group, batch, width }
+    }
+
+    /// K = group size.
+    pub fn k(&self) -> usize {
+        self.group.len()
+    }
+
+    /// size = B/K examples contributed per member per iteration.
+    pub fn size(&self) -> usize {
+        self.batch / self.k()
+    }
+
+    /// Wire bytes each member sends in one fprop iteration:
+    /// its B/K slice to each of the K-1 peers.
+    pub fn fwd_bytes_per_member(&self) -> u64 {
+        ((self.k() - 1) * self.size() * self.width * 4) as u64
+    }
+
+    /// bprop volume is symmetric: K-1 foreign row-blocks pushed back.
+    pub fn bwd_bytes_per_member(&self) -> u64 {
+        self.fwd_bytes_per_member()
+    }
+
+    /// fprop of iteration `k`: assemble every member's full batch.
+    /// `acts[j]` is member j's local `[B, width]` activations; returns
+    /// the `[B, width]` assembled batch per member.
+    pub fn assemble(
+        &self,
+        fabric: &mut Fabric,
+        acts: &[HostTensor],
+        k: usize,
+        tag: Tag,
+    ) -> Result<Vec<HostTensor>> {
+        let kk = self.k();
+        let size = self.size();
+        assert!(k < kk);
+        assert_eq!(acts.len(), kk);
+
+        // Scatter: member j pushes its slice [k*size, (k+1)*size) to all.
+        for (j, &src) in self.group.iter().enumerate() {
+            let slice = acts[j].slice_rows(k * size, (k + 1) * size);
+            for &dst in &self.group {
+                if dst != src {
+                    fabric.post(src, dst, tag, slice.as_f32().to_vec());
+                }
+            }
+        }
+        // Gather + local copy: assembled rows [j*size, (j+1)*size) come
+        // from member j (the Fig. 6b owner mapping).
+        let mut outs = Vec::with_capacity(kk);
+        for (i, &dst) in self.group.iter().enumerate() {
+            let mut batch = HostTensor::zeros(vec![self.batch, self.width]);
+            for (j, &src) in self.group.iter().enumerate() {
+                if j == i {
+                    let local = acts[i].slice_rows(k * size, (k + 1) * size);
+                    batch.set_rows(j * size, &local);
+                } else {
+                    let data = fabric.take(dst, src, tag)?;
+                    batch.set_rows(
+                        j * size,
+                        &HostTensor::f32(vec![size, self.width], data),
+                    );
+                }
+            }
+            outs.push(batch);
+        }
+        Ok(outs)
+    }
+
+    /// bprop of iteration `k`: route the assembled-batch gradients back
+    /// to their owners, summing contributions from all members, and
+    /// accumulate into each member's local gradient buffer at rows
+    /// `[k·size, (k+1)·size)`.
+    ///
+    /// `gbatches[j]` is member j's `[B, width]` partial gradient of the
+    /// assembled batch; `g_acts[j]` is member j's `[B, width]` local
+    /// activation-gradient accumulator.
+    pub fn scatter_reduce(
+        &self,
+        fabric: &mut Fabric,
+        gbatches: &[HostTensor],
+        g_acts: &mut [HostTensor],
+        k: usize,
+        tag: Tag,
+    ) -> Result<()> {
+        let kk = self.k();
+        let size = self.size();
+        assert_eq!(gbatches.len(), kk);
+        assert_eq!(g_acts.len(), kk);
+
+        // Scatter: member j sends the rows owned by member i (!= j).
+        for (j, &src) in self.group.iter().enumerate() {
+            for (i, &dst) in self.group.iter().enumerate() {
+                if i != j {
+                    let rows = gbatches[j].slice_rows(i * size, (i + 1) * size);
+                    fabric.post(src, dst, tag, rows.as_f32().to_vec());
+                }
+            }
+        }
+        // Reduce: member i sums its own rows + K-1 gathered copies, then
+        // accumulates into its local slice for this iteration.
+        for (i, &dst) in self.group.iter().enumerate() {
+            let mut acc = gbatches[i].slice_rows(i * size, (i + 1) * size);
+            for &src in &self.group {
+                if src != dst {
+                    let data = fabric.take(dst, src, tag)?;
+                    acc.add_assign(&HostTensor::f32(vec![size, self.width], data));
+                }
+            }
+            // g_act rows for iteration k are exactly this member's
+            // contribution rows — write (they start zeroed per step).
+            let base = k * size;
+            for r in 0..size {
+                let dst_lo = (base + r) * self.width;
+                let src_lo = r * self.width;
+                let acc_row = &acc.as_f32()[src_lo..src_lo + self.width];
+                g_acts[i].as_f32_mut()[dst_lo..dst_lo + self.width]
+                    .copy_from_slice(acc_row);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acts(k: usize, b: usize, w: usize) -> Vec<HostTensor> {
+        // member j, row r, col c = 100*j + r + 0.01*c
+        (0..k)
+            .map(|j| {
+                let data: Vec<f32> = (0..b * w)
+                    .map(|i| 100.0 * j as f32 + (i / w) as f32 + 0.01 * (i % w) as f32)
+                    .collect();
+                HostTensor::f32(vec![b, w], data)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn assemble_places_rows_by_owner() {
+        let plan = ModuloPlan::new(vec![0, 1], 4, 3);
+        let mut f = Fabric::new(2);
+        let a = acts(2, 4, 3);
+        // Iteration 0: rows 0..2 of each member.
+        let out = plan.assemble(&mut f, &a, 0, Tag::new(1, 0, 0)).unwrap();
+        for o in &out {
+            // rows 0..2 from member 0 (rows 0..2 of its act),
+            // rows 2..4 from member 1.
+            assert_eq!(o.as_f32()[0], 0.0); // member 0 row 0 col 0
+            assert_eq!(o.as_f32()[2 * 3], 100.0); // member 1 row 0
+        }
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn assemble_iteration_1_uses_second_slice() {
+        let plan = ModuloPlan::new(vec![0, 1], 4, 3);
+        let mut f = Fabric::new(2);
+        let a = acts(2, 4, 3);
+        let out = plan.assemble(&mut f, &a, 1, Tag::new(1, 1, 0)).unwrap();
+        // Member 0's contribution is now its rows 2..4.
+        assert_eq!(out[0].as_f32()[0], 2.0);
+        assert_eq!(out[1].as_f32()[2 * 3], 102.0);
+    }
+
+    #[test]
+    fn fwd_bytes_formula_matches_fabric() {
+        let plan = ModuloPlan::new(vec![0, 1, 2, 3], 8, 16);
+        let mut f = Fabric::new(4);
+        let a = acts(4, 8, 16);
+        plan.assemble(&mut f, &a, 0, Tag::new(1, 0, 0)).unwrap();
+        assert_eq!(f.bytes_from(0), plan.fwd_bytes_per_member());
+    }
+
+    #[test]
+    fn scatter_reduce_sums_partials() {
+        let plan = ModuloPlan::new(vec![0, 1], 2, 2);
+        let mut f = Fabric::new(2);
+        // Both members produce all-ones partial gradients over the
+        // assembled batch -> each owner's rows sum to 2.
+        let gb = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0; 4]),
+            HostTensor::f32(vec![2, 2], vec![1.0; 4]),
+        ];
+        let mut g_acts = vec![HostTensor::zeros(vec![2, 2]), HostTensor::zeros(vec![2, 2])];
+        plan.scatter_reduce(&mut f, &gb, &mut g_acts, 0, Tag::new(2, 0, 0)).unwrap();
+        // Iteration 0 wrote rows 0..1 (size=1) of each member's g_act.
+        assert_eq!(g_acts[0].as_f32(), &[2.0, 2.0, 0.0, 0.0]);
+        assert_eq!(g_acts[1].as_f32(), &[2.0, 2.0, 0.0, 0.0]);
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn scatter_reduce_routes_to_owner() {
+        let plan = ModuloPlan::new(vec![0, 1], 2, 1);
+        let mut f = Fabric::new(2);
+        // Member 0's gradient: rows [10, 20]; member 1's: [1, 2].
+        // Owner of row 0 = member 0 -> gets 10+1; owner row 1 = member 1
+        // -> gets 20+2.
+        let gb = vec![
+            HostTensor::f32(vec![2, 1], vec![10.0, 20.0]),
+            HostTensor::f32(vec![2, 1], vec![1.0, 2.0]),
+        ];
+        let mut g = vec![HostTensor::zeros(vec![2, 1]), HostTensor::zeros(vec![2, 1])];
+        plan.scatter_reduce(&mut f, &gb, &mut g, 1, Tag::new(2, 1, 0)).unwrap();
+        // Iteration 1 writes row 1 of each local buffer.
+        assert_eq!(g[0].as_f32(), &[0.0, 11.0]);
+        assert_eq!(g[1].as_f32(), &[0.0, 22.0]);
+    }
+
+    #[test]
+    fn k1_group_has_no_traffic() {
+        let plan = ModuloPlan::new(vec![0], 4, 2);
+        let mut f = Fabric::new(1);
+        let a = acts(1, 4, 2);
+        let out = plan.assemble(&mut f, &a, 0, Tag::new(1, 0, 0)).unwrap();
+        // K=1: assembled batch = the full local batch (size = B).
+        assert_eq!(out[0].as_f32(), a[0].as_f32());
+        assert_eq!(f.total_bytes(), 0);
+    }
+
+    #[test]
+    fn roundtrip_fwd_bwd_identity() {
+        // If the "FC stack" is the identity (gbatch = batch), then after
+        // K iterations every member's g_act equals K times... no: each
+        // row of the local act appears in exactly one iteration's
+        // assembled batch, and the reduce sums the K identical copies.
+        let plan = ModuloPlan::new(vec![0, 1], 4, 3);
+        let k = plan.k();
+        let a = acts(2, 4, 3);
+        let mut g_acts = vec![HostTensor::zeros(vec![4, 3]), HostTensor::zeros(vec![4, 3])];
+        let mut f = Fabric::new(2);
+        for it in 0..k {
+            let assembled = plan.assemble(&mut f, &a, it, Tag::new(1, it as u16, 0)).unwrap();
+            plan.scatter_reduce(&mut f, &assembled, &mut g_acts, it, Tag::new(2, it as u16, 0))
+                .unwrap();
+        }
+        // Every member's reduced gradient = K * its own activations.
+        for (ga, aa) in g_acts.iter().zip(a.iter()) {
+            let mut scaled = aa.clone();
+            scaled.scale(k as f32);
+            assert!(ga.max_abs_diff(&scaled) < 1e-5);
+        }
+        assert!(f.drained());
+    }
+}

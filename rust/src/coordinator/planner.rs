@@ -1,0 +1,267 @@
+//! Configuration planner — the paper's stated future work (§7:
+//! "investigate the design space of fine-grained model partitioning
+//! given a resource budget").
+//!
+//! Given a worker memory budget, the cluster size and a network model,
+//! the planner enumerates every feasible (mp, scheme) configuration,
+//! costs a step with the analytic schedule + a compute model calibrated
+//! from the PJRT artifacts, and returns the feasible frontier sorted by
+//! predicted throughput. This turns Fig. 7c's manual sweet-spot hunt
+//! into a query.
+
+use anyhow::Result;
+
+use crate::comm::NetModel;
+use crate::model::{partition_network, vgg11, PartitionConfig};
+use crate::runtime::RuntimeClient;
+use crate::train::MemoryReport;
+
+use super::group::GmpTopology;
+use super::schedule::StepSchedule;
+use super::scheme::McastScheme;
+
+/// What the planner optimizes under.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    /// Cluster size N.
+    pub n_workers: usize,
+    /// Per-worker memory budget, bytes (params+grads+opt+activations).
+    pub memory_budget: usize,
+    /// Network model of the fabric.
+    pub net: NetModel,
+    /// Model-averaging period (amortizes DP exchange).
+    pub avg_period: usize,
+    /// Measured (or estimated) per-step compute seconds for mp=1 and
+    /// the per-round FC compute seconds — from [`CostModel::calibrate`].
+    pub cost: CostModel,
+}
+
+/// Per-segment compute costs (seconds per call).
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    pub conv_fwd: f64,
+    pub conv_bwd: f64,
+    /// FC pipeline per round per member at shard width 1024/k, indexed
+    /// by k (missing entries are interpolated as 1/k of full).
+    pub fc_round: Vec<(usize, f64)>,
+}
+
+impl CostModel {
+    /// Measure the artifact costs once via PJRT (same approach as the
+    /// calibrated simulator).
+    pub fn calibrate(rt: &RuntimeClient, mp_sizes: &[usize]) -> Result<CostModel> {
+        let conv_fwd = rt.calibrated_secs("conv_fwd", 2)?;
+        let conv_bwd = rt.calibrated_secs("conv_bwd", 2)?;
+        let mut fc_round = Vec::new();
+        for &k in mp_sizes {
+            let mut total = 0.0;
+            for seg in ["fc0_fwd", "fc0_bwd", "fc1_fwd", "fc1_bwd"] {
+                total += rt.calibrated_secs(&format!("{seg}_k{k}"), 2)?;
+            }
+            total += rt.calibrated_secs("head_step", 2)?;
+            fc_round.push((k, total));
+        }
+        Ok(CostModel { conv_fwd, conv_bwd, fc_round })
+    }
+
+    fn fc_round_secs(&self, k: usize) -> f64 {
+        self.fc_round
+            .iter()
+            .find(|(kk, _)| *kk == k)
+            .map(|(_, t)| *t)
+            .unwrap_or_else(|| {
+                // crude fallback: full-width cost scaled by 1/k
+                self.fc_round.first().map(|(_, t)| t / k as f64).unwrap_or(0.0)
+            })
+    }
+}
+
+/// One feasible configuration with its predicted cost.
+#[derive(Debug, Clone)]
+pub struct PlanOption {
+    pub mp: usize,
+    pub scheme: McastScheme,
+    pub memory_bytes: usize,
+    pub step_secs: f64,
+    pub images_per_sec: f64,
+    pub comm_fraction: f64,
+    pub feasible: bool,
+}
+
+/// Enumerate and cost every (mp, scheme) combination the artifacts
+/// support; sorted best-first among feasible, then infeasible.
+pub fn plan(rt: &RuntimeClient, req: &PlanRequest) -> Result<Vec<PlanOption>> {
+    let batch = rt.manifest.batch;
+    let mut out = Vec::new();
+    for &mp in rt.manifest.mp_sizes.iter() {
+        if req.n_workers % mp != 0 {
+            continue;
+        }
+        let schemes: &[McastScheme] = if mp == 1 {
+            &[McastScheme::BoverK]
+        } else {
+            &[McastScheme::BoverK, McastScheme::B, McastScheme::BK]
+        };
+        for &scheme in schemes {
+            let net = partition_network(
+                &vgg11(),
+                vec![32, 32, 3],
+                &PartitionConfig { mp, ..Default::default() },
+            )?;
+            let topo = GmpTopology::new(req.n_workers, mp)?;
+            let sched = StepSchedule::compile_full(&net, topo, &rt.manifest, true, scheme)?;
+            let mem = MemoryReport::of_scheme(&net, batch, scheme);
+            let rounds = scheme.rounds(mp) as f64;
+            // BK rounds process k*B examples: its fc segments cost ~k x
+            // the per-round figure.
+            let fc_scale = if scheme == McastScheme::BK { mp as f64 } else { 1.0 };
+            let compute = req.cost.conv_fwd
+                + req.cost.conv_bwd
+                + rounds * fc_scale * req.cost.fc_round_secs(mp);
+            let comm = sched.mp_comm_secs(&req.net)
+                + sched.avg_comm_secs(&req.net) / req.avg_period as f64;
+            let step = compute + comm;
+            out.push(PlanOption {
+                mp,
+                scheme,
+                memory_bytes: mem.total(),
+                step_secs: step,
+                images_per_sec: (req.n_workers * batch) as f64 / step,
+                comm_fraction: comm / step,
+                feasible: mem.total() <= req.memory_budget,
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        b.feasible
+            .cmp(&a.feasible)
+            .then(b.images_per_sec.partial_cmp(&a.images_per_sec).unwrap())
+    });
+    Ok(out)
+}
+
+/// The planner's answer: best feasible option, if any.
+pub fn best(options: &[PlanOption]) -> Option<&PlanOption> {
+    options.iter().find(|o| o.feasible)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_cost() -> CostModel {
+        CostModel {
+            conv_fwd: 0.2,
+            conv_bwd: 0.6,
+            fc_round: vec![(1, 0.08), (2, 0.05), (4, 0.03), (8, 0.02)],
+        }
+    }
+
+    fn toy_manifest() -> crate::runtime::Manifest {
+        let text = "splitbrain-artifacts v1\nbatch 32\nmp_sizes 1,2,4,8\nfeature_dim 4096\nnum_classes 10\nartifact full_step file=x\nin a float32 1\nout b float32 1\nend\n";
+        crate::runtime::Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap()
+    }
+
+    /// plan() without PJRT: exercise the cost composition directly.
+    fn plan_with(req: &PlanRequest, mp_sizes: &[usize]) -> Vec<PlanOption> {
+        let manifest = toy_manifest();
+        let batch = manifest.batch;
+        let mut out = Vec::new();
+        for &mp in mp_sizes {
+            if req.n_workers % mp != 0 {
+                continue;
+            }
+            let schemes: &[McastScheme] = if mp == 1 {
+                &[McastScheme::BoverK]
+            } else {
+                &[McastScheme::BoverK, McastScheme::B, McastScheme::BK]
+            };
+            for &scheme in schemes {
+                let net = partition_network(
+                    &vgg11(),
+                    vec![32, 32, 3],
+                    &PartitionConfig { mp, ..Default::default() },
+                )
+                .unwrap();
+                let mem = MemoryReport::of_scheme(&net, batch, scheme);
+                let rounds = scheme.rounds(mp) as f64;
+                let fc_scale = if scheme == McastScheme::BK { mp as f64 } else { 1.0 };
+                let compute = req.cost.conv_fwd
+                    + req.cost.conv_bwd
+                    + rounds * fc_scale * req.cost.fc_round_secs(mp);
+                out.push(PlanOption {
+                    mp,
+                    scheme,
+                    memory_bytes: mem.total(),
+                    step_secs: compute,
+                    images_per_sec: (req.n_workers * batch) as f64 / compute,
+                    comm_fraction: 0.0,
+                    feasible: mem.total() <= req.memory_budget,
+                });
+            }
+        }
+        out.sort_by(|a, b| {
+            b.feasible
+                .cmp(&a.feasible)
+                .then(b.images_per_sec.partial_cmp(&a.images_per_sec).unwrap())
+        });
+        out
+    }
+
+    fn req(budget_mb: usize) -> PlanRequest {
+        PlanRequest {
+            n_workers: 8,
+            memory_budget: budget_mb * 1024 * 1024,
+            net: NetModel::default(),
+            avg_period: 10,
+            cost: toy_cost(),
+        }
+    }
+
+    #[test]
+    fn unlimited_budget_prefers_pure_dp() {
+        let options = plan_with(&req(10_000), &[1, 2, 4, 8]);
+        let top = best(&options).unwrap();
+        assert_eq!(top.mp, 1, "{top:?}");
+    }
+
+    #[test]
+    fn tight_budget_forces_mp() {
+        // mp=1 needs ~80 MB (params x3 + staging); a 60 MB budget
+        // should push the best feasible choice to mp >= 2.
+        let options = plan_with(&req(60), &[1, 2, 4, 8]);
+        let top = best(&options).unwrap();
+        assert!(top.mp >= 2, "{top:?}");
+        assert!(top.feasible);
+    }
+
+    #[test]
+    fn impossible_budget_has_no_feasible_option() {
+        let options = plan_with(&req(1), &[1, 2, 4, 8]);
+        assert!(best(&options).is_none());
+        assert!(!options.is_empty());
+    }
+
+    #[test]
+    fn feasible_options_sort_before_infeasible() {
+        let options = plan_with(&req(60), &[1, 2, 4, 8]);
+        let first_infeasible = options.iter().position(|o| !o.feasible);
+        if let Some(idx) = first_infeasible {
+            assert!(options[idx..].iter().all(|o| !o.feasible));
+        }
+    }
+
+    #[test]
+    fn bk_memory_exceeds_bok_at_same_mp() {
+        let options = plan_with(&req(10_000), &[4]);
+        let bok = options
+            .iter()
+            .find(|o| o.mp == 4 && o.scheme == McastScheme::BoverK)
+            .unwrap();
+        let bk = options
+            .iter()
+            .find(|o| o.mp == 4 && o.scheme == McastScheme::BK)
+            .unwrap();
+        assert!(bk.memory_bytes > bok.memory_bytes);
+    }
+}

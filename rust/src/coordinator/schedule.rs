@@ -1,0 +1,455 @@
+//! The per-step execution schedule, compiled from the transformed
+//! network + topology.
+//!
+//! Two consumers:
+//! * the numeric cluster driver validates its hard-wired execution loop
+//!   against this schedule (artifact inventory, widths, batch), and
+//! * the calibrated simulator and the analytic benches read the
+//!   per-phase communication volumes, which unit tests cross-check
+//!   against the fabric's measured byte counters.
+
+use anyhow::{bail, Result};
+
+use crate::comm::netmodel::{NetModel, PhaseVolume};
+use crate::comm::trace::CommCategory;
+use crate::model::{Layer, TransformedNet};
+use crate::runtime::Manifest;
+
+use super::group::GmpTopology;
+use super::scheme::McastScheme;
+
+/// One compute segment of a step: artifact name + how many times it
+/// runs per step on each worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeCall {
+    pub artifact: String,
+    pub calls: u64,
+}
+
+/// One communication phase per step: category + per-member volume +
+/// how many times it recurs per step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommPhase {
+    pub category: CommCategory,
+    pub per_member: PhaseVolume,
+    pub times: u64,
+    /// Participants (K for MP phases, N or D for averaging).
+    pub ranks: usize,
+}
+
+/// The compiled step: everything the simulator needs to cost one
+/// training step of one worker/group.
+#[derive(Debug, Clone)]
+pub struct StepSchedule {
+    pub topo: GmpTopology,
+    pub batch: usize,
+    /// Feature width at the modulo boundary.
+    pub boundary_width: usize,
+    /// Partition widths of the sharded FC layers (full widths / K).
+    pub shard_widths: Vec<usize>,
+    pub compute: Vec<ComputeCall>,
+    /// MP phases, charged every step.
+    pub mp_phases: Vec<CommPhase>,
+    /// Averaging phases, charged every `avg_period` steps.
+    pub avg_phases: Vec<CommPhase>,
+    /// Replicated parameter count (conv + FC2 + biases) for averaging.
+    pub replicated_params: usize,
+    /// Per-shard parameter count (FC0+FC1 shards + biases).
+    pub shard_params: usize,
+}
+
+impl StepSchedule {
+    /// Compile the schedule from a transformed net. Checks the manifest
+    /// carries every artifact the schedule needs.
+    pub fn compile(
+        net: &TransformedNet,
+        topo: GmpTopology,
+        manifest: &Manifest,
+    ) -> Result<StepSchedule> {
+        Self::compile_full(net, topo, manifest, false, McastScheme::BoverK)
+    }
+
+    /// Back-compat shim: `compile` with the segmented-mp1 switch.
+    pub fn compile_opts(
+        net: &TransformedNet,
+        topo: GmpTopology,
+        manifest: &Manifest,
+        segmented_mp1: bool,
+    ) -> Result<StepSchedule> {
+        Self::compile_full(net, topo, manifest, segmented_mp1, McastScheme::BoverK)
+    }
+
+    /// Full compile: `segmented_mp1` selects the per-segment
+    /// (Pallas-backed) pipeline for mp=1 instead of the fused
+    /// `full_step` (numerically identical, same per-op efficiency as
+    /// the MP paths — used by the Table 2 benches); `scheme` selects
+    /// the §3.1 communication scheme for the modulo layer.
+    pub fn compile_full(
+        net: &TransformedNet,
+        topo: GmpTopology,
+        manifest: &Manifest,
+        segmented_mp1: bool,
+        scheme: McastScheme,
+    ) -> Result<StepSchedule> {
+        if net.mp != topo.mp {
+            bail!("net transformed for mp={} but topology has mp={}", net.mp, topo.mp);
+        }
+        let batch = manifest.batch;
+        let k = topo.mp;
+
+        // --- derive structure from the transformed layers ---
+        let mut boundary_width = 0usize;
+        let mut shard_widths = Vec::new();
+        let mut replicated_params = 0usize;
+        let mut shard_params = 0usize;
+        let mut first_linear_din = 0usize;
+        let mut linear_douts = Vec::new();
+        for l in &net.layers {
+            match l {
+                Layer::Modulo { dim } => boundary_width = *dim,
+                Layer::Linear { shard_of: Some(_), .. } => {
+                    shard_params += l.param_count();
+                    if let Layer::Linear { dout, .. } = l {
+                        shard_widths.push(*dout);
+                    }
+                }
+                Layer::Conv { .. } | Layer::Linear { shard_of: None, .. } => {
+                    replicated_params += l.param_count();
+                }
+                _ => {}
+            }
+            if let Layer::Linear { din, dout, .. } = l {
+                if first_linear_din == 0 {
+                    first_linear_din = *din;
+                }
+                linear_douts.push(*dout);
+            }
+        }
+
+        // --- compute inventory ---
+        let mut compute = Vec::new();
+        if k == 1 && segmented_mp1 {
+            // Segmented baseline: same pipeline, full-width "shards".
+            boundary_width = first_linear_din;
+            shard_widths = linear_douts[..linear_douts.len() - 1].to_vec();
+            compute.push(ComputeCall { artifact: "conv_fwd".into(), calls: 1 });
+            compute.push(ComputeCall { artifact: "conv_bwd".into(), calls: 1 });
+            for name in ["fc0_fwd_k1", "fc0_bwd_k1", "fc1_fwd_k1", "fc1_bwd_k1"] {
+                compute.push(ComputeCall { artifact: name.into(), calls: 1 });
+            }
+            compute.push(ComputeCall { artifact: "head_step".into(), calls: 1 });
+        } else if k == 1 {
+            compute.push(ComputeCall { artifact: "full_step".into(), calls: 1 });
+        } else {
+            if shard_widths.len() != 2 {
+                bail!(
+                    "schedule supports the two-sharded-FC VGG shape; found {} sharded linears",
+                    shard_widths.len()
+                );
+            }
+            let rounds = scheme.rounds(k) as u64;
+            let suffix = scheme.artifact_suffix();
+            compute.push(ComputeCall { artifact: "conv_fwd".into(), calls: 1 });
+            compute.push(ComputeCall { artifact: "conv_bwd".into(), calls: 1 });
+            for name in ["fc0_fwd", "fc0_bwd", "fc1_fwd", "fc1_bwd"] {
+                compute.push(ComputeCall {
+                    artifact: format!("{name}_k{k}{suffix}"),
+                    calls: rounds,
+                });
+            }
+            let head = match scheme {
+                McastScheme::BK => format!("head_step_bk{k}"),
+                _ => "head_step".to_string(),
+            };
+            compute.push(ComputeCall { artifact: head, calls: rounds });
+        }
+        for c in &compute {
+            manifest.get(&c.artifact)?; // fail loudly on missing artifacts
+        }
+
+        // --- MP communication phases (per step), scheme-aware ---
+        let mut mp_phases = Vec::new();
+        if k > 1 {
+            let rounds = scheme.rounds(k) as u64;
+            let fcb = scheme.fc_batch(batch, k);
+            // Modulo exchange: per-round busiest-sender volume differs by
+            // scheme (see scheme.rs table). Labels ride along in fwd.
+            let (mod_bytes, mod_msgs) = match scheme {
+                // every member pushes its B/K slice to K-1 peers
+                McastScheme::BoverK => {
+                    let size = batch / k;
+                    (((k - 1) * size * (boundary_width + 1) * 4) as u64, 2 * (k as u64 - 1))
+                }
+                // the round's owner pushes its whole batch to K-1 peers —
+                // serialized on one sender, the scheme's flaw
+                McastScheme::B => {
+                    (((k - 1) * batch * (boundary_width + 1) * 4) as u64, 2 * (k as u64 - 1))
+                }
+                // all members push whole batches simultaneously, once
+                McastScheme::BK => {
+                    (((k - 1) * batch * (boundary_width + 1) * 4) as u64, 2 * (k as u64 - 1))
+                }
+            };
+            mp_phases.push(CommPhase {
+                category: CommCategory::ModuloFwd,
+                per_member: PhaseVolume::new(mod_msgs, mod_bytes),
+                times: rounds,
+                ranks: k,
+            });
+            // Modulo bwd mirrors fwd volume (gradients routed back),
+            // without the label bytes.
+            let bwd_bytes = match scheme {
+                McastScheme::BoverK => (((k - 1) * (batch / k) * boundary_width) * 4) as u64,
+                _ => (((k - 1) * batch * boundary_width) * 4) as u64,
+            };
+            mp_phases.push(CommPhase {
+                category: CommCategory::ModuloBwd,
+                per_member: PhaseVolume::new(k as u64 - 1, bwd_bytes),
+                times: rounds,
+                ranks: k,
+            });
+            // Shard fwd: allgather each sharded FC's output partition
+            // over the scheme's FC batch.
+            for &w in &shard_widths {
+                mp_phases.push(CommPhase {
+                    category: CommCategory::ShardFwd,
+                    per_member: PhaseVolume::new(
+                        k as u64 - 1,
+                        ((k - 1) * fcb * w * 4) as u64,
+                    ),
+                    times: rounds,
+                    ranks: k,
+                });
+            }
+            // Shard bwd: only the *first* sharded FC's input shard layer
+            // reduces partials (the one above it feeds replicated FC2 ->
+            // zero-comm slice). In transformed order: the shard between
+            // FC0 and FC1 reduces over FC1's bwd partials (width = FC0's
+            // partition), the shard before FC2 slices.
+            mp_phases.push(CommPhase {
+                category: CommCategory::ShardBwd,
+                per_member: PhaseVolume::new(
+                    k as u64 - 1,
+                    ((k - 1) * fcb * shard_widths[0] * 4) as u64,
+                ),
+                times: rounds,
+                ranks: k,
+            });
+        }
+
+        // --- averaging phases (per averaging event) ---
+        let mut avg_phases = Vec::new();
+        let n = topo.n_workers;
+        if n > 1 {
+            // Replicated params: ring allreduce across all N.
+            let bytes = (replicated_params * 4) as u64;
+            avg_phases.push(CommPhase {
+                category: CommCategory::DpAverage,
+                per_member: PhaseVolume::new(
+                    2 * (n as u64 - 1),
+                    2 * (n as u64 - 1) * (bytes / n as u64),
+                ),
+                times: 1,
+                ranks: n,
+            });
+        }
+        let d = topo.n_groups();
+        if d > 1 && k > 1 {
+            // Shard params: ring allreduce across the D same-offset peers.
+            let bytes = (shard_params * 4) as u64;
+            avg_phases.push(CommPhase {
+                category: CommCategory::ShardAverage,
+                per_member: PhaseVolume::new(
+                    2 * (d as u64 - 1),
+                    2 * (d as u64 - 1) * (bytes / d as u64),
+                ),
+                times: 1,
+                ranks: d,
+            });
+        }
+
+        Ok(StepSchedule {
+            topo,
+            batch,
+            boundary_width,
+            shard_widths,
+            compute,
+            mp_phases,
+            avg_phases,
+            replicated_params,
+            shard_params,
+        })
+    }
+
+    /// Modeled MP communication seconds per step.
+    pub fn mp_comm_secs(&self, net: &NetModel) -> f64 {
+        let t: f64 = self
+            .mp_phases
+            .iter()
+            .map(|p| p.times as f64 * net.phase_time(p.per_member))
+            .sum();
+        t.max(0.0) // normalize -0.0 from empty phase lists
+    }
+
+    /// Modeled averaging seconds per averaging event.
+    pub fn avg_comm_secs(&self, net: &NetModel) -> f64 {
+        self.avg_phases
+            .iter()
+            .map(|p| p.times as f64 * net.phase_time(p.per_member))
+            .sum()
+    }
+
+    /// Total MP bytes a single member pushes per step.
+    pub fn mp_bytes_per_member(&self) -> u64 {
+        self.mp_phases.iter().map(|p| p.times * p.per_member.bytes_out).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{partition_network, vgg11, PartitionConfig};
+    use std::path::PathBuf;
+
+    fn manifest(batch: usize, ks: &[usize]) -> Manifest {
+        // Synthesise a minimal manifest accepted by compile().
+        let mut text = format!(
+            "splitbrain-artifacts v1\nbatch {batch}\nmp_sizes {}\nfeature_dim 4096\nnum_classes 10\n",
+            ks.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(",")
+        );
+        let mut add = |name: &str| {
+            text.push_str(&format!(
+                "artifact {name} file={name}.hlo.txt\nin x float32 1\nout y float32 1\nend\n"
+            ));
+        };
+        for name in ["conv_fwd", "conv_bwd", "full_step", "full_eval", "head_step", "head_fwd"] {
+            add(name);
+        }
+        for &k in ks {
+            if k > 1 {
+                for seg in ["fc0_fwd", "fc0_bwd", "fc1_fwd", "fc1_bwd"] {
+                    add(&format!("{seg}_k{k}"));
+                }
+            }
+        }
+        Manifest::parse(&text, PathBuf::from("/tmp")).unwrap()
+    }
+
+    fn schedule(n: usize, mp: usize, batch: usize) -> StepSchedule {
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )
+        .unwrap();
+        let topo = GmpTopology::new(n, mp).unwrap();
+        StepSchedule::compile(&net, topo, &manifest(batch, &[1, 2, 4, 8])).unwrap()
+    }
+
+    #[test]
+    fn pure_dp_uses_full_step() {
+        let s = schedule(4, 1, 32);
+        assert_eq!(s.compute.len(), 1);
+        assert_eq!(s.compute[0].artifact, "full_step");
+        assert!(s.mp_phases.is_empty());
+        assert_eq!(s.avg_phases.len(), 1);
+    }
+
+    #[test]
+    fn mp_schedule_runs_fc_segments_k_times() {
+        let s = schedule(8, 4, 32);
+        let fc0 = s.compute.iter().find(|c| c.artifact == "fc0_fwd_k4").unwrap();
+        assert_eq!(fc0.calls, 4);
+        let head = s.compute.iter().find(|c| c.artifact == "head_step").unwrap();
+        assert_eq!(head.calls, 4);
+    }
+
+    #[test]
+    fn modulo_volume_matches_plan_formula() {
+        use crate::coordinator::modulo::ModuloPlan;
+        let s = schedule(2, 2, 32);
+        let plan = ModuloPlan::new(vec![0, 1], 32, 4096);
+        let phase = s
+            .mp_phases
+            .iter()
+            .find(|p| p.category == CommCategory::ModuloFwd)
+            .unwrap();
+        // Schedule adds label bytes on top of the activation bytes.
+        let lab = (1 * (32 / 2) * 4) as u64;
+        assert_eq!(phase.per_member.bytes_out, plan.fwd_bytes_per_member() + lab);
+        assert_eq!(phase.times, 2);
+    }
+
+    #[test]
+    fn shard_volumes_match_plan_formula() {
+        use crate::coordinator::shard::{ShardBwdMode, ShardPlan};
+        let s = schedule(4, 4, 32);
+        let plan = ShardPlan::new(vec![0, 1, 2, 3], 256, ShardBwdMode::ReducePartials);
+        let fwd: Vec<_> = s
+            .mp_phases
+            .iter()
+            .filter(|p| p.category == CommCategory::ShardFwd)
+            .collect();
+        assert_eq!(fwd.len(), 2);
+        assert_eq!(fwd[0].per_member.bytes_out, plan.fwd_bytes_per_member(32));
+        let bwd = s
+            .mp_phases
+            .iter()
+            .find(|p| p.category == CommCategory::ShardBwd)
+            .unwrap();
+        assert_eq!(bwd.per_member.bytes_out, plan.bwd_bytes_per_member(32));
+    }
+
+    #[test]
+    fn averaging_splits_replicated_vs_shard() {
+        let s = schedule(8, 2, 32);
+        assert_eq!(s.avg_phases.len(), 2);
+        // Replicated = conv (1,735,488 incl. biases) + FC2 (10,250).
+        assert_eq!(s.replicated_params, 1_735_488 + 10_250);
+        // Shards: (4096*512+512) + (1024*512+512).
+        assert_eq!(s.shard_params, 4096 * 512 + 512 + 1024 * 512 + 512);
+    }
+
+    #[test]
+    fn single_group_has_no_shard_average() {
+        let s = schedule(4, 4, 32);
+        assert!(s
+            .avg_phases
+            .iter()
+            .all(|p| p.category != CommCategory::ShardAverage));
+    }
+
+    #[test]
+    fn mp_comm_grows_with_k() {
+        let net = NetModel::default();
+        let t2 = schedule(8, 2, 32).mp_comm_secs(&net);
+        let t4 = schedule(8, 4, 32).mp_comm_secs(&net);
+        let t8 = schedule(8, 8, 32).mp_comm_secs(&net);
+        assert!(t2 < t4 && t4 < t8, "{t2} {t4} {t8}");
+    }
+
+    #[test]
+    fn dp_averaging_shrinks_with_mp() {
+        // Fig. 7b: "the communication for DP is reduced for fewer
+        // parameters to exchange" — replicated volume is constant, but
+        // the shard-average volume (per peer set) shrinks with K.
+        let net = NetModel::default();
+        let s2 = schedule(8, 2, 32);
+        let s4 = schedule(8, 4, 32);
+        assert!(s4.shard_params < s2.shard_params);
+        assert!(s4.avg_comm_secs(&net) < s2.avg_comm_secs(&net));
+    }
+
+    #[test]
+    fn missing_artifact_is_loud() {
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp: 2, ..Default::default() },
+        )
+        .unwrap();
+        let topo = GmpTopology::new(2, 2).unwrap();
+        let m = manifest(32, &[1]); // no k2 artifacts
+        assert!(StepSchedule::compile(&net, topo, &m).is_err());
+    }
+}

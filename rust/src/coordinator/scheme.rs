@@ -1,0 +1,319 @@
+//! The three MP communication schemes of Krizhevsky'14 as discussed in
+//! §3.1 — the paper builds SplitBrain on scheme **B/K** and argues the
+//! other two don't scale; we implement all three so the argument is
+//! reproducible as a benchmark rather than taken on faith.
+//!
+//! With batch B and group size K, per modulo "round" the FC stack sees:
+//!
+//! | scheme | FC batch | rounds | per-step comm time | staging memory |
+//! |---|---|---|---|---|
+//! | `BK`     | B·K | 1 | (K-1)·B·w/β, 1 phase   | K·B·w floats (the objection) |
+//! | `B`      | B   | K | K·(K-1)·B·w/β (the round's owner is the single sender — serialized link) | B·w |
+//! | `BoverK` | B   | K | (K-1)·B·w/β (balanced)  | B·w |
+//!
+//! Total *bytes* are identical; B/K wins on wire time (balanced
+//! senders), BK matches its time but pays K× memory, and B pays K× wire
+//! time. All three produce *identical gradients* (asserted in the
+//! integration tests), so the choice is purely a systems trade.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::comm::fabric::{Fabric, Tag};
+use crate::runtime::HostTensor;
+
+use super::modulo::ModuloPlan;
+
+/// Which §3.1 scheme the modulo layer runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum McastScheme {
+    /// Scheme 3 — every member broadcasts B/K examples per round
+    /// (SplitBrain's default).
+    #[default]
+    BoverK,
+    /// Scheme 2 — members take turns broadcasting their whole batch.
+    B,
+    /// Scheme 1 — all batches aggregated into one B·K pass.
+    BK,
+}
+
+impl McastScheme {
+    pub fn parse(s: &str) -> Result<McastScheme> {
+        match s.to_ascii_lowercase().as_str() {
+            "b/k" | "boverk" | "bok" => Ok(McastScheme::BoverK),
+            "b" => Ok(McastScheme::B),
+            "bk" => Ok(McastScheme::BK),
+            other => bail!("unknown scheme {other:?} (expected bk, b, or b/k)"),
+        }
+    }
+
+    /// Modulo rounds per training step.
+    pub fn rounds(self, k: usize) -> usize {
+        match self {
+            McastScheme::BK => 1,
+            _ => k,
+        }
+    }
+
+    /// FC-stack batch size per round.
+    pub fn fc_batch(self, b: usize, k: usize) -> usize {
+        match self {
+            McastScheme::BK => b * k,
+            _ => b,
+        }
+    }
+
+    /// Artifact-name suffix for the FC segments of this scheme.
+    pub fn artifact_suffix(self) -> &'static str {
+        match self {
+            McastScheme::BK => "bk",
+            _ => "",
+        }
+    }
+
+    /// Modulo staging floats per worker (the Fig. 7c memory input).
+    pub fn staging_floats(self, b: usize, k: usize, width: usize) -> usize {
+        match self {
+            // local acts + g_act + one assembled B*K batch
+            McastScheme::BK => 2 * b * width + b * k * width,
+            _ => 3 * b * width,
+        }
+    }
+}
+
+impl fmt::Display for McastScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            McastScheme::BoverK => "B/K",
+            McastScheme::B => "B",
+            McastScheme::BK => "BK",
+        })
+    }
+}
+
+/// Scheme B fprop, round k: member k broadcasts its whole batch; the
+/// assembled batch at every member IS member k's batch.
+pub fn assemble_scheme_b(
+    plan: &ModuloPlan,
+    fabric: &mut Fabric,
+    acts: &[HostTensor],
+    round: usize,
+    tag: Tag,
+) -> Result<Vec<HostTensor>> {
+    let kk = plan.k();
+    assert!(round < kk);
+    let owner = plan.group[round];
+    for &dst in &plan.group {
+        if dst != owner {
+            fabric.post(owner, dst, tag, acts[round].as_f32().to_vec());
+        }
+    }
+    let mut outs = Vec::with_capacity(kk);
+    for (i, &dst) in plan.group.iter().enumerate() {
+        if i == round {
+            outs.push(acts[round].clone());
+        } else {
+            let data = fabric.take(dst, owner, tag)?;
+            outs.push(HostTensor::f32(vec![plan.batch, plan.width], data));
+        }
+    }
+    Ok(outs)
+}
+
+/// Scheme B bprop, round k: every non-owner sends its full partial
+/// gradient back to the round's owner, which reduces the K copies into
+/// its whole activation-gradient buffer.
+pub fn scatter_reduce_scheme_b(
+    plan: &ModuloPlan,
+    fabric: &mut Fabric,
+    gbatches: &[HostTensor],
+    g_acts: &mut [HostTensor],
+    round: usize,
+    tag: Tag,
+) -> Result<()> {
+    let owner = plan.group[round];
+    for (i, &src) in plan.group.iter().enumerate() {
+        if i != round {
+            fabric.post(src, owner, tag, gbatches[i].as_f32().to_vec());
+        }
+    }
+    let mut acc = gbatches[round].clone();
+    for &src in &plan.group {
+        if src != owner {
+            let data = fabric.take(owner, src, tag)?;
+            acc.add_assign(&HostTensor::f32(vec![plan.batch, plan.width], data));
+        }
+    }
+    g_acts[round] = acc;
+    Ok(())
+}
+
+/// Scheme BK fprop (single round): every member broadcasts its whole
+/// batch; the assembled batch is the member-ordered concatenation,
+/// `[B*K, width]`.
+pub fn assemble_bk(
+    plan: &ModuloPlan,
+    fabric: &mut Fabric,
+    acts: &[HostTensor],
+    tag: Tag,
+) -> Result<Vec<HostTensor>> {
+    let kk = plan.k();
+    let b = plan.batch;
+    for (j, &src) in plan.group.iter().enumerate() {
+        for &dst in &plan.group {
+            if dst != src {
+                fabric.post(src, dst, tag, acts[j].as_f32().to_vec());
+            }
+        }
+    }
+    let mut outs = Vec::with_capacity(kk);
+    for (i, &dst) in plan.group.iter().enumerate() {
+        let mut big = HostTensor::zeros(vec![b * kk, plan.width]);
+        for (j, &src) in plan.group.iter().enumerate() {
+            if j == i {
+                big.set_rows(j * b, &acts[i]);
+            } else {
+                let data = fabric.take(dst, src, tag)?;
+                big.set_rows(j * b, &HostTensor::f32(vec![b, plan.width], data));
+            }
+        }
+        outs.push(big);
+    }
+    Ok(outs)
+}
+
+/// Scheme BK bprop: the `[B*K, width]` partial gradients are routed
+/// back by B-row owner block and reduced; each member ends with the
+/// summed gradient for its own batch in `g_acts[i]`.
+pub fn scatter_reduce_bk(
+    plan: &ModuloPlan,
+    fabric: &mut Fabric,
+    gbatches: &[HostTensor],
+    g_acts: &mut [HostTensor],
+    tag: Tag,
+) -> Result<()> {
+    let b = plan.batch;
+    for (j, &src) in plan.group.iter().enumerate() {
+        for (i, &dst) in plan.group.iter().enumerate() {
+            if i != j {
+                let block = gbatches[j].slice_rows(i * b, (i + 1) * b);
+                fabric.post(src, dst, tag, block.as_f32().to_vec());
+            }
+        }
+    }
+    for (i, &dst) in plan.group.iter().enumerate() {
+        let mut acc = gbatches[i].slice_rows(i * b, (i + 1) * b);
+        for &src in &plan.group {
+            if src != dst {
+                let data = fabric.take(dst, src, tag)?;
+                acc.add_assign(&HostTensor::f32(vec![b, plan.width], data));
+            }
+        }
+        g_acts[i] = acc;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acts(k: usize, b: usize, w: usize) -> Vec<HostTensor> {
+        (0..k)
+            .map(|j| {
+                HostTensor::f32(
+                    vec![b, w],
+                    (0..b * w).map(|i| (100 * j + i) as f32).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scheme_b_round_k_is_owner_batch() {
+        let plan = ModuloPlan::new(vec![0, 1, 2], 3, 2);
+        let a = acts(3, 3, 2);
+        let mut f = Fabric::new(3);
+        let out = assemble_scheme_b(&plan, &mut f, &a, 1, Tag::new(1, 1, 0)).unwrap();
+        for o in &out {
+            assert_eq!(o.as_f32(), a[1].as_f32());
+        }
+        // Only the owner sent: 2 peers x (3x2 floats = 24 bytes).
+        assert_eq!(f.bytes_from(1), 2 * 3 * 2 * 4);
+        assert_eq!(f.bytes_from(0), 0);
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn scheme_b_bwd_reduces_at_owner_only() {
+        let plan = ModuloPlan::new(vec![0, 1], 2, 1);
+        let gb = vec![
+            HostTensor::f32(vec![2, 1], vec![1.0, 2.0]),
+            HostTensor::f32(vec![2, 1], vec![10.0, 20.0]),
+        ];
+        let mut g = vec![HostTensor::zeros(vec![2, 1]), HostTensor::zeros(vec![2, 1])];
+        let mut f = Fabric::new(2);
+        scatter_reduce_scheme_b(&plan, &mut f, &gb, &mut g, 0, Tag::new(2, 0, 0)).unwrap();
+        assert_eq!(g[0].as_f32(), &[11.0, 22.0]);
+        assert_eq!(g[1].as_f32(), &[0.0, 0.0]); // untouched this round
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn bk_assembles_member_ordered_concat() {
+        let plan = ModuloPlan::new(vec![0, 1], 2, 2);
+        let a = acts(2, 2, 2);
+        let mut f = Fabric::new(2);
+        let out = assemble_bk(&plan, &mut f, &a, Tag::new(3, 0, 0)).unwrap();
+        for o in &out {
+            assert_eq!(o.shape, vec![4, 2]);
+            assert_eq!(&o.as_f32()[..4], a[0].as_f32());
+            assert_eq!(&o.as_f32()[4..], a[1].as_f32());
+        }
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn bk_bwd_routes_blocks_to_owners() {
+        let plan = ModuloPlan::new(vec![0, 1], 2, 1);
+        // [B*K, 1] partial gradients at both members; rows 0..2 belong
+        // to member 0, rows 2..4 to member 1.
+        let gb = vec![
+            HostTensor::f32(vec![4, 1], vec![1.0, 2.0, 3.0, 4.0]),
+            HostTensor::f32(vec![4, 1], vec![10.0, 20.0, 30.0, 40.0]),
+        ];
+        let mut g = vec![HostTensor::zeros(vec![2, 1]), HostTensor::zeros(vec![2, 1])];
+        let mut f = Fabric::new(2);
+        scatter_reduce_bk(&plan, &mut f, &gb, &mut g, Tag::new(4, 0, 0)).unwrap();
+        assert_eq!(g[0].as_f32(), &[11.0, 22.0]);
+        assert_eq!(g[1].as_f32(), &[33.0, 44.0]);
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn scheme_metadata() {
+        assert_eq!(McastScheme::BK.rounds(4), 1);
+        assert_eq!(McastScheme::B.rounds(4), 4);
+        assert_eq!(McastScheme::BoverK.rounds(4), 4);
+        assert_eq!(McastScheme::BK.fc_batch(32, 4), 128);
+        assert_eq!(McastScheme::B.fc_batch(32, 4), 32);
+        assert_eq!(McastScheme::BK.artifact_suffix(), "bk");
+        assert_eq!(McastScheme::BoverK.artifact_suffix(), "");
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(McastScheme::parse("b/k").unwrap(), McastScheme::BoverK);
+        assert_eq!(McastScheme::parse("B").unwrap(), McastScheme::B);
+        assert_eq!(McastScheme::parse("bk").unwrap(), McastScheme::BK);
+        assert!(McastScheme::parse("zzz").is_err());
+    }
+
+    #[test]
+    fn bk_staging_is_k_fold() {
+        let bok = McastScheme::BoverK.staging_floats(32, 8, 4096);
+        let bk = McastScheme::BK.staging_floats(32, 8, 4096);
+        assert!(bk > 3 * bok, "{bk} vs {bok}");
+    }
+}

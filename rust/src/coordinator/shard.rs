@@ -1,0 +1,198 @@
+//! The shard layer L_S (§3.1, Fig. 5): restores full-width activations
+//! from 1/K partitions in fprop and routes full-width gradients back to
+//! partition owners in bprop.
+//!
+//! Two bprop modes exist because of where the shard sits:
+//!
+//! * [`ShardBwdMode::ReducePartials`] — the layers *above* are
+//!   partitioned, so each member's full-width input gradient is a
+//!   partial sum (e.g. `gx = gpre @ W_k^T` covers the full input but
+//!   only this shard's contribution). Members must reduce-scatter
+//!   (Fig. 5b: "gather the gradients corresponding to the local
+//!   partition ... while scattering the other partitions").
+//!
+//! * [`ShardBwdMode::SliceReplicated`] — everything above the shard is
+//!   *replicated* across the group (the CCR-rejected FC2 + softmax head
+//!   of the VGG variant), so every member already holds the identical,
+//!   complete gradient; the local partition is a zero-communication
+//!   slice. Summing here would double-count by K.
+
+use anyhow::Result;
+
+use crate::comm::collective::{allgather_cols, reduce_scatter_cols};
+use crate::comm::fabric::{Fabric, Tag};
+use crate::runtime::HostTensor;
+
+/// How bprop recovers the local-partition gradient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardBwdMode {
+    ReducePartials,
+    SliceReplicated,
+}
+
+/// Compile-time facts of one shard layer for one MP group.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Global ranks of the group, offset order.
+    pub group: Vec<usize>,
+    /// Partition width per member (equal shards).
+    pub part_width: usize,
+    /// Gradient-recovery mode for bprop.
+    pub bwd_mode: ShardBwdMode,
+}
+
+impl ShardPlan {
+    pub fn new(group: Vec<usize>, part_width: usize, bwd_mode: ShardBwdMode) -> ShardPlan {
+        assert!(!group.is_empty());
+        ShardPlan { group, part_width, bwd_mode }
+    }
+
+    pub fn k(&self) -> usize {
+        self.group.len()
+    }
+
+    pub fn full_width(&self) -> usize {
+        self.part_width * self.k()
+    }
+
+    /// Wire bytes each member sends in fprop for a batch of `b` rows.
+    pub fn fwd_bytes_per_member(&self, b: usize) -> u64 {
+        ((self.k() - 1) * b * self.part_width * 4) as u64
+    }
+
+    /// Wire bytes each member sends in bprop.
+    pub fn bwd_bytes_per_member(&self, b: usize) -> u64 {
+        match self.bwd_mode {
+            ShardBwdMode::ReducePartials => self.fwd_bytes_per_member(b),
+            ShardBwdMode::SliceReplicated => 0,
+        }
+    }
+
+    /// fprop: allgather `[B, part]` partitions into `[B, full]` per
+    /// member (group order = partition order).
+    pub fn gather_full(
+        &self,
+        fabric: &mut Fabric,
+        parts: &[HostTensor],
+        tag: Tag,
+    ) -> Result<Vec<HostTensor>> {
+        debug_assert!(parts.iter().all(|p| p.shape[1] == self.part_width));
+        if self.k() == 1 {
+            return Ok(parts.to_vec());
+        }
+        allgather_cols(fabric, &self.group, parts, tag)
+    }
+
+    /// bprop: recover each member's `[B, part]` gradient from the
+    /// members' `[B, full]` input gradients.
+    pub fn backward(
+        &self,
+        fabric: &mut Fabric,
+        full_grads: &[HostTensor],
+        tag: Tag,
+    ) -> Result<Vec<HostTensor>> {
+        let k = self.k();
+        if k == 1 {
+            return Ok(full_grads.to_vec());
+        }
+        match self.bwd_mode {
+            ShardBwdMode::ReducePartials => {
+                let widths = vec![self.part_width; k];
+                reduce_scatter_cols(fabric, &self.group, full_grads, &widths, tag)
+            }
+            ShardBwdMode::SliceReplicated => Ok(full_grads
+                .iter()
+                .enumerate()
+                .map(|(i, g)| {
+                    g.slice_cols(i * self.part_width, (i + 1) * self.part_width)
+                })
+                .collect()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(rows: usize, w: usize, base: f32) -> HostTensor {
+        HostTensor::f32(vec![rows, w], (0..rows * w).map(|i| base + i as f32).collect())
+    }
+
+    #[test]
+    fn fprop_restores_full_width() {
+        let plan = ShardPlan::new(vec![0, 1], 2, ShardBwdMode::ReducePartials);
+        let mut f = Fabric::new(2);
+        let parts = [part(1, 2, 0.0), part(1, 2, 10.0)];
+        let full = plan.gather_full(&mut f, &parts, Tag::new(3, 0, 0)).unwrap();
+        for fl in &full {
+            assert_eq!(fl.as_f32(), &[0.0, 1.0, 10.0, 11.0]);
+        }
+        assert_eq!(f.bytes_from(0), plan.fwd_bytes_per_member(1));
+    }
+
+    #[test]
+    fn bwd_reduce_partials_sums() {
+        let plan = ShardPlan::new(vec![0, 1], 1, ShardBwdMode::ReducePartials);
+        let mut f = Fabric::new(2);
+        let fulls = [
+            HostTensor::f32(vec![1, 2], vec![1.0, 2.0]),
+            HostTensor::f32(vec![1, 2], vec![10.0, 20.0]),
+        ];
+        let outs = plan.backward(&mut f, &fulls, Tag::new(4, 0, 0)).unwrap();
+        assert_eq!(outs[0].as_f32(), &[11.0]); // col 0 summed
+        assert_eq!(outs[1].as_f32(), &[22.0]); // col 1 summed
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn bwd_slice_replicated_no_traffic_no_double_count() {
+        let plan = ShardPlan::new(vec![0, 1], 1, ShardBwdMode::SliceReplicated);
+        let mut f = Fabric::new(2);
+        // Replicated head: both members hold the identical gradient.
+        let g = HostTensor::f32(vec![1, 2], vec![5.0, 7.0]);
+        let outs = plan.backward(&mut f, &[g.clone(), g], Tag::new(4, 0, 0)).unwrap();
+        assert_eq!(outs[0].as_f32(), &[5.0]);
+        assert_eq!(outs[1].as_f32(), &[7.0]);
+        assert_eq!(f.total_bytes(), 0);
+        assert_eq!(plan.bwd_bytes_per_member(1), 0);
+    }
+
+    #[test]
+    fn k1_is_identity() {
+        let plan = ShardPlan::new(vec![0], 4, ShardBwdMode::ReducePartials);
+        let mut f = Fabric::new(1);
+        let p = [part(2, 4, 0.0)];
+        let full = plan.gather_full(&mut f, &p, Tag::new(3, 0, 0)).unwrap();
+        assert_eq!(full[0].as_f32(), p[0].as_f32());
+        let back = plan.backward(&mut f, &full, Tag::new(4, 0, 0)).unwrap();
+        assert_eq!(back[0].as_f32(), p[0].as_f32());
+        assert_eq!(f.total_bytes(), 0);
+    }
+
+    #[test]
+    fn fwd_then_bwd_roundtrip_with_true_gradient() {
+        // If the consumer above is y = sum(full), its input gradient is
+        // all-ones *complete* at every member only if replicated; in the
+        // partitioned case each member contributes 1/k of it. Check the
+        // partial path reconstructs the all-ones gradient.
+        let plan = ShardPlan::new(vec![0, 1, 2], 2, ShardBwdMode::ReducePartials);
+        let mut f = Fabric::new(3);
+        let partial = HostTensor::f32(vec![1, 6], vec![1.0 / 3.0; 6]);
+        let outs = plan
+            .backward(&mut f, &[partial.clone(), partial.clone(), partial], Tag::new(4, 0, 0))
+            .unwrap();
+        for o in &outs {
+            for v in o.as_f32() {
+                assert!((v - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn width_bookkeeping() {
+        let plan = ShardPlan::new(vec![0, 1, 2, 3], 256, ShardBwdMode::ReducePartials);
+        assert_eq!(plan.full_width(), 1024);
+        assert_eq!(plan.fwd_bytes_per_member(32), (3 * 32 * 256 * 4) as u64);
+    }
+}

@@ -1,0 +1,292 @@
+//! Per-worker state: the parameter replica/shards, optimizer, gradient
+//! accumulators and the compute clock.
+//!
+//! Initialization follows §2's data-parallel contract: every worker
+//! starts from the *same* global model — conv parameters (and the
+//! replicated FC2) are identical replicas, and each worker's FC0/FC1
+//! shard is the corresponding column slice of one shared He-initialized
+//! full matrix.
+
+use anyhow::Result;
+
+use crate::model::vgg;
+use crate::runtime::HostTensor;
+use crate::train::Sgd;
+use crate::util::Rng;
+
+use super::group::GmpTopology;
+
+/// Shapes of the full (unsharded) FC stack.
+pub const FC_DIMS: [(usize, usize); 3] = [(4096, 1024), (1024, 1024), (1024, 10)];
+
+/// Build the full shared model (conv 14 tensors + fc 6 tensors) from a
+/// seed — identical on every call with the same seed.
+pub fn init_full_params(seed: u64) -> (Vec<HostTensor>, Vec<HostTensor>) {
+    let mut rng = Rng::new(seed);
+    let mut conv = Vec::new();
+    for (name, io, _) in vgg::table1() {
+        if !name.starts_with("Conv") {
+            continue;
+        }
+        let (cin, cout) = parse_io(&io);
+        let std = (2.0 / (9 * cin) as f32).sqrt();
+        conv.push(HostTensor::f32(
+            vec![3, 3, cin, cout],
+            rng.normal_vec(9 * cin * cout, std),
+        ));
+        conv.push(HostTensor::zeros(vec![cout]));
+    }
+    let mut fc = Vec::new();
+    for (din, dout) in FC_DIMS {
+        let std = (2.0 / din as f32).sqrt();
+        fc.push(HostTensor::f32(vec![din, dout], rng.normal_vec(din * dout, std)));
+        fc.push(HostTensor::zeros(vec![dout]));
+    }
+    (conv, fc)
+}
+
+fn parse_io(io: &str) -> (usize, usize) {
+    let (a, b) = io.split_once('x').expect("io format");
+    (a.parse().unwrap(), b.parse().unwrap())
+}
+
+/// Column-slice the full FC params into worker `offset`'s shard of `k`
+/// (FC2 replicated — below the CCR threshold).
+pub fn shard_fc(full: &[HostTensor], k: usize, offset: usize) -> Vec<HostTensor> {
+    assert_eq!(full.len(), 6);
+    let mut out = Vec::with_capacity(6);
+    for fc_idx in 0..2 {
+        let (w, b) = (&full[2 * fc_idx], &full[2 * fc_idx + 1]);
+        let dout = w.shape[1];
+        assert_eq!(dout % k, 0);
+        let s = dout / k;
+        out.push(w.slice_cols(offset * s, (offset + 1) * s));
+        let bias = HostTensor::f32(
+            vec![s],
+            b.as_f32()[offset * s..(offset + 1) * s].to_vec(),
+        );
+        out.push(bias);
+    }
+    out.push(full[4].clone());
+    out.push(full[5].clone());
+    out
+}
+
+/// One simulated worker.
+pub struct Worker {
+    pub rank: usize,
+    /// 14 conv tensors (w,b x7), full replica.
+    pub conv_params: Vec<HostTensor>,
+    /// 6 FC tensors: FC0/FC1 shards + replicated FC2.
+    pub fc_params: Vec<HostTensor>,
+    pub conv_opt: Sgd,
+    pub fc_opt: Sgd,
+    /// Accumulated FC gradients over the K modulo iterations.
+    pub fc_grad_acc: Vec<HostTensor>,
+    /// Activation-gradient accumulator [B, boundary].
+    pub g_act: HostTensor,
+    /// Measured compute seconds this step (PJRT + host math).
+    pub compute_secs: f64,
+    /// Loss sum over modulo iterations this step.
+    pub loss_acc: f64,
+}
+
+impl Worker {
+    pub fn new(
+        rank: usize,
+        topo: &GmpTopology,
+        full_conv: &[HostTensor],
+        full_fc: &[HostTensor],
+        batch: usize,
+        boundary: usize,
+        lr: f32,
+        momentum: f32,
+        clip_norm: f32,
+    ) -> Result<Worker> {
+        let fc_params = shard_fc(full_fc, topo.mp, topo.offset(rank));
+        let fc_grad_acc = fc_params
+            .iter()
+            .map(|p| HostTensor::zeros(p.shape.clone()))
+            .collect();
+        Ok(Worker {
+            rank,
+            conv_params: full_conv.to_vec(),
+            fc_params,
+            conv_opt: Sgd::new(lr, momentum, 0.0).with_clip(clip_norm),
+            fc_opt: Sgd::new(lr, momentum, 0.0).with_clip(clip_norm),
+            fc_grad_acc,
+            g_act: HostTensor::zeros(vec![batch, boundary]),
+            compute_secs: 0.0,
+            loss_acc: 0.0,
+        })
+    }
+
+    /// Zero the per-step accumulators.
+    pub fn begin_step(&mut self) {
+        for g in &mut self.fc_grad_acc {
+            g.as_f32_mut().fill(0.0);
+        }
+        self.g_act.as_f32_mut().fill(0.0);
+        self.loss_acc = 0.0;
+    }
+
+    /// Add FC gradients from one modulo iteration.
+    pub fn accumulate_fc_grads(&mut self, grads: &[(usize, HostTensor)]) {
+        for (idx, g) in grads {
+            self.fc_grad_acc[*idx].add_assign(g);
+        }
+    }
+
+    /// Apply the 1/K compensation and run the FC optimizer step.
+    pub fn update_fc(&mut self, k: usize) {
+        if k > 1 {
+            let inv = 1.0 / k as f32;
+            for g in &mut self.fc_grad_acc {
+                g.scale(inv);
+            }
+        }
+        let grads = std::mem::take(&mut self.fc_grad_acc);
+        self.fc_opt.step(&mut self.fc_params, &grads);
+        self.fc_grad_acc = grads;
+    }
+
+    /// Run the conv optimizer step.
+    pub fn update_conv(&mut self, grads: &[HostTensor]) {
+        self.conv_opt.step(&mut self.conv_params, grads);
+    }
+
+    /// Flatten all parameters into one buffer set for averaging:
+    /// (replicated = conv + fc2, shards = fc0/fc1 shard tensors).
+    pub fn replicated_flat(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for t in &self.conv_params {
+            out.extend_from_slice(t.as_f32());
+        }
+        out.extend_from_slice(self.fc_params[4].as_f32());
+        out.extend_from_slice(self.fc_params[5].as_f32());
+        out
+    }
+
+    pub fn set_replicated_flat(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for t in &mut self.conv_params {
+            let n = t.numel();
+            t.as_f32_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        for idx in [4, 5] {
+            let n = self.fc_params[idx].numel();
+            self.fc_params[idx]
+                .as_f32_mut()
+                .copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        assert_eq!(off, flat.len());
+    }
+
+    pub fn shards_flat(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for idx in 0..4 {
+            out.extend_from_slice(self.fc_params[idx].as_f32());
+        }
+        out
+    }
+
+    pub fn set_shards_flat(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for idx in 0..4 {
+            let n = self.fc_params[idx].numel();
+            self.fc_params[idx]
+                .as_f32_mut()
+                .copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        assert_eq!(off, flat.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic() {
+        let (c1, f1) = init_full_params(7);
+        let (c2, f2) = init_full_params(7);
+        for (a, b) in c1.iter().zip(c2.iter()).chain(f1.iter().zip(f2.iter())) {
+            assert_eq!(a.as_f32(), b.as_f32());
+        }
+    }
+
+    #[test]
+    fn init_shapes_match_table1() {
+        let (conv, fc) = init_full_params(0);
+        assert_eq!(conv.len(), 14);
+        assert_eq!(conv[0].shape, vec![3, 3, 3, 64]);
+        assert_eq!(conv[12].shape, vec![3, 3, 256, 256]);
+        assert_eq!(fc[0].shape, vec![4096, 1024]);
+        assert_eq!(fc[4].shape, vec![1024, 10]);
+    }
+
+    #[test]
+    fn shards_tile_the_full_matrix() {
+        let (_, fc) = init_full_params(3);
+        let k = 4;
+        // Reassemble column shards and compare to the original.
+        let mut w0 = HostTensor::zeros(vec![4096, 1024]);
+        for off in 0..k {
+            let sh = shard_fc(&fc, k, off);
+            w0.set_cols(off * 256, &sh[0]);
+        }
+        assert_eq!(w0.as_f32(), fc[0].as_f32());
+    }
+
+    #[test]
+    fn fc2_is_replicated_identically() {
+        let (_, fc) = init_full_params(3);
+        let a = shard_fc(&fc, 2, 0);
+        let b = shard_fc(&fc, 2, 1);
+        assert_eq!(a[4].as_f32(), b[4].as_f32());
+        assert_eq!(a[5].as_f32(), b[5].as_f32());
+        assert_ne!(a[0].as_f32(), b[0].as_f32());
+    }
+
+    #[test]
+    fn replicated_flat_roundtrip() {
+        let topo = GmpTopology::new(2, 2).unwrap();
+        let (conv, fc) = init_full_params(1);
+        let mut w = Worker::new(0, &topo, &conv, &fc, 8, 4096, 0.01, 0.9, 0.0).unwrap();
+        let flat = w.replicated_flat();
+        let mut flat2 = flat.clone();
+        for v in &mut flat2 {
+            *v *= 2.0;
+        }
+        w.set_replicated_flat(&flat2);
+        assert_eq!(w.replicated_flat(), flat2);
+        // Count: conv params incl biases + fc2.
+        assert_eq!(flat.len(), 1_735_488 + 10_250);
+    }
+
+    #[test]
+    fn shards_flat_roundtrip() {
+        let topo = GmpTopology::new(4, 2).unwrap();
+        let (conv, fc) = init_full_params(1);
+        let mut w = Worker::new(3, &topo, &conv, &fc, 8, 4096, 0.01, 0.9, 0.0).unwrap();
+        let flat = w.shards_flat();
+        assert_eq!(flat.len(), 4096 * 512 + 512 + 1024 * 512 + 512);
+        w.set_shards_flat(&flat);
+        assert_eq!(w.shards_flat(), flat);
+    }
+
+    #[test]
+    fn begin_step_zeroes_accumulators() {
+        let topo = GmpTopology::new(2, 2).unwrap();
+        let (conv, fc) = init_full_params(1);
+        let mut w = Worker::new(0, &topo, &conv, &fc, 4, 16, 0.01, 0.0, 0.0).unwrap();
+        w.g_act.as_f32_mut()[0] = 5.0;
+        w.loss_acc = 3.0;
+        w.begin_step();
+        assert_eq!(w.g_act.as_f32()[0], 0.0);
+        assert_eq!(w.loss_acc, 0.0);
+    }
+}

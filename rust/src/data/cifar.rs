@@ -1,0 +1,210 @@
+//! CIFAR-10 binary-format loader (the paper's dataset, §5).
+//!
+//! Reads the canonical `cifar-10-batches-bin` layout: five training
+//! files of 10,000 records, each record `1 + 3072` bytes
+//! (label, then 1024 R + 1024 G + 1024 B bytes in row-major order).
+//! Also understands a `cifar-10-binary.tar.gz` archive via a minimal
+//! built-in tar + gzip (flate2) reader, so no external tooling is
+//! needed on the offline image.
+//!
+//! Images are normalized to zero-mean unit-ish range ((x/255 - 0.5) * 2)
+//! and transposed CHW -> HWC to match the model's NHWC layout.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::Dataset;
+
+const RECORD: usize = 1 + 3072;
+
+/// In-memory CIFAR-10 (train split).
+pub struct Cifar10 {
+    images: Vec<f32>, // n * 3072, HWC
+    labels: Vec<i32>,
+}
+
+impl Cifar10 {
+    /// Load from a directory of `data_batch_*.bin` files.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Cifar10> {
+        let dir = dir.as_ref();
+        let mut raw = Vec::new();
+        let mut found = 0;
+        for i in 1..=5 {
+            let path = dir.join(format!("data_batch_{i}.bin"));
+            if path.exists() {
+                raw.extend(std::fs::read(&path).with_context(|| format!("{path:?}"))?);
+                found += 1;
+            }
+        }
+        if found == 0 {
+            bail!("no data_batch_*.bin under {dir:?}");
+        }
+        Self::from_records(&raw)
+    }
+
+    /// Load from a `cifar-10-binary.tar.gz` archive.
+    pub fn load_tar_gz(path: impl AsRef<Path>) -> Result<Cifar10> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("{:?}", path.as_ref()))?;
+        let mut gz = flate2::read::GzDecoder::new(f);
+        let mut tar = Vec::new();
+        gz.read_to_end(&mut tar).context("gunzip")?;
+        let mut raw = Vec::new();
+        for (name, data) in iter_tar(&tar)? {
+            if name.contains("data_batch_") && name.ends_with(".bin") {
+                raw.extend_from_slice(data);
+            }
+        }
+        if raw.is_empty() {
+            bail!("archive contains no data_batch_*.bin members");
+        }
+        Self::from_records(&raw)
+    }
+
+    /// Parse concatenated binary records.
+    pub fn from_records(raw: &[u8]) -> Result<Cifar10> {
+        if raw.is_empty() || raw.len() % RECORD != 0 {
+            bail!("CIFAR payload size {} not a multiple of {RECORD}", raw.len());
+        }
+        let n = raw.len() / RECORD;
+        let mut images = Vec::with_capacity(n * 3072);
+        let mut labels = Vec::with_capacity(n);
+        for rec in raw.chunks_exact(RECORD) {
+            let label = rec[0];
+            if label > 9 {
+                bail!("label {label} out of range");
+            }
+            labels.push(label as i32);
+            let px = &rec[1..];
+            // CHW -> HWC with normalization.
+            for pos in 0..1024 {
+                for c in 0..3 {
+                    let v = px[c * 1024 + pos] as f32;
+                    images.push((v / 255.0 - 0.5) * 2.0);
+                }
+            }
+        }
+        Ok(Cifar10 { images, labels })
+    }
+}
+
+impl Dataset for Cifar10 {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    fn example(&self, i: usize) -> (Vec<f32>, i32) {
+        let img = self.images[i * 3072..(i + 1) * 3072].to_vec();
+        (img, self.labels[i])
+    }
+}
+
+/// Minimal ustar reader: yields (name, payload) for regular files.
+fn iter_tar(tar: &[u8]) -> Result<Vec<(String, &[u8])>> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off + 512 <= tar.len() {
+        let hdr = &tar[off..off + 512];
+        if hdr.iter().all(|&b| b == 0) {
+            break; // end-of-archive
+        }
+        let name = std::str::from_utf8(&hdr[0..100])
+            .unwrap_or("")
+            .trim_end_matches('\0')
+            .to_string();
+        let size_field = std::str::from_utf8(&hdr[124..136])
+            .context("tar size field")?
+            .trim_end_matches(['\0', ' '])
+            .trim();
+        let size = usize::from_str_radix(size_field, 8)
+            .with_context(|| format!("octal size {size_field:?}"))?;
+        let typeflag = hdr[156];
+        let data_start = off + 512;
+        if data_start + size > tar.len() {
+            bail!("truncated tar member {name}");
+        }
+        if typeflag == b'0' || typeflag == 0 {
+            out.push((name, &tar[data_start..data_start + size]));
+        }
+        off = data_start + size.div_ceil(512) * 512;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a fake 3-record CIFAR payload.
+    fn fake_records() -> Vec<u8> {
+        let mut raw = Vec::new();
+        for label in [0u8, 7, 9] {
+            raw.push(label);
+            for c in 0..3u8 {
+                raw.extend(std::iter::repeat(c * 100).take(1024));
+            }
+        }
+        raw
+    }
+
+    #[test]
+    fn parses_records() {
+        let ds = Cifar10::from_records(&fake_records()).unwrap();
+        assert_eq!(ds.len(), 3);
+        let (img, lab) = ds.example(1);
+        assert_eq!(lab, 7);
+        assert_eq!(img.len(), 3072);
+        // First pixel: channels R=0, G=100, B=200 normalized.
+        assert!((img[0] - (-1.0)).abs() < 1e-6);
+        assert!((img[1] - (100.0 / 255.0 - 0.5) * 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_labels() {
+        assert!(Cifar10::from_records(&[0u8; 100]).is_err());
+        let mut bad = fake_records();
+        bad[0] = 11; // label out of range
+        assert!(Cifar10::from_records(&bad).is_err());
+    }
+
+    #[test]
+    fn hwc_transpose_is_correct() {
+        // Pixel p channel c lives at raw[1 + c*1024 + p]; after HWC it
+        // must be at img[p*3 + c].
+        let mut raw = vec![0u8];
+        raw.extend(std::iter::repeat(0u8).take(3072));
+        raw[1 + 2 * 1024 + 5] = 255; // B channel of pixel 5
+        let ds = Cifar10::from_records(&raw).unwrap();
+        let (img, _) = ds.example(0);
+        assert!((img[5 * 3 + 2] - 1.0).abs() < 1e-6);
+        assert_eq!(img.iter().filter(|&&v| v > 0.0).count(), 1);
+    }
+
+    #[test]
+    fn tar_roundtrip() {
+        // Build a minimal ustar archive with one member.
+        let payload = fake_records();
+        let mut hdr = vec![0u8; 512];
+        hdr[0..24].copy_from_slice(b"cifar/data_batch_1.bin\0\0");
+        let size_oct = format!("{:011o}\0", payload.len());
+        hdr[124..136].copy_from_slice(size_oct.as_bytes());
+        hdr[156] = b'0';
+        let mut tar = hdr;
+        tar.extend_from_slice(&payload);
+        tar.resize(tar.len().div_ceil(512) * 512, 0);
+        tar.extend(std::iter::repeat(0u8).take(1024)); // end blocks
+
+        let members = iter_tar(&tar).unwrap();
+        assert_eq!(members.len(), 1);
+        assert_eq!(members[0].0, "cifar/data_batch_1.bin");
+        let ds = Cifar10::from_records(members[0].1).unwrap();
+        assert_eq!(ds.len(), 3);
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Cifar10::load_dir("/nonexistent/nope").is_err());
+    }
+}

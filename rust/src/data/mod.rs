@@ -1,0 +1,34 @@
+//! Input pipeline: CIFAR-10 (the paper's dataset) plus a deterministic
+//! synthetic stand-in, and the batch/DP-sharding iterators.
+//!
+//! The paper loads CIFAR-10 from NFS once before timing (§5.1); we load
+//! the real binary format when `CIFAR10_DIR` (or `data/cifar-10-batches-bin`)
+//! is present and otherwise fall back to [`synthetic`] — a
+//! class-conditional Gaussian task with identical shapes, so every code
+//! path and every byte count is unchanged (DESIGN.md §1).
+
+pub mod batch;
+pub mod cifar;
+pub mod synthetic;
+
+pub use batch::{Batch, BatchIter, Dataset};
+pub use synthetic::SyntheticCifar;
+
+/// Load CIFAR-10 if available, else the synthetic fallback.
+/// Returns (dataset, source description).
+pub fn load_default(n_synthetic: usize, seed: u64) -> (std::rc::Rc<dyn Dataset>, String) {
+    for dir in [
+        std::env::var("CIFAR10_DIR").unwrap_or_default(),
+        "data/cifar-10-batches-bin".to_string(),
+    ] {
+        if !dir.is_empty() {
+            if let Ok(ds) = cifar::Cifar10::load_dir(&dir) {
+                let desc = format!("CIFAR-10 from {dir} ({} images)", ds.len());
+                return (std::rc::Rc::new(ds), desc);
+            }
+        }
+    }
+    let ds = SyntheticCifar::new(n_synthetic, seed);
+    let desc = format!("synthetic CIFAR-shaped ({n_synthetic} images, seed {seed})");
+    (std::rc::Rc::new(ds), desc)
+}

@@ -1,0 +1,117 @@
+//! Deterministic synthetic CIFAR-shaped dataset.
+//!
+//! Class-conditional Gaussians: class c has a per-pixel mean pattern
+//! drawn once from the seed, and examples are mean + noise. The task is
+//! genuinely learnable (a linear probe already separates it, a CNN
+//! drives loss toward zero), which is what the end-to-end example needs
+//! to demonstrate a falling loss curve; and the *shapes* match CIFAR-10
+//! exactly, which is all the throughput experiments depend on.
+
+use super::batch::Dataset;
+use crate::util::Rng;
+
+const PIXELS: usize = 32 * 32 * 3;
+const CLASSES: usize = 10;
+
+/// Synthetic stand-in for CIFAR-10 (see DESIGN.md §1 substitutions).
+pub struct SyntheticCifar {
+    n: usize,
+    /// Per-class mean images, [10][3072].
+    means: Vec<Vec<f32>>,
+    seed: u64,
+    /// Noise scale; mean patterns are ±`signal`.
+    noise: f32,
+}
+
+impl SyntheticCifar {
+    pub fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let means = (0..CLASSES)
+            .map(|_| {
+                (0..PIXELS)
+                    .map(|_| if rng.uniform() < 0.5 { -0.5 } else { 0.5 })
+                    .collect()
+            })
+            .collect();
+        SyntheticCifar { n, means, seed, noise: 0.3 }
+    }
+}
+
+impl Dataset for SyntheticCifar {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn example(&self, i: usize) -> (Vec<f32>, i32) {
+        assert!(i < self.n, "example {i} out of range {}", self.n);
+        // Per-example RNG stream: stable regardless of access order.
+        let mut rng = Rng::new(self.seed ^ (i as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+        let label = (rng.next_u64() % CLASSES as u64) as usize;
+        let mean = &self.means[label];
+        let img = mean
+            .iter()
+            .map(|&m| m + rng.normal() * self.noise)
+            .collect();
+        (img, label as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let ds = SyntheticCifar::new(100, 7);
+        let (img, lab) = ds.example(3);
+        assert_eq!(img.len(), PIXELS);
+        assert!((0..10).contains(&lab));
+    }
+
+    #[test]
+    fn deterministic_per_index() {
+        let ds = SyntheticCifar::new(10, 7);
+        assert_eq!(ds.example(5).0, ds.example(5).0);
+        assert_eq!(ds.example(5).1, ds.example(5).1);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let ds = SyntheticCifar::new(10, 7);
+        assert_ne!(ds.example(1).0, ds.example(2).0);
+    }
+
+    #[test]
+    fn class_means_are_separable() {
+        // Nearest-mean classification on clean examples must beat chance
+        // by a wide margin — the dataset is learnable by construction.
+        let ds = SyntheticCifar::new(200, 3);
+        let mut correct = 0;
+        for i in 0..200 {
+            let (img, lab) = ds.example(i);
+            let best = (0..CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f32 = ds.means[a].iter().zip(&img).map(|(m, x)| (m - x).powi(2)).sum();
+                    let db: f32 = ds.means[b].iter().zip(&img).map(|(m, x)| (m - x).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == lab as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 190, "nearest-mean accuracy {correct}/200");
+    }
+
+    #[test]
+    fn label_distribution_roughly_uniform() {
+        let ds = SyntheticCifar::new(2000, 11);
+        let mut counts = [0usize; 10];
+        for i in 0..2000 {
+            counts[ds.example(i).1 as usize] += 1;
+        }
+        for (c, &n) in counts.iter().enumerate() {
+            assert!((120..=280).contains(&n), "class {c}: {n}");
+        }
+    }
+}

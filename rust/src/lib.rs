@@ -1,0 +1,53 @@
+//! # SplitBrain — hybrid data and model parallel deep learning
+//!
+//! A Rust + JAX + Pallas reproduction of *SplitBrain: Hybrid Data and
+//! Model Parallel Deep Learning* (Lai, Kadav, Kruus; NEC Labs, 2021).
+//!
+//! The crate is the paper's **Layer-3 coordinator**: it owns the cluster
+//! topology, the automatic layer partitioning (Listing 1), the modulo and
+//! shard communication layers (Figs. 4/5), the group-MP extension
+//! (Fig. 6), BSP model averaging, SGD, and the benchmark harness that
+//! regenerates every table and figure of the paper's evaluation.
+//!
+//! Compute never happens in Python at runtime: the VGG-11 forward and
+//! backward *segments* (Layer 2, JAX, calling Layer-1 Pallas kernels)
+//! are AOT-lowered once by `make artifacts` into HLO text, which
+//! [`runtime`] loads and executes through the PJRT CPU client.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`model`] | layer DSL, VGG-11 variant (Table 1), CCR estimates, the Listing-1 partitioner |
+//! | [`comm`] | GASPI-like fabric, collectives, network cost model, comm tracing |
+//! | [`coordinator`] | GMP topology, modulo/shard plans, step schedule, model averaging, cluster driver |
+//! | [`runtime`] | PJRT client, artifact manifest, host tensors |
+//! | [`data`] | CIFAR-10 loader + synthetic generator, batching |
+//! | [`train`] | SGD, trainer loop, metrics, memory accounting |
+//! | [`bench`] | mini-bench harness + paper table printers |
+//! | [`util`] | RNG, stats, timers, table formatting |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use splitbrain::coordinator::cluster::{Cluster, ClusterConfig};
+//! use splitbrain::runtime::RuntimeClient;
+//!
+//! let rt = RuntimeClient::load("artifacts").unwrap();
+//! let cfg = ClusterConfig { n_workers: 4, mp: 2, ..Default::default() };
+//! let mut cluster = Cluster::new(&rt, cfg).unwrap();
+//! let report = cluster.train_steps(100).unwrap();
+//! println!("{} images/sec", report.images_per_sec());
+//! ```
+
+pub mod bench;
+pub mod comm;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,242 @@
+//! `splitbrain` — the leader CLI.
+//!
+//! ```text
+//! splitbrain train    --workers 4 --mp 2 --steps 100 [--lr 0.05] [--avg-period 10]
+//! splitbrain sweep    --experiment table2|fig7a|fig7b|fig7c [--numeric]
+//! splitbrain inspect  [--mp 2]          # Table 1 + the Fig. 3 transform
+//! splitbrain memory                     # Fig. 7c memory accounting
+//! splitbrain profile  --workers 2 --mp 2 --steps 3   # per-artifact hot-path profile
+//! ```
+//!
+//! All subcommands need `make artifacts` to have produced `artifacts/`.
+
+use anyhow::{bail, Result};
+
+use splitbrain::bench::{self, Fidelity};
+use splitbrain::coordinator::{Cluster, ClusterConfig};
+use splitbrain::model::{partition_network, vgg11, PartitionConfig};
+use splitbrain::runtime::RuntimeClient;
+use splitbrain::train::MemoryReport;
+use splitbrain::util::{Args, Table};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional(0) {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("memory") => cmd_memory(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("plan") => cmd_plan(&args),
+        Some(other) => bail!("unknown subcommand {other:?} (try: train, sweep, inspect, memory, profile, plan)"),
+        None => {
+            eprintln!("usage: splitbrain <train|sweep|inspect|memory|profile|plan> [--flags]");
+            Ok(())
+        }
+    }
+}
+
+fn cluster_config(args: &Args) -> Result<ClusterConfig> {
+    Ok(ClusterConfig {
+        n_workers: args.usize_or("workers", 2)?,
+        mp: args.usize_or("mp", 1)?,
+        lr: args.f32_or("lr", 0.05)?,
+        momentum: args.f32_or("momentum", 0.9)?,
+        clip_norm: args.f32_or("clip-norm", 1.0)?,
+        scheme: splitbrain::coordinator::McastScheme::parse(args.str_or("scheme", "b/k"))?,
+        avg_period: args.usize_or("avg-period", 10)?,
+        seed: args.u64_or("seed", 42)?,
+        dataset_size: args.usize_or("dataset-size", 2048)?,
+        ..Default::default()
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
+    let cfg = cluster_config(args)?;
+    let steps = args.usize_or("steps", 50)?;
+    let log_every = args.usize_or("log-every", 10)?.max(1);
+    println!(
+        "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}",
+        cfg.n_workers,
+        cfg.mp,
+        cfg.n_workers / cfg.mp,
+        rt.manifest.batch,
+        cfg.lr,
+        cfg.avg_period
+    );
+    let mut cluster = Cluster::new(&rt, cfg)?;
+    let mem = cluster.memory_report();
+    println!(
+        "per-worker memory: {:.2} MB params, {:.2} MB total\n",
+        mem.param_mb(),
+        mem.total_mb()
+    );
+    let mut report = splitbrain::train::TrainReport::new(
+        cluster.cfg.n_workers,
+        cluster.cfg.mp,
+        rt.manifest.batch,
+    );
+    for step in 1..=steps {
+        let m = cluster.step()?;
+        report.push(&m);
+        if step % log_every == 0 || step == steps {
+            println!(
+                "step {step:>4}  loss {:.4}  compute {:.1} ms  mp-comm {:.2} ms  step {:.1} ms",
+                m.loss,
+                m.compute_secs * 1e3,
+                m.mp_comm_secs * 1e3,
+                m.step_secs() * 1e3
+            );
+        }
+    }
+    println!(
+        "\nthroughput: {:.2} images/sec (simulated cluster)  comm fraction {:.1}%",
+        report.images_per_sec(),
+        report.comm_fraction() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
+    let base = cluster_config(args)?;
+    let fidelity = if args.bool_or("numeric", false)? {
+        Fidelity::Numeric { steps: args.usize_or("steps", 5)? }
+    } else {
+        Fidelity::Calibrated
+    };
+    let exp = args.str_or("experiment", "table2");
+    let table = match exp {
+        "table1" => bench::table1(),
+        "table2" => bench::table2(&rt, fidelity, &base)?.0,
+        "fig7a" => bench::fig7a(&rt, fidelity, &base)?.0,
+        "fig7b" => bench::fig7b(&rt, fidelity, &base)?.0,
+        "fig7c" => bench::fig7c(&rt, fidelity, &base)?.0,
+        other => bail!("unknown experiment {other:?}"),
+    };
+    println!("=== {exp} ===\n{}", table.render());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    // Custom model spec (the Torch-like frontend of §4) or the built-in
+    // VGG variant.
+    let (net, input_dim) = match args.str_or("spec", "") {
+        "" => {
+            println!("=== Table 1: VGG variant ===\n{}", bench::table1().render());
+            (vgg11(), vec![32, 32, 3])
+        }
+        path => {
+            let text = std::fs::read_to_string(path)?;
+            let spec = splitbrain::model::parse_spec(&text)?;
+            println!("=== custom model from {path} ===");
+            (spec.net, spec.input_dim)
+        }
+    };
+    let mp = args.usize_or("mp", 2)?;
+    let t = partition_network(
+        &net,
+        input_dim,
+        &PartitionConfig { mp, ..Default::default() },
+    )?;
+    println!(
+        "=== Transformed network (mp={mp}, Fig. 3) ===\n{}",
+        t.render()
+    );
+    println!(
+        "sharded linears: {:?}; per-worker weights {} ({:.1}% of local model)",
+        t.sharded_linears(),
+        t.weight_count(),
+        t.weight_count() as f64 / 6_987_456.0 * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let batch = args.usize_or("batch", 32)?;
+    let mut table = Table::new(vec![
+        "mp", "params MB", "grads MB", "optimizer MB", "activations MB", "total MB", "saving %",
+    ]);
+    let full = MemoryReport::of(
+        &partition_network(&vgg11(), vec![32, 32, 3], &PartitionConfig::default())?,
+        batch,
+    );
+    for mp in [1usize, 2, 4, 8] {
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )?;
+        let m = MemoryReport::of(&net, batch);
+        table.row(vec![
+            mp.to_string(),
+            format!("{:.2}", m.param_mb()),
+            format!("{:.2}", m.grads as f64 / 1048576.0),
+            format!("{:.2}", m.optimizer as f64 / 1048576.0),
+            format!("{:.2}", m.activations as f64 / 1048576.0),
+            format!("{:.2}", m.total_mb()),
+            format!("{:.1}", (1.0 - m.params as f64 / full.params as f64) * 100.0),
+        ]);
+    }
+    println!("=== Per-worker memory (B={batch}) ===\n{}", table.render());
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
+    let cfg = cluster_config(args)?;
+    let steps = args.usize_or("steps", 3)?;
+    let mut cluster = Cluster::new(&rt, cfg)?;
+    cluster.train_steps(steps)?;
+    let mut table = Table::new(vec!["artifact", "calls", "total s", "ms/call"]);
+    for (name, calls, secs) in rt.profile_report() {
+        table.row(vec![
+            name,
+            calls.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.2}", secs / calls.max(1) as f64 * 1e3),
+        ]);
+    }
+    println!("=== PJRT hot-path profile ({steps} steps) ===\n{}", table.render());
+    Ok(())
+}
+
+/// The §7-future-work planner: best (mp, scheme) under a memory budget.
+fn cmd_plan(args: &Args) -> Result<()> {
+    use splitbrain::coordinator::planner::{best, plan, CostModel, PlanRequest};
+    let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
+    let budget_mb = args.usize_or("budget-mb", 64)?;
+    let req = PlanRequest {
+        n_workers: args.usize_or("workers", 8)?,
+        memory_budget: budget_mb * 1024 * 1024,
+        net: Default::default(),
+        avg_period: args.usize_or("avg-period", 10)?,
+        cost: CostModel::calibrate(&rt, &rt.manifest.mp_sizes.clone())?,
+    };
+    let options = plan(&rt, &req)?;
+    let mut table = Table::new(vec![
+        "mp", "scheme", "memory MB", "step ms", "images/sec", "comm %", "feasible",
+    ]);
+    for o in &options {
+        table.row(vec![
+            o.mp.to_string(),
+            o.scheme.to_string(),
+            format!("{:.1}", o.memory_bytes as f64 / 1048576.0),
+            format!("{:.0}", o.step_secs * 1e3),
+            format!("{:.1}", o.images_per_sec),
+            format!("{:.2}", o.comm_fraction * 100.0),
+            if o.feasible { "yes" } else { "no" }.into(),
+        ]);
+    }
+    println!(
+        "=== plan: {} workers, budget {budget_mb} MB/worker ===\n{}",
+        req.n_workers,
+        table.render()
+    );
+    match best(&options) {
+        Some(b) => println!("recommendation: mp={} scheme={} ({:.1} img/s)", b.mp, b.scheme, b.images_per_sec),
+        None => println!("no feasible configuration — raise the budget or the MP sizes lowered in artifacts"),
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Computation-to-communication ratio (CCR) estimates.
+//!
+//! Listing 1 (line 25/31) partitions an FC layer only when its CCR
+//! exceeds a threshold: model parallelism adds per-example exchange, so
+//! the layer must carry enough arithmetic to amortize it.
+//!
+//! We estimate, per assembled batch of B examples:
+//!   flops(linear)  = 6·B·din·dout      (fwd matmul + the two bwd matmuls)
+//!   comm_bytes     = 8·B·(din + dout)  (shard fprop allgather of the
+//!                    dout outputs + bprop reduce of the din-wide input
+//!                    gradients, 4 bytes each, both directions)
+//!   ccr            = flops / comm_bytes = 0.75·din·dout/(din+dout)
+//!
+//! B cancels, so the decision is topology-only — matching the paper,
+//! where the partitioning happens before training starts. For the VGG
+//! variant: FC0 ≈ 614, FC1 ≈ 384, FC2 ≈ 7.4 — the default threshold of
+//! 50 partitions FC0/FC1 and replicates the tiny FC2 head.
+
+use super::layer::Layer;
+
+/// Default CCR threshold (the `CCR()` call of Listing 1).
+pub const DEFAULT_CCR_THRESHOLD: f64 = 50.0;
+
+/// Forward+backward flops of a layer per example.
+pub fn flops_per_example(layer: &Layer, spatial: Option<(usize, usize)>) -> f64 {
+    match layer {
+        Layer::Linear { din, dout, .. } => 6.0 * (*din as f64) * (*dout as f64),
+        Layer::Conv { cin, cout, ksize, .. } => {
+            // fwd + input-grad + weight-grad conv passes, SAME padding.
+            let (h, w) = spatial.expect("conv flops need spatial dims");
+            6.0 * (h * w * ksize * ksize * cin * cout) as f64
+        }
+        _ => 0.0,
+    }
+}
+
+/// Shard-layer exchange volume per example if `layer` were partitioned
+/// (bytes, both directions, f32).
+pub fn shard_comm_bytes_per_example(layer: &Layer) -> f64 {
+    match layer {
+        Layer::Linear { din, dout, .. } => 8.0 * (*din as f64 + *dout as f64),
+        _ => 0.0,
+    }
+}
+
+/// The `layer.ccr()` of Listing 1. Zero for non-linear layers (never
+/// partitioned on CCR grounds).
+pub fn ccr(layer: &Layer) -> f64 {
+    let comm = shard_comm_bytes_per_example(layer);
+    if comm == 0.0 {
+        return 0.0;
+    }
+    flops_per_example(layer, None) / comm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lin(din: usize, dout: usize) -> Layer {
+        Layer::Linear { name: "l".into(), din, dout, shard_of: None }
+    }
+
+    #[test]
+    fn vgg_fc_ccr_ordering() {
+        let fc0 = ccr(&lin(4096, 1024));
+        let fc1 = ccr(&lin(1024, 1024));
+        let fc2 = ccr(&lin(1024, 10));
+        assert!(fc0 > fc1 && fc1 > fc2, "{fc0} {fc1} {fc2}");
+        // The default threshold splits exactly {FC0, FC1}.
+        assert!(fc0 > DEFAULT_CCR_THRESHOLD);
+        assert!(fc1 > DEFAULT_CCR_THRESHOLD);
+        assert!(fc2 < DEFAULT_CCR_THRESHOLD);
+    }
+
+    #[test]
+    fn ccr_formula() {
+        // 0.75·din·dout/(din+dout)
+        let c = ccr(&lin(4096, 1024));
+        assert!((c - 0.75 * 4096.0 * 1024.0 / 5120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_linear_layers_have_zero_ccr() {
+        assert_eq!(ccr(&Layer::Relu), 0.0);
+        assert_eq!(ccr(&Layer::Pool { window: 2 }), 0.0);
+    }
+
+    #[test]
+    fn conv_flops_scale_with_spatial() {
+        let c = Layer::Conv { name: "c".into(), cin: 64, cout: 64, ksize: 3 };
+        let f32x32 = flops_per_example(&c, Some((32, 32)));
+        let f16x16 = flops_per_example(&c, Some((16, 16)));
+        assert!((f32x32 / f16x16 - 4.0).abs() < 1e-9);
+    }
+}

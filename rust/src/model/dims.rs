@@ -1,0 +1,118 @@
+//! Feature-dimension inference — the `resize()` of Listing 1.
+//!
+//! A [`Dim`] is the per-example feature shape (batch excluded):
+//! `[H, W, C]` in the conv region, `[features]` after the flatten.
+//! The partitioner threads two of these through the network: `dim`
+//! (with the previous layer partitioned) and `dim_full` (without).
+
+use anyhow::{bail, Result};
+
+use super::layer::Layer;
+
+/// Per-example feature shape, NHWC order without N.
+pub type Dim = Vec<usize>;
+
+/// Total element count of a feature shape.
+pub fn numel(d: &Dim) -> usize {
+    d.iter().product()
+}
+
+/// Output shape of `layer` on input shape `d` — the paper's
+/// `layer.resize(dim)`. Fails on rank/shape mismatches so the
+/// partitioner surfaces malformed networks early.
+pub fn resize(layer: &Layer, d: &Dim) -> Result<Dim> {
+    match layer {
+        Layer::Seq(_) => bail!("resize() on a Seq container"),
+        Layer::Reshape { out } => {
+            if numel(d) != out.iter().product::<usize>() {
+                bail!("Reshape{out:?} on input {d:?}: element count differs");
+            }
+            Ok(out.clone())
+        }
+        Layer::Pad { amount } => match d.as_slice() {
+            [h, w, c] => Ok(vec![h + 2 * amount, w + 2 * amount, *c]),
+            _ => bail!("Pad on non-spatial input {d:?}"),
+        },
+        Layer::Conv { cin, cout, name, .. } => match d.as_slice() {
+            [h, w, c] if c == cin => Ok(vec![*h, *w, *cout]),
+            _ => bail!("{name}: Conv expects [H,W,{cin}], got {d:?}"),
+        },
+        Layer::Pool { window } => match d.as_slice() {
+            [h, w, c] if h % window == 0 && w % window == 0 => {
+                Ok(vec![h / window, w / window, *c])
+            }
+            _ => bail!("Pool{window} on {d:?}: not divisible"),
+        },
+        Layer::Dropout { .. } | Layer::Relu => Ok(d.clone()), // one-to-one
+        Layer::Linear { name, din, dout, .. } => match d.as_slice() {
+            [f] if f == din => Ok(vec![*dout]),
+            _ => bail!("{name}: Linear expects [{din}], got {d:?}"),
+        },
+        Layer::LogSoftmax => Ok(d.clone()),
+        Layer::Modulo { .. } => Ok(d.clone()),
+        Layer::Shard { dim_part, dim_full } => match d.as_slice() {
+            [f] if f == dim_part => Ok(vec![*dim_full]),
+            _ => bail!("Shard expects [{dim_part}], got {d:?}"),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_keeps_spatial_same_padding() {
+        let c = Layer::Conv { name: "c".into(), cin: 3, cout: 64, ksize: 3 };
+        assert_eq!(resize(&c, &vec![32, 32, 3]).unwrap(), vec![32, 32, 64]);
+    }
+
+    #[test]
+    fn conv_rejects_wrong_channels() {
+        let c = Layer::Conv { name: "c".into(), cin: 3, cout: 64, ksize: 3 };
+        assert!(resize(&c, &vec![32, 32, 4]).is_err());
+    }
+
+    #[test]
+    fn pool_halves() {
+        let p = Layer::Pool { window: 2 };
+        assert_eq!(resize(&p, &vec![32, 32, 64]).unwrap(), vec![16, 16, 64]);
+        assert!(resize(&p, &vec![5, 5, 1]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let r = Layer::Reshape { out: vec![4096] };
+        assert_eq!(resize(&r, &vec![4, 4, 256]).unwrap(), vec![4096]);
+        assert!(resize(&r, &vec![4, 4, 128]).is_err());
+    }
+
+    #[test]
+    fn linear_maps_features() {
+        let l = Layer::Linear { name: "f".into(), din: 4096, dout: 1024, shard_of: None };
+        assert_eq!(resize(&l, &vec![4096]).unwrap(), vec![1024]);
+        assert!(resize(&l, &vec![100]).is_err());
+    }
+
+    #[test]
+    fn one_to_one_layers_pass_through() {
+        assert_eq!(resize(&Layer::Relu, &vec![512]).unwrap(), vec![512]);
+        assert_eq!(
+            resize(&Layer::Dropout { p: 0.5 }, &vec![16, 16, 64]).unwrap(),
+            vec![16, 16, 64]
+        );
+    }
+
+    #[test]
+    fn shard_restores_full_width() {
+        let s = Layer::Shard { dim_part: 512, dim_full: 1024 };
+        assert_eq!(resize(&s, &vec![512]).unwrap(), vec![1024]);
+        assert!(resize(&s, &vec![100]).is_err());
+    }
+
+    #[test]
+    fn pad_grows_spatial() {
+        let p = Layer::Pad { amount: 1 };
+        assert_eq!(resize(&p, &vec![32, 32, 3]).unwrap(), vec![34, 34, 3]);
+    }
+}

@@ -1,0 +1,195 @@
+//! The layer vocabulary of SplitBrain's model DSL (§3, Design).
+//!
+//! The three programmer-facing families are convolutional, FC and
+//! functional layers; `Modulo` and `Shard` are the two *communication*
+//! layers the partitioner inserts automatically (they never appear in a
+//! hand-written model).
+
+use std::fmt;
+
+/// A CNN layer. `Seq` is the sequential container the partitioner
+/// recurses into (Listing 1 line 9).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// Sequential container of sub-layers.
+    Seq(Vec<Layer>),
+    /// Reshape/flatten to the given feature shape (e.g. `[4096]`).
+    Reshape { out: Vec<usize> },
+    /// Zero padding (excluded from partitioning, Listing 1 line 13).
+    Pad { amount: usize },
+    /// 2-D convolution, SAME padding, stride 1, square kernel.
+    Conv { name: String, cin: usize, cout: usize, ksize: usize },
+    /// Max pooling window x window, stride = window.
+    Pool { window: usize },
+    /// Dropout (one-to-one functional layer; adapts to partitioned width).
+    Dropout { p: f32 },
+    /// ReLU (one-to-one functional layer; adapts to partitioned width).
+    Relu,
+    /// Fully-connected layer `din -> dout`. When `shard_of` is `Some(k)`,
+    /// this instance is the 1/k column shard of the original layer.
+    Linear { name: String, din: usize, dout: usize, shard_of: Option<usize> },
+    /// Log-softmax classifier head.
+    LogSoftmax,
+    /// Communication layer: schedules the B/K example broadcast over K
+    /// modulo iterations (Fig. 4). `dim` is the full feature width at
+    /// the DP/MP boundary.
+    Modulo { dim: usize },
+    /// Communication layer: allgathers 1/K-partitioned output back to
+    /// full width in fprop, reduce-scatters gradients in bprop (Fig. 5).
+    Shard { dim_part: usize, dim_full: usize },
+}
+
+impl Layer {
+    /// Trainable parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        match self {
+            Layer::Seq(ls) => ls.iter().map(Layer::param_count).sum(),
+            Layer::Conv { cin, cout, ksize, .. } => ksize * ksize * cin * cout + cout,
+            Layer::Linear { din, dout, .. } => din * dout + dout,
+            _ => 0,
+        }
+    }
+
+    /// Weight-only parameter count (the paper's Table 1 convention).
+    pub fn weight_count(&self) -> usize {
+        match self {
+            Layer::Seq(ls) => ls.iter().map(Layer::weight_count).sum(),
+            Layer::Conv { cin, cout, ksize, .. } => ksize * ksize * cin * cout,
+            Layer::Linear { din, dout, .. } => din * dout,
+            _ => 0,
+        }
+    }
+
+    /// True for the layer kinds Listing 1 considers for actual
+    /// partitioning (line 19/22: DROPOUT, RELU, LINEAR).
+    pub fn partitionable(&self) -> bool {
+        matches!(self, Layer::Dropout { .. } | Layer::Relu | Layer::Linear { .. })
+    }
+
+    /// True for the communication layers inserted by the transform.
+    pub fn is_comm(&self) -> bool {
+        matches!(self, Layer::Modulo { .. } | Layer::Shard { .. })
+    }
+
+    /// Column-shard a linear layer into its 1/k piece (the overloaded
+    /// `partition(layer)` of Listing 1 lines 27/32).
+    pub fn shard_linear(&self, k: usize) -> Layer {
+        match self {
+            Layer::Linear { name, din, dout, shard_of: None } => {
+                assert!(dout % k == 0, "{name}: dout {dout} not divisible by {k}");
+                Layer::Linear {
+                    name: name.clone(),
+                    din: *din,
+                    dout: dout / k,
+                    shard_of: Some(k),
+                }
+            }
+            other => panic!("shard_linear on {other:?}"),
+        }
+    }
+
+    /// Flatten a Seq tree into a layer list (display/tests).
+    pub fn flatten(&self) -> Vec<&Layer> {
+        match self {
+            Layer::Seq(ls) => ls.iter().flat_map(|l| l.flatten()).collect(),
+            other => vec![other],
+        }
+    }
+}
+
+impl fmt::Display for Layer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Layer::Seq(ls) => write!(f, "Seq[{} layers]", ls.len()),
+            Layer::Reshape { out } => write!(f, "Reshape{out:?}"),
+            Layer::Pad { amount } => write!(f, "Pad({amount})"),
+            Layer::Conv { name, cin, cout, ksize } => {
+                write!(f, "{name}: Conv{ksize}x{ksize} {cin}->{cout}")
+            }
+            Layer::Pool { window } => write!(f, "Pool{window}x{window}"),
+            Layer::Dropout { p } => write!(f, "Dropout({p})"),
+            Layer::Relu => write!(f, "ReLU"),
+            Layer::Linear { name, din, dout, shard_of: None } => {
+                write!(f, "{name}: Linear {din}->{dout}")
+            }
+            Layer::Linear { name, din, dout, shard_of: Some(k) } => {
+                write!(f, "{name}: Linear {din}->{dout} [1/{k} shard]")
+            }
+            Layer::LogSoftmax => write!(f, "LogSoftmax"),
+            Layer::Modulo { dim } => write!(f, "L_M: Modulo(dim={dim})"),
+            Layer::Shard { dim_part, dim_full } => {
+                write!(f, "L_S: Shard({dim_part}->{dim_full})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fc(name: &str, din: usize, dout: usize) -> Layer {
+        Layer::Linear { name: name.into(), din, dout, shard_of: None }
+    }
+
+    #[test]
+    fn param_counts() {
+        let conv = Layer::Conv { name: "c".into(), cin: 3, cout: 64, ksize: 3 };
+        assert_eq!(conv.weight_count(), 1728);
+        assert_eq!(conv.param_count(), 1728 + 64);
+        let lin = fc("f", 4096, 1024);
+        assert_eq!(lin.weight_count(), 4096 * 1024);
+    }
+
+    #[test]
+    fn seq_sums_params() {
+        let s = Layer::Seq(vec![fc("a", 10, 20), fc("b", 20, 5)]);
+        assert_eq!(s.weight_count(), 200 + 100);
+    }
+
+    #[test]
+    fn shard_divides_outputs() {
+        let sh = fc("f", 4096, 1024).shard_linear(4);
+        match sh {
+            Layer::Linear { dout, shard_of, .. } => {
+                assert_eq!(dout, 256);
+                assert_eq!(shard_of, Some(4));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn shard_requires_divisibility() {
+        fc("f", 10, 10).shard_linear(3);
+    }
+
+    #[test]
+    fn partitionable_classification() {
+        assert!(Layer::Relu.partitionable());
+        assert!(Layer::Dropout { p: 0.5 }.partitionable());
+        assert!(fc("f", 4, 4).partitionable());
+        assert!(!Layer::Pool { window: 2 }.partitionable());
+        assert!(!Layer::LogSoftmax.partitionable());
+    }
+
+    #[test]
+    fn comm_layers_flagged() {
+        assert!(Layer::Modulo { dim: 4096 }.is_comm());
+        assert!(Layer::Shard { dim_part: 512, dim_full: 1024 }.is_comm());
+        assert!(!Layer::Relu.is_comm());
+    }
+
+    #[test]
+    fn flatten_traverses_seq() {
+        let s = Layer::Seq(vec![fc("a", 1, 1), Layer::Seq(vec![Layer::Relu])]);
+        assert_eq!(s.flatten().len(), 2);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let sh = fc("FC0", 4096, 1024).shard_linear(2);
+        assert_eq!(format!("{sh}"), "FC0: Linear 4096->512 [1/2 shard]");
+    }
+}

@@ -1,0 +1,26 @@
+//! The CNN layer DSL and SplitBrain's automatic network transformation.
+//!
+//! Mirrors the paper's §3: programmers build a CNN from convolutional,
+//! FC and functional layers exactly as a *local* model; [`partition`]
+//! implements Listing 1, splitting CCR-worthy FC layers 1/K and
+//! inserting the [`Layer::Modulo`] / [`Layer::Shard`] communication
+//! layers that the coordinator later schedules.
+//!
+//! - [`layer`] — the layer vocabulary (SEQ, CONV, LINEAR, ... MODULO, SHARD)
+//! - [`dims`] — feature-dimension inference (`resize()` in the paper)
+//! - [`ccr`] — computation-to-communication ratio estimates
+//! - [`partition`] — Listing 1 + the transform of Fig. 3
+//! - [`vgg`] — the VGG-11 CIFAR variant of Table 1
+
+pub mod ccr;
+pub mod dims;
+pub mod layer;
+pub mod partition;
+pub mod spec;
+pub mod vgg;
+
+pub use dims::Dim;
+pub use layer::Layer;
+pub use partition::{partition_network, PartitionConfig, TransformedNet};
+pub use spec::{parse as parse_spec, ModelSpec};
+pub use vgg::vgg11;

@@ -1,0 +1,209 @@
+//! Text model specs — the counterpart of the paper's Torch/Lua frontend
+//! (§4: "we provide Torch-like CNN construction through Lua bindings").
+//!
+//! A spec is a line-based description; the partitioner then transforms
+//! it exactly like a hand-built network:
+//!
+//! ```text
+//! # VGG-11 CIFAR variant
+//! input 32 32 3
+//! conv Conv0 3 64
+//! relu
+//! conv Conv1 64 64
+//! relu
+//! pool 2
+//! ...
+//! reshape 4096
+//! linear FC0 4096 1024
+//! relu
+//! dropout 0.5
+//! linear FC2 1024 10
+//! logsoftmax
+//! ```
+//!
+//! Keywords: `input H W C`, `conv NAME CIN COUT [KSIZE=3]`,
+//! `pool WINDOW`, `pad AMOUNT`, `relu`, `dropout P`,
+//! `reshape D0 [D1 ...]`, `linear NAME DIN DOUT`, `logsoftmax`.
+//! `#` starts a comment. Shapes are validated at parse time so a typo
+//! fails with the offending line, not deep inside the runtime.
+
+use anyhow::{bail, Context, Result};
+
+use super::dims::{self, Dim};
+use super::layer::Layer;
+
+/// A parsed spec: the network plus its input shape.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub net: Layer,
+    pub input_dim: Dim,
+}
+
+/// Parse a spec from text.
+pub fn parse(text: &str) -> Result<ModelSpec> {
+    let mut input_dim: Option<Dim> = None;
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut dim: Option<Dim> = None;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let tok: Vec<&str> = line.split_whitespace().collect();
+        let ctx = || format!("spec line {}: {raw:?}", lineno + 1);
+        let usize_at = |i: usize| -> Result<usize> {
+            tok.get(i)
+                .with_context(ctx)?
+                .parse::<usize>()
+                .with_context(ctx)
+        };
+        let layer = match tok[0] {
+            "input" => {
+                if input_dim.is_some() {
+                    bail!("{}: duplicate input line", ctx());
+                }
+                if tok.len() < 2 {
+                    bail!("{}: input needs at least one dim", ctx());
+                }
+                let d: Dim = (1..tok.len())
+                    .map(usize_at)
+                    .collect::<Result<Vec<_>>>()?;
+                input_dim = Some(d.clone());
+                dim = Some(d);
+                continue;
+            }
+            "conv" => {
+                let name = tok.get(1).with_context(ctx)?.to_string();
+                let cin = usize_at(2)?;
+                let cout = usize_at(3)?;
+                let ksize = if tok.len() > 4 { usize_at(4)? } else { 3 };
+                Layer::Conv { name, cin, cout, ksize }
+            }
+            "pool" => Layer::Pool { window: usize_at(1)? },
+            "pad" => Layer::Pad { amount: usize_at(1)? },
+            "relu" => Layer::Relu,
+            "dropout" => Layer::Dropout {
+                p: tok.get(1).with_context(ctx)?.parse::<f32>().with_context(ctx)?,
+            },
+            "reshape" => Layer::Reshape {
+                out: (1..tok.len()).map(usize_at).collect::<Result<Vec<_>>>()?,
+            },
+            "linear" => Layer::Linear {
+                name: tok.get(1).with_context(ctx)?.to_string(),
+                din: usize_at(2)?,
+                dout: usize_at(3)?,
+                shard_of: None,
+            },
+            "logsoftmax" => Layer::LogSoftmax,
+            other => bail!("{}: unknown keyword {other:?}", ctx()),
+        };
+        // Shape-check as we go (resize fails with the exact line).
+        let d = dim.as_ref().with_context(|| format!("{}: layer before `input`", ctx()))?;
+        dim = Some(dims::resize(&layer, d).with_context(ctx)?);
+        layers.push(layer);
+    }
+
+    let input_dim = input_dim.context("spec missing `input H W C` line")?;
+    if layers.is_empty() {
+        bail!("spec has no layers");
+    }
+    Ok(ModelSpec { net: Layer::Seq(layers), input_dim })
+}
+
+/// The VGG-11 variant as a spec string (round-trip fixture + example).
+pub const VGG11_SPEC: &str = "\
+# VGG-11 CIFAR variant (Table 1 of the SplitBrain paper)
+input 32 32 3
+conv Conv0 3 64
+relu
+conv Conv1 64 64
+relu
+pool 2
+conv Conv2 64 128
+relu
+conv Conv3 128 128
+relu
+pool 2
+conv Conv4 128 256
+relu
+conv Conv5 256 256
+relu
+conv Conv6 256 256
+relu
+pool 2
+reshape 4096
+linear FC0 4096 1024
+relu
+linear FC1 1024 1024
+relu
+linear FC2 1024 10
+logsoftmax
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vgg::vgg11;
+
+    #[test]
+    fn vgg_spec_roundtrips_to_builder() {
+        let spec = parse(VGG11_SPEC).unwrap();
+        assert_eq!(spec.input_dim, vec![32, 32, 3]);
+        assert_eq!(spec.net, vgg11());
+    }
+
+    #[test]
+    fn partitioner_accepts_spec_output() {
+        use crate::model::{partition_network, PartitionConfig};
+        let spec = parse(VGG11_SPEC).unwrap();
+        let t = partition_network(
+            &spec.net,
+            spec.input_dim,
+            &PartitionConfig { mp: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(t.sharded_linears(), vec!["FC0", "FC1"]);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let spec = parse("# c\n\ninput 8\nlinear L 8 4  # trailing\nlogsoftmax\n").unwrap();
+        assert_eq!(spec.net.flatten().len(), 2);
+    }
+
+    #[test]
+    fn custom_kernel_size() {
+        let spec = parse("input 8 8 4\nconv C 4 8 5\n").unwrap();
+        match spec.net.flatten()[0] {
+            Layer::Conv { ksize, .. } => assert_eq!(*ksize, 5),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn shape_errors_carry_line_numbers() {
+        // Linear din mismatches the running shape.
+        let err = parse("input 10\nlinear L 99 5\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+    }
+
+    #[test]
+    fn missing_input_rejected() {
+        assert!(parse("linear L 4 2\n").is_err());
+        assert!(parse("# only comments\n").is_err());
+        assert!(parse("input 4\n").is_err()); // no layers
+    }
+
+    #[test]
+    fn unknown_keyword_rejected() {
+        let err = parse("input 4\nfoobar 1 2\n").unwrap_err().to_string();
+        assert!(err.contains("foobar"));
+    }
+
+    #[test]
+    fn duplicate_input_rejected() {
+        assert!(parse("input 4\ninput 5\nlinear L 5 2\n").is_err());
+    }
+}

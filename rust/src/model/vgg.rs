@@ -1,0 +1,122 @@
+//! The VGG variant of the paper's evaluation (§5.1, Table 1):
+//! 7 convolutional + 3 FC trainable layers, 6,987,456 weights
+//! (~7M; the paper quotes 7.5M including optimizer bookkeeping),
+//! with the FC stack holding 75.17% of them.
+
+use super::layer::Layer;
+
+/// Construct the VGG-11 CIFAR variant exactly as a *local* model — the
+/// programmer-facing form before `partition_network` transforms it.
+pub fn vgg11() -> Layer {
+    let conv = |name: &str, cin: usize, cout: usize| Layer::Conv {
+        name: name.into(),
+        cin,
+        cout,
+        ksize: 3,
+    };
+    let fc = |name: &str, din: usize, dout: usize| Layer::Linear {
+        name: name.into(),
+        din,
+        dout,
+        shard_of: None,
+    };
+    Layer::Seq(vec![
+        conv("Conv0", 3, 64),
+        Layer::Relu,
+        conv("Conv1", 64, 64),
+        Layer::Relu,
+        Layer::Pool { window: 2 }, // 32 -> 16
+        conv("Conv2", 64, 128),
+        Layer::Relu,
+        conv("Conv3", 128, 128),
+        Layer::Relu,
+        Layer::Pool { window: 2 }, // 16 -> 8
+        conv("Conv4", 128, 256),
+        Layer::Relu,
+        conv("Conv5", 256, 256),
+        Layer::Relu,
+        conv("Conv6", 256, 256),
+        Layer::Relu,
+        Layer::Pool { window: 2 }, // 8 -> 4
+        Layer::Reshape { out: vec![4096] },
+        fc("FC0", 4096, 1024),
+        Layer::Relu,
+        fc("FC1", 1024, 1024),
+        Layer::Relu,
+        fc("FC2", 1024, 10),
+        Layer::LogSoftmax,
+    ])
+}
+
+/// Table 1 rows: (layer, I/O channel or feature dims, weight count).
+pub fn table1() -> Vec<(String, String, usize)> {
+    vgg11()
+        .flatten()
+        .iter()
+        .filter_map(|l| match l {
+            Layer::Conv { name, cin, cout, .. } => {
+                Some((name.clone(), format!("{cin}x{cout}"), l.weight_count()))
+            }
+            Layer::Linear { name, din, dout, .. } => {
+                Some((name.clone(), format!("{din}x{dout}"), l.weight_count()))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+/// Weight fraction held by the FC stack (paper: 75.17%).
+pub fn fc_weight_fraction() -> f64 {
+    let rows = table1();
+    let total: usize = rows.iter().map(|r| r.2).sum();
+    let fc: usize = rows.iter().filter(|r| r.0.starts_with("FC")).map(|r| r.2).sum();
+    fc as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_counts_match_paper() {
+        let rows = table1();
+        let expected = [
+            ("Conv0", 1728),
+            ("Conv1", 36864),
+            ("Conv2", 73728),
+            ("Conv3", 147456),
+            ("Conv4", 294912),
+            ("Conv5", 589824),
+            ("Conv6", 589824),
+            ("FC0", 4194304),
+            ("FC1", 1048576),
+            ("FC2", 10240),
+        ];
+        assert_eq!(rows.len(), expected.len());
+        for ((name, _, count), (ename, ecount)) in rows.iter().zip(expected.iter()) {
+            assert_eq!(name, ename);
+            assert_eq!(count, ecount, "{name}");
+        }
+    }
+
+    #[test]
+    fn fc_fraction_is_75_17_percent() {
+        let f = fc_weight_fraction() * 100.0;
+        assert!((f - 75.17).abs() < 0.05, "{f}");
+    }
+
+    #[test]
+    fn shapes_infer_end_to_end() {
+        use crate::model::dims::resize;
+        let mut d = vec![32, 32, 3];
+        for l in vgg11().flatten() {
+            d = resize(l, &d).unwrap();
+        }
+        assert_eq!(d, vec![10]);
+    }
+
+    #[test]
+    fn ten_trainable_layers() {
+        assert_eq!(table1().len(), 10);
+    }
+}

@@ -1,0 +1,262 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `artifacts/manifest.txt` is a plain-text inventory:
+//!
+//! ```text
+//! splitbrain-artifacts v1
+//! batch 32
+//! mp_sizes 1,2,4,8
+//! ...
+//! artifact conv_fwd file=conv_fwd.hlo.txt sha256=...
+//! in cw0 float32 3,3,3,64
+//! ...
+//! out act float32 32,4096
+//! end
+//! ```
+//!
+//! The Rust side validates every execution call against these
+//! signatures, so a stale artifacts/ directory fails loudly instead of
+//! feeding wrong-shaped literals into PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::DType;
+
+/// Name + dtype + shape of one artifact input or output.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(tokens: &[&str]) -> Result<TensorSpec> {
+        if tokens.len() != 3 {
+            bail!("bad tensor spec: {tokens:?}");
+        }
+        let dtype = DType::parse(tokens[1])?;
+        let shape = if tokens[2] == "scalar" {
+            vec![]
+        } else {
+            tokens[2]
+                .split(',')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { name: tokens[0].to_string(), dtype, shape })
+    }
+}
+
+/// One AOT-lowered segment: file plus full I/O signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest: header fields + artifact table.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub mp_sizes: Vec<usize>,
+    pub feature_dim: usize,
+    pub num_classes: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for unit testing).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut batch = 0usize;
+        let mut mp_sizes = Vec::new();
+        let mut feature_dim = 0usize;
+        let mut num_classes = 0usize;
+        let mut artifacts = BTreeMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let tok: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("manifest line {}: {line:?}", lineno + 1);
+            match tok[0] {
+                "splitbrain-artifacts" => {
+                    if tok.get(1) != Some(&"v1") {
+                        bail!("unsupported manifest version: {line}");
+                    }
+                }
+                "batch" => batch = tok[1].parse().with_context(ctx)?,
+                "mp_sizes" => {
+                    mp_sizes = tok[1]
+                        .split(',')
+                        .map(|s| s.parse::<usize>().context("mp size"))
+                        .collect::<Result<Vec<_>>>()?
+                }
+                "feature_dim" => feature_dim = tok[1].parse().with_context(ctx)?,
+                "num_classes" => num_classes = tok[1].parse().with_context(ctx)?,
+                "pallas_conv" => {}
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("nested artifact at line {}", lineno + 1);
+                    }
+                    let name = tok[1].to_string();
+                    let mut file = String::new();
+                    let mut sha256 = String::new();
+                    for kv in &tok[2..] {
+                        match kv.split_once('=') {
+                            Some(("file", v)) => file = v.to_string(),
+                            Some(("sha256", v)) => sha256 = v.to_string(),
+                            _ => bail!("bad artifact attribute {kv:?}"),
+                        }
+                    }
+                    if file.is_empty() {
+                        bail!("artifact {name} missing file=");
+                    }
+                    cur = Some(ArtifactSpec {
+                        name,
+                        file: dir.join(file),
+                        sha256,
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                "in" => cur
+                    .as_mut()
+                    .with_context(ctx)?
+                    .inputs
+                    .push(TensorSpec::parse(&tok[1..]).with_context(ctx)?),
+                "out" => cur
+                    .as_mut()
+                    .with_context(ctx)?
+                    .outputs
+                    .push(TensorSpec::parse(&tok[1..]).with_context(ctx)?),
+                "end" => {
+                    let a = cur.take().with_context(ctx)?;
+                    artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("unknown manifest keyword {other:?} at line {}", lineno + 1),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest ended inside an artifact block");
+        }
+        if batch == 0 || artifacts.is_empty() {
+            bail!("manifest missing batch size or artifacts");
+        }
+        Ok(Manifest { dir, batch, mp_sizes, feature_dim, num_classes, artifacts })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact {name:?} not in manifest (have: {:?}) — re-run `make artifacts`",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// True if shard segments for MP group size `k` were lowered.
+    pub fn supports_mp(&self, k: usize) -> bool {
+        k == 1 || self.artifacts.contains_key(&format!("fc0_fwd_k{k}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+splitbrain-artifacts v1
+batch 8
+mp_sizes 1,2
+feature_dim 4096
+num_classes 10
+artifact conv_fwd file=conv_fwd.hlo.txt sha256=abcd
+in cw0 float32 3,3,3,64
+in x float32 8,32,32,3
+out act float32 8,4096
+end
+artifact head_step file=head_step.hlo.txt
+in fw2 float32 1024,10
+in labels int32 8
+out loss float32 scalar
+end
+";
+
+    #[test]
+    fn parses_header_and_artifacts() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.mp_sizes, vec![1, 2]);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("conv_fwd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].shape, vec![8, 32, 32, 3]);
+        assert_eq!(a.sha256, "abcd");
+    }
+
+    #[test]
+    fn scalar_shape_is_empty() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let h = m.get("head_step").unwrap();
+        assert_eq!(h.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(h.outputs[0].numel(), 1);
+    }
+
+    #[test]
+    fn i32_dtype_parsed() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.get("head_step").unwrap().inputs[1].dtype, DType::I32);
+    }
+
+    #[test]
+    fn supports_mp_checks_artifacts() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(m.supports_mp(1));
+        assert!(!m.supports_mp(2)); // no fc0_fwd_k2 in SAMPLE
+    }
+
+    #[test]
+    fn unknown_artifact_error_mentions_make() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line", PathBuf::new()).is_err());
+        assert!(Manifest::parse("splitbrain-artifacts v2", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_artifact() {
+        let bad = "splitbrain-artifacts v1\nbatch 8\nartifact x file=x.hlo\nin a float32 1";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+}

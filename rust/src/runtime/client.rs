@@ -1,0 +1,206 @@
+//! PJRT CPU client + executable cache.
+//!
+//! One client is shared by the whole simulated cluster: on the CPU
+//! backend PJRT executions are serialized by the simulator anyway (each
+//! worker's segment time is measured individually and composed on the
+//! simulated clock — see `coordinator::cluster`), and sharing means each
+//! artifact is compiled exactly once per process.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative (calls, seconds) for profiling.
+    profile: RefCell<(u64, f64)>,
+}
+
+impl Executable {
+    /// Execute with shape-checked host tensors; returns the unwrapped
+    /// output tuple as host tensors.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let start = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .context("device -> host transfer")?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let parts = lit.decompose_tuple().context("decompose output tuple")?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, p) in parts.iter().enumerate() {
+            let t = HostTensor::from_literal(p)
+                .with_context(|| format!("output {i} of {}", self.spec.name))?;
+            outs.push(t);
+        }
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        let dt = start.elapsed().as_secs_f64();
+        let mut prof = self.profile.borrow_mut();
+        prof.0 += 1;
+        prof.1 += dt;
+        Ok(outs)
+    }
+
+    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs ({:?}), got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                self.spec.inputs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(self.spec.inputs.iter()).enumerate() {
+            if t.shape != s.shape || t.dtype != s.dtype {
+                bail!(
+                    "{} input {i} ({}): expected {:?} {:?}, got {:?} {:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    t.dtype,
+                    t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// (calls, cumulative seconds) since load.
+    pub fn profile(&self) -> (u64, f64) {
+        *self.profile.borrow()
+    }
+}
+
+/// The runtime: PJRT CPU client, manifest, and lazily compiled
+/// executables keyed by artifact name.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    calib: RefCell<HashMap<String, f64>>,
+}
+
+impl RuntimeClient {
+    /// Load the manifest from `dir` and connect the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<RuntimeClient> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calib: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Platform string, e.g. "cpu" (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = spec.file.to_str().context("artifact path utf-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling {name}"))?;
+        let e = Rc::new(Executable { spec, exe, profile: RefCell::new((0, 0.0)) });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Convenience: run artifact `name` on `inputs`.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.executable(name)?.run(inputs)
+    }
+
+    /// Calibrated per-call seconds for an artifact: measured once per
+    /// process (dummy inputs, 1 warmup + `runs` timed), then cached —
+    /// the calibrated simulator and the planner share these numbers.
+    pub fn calibrated_secs(&self, name: &str, runs: usize) -> Result<f64> {
+        if let Some(&t) = self.calib.borrow().get(name) {
+            return Ok(t);
+        }
+        use super::tensor::DType;
+        use crate::util::Rng;
+        let exe = self.executable(name)?;
+        let mut rng = Rng::new(0xCA11B);
+        let inputs: Vec<HostTensor> = exe
+            .spec()
+            .inputs
+            .iter()
+            .map(|s| match s.dtype {
+                DType::F32 => HostTensor::f32(s.shape.clone(), rng.normal_vec(s.numel(), 0.02)),
+                DType::I32 => HostTensor::i32(
+                    s.shape.clone(),
+                    (0..s.numel()).map(|i| (i % 10) as i32).collect(),
+                ),
+            })
+            .collect();
+        exe.run(&inputs)?; // warmup
+        // Min over runs: robust to transient host contention (the
+        // quantity modeled is the artifact's intrinsic cost).
+        let mut per = f64::INFINITY;
+        for _ in 0..runs.max(1) {
+            let start = Instant::now();
+            exe.run(&inputs)?;
+            per = per.min(start.elapsed().as_secs_f64());
+        }
+        self.calib.borrow_mut().insert(name.to_string(), per);
+        Ok(per)
+    }
+
+    /// Profiling snapshot: (artifact, calls, cumulative secs), sorted by
+    /// cumulative time descending. Drives the §Perf analysis.
+    pub fn profile_report(&self) -> Vec<(String, u64, f64)> {
+        let mut rows: Vec<(String, u64, f64)> = self
+            .cache
+            .borrow()
+            .iter()
+            .map(|(k, e)| {
+                let (calls, secs) = e.profile();
+                (k.clone(), calls, secs)
+            })
+            .collect();
+        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        rows
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
+//! from the Rust hot path. Python never runs here.
+//!
+//! The interchange format is HLO *text* (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+//!
+//! - [`tensor`] — host-side f32/i32 tensors and Literal conversion
+//! - [`artifacts`] — manifest parser (artifact names, files, signatures)
+//! - [`client`] — PJRT CPU client + compiled-executable cache
+
+pub mod artifacts;
+pub mod client;
+pub mod tensor;
+
+pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::{Executable, RuntimeClient};
+pub use tensor::{DType, HostTensor};

@@ -1,0 +1,283 @@
+//! Host-side tensors: the coordinator's working representation.
+//!
+//! Parameters, activations and gradients live on the host as flat `f32`
+//! (or `i32`) buffers with explicit shapes; they cross into PJRT as
+//! `xla::Literal`s at segment-execution boundaries. On the CPU backend
+//! this is a memcpy — the simulator charges it to compute time, which is
+//! faithful to the paper's CPU workers.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a [`HostTensor`]. The SplitBrain model is f32
+/// throughout; labels are i32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// A dense host tensor. `data` holds f32 values for F32 and bit-cast
+/// i32 values for I32 (kept in one enum-free struct so staging buffers
+/// can be pooled).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    f32_data: Vec<f32>,
+    i32_data: Vec<i32>,
+}
+
+impl HostTensor {
+    /// New f32 tensor from shape + data.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        HostTensor { dtype: DType::F32, shape, f32_data: data, i32_data: Vec::new() }
+    }
+
+    /// New i32 tensor from shape + data.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { dtype: DType::I32, shape, f32_data: Vec::new(), i32_data: data }
+    }
+
+    /// All-zeros f32 tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        debug_assert_eq!(self.dtype, DType::F32);
+        &self.f32_data
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        debug_assert_eq!(self.dtype, DType::F32);
+        &mut self.f32_data
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        debug_assert_eq!(self.dtype, DType::I32);
+        &self.i32_data
+    }
+
+    /// Scalar value of a 0-d / 1-element f32 tensor.
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "scalar() on shape {:?}", self.shape);
+        match self.dtype {
+            DType::F32 => self.f32_data[0],
+            DType::I32 => self.i32_data[0] as f32,
+        }
+    }
+
+    /// Convert to a PJRT literal with the right shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self.dtype {
+            DType::F32 => xla::Literal::vec1(&self.f32_data),
+            DType::I32 => xla::Literal::vec1(&self.i32_data),
+        };
+        if dims.is_empty() {
+            // rank-0: reshape a 1-element vec to scalar shape
+            lit.reshape(&[]).context("reshape to scalar")
+        } else {
+            lit.reshape(&dims).context("reshape literal")
+        }
+    }
+
+    /// Build from a PJRT literal (f32 or i32 arrays only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().context("literal to f32 vec")?;
+                Ok(HostTensor::f32(dims, data))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().context("literal to i32 vec")?;
+                Ok(HostTensor::i32(dims, data))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Row-slice [lo, hi) along axis 0 (batch axis) — used by the modulo
+    /// layer to extract B/K example blocks.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> HostTensor {
+        assert!(self.dtype == DType::F32, "slice_rows on f32 only");
+        assert!(!self.shape.is_empty() && lo <= hi && hi <= self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        HostTensor::f32(shape, self.f32_data[lo * row..hi * row].to_vec())
+    }
+
+    /// Overwrite rows [lo, lo+src.rows) with `src` (modulo-layer gather).
+    pub fn set_rows(&mut self, lo: usize, src: &HostTensor) {
+        assert_eq!(self.dtype, DType::F32);
+        assert_eq!(&self.shape[1..], &src.shape[1..], "row shapes differ");
+        let row: usize = self.shape[1..].iter().product();
+        let n = src.shape[0];
+        assert!(lo + n <= self.shape[0]);
+        self.f32_data[lo * row..(lo + n) * row].copy_from_slice(&src.f32_data);
+    }
+
+    /// Column-slice [lo, hi) along the last axis of a 2-D tensor — used
+    /// by shard layers to split full-width activations/gradients.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> HostTensor {
+        assert_eq!(self.dtype, DType::F32);
+        assert_eq!(self.shape.len(), 2, "slice_cols on 2-D only");
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        assert!(lo <= hi && hi <= cols);
+        let mut out = Vec::with_capacity(rows * (hi - lo));
+        for r in 0..rows {
+            out.extend_from_slice(&self.f32_data[r * cols + lo..r * cols + hi]);
+        }
+        HostTensor::f32(vec![rows, hi - lo], out)
+    }
+
+    /// Write `src` into columns [lo, lo+src.cols) of a 2-D tensor —
+    /// the shard-layer allgather destination.
+    pub fn set_cols(&mut self, lo: usize, src: &HostTensor) {
+        assert_eq!(self.dtype, DType::F32);
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(src.shape.len(), 2);
+        assert_eq!(self.shape[0], src.shape[0]);
+        let (rows, cols, scols) = (self.shape[0], self.shape[1], src.shape[1]);
+        assert!(lo + scols <= cols);
+        for r in 0..rows {
+            self.f32_data[r * cols + lo..r * cols + lo + scols]
+                .copy_from_slice(&src.f32_data[r * scols..(r + 1) * scols]);
+        }
+    }
+
+    /// In-place elementwise add (gradient reduction).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape);
+        assert_eq!(self.dtype, DType::F32);
+        for (a, b) in self.f32_data.iter_mut().zip(other.f32_data.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// In-place scale (gradient /K compensation, averaging).
+    pub fn scale(&mut self, s: f32) {
+        for v in self.f32_data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Max |a - b| — test helper.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.f32_data
+            .iter()
+            .zip(other.f32_data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2x3() -> HostTensor {
+        HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.])
+    }
+
+    #[test]
+    fn numel_and_bytes() {
+        let t = t2x3();
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.size_bytes(), 24);
+    }
+
+    #[test]
+    fn slice_rows_extracts_block() {
+        let t = t2x3();
+        let r = t.slice_rows(1, 2);
+        assert_eq!(r.shape, vec![1, 3]);
+        assert_eq!(r.as_f32(), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn set_rows_writes_block() {
+        let mut t = HostTensor::zeros(vec![3, 2]);
+        t.set_rows(1, &HostTensor::f32(vec![1, 2], vec![7., 8.]));
+        assert_eq!(t.as_f32(), &[0., 0., 7., 8., 0., 0.]);
+    }
+
+    #[test]
+    fn slice_cols_extracts_partition() {
+        let t = t2x3();
+        let c = t.slice_cols(1, 3);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.as_f32(), &[2., 3., 5., 6.]);
+    }
+
+    #[test]
+    fn set_cols_roundtrip() {
+        let t = t2x3();
+        let mut out = HostTensor::zeros(vec![2, 3]);
+        out.set_cols(0, &t.slice_cols(0, 1));
+        out.set_cols(1, &t.slice_cols(1, 3));
+        assert_eq!(out.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = t2x3();
+        a.add_assign(&t2x3());
+        a.scale(0.5);
+        assert_eq!(a.as_f32(), t2x3().as_f32());
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let t = HostTensor::f32(vec![], vec![3.5]);
+        assert_eq!(t.scalar(), 3.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = t2x3();
+        let mut b = t2x3();
+        b.as_f32_mut()[4] += 0.25;
+        assert_eq!(a.max_abs_diff(&b), 0.25);
+    }
+}

@@ -1,0 +1,169 @@
+//! Checkpointing: save/restore the *global* model (full conv replica +
+//! reconstructed full FC stack) in a self-describing binary format.
+//!
+//! The format is deliberately simple and versioned:
+//!
+//! ```text
+//! magic   "SBCKPT1\n"
+//! u32     tensor count
+//! per tensor:
+//!   u32 name_len, name bytes (utf-8)
+//!   u32 rank, u64 dims[rank]
+//!   f32 data[numel]            (little-endian)
+//! ```
+//!
+//! Workers re-shard on restore, so a checkpoint taken at one (N, mp)
+//! can resume at any other — the practical payoff of keeping the
+//! checkpoint in global-model coordinates.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+const MAGIC: &[u8; 8] = b"SBCKPT1\n";
+
+/// Save named tensors.
+pub fn save(path: impl AsRef<Path>, tensors: &[(String, &HostTensor)]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.as_f32() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load all tensors, in file order.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a splitbrain checkpoint (bad magic {magic:?})");
+    }
+    let mut u32b = [0u8; 4];
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b) as usize;
+    if count > 10_000 {
+        bail!("implausible tensor count {count}");
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut u32b)?;
+        let name_len = u32::from_le_bytes(u32b) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name utf-8")?;
+        f.read_exact(&mut u32b)?;
+        let rank = u32::from_le_bytes(u32b) as usize;
+        if rank > 8 {
+            bail!("implausible rank {rank} for {name}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            f.read_exact(&mut u64b)?;
+            shape.push(u64::from_le_bytes(u64b) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let mut buf = [0u8; 4];
+        for v in data.iter_mut() {
+            f.read_exact(&mut buf)?;
+            *v = f32::from_le_bytes(buf);
+        }
+        out.push((name, HostTensor::f32(shape, data)));
+    }
+    Ok(out)
+}
+
+/// Canonical names for the SplitBrain global model: cw0/cb0..cw6/cb6,
+/// fw0/fb0..fw2/fb2 — matching the artifact manifest's input names.
+pub fn model_names() -> Vec<String> {
+    let mut names = Vec::new();
+    for i in 0..7 {
+        names.push(format!("cw{i}"));
+        names.push(format!("cb{i}"));
+    }
+    for i in 0..3 {
+        names.push(format!("fw{i}"));
+        names.push(format!("fb{i}"));
+    }
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("splitbrain-ckpt-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let a = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = HostTensor::f32(vec![4], vec![-1., 0., 1., 2.]);
+        let path = tmp("roundtrip");
+        save(&path, &[("alpha".into(), &a), ("beta".into(), &b)]).unwrap();
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, "alpha");
+        assert_eq!(loaded[0].1.shape, vec![2, 3]);
+        assert_eq!(loaded[0].1.as_f32(), a.as_f32());
+        assert_eq!(loaded[1].1.as_f32(), b.as_f32());
+    }
+
+    #[test]
+    fn scalar_tensor_roundtrip() {
+        let s = HostTensor::f32(vec![], vec![42.0]);
+        let path = tmp("scalar");
+        save(&path, &[("s".into(), &s)]).unwrap();
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded[0].1.scalar(), 42.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("bad magic"));
+    }
+
+    #[test]
+    fn missing_file_is_context_error() {
+        assert!(load("/nonexistent/ckpt.bin").is_err());
+    }
+
+    #[test]
+    fn model_names_cover_20_tensors() {
+        let names = model_names();
+        assert_eq!(names.len(), 20);
+        assert_eq!(names[0], "cw0");
+        assert_eq!(names[19], "fb2");
+    }
+}

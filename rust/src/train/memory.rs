@@ -1,0 +1,134 @@
+//! Per-worker memory accounting — the x-axis of Fig. 7c.
+//!
+//! SplitBrain's memory win comes from FC shards: a worker holds
+//! parameters + gradients + optimizer state for its *transformed*
+//! network (conv replica + FC/K shards + replicated FC2), plus the
+//! activation staging the modulo/shard layers need.
+
+use crate::coordinator::scheme::McastScheme;
+use crate::model::{Layer, TransformedNet};
+
+/// Byte-level breakdown of one worker's training footprint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryReport {
+    /// Parameters (weights + biases), bytes.
+    pub params: usize,
+    /// Gradients, bytes (same shapes as params).
+    pub grads: usize,
+    /// Optimizer (momentum) state, bytes.
+    pub optimizer: usize,
+    /// Activation staging: local acts + assembled batch + shard
+    /// gather/scatter buffers, bytes.
+    pub activations: usize,
+}
+
+impl MemoryReport {
+    /// Account a transformed per-worker network at batch size `b`
+    /// (SplitBrain's default B/K scheme).
+    pub fn of(net: &TransformedNet, b: usize) -> MemoryReport {
+        Self::of_scheme(net, b, McastScheme::BoverK)
+    }
+
+    /// Scheme-aware accounting: scheme BK stages the aggregated B*K
+    /// batch at the modulo boundary and runs the FC stack at B*K rows —
+    /// the memory objection of §3.1.
+    pub fn of_scheme(net: &TransformedNet, b: usize, scheme: McastScheme) -> MemoryReport {
+        let params = net.param_count() * 4;
+        let k = net.mp.max(1);
+        let fcb = scheme.fc_batch(b, k);
+        let mut activations = 0usize;
+        let mut past_modulo = false;
+        for l in &net.layers {
+            match l {
+                // Modulo staging per the scheme (local acts, gradient
+                // accumulator, assembled batch).
+                Layer::Modulo { dim } => {
+                    activations += scheme.staging_floats(b, k, *dim) * 4;
+                    past_modulo = true;
+                }
+                // Shard staging: one full-width gather destination at
+                // the FC-stack batch size.
+                Layer::Shard { dim_full, .. } => activations += fcb * dim_full * 4,
+                // FC outputs kept for bprop (FC batch above the modulo).
+                Layer::Linear { dout, .. } => {
+                    let rows = if past_modulo { fcb } else { b };
+                    activations += rows * dout * 4;
+                }
+                _ => {}
+            }
+        }
+        MemoryReport { params, grads: params, optimizer: params, activations }
+    }
+
+    /// Total bytes.
+    pub fn total(&self) -> usize {
+        self.params + self.grads + self.optimizer + self.activations
+    }
+
+    /// Parameter-only megabytes (the paper's Fig. 7c axis is parameter
+    /// memory).
+    pub fn param_mb(&self) -> f64 {
+        self.params as f64 / (1024.0 * 1024.0)
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total() as f64 / (1024.0 * 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{partition_network, vgg11, PartitionConfig};
+
+    fn report(mp: usize) -> MemoryReport {
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )
+        .unwrap();
+        MemoryReport::of(&net, 32)
+    }
+
+    #[test]
+    fn memory_decreases_with_mp() {
+        let m1 = report(1);
+        let m2 = report(2);
+        let m8 = report(8);
+        assert!(m2.params < m1.params);
+        assert!(m8.params < m2.params);
+    }
+
+    #[test]
+    fn params_match_table1_at_mp1() {
+        let m = report(1);
+        // 6,987,456 weights + 3,210 biases, 4 bytes each.
+        assert_eq!(m.params, (6_987_456 + 1_152 + 2_058) * 4);
+    }
+
+    #[test]
+    fn paper_67_percent_claim_range() {
+        // Abstract: "saving up to 67% of memory". Parameter memory at
+        // mp=8 vs mp=1:
+        let m1 = report(1).params as f64;
+        let m8 = report(8).params as f64;
+        let saving = 1.0 - m8 / m1;
+        assert!(saving > 0.60 && saving < 0.70, "saving {saving}");
+    }
+
+    #[test]
+    fn activations_exist_only_with_mp() {
+        // mp=1 has no modulo/shard staging.
+        let m1 = report(1);
+        let m2 = report(2);
+        assert!(m2.activations > m1.activations);
+    }
+
+    #[test]
+    fn total_is_sum() {
+        let m = report(2);
+        assert_eq!(m.total(), m.params + m.grads + m.optimizer + m.activations);
+        assert!(m.param_mb() > 0.0 && m.total_mb() > m.param_mb());
+    }
+}

@@ -1,0 +1,155 @@
+//! Step- and run-level metrics: simulated wall time split into compute
+//! vs communication, loss, and the images/sec the paper's Table 2
+//! reports.
+
+use crate::comm::CommTrace;
+use crate::util::Stats;
+
+/// One training step's accounting (simulated cluster clock).
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    /// Slowest worker's measured compute seconds (PJRT + host math).
+    pub compute_secs: f64,
+    /// Modeled wire seconds for the MP exchanges of this step.
+    pub mp_comm_secs: f64,
+    /// Modeled wire seconds for DP/shard averaging (0 on non-averaging
+    /// steps).
+    pub dp_comm_secs: f64,
+    /// Mean loss across workers (NaN in calibrated mode).
+    pub loss: f64,
+}
+
+impl StepMetrics {
+    /// Simulated wall-clock of the step (BSP: compute then comm phases).
+    pub fn step_secs(&self) -> f64 {
+        self.compute_secs + self.mp_comm_secs + self.dp_comm_secs
+    }
+}
+
+/// Aggregated over a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub n_workers: usize,
+    pub mp: usize,
+    pub batch: usize,
+    pub steps: usize,
+    pub compute: Stats,
+    pub mp_comm: Stats,
+    pub dp_comm: Stats,
+    pub losses: Vec<f64>,
+    pub trace: CommTrace,
+}
+
+impl TrainReport {
+    pub fn new(n_workers: usize, mp: usize, batch: usize) -> TrainReport {
+        TrainReport {
+            n_workers,
+            mp,
+            batch,
+            steps: 0,
+            compute: Stats::new(),
+            mp_comm: Stats::new(),
+            dp_comm: Stats::new(),
+            losses: Vec::new(),
+            trace: CommTrace::new(),
+        }
+    }
+
+    pub fn push(&mut self, m: &StepMetrics) {
+        self.steps += 1;
+        self.compute.push(m.compute_secs);
+        self.mp_comm.push(m.mp_comm_secs);
+        self.dp_comm.push(m.dp_comm_secs);
+        if m.loss.is_finite() {
+            self.losses.push(m.loss);
+        }
+    }
+
+    /// Mean simulated step time.
+    pub fn step_secs(&self) -> f64 {
+        self.compute.mean() + self.mp_comm.mean() + self.dp_comm.mean()
+    }
+
+    /// The Table 2 metric: cluster-wide images per simulated second.
+    pub fn images_per_sec(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        (self.n_workers * self.batch) as f64 / self.step_secs()
+    }
+
+    /// Fraction of step time spent communicating (Fig. 7b's y-axis).
+    pub fn comm_fraction(&self) -> f64 {
+        let s = self.step_secs();
+        if s == 0.0 {
+            0.0
+        } else {
+            (self.mp_comm.mean() + self.dp_comm.mean()) / s
+        }
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.losses.last().copied()
+    }
+
+    /// Mean loss over the last `n` recorded steps.
+    pub fn tail_loss(&self, n: usize) -> Option<f64> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        Some(tail.iter().sum::<f64>() / tail.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(c: f64, mpc: f64, dpc: f64, loss: f64) -> StepMetrics {
+        StepMetrics { compute_secs: c, mp_comm_secs: mpc, dp_comm_secs: dpc, loss }
+    }
+
+    #[test]
+    fn images_per_sec() {
+        let mut r = TrainReport::new(8, 2, 32);
+        for _ in 0..10 {
+            r.push(&step(0.1, 0.0, 0.0, 1.0));
+        }
+        // 8 workers * 32 images / 0.1 s = 2560 img/s.
+        assert!((r.images_per_sec() - 2560.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn comm_fraction() {
+        let mut r = TrainReport::new(2, 2, 4);
+        r.push(&step(0.06, 0.03, 0.01, 1.0));
+        assert!((r.comm_fraction() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_losses_skipped() {
+        let mut r = TrainReport::new(1, 1, 4);
+        r.push(&step(0.1, 0.0, 0.0, f64::NAN));
+        r.push(&step(0.1, 0.0, 0.0, 2.0));
+        assert_eq!(r.losses.len(), 1);
+        assert_eq!(r.final_loss(), Some(2.0));
+    }
+
+    #[test]
+    fn tail_loss_averages() {
+        let mut r = TrainReport::new(1, 1, 4);
+        for l in [4.0, 3.0, 2.0, 1.0] {
+            r.push(&step(0.1, 0.0, 0.0, l));
+        }
+        assert_eq!(r.tail_loss(2), Some(1.5));
+        assert_eq!(r.tail_loss(100), Some(2.5));
+    }
+
+    #[test]
+    fn empty_report_safe() {
+        let r = TrainReport::new(1, 1, 4);
+        assert_eq!(r.images_per_sec(), 0.0);
+        assert_eq!(r.final_loss(), None);
+    }
+}

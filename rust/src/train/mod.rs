@@ -1,0 +1,12 @@
+//! Training support: the SGD optimizer the workers run locally, the
+//! throughput/overhead metrics the benches report, and the per-worker
+//! memory accounting behind Fig. 7c.
+
+pub mod checkpoint;
+pub mod memory;
+pub mod metrics;
+pub mod sgd;
+
+pub use memory::MemoryReport;
+pub use metrics::{StepMetrics, TrainReport};
+pub use sgd::Sgd;

@@ -1,0 +1,156 @@
+//! Mini-batch SGD with momentum — the optimizer of §4, run locally by
+//! every worker on its own (replica or shard) parameters.
+//!
+//! Runs on the host: parameter updates are elementwise axpy over flat
+//! buffers, negligible next to the PJRT segments but still charged to
+//! the worker's compute clock by the cluster driver.
+
+use crate::runtime::HostTensor;
+
+/// SGD hyperparameters + per-tensor momentum state.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Global-norm gradient clip (0 = off). VGG without batch norm is
+    /// twitchy at practical learning rates; the paper-era recipe is
+    /// clipping or warmup — we clip.
+    pub clip_norm: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Sgd {
+        Sgd { lr, momentum, weight_decay, clip_norm: 0.0, velocity: Vec::new() }
+    }
+
+    pub fn with_clip(mut self, clip_norm: f32) -> Sgd {
+        self.clip_norm = clip_norm;
+        self
+    }
+
+    /// Update `params[i] -= lr * (grads[i] + wd*params[i])` with
+    /// momentum and optional global-norm clipping. Velocity buffers are
+    /// allocated lazily on first call.
+    pub fn step(&mut self, params: &mut [HostTensor], grads: &[HostTensor]) {
+        assert_eq!(params.len(), grads.len());
+        if self.velocity.is_empty() {
+            self.velocity = params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        }
+        assert_eq!(self.velocity.len(), params.len());
+        let mut scale = 1.0f32;
+        if self.clip_norm > 0.0 {
+            let sq: f64 = grads
+                .iter()
+                .flat_map(|g| g.as_f32().iter())
+                .map(|&v| (v as f64) * (v as f64))
+                .sum();
+            let norm = sq.sqrt() as f32;
+            if norm > self.clip_norm && norm.is_finite() {
+                scale = self.clip_norm / norm;
+            }
+        }
+        for ((p, g), v) in params.iter_mut().zip(grads.iter()).zip(self.velocity.iter_mut()) {
+            assert_eq!(p.shape, g.shape, "param/grad shape mismatch");
+            let pd = p.as_f32_mut();
+            let gd = g.as_f32();
+            for i in 0..pd.len() {
+                let grad = gd[i] * scale + self.weight_decay * pd[i];
+                v[i] = self.momentum * v[i] + grad;
+                pd[i] -= self.lr * v[i];
+            }
+        }
+    }
+
+    /// Bytes of optimizer state per parameter buffer set (for the
+    /// memory report): one f32 velocity per parameter.
+    pub fn state_bytes(params_numel: usize) -> usize {
+        params_numel * 4
+    }
+
+    /// Reset momentum (used when parameters are overwritten by model
+    /// averaging with reset semantics).
+    pub fn reset(&mut self) {
+        for v in &mut self.velocity {
+            v.fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(vals: &[f32]) -> HostTensor {
+        HostTensor::f32(vec![vals.len()], vals.to_vec())
+    }
+
+    #[test]
+    fn plain_sgd_descends() {
+        let mut opt = Sgd::new(0.1, 0.0, 0.0);
+        let mut params = vec![p(&[1.0, -2.0])];
+        let grads = vec![p(&[0.5, -0.5])];
+        opt.step(&mut params, &grads);
+        assert_eq!(params[0].as_f32(), &[0.95, -1.95]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(0.1, 0.9, 0.0);
+        let mut params = vec![p(&[0.0])];
+        let grads = vec![p(&[1.0])];
+        opt.step(&mut params, &grads); // v=1, p=-0.1
+        opt.step(&mut params, &grads); // v=1.9, p=-0.29
+        assert!((params[0].as_f32()[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut opt = Sgd::new(0.1, 0.0, 0.1);
+        let mut params = vec![p(&[1.0])];
+        let grads = vec![p(&[0.0])];
+        opt.step(&mut params, &grads);
+        assert!((params[0].as_f32()[0] - 0.99).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_clears_momentum() {
+        let mut opt = Sgd::new(0.1, 0.9, 0.0);
+        let mut params = vec![p(&[0.0])];
+        let grads = vec![p(&[1.0])];
+        opt.step(&mut params, &grads);
+        opt.reset();
+        let before = params[0].as_f32()[0];
+        opt.step(&mut params, &vec![p(&[0.0])]);
+        assert_eq!(params[0].as_f32()[0], before, "no ghost momentum");
+    }
+
+    #[test]
+    fn clipping_rescales_large_gradients() {
+        let mut opt = Sgd::new(1.0, 0.0, 0.0).with_clip(1.0);
+        let mut params = vec![p(&[0.0, 0.0])];
+        // |g| = 5 -> scaled to unit norm.
+        let grads = vec![p(&[3.0, 4.0])];
+        opt.step(&mut params, &grads);
+        let out = params[0].as_f32();
+        assert!((out[0] + 0.6).abs() < 1e-6 && (out[1] + 0.8).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn clipping_leaves_small_gradients_alone() {
+        let mut opt = Sgd::new(1.0, 0.0, 0.0).with_clip(10.0);
+        let mut params = vec![p(&[0.0])];
+        opt.step(&mut params, &vec![p(&[0.5])]);
+        assert!((params[0].as_f32()[0] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let mut opt = Sgd::new(0.1, 0.0, 0.0);
+        let mut params = vec![p(&[1.0, 2.0])];
+        let grads = vec![p(&[1.0])];
+        opt.step(&mut params, &grads);
+    }
+}

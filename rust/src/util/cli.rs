@@ -1,0 +1,153 @@
+//! Minimal CLI flag parser (the offline registry has no clap).
+//!
+//! Supports `--flag value`, `--flag=value` and bare boolean `--flag`,
+//! plus positional arguments. Typed getters with defaults keep the
+//! binaries' argument handling one-liners.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — `--k v`, `--k=v`,
+    /// bare `--k` (boolean true), positionals.
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(stripped.to_string(), v);
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    /// Parse the process arguments (argv[1..]).
+    pub fn from_env() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}: not an integer")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}: not a float")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}: not an integer")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{key} {v:?}: not a boolean"),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--machines 1,2,4,8`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().with_context(|| format!("--{key}: bad element {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = args("train --workers 8 --mp=2 --verbose --lr 0.05");
+        assert_eq!(a.positional(0), Some("train"));
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 8);
+        assert_eq!(a.usize_or("mp", 1).unwrap(), 2);
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert!((a.f32_or("lr", 0.0).unwrap() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("run");
+        assert_eq!(a.usize_or("workers", 4).unwrap(), 4);
+        assert_eq!(a.str_or("mode", "numeric"), "numeric");
+        assert!(!a.bool_or("calibrated", false).unwrap());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = args("--machines 1,2,4,8");
+        assert_eq!(a.usize_list_or("machines", &[]).unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list_or("mps", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = args("--workers abc");
+        assert!(a.usize_or("workers", 1).is_err());
+        let b = args("--flag maybe");
+        assert!(b.bool_or("flag", false).is_err());
+    }
+
+    #[test]
+    fn boolean_before_positional_consumes_next() {
+        // Known quirk of simple parsers: `--flag value` binds value.
+        let a = args("--dry-run cmd");
+        assert_eq!(a.str_or("dry-run", ""), "cmd");
+    }
+}

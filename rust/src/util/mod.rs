@@ -1,0 +1,18 @@
+//! Small self-contained utilities: deterministic RNG, streaming stats,
+//! wall-clock timers and monospace table rendering.
+//!
+//! The offline build environment has no access to `rand`, `criterion` or
+//! `prettytable`, so these are hand-rolled — which also keeps every
+//! simulator run bit-reproducible from a seed.
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use cli::Args;
+pub use rng::Rng;
+pub use stats::Stats;
+pub use table::Table;
+pub use timer::Timer;

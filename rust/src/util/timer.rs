@@ -1,0 +1,75 @@
+//! Wall-clock timing helpers for compute calibration and benches.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/elapsed timer.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Pretty-print a duration in adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.1}µs", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_duration(2.5), "2.50s");
+        assert_eq!(fmt_duration(0.0025), "2.50ms");
+        assert_eq!(fmt_duration(0.0000025), "2.5µs");
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(1));
+        let first = t.restart();
+        assert!(first.as_secs_f64() > 0.0);
+        assert!(t.elapsed_secs() < first.as_secs_f64() + 1.0);
+    }
+}

@@ -1,0 +1,334 @@
+//! End-to-end cluster integration through PJRT: the decomposition
+//! theorem (hybrid DP x MP == monolithic SGD), convergence, GMP
+//! averaging, and the analytic-vs-measured communication cross-check.
+//!
+//! Requires `make artifacts`.
+
+use std::rc::Rc;
+
+use splitbrain::comm::NetModel;
+use splitbrain::coordinator::{Cluster, ClusterConfig};
+use splitbrain::data::{BatchIter, Dataset, SyntheticCifar};
+use splitbrain::runtime::{HostTensor, RuntimeClient};
+
+fn runtime() -> Option<RuntimeClient> {
+    match RuntimeClient::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#})");
+            None
+        }
+    }
+}
+
+fn cfg(n: usize, mp: usize) -> ClusterConfig {
+    ClusterConfig {
+        n_workers: n,
+        mp,
+        lr: 0.02,
+        momentum: 0.0,
+        clip_norm: 0.0,
+        avg_period: 4,
+        seed: 99,
+        net: NetModel::default(),
+        dataset_size: 512,
+        segmented_mp1: false,
+        scheme: splitbrain::coordinator::McastScheme::BoverK,
+    }
+}
+
+fn dataset() -> Rc<dyn Dataset> {
+    Rc::new(SyntheticCifar::new(512, 99))
+}
+
+/// The decomposition theorem, end-to-end through PJRT (mirrors the
+/// python test_hybrid_matches_monolithic, but via the Rust coordinator
+/// and the AOT artifacts).
+#[test]
+fn hybrid_step_matches_monolithic_sgd() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+
+    // --- hybrid cluster: n=2, mp=2, one step ---
+    let mut hybrid = Cluster::with_dataset(&rt, cfg(2, 2), dataset()).unwrap();
+    let init_conv = hybrid.worker(0).conv_params.clone();
+    let init_fc_full = hybrid.reconstruct_full_fc(0);
+    hybrid.step().unwrap();
+
+    // --- reference: full_step per worker batch with identical init ---
+    // The workers' batches are reproducible from the same iterator setup.
+    let data = dataset();
+    let mut grads_per_worker = Vec::new();
+    for rank in 0..2 {
+        let mut it = BatchIter::new(data.clone(), b, rank, 2, 99);
+        let batch = it.next_batch();
+        let mut inputs: Vec<HostTensor> = init_conv.to_vec();
+        inputs.extend(init_fc_full.iter().cloned());
+        inputs.push(batch.images.clone());
+        inputs.push(batch.labels.clone());
+        let out = rt.run("full_step", &inputs).unwrap();
+        grads_per_worker.push(out);
+    }
+
+    // (1) conv params of hybrid worker i == init - lr * own-batch grads.
+    let lr = 0.02f32;
+    for rank in 0..2 {
+        for (pi, p0) in init_conv.iter().enumerate() {
+            let got = &hybrid.worker(rank).conv_params[pi];
+            let g = &grads_per_worker[rank][1 + pi];
+            let max_err = got
+                .as_f32()
+                .iter()
+                .zip(p0.as_f32().iter().zip(g.as_f32().iter()))
+                .map(|(got, (p, g))| (got - (p - lr * g)).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < 5e-4, "worker {rank} conv[{pi}] err {max_err}");
+        }
+    }
+
+    // (2) reconstructed FC params == init - lr * mean(worker grads).
+    // (The hybrid FC gradient over K modulo iterations averages the
+    // group's 2B examples = the mean of the two full_step grads.)
+    let fc_after = hybrid.reconstruct_full_fc(0);
+    for (fi, f0) in init_fc_full.iter().enumerate() {
+        let ga = grads_per_worker[0][15 + fi].as_f32();
+        let gb = grads_per_worker[1][15 + fi].as_f32();
+        let got = fc_after[fi].as_f32();
+        let max_err = got
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v - (f0.as_f32()[i] - lr * 0.5 * (ga[i] + gb[i]))).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 5e-4, "fc[{fi}] err {max_err}");
+    }
+}
+
+#[test]
+fn losses_match_between_hybrid_and_pure_dp_at_step_one() {
+    let Some(rt) = runtime() else { return };
+    // Same seed -> same init and same per-worker batches; the first
+    // step's mean loss must agree (before any averaging divergence).
+    let mut a = Cluster::with_dataset(&rt, cfg(2, 2), dataset()).unwrap();
+    let mut b = Cluster::with_dataset(&rt, cfg(2, 1), dataset()).unwrap();
+    let la = a.step().unwrap().loss;
+    let lb = b.step().unwrap().loss;
+    assert!((la - lb).abs() < 1e-4, "hybrid {la} vs dp {lb}");
+}
+
+#[test]
+fn loss_decreases_on_synthetic_task() {
+    let Some(rt) = runtime() else { return };
+    let mut cluster = Cluster::with_dataset(&rt, cfg(2, 2), dataset()).unwrap();
+    let report = cluster.train_steps(12).unwrap();
+    let first = report.losses[0];
+    let last = report.tail_loss(3).unwrap();
+    assert!(
+        last < first * 0.8,
+        "loss should fall: first {first}, tail {last} ({:?})",
+        report.losses
+    );
+}
+
+#[test]
+fn averaging_keeps_replicated_params_in_sync() {
+    let Some(rt) = runtime() else { return };
+    let mut c = Cluster::with_dataset(&rt, cfg(4, 2), dataset()).unwrap();
+    c.train_steps(4).unwrap(); // avg_period=4 -> averaging fired at step 4
+    let w0 = c.worker(0).conv_params[0].as_f32().to_vec();
+    for rank in 1..4 {
+        let wr = c.worker(rank).conv_params[0].as_f32();
+        let max: f32 = w0
+            .iter()
+            .zip(wr.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max < 1e-6, "rank {rank} diverged by {max} after averaging");
+    }
+}
+
+#[test]
+fn shard_averaging_syncs_same_offset_peers_only() {
+    let Some(rt) = runtime() else { return };
+    let mut c = Cluster::with_dataset(&rt, cfg(4, 2), dataset()).unwrap();
+    c.train_steps(4).unwrap();
+    // Ranks 0 and 2 share offset 0: identical shards after averaging.
+    let a = c.worker(0).fc_params[0].as_f32().to_vec();
+    let b = c.worker(2).fc_params[0].as_f32();
+    let max: f32 = a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+    assert!(max < 1e-6, "offset peers diverged by {max}");
+    // Ranks 0 and 1 hold different partitions: must differ.
+    let d = c.worker(1).fc_params[0].as_f32();
+    assert_ne!(a, d);
+}
+
+#[test]
+fn measured_bytes_match_schedule_analytics() {
+    let Some(rt) = runtime() else { return };
+    let mut c = Cluster::with_dataset(&rt, cfg(2, 2), dataset()).unwrap();
+    c.step().unwrap(); // non-averaging step
+    let (max_rank_bytes, _total) = c.last_fabric_bytes;
+    let expect = c.schedule.mp_bytes_per_member();
+    assert_eq!(
+        max_rank_bytes, expect,
+        "fabric measured {max_rank_bytes} B/rank, schedule predicts {expect}"
+    );
+}
+
+#[test]
+fn pure_dp_has_no_mp_traffic() {
+    let Some(rt) = runtime() else { return };
+    let mut c = Cluster::with_dataset(&rt, cfg(2, 1), dataset()).unwrap();
+    let m = c.step().unwrap();
+    assert_eq!(c.last_fabric_bytes.1, 0, "mp=1 must not touch the fabric");
+    assert_eq!(m.mp_comm_secs, 0.0);
+}
+
+#[test]
+fn evaluate_reports_sane_accuracy() {
+    let Some(rt) = runtime() else { return };
+    let data = dataset();
+    let mut c = Cluster::with_dataset(&rt, cfg(2, 2), data.clone()).unwrap();
+    let (loss0, acc0) = c.evaluate(&*data, 4).unwrap();
+    assert!(loss0 > 0.0 && (0.0..=1.0).contains(&acc0));
+    c.train_steps(12).unwrap();
+    let (loss1, acc1) = c.evaluate(&*data, 4).unwrap();
+    assert!(loss1 < loss0, "eval loss should improve: {loss0} -> {loss1}");
+    assert!(acc1 >= acc0, "accuracy should not regress: {acc0} -> {acc1}");
+}
+
+#[test]
+fn mp4_single_group_runs() {
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.supports_mp(4) {
+        eprintln!("SKIP: no k4 artifacts");
+        return;
+    }
+    let mut c = Cluster::with_dataset(&rt, cfg(4, 4), dataset()).unwrap();
+    let m = c.step().unwrap();
+    assert!(m.loss.is_finite() && m.loss > 0.0);
+    assert_eq!(c.last_fabric_bytes.0, c.schedule.mp_bytes_per_member());
+}
+
+#[test]
+fn segmented_mp1_baseline_matches_full_step_numerics() {
+    let Some(rt) = runtime() else { return };
+    // The segmented (Pallas-pipeline) mp=1 baseline used by the Table 2
+    // benches must be numerically identical to the fused full_step path.
+    let mut seg_cfg = cfg(2, 1);
+    seg_cfg.segmented_mp1 = true;
+    let mut a = Cluster::with_dataset(&rt, seg_cfg, dataset()).unwrap();
+    let mut b = Cluster::with_dataset(&rt, cfg(2, 1), dataset()).unwrap();
+    let la = a.step().unwrap().loss;
+    let lb = b.step().unwrap().loss;
+    assert!((la - lb).abs() < 1e-4, "segmented {la} vs fused {lb}");
+    for pi in 0..14 {
+        let d = a.worker(0).conv_params[pi].max_abs_diff(&b.worker(0).conv_params[pi]);
+        assert!(d < 5e-5, "conv[{pi}] diverged by {d}");
+    }
+    for fi in 0..6 {
+        let d = a.worker(0).fc_params[fi].max_abs_diff(&b.worker(0).fc_params[fi]);
+        assert!(d < 5e-5, "fc[{fi}] diverged by {d}");
+    }
+    // And it must not touch the fabric (K=1 exchanges are local).
+    assert_eq!(a.last_fabric_bytes.1, 0);
+}
+
+#[test]
+fn all_three_schemes_produce_identical_updates() {
+    // §3.1: BK, B and B/K are different *schedules* over the same
+    // example set — after one step every parameter must agree across
+    // schemes (modulo f32 reduction-order noise).
+    let Some(rt) = runtime() else { return };
+    use splitbrain::coordinator::McastScheme;
+    let mut params: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut losses = Vec::new();
+    for scheme in [McastScheme::BoverK, McastScheme::B, McastScheme::BK] {
+        let mut c = cfg(2, 2);
+        c.scheme = scheme;
+        let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+        let m = cluster.step().unwrap();
+        losses.push(m.loss);
+        let mut ps = Vec::new();
+        for pi in 0..14 {
+            ps.push(cluster.worker(0).conv_params[pi].as_f32().to_vec());
+        }
+        for fi in 0..6 {
+            ps.push(cluster.worker(0).fc_params[fi].as_f32().to_vec());
+        }
+        params.push(ps);
+    }
+    for s in 1..3 {
+        assert!(
+            (losses[0] - losses[s]).abs() < 1e-4,
+            "scheme {s} loss {} vs B/K {}",
+            losses[s],
+            losses[0]
+        );
+        for (ti, (a, b)) in params[0].iter().zip(params[s].iter()).enumerate() {
+            let max = a
+                .iter()
+                .zip(b.iter())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max < 5e-5, "scheme {s} tensor {ti} diverged by {max}");
+        }
+    }
+}
+
+#[test]
+fn scheme_b_and_bk_respect_schedule_bytes() {
+    let Some(rt) = runtime() else { return };
+    use splitbrain::coordinator::McastScheme;
+    // BK: uniform volumes -> max-rank fabric bytes == schedule.
+    let mut c = cfg(2, 2);
+    c.scheme = McastScheme::BK;
+    let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+    cluster.step().unwrap();
+    assert_eq!(cluster.last_fabric_bytes.0, cluster.schedule.mp_bytes_per_member());
+}
+
+#[test]
+fn checkpoint_roundtrips_across_topologies() {
+    let Some(rt) = runtime() else { return };
+    let path = std::env::temp_dir().join(format!("sb-ckpt-{}.bin", std::process::id()));
+
+    // Train a 2-worker mp=2 cluster up to an averaging boundary (the
+    // checkpoint snapshots worker 0's replica, which equals the global
+    // model exactly at averaging steps — avg_period is 4 in cfg()).
+    let mut a = Cluster::with_dataset(&rt, cfg(2, 2), dataset()).unwrap();
+    a.train_steps(4).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    let loss_a = a.step().unwrap().loss;
+
+    // Restore into a fresh cluster whose iterators are at the same
+    // position: the next step must match exactly.
+    let mut b = Cluster::with_dataset(&rt, cfg(2, 2), dataset()).unwrap();
+    b.train_steps(4).unwrap(); // advance iterators to the same position
+    b.restore_checkpoint(&path).unwrap();
+    let loss_b = b.step().unwrap().loss;
+    assert!(
+        (loss_a - loss_b).abs() < 1e-5,
+        "restored cluster diverged: {loss_a} vs {loss_b}"
+    );
+
+    // Cross-topology restore: mp=1 cluster accepts the same checkpoint.
+    let mut c = Cluster::with_dataset(&rt, cfg(2, 1), dataset()).unwrap();
+    c.restore_checkpoint(&path).unwrap();
+    let full = c.reconstruct_full_fc(0);
+    let orig = {
+        let mut x = Cluster::with_dataset(&rt, cfg(2, 2), dataset()).unwrap();
+        x.restore_checkpoint(&path).unwrap();
+        x.reconstruct_full_fc(0)
+    };
+    for (x, y) in full.iter().zip(orig.iter()) {
+        assert_eq!(x.as_f32(), y.as_f32(), "cross-topology restore differs");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn rejects_unsupported_mp() {
+    let Some(rt) = runtime() else { return };
+    let bad = cfg(6, 3);
+    assert!(Cluster::with_dataset(&rt, bad, dataset()).is_err());
+}

@@ -1,0 +1,272 @@
+//! Property-based tests over the coordinator's routing, batching and
+//! state invariants (the offline registry has no proptest crate, so
+//! these use seeded randomized sweeps — every failure reproduces from
+//! the printed seed).
+
+use std::collections::HashSet;
+
+use splitbrain::comm::collective::ring_allreduce_mean;
+use splitbrain::comm::fabric::{Fabric, Tag};
+use splitbrain::comm::NetModel;
+use splitbrain::coordinator::{GmpTopology, ModuloPlan, ShardBwdMode, ShardPlan};
+use splitbrain::model::{partition_network, vgg11, Layer, PartitionConfig};
+use splitbrain::runtime::HostTensor;
+use splitbrain::util::Rng;
+
+const CASES: usize = 60;
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> HostTensor {
+    let n = shape.iter().product();
+    HostTensor::f32(shape, rng.normal_vec(n, 1.0))
+}
+
+// ---------------------------------------------------------------------------
+// Modulo layer properties (Fig. 4).
+
+/// Every (member, row) of every member's local activations appears in
+/// exactly one iteration's assembled batch, at the owner-mapped slot.
+#[test]
+fn prop_modulo_covers_each_example_exactly_once() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(1000 + case as u64);
+        let k = [1, 2, 4, 8][rng.below(4)];
+        let b = k * (1 + rng.below(4)); // B multiple of K
+        let w = 1 + rng.below(6);
+        let plan = ModuloPlan::new((0..k).collect(), b, w);
+        let acts: Vec<HostTensor> =
+            (0..k).map(|_| rand_tensor(&mut rng, vec![b, w])).collect();
+        let mut fabric = Fabric::new(k);
+
+        let size = b / k;
+        let mut seen: HashSet<(usize, usize)> = HashSet::new(); // (member, row)
+        for it in 0..k {
+            let assembled = plan
+                .assemble(&mut fabric, &acts, it, Tag::new(1, it as u16, case as u16))
+                .unwrap();
+            // All members assemble the identical batch.
+            for m in 1..k {
+                assert_eq!(assembled[0].as_f32(), assembled[m].as_f32(), "case {case}");
+            }
+            // Row j*size+r must equal member j's local row it*size+r.
+            for j in 0..k {
+                for r in 0..size {
+                    let got = assembled[0].slice_rows(j * size + r, j * size + r + 1);
+                    let want = acts[j].slice_rows(it * size + r, it * size + r + 1);
+                    assert_eq!(got.as_f32(), want.as_f32(), "case {case} it {it}");
+                    assert!(
+                        seen.insert((j, it * size + r)),
+                        "case {case}: duplicate example (member {j}, row {})",
+                        it * size + r
+                    );
+                }
+            }
+        }
+        assert_eq!(seen.len(), k * b, "case {case}: full coverage");
+        assert!(fabric.drained());
+    }
+}
+
+/// Gradient mass is conserved by the bprop routing: the sum over all
+/// members' reduced local gradients equals the sum over all members'
+/// assembled-batch gradients.
+#[test]
+fn prop_modulo_bwd_conserves_gradient_mass() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(2000 + case as u64);
+        let k = [2, 4][rng.below(2)];
+        let b = k * (1 + rng.below(3));
+        let w = 1 + rng.below(5);
+        let plan = ModuloPlan::new((0..k).collect(), b, w);
+        let mut fabric = Fabric::new(k);
+        let gbatches: Vec<HostTensor> =
+            (0..k).map(|_| rand_tensor(&mut rng, vec![b, w])).collect();
+        let mut g_acts: Vec<HostTensor> = (0..k).map(|_| HostTensor::zeros(vec![b, w])).collect();
+        let it = rng.below(k);
+        plan.scatter_reduce(&mut fabric, &gbatches, &mut g_acts, it, Tag::new(2, 0, 0))
+            .unwrap();
+
+        let mass_in: f64 = gbatches
+            .iter()
+            .map(|t| t.as_f32().iter().map(|&v| v as f64).sum::<f64>())
+            .sum();
+        let mass_out: f64 = g_acts
+            .iter()
+            .map(|t| t.as_f32().iter().map(|&v| v as f64).sum::<f64>())
+            .sum();
+        assert!(
+            (mass_in - mass_out).abs() < 1e-3 * mass_in.abs().max(1.0),
+            "case {case}: {mass_in} vs {mass_out}"
+        );
+        assert!(fabric.drained());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard layer properties (Fig. 5).
+
+/// gather_full is exactly the column-concatenation of the partitions,
+/// and slicing it back recovers every member's input bit-for-bit.
+#[test]
+fn prop_shard_gather_slice_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(3000 + case as u64);
+        let k = 1 + rng.below(6);
+        let part = 1 + rng.below(8);
+        let rows = 1 + rng.below(6);
+        let plan = ShardPlan::new((0..k).collect(), part, ShardBwdMode::ReducePartials);
+        let parts: Vec<HostTensor> =
+            (0..k).map(|_| rand_tensor(&mut rng, vec![rows, part])).collect();
+        let mut fabric = Fabric::new(k);
+        let fulls = plan.gather_full(&mut fabric, &parts, Tag::new(3, 0, 0)).unwrap();
+        for m in 0..k {
+            assert_eq!(fulls[m].shape, vec![rows, part * k]);
+            for j in 0..k {
+                let sl = fulls[m].slice_cols(j * part, (j + 1) * part);
+                assert_eq!(sl.as_f32(), parts[j].as_f32(), "case {case}");
+            }
+        }
+        assert!(fabric.drained());
+    }
+}
+
+/// ReducePartials: backward(sum of random partials) == columnwise sums.
+#[test]
+fn prop_shard_reduce_is_columnwise_sum() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(4000 + case as u64);
+        let k = 2 + rng.below(4);
+        let part = 1 + rng.below(5);
+        let rows = 1 + rng.below(4);
+        let plan = ShardPlan::new((0..k).collect(), part, ShardBwdMode::ReducePartials);
+        let fulls: Vec<HostTensor> =
+            (0..k).map(|_| rand_tensor(&mut rng, vec![rows, part * k])).collect();
+        let mut fabric = Fabric::new(k);
+        let outs = plan.backward(&mut fabric, &fulls, Tag::new(4, 0, 0)).unwrap();
+        for (m, out) in outs.iter().enumerate() {
+            for r in 0..rows {
+                for c in 0..part {
+                    let want: f32 = fulls
+                        .iter()
+                        .map(|f| f.as_f32()[r * part * k + m * part + c])
+                        .sum();
+                    let got = out.as_f32()[r * part + c];
+                    assert!((want - got).abs() < 1e-4, "case {case} m{m} r{r} c{c}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GMP topology properties (Fig. 6).
+
+/// Groups partition the ranks; shard peers partition them orthogonally;
+/// the owner mapping lands inside the caller's own group.
+#[test]
+fn prop_topology_partitions() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(5000 + case as u64);
+        let mp = [1, 2, 4, 8][rng.below(4)];
+        let groups = 1 + rng.below(5);
+        let n = mp * groups;
+        let topo = GmpTopology::new(n, mp).unwrap();
+
+        let mut by_group: Vec<usize> = (0..topo.n_groups())
+            .flat_map(|g| topo.members(g))
+            .collect();
+        by_group.sort_unstable();
+        assert_eq!(by_group, (0..n).collect::<Vec<_>>(), "groups partition ranks");
+
+        let mut by_offset: Vec<usize> = (0..mp)
+            .flat_map(|o| topo.shard_peers(o))
+            .collect();
+        by_offset.sort_unstable();
+        assert_eq!(by_offset, (0..n).collect::<Vec<_>>(), "offsets partition ranks");
+
+        let batch = mp * (1 + rng.below(4));
+        for rank in 0..n {
+            for b in 0..batch {
+                let owner = topo.owner_of_example(rank, b, batch);
+                assert!(topo.group_of(rank).contains(&owner), "case {case}");
+                // Owner sequence is the member order, size rows each.
+                assert_eq!(owner, topo.group_of(rank)[b / (batch / mp)]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Collectives.
+
+/// Ring allreduce == naive mean for random lengths and group sizes.
+#[test]
+fn prop_ring_allreduce_equals_naive_mean() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(6000 + case as u64);
+        let n = 1 + rng.below(8);
+        let len = 1 + rng.below(100);
+        let mut bufs: Vec<Vec<f32>> =
+            (0..n).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / n as f32)
+            .collect();
+        let mut fabric = Fabric::new(n);
+        ring_allreduce_mean(&mut fabric, &(0..n).collect::<Vec<_>>(), &mut bufs, 1).unwrap();
+        for b in &bufs {
+            for (got, want) in b.iter().zip(expect.iter()) {
+                assert!((got - want).abs() < 1e-4, "case {case}");
+            }
+        }
+        assert!(fabric.drained(), "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partitioner properties (Listing 1).
+
+/// For any CCR threshold and mp, the transformed net's dimensions chain
+/// end-to-end and per-worker weights never exceed the local model's.
+#[test]
+fn prop_partition_preserves_shape_chain_and_shrinks() {
+    let full_weights = 6_987_456.0;
+    for case in 0..CASES {
+        let mut rng = Rng::new(7000 + case as u64);
+        let mp = [1, 2, 4, 8][rng.below(4)];
+        let thr = [0.0, 10.0, 100.0, 500.0, 1e9][rng.below(5)];
+        let t = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ccr_threshold: thr },
+        )
+        .unwrap();
+        // Shape chain: resize through every layer ends at [10].
+        let mut d = vec![32, 32, 3];
+        for l in &t.layers {
+            d = splitbrain::model::dims::resize(l, &d).unwrap();
+        }
+        assert_eq!(d, vec![10], "case {case}");
+        assert!(t.weight_count() as f64 <= full_weights, "case {case}");
+        // Comm layers appear iff something was sharded.
+        let has_comm = t.layers.iter().any(Layer::is_comm);
+        let has_shards = !t.sharded_linears().is_empty();
+        assert_eq!(has_comm, has_shards, "case {case}");
+    }
+}
+
+/// Analytic collective costs are monotone in group size and bytes.
+#[test]
+fn prop_netmodel_monotonicity() {
+    let net = NetModel::default();
+    for case in 0..CASES {
+        let mut rng = Rng::new(8000 + case as u64);
+        let k = 2 + rng.below(14);
+        let bytes = 1 + rng.next_u64() % (1 << 24);
+        assert!(net.allgather(k + 1, bytes) >= net.allgather(k, bytes), "case {case}");
+        assert!(net.allgather(k, bytes + 1024) >= net.allgather(k, bytes));
+        assert!(net.ring_allreduce(k + 1, bytes) >= 0.0);
+        assert!(
+            net.reduce_scatter(k, bytes * 2) >= net.reduce_scatter(k, bytes),
+            "case {case}"
+        );
+    }
+}

@@ -1,0 +1,157 @@
+//! Integration: load the AOT artifacts and execute them through PJRT,
+//! cross-checking numerics against independent Rust-side math.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use splitbrain::runtime::{HostTensor, RuntimeClient};
+use splitbrain::util::Rng;
+
+fn runtime() -> Option<RuntimeClient> {
+    match RuntimeClient::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// relu(x @ w + b) computed naively in Rust.
+fn fc_ref(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = b[j];
+            for l in 0..k {
+                acc += x[i * k + l] * w[l * n + j];
+            }
+            out[i * n + j] = acc.max(0.0);
+        }
+    }
+    out
+}
+
+#[test]
+fn fc0_shard_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+    let mut rng = Rng::new(42);
+    let x = HostTensor::f32(vec![b, 4096], rng.normal_vec(b * 4096, 0.5));
+    let w = HostTensor::f32(vec![4096, 512], rng.normal_vec(4096 * 512, 0.02));
+    let bias = HostTensor::f32(vec![512], rng.normal_vec(512, 0.1));
+
+    let out = rt
+        .run("fc0_fwd_k2", &[w.clone(), bias.clone(), x.clone()])
+        .expect("fc0_fwd_k2");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![b, 512]);
+
+    let expect = fc_ref(x.as_f32(), w.as_f32(), bias.as_f32(), b, 4096, 512);
+    let got = out[0].as_f32();
+    let max_err = expect
+        .iter()
+        .zip(got.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-2, "max err {max_err}");
+}
+
+#[test]
+fn head_loss_is_ln10_for_zero_logits() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+    let w2 = HostTensor::zeros(vec![1024, 10]);
+    let b2 = HostTensor::zeros(vec![10]);
+    let mut rng = Rng::new(7);
+    let h1 = HostTensor::f32(vec![b, 1024], rng.normal_vec(b * 1024, 1.0));
+    let labels = HostTensor::i32(
+        vec![b],
+        (0..b).map(|i| (i % 10) as i32).collect(),
+    );
+    let out = rt.run("head_step", &[w2, b2, h1, labels]).expect("head_step");
+    let loss = out[0].scalar();
+    assert!(
+        (loss - 10f32.ln()).abs() < 1e-4,
+        "zero-logit loss should be ln(10)={}, got {loss}",
+        10f32.ln()
+    );
+    // Gradient w.r.t. bias for zero logits: softmax(0)=0.1, so
+    // gb2[c] = 0.1 - count(c)/B exactly.
+    let mut counts = [0usize; 10];
+    for i in 0..b {
+        counts[i % 10] += 1;
+    }
+    let gb2 = out[2].as_f32();
+    for (c, g) in gb2.iter().enumerate() {
+        let expect = 0.1 - counts[c] as f32 / b as f32;
+        assert!((g - expect).abs() < 1e-6, "gb2[{c}]={g}, expect {expect}");
+    }
+}
+
+#[test]
+fn full_step_produces_all_grads_and_finite_loss() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get("full_step").expect("spec").clone();
+    let mut rng = Rng::new(3);
+    let inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| match s.dtype {
+            splitbrain::runtime::DType::F32 => {
+                let scale = if s.shape.len() >= 2 { 0.05 } else { 0.0 };
+                HostTensor::f32(s.shape.clone(), rng.normal_vec(s.numel(), scale))
+            }
+            splitbrain::runtime::DType::I32 => HostTensor::i32(
+                s.shape.clone(),
+                (0..s.numel()).map(|i| (i % 10) as i32).collect(),
+            ),
+        })
+        .collect();
+    let out = rt.run("full_step", &inputs).expect("full_step");
+    assert_eq!(out.len(), 21, "loss + 14 conv grads + 6 fc grads");
+    let loss = out[0].scalar();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    // Grad shapes mirror the parameter inputs.
+    for (g, p) in out[1..].iter().zip(spec.inputs.iter()) {
+        assert_eq!(g.shape, p.shape, "grad of {}", p.name);
+    }
+}
+
+#[test]
+fn conv_fwd_then_bwd_roundtrip_shapes() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.batch;
+    let spec = rt.manifest.get("conv_fwd").expect("spec").clone();
+    let mut rng = Rng::new(5);
+    let mut inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| HostTensor::f32(s.shape.clone(), rng.normal_vec(s.numel(), 0.05)))
+        .collect();
+    let act = rt.run("conv_fwd", &inputs).expect("conv_fwd");
+    assert_eq!(act[0].shape, vec![b, rt.manifest.feature_dim]);
+
+    // Backward with the activation gradient = act itself (arbitrary).
+    inputs.push(act[0].clone());
+    let grads = rt.run("conv_bwd", &inputs).expect("conv_bwd");
+    assert_eq!(grads.len(), 14);
+    for (g, p) in grads.iter().zip(spec.inputs.iter()) {
+        assert_eq!(g.shape, p.shape, "grad of {}", p.name);
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.executable("head_fwd").unwrap();
+    let b = rt.executable("head_fwd").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let bad = vec![HostTensor::zeros(vec![1, 1])];
+    let err = rt.run("head_step", &bad).unwrap_err().to_string();
+    assert!(err.contains("expected 4 inputs"), "{err}");
+}
