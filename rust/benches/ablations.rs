@@ -70,7 +70,15 @@ fn main() -> anyhow::Result<()> {
         &PartitionConfig { mp: 2, ..Default::default() },
     )?;
     let topo = GmpTopology::new(8, 2)?;
-    let sched = StepSchedule::compile_opts(&vnet, topo, &rt.manifest, true)?;
+    // Ring averaging: what the cluster actually runs by default.
+    let sched = StepSchedule::compile_with_algo(
+        &vnet,
+        topo,
+        &rt.manifest,
+        true,
+        splitbrain::coordinator::McastScheme::BoverK,
+        splitbrain::comm::CollectiveAlgo::Ring,
+    )?;
     let avg_ms = sched.avg_comm_secs(&netm) * 1e3;
     let mut t = Table::new(vec!["avg period", "avg ms/step", "vs period=1"]);
     for period in [1usize, 5, 10, 50, 100] {

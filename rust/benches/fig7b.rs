@@ -25,6 +25,11 @@ fn main() -> anyhow::Result<()> {
     let (table, raw) = fig7b(&rt, fidelity, &base)?;
     println!("{}", table.render());
 
+    // Collective-algorithm comparison: naive all-to-all vs ring vs
+    // recursive halving/doubling volumes behind the same phases.
+    let (algo_table, _) = splitbrain::bench::fig7b_algos(&rt, &base)?;
+    println!("per-algorithm communication (analytic, 8 machines):\n{}", algo_table.render());
+
     // Per-category byte breakdown for the largest mp, from the trace.
     let rep = splitbrain::bench::experiments::run_config(&rt, 8, 8, fidelity, &base)?;
     println!("per-category volumes at mp=8 (busiest rank, whole run):");

@@ -67,9 +67,9 @@ fn main() -> anyhow::Result<()> {
     table.row(vec!["slice_cols B x 2048".into(), s.summary(), "host".into()]);
 
     let s = bench(50, || {
-        std::hint::black_box(act.to_literal().unwrap());
+        std::hint::black_box(act.as_f32().to_vec());
     });
-    table.row(vec!["to_literal B x 4096".into(), s.summary(), "host->PJRT".into()]);
+    table.row(vec!["payload copy B x 4096".into(), s.summary(), "host->fabric".into()]);
 
     // --- SGD over the full parameter set ---
     let mut params = vec![HostTensor::f32(vec![6_990_666], rng.normal_vec(6_990_666, 0.1))];

@@ -1,8 +1,13 @@
-//! One generator per paper table/figure (§5, Table 1/2, Fig. 7a/b/c).
+//! One generator per paper table/figure (§5, Table 1/2, Fig. 7a/b/c),
+//! plus the collective-algorithm comparison backing the Fig. 7b
+//! overhead discussion.
 
 use anyhow::Result;
 
-use crate::coordinator::{calibrated_report, Cluster, ClusterConfig};
+use crate::comm::CollectiveAlgo;
+use crate::coordinator::{
+    calibrated_report, Cluster, ClusterConfig, GmpTopology, McastScheme, StepSchedule,
+};
 use crate::model::vgg;
 use crate::runtime::RuntimeClient;
 use crate::train::TrainReport;
@@ -28,9 +33,15 @@ pub fn run_config(
 ) -> Result<TrainReport> {
     // Segmented mp=1 baseline: identical per-op efficiency across the
     // DP/MP comparison (see StepSchedule::compile_opts).
-    let cfg = ClusterConfig { n_workers, mp, segmented_mp1: true, ..cfg_base.clone() };
+    let mut cfg = ClusterConfig { n_workers, mp, segmented_mp1: true, ..cfg_base.clone() };
     match fidelity {
         Fidelity::Numeric { steps } => {
+            // Timing fidelity: per-worker compute must be measured
+            // contention-free (the simulated clock takes max over
+            // workers). The threaded engine overlaps N workers on this
+            // host's cores, which would inflate compute_secs with N —
+            // numerics are identical either way.
+            cfg.engine = crate::coordinator::ExecEngine::Sequential;
             let mut cluster = Cluster::new(rt, cfg)?;
             cluster.train_steps(steps)
         }
@@ -199,6 +210,51 @@ pub fn fig7b(
             format!("{:.2}", rep.images_per_sec()),
         ]);
         raw.push((mp, comp, mpc, dpc));
+    }
+    Ok((t, raw))
+}
+
+/// Fig. 7b companion: analytic communication comparison of the
+/// collective algorithms (naive all-to-all vs ring vs recursive
+/// halving/doubling) on an 8-machine cluster, per MP group size.
+/// Returns (table, raw (mp, algo, mp_bytes, avg_bytes) rows).
+pub fn fig7b_algos(
+    rt: &RuntimeClient,
+    base: &ClusterConfig,
+) -> Result<(Table, Vec<(usize, CollectiveAlgo, u64, u64)>)> {
+    use crate::model::{partition_network, vgg11, PartitionConfig};
+    let mut t = Table::new(vec![
+        "mp", "algo", "MP comm ms", "avg comm ms", "MP MB/rank", "avg MB/rank",
+    ]);
+    let mut raw = Vec::new();
+    for mp in [1usize, 2, 4, 8] {
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )?;
+        let topo = GmpTopology::new(8, mp)?;
+        for algo in [CollectiveAlgo::Naive, CollectiveAlgo::Ring, CollectiveAlgo::Rhd] {
+            let sched = StepSchedule::compile_with_algo(
+                &net,
+                topo,
+                &rt.manifest,
+                true,
+                McastScheme::BoverK,
+                algo,
+            )?;
+            let mp_bytes = sched.mp_bytes_per_member();
+            let avg_bytes = sched.avg_bytes_per_member();
+            t.row(vec![
+                mp.to_string(),
+                algo.to_string(),
+                format!("{:.3}", sched.mp_comm_secs(&base.net) * 1e3),
+                format!("{:.3}", sched.avg_comm_secs(&base.net) * 1e3),
+                format!("{:.2}", mp_bytes as f64 / 1e6),
+                format!("{:.2}", avg_bytes as f64 / 1e6),
+            ]);
+            raw.push((mp, algo, mp_bytes, avg_bytes));
+        }
     }
     Ok((t, raw))
 }

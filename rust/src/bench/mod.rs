@@ -10,5 +10,6 @@
 pub mod experiments;
 
 pub use experiments::{
-    fig7a, fig7b, fig7c, run_config, table1, table2, table2_configs, table2_paper, Fidelity,
+    fig7a, fig7b, fig7b_algos, fig7c, run_config, table1, table2, table2_configs, table2_paper,
+    Fidelity,
 };

@@ -2,23 +2,154 @@
 //!
 //! These are the building blocks the coordinator's modulo/shard layers
 //! and the model-averaging step are made of. Data moves for real
-//! (numerics are exact); byte counters on the fabric record exactly what
-//! crossed the wire so the cost model and Fig. 7b stay honest.
+//! (numerics are exact); byte counters on the fabric record exactly
+//! what crossed the wire so the cost model and Fig. 7b stay honest.
+//!
+//! ## Algorithms
+//!
+//! Each collective exists in two algorithmic families, selected by
+//! [`CollectiveAlgo`] (plumbed from `ClusterConfig`):
+//!
+//! * **Naive** — direct all-to-all posts, the seed implementation and
+//!   the oracle the property tests compare against. One BSP phase,
+//!   `k-1` messages per rank.
+//! * **Ring** — bandwidth-optimal neighbor exchanges: `k-1` rounds of
+//!   one partition-sized message. For allreduce this is the textbook
+//!   reduce-scatter + allgather ring at `2·(k-1)/k · V` bytes per rank
+//!   (vs `(k-1)·V` naive); for the column collectives total bytes match
+//!   naive but the message schedule serializes into rounds (the
+//!   latency/overhead trade the netmodel charges).
+//! * **Rhd** — recursive halving/doubling allreduce (Rabenseifner):
+//!   `2·log2(k)` rounds at the same `2·(k-1)/k · V` bytes; non-powers
+//!   of two fold the surplus ranks into partners first.
+//!
+//! ## SPMD (`*_rank`) variants
+//!
+//! The threaded cluster engine runs one program per rank, so every
+//! collective also has a per-rank form using [`Fabric::take_blocking`].
+//! The group-view ("god view") dispatchers used by the sequential
+//! engine execute the *same* per-rank programs on a local thread scope,
+//! so both engines produce bit-identical results by construction.
 //!
 //! All functions take the *group* as a slice of global ranks; tensors
 //! are indexed by position within the group (BSP: every member
 //! participates in every call).
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use super::fabric::{Fabric, Tag};
 use crate::runtime::HostTensor;
 
-/// Shard-layer fprop (Fig. 5a): every member contributes its
-/// `[B, w_i]` partition; returns the `[B, sum w_i]` full tensor for
-/// each member, assembled in group order.
+/// Which collective algorithm family moves the data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CollectiveAlgo {
+    /// Direct all-to-all posts (one phase, `k-1` messages per rank).
+    Naive,
+    /// Neighbor-ring rounds; bandwidth-optimal allreduce.
+    #[default]
+    Ring,
+    /// Recursive halving/doubling allreduce; column collectives fall
+    /// back to the ring schedule (the halving tree needs a reduction,
+    /// which plain gathers don't have).
+    Rhd,
+}
+
+impl CollectiveAlgo {
+    /// Parse a CLI token: `naive`, `ring`, or `rhd`/`halving-doubling`.
+    pub fn parse(s: &str) -> Result<CollectiveAlgo> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" | "all-to-all" => Ok(CollectiveAlgo::Naive),
+            "ring" => Ok(CollectiveAlgo::Ring),
+            "rhd" | "halving-doubling" | "recursive-halving-doubling" => Ok(CollectiveAlgo::Rhd),
+            other => bail!("unknown collective algorithm {other:?} (expected naive, ring, or rhd)"),
+        }
+    }
+}
+
+impl std::fmt::Display for CollectiveAlgo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CollectiveAlgo::Naive => "naive",
+            CollectiveAlgo::Ring => "ring",
+            CollectiveAlgo::Rhd => "rhd",
+        })
+    }
+}
+
+/// Largest power of two ≤ `n` (n ≥ 1).
+pub(crate) fn prev_pow2(n: usize) -> usize {
+    let mut p = 1;
+    while p * 2 <= n {
+        p *= 2;
+    }
+    p
+}
+
+/// Worst-rank posted volume of a recursive halving/doubling allreduce
+/// over `bytes` across `n` ranks: `2·log2(p)` halving/doubling messages
+/// totalling `2·V·(p-1)/p` bytes, plus the unfold message (`V` bytes)
+/// on partner ranks when `n` is not a power of two. Chunk remainders
+/// are approximated by exact halving (the fabric counters are the
+/// ground truth; this feeds the analytic model).
+pub fn rhd_worst_rank_volume(n: usize, bytes: u64) -> crate::comm::netmodel::PhaseVolume {
+    use crate::comm::netmodel::PhaseVolume;
+    if n <= 1 {
+        return PhaseVolume::default();
+    }
+    let p = prev_pow2(n) as u64;
+    let log2p = (usize::BITS - 1 - (p as usize).leading_zeros()) as u64;
+    let mut msgs = 2 * log2p;
+    let mut out = 2 * bytes * (p - 1) / p;
+    if (n as u64) > p {
+        // Partner ranks additionally push the reduced result back.
+        msgs += 1;
+        out += bytes;
+    }
+    PhaseVolume::new(msgs, out)
+}
+
+// ---------------------------------------------------------------------------
+// Column-block helpers (row-major [rows, full_w] buffers).
+
+fn col_block(data: &[f32], rows: usize, full_w: usize, lo: usize, hi: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * (hi - lo));
+    for r in 0..rows {
+        out.extend_from_slice(&data[r * full_w + lo..r * full_w + hi]);
+    }
+    out
+}
+
+fn add_col_block(data: &mut [f32], rows: usize, full_w: usize, lo: usize, hi: usize, src: &[f32]) {
+    let w = hi - lo;
+    for r in 0..rows {
+        let dst = &mut data[r * full_w + lo..r * full_w + hi];
+        let s = &src[r * w..(r + 1) * w];
+        for (a, b) in dst.iter_mut().zip(s) {
+            *a += *b;
+        }
+    }
+}
+
+fn offsets_of(widths: &[usize]) -> Vec<usize> {
+    let mut off = Vec::with_capacity(widths.len() + 1);
+    let mut acc = 0;
+    for &w in widths {
+        off.push(acc);
+        acc += w;
+    }
+    off.push(acc);
+    off
+}
+
+// ---------------------------------------------------------------------------
+// Naive column collectives (seed implementations — also the oracle the
+// property tests compare the ring variants against).
+
+/// Shard-layer fprop (Fig. 5a), naive all-to-all: every member
+/// contributes its `[B, w_i]` partition; returns the `[B, sum w_i]`
+/// full tensor for each member, assembled in group order.
 pub fn allgather_cols(
-    fabric: &mut Fabric,
+    fabric: &Fabric,
     group: &[usize],
     parts: &[HostTensor],
     tag: Tag,
@@ -56,12 +187,12 @@ pub fn allgather_cols(
     Ok(outs)
 }
 
-/// Shard-layer bprop (Fig. 5b): every member holds a *partial*
-/// full-width gradient `[B, sum w_i]`; member i must end with the
-/// reduced (summed) `[B, w_i]` slice of its own partition. Each member
-/// scatters the foreign slices and reduces what it gathers.
+/// Shard-layer bprop (Fig. 5b), naive all-to-all: every member holds a
+/// *partial* full-width gradient `[B, sum w_i]`; member i must end with
+/// the reduced (summed) `[B, w_i]` slice of its own partition. Each
+/// member scatters the foreign slices and reduces what it gathers.
 pub fn reduce_scatter_cols(
-    fabric: &mut Fabric,
+    fabric: &Fabric,
     group: &[usize],
     fulls: &[HostTensor],
     widths: &[usize],
@@ -70,14 +201,7 @@ pub fn reduce_scatter_cols(
     let k = group.len();
     assert_eq!(fulls.len(), k);
     assert_eq!(widths.len(), k);
-    let offsets: Vec<usize> = widths
-        .iter()
-        .scan(0, |acc, &w| {
-            let o = *acc;
-            *acc += w;
-            Some(o)
-        })
-        .collect();
+    let offsets = offsets_of(widths);
 
     // Post: member gi pushes slice j of its partial gradient to member j.
     for (gi, &src) in group.iter().enumerate() {
@@ -88,7 +212,7 @@ pub fn reduce_scatter_cols(
             }
         }
     }
-    // Reduce: own slice + k-1 gathered partials.
+    // Reduce: own slice + k-1 gathered partials, in group order.
     let rows = fulls[0].shape[0];
     let mut outs = Vec::with_capacity(k);
     for (gi, &dst) in group.iter().enumerate() {
@@ -104,11 +228,197 @@ pub fn reduce_scatter_cols(
     Ok(outs)
 }
 
+// ---------------------------------------------------------------------------
+// Per-rank (SPMD) column collectives — what a worker thread runs.
+
+/// Per-rank allgather of column partitions. `gi` is the caller's index
+/// in `group`, `part` its `[B, widths[gi]]` partition. Returns the
+/// assembled `[B, sum widths]` tensor. Blocking (threaded engine).
+pub fn allgather_cols_rank(
+    algo: CollectiveAlgo,
+    fabric: &Fabric,
+    group: &[usize],
+    gi: usize,
+    part: &HostTensor,
+    widths: &[usize],
+    tag: Tag,
+) -> Result<HostTensor> {
+    let k = group.len();
+    let rows = part.shape[0];
+    let offsets = offsets_of(widths);
+    let full_w = offsets[k];
+    if k == 1 {
+        return Ok(part.clone());
+    }
+    let mut full = HostTensor::zeros(vec![rows, full_w]);
+    match algo {
+        CollectiveAlgo::Naive => {
+            let me = group[gi];
+            for &dst in group {
+                if dst != me {
+                    fabric.post(me, dst, tag, part.as_f32().to_vec());
+                }
+            }
+            for (gj, &src) in group.iter().enumerate() {
+                if gj == gi {
+                    full.set_cols(offsets[gi], part);
+                } else {
+                    let data = fabric.take_blocking(me, src, tag)?;
+                    full.set_cols(offsets[gj], &HostTensor::f32(vec![rows, widths[gj]], data));
+                }
+            }
+        }
+        CollectiveAlgo::Ring | CollectiveAlgo::Rhd => {
+            // Ring allgather: forward the chunk received last round.
+            let me = group[gi];
+            let succ = group[(gi + 1) % k];
+            let pred = group[(gi + k - 1) % k];
+            full.set_cols(offsets[gi], part);
+            let mut cur = part.as_f32().to_vec();
+            for r in 0..k - 1 {
+                fabric.post(me, succ, tag, cur);
+                let data = fabric.take_blocking(me, pred, tag)?;
+                let c = (gi + k - 1 - r) % k; // chunk index just received
+                full.set_cols(offsets[c], &HostTensor::f32(vec![rows, widths[c]], data.clone()));
+                cur = data;
+            }
+        }
+    }
+    Ok(full)
+}
+
+/// Per-rank reduce-scatter of column partitions: `full` is the
+/// caller's `[B, sum widths]` partial gradient; returns the summed
+/// `[B, widths[gi]]` slice it owns. Blocking (threaded engine).
+pub fn reduce_scatter_cols_rank(
+    algo: CollectiveAlgo,
+    fabric: &Fabric,
+    group: &[usize],
+    gi: usize,
+    full: &HostTensor,
+    widths: &[usize],
+    tag: Tag,
+) -> Result<HostTensor> {
+    let k = group.len();
+    let rows = full.shape[0];
+    let offsets = offsets_of(widths);
+    let full_w = offsets[k];
+    debug_assert_eq!(full.shape[1], full_w);
+    if k == 1 {
+        return Ok(full.clone());
+    }
+    let me = group[gi];
+    match algo {
+        CollectiveAlgo::Naive => {
+            for (gj, &dst) in group.iter().enumerate() {
+                if gj != gi {
+                    let slice = full.slice_cols(offsets[gj], offsets[gj] + widths[gj]);
+                    fabric.post(me, dst, tag, slice.as_f32().to_vec());
+                }
+            }
+            let mut acc = full.slice_cols(offsets[gi], offsets[gi] + widths[gi]);
+            for &src in group.iter() {
+                if src != me {
+                    let data = fabric.take_blocking(me, src, tag)?;
+                    acc.add_assign(&HostTensor::f32(vec![rows, widths[gi]], data));
+                }
+            }
+            Ok(acc)
+        }
+        CollectiveAlgo::Ring | CollectiveAlgo::Rhd => {
+            // Ring reduce-scatter over column chunks: round r sends
+            // chunk (gi - r - 1) and accumulates chunk (gi - r - 2);
+            // after k-1 rounds chunk gi is fully reduced.
+            let succ = group[(gi + 1) % k];
+            let pred = group[(gi + k - 1) % k];
+            let mut work = full.as_f32().to_vec();
+            for r in 0..k - 1 {
+                let send_c = (gi + k - 1 - r) % k;
+                let payload =
+                    col_block(&work, rows, full_w, offsets[send_c], offsets[send_c + 1]);
+                fabric.post(me, succ, tag, payload);
+                let data = fabric.take_blocking(me, pred, tag)?;
+                let recv_c = (gi + 2 * k - 2 - r) % k;
+                add_col_block(&mut work, rows, full_w, offsets[recv_c], offsets[recv_c + 1], &data);
+            }
+            Ok(HostTensor::f32(
+                vec![rows, widths[gi]],
+                col_block(&work, rows, full_w, offsets[gi], offsets[gi + 1]),
+            ))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Group-view dispatchers: run the per-rank programs on a local thread
+// scope. The sequential engine calls these, so its data movement and
+// reduction orders are *identical* to the threaded engine's.
+
+fn scatter_gather_scope<T: Send>(
+    k: usize,
+    f: impl Fn(usize) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    let fref = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..k).map(|gi| s.spawn(move || fref(gi))).collect();
+        // Spawn order == join order; each handle yields rank gi's result.
+        let mut outs = Vec::with_capacity(k);
+        for h in handles {
+            outs.push(h.join().map_err(|_| anyhow!("collective worker panicked"))??);
+        }
+        Ok(outs)
+    })
+}
+
+/// Group-view allgather with algorithm selection; returns every
+/// member's assembled tensor, in group order.
+pub fn allgather_cols_algo(
+    algo: CollectiveAlgo,
+    fabric: &Fabric,
+    group: &[usize],
+    parts: &[HostTensor],
+    tag: Tag,
+) -> Result<Vec<HostTensor>> {
+    let k = group.len();
+    assert_eq!(parts.len(), k);
+    if k == 1 {
+        return Ok(parts.to_vec());
+    }
+    let widths: Vec<usize> = parts.iter().map(|p| p.shape[1]).collect();
+    scatter_gather_scope(k, |gi| {
+        allgather_cols_rank(algo, fabric, group, gi, &parts[gi], &widths, tag)
+    })
+}
+
+/// Group-view reduce-scatter with algorithm selection; returns every
+/// member's reduced own-partition slice, in group order.
+pub fn reduce_scatter_cols_algo(
+    algo: CollectiveAlgo,
+    fabric: &Fabric,
+    group: &[usize],
+    fulls: &[HostTensor],
+    widths: &[usize],
+    tag: Tag,
+) -> Result<Vec<HostTensor>> {
+    let k = group.len();
+    assert_eq!(fulls.len(), k);
+    if k == 1 {
+        return Ok(fulls.to_vec());
+    }
+    scatter_gather_scope(k, |gi| {
+        reduce_scatter_cols_rank(algo, fabric, group, gi, &fulls[gi], widths, tag)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Allreduce-mean (BSP model averaging).
+
 /// Ring allreduce-mean over equally-shaped flat buffers (DP model
 /// averaging). Implements the textbook reduce-scatter + allgather ring,
 /// so the fabric's byte counters match the 2·(n-1)/n·V optimum.
+/// Group view, non-blocking takes (all posts precede their takes).
 pub fn ring_allreduce_mean(
-    fabric: &mut Fabric,
+    fabric: &Fabric,
     group: &[usize],
     bufs: &mut [Vec<f32>],
     tag_base: u16,
@@ -173,6 +483,229 @@ pub fn ring_allreduce_mean(
         }
     }
     Ok(())
+}
+
+/// Per-rank allreduce-mean: the caller's flat buffer is replaced by the
+/// group mean. Blocking; safe from worker threads. Arithmetic per rank
+/// is identical to the group-view dispatch, so sequential and threaded
+/// engines agree bit-for-bit.
+pub fn allreduce_mean_rank(
+    algo: CollectiveAlgo,
+    fabric: &Fabric,
+    group: &[usize],
+    gi: usize,
+    buf: &mut [f32],
+    tag_base: u16,
+) -> Result<()> {
+    let n = group.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    let me = group[gi];
+    match algo {
+        CollectiveAlgo::Naive => {
+            // Everyone broadcasts; everyone reduces in *canonical group
+            // order* (not own-buffer-first): f32 addition is not
+            // associative, so a rank-dependent order would leave
+            // replicas ULP-divergent after every averaging event.
+            let tag = Tag::new(tag_base, 0, 0);
+            for &dst in group {
+                if dst != me {
+                    fabric.post(me, dst, tag, buf.to_vec());
+                }
+            }
+            let mut acc: Vec<f32> = Vec::new();
+            for (j, &src) in group.iter().enumerate() {
+                if j == gi {
+                    if acc.is_empty() {
+                        acc = buf.to_vec();
+                    } else {
+                        for (a, b) in acc.iter_mut().zip(buf.iter()) {
+                            *a += *b;
+                        }
+                    }
+                } else {
+                    let data = fabric.take_blocking(me, src, tag)?;
+                    if acc.is_empty() {
+                        acc = data;
+                    } else {
+                        for (a, b) in acc.iter_mut().zip(data.iter()) {
+                            *a += *b;
+                        }
+                    }
+                }
+            }
+            let inv = 1.0 / n as f32;
+            for (o, v) in buf.iter_mut().zip(acc) {
+                *o = v * inv;
+            }
+        }
+        CollectiveAlgo::Ring => {
+            let len = buf.len();
+            let chunk = len / n;
+            let bounds = |c: usize| -> (usize, usize) {
+                let lo = c * chunk;
+                let hi = if c + 1 == n { len } else { lo + chunk };
+                (lo, hi)
+            };
+            let succ = group[(gi + 1) % n];
+            let pred = group[(gi + n - 1) % n];
+            for r in 0..n - 1 {
+                let tag = Tag::new(tag_base, r as u16, 0);
+                let c = (gi + n - r) % n;
+                let (lo, hi) = bounds(c);
+                fabric.post(me, succ, tag, buf[lo..hi].to_vec());
+                let c = (gi + n - 1 + n - r) % n;
+                let (lo, hi) = bounds(c);
+                let data = fabric.take_blocking(me, pred, tag)?;
+                for (a, b) in buf[lo..hi].iter_mut().zip(data.iter()) {
+                    *a += *b;
+                }
+            }
+            for r in 0..n - 1 {
+                let tag = Tag::new(tag_base, (n + r) as u16, 0);
+                let c = (gi + 1 + n - r) % n;
+                let (lo, hi) = bounds(c);
+                fabric.post(me, succ, tag, buf[lo..hi].to_vec());
+                let c = (gi + n - r) % n;
+                let (lo, hi) = bounds(c);
+                let data = fabric.take_blocking(me, pred, tag)?;
+                buf[lo..hi].copy_from_slice(&data);
+            }
+            let inv = 1.0 / n as f32;
+            for v in buf.iter_mut() {
+                *v *= inv;
+            }
+        }
+        CollectiveAlgo::Rhd => rhd_allreduce_mean_rank(fabric, group, gi, buf, tag_base)?,
+    }
+    Ok(())
+}
+
+/// Recursive halving/doubling allreduce-mean, per rank. Non-powers of
+/// two fold the surplus ranks (index ≥ p, the largest power of two)
+/// into partner ranks before the halving tree and unfold afterwards.
+fn rhd_allreduce_mean_rank(
+    fabric: &Fabric,
+    group: &[usize],
+    gi: usize,
+    buf: &mut [f32],
+    tag_base: u16,
+) -> Result<()> {
+    let n = group.len();
+    let len = buf.len();
+    let p = prev_pow2(n);
+    let extras = n - p;
+    let me = group[gi];
+    let fold_tag = Tag::new(tag_base, 0, 1);
+    let unfold_tag = Tag::new(tag_base, 1, 1);
+
+    if gi >= p {
+        // Extra rank: fold into the partner, wait for the result.
+        let partner = group[gi - p];
+        fabric.post(me, partner, fold_tag, buf.to_vec());
+        let data = fabric.take_blocking(me, partner, unfold_tag)?;
+        buf.copy_from_slice(&data);
+        // Partner already divided by n.
+        return Ok(());
+    }
+    if gi < extras {
+        // Partner of an extra: absorb its buffer first.
+        let extra = group[gi + p];
+        let data = fabric.take_blocking(me, extra, fold_tag)?;
+        for (a, b) in buf.iter_mut().zip(data.iter()) {
+            *a += *b;
+        }
+    }
+
+    // Recursive halving (reduce-scatter over segments).
+    let mut seg = (0usize, len);
+    let mut mask = p / 2;
+    let mut steps: Vec<(usize, usize, usize, usize)> = Vec::new(); // (lo, mid, hi, mask)
+    let mut step_id = 2u16;
+    while mask >= 1 {
+        let partner_gi = gi ^ mask;
+        let partner = group[partner_gi];
+        let (lo, hi) = seg;
+        let mid = lo + (hi - lo) / 2;
+        let tag = Tag::new(tag_base, step_id, 1);
+        if gi & mask == 0 {
+            fabric.post(me, partner, tag, buf[mid..hi].to_vec());
+            let data = fabric.take_blocking(me, partner, tag)?;
+            for (a, b) in buf[lo..mid].iter_mut().zip(data.iter()) {
+                *a += *b;
+            }
+            seg = (lo, mid);
+        } else {
+            fabric.post(me, partner, tag, buf[lo..mid].to_vec());
+            let data = fabric.take_blocking(me, partner, tag)?;
+            for (a, b) in buf[mid..hi].iter_mut().zip(data.iter()) {
+                *a += *b;
+            }
+            seg = (mid, hi);
+        }
+        steps.push((lo, mid, hi, mask));
+        mask /= 2;
+        step_id += 1;
+    }
+
+    // Recursive doubling (allgather of reduced segments), reversed.
+    for &(lo, mid, hi, mask) in steps.iter().rev() {
+        let partner = group[gi ^ mask];
+        let tag = Tag::new(tag_base, step_id, 1);
+        if gi & mask == 0 {
+            fabric.post(me, partner, tag, buf[lo..mid].to_vec());
+            let data = fabric.take_blocking(me, partner, tag)?;
+            buf[mid..hi].copy_from_slice(&data);
+        } else {
+            fabric.post(me, partner, tag, buf[mid..hi].to_vec());
+            let data = fabric.take_blocking(me, partner, tag)?;
+            buf[lo..mid].copy_from_slice(&data);
+        }
+        step_id += 1;
+    }
+
+    // Mean, then unfold to the extra rank if one folded into us.
+    let inv = 1.0 / n as f32;
+    for v in buf.iter_mut() {
+        *v *= inv;
+    }
+    if gi < extras {
+        let extra = group[gi + p];
+        fabric.post(me, extra, unfold_tag, buf.to_vec());
+    }
+    Ok(())
+}
+
+/// Group-view allreduce-mean with algorithm selection: executes the
+/// per-rank programs on a local thread scope (so the sequential
+/// engine's numerics match the threaded engine's exactly) and writes
+/// every member's buffer in place.
+pub fn allreduce_mean(
+    algo: CollectiveAlgo,
+    fabric: &Fabric,
+    group: &[usize],
+    bufs: &mut [Vec<f32>],
+    tag_base: u16,
+) -> Result<()> {
+    let n = group.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    assert_eq!(bufs.len(), n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = bufs
+            .iter_mut()
+            .enumerate()
+            .map(|(gi, buf)| {
+                s.spawn(move || allreduce_mean_rank(algo, fabric, group, gi, buf, tag_base))
+            })
+            .collect();
+        for h in handles {
+            h.join().map_err(|_| anyhow!("allreduce worker panicked"))??;
+        }
+        Ok(())
+    })
 }
 
 #[cfg(test)]
@@ -294,5 +827,129 @@ mod tests {
         ring_allreduce_mean(&mut f, &[0], &mut bufs, 1).unwrap();
         assert_eq!(bufs[0], vec![2.0; 5]);
         assert_eq!(f.total_bytes(), 0);
+    }
+
+    #[test]
+    fn ring_allgather_dispatch_matches_naive_bitwise() {
+        let group = [0usize, 1, 2];
+        let parts = [tensor(2, 2, 0.0), tensor(2, 3, 50.0), tensor(2, 1, 90.0)];
+        let f1 = Fabric::new(3);
+        let naive = allgather_cols(&f1, &group, &parts, Tag::new(1, 0, 0)).unwrap();
+        let f2 = Fabric::new(3);
+        let ring =
+            allgather_cols_algo(CollectiveAlgo::Ring, &f2, &group, &parts, Tag::new(1, 0, 0))
+                .unwrap();
+        for (a, b) in naive.iter().zip(ring.iter()) {
+            assert_eq!(a.as_f32(), b.as_f32());
+        }
+        assert!(f2.drained());
+        // Same per-rank byte totals (every rank forwards k-1 chunks).
+        assert_eq!(f1.bytes_from(0) + f1.bytes_from(1) + f1.bytes_from(2), f2.total_bytes());
+    }
+
+    #[test]
+    fn ring_reduce_scatter_dispatch_matches_naive() {
+        let group = [0usize, 1, 2, 3];
+        let fulls: Vec<HostTensor> = (0..4).map(|i| tensor(2, 8, i as f32 * 10.0)).collect();
+        let widths = [2usize, 2, 2, 2];
+        let f1 = Fabric::new(4);
+        let naive =
+            reduce_scatter_cols(&f1, &group, &fulls, &widths, Tag::new(2, 0, 0)).unwrap();
+        let f2 = Fabric::new(4);
+        let ring = reduce_scatter_cols_algo(
+            CollectiveAlgo::Ring,
+            &f2,
+            &group,
+            &fulls,
+            &widths,
+            Tag::new(2, 0, 0),
+        )
+        .unwrap();
+        for (a, b) in naive.iter().zip(ring.iter()) {
+            assert_eq!(a.shape, b.shape);
+            let d = a.max_abs_diff(b);
+            assert!(d < 1e-4, "diverged by {d}");
+        }
+        assert!(f2.drained());
+        // Equal per-rank totals: (k-1)/k of the full width each.
+        for r in 0..4 {
+            assert_eq!(f1.bytes_from(r), f2.bytes_from(r));
+        }
+    }
+
+    #[test]
+    fn rhd_allreduce_matches_mean_po2_and_non_po2() {
+        for n in [2usize, 3, 4, 5, 6, 8] {
+            let group: Vec<usize> = (0..n).collect();
+            let len = 13;
+            let mut bufs: Vec<Vec<f32>> = (0..n)
+                .map(|i| (0..len).map(|j| (i * len + j) as f32).collect())
+                .collect();
+            let expect: Vec<f32> = (0..len)
+                .map(|j| (0..n).map(|i| (i * len + j) as f32).sum::<f32>() / n as f32)
+                .collect();
+            let f = Fabric::new(n);
+            allreduce_mean(CollectiveAlgo::Rhd, &f, &group, &mut bufs, 3).unwrap();
+            for b in &bufs {
+                for (a, e) in b.iter().zip(expect.iter()) {
+                    assert!((a - e).abs() < 1e-4, "n={n}: {a} vs {e}");
+                }
+            }
+            assert!(f.drained(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn rhd_bytes_match_ring_optimum_at_po2() {
+        let n = 8;
+        let len = 1 << 12;
+        let group: Vec<usize> = (0..n).collect();
+        let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; len]).collect();
+        let f = Fabric::new(n);
+        allreduce_mean(CollectiveAlgo::Rhd, &f, &group, &mut bufs, 3).unwrap();
+        // Per-rank: 2·(n-1)/n·V bytes, same as the ring optimum.
+        let v = (len * 4) as u64;
+        let optimum = 2 * (n as u64 - 1) * v / n as u64;
+        for r in 0..n {
+            let got = f.bytes_from(r);
+            assert!(
+                got <= optimum + 64 && got + 64 >= optimum,
+                "rank {r}: {got} vs {optimum}"
+            );
+        }
+    }
+
+    #[test]
+    fn naive_allreduce_is_all_to_all() {
+        let n = 4;
+        let group: Vec<usize> = (0..n).collect();
+        let mut bufs: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; 100]).collect();
+        let f = Fabric::new(n);
+        allreduce_mean(CollectiveAlgo::Naive, &f, &group, &mut bufs, 5).unwrap();
+        for b in &bufs {
+            for v in b {
+                assert!((v - 1.5).abs() < 1e-6);
+            }
+        }
+        // Per rank: (n-1)·V bytes.
+        assert_eq!(f.bytes_from(0), 3 * 400);
+    }
+
+    #[test]
+    fn algo_parsing_and_display() {
+        assert_eq!(CollectiveAlgo::parse("ring").unwrap(), CollectiveAlgo::Ring);
+        assert_eq!(CollectiveAlgo::parse("naive").unwrap(), CollectiveAlgo::Naive);
+        assert_eq!(CollectiveAlgo::parse("RHD").unwrap(), CollectiveAlgo::Rhd);
+        assert!(CollectiveAlgo::parse("zzz").is_err());
+        assert_eq!(format!("{}", CollectiveAlgo::Ring), "ring");
+    }
+
+    #[test]
+    fn prev_pow2_values() {
+        assert_eq!(prev_pow2(1), 1);
+        assert_eq!(prev_pow2(2), 2);
+        assert_eq!(prev_pow2(3), 2);
+        assert_eq!(prev_pow2(6), 4);
+        assert_eq!(prev_pow2(8), 8);
     }
 }

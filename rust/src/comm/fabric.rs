@@ -1,17 +1,43 @@
-//! The in-process GASPI-like fabric.
+//! The in-process GASPI-like fabric — now thread-safe.
 //!
 //! GPI-2 exposes segments + one-sided `write_notify`: the sender pushes
-//! into a remote segment and posts a notification the receiver waits on.
-//! Here a message is (src, dst, tag) -> payload queue; the BSP schedule
-//! guarantees every `take` follows its `post` within a step, and a
-//! missing notification is a hard error (a schedule bug), never a hang.
+//! into a remote segment and posts a notification the receiver waits
+//! on. Here a message channel is (src, dst, tag) → FIFO payload queue,
+//! and all payload bytes are counted per (src, dst) pair — the numbers
+//! the network cost model and Fig. 7b's overhead breakdown are driven
+//! by.
 //!
-//! All payload bytes are counted per (src, dst) pair — the numbers the
-//! network cost model and Fig. 7b's overhead breakdown are driven by.
+//! ## Thread-safety contract
+//!
+//! All methods take `&self`; the mailbox and the byte/message counters
+//! live behind one mutex, with a condvar signalling message arrival.
+//! This gives the two execution engines their distinct wait semantics:
+//!
+//! * **Sequential engine** — the coordinator interleaves every rank's
+//!   posts before the matching takes, so a missing notification is a
+//!   *schedule bug*: [`Fabric::take`] fails immediately, never blocks.
+//! * **Threaded engine** — ranks run concurrently on their own OS
+//!   threads and a receiver may arrive before its sender:
+//!   [`Fabric::take_blocking`] parks on the condvar until the payload
+//!   lands. A generous timeout ([`TAKE_TIMEOUT_SECS`]) converts a
+//!   deadlocked schedule into a hard error instead of a hang,
+//!   preserving the seed's "a missing notification is an error, never
+//!   a hang" guarantee.
+//!
+//! Counters are updated atomically with the enqueue under the same
+//! lock, so per-step snapshots (`max_bytes_per_rank`, `total_bytes`)
+//! taken after the worker threads join are exact.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+/// Blocking-take timeout: far above any worker's per-phase compute time
+/// (the slowest native segment is a few seconds), so it only fires on a
+/// genuinely wedged schedule.
+pub const TAKE_TIMEOUT_SECS: u64 = 120;
 
 /// Message tag: disambiguates concurrent exchanges (phase, iteration,
 /// layer). Build with [`Tag::new`].
@@ -25,81 +51,143 @@ impl Tag {
     }
 }
 
-/// The fabric: mailboxes + byte counters for `n` ranks.
-#[derive(Debug)]
-pub struct Fabric {
-    n: usize,
-    mail: HashMap<(usize, usize, Tag), Vec<Vec<f32>>>,
+/// Mailbox state guarded by the fabric mutex.
+#[derive(Debug, Default)]
+struct MailState {
+    mail: HashMap<(usize, usize, Tag), VecDeque<Vec<f32>>>,
     /// bytes_sent[src][dst]
     bytes_sent: Vec<Vec<u64>>,
     msgs_sent: Vec<Vec<u64>>,
 }
 
+/// The fabric: per-(src, dst, tag) channel mailboxes + byte counters
+/// for `n` ranks. Shared by reference across worker threads.
+#[derive(Debug)]
+pub struct Fabric {
+    n: usize,
+    state: Mutex<MailState>,
+    arrived: Condvar,
+}
+
 impl Fabric {
+    /// Create a fabric connecting `n` ranks.
     pub fn new(n: usize) -> Fabric {
         Fabric {
             n,
-            mail: HashMap::new(),
-            bytes_sent: vec![vec![0; n]; n],
-            msgs_sent: vec![vec![0; n]; n],
+            state: Mutex::new(MailState {
+                mail: HashMap::new(),
+                bytes_sent: vec![vec![0; n]; n],
+                msgs_sent: vec![vec![0; n]; n],
+            }),
+            arrived: Condvar::new(),
         }
     }
 
+    /// Number of ranks the fabric connects.
     pub fn ranks(&self) -> usize {
         self.n
     }
 
     /// One-sided write+notify: push `payload` into dst's segment.
     /// Self-sends are forbidden (local copies are not network traffic).
-    pub fn post(&mut self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
+    pub fn post(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
         assert!(src < self.n && dst < self.n, "rank out of range");
         assert_ne!(src, dst, "self-send: local data must not cross the fabric");
-        self.bytes_sent[src][dst] += (payload.len() * 4) as u64;
-        self.msgs_sent[src][dst] += 1;
-        self.mail.entry((src, dst, tag)).or_default().push(payload);
+        let mut st = self.state.lock().unwrap();
+        st.bytes_sent[src][dst] += (payload.len() * 4) as u64;
+        st.msgs_sent[src][dst] += 1;
+        st.mail.entry((src, dst, tag)).or_default().push_back(payload);
+        drop(st);
+        self.arrived.notify_all();
     }
 
-    /// Wait on the notification from (src, tag) and take the payload.
+    /// Non-blocking take (sequential engine): pop the notification from
+    /// (src, tag), erroring immediately when nothing is queued — in a
+    /// coordinator-interleaved schedule that is always a schedule bug.
     /// FIFO per (src, dst, tag).
-    pub fn take(&mut self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
-        match self.mail.get_mut(&(src, dst, tag)) {
-            Some(q) if !q.is_empty() => Ok(q.remove(0)),
+    pub fn take(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
+        let mut st = self.state.lock().unwrap();
+        match st.mail.get_mut(&(src, dst, tag)) {
+            Some(q) if !q.is_empty() => Ok(q.pop_front().expect("checked non-empty")),
             _ => bail!(
                 "fabric: rank {dst} waiting on missing message from {src} tag {tag:?} — schedule bug"
             ),
         }
     }
 
+    /// Blocking take (threaded engine): wait on the (src, tag)
+    /// notification until the payload arrives. Times out after
+    /// [`TAKE_TIMEOUT_SECS`] with a hard error — a wedged schedule must
+    /// fail loudly, never hang. FIFO per (src, dst, tag).
+    pub fn take_blocking(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
+        let deadline = Instant::now() + Duration::from_secs(TAKE_TIMEOUT_SECS);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(q) = st.mail.get_mut(&(src, dst, tag)) {
+                if let Some(payload) = q.pop_front() {
+                    return Ok(payload);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "fabric: rank {dst} timed out ({TAKE_TIMEOUT_SECS}s) waiting on message \
+                     from {src} tag {tag:?} — schedule deadlock"
+                );
+            }
+            let (guard, _timeout) = self
+                .arrived
+                .wait_timeout(st, deadline.saturating_duration_since(now))
+                .unwrap();
+            st = guard;
+        }
+    }
+
     /// True if no undelivered messages remain (asserted at step ends —
     /// leftover mail means the schedule posted more than it consumed).
     pub fn drained(&self) -> bool {
-        self.mail.values().all(Vec::is_empty)
+        self.state.lock().unwrap().mail.values().all(VecDeque::is_empty)
     }
 
     /// Total bytes sent by `src` since the last reset.
     pub fn bytes_from(&self, src: usize) -> u64 {
-        self.bytes_sent[src].iter().sum()
+        self.state.lock().unwrap().bytes_sent[src].iter().sum()
+    }
+
+    /// Bytes sent over the (src, dst) link since the last reset.
+    pub fn bytes_on_link(&self, src: usize, dst: usize) -> u64 {
+        self.state.lock().unwrap().bytes_sent[src][dst]
     }
 
     /// Total bytes over the whole fabric.
     pub fn total_bytes(&self) -> u64 {
-        (0..self.n).map(|s| self.bytes_from(s)).sum()
+        let st = self.state.lock().unwrap();
+        st.bytes_sent.iter().flatten().sum()
     }
 
     /// Max bytes sent by any single rank (per-link critical path).
     pub fn max_bytes_per_rank(&self) -> u64 {
-        (0..self.n).map(|s| self.bytes_from(s)).max().unwrap_or(0)
+        let st = self.state.lock().unwrap();
+        st.bytes_sent
+            .iter()
+            .map(|row| row.iter().sum::<u64>())
+            .max()
+            .unwrap_or(0)
     }
 
+    /// Total messages posted since the last reset.
     pub fn total_msgs(&self) -> u64 {
-        self.msgs_sent.iter().flatten().sum()
+        let st = self.state.lock().unwrap();
+        st.msgs_sent.iter().flatten().sum()
     }
 
-    pub fn reset_counters(&mut self) {
-        for row in &mut self.bytes_sent {
+    /// Zero the byte/message counters (mailboxes are untouched).
+    pub fn reset_counters(&self) {
+        let mut st = self.state.lock().unwrap();
+        for row in &mut st.bytes_sent {
             row.fill(0);
         }
-        for row in &mut self.msgs_sent {
+        for row in &mut st.msgs_sent {
             row.fill(0);
         }
     }
@@ -111,7 +199,7 @@ mod tests {
 
     #[test]
     fn post_take_roundtrip() {
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         let t = Tag::new(1, 0, 0);
         f.post(0, 1, t, vec![1.0, 2.0]);
         assert_eq!(f.take(1, 0, t).unwrap(), vec![1.0, 2.0]);
@@ -120,13 +208,13 @@ mod tests {
 
     #[test]
     fn missing_message_is_error_not_hang() {
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         assert!(f.take(1, 0, Tag::new(0, 0, 0)).is_err());
     }
 
     #[test]
     fn fifo_per_channel() {
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         let t = Tag::new(0, 0, 0);
         f.post(0, 1, t, vec![1.0]);
         f.post(0, 1, t, vec![2.0]);
@@ -136,7 +224,7 @@ mod tests {
 
     #[test]
     fn tags_isolate_channels() {
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         f.post(0, 1, Tag::new(0, 0, 1), vec![1.0]);
         f.post(0, 1, Tag::new(0, 0, 2), vec![2.0]);
         assert_eq!(f.take(1, 0, Tag::new(0, 0, 2)).unwrap(), vec![2.0]);
@@ -145,7 +233,7 @@ mod tests {
 
     #[test]
     fn byte_accounting() {
-        let mut f = Fabric::new(3);
+        let f = Fabric::new(3);
         f.post(0, 1, Tag::new(0, 0, 0), vec![0.0; 100]);
         f.post(0, 2, Tag::new(0, 0, 0), vec![0.0; 50]);
         f.post(1, 0, Tag::new(0, 0, 0), vec![0.0; 10]);
@@ -153,6 +241,7 @@ mod tests {
         assert_eq!(f.bytes_from(1), 40);
         assert_eq!(f.total_bytes(), 640);
         assert_eq!(f.max_bytes_per_rank(), 600);
+        assert_eq!(f.bytes_on_link(0, 1), 400);
         assert_eq!(f.total_msgs(), 3);
         f.reset_counters();
         assert_eq!(f.total_bytes(), 0);
@@ -161,7 +250,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "self-send")]
     fn self_send_forbidden() {
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         f.post(0, 0, Tag::new(0, 0, 0), vec![1.0]);
     }
 
@@ -169,5 +258,26 @@ mod tests {
     fn tag_composition_unique() {
         assert_ne!(Tag::new(1, 0, 0), Tag::new(0, 1, 0));
         assert_ne!(Tag::new(0, 1, 0), Tag::new(0, 0, 1));
+    }
+
+    #[test]
+    fn blocking_take_crosses_threads() {
+        let f = std::sync::Arc::new(Fabric::new(2));
+        let t = Tag::new(9, 0, 0);
+        let g = f.clone();
+        let h = std::thread::spawn(move || g.take_blocking(1, 0, t).unwrap());
+        // Give the receiver a head start so it really parks.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        f.post(0, 1, t, vec![7.0]);
+        assert_eq!(h.join().unwrap(), vec![7.0]);
+        assert!(f.drained());
+    }
+
+    #[test]
+    fn blocking_take_sees_already_posted() {
+        let f = Fabric::new(2);
+        let t = Tag::new(9, 1, 0);
+        f.post(0, 1, t, vec![3.0]);
+        assert_eq!(f.take_blocking(1, 0, t).unwrap(), vec![3.0]);
     }
 }

@@ -5,9 +5,13 @@
 //! The paper runs on GPI-2/GASPI one-sided RDMA over 56 Gbps InfiniBand
 //! (§4, §5.1). This repo simulates the cluster in-process (DESIGN.md §1):
 //! [`fabric`] provides the one-sided write+notify semantics with exact
-//! byte accounting, data moves for real (the numerics are bit-faithful),
-//! and [`netmodel`] charges simulated wire time that the cluster clock
-//! composes with measured PJRT compute time.
+//! byte accounting — thread-safe, so worker threads exchange directly —
+//! data moves for real (the numerics are bit-faithful), and
+//! [`netmodel`] charges simulated wire time that the cluster clock
+//! composes with measured compute time. [`collective`] hosts the
+//! algorithm families ([`CollectiveAlgo`]: naive all-to-all, ring,
+//! recursive halving/doubling) in both group-view and per-rank (SPMD)
+//! forms.
 
 pub mod collective;
 pub mod fabric;
@@ -15,6 +19,7 @@ pub mod netmodel;
 pub mod topology;
 pub mod trace;
 
+pub use collective::CollectiveAlgo;
 pub use fabric::Fabric;
 pub use netmodel::NetModel;
 pub use topology::CommGraph;

@@ -39,15 +39,19 @@ impl Default for NetModel {
 /// pushed out (one-sided writes).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PhaseVolume {
+    /// Messages posted by the rank in this phase.
     pub msgs: u64,
+    /// Bytes pushed out by the rank in this phase.
     pub bytes_out: u64,
 }
 
 impl PhaseVolume {
+    /// Build a volume from message and byte counts.
     pub fn new(msgs: u64, bytes_out: u64) -> Self {
         PhaseVolume { msgs, bytes_out }
     }
 
+    /// Accumulate another phase's volume.
     pub fn add(&mut self, other: PhaseVolume) {
         self.msgs += other.msgs;
         self.bytes_out += other.bytes_out;
@@ -138,6 +142,30 @@ impl NetModel {
             return 0.0;
         }
         self.phase_time(PhaseVolume::new(2 * n as u64, 2 * n as u64 * bytes))
+    }
+
+    /// Naive all-to-all allreduce: every rank pushes the full buffer to
+    /// the n-1 others in one phase, reduces locally.
+    pub fn naive_allreduce(&self, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        self.phase_time(PhaseVolume::new((n - 1) as u64, (n - 1) as u64 * bytes))
+    }
+
+    /// Recursive halving/doubling allreduce: 2·log2(p) pairwise phases
+    /// of shrinking/growing halves (p = largest power of two ≤ n), plus
+    /// a fold/unfold round trip when n is not a power of two. Returns
+    /// the modeled time of the slowest rank.
+    pub fn rhd_allreduce(&self, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let v = super::collective::rhd_worst_rank_volume(n, bytes);
+        // Each message is its own pairwise phase (serialized rounds):
+        // per-phase overhead and latency accrue per message, bandwidth
+        // over the exact total volume.
+        v.msgs as f64 * (self.phase_overhead + self.alpha) + v.bytes_out as f64 / self.beta
     }
 }
 

@@ -27,6 +27,7 @@ pub enum CommCategory {
 }
 
 impl CommCategory {
+    /// Every category, in reporting order.
     pub const ALL: [CommCategory; 6] = [
         CommCategory::DpAverage,
         CommCategory::ShardAverage,
@@ -78,6 +79,7 @@ pub struct CommTrace {
 }
 
 impl CommTrace {
+    /// Empty trace.
     pub fn new() -> CommTrace {
         CommTrace::default()
     }
@@ -115,22 +117,27 @@ impl CommTrace {
         self.record_phase(cat, net, &vols);
     }
 
+    /// Modeled wire seconds accumulated for a category.
     pub fn seconds(&self, cat: CommCategory) -> f64 {
         self.seconds[cat.index()]
     }
 
+    /// Critical-path bytes accumulated for a category.
     pub fn bytes(&self, cat: CommCategory) -> u64 {
         self.bytes[cat.index()]
     }
 
+    /// Critical-path messages accumulated for a category.
     pub fn msgs(&self, cat: CommCategory) -> u64 {
         self.msgs[cat.index()]
     }
 
+    /// Total modeled seconds over all categories.
     pub fn total_seconds(&self) -> f64 {
         self.seconds.iter().sum()
     }
 
+    /// Seconds attributable to model parallelism.
     pub fn mp_seconds(&self) -> f64 {
         CommCategory::ALL
             .iter()
@@ -139,14 +146,17 @@ impl CommTrace {
             .sum()
     }
 
+    /// Seconds attributable to DP model averaging.
     pub fn dp_seconds(&self) -> f64 {
         self.seconds(CommCategory::DpAverage)
     }
 
+    /// Total critical-path bytes over all categories.
     pub fn total_bytes(&self) -> u64 {
         self.bytes.iter().sum()
     }
 
+    /// Fold another trace's accumulators into this one.
     pub fn merge(&mut self, other: &CommTrace) {
         for i in 0..6 {
             self.bytes[i] += other.bytes[i];
@@ -156,6 +166,7 @@ impl CommTrace {
         }
     }
 
+    /// Clear all accumulators.
     pub fn reset(&mut self) {
         *self = CommTrace::default();
     }

@@ -8,12 +8,17 @@
 //!   one per MP group — "exchanging the model shard parameters for
 //!   model averaging across MP groups".
 //!
-//! The exchange itself is a ring allreduce over the fabric (real data
-//! movement, bandwidth-optimal byte counts).
+//! The exchange itself is an allreduce over the fabric (real data
+//! movement, exact byte counts); the algorithm — naive all-to-all,
+//! bandwidth-optimal ring, or recursive halving/doubling — is selected
+//! by [`CollectiveAlgo`]. Group-view entry points (sequential engine)
+//! and per-rank entry points (threaded engine, one call per worker
+//! thread) share the same per-rank programs, so both engines produce
+//! bit-identical averages.
 
 use anyhow::Result;
 
-use crate::comm::collective::ring_allreduce_mean;
+use crate::comm::collective::{allreduce_mean, allreduce_mean_rank, CollectiveAlgo};
 use crate::comm::Fabric;
 
 use super::group::GmpTopology;
@@ -25,7 +30,11 @@ const TAG_SHARD_BASE: u16 = 2000;
 
 /// Average replicated parameters across all workers. Returns bytes
 /// pushed by the busiest rank (for the trace).
-pub fn average_replicated(fabric: &mut Fabric, workers: &mut [Worker]) -> Result<u64> {
+pub fn average_replicated(
+    fabric: &Fabric,
+    workers: &mut [Worker],
+    algo: CollectiveAlgo,
+) -> Result<u64> {
     let n = workers.len();
     if n <= 1 {
         return Ok(0);
@@ -33,7 +42,7 @@ pub fn average_replicated(fabric: &mut Fabric, workers: &mut [Worker]) -> Result
     let group: Vec<usize> = (0..n).collect();
     let mut bufs: Vec<Vec<f32>> = workers.iter().map(|w| w.replicated_flat()).collect();
     let before = fabric.max_bytes_per_rank();
-    ring_allreduce_mean(fabric, &group, &mut bufs, TAG_REPLICATED)?;
+    allreduce_mean(algo, fabric, &group, &mut bufs, TAG_REPLICATED)?;
     let pushed = fabric.max_bytes_per_rank() - before;
     for (w, buf) in workers.iter_mut().zip(bufs.iter()) {
         w.set_replicated_flat(buf);
@@ -41,12 +50,13 @@ pub fn average_replicated(fabric: &mut Fabric, workers: &mut [Worker]) -> Result
     Ok(pushed)
 }
 
-/// Average FC shard parameters across same-offset peers (one ring per
-/// shard offset). Returns bytes pushed by the busiest rank.
+/// Average FC shard parameters across same-offset peers (one allreduce
+/// group per shard offset). Returns bytes pushed by the busiest rank.
 pub fn average_shards(
-    fabric: &mut Fabric,
+    fabric: &Fabric,
     workers: &mut [Worker],
     topo: &GmpTopology,
+    algo: CollectiveAlgo,
 ) -> Result<u64> {
     if topo.mp == 1 || topo.n_groups() <= 1 {
         return Ok(0);
@@ -56,12 +66,43 @@ pub fn average_shards(
         let peers = topo.shard_peers(offset);
         let mut bufs: Vec<Vec<f32>> =
             peers.iter().map(|&r| workers[r].shards_flat()).collect();
-        ring_allreduce_mean(fabric, &peers, &mut bufs, TAG_SHARD_BASE + offset as u16)?;
+        allreduce_mean(algo, fabric, &peers, &mut bufs, TAG_SHARD_BASE + offset as u16)?;
         for (&r, buf) in peers.iter().zip(bufs.iter()) {
             workers[r].set_shards_flat(buf);
         }
     }
     Ok(fabric.max_bytes_per_rank() - before)
+}
+
+/// Per-rank averaging participation (threaded engine): rank `rank`
+/// contributes its replicated parameters to the all-N allreduce, then
+/// its FC shards to the same-offset peer allreduce. Mutates the worker
+/// in place; every rank of the cluster must call this in the same BSP
+/// superstep.
+pub fn average_rank(
+    fabric: &Fabric,
+    worker: &mut Worker,
+    rank: usize,
+    n_workers: usize,
+    topo: &GmpTopology,
+    algo: CollectiveAlgo,
+) -> Result<()> {
+    if n_workers > 1 {
+        let group: Vec<usize> = (0..n_workers).collect();
+        let mut buf = worker.replicated_flat();
+        allreduce_mean_rank(algo, fabric, &group, rank, &mut buf, TAG_REPLICATED)?;
+        worker.set_replicated_flat(&buf);
+    }
+    if topo.mp > 1 && topo.n_groups() > 1 {
+        let offset = topo.offset(rank);
+        let peers = topo.shard_peers(offset);
+        let gi = topo.gid(rank);
+        debug_assert_eq!(peers[gi], rank);
+        let mut buf = worker.shards_flat();
+        allreduce_mean_rank(algo, fabric, &peers, gi, &mut buf, TAG_SHARD_BASE + offset as u16)?;
+        worker.set_shards_flat(&buf);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -80,17 +121,19 @@ mod tests {
 
     #[test]
     fn replicated_average_converges_to_mean() {
-        let (mut ws, _) = workers(4, 2);
-        // Perturb each worker's conv params differently.
-        for (i, w) in ws.iter_mut().enumerate() {
-            w.conv_params[0].as_f32_mut()[0] = i as f32;
+        for algo in [CollectiveAlgo::Naive, CollectiveAlgo::Ring, CollectiveAlgo::Rhd] {
+            let (mut ws, _) = workers(4, 2);
+            // Perturb each worker's conv params differently.
+            for (i, w) in ws.iter_mut().enumerate() {
+                w.conv_params[0].as_f32_mut()[0] = i as f32;
+            }
+            let fabric = Fabric::new(4);
+            average_replicated(&fabric, &mut ws, algo).unwrap();
+            for w in &ws {
+                assert!((w.conv_params[0].as_f32()[0] - 1.5).abs() < 1e-5, "{algo}");
+            }
+            assert!(fabric.drained());
         }
-        let mut fabric = Fabric::new(4);
-        average_replicated(&mut fabric, &mut ws).unwrap();
-        for w in &ws {
-            assert!((w.conv_params[0].as_f32()[0] - 1.5).abs() < 1e-5);
-        }
-        assert!(fabric.drained());
     }
 
     #[test]
@@ -101,8 +144,8 @@ mod tests {
         ws[2].fc_params[0].as_f32_mut()[0] = 20.0;
         ws[1].fc_params[0].as_f32_mut()[0] = 100.0;
         ws[3].fc_params[0].as_f32_mut()[0] = 200.0;
-        let mut fabric = Fabric::new(4);
-        average_shards(&mut fabric, &mut ws, &topo).unwrap();
+        let fabric = Fabric::new(4);
+        average_shards(&fabric, &mut ws, &topo, CollectiveAlgo::Ring).unwrap();
         assert!((ws[0].fc_params[0].as_f32()[0] - 15.0).abs() < 1e-5);
         assert!((ws[2].fc_params[0].as_f32()[0] - 15.0).abs() < 1e-5);
         assert!((ws[1].fc_params[0].as_f32()[0] - 150.0).abs() < 1e-5);
@@ -112,16 +155,16 @@ mod tests {
     #[test]
     fn single_worker_is_noop() {
         let (mut ws, topo) = workers(1, 1);
-        let mut fabric = Fabric::new(1);
-        assert_eq!(average_replicated(&mut fabric, &mut ws).unwrap(), 0);
-        assert_eq!(average_shards(&mut fabric, &mut ws, &topo).unwrap(), 0);
+        let fabric = Fabric::new(1);
+        assert_eq!(average_replicated(&fabric, &mut ws, CollectiveAlgo::Ring).unwrap(), 0);
+        assert_eq!(average_shards(&fabric, &mut ws, &topo, CollectiveAlgo::Ring).unwrap(), 0);
     }
 
     #[test]
     fn single_group_skips_shard_average() {
         let (mut ws, topo) = workers(2, 2);
-        let mut fabric = Fabric::new(2);
-        let bytes = average_shards(&mut fabric, &mut ws, &topo).unwrap();
+        let fabric = Fabric::new(2);
+        let bytes = average_shards(&fabric, &mut ws, &topo, CollectiveAlgo::Ring).unwrap();
         assert_eq!(bytes, 0);
     }
 
@@ -129,11 +172,46 @@ mod tests {
     fn identical_replicas_stay_identical() {
         let (mut ws, _) = workers(4, 1);
         let before = ws[0].replicated_flat();
-        let mut fabric = Fabric::new(4);
-        average_replicated(&mut fabric, &mut ws).unwrap();
+        let fabric = Fabric::new(4);
+        average_replicated(&fabric, &mut ws, CollectiveAlgo::Ring).unwrap();
         let after = ws[0].replicated_flat();
         for (a, b) in before.iter().zip(after.iter()) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn per_rank_average_matches_group_view() {
+        // Threaded-style per-rank calls (on threads) must reproduce the
+        // group-view result bit-for-bit.
+        let algo = CollectiveAlgo::Ring;
+        let perturb = |ws: &mut [Worker]| {
+            for (i, w) in ws.iter_mut().enumerate() {
+                w.conv_params[0].as_f32_mut()[0] = i as f32 * 3.0;
+                w.fc_params[0].as_f32_mut()[0] = i as f32 * 7.0;
+            }
+        };
+        let (mut ws_a, topo) = workers(4, 2);
+        perturb(&mut ws_a);
+        let (mut ws_b, _) = workers(4, 2);
+        perturb(&mut ws_b);
+
+        let fa = Fabric::new(4);
+        average_replicated(&fa, &mut ws_a, algo).unwrap();
+        average_shards(&fa, &mut ws_a, &topo, algo).unwrap();
+
+        let fb = Fabric::new(4);
+        std::thread::scope(|s| {
+            for (rank, w) in ws_b.iter_mut().enumerate() {
+                let fb = &fb;
+                let topo = &topo;
+                s.spawn(move || average_rank(fb, w, rank, 4, topo, algo).unwrap());
+            }
+        });
+        for (a, b) in ws_a.iter().zip(ws_b.iter()) {
+            assert_eq!(a.replicated_flat(), b.replicated_flat());
+            assert_eq!(a.shards_flat(), b.shards_flat());
+        }
+        assert_eq!(fa.total_bytes(), fb.total_bytes());
     }
 }

@@ -3,17 +3,30 @@
 //!
 //! ## Simulation model (DESIGN.md §1)
 //!
-//! Workers are deterministic state machines driven BSP-phase by
-//! BSP-phase on one OS thread. *Numerics are real*: every segment runs
-//! through PJRT, every exchange moves real bytes through the fabric, so
-//! loss curves and gradients are exactly what an N-machine deployment
-//! would compute. *Time is simulated*: each worker's compute seconds
-//! are measured around its own PJRT/host calls, communication seconds
-//! come from the α–β model over the schedule's per-phase volumes, and
-//! one step costs `max_w(compute_w) + Σ comm phases` on the simulated
-//! clock — the BSP critical path. This avoids the distortion of
-//! oversubscribing N workers' compute onto one machine's cores and is
-//! exactly the quantity Table 2 reports per machine count.
+//! Workers are deterministic state machines. *Numerics are real*: every
+//! segment runs through the runtime, every exchange moves real bytes
+//! through the fabric, so loss curves and gradients are exactly what an
+//! N-machine deployment would compute. *Time is simulated*: each
+//! worker's compute seconds are measured around its own segment/host
+//! calls, communication seconds come from the α–β model over the
+//! schedule's per-phase volumes, and one step costs
+//! `max_w(compute_w) + Σ comm phases` on the simulated clock — the BSP
+//! critical path. This avoids the distortion of oversubscribing N
+//! workers' compute onto one machine's cores and is exactly the
+//! quantity Table 2 reports per machine count.
+//!
+//! ## Engines
+//!
+//! [`ExecEngine`] selects how a step executes: `Threaded` (default)
+//! runs every worker's compute + exchanges on its own scoped thread
+//! over the thread-safe fabric; `Sequential` is the seed's
+//! coordinator-interleaved reference. The two are bit-identical
+//! (`engine_parity` test); only host wall-clock differs. Caveat for
+//! *measured* compute: the threaded engine oversubscribes this host's
+//! cores when N exceeds them, so per-worker `compute_secs` picks up
+//! contention — the numeric-fidelity benches therefore measure on the
+//! sequential engine (see `bench::run_config`), which times each
+//! worker contention-free.
 //!
 //! ## Modes
 //!
@@ -25,6 +38,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::comm::collective::CollectiveAlgo;
 use crate::comm::fabric::{Fabric, Tag};
 use crate::comm::NetModel;
 use crate::data::{BatchIter, Dataset};
@@ -34,6 +48,7 @@ use crate::train::{MemoryReport, StepMetrics, TrainReport};
 use crate::util::Timer;
 
 use super::averaging::{average_replicated, average_shards};
+use super::engine::{full_step_worker, run_threaded_step, ExecEngine, StepCtx};
 use super::group::GmpTopology;
 use super::modulo::ModuloPlan;
 use super::schedule::StepSchedule;
@@ -72,6 +87,14 @@ pub struct ClusterConfig {
     /// §3.1 communication scheme for the modulo layer (default B/K,
     /// SplitBrain's; B and BK are the Krizhevsky'14 baselines).
     pub scheme: McastScheme,
+    /// Execution engine: one thread per worker (default) or the
+    /// coordinator-interleaved sequential reference. Numerics are
+    /// bit-identical between the two (asserted by the parity test).
+    pub engine: ExecEngine,
+    /// Collective algorithm for the shard exchanges and BSP model
+    /// averaging (default ring; naive all-to-all and recursive
+    /// halving/doubling are selectable for the Fig. 7b comparison).
+    pub collectives: CollectiveAlgo,
 }
 
 impl Default for ClusterConfig {
@@ -88,6 +111,8 @@ impl Default for ClusterConfig {
             dataset_size: 2048,
             segmented_mp1: false,
             scheme: McastScheme::BoverK,
+            engine: ExecEngine::Threaded,
+            collectives: CollectiveAlgo::Ring,
         }
     }
 }
@@ -95,9 +120,13 @@ impl Default for ClusterConfig {
 /// The numeric-fidelity cluster.
 pub struct Cluster<'rt> {
     rt: &'rt RuntimeClient,
+    /// The configuration the cluster was built with.
     pub cfg: ClusterConfig,
+    /// DP×MP topology.
     pub topo: GmpTopology,
+    /// Compiled per-step schedule (compute inventory + comm volumes).
     pub schedule: StepSchedule,
+    /// The Fig. 3 transformed per-worker network.
     pub transformed: TransformedNet,
     workers: Vec<Worker>,
     iters: Vec<BatchIter>,
@@ -136,12 +165,13 @@ impl<'rt> Cluster<'rt> {
             vec![32, 32, 3],
             &PartitionConfig { mp: cfg.mp, ..Default::default() },
         )?;
-        let schedule = StepSchedule::compile_full(
+        let schedule = StepSchedule::compile_with_algo(
             &transformed,
             topo,
             &rt.manifest,
             cfg.segmented_mp1,
             cfg.scheme,
+            cfg.collectives,
         )?;
         let batch = rt.manifest.batch;
 
@@ -209,28 +239,59 @@ impl<'rt> Cluster<'rt> {
         self.cfg.n_workers > 1 && self.step_count % self.cfg.avg_period == 0
     }
 
-    /// One BSP training step across all groups.
+    /// One BSP training step across all groups, on the configured
+    /// engine. Both engines produce bit-identical numerics; the
+    /// threaded engine overlaps the workers' wall-clock compute.
     pub fn step(&mut self) -> Result<StepMetrics> {
         for w in &mut self.workers {
             w.begin_step();
             w.compute_secs = 0.0;
         }
         let batches: Vec<_> = self.iters.iter_mut().map(|it| it.next_batch()).collect();
+        // Averaging every avg_period steps (counting from step 1).
+        let averaging_due =
+            self.cfg.n_workers > 1 && (self.step_count + 1) % self.cfg.avg_period == 0;
 
-        if self.cfg.mp == 1 && !self.cfg.segmented_mp1 {
-            self.step_pure_dp(&batches)?;
-        } else {
-            for gid in 0..self.topo.n_groups() {
-                self.step_group(gid, &batches)?;
+        match self.cfg.engine {
+            ExecEngine::Sequential => {
+                if self.cfg.mp == 1 && !self.cfg.segmented_mp1 {
+                    self.step_pure_dp(&batches)?;
+                } else {
+                    for gid in 0..self.topo.n_groups() {
+                        self.step_group(gid, &batches)?;
+                    }
+                }
+                if averaging_due {
+                    average_replicated(&self.fabric, &mut self.workers, self.cfg.collectives)?;
+                    average_shards(
+                        &self.fabric,
+                        &mut self.workers,
+                        &self.topo,
+                        self.cfg.collectives,
+                    )?;
+                }
+            }
+            ExecEngine::Threaded => {
+                let barrier = std::sync::Barrier::new(self.cfg.n_workers);
+                let ctx = StepCtx {
+                    rt: self.rt,
+                    fabric: &self.fabric,
+                    topo: &self.topo,
+                    schedule: &self.schedule,
+                    scheme: self.cfg.scheme,
+                    algo: self.cfg.collectives,
+                    segmented_mp1: self.cfg.segmented_mp1,
+                    batch: self.batch,
+                    averaging: averaging_due,
+                    barrier: &barrier,
+                };
+                run_threaded_step(&mut self.workers, &batches, &ctx)?;
             }
         }
         self.step_count += 1;
 
-        // Averaging every avg_period steps (counting from step 1).
         let mut dp_comm = 0.0;
-        if self.just_averaged() {
-            average_replicated(&mut self.fabric, &mut self.workers)?;
-            average_shards(&mut self.fabric, &mut self.workers, &self.topo)?;
+        if averaging_due {
             dp_comm = self.schedule.avg_comm_secs(&self.cfg.net);
         }
         if !self.fabric.drained() {
@@ -255,26 +316,12 @@ impl<'rt> Cluster<'rt> {
         })
     }
 
-    /// mp=1 fast path: the fused full_step artifact per worker.
+    /// mp=1 fast path: the fused full_step artifact per worker (the
+    /// same per-worker body the threaded engine runs — see
+    /// `engine::full_step_worker`).
     fn step_pure_dp(&mut self, batches: &[crate::data::Batch]) -> Result<()> {
         for (w, batch) in self.workers.iter_mut().zip(batches.iter()) {
-            let t = Timer::start();
-            let mut inputs: Vec<HostTensor> =
-                Vec::with_capacity(w.conv_params.len() + w.fc_params.len() + 2);
-            inputs.extend(w.conv_params.iter().cloned());
-            inputs.extend(w.fc_params.iter().cloned());
-            inputs.push(batch.images.clone());
-            inputs.push(batch.labels.clone());
-            let out = self.rt.run("full_step", &inputs).context("full_step")?;
-            w.loss_acc += out[0].scalar() as f64;
-            let conv_grads = &out[1..15];
-            let fc_grads = &out[15..21];
-            w.update_conv(conv_grads);
-            let fcg: Vec<(usize, HostTensor)> =
-                fc_grads.iter().cloned().enumerate().collect();
-            w.accumulate_fc_grads(&fcg);
-            w.update_fc(1);
-            w.compute_secs += t.elapsed_secs();
+            full_step_worker(self.rt, w, batch).context("full_step")?;
         }
         Ok(())
     }
@@ -291,8 +338,10 @@ impl<'rt> Cluster<'rt> {
 
         let modulo = ModuloPlan::new(members.clone(), b, boundary);
         let modulo_lab = ModuloPlan::new(members.clone(), b, 1);
-        let shard0 = ShardPlan::new(members.clone(), s0, ShardBwdMode::ReducePartials);
-        let shard1 = ShardPlan::new(members.clone(), s1, ShardBwdMode::SliceReplicated);
+        let shard0 = ShardPlan::new(members.clone(), s0, ShardBwdMode::ReducePartials)
+            .with_algo(self.cfg.collectives);
+        let shard1 = ShardPlan::new(members.clone(), s1, ShardBwdMode::SliceReplicated)
+            .with_algo(self.cfg.collectives);
 
         // --- conv fwd per member (timed per worker) ---
         let mut acts = Vec::with_capacity(k);
@@ -584,6 +633,7 @@ impl<'rt> Cluster<'rt> {
         Ok(())
     }
 
+    /// Number of training steps completed so far.
     pub fn steps_done(&self) -> usize {
         self.step_count
     }
@@ -603,7 +653,14 @@ pub fn calibrated_report(
         vec![32, 32, 3],
         &PartitionConfig { mp: cfg.mp, ..Default::default() },
     )?;
-    let schedule = StepSchedule::compile(&transformed, topo, &rt.manifest)?;
+    let schedule = StepSchedule::compile_with_algo(
+        &transformed,
+        topo,
+        &rt.manifest,
+        false,
+        McastScheme::BoverK,
+        cfg.collectives,
+    )?;
 
     // --- calibrate artifact times (process-wide cache in the runtime) ---
     let mut compute_secs = 0.0;

@@ -1,0 +1,356 @@
+//! The multi-threaded cluster execution engine.
+//!
+//! The seed drove every worker sequentially on one OS thread: the
+//! coordinator interleaved each BSP phase "god-view" (post everything,
+//! then take everything), so throughput could not scale with workers.
+//! This engine runs **each worker's whole step on its own scoped
+//! thread** — segment compute, modulo/shard exchanges and averaging
+//! included — with rendezvous provided by the thread-safe
+//! [`Fabric`](crate::comm::Fabric)'s blocking takes and one BSP barrier
+//! at the superstep boundary (MP phase → averaging phase), driven by
+//! the coordinator schedule.
+//!
+//! ## Bit-identical numerics
+//!
+//! The per-rank programs here perform the *same arithmetic in the same
+//! order* as the sequential engine's group-view loops (own contribution
+//! first, then peers in group order; identical collective round
+//! structure), and the segment runtime is deterministic — so threaded
+//! and sequential training runs agree bit-for-bit. The
+//! `engine_parity` integration test asserts exactly this over ≥10
+//! steps.
+//!
+//! ## Failure semantics
+//!
+//! A worker error (bad artifact, schedule bug) does not hang the step:
+//! the erroring thread still reaches the barrier, peers waiting on its
+//! messages fail via the fabric's take timeout, and the first error is
+//! propagated to the caller after all threads join.
+
+use std::sync::Barrier;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::collective::CollectiveAlgo;
+use crate::comm::fabric::{Fabric, Tag};
+use crate::data::Batch;
+use crate::runtime::{HostTensor, RuntimeClient};
+use crate::util::Timer;
+
+use super::averaging::average_rank;
+use super::group::GmpTopology;
+use super::modulo::ModuloPlan;
+use super::schedule::StepSchedule;
+use super::scheme::{
+    assemble_bk_rank, assemble_scheme_b_rank, scatter_reduce_bk_rank,
+    scatter_reduce_scheme_b_rank, McastScheme,
+};
+use super::shard::{ShardBwdMode, ShardPlan};
+use super::worker::Worker;
+
+/// Which execution engine drives a training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecEngine {
+    /// Coordinator-interleaved, single OS thread (the seed behavior;
+    /// also the reference the parity test compares against).
+    Sequential,
+    /// One scoped thread per worker; blocking fabric takes; BSP barrier
+    /// between the MP phase and model averaging. The default, matching
+    /// `ClusterConfig::default()`.
+    #[default]
+    Threaded,
+}
+
+impl ExecEngine {
+    /// Parse a CLI token: `sequential`/`seq` or `threaded`/`thread`.
+    pub fn parse(s: &str) -> Result<ExecEngine> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Ok(ExecEngine::Sequential),
+            "threaded" | "thread" | "threads" => Ok(ExecEngine::Threaded),
+            other => bail!("unknown engine {other:?} (expected sequential or threaded)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExecEngine::Sequential => "sequential",
+            ExecEngine::Threaded => "threaded",
+        })
+    }
+}
+
+/// Everything a worker thread needs for one step (shared, read-only).
+pub(crate) struct StepCtx<'a> {
+    pub rt: &'a RuntimeClient,
+    pub fabric: &'a Fabric,
+    pub topo: &'a GmpTopology,
+    pub schedule: &'a StepSchedule,
+    pub scheme: McastScheme,
+    pub algo: CollectiveAlgo,
+    pub segmented_mp1: bool,
+    pub batch: usize,
+    /// Whether model averaging fires at the end of this step.
+    pub averaging: bool,
+    /// BSP superstep barrier (MP phase → averaging phase), one slot per
+    /// worker.
+    pub barrier: &'a Barrier,
+}
+
+/// Run one training step with one scoped thread per worker. Returns
+/// after every thread joined; the first worker error (if any) is
+/// propagated.
+pub(crate) fn run_threaded_step(
+    workers: &mut [Worker],
+    batches: &[Batch],
+    ctx: &StepCtx<'_>,
+) -> Result<()> {
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = workers
+            .iter_mut()
+            .zip(batches.iter())
+            .enumerate()
+            .map(|(rank, (w, batch))| s.spawn(move || worker_step(rank, w, batch, ctx)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow!("worker thread panicked")))
+            })
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+/// One worker's whole step: MP phase, superstep barrier, averaging.
+/// The barrier is reached on error *and panic* paths too (panics are
+/// caught and converted to errors), so a failing worker never wedges
+/// its peers at the barrier — they fail via the fabric take timeout
+/// instead.
+fn worker_step(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let mp = catch_unwind(AssertUnwindSafe(|| {
+        if ctx.topo.mp == 1 && !ctx.segmented_mp1 {
+            full_step_rank(&mut *w, batch, ctx)
+        } else {
+            group_step_rank(rank, &mut *w, batch, ctx)
+        }
+    }))
+    .unwrap_or_else(|_| Err(anyhow!("worker {rank} panicked in the MP phase")));
+    ctx.barrier.wait();
+    let avg = if mp.is_ok() && ctx.averaging {
+        catch_unwind(AssertUnwindSafe(|| {
+            average_rank(ctx.fabric, &mut *w, rank, ctx.topo.n_workers, ctx.topo, ctx.algo)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("worker {rank} panicked in averaging")))
+    } else {
+        Ok(())
+    };
+    mp.and(avg)
+}
+
+/// mp=1 fast path: one fused full_step call + local SGD update for one
+/// worker. Shared by the sequential engine's `step_pure_dp` loop and
+/// the threaded per-rank program, so the two can never drift apart.
+pub(crate) fn full_step_worker(rt: &RuntimeClient, w: &mut Worker, batch: &Batch) -> Result<()> {
+    let t = Timer::start();
+    let mut inputs: Vec<HostTensor> =
+        Vec::with_capacity(w.conv_params.len() + w.fc_params.len() + 2);
+    inputs.extend(w.conv_params.iter().cloned());
+    inputs.extend(w.fc_params.iter().cloned());
+    inputs.push(batch.images.clone());
+    inputs.push(batch.labels.clone());
+    let out = rt.run("full_step", &inputs)?;
+    w.loss_acc += out[0].scalar() as f64;
+    let conv_grads = &out[1..15];
+    let fc_grads = &out[15..21];
+    w.update_conv(conv_grads);
+    let fcg: Vec<(usize, HostTensor)> = fc_grads.iter().cloned().enumerate().collect();
+    w.accumulate_fc_grads(&fcg);
+    w.update_fc(1);
+    w.compute_secs += t.elapsed_secs();
+    Ok(())
+}
+
+fn full_step_rank(w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
+    full_step_worker(ctx.rt, w, batch)
+}
+
+/// The hybrid path, per rank: Fig. 3's transformed network phase by
+/// phase — the SPMD mirror of the sequential engine's `step_group`,
+/// with blocking per-rank exchanges instead of god-view collectives.
+fn group_step_rank(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
+    let gid = ctx.topo.gid(rank);
+    let members = ctx.topo.members(gid);
+    let gi = ctx.topo.offset(rank);
+    let k = members.len();
+    let b = ctx.batch;
+    let fabric = ctx.fabric;
+    let boundary = ctx.schedule.boundary_width;
+    let s0 = ctx.schedule.shard_widths[0];
+    let s1 = ctx.schedule.shard_widths[1];
+
+    let modulo = ModuloPlan::new(members.clone(), b, boundary);
+    let modulo_lab = ModuloPlan::new(members.clone(), b, 1);
+    let shard0 = ShardPlan::new(members.clone(), s0, ShardBwdMode::ReducePartials)
+        .with_algo(ctx.algo);
+    let shard1 = ShardPlan::new(members.clone(), s1, ShardBwdMode::SliceReplicated)
+        .with_algo(ctx.algo);
+
+    // --- conv fwd ---
+    let t = Timer::start();
+    let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
+    inputs.push(batch.images.clone());
+    let act = ctx
+        .rt
+        .run("conv_fwd", &inputs)?
+        .into_iter()
+        .next()
+        .expect("conv_fwd returns one output");
+    w.compute_secs += t.elapsed_secs();
+    let labels_f32 = HostTensor::f32(
+        vec![b, 1],
+        batch.labels.as_i32().iter().map(|&v| v as f32).collect(),
+    );
+
+    // --- modulo rounds through the FC stack ---
+    let scheme = if k > 1 { ctx.scheme } else { McastScheme::BoverK };
+    let rounds = scheme.rounds(k);
+    let fcb = scheme.fc_batch(b, k);
+    let suffix = scheme.artifact_suffix();
+    let head_name = match scheme {
+        McastScheme::BK if k > 1 => format!("head_step_bk{k}"),
+        _ => "head_step".to_string(),
+    };
+    for it in 0..rounds {
+        let it16 = it as u16;
+        let tag = |phase: u16| Tag::new(phase, it16, gid as u16);
+
+        // Modulo fprop: assemble activations + labels.
+        let (assembled, labs) = match scheme {
+            McastScheme::BoverK => (
+                modulo.assemble_rank(fabric, gi, &act, it, tag(1))?,
+                modulo_lab.assemble_rank(fabric, gi, &labels_f32, it, tag(2))?,
+            ),
+            McastScheme::B => (
+                assemble_scheme_b_rank(&modulo, fabric, gi, &act, it, tag(1))?,
+                assemble_scheme_b_rank(&modulo_lab, fabric, gi, &labels_f32, it, tag(2))?,
+            ),
+            McastScheme::BK => (
+                assemble_bk_rank(&modulo, fabric, gi, &act, tag(1))?,
+                assemble_bk_rank(&modulo_lab, fabric, gi, &labels_f32, tag(2))?,
+            ),
+        };
+
+        // FC0 shard fwd + gather to full width.
+        let t = Timer::start();
+        let h0l = ctx
+            .rt
+            .run(
+                &format!("fc0_fwd_k{k}{suffix}"),
+                &[w.fc_params[0].clone(), w.fc_params[1].clone(), assembled.clone()],
+            )?
+            .into_iter()
+            .next()
+            .expect("fc0_fwd returns one output");
+        w.compute_secs += t.elapsed_secs();
+        let h0 = shard0.gather_full_rank(fabric, gi, &h0l, tag(3))?;
+
+        // FC1 shard fwd + gather.
+        let t = Timer::start();
+        let h1l = ctx
+            .rt
+            .run(
+                &format!("fc1_fwd_k{k}{suffix}"),
+                &[w.fc_params[2].clone(), w.fc_params[3].clone(), h0.clone()],
+            )?
+            .into_iter()
+            .next()
+            .expect("fc1_fwd returns one output");
+        w.compute_secs += t.elapsed_secs();
+        let h1 = shard1.gather_full_rank(fabric, gi, &h1l, tag(4))?;
+
+        // Replicated head: loss + gw2 + gb2 + gh1.
+        let labels_i32 = HostTensor::i32(
+            vec![fcb],
+            labs.as_f32().iter().map(|&v| v as i32).collect(),
+        );
+        let t = Timer::start();
+        let out = ctx.rt.run(
+            &head_name,
+            &[w.fc_params[4].clone(), w.fc_params[5].clone(), h1.clone(), labels_i32],
+        )?;
+        w.compute_secs += t.elapsed_secs();
+        w.loss_acc += out[0].scalar() as f64;
+        w.accumulate_fc_grads(&[(4, out[1].clone()), (5, out[2].clone())]);
+        let gh1_full = out[3].clone();
+
+        // Shard1 bwd: replicated above -> local slice, no wire.
+        let g_h1l = shard1.backward_rank(fabric, gi, &gh1_full, tag(5))?;
+
+        // FC1 shard bwd.
+        let t = Timer::start();
+        let out = ctx.rt.run(
+            &format!("fc1_bwd_k{k}{suffix}"),
+            &[
+                w.fc_params[2].clone(),
+                w.fc_params[3].clone(),
+                h0.clone(),
+                g_h1l.clone(),
+            ],
+        )?;
+        w.compute_secs += t.elapsed_secs();
+        w.accumulate_fc_grads(&[(2, out[0].clone()), (3, out[1].clone())]);
+        let gh0_partial = out[2].clone();
+
+        // Shard0 bwd: partitioned above -> reduce partials.
+        let g_h0l = shard0.backward_rank(fabric, gi, &gh0_partial, tag(6))?;
+
+        // FC0 shard bwd.
+        let t = Timer::start();
+        let out = ctx.rt.run(
+            &format!("fc0_bwd_k{k}{suffix}"),
+            &[
+                w.fc_params[0].clone(),
+                w.fc_params[1].clone(),
+                assembled.clone(),
+                g_h0l.clone(),
+            ],
+        )?;
+        w.compute_secs += t.elapsed_secs();
+        w.accumulate_fc_grads(&[(0, out[0].clone()), (1, out[1].clone())]);
+        let gbatch_partial = out[2].clone();
+
+        // Modulo bprop: route + reduce into this member's g_act.
+        match scheme {
+            McastScheme::BoverK => {
+                modulo.scatter_reduce_rank(fabric, gi, &gbatch_partial, &mut w.g_act, it, tag(7))?
+            }
+            McastScheme::B => scatter_reduce_scheme_b_rank(
+                &modulo, fabric, gi, &gbatch_partial, &mut w.g_act, it, tag(7),
+            )?,
+            McastScheme::BK => {
+                scatter_reduce_bk_rank(&modulo, fabric, gi, &gbatch_partial, &mut w.g_act, tag(7))?;
+                // LR consistency: BK's head averaged over B*K examples —
+                // rescale exactly as the sequential engine does.
+                w.g_act.scale(k as f32);
+            }
+        }
+    }
+
+    // --- conv bwd + optimizer updates ---
+    let t = Timer::start();
+    let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
+    inputs.push(batch.images.clone());
+    inputs.push(w.g_act.clone());
+    let grads = ctx.rt.run("conv_bwd", &inputs)?;
+    w.update_conv(&grads);
+    w.update_fc(rounds);
+    w.compute_secs += t.elapsed_secs();
+    Ok(())
+}

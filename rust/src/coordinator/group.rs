@@ -18,6 +18,7 @@ pub struct GmpTopology {
 }
 
 impl GmpTopology {
+    /// Build a topology (N must divide by the MP group size).
     pub fn new(n_workers: usize, mp: usize) -> Result<GmpTopology> {
         if n_workers == 0 || mp == 0 {
             bail!("workers and mp must be positive");

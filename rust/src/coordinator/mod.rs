@@ -6,10 +6,13 @@
 //! - [`schedule`] — the compiled per-step plan + analytic comm volumes
 //! - [`averaging`] — BSP model averaging (replicated across N, shards across groups)
 //! - [`worker`] — per-worker parameter/optimizer/accumulator state
+//! - [`engine`] — the threaded (one thread per worker) execution engine
 //! - [`cluster`] — the numeric simulator + calibrated throughput mode
+//! - [`planner`] — feasible-configuration search under a memory budget
 
 pub mod averaging;
 pub mod cluster;
+pub mod engine;
 pub mod group;
 pub mod modulo;
 pub mod planner;
@@ -19,6 +22,7 @@ pub mod shard;
 pub mod worker;
 
 pub use cluster::{calibrated_report, Cluster, ClusterConfig};
+pub use engine::ExecEngine;
 pub use group::GmpTopology;
 pub use modulo::ModuloPlan;
 pub use planner::{best, plan, CostModel, PlanOption, PlanRequest};

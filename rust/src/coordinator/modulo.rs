@@ -31,6 +31,7 @@ pub struct ModuloPlan {
 }
 
 impl ModuloPlan {
+    /// Build the plan for one MP group (`batch` must divide by K).
     pub fn new(group: Vec<usize>, batch: usize, width: usize) -> ModuloPlan {
         assert!(!group.is_empty());
         assert_eq!(batch % group.len(), 0, "B must be a multiple of K");
@@ -63,7 +64,7 @@ impl ModuloPlan {
     /// the `[B, width]` assembled batch per member.
     pub fn assemble(
         &self,
-        fabric: &mut Fabric,
+        fabric: &Fabric,
         acts: &[HostTensor],
         k: usize,
         tag: Tag,
@@ -114,7 +115,7 @@ impl ModuloPlan {
     /// activation-gradient accumulator.
     pub fn scatter_reduce(
         &self,
-        fabric: &mut Fabric,
+        fabric: &Fabric,
         gbatches: &[HostTensor],
         g_acts: &mut [HostTensor],
         k: usize,
@@ -154,6 +155,84 @@ impl ModuloPlan {
                 g_acts[i].as_f32_mut()[dst_lo..dst_lo + self.width]
                     .copy_from_slice(acc_row);
             }
+        }
+        Ok(())
+    }
+
+    // -- per-rank (SPMD) forms, used by the threaded engine ------------------
+
+    /// Per-rank fprop of iteration `k`: the member at group index `gi`
+    /// contributes `act` (its local `[B, width]` activations) and
+    /// receives every peer's slice with blocking takes. Data placement
+    /// is identical to [`ModuloPlan::assemble`].
+    pub fn assemble_rank(
+        &self,
+        fabric: &Fabric,
+        gi: usize,
+        act: &HostTensor,
+        k: usize,
+        tag: Tag,
+    ) -> Result<HostTensor> {
+        let kk = self.k();
+        let size = self.size();
+        assert!(k < kk && gi < kk);
+        let me = self.group[gi];
+        let local = act.slice_rows(k * size, (k + 1) * size);
+        for &dst in &self.group {
+            if dst != me {
+                fabric.post(me, dst, tag, local.as_f32().to_vec());
+            }
+        }
+        let mut batch = HostTensor::zeros(vec![self.batch, self.width]);
+        for (j, &src) in self.group.iter().enumerate() {
+            if j == gi {
+                batch.set_rows(j * size, &local);
+            } else {
+                let data = fabric.take_blocking(me, src, tag)?;
+                batch.set_rows(j * size, &HostTensor::f32(vec![size, self.width], data));
+            }
+        }
+        Ok(batch)
+    }
+
+    /// Per-rank bprop of iteration `k`: routes the member's assembled
+    /// `[B, width]` partial gradient back to owners, reduces the copies
+    /// destined for this member (own rows + peers in group order — the
+    /// same order as [`ModuloPlan::scatter_reduce`], so numerics are
+    /// bit-identical), and writes rows `[k·size, (k+1)·size)` of
+    /// `g_act`.
+    pub fn scatter_reduce_rank(
+        &self,
+        fabric: &Fabric,
+        gi: usize,
+        gbatch: &HostTensor,
+        g_act: &mut HostTensor,
+        k: usize,
+        tag: Tag,
+    ) -> Result<()> {
+        let kk = self.k();
+        let size = self.size();
+        assert!(k < kk && gi < kk);
+        let me = self.group[gi];
+        for (i, &dst) in self.group.iter().enumerate() {
+            if i != gi {
+                let rows = gbatch.slice_rows(i * size, (i + 1) * size);
+                fabric.post(me, dst, tag, rows.as_f32().to_vec());
+            }
+        }
+        let mut acc = gbatch.slice_rows(gi * size, (gi + 1) * size);
+        for &src in &self.group {
+            if src != me {
+                let data = fabric.take_blocking(me, src, tag)?;
+                acc.add_assign(&HostTensor::f32(vec![size, self.width], data));
+            }
+        }
+        let base = k * size;
+        for r in 0..size {
+            let dst_lo = (base + r) * self.width;
+            let src_lo = r * self.width;
+            let acc_row = &acc.as_f32()[src_lo..src_lo + self.width];
+            g_act.as_f32_mut()[dst_lo..dst_lo + self.width].copy_from_slice(acc_row);
         }
         Ok(())
     }

@@ -39,7 +39,9 @@ pub struct PlanRequest {
 /// Per-segment compute costs (seconds per call).
 #[derive(Debug, Clone, Default)]
 pub struct CostModel {
+    /// Seconds per conv_fwd call.
     pub conv_fwd: f64,
+    /// Seconds per conv_bwd call.
     pub conv_bwd: f64,
     /// FC pipeline per round per member at shard width 1024/k, indexed
     /// by k (missing entries are interpolated as 1/k of full).
@@ -79,12 +81,19 @@ impl CostModel {
 /// One feasible configuration with its predicted cost.
 #[derive(Debug, Clone)]
 pub struct PlanOption {
+    /// MP group size.
     pub mp: usize,
+    /// Modulo communication scheme.
     pub scheme: McastScheme,
+    /// Predicted per-worker memory footprint.
     pub memory_bytes: usize,
+    /// Predicted step seconds.
     pub step_secs: f64,
+    /// Predicted cluster throughput.
     pub images_per_sec: f64,
+    /// Predicted comm share of the step.
     pub comm_fraction: f64,
+    /// True when the memory budget is met.
     pub feasible: bool,
 }
 
@@ -109,7 +118,18 @@ pub fn plan(rt: &RuntimeClient, req: &PlanRequest) -> Result<Vec<PlanOption>> {
                 &PartitionConfig { mp, ..Default::default() },
             )?;
             let topo = GmpTopology::new(req.n_workers, mp)?;
-            let sched = StepSchedule::compile_full(&net, topo, &rt.manifest, true, scheme)?;
+            // Cost with the runtime's default collectives (ring): the
+            // planner predicts the cluster as configured, and ring is
+            // what `ClusterConfig::default()` runs (and what the seed's
+            // averaging analytics assumed).
+            let sched = StepSchedule::compile_with_algo(
+                &net,
+                topo,
+                &rt.manifest,
+                true,
+                scheme,
+                crate::comm::CollectiveAlgo::Ring,
+            )?;
             let mem = MemoryReport::of_scheme(&net, batch, scheme);
             let rounds = scheme.rounds(mp) as f64;
             // BK rounds process k*B examples: its fc segments cost ~k x

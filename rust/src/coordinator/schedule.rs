@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::comm::collective::{rhd_worst_rank_volume, CollectiveAlgo};
 use crate::comm::netmodel::{NetModel, PhaseVolume};
 use crate::comm::trace::CommCategory;
 use crate::model::{Layer, TransformedNet};
@@ -22,7 +23,9 @@ use super::scheme::McastScheme;
 /// runs per step on each worker.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ComputeCall {
+    /// Artifact name.
     pub artifact: String,
+    /// Calls per step per worker.
     pub calls: u64,
 }
 
@@ -30,8 +33,11 @@ pub struct ComputeCall {
 /// how many times it recurs per step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CommPhase {
+    /// What the exchange is for.
     pub category: CommCategory,
+    /// Posted volume of one member per occurrence.
     pub per_member: PhaseVolume,
+    /// Occurrences per step.
     pub times: u64,
     /// Participants (K for MP phases, N or D for averaging).
     pub ranks: usize,
@@ -41,12 +47,17 @@ pub struct CommPhase {
 /// training step of one worker/group.
 #[derive(Debug, Clone)]
 pub struct StepSchedule {
+    /// The DP×MP topology the schedule was compiled for.
     pub topo: GmpTopology,
+    /// Per-worker batch size.
     pub batch: usize,
+    /// Collective algorithm the phase volumes were modeled for.
+    pub algo: CollectiveAlgo,
     /// Feature width at the modulo boundary.
     pub boundary_width: usize,
     /// Partition widths of the sharded FC layers (full widths / K).
     pub shard_widths: Vec<usize>,
+    /// Compute inventory: artifact calls per step per worker.
     pub compute: Vec<ComputeCall>,
     /// MP phases, charged every step.
     pub mp_phases: Vec<CommPhase>,
@@ -79,17 +90,37 @@ impl StepSchedule {
         Self::compile_full(net, topo, manifest, segmented_mp1, McastScheme::BoverK)
     }
 
-    /// Full compile: `segmented_mp1` selects the per-segment
-    /// (Pallas-backed) pipeline for mp=1 instead of the fused
-    /// `full_step` (numerically identical, same per-op efficiency as
-    /// the MP paths — used by the Table 2 benches); `scheme` selects
-    /// the §3.1 communication scheme for the modulo layer.
+    /// Back-compat shim: [`StepSchedule::compile_with_algo`] with the
+    /// naive (all-to-all) model for *both* shard and averaging phases.
+    /// Note this differs from the seed, which modeled averaging as a
+    /// ring allreduce: runtime consumers (cluster, planner, benches)
+    /// should pass the configured algorithm through
+    /// [`StepSchedule::compile_with_algo`] instead, as they now do.
     pub fn compile_full(
         net: &TransformedNet,
         topo: GmpTopology,
         manifest: &Manifest,
         segmented_mp1: bool,
         scheme: McastScheme,
+    ) -> Result<StepSchedule> {
+        Self::compile_with_algo(net, topo, manifest, segmented_mp1, scheme, CollectiveAlgo::Naive)
+    }
+
+    /// Full compile: `segmented_mp1` selects the per-segment
+    /// (Pallas-backed) pipeline for mp=1 instead of the fused
+    /// `full_step` (numerically identical, same per-op efficiency as
+    /// the MP paths — used by the Table 2 benches); `scheme` selects
+    /// the §3.1 communication scheme for the modulo layer; `algo`
+    /// selects the collective algorithm modeled for the shard exchanges
+    /// and BSP averaging (total shard bytes are algorithm-invariant,
+    /// message/phase structure is not).
+    pub fn compile_with_algo(
+        net: &TransformedNet,
+        topo: GmpTopology,
+        manifest: &Manifest,
+        segmented_mp1: bool,
+        scheme: McastScheme,
+        algo: CollectiveAlgo,
     ) -> Result<StepSchedule> {
         if net.mp != topo.mp {
             bail!("net transformed for mp={} but topology has mp={}", net.mp, topo.mp);
@@ -209,15 +240,28 @@ impl StepSchedule {
                 ranks: k,
             });
             // Shard fwd: allgather each sharded FC's output partition
-            // over the scheme's FC batch.
+            // over the scheme's FC batch. Naive: one phase of k-1
+            // partition-sized messages per round. Ring (and the rhd
+            // fallback): k-1 serialized neighbor rounds of one message —
+            // identical total bytes, different phase structure.
+            let shard_phase = |w: usize| -> (PhaseVolume, u64) {
+                match algo {
+                    CollectiveAlgo::Naive => (
+                        PhaseVolume::new(k as u64 - 1, ((k - 1) * fcb * w * 4) as u64),
+                        rounds,
+                    ),
+                    CollectiveAlgo::Ring | CollectiveAlgo::Rhd => (
+                        PhaseVolume::new(1, (fcb * w * 4) as u64),
+                        rounds * (k as u64 - 1),
+                    ),
+                }
+            };
             for &w in &shard_widths {
+                let (per_member, times) = shard_phase(w);
                 mp_phases.push(CommPhase {
                     category: CommCategory::ShardFwd,
-                    per_member: PhaseVolume::new(
-                        k as u64 - 1,
-                        ((k - 1) * fcb * w * 4) as u64,
-                    ),
-                    times: rounds,
+                    per_member,
+                    times,
                     ranks: k,
                 });
             }
@@ -226,43 +270,49 @@ impl StepSchedule {
             // zero-comm slice). In transformed order: the shard between
             // FC0 and FC1 reduces over FC1's bwd partials (width = FC0's
             // partition), the shard before FC2 slices.
+            let (per_member, times) = shard_phase(shard_widths[0]);
             mp_phases.push(CommPhase {
                 category: CommCategory::ShardBwd,
-                per_member: PhaseVolume::new(
-                    k as u64 - 1,
-                    ((k - 1) * fcb * shard_widths[0] * 4) as u64,
-                ),
-                times: rounds,
+                per_member,
+                times,
                 ranks: k,
             });
         }
 
         // --- averaging phases (per averaging event) ---
+        // Worst-rank allreduce volume for `bytes` over `m` ranks under
+        // the selected algorithm.
+        let allreduce_vol = |m: usize, bytes: u64| -> PhaseVolume {
+            match algo {
+                CollectiveAlgo::Naive => {
+                    PhaseVolume::new(m as u64 - 1, (m as u64 - 1) * bytes)
+                }
+                CollectiveAlgo::Ring => PhaseVolume::new(
+                    2 * (m as u64 - 1),
+                    2 * (m as u64 - 1) * (bytes / m as u64),
+                ),
+                CollectiveAlgo::Rhd => rhd_worst_rank_volume(m, bytes),
+            }
+        };
         let mut avg_phases = Vec::new();
         let n = topo.n_workers;
         if n > 1 {
-            // Replicated params: ring allreduce across all N.
+            // Replicated params: allreduce across all N.
             let bytes = (replicated_params * 4) as u64;
             avg_phases.push(CommPhase {
                 category: CommCategory::DpAverage,
-                per_member: PhaseVolume::new(
-                    2 * (n as u64 - 1),
-                    2 * (n as u64 - 1) * (bytes / n as u64),
-                ),
+                per_member: allreduce_vol(n, bytes),
                 times: 1,
                 ranks: n,
             });
         }
         let d = topo.n_groups();
         if d > 1 && k > 1 {
-            // Shard params: ring allreduce across the D same-offset peers.
+            // Shard params: allreduce across the D same-offset peers.
             let bytes = (shard_params * 4) as u64;
             avg_phases.push(CommPhase {
                 category: CommCategory::ShardAverage,
-                per_member: PhaseVolume::new(
-                    2 * (d as u64 - 1),
-                    2 * (d as u64 - 1) * (bytes / d as u64),
-                ),
+                per_member: allreduce_vol(d, bytes),
                 times: 1,
                 ranks: d,
             });
@@ -271,6 +321,7 @@ impl StepSchedule {
         Ok(StepSchedule {
             topo,
             batch,
+            algo,
             boundary_width,
             shard_widths,
             compute,
@@ -302,6 +353,12 @@ impl StepSchedule {
     /// Total MP bytes a single member pushes per step.
     pub fn mp_bytes_per_member(&self) -> u64 {
         self.mp_phases.iter().map(|p| p.times * p.per_member.bytes_out).sum()
+    }
+
+    /// Total averaging bytes the busiest member pushes per averaging
+    /// event.
+    pub fn avg_bytes_per_member(&self) -> u64 {
+        self.avg_phases.iter().map(|p| p.times * p.per_member.bytes_out).sum()
     }
 }
 
@@ -438,6 +495,37 @@ mod tests {
         let s4 = schedule(8, 4, 32);
         assert!(s4.shard_params < s2.shard_params);
         assert!(s4.avg_comm_secs(&net) < s2.avg_comm_secs(&net));
+    }
+
+    #[test]
+    fn algo_preserves_shard_bytes_and_shrinks_avg() {
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp: 4, ..Default::default() },
+        )
+        .unwrap();
+        let topo = GmpTopology::new(8, 4).unwrap();
+        let m = manifest(32, &[1, 2, 4, 8]);
+        let compile = |algo| {
+            StepSchedule::compile_with_algo(&net, topo, &m, false, McastScheme::BoverK, algo)
+                .unwrap()
+        };
+        let naive = compile(CollectiveAlgo::Naive);
+        let ring = compile(CollectiveAlgo::Ring);
+        let rhd = compile(CollectiveAlgo::Rhd);
+        // Shard-exchange totals are algorithm-invariant.
+        assert_eq!(naive.mp_bytes_per_member(), ring.mp_bytes_per_member());
+        assert_eq!(naive.mp_bytes_per_member(), rhd.mp_bytes_per_member());
+        // Averaging: ring/rhd move 2·(n-1)/n·V vs naive's (n-1)·V.
+        assert!(ring.avg_bytes_per_member() < naive.avg_bytes_per_member());
+        let diff = ring.avg_bytes_per_member().abs_diff(rhd.avg_bytes_per_member());
+        assert!(
+            diff <= naive.avg_bytes_per_member() / 100,
+            "ring {} vs rhd {}",
+            ring.avg_bytes_per_member(),
+            rhd.avg_bytes_per_member()
+        );
     }
 
     #[test]

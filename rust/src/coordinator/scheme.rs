@@ -39,6 +39,7 @@ pub enum McastScheme {
 }
 
 impl McastScheme {
+    /// Parse a CLI token: `bk`, `b`, or `b/k`.
     pub fn parse(s: &str) -> Result<McastScheme> {
         match s.to_ascii_lowercase().as_str() {
             "b/k" | "boverk" | "bok" => Ok(McastScheme::BoverK),
@@ -96,7 +97,7 @@ impl fmt::Display for McastScheme {
 /// assembled batch at every member IS member k's batch.
 pub fn assemble_scheme_b(
     plan: &ModuloPlan,
-    fabric: &mut Fabric,
+    fabric: &Fabric,
     acts: &[HostTensor],
     round: usize,
     tag: Tag,
@@ -126,7 +127,7 @@ pub fn assemble_scheme_b(
 /// its whole activation-gradient buffer.
 pub fn scatter_reduce_scheme_b(
     plan: &ModuloPlan,
-    fabric: &mut Fabric,
+    fabric: &Fabric,
     gbatches: &[HostTensor],
     g_acts: &mut [HostTensor],
     round: usize,
@@ -154,7 +155,7 @@ pub fn scatter_reduce_scheme_b(
 /// `[B*K, width]`.
 pub fn assemble_bk(
     plan: &ModuloPlan,
-    fabric: &mut Fabric,
+    fabric: &Fabric,
     acts: &[HostTensor],
     tag: Tag,
 ) -> Result<Vec<HostTensor>> {
@@ -188,7 +189,7 @@ pub fn assemble_bk(
 /// summed gradient for its own batch in `g_acts[i]`.
 pub fn scatter_reduce_bk(
     plan: &ModuloPlan,
-    fabric: &mut Fabric,
+    fabric: &Fabric,
     gbatches: &[HostTensor],
     g_acts: &mut [HostTensor],
     tag: Tag,
@@ -212,6 +213,127 @@ pub fn scatter_reduce_bk(
         }
         g_acts[i] = acc;
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Per-rank (SPMD) forms, used by the threaded engine. Reduction orders
+// mirror the group-view functions above exactly (own contribution
+// first, then peers in group order), so the two engines agree
+// bit-for-bit.
+
+/// Per-rank scheme-B fprop, round `round`: the round's owner broadcasts
+/// its whole batch; everyone returns the owner's batch.
+pub fn assemble_scheme_b_rank(
+    plan: &ModuloPlan,
+    fabric: &Fabric,
+    gi: usize,
+    act: &HostTensor,
+    round: usize,
+    tag: Tag,
+) -> Result<HostTensor> {
+    let kk = plan.k();
+    assert!(round < kk && gi < kk);
+    let owner = plan.group[round];
+    let me = plan.group[gi];
+    if gi == round {
+        for &dst in &plan.group {
+            if dst != owner {
+                fabric.post(owner, dst, tag, act.as_f32().to_vec());
+            }
+        }
+        Ok(act.clone())
+    } else {
+        let data = fabric.take_blocking(me, owner, tag)?;
+        Ok(HostTensor::f32(vec![plan.batch, plan.width], data))
+    }
+}
+
+/// Per-rank scheme-B bprop, round `round`: non-owners send their full
+/// partial gradient to the owner; the owner reduces the K copies into
+/// its whole activation-gradient buffer (peers in group order).
+pub fn scatter_reduce_scheme_b_rank(
+    plan: &ModuloPlan,
+    fabric: &Fabric,
+    gi: usize,
+    gbatch: &HostTensor,
+    g_act: &mut HostTensor,
+    round: usize,
+    tag: Tag,
+) -> Result<()> {
+    let owner = plan.group[round];
+    let me = plan.group[gi];
+    if gi != round {
+        fabric.post(me, owner, tag, gbatch.as_f32().to_vec());
+        return Ok(());
+    }
+    let mut acc = gbatch.clone();
+    for &src in &plan.group {
+        if src != owner {
+            let data = fabric.take_blocking(owner, src, tag)?;
+            acc.add_assign(&HostTensor::f32(vec![plan.batch, plan.width], data));
+        }
+    }
+    *g_act = acc;
+    Ok(())
+}
+
+/// Per-rank scheme-BK fprop (single round): every member broadcasts its
+/// whole batch; returns the member-ordered `[B*K, width]` concatenation.
+pub fn assemble_bk_rank(
+    plan: &ModuloPlan,
+    fabric: &Fabric,
+    gi: usize,
+    act: &HostTensor,
+    tag: Tag,
+) -> Result<HostTensor> {
+    let kk = plan.k();
+    let b = plan.batch;
+    let me = plan.group[gi];
+    for &dst in &plan.group {
+        if dst != me {
+            fabric.post(me, dst, tag, act.as_f32().to_vec());
+        }
+    }
+    let mut big = HostTensor::zeros(vec![b * kk, plan.width]);
+    for (j, &src) in plan.group.iter().enumerate() {
+        if j == gi {
+            big.set_rows(j * b, act);
+        } else {
+            let data = fabric.take_blocking(me, src, tag)?;
+            big.set_rows(j * b, &HostTensor::f32(vec![b, plan.width], data));
+        }
+    }
+    Ok(big)
+}
+
+/// Per-rank scheme-BK bprop: routes the `[B*K, width]` partial gradient
+/// back by B-row owner block and reduces this member's block (own copy
+/// first, then peers in group order).
+pub fn scatter_reduce_bk_rank(
+    plan: &ModuloPlan,
+    fabric: &Fabric,
+    gi: usize,
+    gbatch: &HostTensor,
+    g_act: &mut HostTensor,
+    tag: Tag,
+) -> Result<()> {
+    let b = plan.batch;
+    let me = plan.group[gi];
+    for (i, &dst) in plan.group.iter().enumerate() {
+        if i != gi {
+            let block = gbatch.slice_rows(i * b, (i + 1) * b);
+            fabric.post(me, dst, tag, block.as_f32().to_vec());
+        }
+    }
+    let mut acc = gbatch.slice_rows(gi * b, (gi + 1) * b);
+    for &src in &plan.group {
+        if src != me {
+            let data = fabric.take_blocking(me, src, tag)?;
+            acc.add_assign(&HostTensor::f32(vec![b, plan.width], data));
+        }
+    }
+    *g_act = acc;
     Ok(())
 }
 

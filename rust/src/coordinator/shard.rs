@@ -19,14 +19,19 @@
 
 use anyhow::Result;
 
-use crate::comm::collective::{allgather_cols, reduce_scatter_cols};
+use crate::comm::collective::{
+    allgather_cols_algo, allgather_cols_rank, reduce_scatter_cols_algo, reduce_scatter_cols_rank,
+    CollectiveAlgo,
+};
 use crate::comm::fabric::{Fabric, Tag};
 use crate::runtime::HostTensor;
 
 /// How bprop recovers the local-partition gradient.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardBwdMode {
+    /// Layers above are partitioned: reduce-scatter the partial sums.
     ReducePartials,
+    /// Layers above are replicated: zero-communication local slice.
     SliceReplicated,
 }
 
@@ -39,18 +44,30 @@ pub struct ShardPlan {
     pub part_width: usize,
     /// Gradient-recovery mode for bprop.
     pub bwd_mode: ShardBwdMode,
+    /// Collective algorithm moving the data (naive all-to-all or ring;
+    /// total bytes are identical, the message schedule differs).
+    pub algo: CollectiveAlgo,
 }
 
 impl ShardPlan {
+    /// Build a plan with the naive (all-to-all) collectives.
     pub fn new(group: Vec<usize>, part_width: usize, bwd_mode: ShardBwdMode) -> ShardPlan {
         assert!(!group.is_empty());
-        ShardPlan { group, part_width, bwd_mode }
+        ShardPlan { group, part_width, bwd_mode, algo: CollectiveAlgo::Naive }
     }
 
+    /// Select the collective algorithm (builder style).
+    pub fn with_algo(mut self, algo: CollectiveAlgo) -> ShardPlan {
+        self.algo = algo;
+        self
+    }
+
+    /// K = group size.
     pub fn k(&self) -> usize {
         self.group.len()
     }
 
+    /// Restored full feature width (`part_width · K`).
     pub fn full_width(&self) -> usize {
         self.part_width * self.k()
     }
@@ -72,7 +89,7 @@ impl ShardPlan {
     /// member (group order = partition order).
     pub fn gather_full(
         &self,
-        fabric: &mut Fabric,
+        fabric: &Fabric,
         parts: &[HostTensor],
         tag: Tag,
     ) -> Result<Vec<HostTensor>> {
@@ -80,14 +97,30 @@ impl ShardPlan {
         if self.k() == 1 {
             return Ok(parts.to_vec());
         }
-        allgather_cols(fabric, &self.group, parts, tag)
+        allgather_cols_algo(self.algo, fabric, &self.group, parts, tag)
+    }
+
+    /// Per-rank fprop (threaded engine): the member at group index `gi`
+    /// contributes its `[B, part]` partition, blocking-takes the rest.
+    pub fn gather_full_rank(
+        &self,
+        fabric: &Fabric,
+        gi: usize,
+        part: &HostTensor,
+        tag: Tag,
+    ) -> Result<HostTensor> {
+        if self.k() == 1 {
+            return Ok(part.clone());
+        }
+        let widths = vec![self.part_width; self.k()];
+        allgather_cols_rank(self.algo, fabric, &self.group, gi, part, &widths, tag)
     }
 
     /// bprop: recover each member's `[B, part]` gradient from the
     /// members' `[B, full]` input gradients.
     pub fn backward(
         &self,
-        fabric: &mut Fabric,
+        fabric: &Fabric,
         full_grads: &[HostTensor],
         tag: Tag,
     ) -> Result<Vec<HostTensor>> {
@@ -98,7 +131,7 @@ impl ShardPlan {
         match self.bwd_mode {
             ShardBwdMode::ReducePartials => {
                 let widths = vec![self.part_width; k];
-                reduce_scatter_cols(fabric, &self.group, full_grads, &widths, tag)
+                reduce_scatter_cols_algo(self.algo, fabric, &self.group, full_grads, &widths, tag)
             }
             ShardBwdMode::SliceReplicated => Ok(full_grads
                 .iter()
@@ -107,6 +140,30 @@ impl ShardPlan {
                     g.slice_cols(i * self.part_width, (i + 1) * self.part_width)
                 })
                 .collect()),
+        }
+    }
+
+    /// Per-rank bprop (threaded engine): recover this member's
+    /// `[B, part]` gradient from its `[B, full]` input gradient.
+    pub fn backward_rank(
+        &self,
+        fabric: &Fabric,
+        gi: usize,
+        full_grad: &HostTensor,
+        tag: Tag,
+    ) -> Result<HostTensor> {
+        let k = self.k();
+        if k == 1 {
+            return Ok(full_grad.clone());
+        }
+        match self.bwd_mode {
+            ShardBwdMode::ReducePartials => {
+                let widths = vec![self.part_width; k];
+                reduce_scatter_cols_rank(self.algo, fabric, &self.group, gi, full_grad, &widths, tag)
+            }
+            ShardBwdMode::SliceReplicated => {
+                Ok(full_grad.slice_cols(gi * self.part_width, (gi + 1) * self.part_width))
+            }
         }
     }
 }

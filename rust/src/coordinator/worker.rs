@@ -74,12 +74,15 @@ pub fn shard_fc(full: &[HostTensor], k: usize, offset: usize) -> Vec<HostTensor>
 
 /// One simulated worker.
 pub struct Worker {
+    /// Global rank.
     pub rank: usize,
     /// 14 conv tensors (w,b x7), full replica.
     pub conv_params: Vec<HostTensor>,
     /// 6 FC tensors: FC0/FC1 shards + replicated FC2.
     pub fc_params: Vec<HostTensor>,
+    /// Optimizer for the conv replica.
     pub conv_opt: Sgd,
+    /// Optimizer for the FC shard set.
     pub fc_opt: Sgd,
     /// Accumulated FC gradients over the K modulo iterations.
     pub fc_grad_acc: Vec<HostTensor>,
@@ -92,6 +95,7 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// Build rank `rank`'s initial state from the shared full model.
     pub fn new(
         rank: usize,
         topo: &GmpTopology,
@@ -167,6 +171,7 @@ impl Worker {
         out
     }
 
+    /// Write back a flattened replicated-parameter buffer.
     pub fn set_replicated_flat(&mut self, flat: &[f32]) {
         let mut off = 0;
         for t in &mut self.conv_params {
@@ -184,6 +189,7 @@ impl Worker {
         assert_eq!(off, flat.len());
     }
 
+    /// Flatten the FC0/FC1 shard tensors for averaging.
     pub fn shards_flat(&self) -> Vec<f32> {
         let mut out = Vec::new();
         for idx in 0..4 {
@@ -192,6 +198,7 @@ impl Worker {
         out
     }
 
+    /// Write back a flattened shard-parameter buffer.
     pub fn set_shards_flat(&mut self, flat: &[f32]) {
         let mut off = 0;
         for idx in 0..4 {

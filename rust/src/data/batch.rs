@@ -17,10 +17,12 @@ pub struct Batch {
 }
 
 impl Batch {
+    /// Examples in the batch.
     pub fn len(&self) -> usize {
         self.images.shape[0]
     }
 
+    /// True when the batch holds no examples.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -28,7 +30,9 @@ impl Batch {
 
 /// An indexable dataset of CIFAR-shaped examples.
 pub trait Dataset {
+    /// Number of examples.
     fn len(&self) -> usize;
+    /// True when the dataset is empty.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -68,6 +72,7 @@ pub struct BatchIter {
 }
 
 impl BatchIter {
+    /// Build worker `worker`-of-`n_workers`'s iterator over `data`.
     pub fn new(
         data: std::rc::Rc<dyn Dataset>,
         batch: usize,
@@ -104,6 +109,7 @@ impl BatchIter {
         self.cursor = 0;
     }
 
+    /// Current epoch (increments when the shard wraps).
     pub fn epoch(&self) -> u64 {
         self.epoch
     }

@@ -3,9 +3,9 @@
 //! Reads the canonical `cifar-10-batches-bin` layout: five training
 //! files of 10,000 records, each record `1 + 3072` bytes
 //! (label, then 1024 R + 1024 G + 1024 B bytes in row-major order).
-//! Also understands a `cifar-10-binary.tar.gz` archive via a minimal
-//! built-in tar + gzip (flate2) reader, so no external tooling is
-//! needed on the offline image.
+//! Also understands an uncompressed `cifar-10-binary.tar` archive via a
+//! minimal built-in ustar reader (gzipped archives must be gunzipped
+//! first — the offline image carries no deflate implementation).
 //!
 //! Images are normalized to zero-mean unit-ish range ((x/255 - 0.5) * 2)
 //! and transposed CHW -> HWC to match the model's NHWC layout.
@@ -44,13 +44,18 @@ impl Cifar10 {
         Self::from_records(&raw)
     }
 
-    /// Load from a `cifar-10-binary.tar.gz` archive.
-    pub fn load_tar_gz(path: impl AsRef<Path>) -> Result<Cifar10> {
-        let f = std::fs::File::open(path.as_ref())
-            .with_context(|| format!("{:?}", path.as_ref()))?;
-        let mut gz = flate2::read::GzDecoder::new(f);
+    /// Load from an (uncompressed) `cifar-10-binary.tar` archive via
+    /// the built-in ustar reader. Gzipped archives must be decompressed
+    /// first (`gunzip`) — the offline build carries no deflate
+    /// implementation.
+    pub fn load_tar(path: impl AsRef<Path>) -> Result<Cifar10> {
+        let path = path.as_ref();
+        if path.extension().is_some_and(|e| e == "gz") {
+            bail!("{path:?} is gzipped — run `gunzip` first (no deflate support offline)");
+        }
+        let mut f = std::fs::File::open(path).with_context(|| format!("{path:?}"))?;
         let mut tar = Vec::new();
-        gz.read_to_end(&mut tar).context("gunzip")?;
+        f.read_to_end(&mut tar).with_context(|| format!("reading {path:?}"))?;
         let mut raw = Vec::new();
         for (name, data) in iter_tar(&tar)? {
             if name.contains("data_batch_") && name.ends_with(".bin") {

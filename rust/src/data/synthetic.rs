@@ -24,6 +24,7 @@ pub struct SyntheticCifar {
 }
 
 impl SyntheticCifar {
+    /// Build a dataset of `n` examples from a seed.
     pub fn new(n: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let means = (0..CLASSES)

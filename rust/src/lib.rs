@@ -6,22 +6,27 @@
 //! The crate is the paper's **Layer-3 coordinator**: it owns the cluster
 //! topology, the automatic layer partitioning (Listing 1), the modulo and
 //! shard communication layers (Figs. 4/5), the group-MP extension
-//! (Fig. 6), BSP model averaging, SGD, and the benchmark harness that
-//! regenerates every table and figure of the paper's evaluation.
+//! (Fig. 6), BSP model averaging, SGD, the threaded cluster execution
+//! engine with ring / recursive-halving-doubling collectives, and the
+//! benchmark harness that regenerates every table and figure of the
+//! paper's evaluation.
 //!
 //! Compute never happens in Python at runtime: the VGG-11 forward and
 //! backward *segments* (Layer 2, JAX, calling Layer-1 Pallas kernels)
-//! are AOT-lowered once by `make artifacts` into HLO text, which
-//! [`runtime`] loads and executes through the PJRT CPU client.
+//! are AOT-lowered by `python -m compile.aot` into HLO text with a
+//! manifest that [`runtime`] validates every call against; in this
+//! offline build the segments execute on the bit-deterministic native
+//! Rust backend (`runtime::native`), which implements exactly the same
+//! functions.
 //!
 //! ## Module map
 //!
 //! | module | role |
 //! |---|---|
 //! | [`model`] | layer DSL, VGG-11 variant (Table 1), CCR estimates, the Listing-1 partitioner |
-//! | [`comm`] | GASPI-like fabric, collectives, network cost model, comm tracing |
-//! | [`coordinator`] | GMP topology, modulo/shard plans, step schedule, model averaging, cluster driver |
-//! | [`runtime`] | PJRT client, artifact manifest, host tensors |
+//! | [`comm`] | thread-safe GASPI-like fabric, naive/ring/rhd collectives, network cost model, comm tracing |
+//! | [`coordinator`] | GMP topology, modulo/shard plans, step schedule, model averaging, threaded + sequential cluster engines |
+//! | [`runtime`] | artifact manifest + native segment executor, host tensors |
 //! | [`data`] | CIFAR-10 loader + synthetic generator, batching |
 //! | [`train`] | SGD, trainer loop, metrics, memory accounting |
 //! | [`bench`] | mini-bench harness + paper table printers |
@@ -39,6 +44,8 @@
 //! let report = cluster.train_steps(100).unwrap();
 //! println!("{} images/sec", report.images_per_sec());
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod comm;

@@ -2,13 +2,15 @@
 //!
 //! ```text
 //! splitbrain train    --workers 4 --mp 2 --steps 100 [--lr 0.05] [--avg-period 10]
-//! splitbrain sweep    --experiment table2|fig7a|fig7b|fig7c [--numeric]
+//!                     [--engine threaded|sequential] [--collectives ring|naive|rhd]
+//! splitbrain sweep    --experiment table2|fig7a|fig7b|fig7b-algos|fig7c [--numeric]
 //! splitbrain inspect  [--mp 2]          # Table 1 + the Fig. 3 transform
 //! splitbrain memory                     # Fig. 7c memory accounting
 //! splitbrain profile  --workers 2 --mp 2 --steps 3   # per-artifact hot-path profile
 //! ```
 //!
-//! All subcommands need `make artifacts` to have produced `artifacts/`.
+//! Runs on the built-in native backend out of the box; an `artifacts/`
+//! directory produced by `python -m compile.aot` overrides the manifest.
 
 use anyhow::{bail, Result};
 
@@ -44,6 +46,8 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
         momentum: args.f32_or("momentum", 0.9)?,
         clip_norm: args.f32_or("clip-norm", 1.0)?,
         scheme: splitbrain::coordinator::McastScheme::parse(args.str_or("scheme", "b/k"))?,
+        engine: splitbrain::coordinator::ExecEngine::parse(args.str_or("engine", "threaded"))?,
+        collectives: splitbrain::comm::CollectiveAlgo::parse(args.str_or("collectives", "ring"))?,
         avg_period: args.usize_or("avg-period", 10)?,
         seed: args.u64_or("seed", 42)?,
         dataset_size: args.usize_or("dataset-size", 2048)?,
@@ -57,13 +61,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 50)?;
     let log_every = args.usize_or("log-every", 10)?.max(1);
     println!(
-        "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}",
+        "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}, engine={}, collectives={}",
         cfg.n_workers,
         cfg.mp,
         cfg.n_workers / cfg.mp,
         rt.manifest.batch,
         cfg.lr,
-        cfg.avg_period
+        cfg.avg_period,
+        cfg.engine,
+        cfg.collectives
     );
     let mut cluster = Cluster::new(&rt, cfg)?;
     let mem = cluster.memory_report();
@@ -112,6 +118,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "table2" => bench::table2(&rt, fidelity, &base)?.0,
         "fig7a" => bench::fig7a(&rt, fidelity, &base)?.0,
         "fig7b" => bench::fig7b(&rt, fidelity, &base)?.0,
+        "fig7b-algos" => bench::fig7b_algos(&rt, &base)?.0,
         "fig7c" => bench::fig7c(&rt, fidelity, &base)?.0,
         other => bail!("unknown experiment {other:?}"),
     };

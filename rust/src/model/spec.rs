@@ -35,7 +35,9 @@ use super::layer::Layer;
 /// A parsed spec: the network plus its input shape.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// The parsed network.
     pub net: Layer,
+    /// Per-example input shape.
     pub input_dim: Dim,
 }
 

@@ -29,12 +29,16 @@ use super::tensor::DType;
 /// Name + dtype + shape of one artifact input or output.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {
+    /// Manifest name of the input/output.
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Row-major shape (empty = scalar).
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -59,21 +63,32 @@ impl TensorSpec {
 /// One AOT-lowered segment: file plus full I/O signature.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (the runtime's call key).
     pub name: String,
+    /// Lowered HLO text file (unused by the native backend).
     pub file: PathBuf,
+    /// Content digest recorded at lowering time.
     pub sha256: String,
+    /// Input signature, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output signature, in tuple order.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// The parsed manifest: header fields + artifact table.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Batch size the segments were lowered for.
     pub batch: usize,
+    /// MP group sizes with shard segments available.
     pub mp_sizes: Vec<usize>,
+    /// Flattened conv-front feature width.
     pub feature_dim: usize,
+    /// Classifier output classes.
     pub num_classes: usize,
+    /// Artifact table, keyed by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 

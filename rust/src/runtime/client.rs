@@ -1,55 +1,48 @@
-//! PJRT CPU client + executable cache.
+//! Runtime client: artifact manifest + segment executor + profiling.
 //!
-//! One client is shared by the whole simulated cluster: on the CPU
-//! backend PJRT executions are serialized by the simulator anyway (each
-//! worker's segment time is measured individually and composed on the
-//! simulated clock — see `coordinator::cluster`), and sharing means each
-//! artifact is compiled exactly once per process.
+//! The original seed executed AOT-lowered HLO text through a PJRT CPU
+//! client (`xla` crate). That backend needs an XLA runtime the offline
+//! build environment does not provide, so execution is served by the
+//! [`super::native`] reference backend — a pure-Rust, bit-deterministic
+//! implementation of the exact same segment functions. The manifest
+//! contract is unchanged: when an `artifacts/` directory produced by
+//! `python -m compile.aot` is present its manifest is loaded and every
+//! call is validated against it; otherwise the built-in native manifest
+//! (batch 8, mp ∈ {1,2,4,8}) is used.
+//!
+//! ## Thread safety
+//!
+//! [`RuntimeClient`] is `Send + Sync` and designed for concurrent use
+//! by the threaded cluster engine: segment execution is pure (no shared
+//! mutable state), and the executable cache, calibration cache and
+//! profiling counters sit behind `Mutex`es. Cloning the `Arc`-backed
+//! [`Executable`] handles out of the cache is cheap.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use super::artifacts::{ArtifactSpec, Manifest};
+use super::native;
 use super::tensor::HostTensor;
 
-/// A compiled artifact, ready to execute.
+/// A callable artifact handle: spec validation + execution + profiling.
 pub struct Executable {
     spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
     /// Cumulative (calls, seconds) for profiling.
-    profile: RefCell<(u64, f64)>,
+    profile: Mutex<(u64, f64)>,
 }
 
 impl Executable {
-    /// Execute with shape-checked host tensors; returns the unwrapped
-    /// output tuple as host tensors.
+    /// Execute with shape-checked host tensors; returns the output
+    /// tuple as host tensors.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.check_inputs(inputs)?;
         let start = Instant::now();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.spec.name))?;
-        let mut lit = result[0][0]
-            .to_literal_sync()
-            .context("device -> host transfer")?;
-        // aot.py lowers with return_tuple=True: decompose the tuple.
-        let parts = lit.decompose_tuple().context("decompose output tuple")?;
-        let mut outs = Vec::with_capacity(parts.len());
-        for (i, p) in parts.iter().enumerate() {
-            let t = HostTensor::from_literal(p)
-                .with_context(|| format!("output {i} of {}", self.spec.name))?;
-            outs.push(t);
-        }
+        let outs = native::execute(&self.spec.name, inputs)?;
         if outs.len() != self.spec.outputs.len() {
             bail!(
                 "{}: expected {} outputs, got {}",
@@ -59,7 +52,7 @@ impl Executable {
             );
         }
         let dt = start.elapsed().as_secs_f64();
-        let mut prof = self.profile.borrow_mut();
+        let mut prof = self.profile.lock().unwrap();
         prof.0 += 1;
         prof.1 += dt;
         Ok(outs)
@@ -91,59 +84,68 @@ impl Executable {
         Ok(())
     }
 
+    /// The artifact's I/O signature.
     pub fn spec(&self) -> &ArtifactSpec {
         &self.spec
     }
 
     /// (calls, cumulative seconds) since load.
     pub fn profile(&self) -> (u64, f64) {
-        *self.profile.borrow()
+        *self.profile.lock().unwrap()
     }
 }
 
-/// The runtime: PJRT CPU client, manifest, and lazily compiled
-/// executables keyed by artifact name.
+/// The runtime: manifest plus executable/calibration caches. `Sync`, so
+/// one client serves every worker thread of the simulated cluster.
 pub struct RuntimeClient {
-    client: xla::PjRtClient,
+    /// The artifact inventory calls are validated against.
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-    calib: RefCell<HashMap<String, f64>>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    calib: Mutex<HashMap<String, f64>>,
 }
 
 impl RuntimeClient {
-    /// Load the manifest from `dir` and connect the PJRT CPU client.
+    /// Load the manifest from `dir` when present, else fall back to the
+    /// built-in native manifest. Either way, segments execute on the
+    /// native backend.
     pub fn load(dir: impl AsRef<Path>) -> Result<RuntimeClient> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = if dir.as_ref().join("manifest.txt").exists() {
+            Manifest::load(dir)?
+        } else {
+            native::native_manifest()?
+        };
         Ok(RuntimeClient {
-            client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            calib: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
+            calib: Mutex::new(HashMap::new()),
         })
     }
 
-    /// Platform string, e.g. "cpu" (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Build a client on the built-in native manifest directly.
+    pub fn native() -> Result<RuntimeClient> {
+        Ok(RuntimeClient {
+            manifest: native::native_manifest()?,
+            cache: Mutex::new(HashMap::new()),
+            calib: Mutex::new(HashMap::new()),
+        })
     }
 
-    /// Get (compiling on first use) the executable for `name`.
-    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    /// Backend platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    /// Get (instantiating on first use) the executable for `name`.
+    /// The lock spans lookup-and-insert so concurrent worker threads
+    /// share one instance (and its profiling counters).
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(name) {
             return Ok(e.clone());
         }
         let spec = self.manifest.get(name)?.clone();
-        let path = spec.file.to_str().context("artifact path utf-8")?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("XLA-compiling {name}"))?;
-        let e = Rc::new(Executable { spec, exe, profile: RefCell::new((0, 0.0)) });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        let e = Arc::new(Executable { spec, profile: Mutex::new((0, 0.0)) });
+        cache.insert(name.to_string(), e.clone());
         Ok(e)
     }
 
@@ -156,7 +158,11 @@ impl RuntimeClient {
     /// process (dummy inputs, 1 warmup + `runs` timed), then cached —
     /// the calibrated simulator and the planner share these numbers.
     pub fn calibrated_secs(&self, name: &str, runs: usize) -> Result<f64> {
-        if let Some(&t) = self.calib.borrow().get(name) {
+        // Hold the calibration lock for the whole measurement:
+        // serializing calibration keeps the timings contention-free and
+        // prevents concurrent callers from each paying the warmup.
+        let mut calib = self.calib.lock().unwrap();
+        if let Some(&t) = calib.get(name) {
             return Ok(t);
         }
         use super::tensor::DType;
@@ -184,7 +190,7 @@ impl RuntimeClient {
             exe.run(&inputs)?;
             per = per.min(start.elapsed().as_secs_f64());
         }
-        self.calib.borrow_mut().insert(name.to_string(), per);
+        calib.insert(name.to_string(), per);
         Ok(per)
     }
 
@@ -193,7 +199,8 @@ impl RuntimeClient {
     pub fn profile_report(&self) -> Vec<(String, u64, f64)> {
         let mut rows: Vec<(String, u64, f64)> = self
             .cache
-            .borrow()
+            .lock()
+            .unwrap()
             .iter()
             .map(|(k, e)| {
                 let (calls, secs) = e.profile();

@@ -1,17 +1,23 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
-//! from the Rust hot path. Python never runs here.
+//! Segment runtime: loads the artifact manifest and executes the
+//! SplitBrain segments from the Rust hot path.
 //!
-//! The interchange format is HLO *text* (not serialized protos): jax
-//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see python/compile/aot.py and
-//! /opt/xla-example/README.md).
+//! The AOT pipeline (`python/compile/aot.py`) lowers each segment to
+//! HLO text for a PJRT backend; the offline build environment provides
+//! no XLA runtime, so execution is served by [`native`] — a pure-Rust,
+//! bit-deterministic implementation of exactly the same segment
+//! functions, validated by the same numeric integration tests. The
+//! manifest remains the contract: artifact names, input order and I/O
+//! signatures are identical to the lowered set, so swapping a PJRT
+//! executor back in is a [`client`]-local change.
 //!
-//! - [`tensor`] — host-side f32/i32 tensors and Literal conversion
+//! - [`tensor`] — host-side f32/i32 tensors
 //! - [`artifacts`] — manifest parser (artifact names, files, signatures)
-//! - [`client`] — PJRT CPU client + compiled-executable cache
+//! - [`native`] — the pure-Rust segment executor
+//! - [`client`] — executable cache, validation, calibration, profiling
 
 pub mod artifacts;
 pub mod client;
+pub mod native;
 pub mod tensor;
 
 pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};

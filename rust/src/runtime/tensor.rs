@@ -1,22 +1,24 @@
 //! Host-side tensors: the coordinator's working representation.
 //!
 //! Parameters, activations and gradients live on the host as flat `f32`
-//! (or `i32`) buffers with explicit shapes; they cross into PJRT as
-//! `xla::Literal`s at segment-execution boundaries. On the CPU backend
-//! this is a memcpy — the simulator charges it to compute time, which is
-//! faithful to the paper's CPU workers.
+//! (or `i32`) buffers with explicit shapes; segment executions consume
+//! and produce them directly (the native backend operates on the flat
+//! buffers, so the segment boundary is zero-copy).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// Element type of a [`HostTensor`]. The SplitBrain model is f32
 /// throughout; labels are i32.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float (parameters, activations, gradients).
     F32,
+    /// 32-bit signed integer (labels, counts).
     I32,
 }
 
 impl DType {
+    /// Parse a manifest dtype token (`float32`/`f32`, `int32`/`i32`).
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "float32" | "f32" => Ok(DType::F32),
@@ -25,6 +27,7 @@ impl DType {
         }
     }
 
+    /// Bytes per element.
     pub fn size_bytes(self) -> usize {
         4
     }
@@ -35,7 +38,9 @@ impl DType {
 /// can be pooled).
 #[derive(Debug, Clone)]
 pub struct HostTensor {
+    /// Element type.
     pub dtype: DType,
+    /// Row-major shape (empty = scalar).
     pub shape: Vec<usize>,
     f32_data: Vec<f32>,
     i32_data: Vec<i32>,
@@ -65,24 +70,29 @@ impl HostTensor {
         HostTensor::f32(shape, vec![0.0; n])
     }
 
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Total byte size of the payload.
     pub fn size_bytes(&self) -> usize {
         self.numel() * self.dtype.size_bytes()
     }
 
+    /// Borrow the flat f32 payload.
     pub fn as_f32(&self) -> &[f32] {
         debug_assert_eq!(self.dtype, DType::F32);
         &self.f32_data
     }
 
+    /// Mutably borrow the flat f32 payload.
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         debug_assert_eq!(self.dtype, DType::F32);
         &mut self.f32_data
     }
 
+    /// Borrow the flat i32 payload.
     pub fn as_i32(&self) -> &[i32] {
         debug_assert_eq!(self.dtype, DType::I32);
         &self.i32_data
@@ -94,38 +104,6 @@ impl HostTensor {
         match self.dtype {
             DType::F32 => self.f32_data[0],
             DType::I32 => self.i32_data[0] as f32,
-        }
-    }
-
-    /// Convert to a PJRT literal with the right shape.
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = match self.dtype {
-            DType::F32 => xla::Literal::vec1(&self.f32_data),
-            DType::I32 => xla::Literal::vec1(&self.i32_data),
-        };
-        if dims.is_empty() {
-            // rank-0: reshape a 1-element vec to scalar shape
-            lit.reshape(&[]).context("reshape to scalar")
-        } else {
-            lit.reshape(&dims).context("reshape literal")
-        }
-    }
-
-    /// Build from a PJRT literal (f32 or i32 arrays only).
-    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape().context("array shape")?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => {
-                let data = lit.to_vec::<f32>().context("literal to f32 vec")?;
-                Ok(HostTensor::f32(dims, data))
-            }
-            xla::ElementType::S32 => {
-                let data = lit.to_vec::<i32>().context("literal to i32 vec")?;
-                Ok(HostTensor::i32(dims, data))
-            }
-            other => bail!("unsupported literal element type {other:?}"),
         }
     }
 

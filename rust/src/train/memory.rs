@@ -71,6 +71,7 @@ impl MemoryReport {
         self.params as f64 / (1024.0 * 1024.0)
     }
 
+    /// Total megabytes.
     pub fn total_mb(&self) -> f64 {
         self.total() as f64 / (1024.0 * 1024.0)
     }

@@ -29,18 +29,28 @@ impl StepMetrics {
 /// Aggregated over a training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
+    /// Cluster size.
     pub n_workers: usize,
+    /// MP group size.
     pub mp: usize,
+    /// Per-worker batch size.
     pub batch: usize,
+    /// Steps recorded.
     pub steps: usize,
+    /// Per-step compute seconds.
     pub compute: Stats,
+    /// Per-step MP communication seconds.
     pub mp_comm: Stats,
+    /// Per-step DP/averaging communication seconds.
     pub dp_comm: Stats,
+    /// Recorded (finite) per-step losses.
     pub losses: Vec<f64>,
+    /// Per-category communication accounting.
     pub trace: CommTrace,
 }
 
 impl TrainReport {
+    /// Empty report for a run shape.
     pub fn new(n_workers: usize, mp: usize, batch: usize) -> TrainReport {
         TrainReport {
             n_workers,
@@ -55,6 +65,7 @@ impl TrainReport {
         }
     }
 
+    /// Record one step's metrics.
     pub fn push(&mut self, m: &StepMetrics) {
         self.steps += 1;
         self.compute.push(m.compute_secs);
@@ -88,6 +99,7 @@ impl TrainReport {
         }
     }
 
+    /// Last recorded loss, if any.
     pub fn final_loss(&self) -> Option<f64> {
         self.losses.last().copied()
     }

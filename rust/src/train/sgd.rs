@@ -10,8 +10,11 @@ use crate::runtime::HostTensor;
 /// SGD hyperparameters + per-tensor momentum state.
 #[derive(Debug, Clone)]
 pub struct Sgd {
+    /// Learning rate.
     pub lr: f32,
+    /// Momentum coefficient.
     pub momentum: f32,
+    /// L2 weight decay.
     pub weight_decay: f32,
     /// Global-norm gradient clip (0 = off). VGG without batch norm is
     /// twitchy at practical learning rates; the paper-era recipe is
@@ -21,10 +24,12 @@ pub struct Sgd {
 }
 
 impl Sgd {
+    /// Build an optimizer (clipping off; see [`Sgd::with_clip`]).
     pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Sgd {
         Sgd { lr, momentum, weight_decay, clip_norm: 0.0, velocity: Vec::new() }
     }
 
+    /// Enable global-norm gradient clipping (builder style).
     pub fn with_clip(mut self, clip_norm: f32) -> Sgd {
         self.clip_norm = clip_norm;
         self

@@ -48,18 +48,22 @@ impl Args {
         Self::parse_from(std::env::args().skip(1))
     }
 
+    /// The i-th positional argument, if present.
     pub fn positional(&self, i: usize) -> Option<&str> {
         self.positional.get(i).map(String::as_str)
     }
 
+    /// True when the flag was given.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// String flag with a default.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.flags.get(key).map(String::as_str).unwrap_or(default)
     }
 
+    /// Unsigned-integer flag with a default.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -67,6 +71,7 @@ impl Args {
         }
     }
 
+    /// Float flag with a default.
     pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -74,6 +79,7 @@ impl Args {
         }
     }
 
+    /// 64-bit unsigned flag with a default.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -81,6 +87,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag with a default.
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
         match self.flags.get(key).map(String::as_str) {
             None => Ok(default),

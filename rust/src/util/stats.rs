@@ -8,22 +8,27 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Empty sample set.
     pub fn new() -> Self {
         Stats { samples: Vec::new() }
     }
 
+    /// Record one sample.
     pub fn push(&mut self, x: f64) {
         self.samples.push(x);
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True when no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -31,6 +36,7 @@ impl Stats {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Sample standard deviation (0 for < 2 samples).
     pub fn stddev(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {
@@ -41,10 +47,12 @@ impl Stats {
             .sqrt()
     }
 
+    /// Minimum sample.
     pub fn min(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Maximum sample.
     pub fn max(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -67,6 +75,7 @@ impl Stats {
         }
     }
 
+    /// 50th percentile.
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }

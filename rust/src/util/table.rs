@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with the given column headers.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Table {
             header: header.into_iter().map(Into::into).collect(),
@@ -16,6 +17,7 @@ impl Table {
         }
     }
 
+    /// Append a row (arity must match the header).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(
@@ -29,6 +31,7 @@ impl Table {
         self
     }
 
+    /// Number of data rows.
     pub fn num_rows(&self) -> usize {
         self.rows.len()
     }

@@ -9,18 +9,22 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
 
+    /// Elapsed time since start.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Elapsed seconds since start.
     pub fn elapsed_secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Return the elapsed time and restart the timer.
     pub fn restart(&mut self) -> Duration {
         let e = self.start.elapsed();
         self.start = Instant::now();

@@ -1,0 +1,160 @@
+//! Engine parity: the threaded execution engine (one scoped thread per
+//! worker, blocking fabric takes, BSP barrier) must reproduce the
+//! sequential reference engine **bit-for-bit** — same losses, same
+//! parameters — over multi-step training runs, across topologies,
+//! schemes and collective algorithms.
+//!
+//! Runs on the built-in native backend (no artifacts needed).
+
+use std::rc::Rc;
+
+use splitbrain::comm::CollectiveAlgo;
+use splitbrain::coordinator::{Cluster, ClusterConfig, ExecEngine, McastScheme};
+use splitbrain::data::{Dataset, SyntheticCifar};
+use splitbrain::runtime::RuntimeClient;
+
+fn cfg(n: usize, mp: usize, engine: ExecEngine, algo: CollectiveAlgo) -> ClusterConfig {
+    ClusterConfig {
+        n_workers: n,
+        mp,
+        lr: 0.02,
+        momentum: 0.9,
+        clip_norm: 1.0,
+        avg_period: 4,
+        seed: 123,
+        dataset_size: 256,
+        engine,
+        collectives: algo,
+        ..Default::default()
+    }
+}
+
+fn dataset() -> Rc<dyn Dataset> {
+    Rc::new(SyntheticCifar::new(256, 123))
+}
+
+/// Every worker's every parameter, flattened (exact f32 payloads).
+fn all_params(c: &Cluster) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    for rank in 0..c.cfg.n_workers {
+        let w = c.worker(rank);
+        for t in w.conv_params.iter().chain(w.fc_params.iter()) {
+            out.push(t.as_f32().to_vec());
+        }
+    }
+    out
+}
+
+fn assert_parity(mut a: Cluster, mut b: Cluster, steps: usize, what: &str) {
+    for step in 1..=steps {
+        let ma = a.step().unwrap();
+        let mb = b.step().unwrap();
+        assert_eq!(
+            ma.loss.to_bits(),
+            mb.loss.to_bits(),
+            "{what}: loss diverged at step {step}: {} vs {}",
+            ma.loss,
+            mb.loss
+        );
+    }
+    let pa = all_params(&a);
+    let pb = all_params(&b);
+    assert_eq!(pa.len(), pb.len());
+    for (i, (x, y)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: parameter tensor {i} diverged");
+    }
+}
+
+/// The headline acceptance check: hybrid (n=2, mp=2) training for 10
+/// steps — two averaging events included — is bit-identical between
+/// engines.
+#[test]
+fn threaded_matches_sequential_hybrid_10_steps() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let seq = Cluster::with_dataset(
+        &rt,
+        cfg(2, 2, ExecEngine::Sequential, CollectiveAlgo::Ring),
+        dataset(),
+    )
+    .unwrap();
+    let thr = Cluster::with_dataset(
+        &rt,
+        cfg(2, 2, ExecEngine::Threaded, CollectiveAlgo::Ring),
+        dataset(),
+    )
+    .unwrap();
+    assert_parity(seq, thr, 10, "hybrid n=2 mp=2");
+}
+
+/// Pure-DP path (fused full_step per worker) with averaging.
+#[test]
+fn threaded_matches_sequential_pure_dp() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut ca = cfg(2, 1, ExecEngine::Sequential, CollectiveAlgo::Ring);
+    ca.avg_period = 2;
+    let mut cb = ca.clone();
+    cb.engine = ExecEngine::Threaded;
+    let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
+    let thr = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
+    assert_parity(seq, thr, 2, "pure DP n=2");
+}
+
+/// Multi-group topology (n=4, mp=2: replicated + shard averaging) for
+/// every collective algorithm.
+#[test]
+fn threaded_matches_sequential_all_collective_algos() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    for algo in [CollectiveAlgo::Naive, CollectiveAlgo::Ring, CollectiveAlgo::Rhd] {
+        let mut ca = cfg(4, 2, ExecEngine::Sequential, algo);
+        ca.avg_period = 1; // average every step: exercise both rings
+        let mut cb = ca.clone();
+        cb.engine = ExecEngine::Threaded;
+        let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
+        let thr = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
+        assert_parity(seq, thr, 1, &format!("n=4 mp=2 algo={algo}"));
+    }
+}
+
+/// Non-power-of-two DP averaging (3 ranks) under recursive
+/// halving/doubling.
+#[test]
+fn threaded_matches_sequential_rhd_non_pow2() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut ca = cfg(3, 1, ExecEngine::Sequential, CollectiveAlgo::Rhd);
+    ca.avg_period = 1;
+    let mut cb = ca.clone();
+    cb.engine = ExecEngine::Threaded;
+    let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
+    let thr = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
+    assert_parity(seq, thr, 2, "pure DP n=3 rhd");
+}
+
+/// The BK scheme's distinct artifact set and gradient rescale survive
+/// the threaded engine.
+#[test]
+fn threaded_matches_sequential_bk_scheme() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut ca = cfg(2, 2, ExecEngine::Sequential, CollectiveAlgo::Ring);
+    ca.scheme = McastScheme::BK;
+    let mut cb = ca.clone();
+    cb.engine = ExecEngine::Threaded;
+    let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
+    let thr = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
+    assert_parity(seq, thr, 1, "n=2 mp=2 scheme=BK");
+}
+
+/// The threaded engine drains the fabric and reproduces the schedule's
+/// analytic per-rank byte volumes, exactly like the sequential one.
+#[test]
+fn threaded_fabric_bytes_match_schedule() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut c = Cluster::with_dataset(
+        &rt,
+        cfg(2, 2, ExecEngine::Threaded, CollectiveAlgo::Ring),
+        dataset(),
+    )
+    .unwrap();
+    c.step().unwrap(); // non-averaging step
+    let (max_rank_bytes, _total) = c.last_fabric_bytes;
+    assert_eq!(max_rank_bytes, c.schedule.mp_bytes_per_member());
+}

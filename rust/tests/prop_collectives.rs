@@ -1,0 +1,185 @@
+//! Property tests for the collective algorithm families: ring and
+//! recursive-halving/doubling results must match the naive all-to-all
+//! oracle, and the fabric's byte counters must match the analytic
+//! expectations, on randomized group sizes — powers of two and not.
+//!
+//! (The offline registry has no proptest crate; these are seeded
+//! randomized sweeps — every failure reproduces from the printed seed.)
+
+use splitbrain::comm::collective::{
+    allgather_cols, allgather_cols_algo, allreduce_mean, reduce_scatter_cols,
+    reduce_scatter_cols_algo, ring_allreduce_mean, CollectiveAlgo,
+};
+use splitbrain::comm::fabric::{Fabric, Tag};
+use splitbrain::runtime::HostTensor;
+use splitbrain::util::Rng;
+
+const CASES: usize = 40;
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> HostTensor {
+    let n = shape.iter().product();
+    HostTensor::f32(shape, rng.normal_vec(n, 1.0))
+}
+
+/// Ring allgather output is bit-identical to the naive oracle (pure
+/// data movement, no arithmetic), per-rank byte totals match the
+/// `V - w_next` forwarding volume, and only successor links carry
+/// traffic.
+#[test]
+fn prop_ring_allgather_matches_naive() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(10_000 + case as u64);
+        let k = 2 + rng.below(7); // 2..=8, non-powers of two included
+        let rows = 1 + rng.below(5);
+        let widths: Vec<usize> = (0..k).map(|_| 1 + rng.below(6)).collect();
+        let full: usize = widths.iter().sum();
+        let group: Vec<usize> = (0..k).collect();
+        let parts: Vec<HostTensor> = widths
+            .iter()
+            .map(|&w| rand_tensor(&mut rng, vec![rows, w]))
+            .collect();
+
+        let f_naive = Fabric::new(k);
+        let naive = allgather_cols(&f_naive, &group, &parts, Tag::new(1, 0, 0)).unwrap();
+        let f_ring = Fabric::new(k);
+        let ring = allgather_cols_algo(
+            CollectiveAlgo::Ring,
+            &f_ring,
+            &group,
+            &parts,
+            Tag::new(1, 0, 0),
+        )
+        .unwrap();
+
+        for (gi, (a, b)) in naive.iter().zip(ring.iter()).enumerate() {
+            assert_eq!(a.as_f32(), b.as_f32(), "case {case} member {gi}");
+        }
+        assert!(f_ring.drained(), "case {case}");
+        for gi in 0..k {
+            // Ring rank gi forwards every chunk except its successor's.
+            let expect = (rows * (full - widths[(gi + 1) % k]) * 4) as u64;
+            assert_eq!(f_ring.bytes_from(gi), expect, "case {case} rank {gi}");
+            for dst in 0..k {
+                let on_link = f_ring.bytes_on_link(gi, dst);
+                if dst == (gi + 1) % k {
+                    assert_eq!(on_link, expect, "case {case} link {gi}->{dst}");
+                } else {
+                    assert_eq!(on_link, 0, "case {case} stray traffic {gi}->{dst}");
+                }
+            }
+        }
+    }
+}
+
+/// Ring reduce-scatter matches the naive oracle numerically (summation
+/// order differs, so tolerance not bit-equality) with *identical*
+/// per-rank byte totals.
+#[test]
+fn prop_ring_reduce_scatter_matches_naive() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(20_000 + case as u64);
+        let k = 2 + rng.below(7);
+        let rows = 1 + rng.below(4);
+        let widths: Vec<usize> = (0..k).map(|_| 1 + rng.below(5)).collect();
+        let full: usize = widths.iter().sum();
+        let group: Vec<usize> = (0..k).collect();
+        let fulls: Vec<HostTensor> =
+            (0..k).map(|_| rand_tensor(&mut rng, vec![rows, full])).collect();
+
+        let f_naive = Fabric::new(k);
+        let naive =
+            reduce_scatter_cols(&f_naive, &group, &fulls, &widths, Tag::new(2, 0, 0)).unwrap();
+        let f_ring = Fabric::new(k);
+        let ring = reduce_scatter_cols_algo(
+            CollectiveAlgo::Ring,
+            &f_ring,
+            &group,
+            &fulls,
+            &widths,
+            Tag::new(2, 0, 0),
+        )
+        .unwrap();
+
+        for (gi, (a, b)) in naive.iter().zip(ring.iter()).enumerate() {
+            assert_eq!(a.shape, b.shape, "case {case} member {gi}");
+            let d = a.max_abs_diff(b);
+            assert!(d < 1e-4, "case {case} member {gi}: diverged by {d}");
+        }
+        assert!(f_ring.drained(), "case {case}");
+        for gi in 0..k {
+            // Both algorithms push everything but the own slice.
+            assert_eq!(
+                f_ring.bytes_from(gi),
+                f_naive.bytes_from(gi),
+                "case {case} rank {gi}"
+            );
+            assert_eq!(f_ring.bytes_from(gi), (rows * (full - widths[gi]) * 4) as u64);
+        }
+    }
+}
+
+/// Ring and recursive-halving/doubling allreduce agree with the naive
+/// mean on random lengths and group sizes, and never move more bytes
+/// per rank than the naive all-to-all.
+#[test]
+fn prop_allreduce_algos_agree_with_naive_mean() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(30_000 + case as u64);
+        let n = 1 + rng.below(8); // 1..=8
+        let len = 1 + rng.below(200);
+        let group: Vec<usize> = (0..n).collect();
+        let orig: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(len, 1.0)).collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| orig.iter().map(|b| b[i]).sum::<f32>() / n as f32)
+            .collect();
+
+        let naive_bytes = ((n.saturating_sub(1)) * len * 4) as u64;
+        for algo in [CollectiveAlgo::Naive, CollectiveAlgo::Ring, CollectiveAlgo::Rhd] {
+            let fabric = Fabric::new(n);
+            let mut bufs = orig.clone();
+            allreduce_mean(algo, &fabric, &group, &mut bufs, 2).unwrap();
+            for (r, b) in bufs.iter().enumerate() {
+                for (got, want) in b.iter().zip(expect.iter()) {
+                    assert!(
+                        (got - want).abs() < 1e-4,
+                        "case {case} n={n} algo={algo} rank {r}: {got} vs {want}"
+                    );
+                }
+            }
+            assert!(fabric.drained(), "case {case} algo={algo}");
+            let worst = (0..n).map(|r| fabric.bytes_from(r)).max().unwrap_or(0);
+            assert!(
+                worst <= naive_bytes,
+                "case {case} n={n} algo={algo}: {worst} > naive {naive_bytes}"
+            );
+        }
+    }
+}
+
+/// The algorithm dispatcher (per-rank programs on threads) reproduces
+/// the seed's group-view ring allreduce bit-for-bit — the property the
+/// sequential/threaded engine parity rests on.
+#[test]
+fn prop_ring_dispatch_bit_matches_group_view() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(40_000 + case as u64);
+        let n = 2 + rng.below(7);
+        let len = 1 + rng.below(300);
+        let group: Vec<usize> = (0..n).collect();
+        let orig: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(len, 1.0)).collect();
+
+        let fa = Fabric::new(n);
+        let mut a = orig.clone();
+        ring_allreduce_mean(&fa, &group, &mut a, 6).unwrap();
+
+        let fb = Fabric::new(n);
+        let mut b = orig.clone();
+        allreduce_mean(CollectiveAlgo::Ring, &fb, &group, &mut b, 6).unwrap();
+
+        for (r, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x, y, "case {case} rank {r}");
+        }
+        assert_eq!(fa.total_bytes(), fb.total_bytes(), "case {case}");
+        assert_eq!(fa.total_msgs(), fb.total_msgs(), "case {case}");
+    }
+}

@@ -1,7 +1,8 @@
-//! Integration: load the AOT artifacts and execute them through PJRT,
+//! Integration: execute the segment artifacts through the runtime,
 //! cross-checking numerics against independent Rust-side math.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Runs on the built-in native backend when no `artifacts/` directory
+//! is present, so nothing is skipped in the offline build.
 
 use splitbrain::runtime::{HostTensor, RuntimeClient};
 use splitbrain::util::Rng;
@@ -10,7 +11,7 @@ fn runtime() -> Option<RuntimeClient> {
     match RuntimeClient::load("artifacts") {
         Ok(rt) => Some(rt),
         Err(e) => {
-            eprintln!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            eprintln!("SKIP: runtime unavailable ({e:#})");
             None
         }
     }
@@ -141,11 +142,11 @@ fn conv_fwd_then_bwd_roundtrip_shapes() {
 }
 
 #[test]
-fn executable_cache_compiles_once() {
+fn executable_cache_instantiates_once() {
     let Some(rt) = runtime() else { return };
     let a = rt.executable("head_fwd").unwrap();
     let b = rt.executable("head_fwd").unwrap();
-    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
 }
 
 #[test]
