@@ -1,4 +1,4 @@
-//! The in-process GASPI-like fabric — now thread-safe.
+//! The in-process GASPI-like fabric — thread-safe, fault-aware.
 //!
 //! GPI-2 exposes segments + one-sided `write_notify`: the sender pushes
 //! into a remote segment and posts a notification the receiver waits
@@ -19,10 +19,33 @@
 //! * **Threaded engine** — ranks run concurrently on their own OS
 //!   threads and a receiver may arrive before its sender:
 //!   [`Fabric::take_blocking`] parks on the condvar until the payload
-//!   lands. A generous timeout ([`TAKE_TIMEOUT_SECS`]) converts a
-//!   deadlocked schedule into a hard error instead of a hang,
-//!   preserving the seed's "a missing notification is an error, never
-//!   a hang" guarantee.
+//!   lands. A configurable timeout (default [`TAKE_TIMEOUT_SECS`],
+//!   override via [`Fabric::with_timeout_ms`]) converts a missing
+//!   notification into a hard error instead of a hang.
+//!
+//! ## Failure semantics
+//!
+//! The fabric is where peer loss becomes observable (see
+//! `docs/ARCHITECTURE.md` §Failure semantics & recovery):
+//!
+//! * a worker that dies is **declared dead** ([`Fabric::declare_dead`]);
+//!   every blocking take on one of its channels returns a typed
+//!   [`PeerLost`] immediately;
+//! * a blocking take that hits the timeout **presumes the sender
+//!   dead** — it declares the sender dead itself and returns
+//!   [`PeerLost`], exactly how a silent peer manifests on a real
+//!   one-sided fabric; a miss on a channel a DropMsg fault fired on is
+//!   presumed dead *immediately* (both engines), since the loss is
+//!   already known;
+//! * either event also **aborts the step**: healthy ranks parked on
+//!   unrelated channels wake with a typed
+//!   [`StepAborted`](super::fault::StepAborted) rather than waiting out
+//!   their own timeouts, so teardown latency is one detection, not N;
+//! * an injected [`FaultPlan`] can crash ranks, straggle their compute
+//!   clock, and drop or delay individual messages — each event fires at
+//!   most once (fired flags survive elastic re-plans via
+//!   [`Fabric::fired_flags`] / [`Fabric::with_fired`]), keeping replays
+//!   bit-deterministic.
 //!
 //! Counters are updated atomically with the enqueue under the same
 //! lock, so per-step snapshots (`max_bytes_per_rank`, `total_bytes`)
@@ -34,9 +57,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-/// Blocking-take timeout: far above any worker's per-phase compute time
-/// (the slowest native segment is a few seconds), so it only fires on a
-/// genuinely wedged schedule.
+use super::fault::{FaultEvent, FaultPlan, PeerLost, StepAborted};
+
+/// Default blocking-take timeout: far above any worker's per-phase
+/// compute time (the slowest native segment is a few seconds), so it
+/// only fires on a genuinely wedged schedule or a lost peer. Tests and
+/// fault scenarios shrink it via `ClusterConfig::take_timeout_ms`.
 pub const TAKE_TIMEOUT_SECS: u64 = 120;
 
 /// Message tag: disambiguates concurrent exchanges (phase, iteration,
@@ -49,6 +75,12 @@ impl Tag {
     pub fn new(phase: u16, iter: u16, layer: u16) -> Tag {
         Tag(((phase as u64) << 32) | ((iter as u64) << 16) | layer as u64)
     }
+
+    /// The phase id the tag was composed with (what [`FaultPlan`]
+    /// drop/delay rules match on).
+    pub fn phase(self) -> u16 {
+        (self.0 >> 32) as u16
+    }
 }
 
 /// Mailbox state guarded by the fabric mutex.
@@ -58,6 +90,22 @@ struct MailState {
     /// bytes_sent[src][dst]
     bytes_sent: Vec<Vec<u64>>,
     msgs_sent: Vec<Vec<u64>>,
+    /// Current 1-based training step (what fault rules match on).
+    step: usize,
+    /// dead[r] — rank r crashed or is presumed dead (timeout).
+    dead: Vec<bool>,
+    /// The current step is being torn down after a failure.
+    aborted: bool,
+    /// fired[i] — fault-plan event i already fired (at-most-once).
+    fired: Vec<bool>,
+    /// Simulated seconds injected by DelayMsg events this step.
+    delay_secs: f64,
+    /// Messages discarded by DropMsg events this step.
+    dropped: u64,
+    /// (src, dst) channels a DropMsg fired on this step: the receiver's
+    /// next miss on such a channel presumes the sender dead (both
+    /// engines), without waiting out the timeout.
+    dropped_channels: Vec<(usize, usize)>,
 }
 
 /// The fabric: per-(src, dst, tag) channel mailboxes + byte counters
@@ -65,22 +113,68 @@ struct MailState {
 #[derive(Debug)]
 pub struct Fabric {
     n: usize,
+    timeout: Duration,
+    faults: FaultPlan,
     state: Mutex<MailState>,
     arrived: Condvar,
 }
 
 impl Fabric {
-    /// Create a fabric connecting `n` ranks.
+    /// Create a fabric connecting `n` ranks (default timeout, no
+    /// faults).
     pub fn new(n: usize) -> Fabric {
         Fabric {
             n,
+            timeout: Duration::from_secs(TAKE_TIMEOUT_SECS),
+            faults: FaultPlan::new(),
             state: Mutex::new(MailState {
                 mail: HashMap::new(),
                 bytes_sent: vec![vec![0; n]; n],
                 msgs_sent: vec![vec![0; n]; n],
+                step: 0,
+                dead: vec![false; n],
+                aborted: false,
+                fired: Vec::new(),
+                delay_secs: 0.0,
+                dropped: 0,
+                dropped_channels: Vec::new(),
             }),
             arrived: Condvar::new(),
         }
+    }
+
+    /// Override the blocking-take timeout (milliseconds). Values below
+    /// 1 ms are clamped up to 1 ms.
+    pub fn with_timeout_ms(mut self, ms: u64) -> Fabric {
+        self.timeout = Duration::from_millis(ms.max(1));
+        self
+    }
+
+    /// Inject a fault plan. Resets the fired flags to match the plan.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Fabric {
+        self.state.get_mut().unwrap().fired = vec![false; faults.len()];
+        self.faults = faults;
+        self
+    }
+
+    /// Carry fired flags over from a previous fabric incarnation (the
+    /// elastic-recovery path), so already-consumed fault events do not
+    /// fire again on the survivor cluster. Lengths must match the plan.
+    pub fn with_fired(mut self, fired: Vec<bool>) -> Fabric {
+        assert_eq!(fired.len(), self.faults.len(), "fired flags must match the fault plan");
+        self.state.get_mut().unwrap().fired = fired;
+        self
+    }
+
+    /// The injected fault plan (empty by default).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Snapshot of the at-most-once fired flags (see
+    /// [`Fabric::with_fired`]).
+    pub fn fired_flags(&self) -> Vec<bool> {
+        self.state.lock().unwrap().fired.clone()
     }
 
     /// Number of ranks the fabric connects.
@@ -88,39 +182,202 @@ impl Fabric {
         self.n
     }
 
+    /// Start training step `step` (1-based): clears the abort flag and
+    /// the per-step delay/drop accumulators. Dead-rank flags persist —
+    /// a lost peer stays lost until the cluster re-plans on a fresh
+    /// fabric.
+    pub fn begin_step(&self, step: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.step = step;
+        st.aborted = false;
+        st.delay_secs = 0.0;
+        st.dropped = 0;
+        st.dropped_channels.clear();
+    }
+
+    /// The current 1-based training step (0 before any
+    /// [`Fabric::begin_step`]).
+    pub fn current_step(&self) -> usize {
+        self.state.lock().unwrap().step
+    }
+
+    /// Declare `rank` dead: blocking takes on its channels return
+    /// [`PeerLost`] and the current step is aborted.
+    pub fn declare_dead(&self, rank: usize) {
+        assert!(rank < self.n, "rank out of range");
+        let mut st = self.state.lock().unwrap();
+        st.dead[rank] = true;
+        st.aborted = true;
+        drop(st);
+        self.arrived.notify_all();
+    }
+
+    /// Abort the current step without declaring anyone dead (a worker
+    /// failed for a non-fault reason): parked receivers wake with
+    /// [`StepAborted`](super::fault::StepAborted).
+    pub fn abort_step(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.aborted = true;
+        drop(st);
+        self.arrived.notify_all();
+    }
+
+    /// Ranks currently declared (or presumed) dead, ascending.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        let st = self.state.lock().unwrap();
+        st.dead
+            .iter()
+            .enumerate()
+            .filter_map(|(r, &d)| if d { Some(r) } else { None })
+            .collect()
+    }
+
+    /// True while the current step is being torn down.
+    pub fn step_aborted(&self) -> bool {
+        self.state.lock().unwrap().aborted
+    }
+
+    /// Simulated seconds injected by DelayMsg faults this step.
+    pub fn injected_delay_secs(&self) -> f64 {
+        self.state.lock().unwrap().delay_secs
+    }
+
+    /// Messages discarded by DropMsg faults this step.
+    pub fn dropped_msgs(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+
+    /// Fire a pending Crash event for (`rank`, current step), if any:
+    /// marks it consumed, declares the rank dead and aborts the step.
+    /// Returns true when the crash fired. Called by both engines at the
+    /// top of each rank's MP phase.
+    pub fn poll_crash(&self, rank: usize) -> bool {
+        if self.faults.is_empty() {
+            return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        let step = st.step;
+        let mut hit = false;
+        for (i, ev) in self.faults.events().iter().enumerate() {
+            if st.fired[i] {
+                continue;
+            }
+            if let FaultEvent::Crash { rank: r, step: s } = ev {
+                if *r == rank && *s == step {
+                    st.fired[i] = true;
+                    st.dead[rank] = true;
+                    st.aborted = true;
+                    hit = true;
+                }
+            }
+        }
+        drop(st);
+        if hit {
+            self.arrived.notify_all();
+        }
+        hit
+    }
+
+    /// Fire pending Straggle events for (`rank`, current step):
+    /// returns the injected simulated seconds (0.0 when none).
+    pub fn poll_straggle(&self, rank: usize) -> f64 {
+        if self.faults.is_empty() {
+            return 0.0;
+        }
+        let mut st = self.state.lock().unwrap();
+        let step = st.step;
+        let mut secs = 0.0;
+        for (i, ev) in self.faults.events().iter().enumerate() {
+            if st.fired[i] {
+                continue;
+            }
+            if let FaultEvent::Straggle { rank: r, step: s, sim_ms } = ev {
+                if *r == rank && *s == step {
+                    st.fired[i] = true;
+                    secs += *sim_ms as f64 / 1e3;
+                }
+            }
+        }
+        secs
+    }
+
     /// One-sided write+notify: push `payload` into dst's segment.
     /// Self-sends are forbidden (local copies are not network traffic).
+    /// DropMsg/DelayMsg fault rules are applied here: a dropped message
+    /// is counted as sent (the wire carried it) but never delivered.
     pub fn post(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
         assert!(src < self.n && dst < self.n, "rank out of range");
         assert_ne!(src, dst, "self-send: local data must not cross the fabric");
         let mut st = self.state.lock().unwrap();
         st.bytes_sent[src][dst] += (payload.len() * 4) as u64;
         st.msgs_sent[src][dst] += 1;
+        if !self.faults.is_empty() {
+            let step = st.step;
+            let phase = tag.phase();
+            for (i, ev) in self.faults.events().iter().enumerate() {
+                if st.fired[i] {
+                    continue;
+                }
+                match ev {
+                    FaultEvent::DropMsg { src: fs, dst: fd, phase: fp, step: fstep }
+                        if *fs == src && *fd == dst && *fp == phase && *fstep == step =>
+                    {
+                        st.fired[i] = true;
+                        st.dropped += 1;
+                        st.dropped_channels.push((src, dst));
+                        return; // discarded: never enqueued, no notify
+                    }
+                    FaultEvent::DelayMsg { src: fs, dst: fd, phase: fp, step: fstep, sim_ms }
+                        if *fs == src && *fd == dst && *fp == phase && *fstep == step =>
+                    {
+                        st.fired[i] = true;
+                        st.delay_secs += *sim_ms as f64 / 1e3;
+                        // delivered below, late on the simulated clock
+                    }
+                    _ => {}
+                }
+            }
+        }
         st.mail.entry((src, dst, tag)).or_default().push_back(payload);
         drop(st);
         self.arrived.notify_all();
     }
 
     /// Non-blocking take (sequential engine): pop the notification from
-    /// (src, tag), erroring immediately when nothing is queued — in a
-    /// coordinator-interleaved schedule that is always a schedule bug.
-    /// FIFO per (src, dst, tag).
+    /// (src, tag). A miss on a channel a DropMsg fault fired on this
+    /// step presumes the sender dead (typed [`PeerLost`] — same
+    /// semantics as the threaded engine); any other miss errors
+    /// immediately, since in a coordinator-interleaved schedule it is
+    /// always a schedule bug. FIFO per (src, dst, tag).
     pub fn take(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
         let mut st = self.state.lock().unwrap();
-        match st.mail.get_mut(&(src, dst, tag)) {
-            Some(q) if !q.is_empty() => Ok(q.pop_front().expect("checked non-empty")),
-            _ => bail!(
-                "fabric: rank {dst} waiting on missing message from {src} tag {tag:?} — schedule bug"
-            ),
+        if let Some(q) = st.mail.get_mut(&(src, dst, tag)) {
+            if let Some(payload) = q.pop_front() {
+                return Ok(payload);
+            }
         }
+        if st.dropped_channels.iter().any(|&(s, d)| s == src && d == dst) {
+            st.dead[src] = true;
+            st.aborted = true;
+            let step = st.step;
+            drop(st);
+            self.arrived.notify_all();
+            return Err(PeerLost { rank: src, waiter: dst, step }.into());
+        }
+        bail!(
+            "fabric: rank {dst} waiting on missing message from {src} tag {tag:?} — schedule bug"
+        )
     }
 
     /// Blocking take (threaded engine): wait on the (src, tag)
-    /// notification until the payload arrives. Times out after
-    /// [`TAKE_TIMEOUT_SECS`] with a hard error — a wedged schedule must
-    /// fail loudly, never hang. FIFO per (src, dst, tag).
+    /// notification until the payload arrives. Fails loudly rather than
+    /// hanging: with a typed [`PeerLost`] when the sender is (or
+    /// becomes) dead or the timeout expires (the sender is then
+    /// presumed dead), and with a typed
+    /// [`StepAborted`](super::fault::StepAborted) when another rank's
+    /// failure tears the step down first. FIFO per (src, dst, tag).
     pub fn take_blocking(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
-        let deadline = Instant::now() + Duration::from_secs(TAKE_TIMEOUT_SECS);
+        let deadline = Instant::now() + self.timeout;
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(q) = st.mail.get_mut(&(src, dst, tag)) {
@@ -128,12 +385,32 @@ impl Fabric {
                     return Ok(payload);
                 }
             }
+            if st.dead[src] {
+                return Err(PeerLost { rank: src, waiter: dst, step: st.step }.into());
+            }
+            if st.aborted {
+                return Err(StepAborted { rank: dst, step: st.step }.into());
+            }
+            if st.dropped_channels.iter().any(|&(s, d)| s == src && d == dst) {
+                // A message on this channel was lost: presume the sender
+                // dead now instead of waiting out the timeout.
+                st.dead[src] = true;
+                st.aborted = true;
+                let step = st.step;
+                drop(st);
+                self.arrived.notify_all();
+                return Err(PeerLost { rank: src, waiter: dst, step }.into());
+            }
             let now = Instant::now();
             if now >= deadline {
-                bail!(
-                    "fabric: rank {dst} timed out ({TAKE_TIMEOUT_SECS}s) waiting on message \
-                     from {src} tag {tag:?} — schedule deadlock"
-                );
+                // Silence past the timeout ⇒ the sender is presumed
+                // dead (lost peer), and the step is torn down.
+                st.dead[src] = true;
+                st.aborted = true;
+                let step = st.step;
+                drop(st);
+                self.arrived.notify_all();
+                return Err(PeerLost { rank: src, waiter: dst, step }.into());
             }
             let (guard, _timeout) = self
                 .arrived
@@ -147,6 +424,13 @@ impl Fabric {
     /// leftover mail means the schedule posted more than it consumed).
     pub fn drained(&self) -> bool {
         self.state.lock().unwrap().mail.values().all(VecDeque::is_empty)
+    }
+
+    /// Discard all undelivered messages. The elastic recovery path
+    /// replaces the whole fabric instead of calling this; it exists for
+    /// embedders driving their own teardown (and the unit tests).
+    pub fn clear_mail(&self) {
+        self.state.lock().unwrap().mail.clear();
     }
 
     /// Total bytes sent by `src` since the last reset.
@@ -258,6 +542,8 @@ mod tests {
     fn tag_composition_unique() {
         assert_ne!(Tag::new(1, 0, 0), Tag::new(0, 1, 0));
         assert_ne!(Tag::new(0, 1, 0), Tag::new(0, 0, 1));
+        assert_eq!(Tag::new(7, 3, 1).phase(), 7);
+        assert_eq!(Tag::new(2000, 0, 0).phase(), 2000);
     }
 
     #[test]
@@ -279,5 +565,148 @@ mod tests {
         let t = Tag::new(9, 1, 0);
         f.post(0, 1, t, vec![3.0]);
         assert_eq!(f.take_blocking(1, 0, t).unwrap(), vec![3.0]);
+    }
+
+    // ---- failure semantics ----
+
+    #[test]
+    fn dead_sender_is_typed_peer_lost() {
+        let f = Fabric::new(2);
+        f.begin_step(3);
+        f.declare_dead(0);
+        let e = f.take_blocking(1, 0, Tag::new(1, 0, 0)).unwrap_err();
+        let p = e.downcast_ref::<PeerLost>().expect("typed PeerLost");
+        assert_eq!((p.rank, p.waiter, p.step), (0, 1, 3));
+        assert_eq!(f.dead_ranks(), vec![0]);
+        assert!(f.step_aborted());
+    }
+
+    #[test]
+    fn timeout_presumes_sender_dead() {
+        let f = Fabric::new(2).with_timeout_ms(30);
+        f.begin_step(1);
+        let e = f.take_blocking(1, 0, Tag::new(1, 0, 0)).unwrap_err();
+        assert!(e.is::<PeerLost>(), "timeout must convert to PeerLost: {e:#}");
+        assert_eq!(f.dead_ranks(), vec![0]);
+    }
+
+    #[test]
+    fn queued_mail_beats_death() {
+        // A message delivered before the sender died is still taken.
+        let f = Fabric::new(2);
+        let t = Tag::new(1, 0, 0);
+        f.post(0, 1, t, vec![5.0]);
+        f.declare_dead(0);
+        assert_eq!(f.take_blocking(1, 0, t).unwrap(), vec![5.0]);
+    }
+
+    #[test]
+    fn abort_wakes_parked_receivers_without_marking_dead() {
+        let f = std::sync::Arc::new(Fabric::new(3));
+        f.begin_step(2);
+        let g = f.clone();
+        let h = std::thread::spawn(move || g.take_blocking(2, 1, Tag::new(1, 0, 0)).unwrap_err());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        f.abort_step();
+        let e = h.join().unwrap();
+        let a = e.downcast_ref::<StepAborted>().expect("typed StepAborted");
+        assert_eq!((a.rank, a.step), (2, 2));
+        assert!(f.dead_ranks().is_empty(), "abort must not presume anyone dead");
+    }
+
+    #[test]
+    fn begin_step_clears_abort_but_not_dead() {
+        let f = Fabric::new(2);
+        f.begin_step(1);
+        f.declare_dead(1);
+        f.begin_step(2);
+        assert!(!f.step_aborted());
+        assert_eq!(f.dead_ranks(), vec![1]);
+    }
+
+    #[test]
+    fn drop_fault_discards_exactly_once() {
+        let plan = FaultPlan::new().drop_msg(0, 1, 4, 1);
+        let f = Fabric::new(2).with_faults(plan).with_timeout_ms(30);
+        f.begin_step(1);
+        let t = Tag::new(4, 0, 0);
+        f.post(0, 1, t, vec![1.0]); // dropped
+        f.post(0, 1, t, vec![2.0]); // delivered (event already fired)
+        assert_eq!(f.dropped_msgs(), 1);
+        // Bytes are counted for both: the wire carried the lost one too.
+        assert_eq!(f.bytes_from(0), 8);
+        // Delivered mail on a dropped channel is still consumable...
+        assert_eq!(f.take_blocking(1, 0, t).unwrap(), vec![2.0]);
+        assert!(f.drained());
+        // ...but a miss on it presumes the sender dead, immediately
+        // (no timeout wait), on both the blocking and sequential paths.
+        let e = f.take_blocking(1, 0, t).unwrap_err();
+        assert_eq!(e.downcast_ref::<PeerLost>().unwrap().rank, 0);
+        assert_eq!(f.dead_ranks(), vec![0]);
+    }
+
+    #[test]
+    fn sequential_take_miss_on_dropped_channel_is_peer_lost() {
+        let plan = FaultPlan::new().drop_msg(0, 1, 4, 1);
+        let f = Fabric::new(2).with_faults(plan);
+        f.begin_step(1);
+        f.post(0, 1, Tag::new(4, 0, 0), vec![1.0]); // dropped
+        let e = f.take(1, 0, Tag::new(4, 0, 0)).unwrap_err();
+        let p = e.downcast_ref::<PeerLost>().expect("typed PeerLost on sequential take");
+        assert_eq!((p.rank, p.waiter, p.step), (0, 1, 1));
+        // An ordinary miss (no drop involved) stays a schedule bug.
+        let f2 = Fabric::new(2);
+        let e2 = f2.take(1, 0, Tag::new(4, 0, 0)).unwrap_err();
+        assert!(e2.downcast_ref::<PeerLost>().is_none());
+        assert!(e2.to_string().contains("schedule bug"));
+    }
+
+    #[test]
+    fn delay_fault_charges_simulated_time_and_delivers() {
+        let plan = FaultPlan::new().delay_msg(0, 1, 2, 1, 250);
+        let f = Fabric::new(2).with_faults(plan);
+        f.begin_step(1);
+        let t = Tag::new(2, 0, 0);
+        f.post(0, 1, t, vec![1.0]);
+        assert_eq!(f.take_blocking(1, 0, t).unwrap(), vec![1.0]);
+        assert!((f.injected_delay_secs() - 0.25).abs() < 1e-12);
+        f.begin_step(2);
+        assert_eq!(f.injected_delay_secs(), 0.0, "per-step accumulator resets");
+    }
+
+    #[test]
+    fn crash_poll_fires_once_and_flags_carry_over() {
+        let plan = FaultPlan::new().crash(1, 2);
+        let f = Fabric::new(2).with_faults(plan.clone());
+        f.begin_step(1);
+        assert!(!f.poll_crash(1), "wrong step: no fire");
+        f.begin_step(2);
+        assert!(f.poll_crash(1));
+        assert_eq!(f.dead_ranks(), vec![1]);
+        let fired = f.fired_flags();
+        assert_eq!(fired, vec![true]);
+        // A survivor-incarnation fabric inherits the fired flag.
+        let f2 = Fabric::new(1).with_faults(plan).with_fired(fired);
+        f2.begin_step(2);
+        assert!(!f2.poll_crash(1), "consumed events must not re-fire");
+    }
+
+    #[test]
+    fn straggle_poll_returns_simulated_seconds_once() {
+        let plan = FaultPlan::new().straggle(0, 1, 500);
+        let f = Fabric::new(2).with_faults(plan);
+        f.begin_step(1);
+        assert!((f.poll_straggle(0) - 0.5).abs() < 1e-12);
+        assert_eq!(f.poll_straggle(0), 0.0, "at-most-once");
+        assert_eq!(f.poll_straggle(1), 0.0);
+    }
+
+    #[test]
+    fn clear_mail_discards_leftovers() {
+        let f = Fabric::new(2);
+        f.post(0, 1, Tag::new(1, 0, 0), vec![1.0]);
+        assert!(!f.drained());
+        f.clear_mail();
+        assert!(f.drained());
     }
 }

@@ -1,0 +1,310 @@
+//! Deterministic fault injection — the harness behind the elastic
+//! recovery path and every failure-scenario test.
+//!
+//! A [`FaultPlan`] is an immutable list of [`FaultEvent`]s, each keyed
+//! to a (rank and/or channel, training step). The plan is injected into
+//! the [`Fabric`](super::Fabric) at construction and consulted at the
+//! exact points where a real cluster fails:
+//!
+//! * **Crash** — the worker's thread errors out at the start of its MP
+//!   phase for that step (the rank is declared dead on the fabric, so
+//!   peers observe a typed [`PeerLost`] instead of hanging);
+//! * **DropMsg** — the matching `post` is silently discarded, so the
+//!   receiver's blocking take runs into the (configurable) timeout and
+//!   presumes the sender dead — exactly how a lost peer manifests on
+//!   real one-sided RDMA fabrics;
+//! * **DelayMsg** — the message is delivered, but the configured
+//!   simulated milliseconds are charged to the step's communication
+//!   clock;
+//! * **Straggle** — the rank's simulated compute clock is inflated for
+//!   the step, lengthening the BSP critical path.
+//!
+//! Every event fires **at most once** (the fabric tracks fired flags
+//! and carries them across elastic re-plans), and nothing anywhere in
+//! the path reads wall-clock entropy — so a run with a given
+//! (`ClusterConfig::seed`, `FaultPlan`) pair replays **bit-identically**,
+//! which the `fault_injection` integration suite asserts.
+
+use std::fmt;
+
+use crate::util::Rng;
+
+/// One injectable failure, keyed to a 1-based training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Worker `rank` dies at the start of step `step`'s MP phase.
+    Crash {
+        /// Rank that dies.
+        rank: usize,
+        /// 1-based step the crash fires on.
+        step: usize,
+    },
+    /// Worker `rank`'s simulated compute clock gains `sim_ms` at `step`.
+    Straggle {
+        /// Rank that straggles.
+        rank: usize,
+        /// 1-based step the straggle fires on.
+        step: usize,
+        /// Simulated milliseconds added to the rank's compute time.
+        sim_ms: u64,
+    },
+    /// The first `src`→`dst` message with tag-phase `phase` posted
+    /// during `step` is silently dropped.
+    DropMsg {
+        /// Sending rank.
+        src: usize,
+        /// Receiving rank.
+        dst: usize,
+        /// Tag phase id (see [`Tag::new`](super::fabric::Tag::new)).
+        phase: u16,
+        /// 1-based step the drop fires on.
+        step: usize,
+    },
+    /// The first matching `src`→`dst` message posted during `step` is
+    /// delivered, but `sim_ms` simulated milliseconds are charged to
+    /// the step's communication time.
+    DelayMsg {
+        /// Sending rank.
+        src: usize,
+        /// Receiving rank.
+        dst: usize,
+        /// Tag phase id (see [`Tag::new`](super::fabric::Tag::new)).
+        phase: u16,
+        /// 1-based step the delay fires on.
+        step: usize,
+        /// Simulated milliseconds charged to the comm clock.
+        sim_ms: u64,
+    },
+}
+
+/// A deterministic failure scenario: an ordered set of [`FaultEvent`]s.
+///
+/// Build one with the chainable constructors, or derive a scenario from
+/// a seed with [`FaultPlan::random`]. Inject it via
+/// `ClusterConfig::faults` (or [`Fabric::with_faults`](super::Fabric::with_faults)
+/// directly in unit tests).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Empty plan (no faults — the default for `ClusterConfig`).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Add a crash of `rank` at 1-based `step`.
+    pub fn crash(mut self, rank: usize, step: usize) -> FaultPlan {
+        self.events.push(FaultEvent::Crash { rank, step });
+        self
+    }
+
+    /// Add a straggle: `rank` gains `sim_ms` simulated compute
+    /// milliseconds at `step`.
+    pub fn straggle(mut self, rank: usize, step: usize, sim_ms: u64) -> FaultPlan {
+        self.events.push(FaultEvent::Straggle { rank, step, sim_ms });
+        self
+    }
+
+    /// Add a message drop on the (`src`, `dst`, tag-phase) channel at
+    /// `step`.
+    pub fn drop_msg(mut self, src: usize, dst: usize, phase: u16, step: usize) -> FaultPlan {
+        self.events.push(FaultEvent::DropMsg { src, dst, phase, step });
+        self
+    }
+
+    /// Add a message delay of `sim_ms` simulated milliseconds on the
+    /// (`src`, `dst`, tag-phase) channel at `step`.
+    pub fn delay_msg(
+        mut self,
+        src: usize,
+        dst: usize,
+        phase: u16,
+        step: usize,
+        sim_ms: u64,
+    ) -> FaultPlan {
+        self.events.push(FaultEvent::DelayMsg { src, dst, phase, step, sim_ms });
+        self
+    }
+
+    /// Derive a scenario of `n_events` faults from a seed: every choice
+    /// (kind, rank, step, magnitude) comes from the repo's deterministic
+    /// [`Rng`], so the same seed always yields the same plan.
+    ///
+    /// Crashes are drawn from ranks `1..n_workers` (rank 0 is spared so
+    /// a survivor always remains), steps from `1..=steps`.
+    pub fn random(seed: u64, n_workers: usize, steps: usize, n_events: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA01_7FA0);
+        let mut plan = FaultPlan::new();
+        if n_workers == 0 || steps == 0 {
+            return plan;
+        }
+        for _ in 0..n_events {
+            let step = 1 + rng.below(steps);
+            match rng.below(4) {
+                0 if n_workers > 1 => {
+                    plan = plan.crash(1 + rng.below(n_workers - 1), step);
+                }
+                1 => {
+                    plan = plan.straggle(rng.below(n_workers), step, 10 + rng.below(200) as u64);
+                }
+                2 if n_workers > 1 => {
+                    let src = rng.below(n_workers);
+                    let dst = (src + 1 + rng.below(n_workers - 1)) % n_workers;
+                    plan = plan.drop_msg(src, dst, 1 + rng.below(7) as u16, step);
+                }
+                _ if n_workers > 1 => {
+                    let src = rng.below(n_workers);
+                    let dst = (src + 1 + rng.below(n_workers - 1)) % n_workers;
+                    plan = plan.delay_msg(src, dst, 1 + rng.below(7) as u16, step, 10 + rng.below(200) as u64);
+                }
+                _ => {
+                    plan = plan.straggle(rng.below(n_workers), step, 10 + rng.below(200) as u64);
+                }
+            }
+        }
+        plan
+    }
+
+    /// The scheduled events, in insertion order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// True when no faults are scheduled (the common fast path).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+/// Typed error: a peer is gone (it crashed, or a message expected from
+/// it never arrived within the fabric timeout and it is presumed dead).
+///
+/// Recoverable under `RecoveryPolicy::ShrinkAndContinue` — the cluster
+/// re-plans over the survivor set. Retrieve it from an `anyhow::Error`
+/// with `err.downcast_ref::<PeerLost>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerLost {
+    /// The rank presumed dead.
+    pub rank: usize,
+    /// The rank that detected the loss (the waiting receiver).
+    pub waiter: usize,
+    /// 1-based training step the loss was detected on.
+    pub step: usize,
+}
+
+impl fmt::Display for PeerLost {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "peer lost: rank {} (detected by rank {} at step {})",
+            self.rank, self.waiter, self.step
+        )
+    }
+}
+
+impl std::error::Error for PeerLost {}
+
+/// Typed error: an injected crash fired on this rank.
+///
+/// The crashing worker's own thread reports this; its peers observe a
+/// [`PeerLost`] (or a step abort) instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerCrashed {
+    /// The rank that crashed.
+    pub rank: usize,
+    /// 1-based training step the crash fired on.
+    pub step: usize,
+}
+
+impl fmt::Display for WorkerCrashed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "worker {} crashed at step {} (injected fault)", self.rank, self.step)
+    }
+}
+
+impl std::error::Error for WorkerCrashed {}
+
+/// Typed error: the current step was torn down because some *other*
+/// worker failed. The receiver observing this is itself healthy; it is
+/// not added to the dead set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepAborted {
+    /// The rank whose take was interrupted.
+    pub rank: usize,
+    /// 1-based training step that was aborted.
+    pub step: usize,
+}
+
+impl fmt::Display for StepAborted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "step {} aborted under rank {} (a peer failed first)", self.step, self.rank)
+    }
+}
+
+impl std::error::Error for StepAborted {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_accumulate_in_order() {
+        let p = FaultPlan::new()
+            .crash(1, 3)
+            .straggle(0, 2, 50)
+            .drop_msg(0, 1, 3, 4)
+            .delay_msg(1, 0, 1, 5, 20);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.events()[0], FaultEvent::Crash { rank: 1, step: 3 });
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic() {
+        let a = FaultPlan::random(7, 4, 10, 5);
+        let b = FaultPlan::random(7, 4, 10, 5);
+        let c = FaultPlan::random(8, 4, 10, 5);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "different seeds should differ (5 draws over a wide space)");
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn random_never_crashes_rank_zero() {
+        for seed in 0..20 {
+            let p = FaultPlan::random(seed, 4, 8, 6);
+            for e in p.events() {
+                if let FaultEvent::Crash { rank, .. } = e {
+                    assert!(*rank >= 1 && *rank < 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_degenerate_sizes_are_safe() {
+        assert!(FaultPlan::random(1, 0, 5, 3).is_empty());
+        assert!(FaultPlan::random(1, 2, 0, 3).is_empty());
+        // Single worker: only straggles are possible.
+        for e in FaultPlan::random(3, 1, 5, 4).events() {
+            assert!(matches!(e, FaultEvent::Straggle { rank: 0, .. }));
+        }
+    }
+
+    #[test]
+    fn typed_errors_downcast_through_anyhow() {
+        let e: anyhow::Error = PeerLost { rank: 2, waiter: 0, step: 5 }.into();
+        assert_eq!(e.downcast_ref::<PeerLost>().unwrap().rank, 2);
+        assert!(e.downcast_ref::<WorkerCrashed>().is_none());
+        let c: anyhow::Error = WorkerCrashed { rank: 1, step: 3 }.into();
+        assert!(c.is::<WorkerCrashed>());
+        assert!(c.to_string().contains("crashed at step 3"));
+    }
+}

@@ -11,16 +11,20 @@
 //! composes with measured compute time. [`collective`] hosts the
 //! algorithm families ([`CollectiveAlgo`]: naive all-to-all, ring,
 //! recursive halving/doubling) in both group-view and per-rank (SPMD)
-//! forms.
+//! forms. [`fault`] adds the deterministic fault-injection layer
+//! (seeded crash/straggle/drop/delay plans) and the typed peer-loss
+//! errors the elastic recovery path is built on.
 
 pub mod collective;
 pub mod fabric;
+pub mod fault;
 pub mod netmodel;
 pub mod topology;
 pub mod trace;
 
 pub use collective::CollectiveAlgo;
 pub use fabric::Fabric;
+pub use fault::{FaultEvent, FaultPlan, PeerLost, StepAborted, WorkerCrashed};
 pub use netmodel::NetModel;
 pub use topology::CommGraph;
 pub use trace::{CommCategory, CommTrace};

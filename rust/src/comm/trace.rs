@@ -132,6 +132,34 @@ impl CommTrace {
         self.msgs[cat.index()]
     }
 
+    /// Phase occurrences recorded for a category.
+    pub fn phases(&self, cat: CommCategory) -> u64 {
+        self.phases[cat.index()]
+    }
+
+    /// Canonical JSON of the integer counters (bytes, msgs, phase
+    /// occurrences) per category, in [`CommCategory::ALL`] order.
+    /// Modeled seconds are deliberately excluded: floats don't pin
+    /// stably. This exact string is what the golden-trace regression
+    /// test commits and compares against, so the format must stay
+    /// byte-stable.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        for (i, &c) in CommCategory::ALL.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{c}\":{{\"bytes\":{},\"msgs\":{},\"phases\":{}}}",
+                self.bytes(c),
+                self.msgs(c),
+                self.phases(c)
+            ));
+        }
+        out.push('}');
+        out
+    }
+
     /// Total modeled seconds over all categories.
     pub fn total_seconds(&self) -> f64 {
         self.seconds.iter().sum()
@@ -243,5 +271,20 @@ mod tests {
         for c in CommCategory::ALL {
             assert!(!format!("{c}").is_empty());
         }
+    }
+
+    #[test]
+    fn json_is_canonical_and_integer_only() {
+        let mut t = CommTrace::new();
+        let net = NetModel::default();
+        t.record_uniform(CommCategory::ShardFwd, &net, 2, PhaseVolume::new(3, 3000));
+        t.record_uniform(CommCategory::ShardFwd, &net, 2, PhaseVolume::new(3, 3000));
+        let j = t.to_json();
+        assert!(j.starts_with("{\"dp-average\":{\"bytes\":0,\"msgs\":0,\"phases\":0}"));
+        assert!(j.contains("\"shard-fwd\":{\"bytes\":6000,\"msgs\":6,\"phases\":2}"));
+        assert!(j.ends_with('}'));
+        assert_eq!(t.phases(CommCategory::ShardFwd), 2);
+        // Stable: same counters, same string.
+        assert_eq!(j, t.to_json());
     }
 }

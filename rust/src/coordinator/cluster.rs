@@ -35,11 +35,25 @@
 //!   then steps are costed analytically: used by the Table 2 / Fig. 7
 //!   sweeps where 32-worker numeric execution would melt the wall clock
 //!   without changing the reported shape.
+//!
+//! ## Failure & recovery
+//!
+//! Peer loss surfaces from the fabric as a typed `PeerLost` (crash, or
+//! a blocking take timing out and presuming its sender dead). Under
+//! [`RecoveryPolicy::ShrinkAndContinue`] the cluster then re-plans over
+//! the survivor set — shrunk GMP topology (`planner::survivor_mp`),
+//! re-partitioned network, recompiled schedule — restores weights from
+//! the latest in-memory global checkpoint (refreshed at every averaging
+//! boundary) and retries the step. Deterministic failure scenarios are
+//! injected via `ClusterConfig::faults` (see `comm::fault`); a run with
+//! a fixed (seed, plan) pair replays bit-identically, recovery
+//! included. See `docs/ARCHITECTURE.md` §Failure semantics & recovery.
 
 use anyhow::{bail, Context, Result};
 
 use crate::comm::collective::CollectiveAlgo;
-use crate::comm::fabric::{Fabric, Tag};
+use crate::comm::fabric::{Fabric, Tag, TAKE_TIMEOUT_SECS};
+use crate::comm::fault::{FaultPlan, WorkerCrashed};
 use crate::comm::NetModel;
 use crate::data::{BatchIter, Dataset};
 use crate::model::{partition_network, PartitionConfig, TransformedNet, vgg11};
@@ -57,6 +71,43 @@ use super::scheme::{
 };
 use super::shard::{ShardBwdMode, ShardPlan};
 use super::worker::{init_full_params, Worker};
+
+/// What the cluster does when a peer is lost mid-run (crash, or a
+/// fabric take timing out and presuming its sender dead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// Propagate the typed `PeerLost`/`WorkerCrashed` error to the
+    /// caller and leave the cluster as-is (the seed behavior, minus the
+    /// opaque timeout message). The default.
+    #[default]
+    FailFast,
+    /// Elastic recovery: re-plan over the survivor set (shrunk GMP
+    /// topology via `planner::survivor_mp` + schedule recompile),
+    /// restore weights from the latest global checkpoint, and retry the
+    /// step. Training continues on the survivors.
+    ShrinkAndContinue,
+}
+
+impl RecoveryPolicy {
+    /// Parse a CLI token: `fail-fast`/`failfast` or
+    /// `shrink`/`shrink-and-continue`.
+    pub fn parse(s: &str) -> Result<RecoveryPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fail-fast" | "failfast" => Ok(RecoveryPolicy::FailFast),
+            "shrink" | "shrink-and-continue" => Ok(RecoveryPolicy::ShrinkAndContinue),
+            other => bail!("unknown recovery policy {other:?} (expected fail-fast or shrink)"),
+        }
+    }
+}
+
+impl std::fmt::Display for RecoveryPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RecoveryPolicy::FailFast => "fail-fast",
+            RecoveryPolicy::ShrinkAndContinue => "shrink-and-continue",
+        })
+    }
+}
 
 /// Training-run configuration (§4's trainer parameters).
 #[derive(Debug, Clone)]
@@ -95,6 +146,16 @@ pub struct ClusterConfig {
     /// averaging (default ring; naive all-to-all and recursive
     /// halving/doubling are selectable for the Fig. 7b comparison).
     pub collectives: CollectiveAlgo,
+    /// What to do on peer loss: fail fast (default) or shrink to the
+    /// survivor set and continue.
+    pub recovery: RecoveryPolicy,
+    /// Blocking-take timeout, milliseconds (threaded engine). Past it a
+    /// silent sender is presumed dead and the take returns a typed
+    /// `PeerLost`. Defaults to [`TAKE_TIMEOUT_SECS`]; fault-injection
+    /// tests shrink it so drop scenarios resolve in milliseconds.
+    pub take_timeout_ms: u64,
+    /// Deterministic fault-injection scenario (empty = no faults).
+    pub faults: FaultPlan,
 }
 
 impl Default for ClusterConfig {
@@ -113,6 +174,9 @@ impl Default for ClusterConfig {
             scheme: McastScheme::BoverK,
             engine: ExecEngine::Threaded,
             collectives: CollectiveAlgo::Ring,
+            recovery: RecoveryPolicy::FailFast,
+            take_timeout_ms: TAKE_TIMEOUT_SECS * 1000,
+            faults: FaultPlan::new(),
         }
     }
 }
@@ -133,10 +197,56 @@ pub struct Cluster<'rt> {
     fabric: Fabric,
     step_count: usize,
     batch: usize,
+    /// The dataset, kept so elastic recovery can rebuild the survivor
+    /// iterators.
+    data: std::rc::Rc<dyn Dataset>,
+    /// Latest in-memory global checkpoint (named tensors, global-model
+    /// coordinates) and the step it was taken at. Refreshed at every
+    /// averaging boundary, when replicas provably agree.
+    ckpt: Vec<(String, HostTensor)>,
+    ckpt_step: usize,
     /// Fabric counters of the last completed step (before reset):
     /// (max bytes pushed by one rank, total bytes) — used by tests to
     /// cross-check the analytic schedule volumes against reality.
     pub last_fabric_bytes: (u64, u64),
+    /// How many elastic recoveries this cluster has performed.
+    pub recoveries: usize,
+    /// Ranks lost so far, in detection order. Ranks are re-numbered
+    /// contiguously after each shrink, so entries are relative to the
+    /// incarnation they died in.
+    pub lost_ranks: Vec<usize>,
+}
+
+/// The plan pipeline shared by cluster construction and elastic
+/// recovery: validate artifact support, build the (n, mp) GMP topology,
+/// partition the network and compile the step schedule.
+fn plan_topology(
+    rt: &RuntimeClient,
+    cfg: &ClusterConfig,
+    n: usize,
+    mp: usize,
+) -> Result<(GmpTopology, TransformedNet, StepSchedule)> {
+    if !rt.manifest.supports_mp(mp) {
+        bail!(
+            "artifacts were not lowered for mp={mp} (manifest mp_sizes {:?}) — re-run `make artifacts`",
+            rt.manifest.mp_sizes
+        );
+    }
+    let topo = GmpTopology::new(n, mp)?;
+    let transformed = partition_network(
+        &vgg11(),
+        vec![32, 32, 3],
+        &PartitionConfig { mp, ..Default::default() },
+    )?;
+    let schedule = StepSchedule::compile_with_algo(
+        &transformed,
+        topo,
+        &rt.manifest,
+        cfg.segmented_mp1,
+        cfg.scheme,
+        cfg.collectives,
+    )?;
+    Ok((topo, transformed, schedule))
 }
 
 impl<'rt> Cluster<'rt> {
@@ -152,27 +262,7 @@ impl<'rt> Cluster<'rt> {
         cfg: ClusterConfig,
         data: std::rc::Rc<dyn Dataset>,
     ) -> Result<Cluster<'rt>> {
-        let topo = GmpTopology::new(cfg.n_workers, cfg.mp)?;
-        if !rt.manifest.supports_mp(cfg.mp) {
-            bail!(
-                "artifacts were not lowered for mp={} (manifest mp_sizes {:?}) — re-run `make artifacts`",
-                cfg.mp,
-                rt.manifest.mp_sizes
-            );
-        }
-        let transformed = partition_network(
-            &vgg11(),
-            vec![32, 32, 3],
-            &PartitionConfig { mp: cfg.mp, ..Default::default() },
-        )?;
-        let schedule = StepSchedule::compile_with_algo(
-            &transformed,
-            topo,
-            &rt.manifest,
-            cfg.segmented_mp1,
-            cfg.scheme,
-            cfg.collectives,
-        )?;
+        let (topo, transformed, schedule) = plan_topology(rt, &cfg, cfg.n_workers, cfg.mp)?;
         let batch = rt.manifest.batch;
 
         let (conv, fc) = init_full_params(cfg.seed);
@@ -193,8 +283,10 @@ impl<'rt> Cluster<'rt> {
         let iters = (0..cfg.n_workers)
             .map(|rank| BatchIter::new(data.clone(), batch, rank, cfg.n_workers, cfg.seed))
             .collect();
-        let fabric = Fabric::new(cfg.n_workers);
-        Ok(Cluster {
+        let fabric = Fabric::new(cfg.n_workers)
+            .with_timeout_ms(cfg.take_timeout_ms)
+            .with_faults(cfg.faults.clone());
+        let mut cluster = Cluster {
             rt,
             cfg,
             topo,
@@ -205,8 +297,18 @@ impl<'rt> Cluster<'rt> {
             fabric,
             step_count: 0,
             batch,
+            data,
+            ckpt: Vec::new(),
+            ckpt_step: 0,
             last_fabric_bytes: (0, 0),
-        })
+            recoveries: 0,
+            lost_ranks: Vec::new(),
+        };
+        // The initial model is a valid global checkpoint (all replicas
+        // identical by construction) — recovery before the first
+        // averaging boundary restarts from it.
+        cluster.ckpt = cluster.snapshot_global();
+        Ok(cluster)
     }
 
     /// Per-worker memory accounting (Fig. 7c).
@@ -242,7 +344,35 @@ impl<'rt> Cluster<'rt> {
     /// One BSP training step across all groups, on the configured
     /// engine. Both engines produce bit-identical numerics; the
     /// threaded engine overlaps the workers' wall-clock compute.
+    ///
+    /// On peer loss (typed `PeerLost`/`WorkerCrashed` from the fabric
+    /// or an injected fault), behavior follows `cfg.recovery`:
+    /// [`RecoveryPolicy::FailFast`] propagates the error;
+    /// [`RecoveryPolicy::ShrinkAndContinue`] re-plans over the survivor
+    /// set, restores the latest checkpoint and retries the step, so a
+    /// successful return always means one completed training step.
     pub fn step(&mut self) -> Result<StepMetrics> {
+        loop {
+            match self.try_step() {
+                Ok(m) => return Ok(m),
+                Err(e) => {
+                    let dead = self.fabric.dead_ranks();
+                    if self.cfg.recovery != RecoveryPolicy::ShrinkAndContinue || dead.is_empty()
+                    {
+                        // Not a peer loss (or fail-fast): propagate.
+                        return Err(e);
+                    }
+                    self.recover(&dead)
+                        .map_err(|re| re.context(format!("recovering from: {e:#}")))?;
+                }
+            }
+        }
+    }
+
+    /// One step attempt on the current incarnation (no recovery).
+    fn try_step(&mut self) -> Result<StepMetrics> {
+        let step_no = self.step_count + 1;
+        self.fabric.begin_step(step_no);
         for w in &mut self.workers {
             w.begin_step();
             w.compute_secs = 0.0;
@@ -254,6 +384,17 @@ impl<'rt> Cluster<'rt> {
 
         match self.cfg.engine {
             ExecEngine::Sequential => {
+                // Injected crashes fire before the coordinator-driven
+                // phases (the threaded engine polls per worker thread).
+                let mut crashed = None;
+                for rank in 0..self.cfg.n_workers {
+                    if self.fabric.poll_crash(rank) && crashed.is_none() {
+                        crashed = Some(rank);
+                    }
+                }
+                if let Some(rank) = crashed {
+                    return Err(WorkerCrashed { rank, step: step_no }.into());
+                }
                 if self.cfg.mp == 1 && !self.cfg.segmented_mp1 {
                     self.step_pure_dp(&batches)?;
                 } else {
@@ -290,6 +431,16 @@ impl<'rt> Cluster<'rt> {
         }
         self.step_count += 1;
 
+        // Injected straggles inflate the rank's simulated compute
+        // clock; injected delays are charged to the MP comm clock.
+        for rank in 0..self.cfg.n_workers {
+            let s = self.fabric.poll_straggle(rank);
+            if s > 0.0 {
+                self.workers[rank].compute_secs += s;
+            }
+        }
+        let injected_delay = self.fabric.injected_delay_secs();
+
         let mut dp_comm = 0.0;
         if averaging_due {
             dp_comm = self.schedule.avg_comm_secs(&self.cfg.net);
@@ -299,6 +450,12 @@ impl<'rt> Cluster<'rt> {
         }
         self.last_fabric_bytes = (self.fabric.max_bytes_per_rank(), self.fabric.total_bytes());
         self.fabric.reset_counters();
+        if averaging_due {
+            // Replicas provably agree right after averaging: refresh the
+            // in-memory checkpoint the recovery path restores from.
+            self.ckpt = self.snapshot_global();
+            self.ckpt_step = self.step_count;
+        }
 
         let compute = self
             .workers
@@ -310,10 +467,87 @@ impl<'rt> Cluster<'rt> {
             / self.workers.len() as f64;
         Ok(StepMetrics {
             compute_secs: compute,
-            mp_comm_secs: self.schedule.mp_comm_secs(&self.cfg.net),
+            mp_comm_secs: self.schedule.mp_comm_secs(&self.cfg.net) + injected_delay,
             dp_comm_secs: dp_comm,
             loss,
         })
+    }
+
+    /// Elastic recovery: shrink to the survivor set, re-plan, restore
+    /// the latest checkpoint, rebuild iterators and fabric. The next
+    /// `try_step` runs on the recovered cluster.
+    ///
+    /// Steps between the restore point and the failure are **not
+    /// replayed**: the step counter and data iterators keep advancing
+    /// while the model reverts to the last averaging boundary — the
+    /// standard elastic-training trade (lost work is bounded by
+    /// `avg_period`), chosen over rewinding so `steps_done()` and the
+    /// callers' step loops stay monotonic.
+    fn recover(&mut self, dead: &[usize]) -> Result<()> {
+        let survivors: Vec<usize> =
+            (0..self.cfg.n_workers).filter(|r| !dead.contains(r)).collect();
+        if survivors.is_empty() {
+            bail!("unrecoverable: all {} workers lost", self.cfg.n_workers);
+        }
+        let n = survivors.len();
+        let mp = super::planner::survivor_mp(n, self.cfg.mp, &self.rt.manifest.mp_sizes)?;
+
+        // Re-plan: shrunk GMP topology, re-partition, recompiled
+        // schedule — the same `plan_topology` pipeline the constructor
+        // runs (so recovered and freshly built clusters can't drift).
+        let (topo, transformed, schedule) = plan_topology(self.rt, &self.cfg, n, mp)?;
+        self.lost_ranks.extend(dead.iter().copied());
+        self.recoveries += 1;
+        self.cfg.n_workers = n;
+        self.cfg.mp = mp;
+        self.topo = topo;
+        self.transformed = transformed;
+        self.schedule = schedule;
+
+        // Restore survivor workers from the latest global checkpoint
+        // (re-sharded for the new mp; optimizer momentum resets, as on
+        // any checkpoint restore).
+        let tensors: Vec<HostTensor> = self.ckpt.iter().map(|(_, t)| t.clone()).collect();
+        let conv = &tensors[..14];
+        let fc = &tensors[14..20];
+        let mut workers = Vec::with_capacity(n);
+        for rank in 0..n {
+            workers.push(Worker::new(
+                rank,
+                &self.topo,
+                conv,
+                fc,
+                self.batch,
+                self.schedule.boundary_width.max(1),
+                self.cfg.lr,
+                self.cfg.momentum,
+                self.cfg.clip_norm,
+            )?);
+        }
+        self.workers = workers;
+
+        // Survivor data iterators, advanced to the current position so
+        // the retried step consumes the same global batch index a
+        // from-scratch n-worker run would at this step.
+        self.iters = (0..n)
+            .map(|rank| {
+                let mut it =
+                    BatchIter::new(self.data.clone(), self.batch, rank, n, self.cfg.seed);
+                for _ in 0..self.step_count {
+                    it.next_batch();
+                }
+                it
+            })
+            .collect();
+
+        // Fresh fabric over the survivors. Consumed fault events stay
+        // consumed (at-most-once), keeping replays deterministic.
+        let fired = self.fabric.fired_flags();
+        self.fabric = Fabric::new(n)
+            .with_timeout_ms(self.cfg.take_timeout_ms)
+            .with_faults(self.cfg.faults.clone())
+            .with_fired(fired);
+        Ok(())
     }
 
     /// mp=1 fast path: the fused full_step artifact per worker (the
@@ -582,20 +816,22 @@ impl<'rt> Cluster<'rt> {
         &self.workers[rank]
     }
 
-    /// Save the global model (worker 0's conv replica + group 0's
-    /// reconstructed full FC stack) to a checkpoint file. Valid at any
-    /// point: replicas agree after averaging; between averagings this
-    /// snapshots worker 0's replica, like the paper's leader would.
-    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+    /// Snapshot the global model (worker 0's conv replica + group 0's
+    /// reconstructed full FC stack) as named tensors in checkpoint
+    /// order. Valid at any point: replicas agree after averaging;
+    /// between averagings this snapshots worker 0's replica, like the
+    /// paper's leader would.
+    pub fn snapshot_global(&self) -> Vec<(String, HostTensor)> {
         use crate::train::checkpoint;
         let mut tensors: Vec<HostTensor> = self.workers[0].conv_params.clone();
         tensors.extend(self.reconstruct_full_fc(0));
-        let names = checkpoint::model_names();
-        let named: Vec<(String, &HostTensor)> = names
-            .into_iter()
-            .zip(tensors.iter())
-            .collect();
-        checkpoint::save(path, &named)
+        checkpoint::model_names().into_iter().zip(tensors).collect()
+    }
+
+    /// Save the global model snapshot ([`Cluster::snapshot_global`]) to
+    /// a checkpoint file.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        crate::train::checkpoint::save_named(path, &self.snapshot_global())
     }
 
     /// Restore a checkpoint into every worker (re-sharding the FC stack
@@ -630,12 +866,27 @@ impl<'rt> Cluster<'rt> {
             w.conv_opt.reset();
             w.fc_opt.reset();
         }
+        // A freshly restored model is globally consistent: make it the
+        // recovery restore point too.
+        self.ckpt = self.snapshot_global();
+        self.ckpt_step = self.step_count;
         Ok(())
     }
 
     /// Number of training steps completed so far.
     pub fn steps_done(&self) -> usize {
         self.step_count
+    }
+
+    /// Step the latest in-memory checkpoint (the recovery restore
+    /// point) was taken at — 0 until the first averaging boundary.
+    pub fn last_checkpoint_step(&self) -> usize {
+        self.ckpt_step
+    }
+
+    /// The fabric (tests inspect dead ranks and counters).
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
     }
 }
 

@@ -22,10 +22,21 @@
 //!
 //! ## Failure semantics
 //!
-//! A worker error (bad artifact, schedule bug) does not hang the step:
-//! the erroring thread still reaches the barrier, peers waiting on its
-//! messages fail via the fabric's take timeout, and the first error is
-//! propagated to the caller after all threads join.
+//! A worker error (injected crash, bad artifact, schedule bug) does not
+//! hang the step: the erroring thread still reaches the barrier, and it
+//! aborts the step on the fabric first, so peers parked on blocking
+//! takes wake immediately with a typed error — [`PeerLost`] when the
+//! failed rank is dead, `StepAborted` otherwise — instead of waiting
+//! out the take timeout. After all threads join, a typed
+//! [`WorkerCrashed`]/[`PeerLost`] error is propagated in preference to
+//! the secondary teardown errors, so the cluster driver (and its
+//! `RecoveryPolicy`) sees the root cause.
+//!
+//! Injected faults ([`FaultPlan`](crate::comm::fault::FaultPlan)) enter
+//! here and in the fabric: each rank polls for a scheduled crash at the
+//! top of its MP phase; message drops/delays fire inside
+//! [`Fabric::post`]; straggles are charged by the cluster driver to the
+//! simulated compute clock.
 
 use std::sync::Barrier;
 
@@ -33,6 +44,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::comm::collective::CollectiveAlgo;
 use crate::comm::fabric::{Fabric, Tag};
+use crate::comm::fault::{PeerLost, StepAborted, WorkerCrashed};
 use crate::data::Batch;
 use crate::runtime::{HostTensor, RuntimeClient};
 use crate::util::Timer;
@@ -99,8 +111,10 @@ pub(crate) struct StepCtx<'a> {
 }
 
 /// Run one training step with one scoped thread per worker. Returns
-/// after every thread joined; the first worker error (if any) is
-/// propagated.
+/// after every thread joined. A typed root-cause error
+/// ([`WorkerCrashed`] / [`PeerLost`]) is propagated in preference to
+/// the secondary teardown errors of healthy peers; otherwise the first
+/// error by rank order wins.
 pub(crate) fn run_threaded_step(
     workers: &mut [Worker],
     batches: &[Batch],
@@ -121,27 +135,53 @@ pub(crate) fn run_threaded_step(
             })
             .collect()
     });
+    // Root-cause preference: typed fault errors, then ordinary worker
+    // errors, then the secondary StepAborted teardown errors.
+    let mut typed: Option<anyhow::Error> = None;
+    let mut plain: Option<anyhow::Error> = None;
+    let mut aborted: Option<anyhow::Error> = None;
     for r in results {
-        r?;
+        if let Err(e) = r {
+            if e.is::<WorkerCrashed>() || e.is::<PeerLost>() {
+                typed.get_or_insert(e);
+            } else if e.is::<StepAborted>() {
+                aborted.get_or_insert(e);
+            } else {
+                plain.get_or_insert(e);
+            }
+        }
     }
-    Ok(())
+    match typed.or(plain).or(aborted) {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
-/// One worker's whole step: MP phase, superstep barrier, averaging.
-/// The barrier is reached on error *and panic* paths too (panics are
-/// caught and converted to errors), so a failing worker never wedges
-/// its peers at the barrier — they fail via the fabric take timeout
-/// instead.
+/// One worker's whole step: crash poll, MP phase, superstep barrier,
+/// averaging. The barrier is reached on error *and panic* paths too
+/// (panics are caught and converted to errors), so a failing worker
+/// never wedges its peers at the barrier. Any failure aborts the step
+/// on the fabric before the barrier, so peers parked on blocking takes
+/// wake with a typed error instead of waiting out the take timeout.
 fn worker_step(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
     use std::panic::{catch_unwind, AssertUnwindSafe};
-    let mp = catch_unwind(AssertUnwindSafe(|| {
-        if ctx.topo.mp == 1 && !ctx.segmented_mp1 {
-            full_step_rank(&mut *w, batch, ctx)
-        } else {
-            group_step_rank(rank, &mut *w, batch, ctx)
-        }
-    }))
-    .unwrap_or_else(|_| Err(anyhow!("worker {rank} panicked in the MP phase")));
+    let mp = if ctx.fabric.poll_crash(rank) {
+        // Injected fault: this rank dies at the top of its MP phase.
+        // poll_crash already declared it dead and aborted the step.
+        Err(WorkerCrashed { rank, step: ctx.fabric.current_step() }.into())
+    } else {
+        catch_unwind(AssertUnwindSafe(|| {
+            if ctx.topo.mp == 1 && !ctx.segmented_mp1 {
+                full_step_rank(&mut *w, batch, ctx)
+            } else {
+                group_step_rank(rank, &mut *w, batch, ctx)
+            }
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("worker {rank} panicked in the MP phase")))
+    };
+    if mp.is_err() {
+        ctx.fabric.abort_step();
+    }
     ctx.barrier.wait();
     let avg = if mp.is_ok() && ctx.averaging {
         catch_unwind(AssertUnwindSafe(|| {
@@ -151,6 +191,9 @@ fn worker_step(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) ->
     } else {
         Ok(())
     };
+    if avg.is_err() {
+        ctx.fabric.abort_step();
+    }
     mp.and(avg)
 }
 

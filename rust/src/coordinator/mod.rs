@@ -7,8 +7,10 @@
 //! - [`averaging`] — BSP model averaging (replicated across N, shards across groups)
 //! - [`worker`] — per-worker parameter/optimizer/accumulator state
 //! - [`engine`] — the threaded (one thread per worker) execution engine
-//! - [`cluster`] — the numeric simulator + calibrated throughput mode
-//! - [`planner`] — feasible-configuration search under a memory budget
+//! - [`cluster`] — the numeric simulator + calibrated throughput mode,
+//!   with elastic shrink-and-continue recovery on peer loss
+//! - [`planner`] — feasible-configuration search under a memory budget,
+//!   plus survivor re-planning for elastic recovery
 
 pub mod averaging;
 pub mod cluster;
@@ -21,7 +23,7 @@ pub mod scheme;
 pub mod shard;
 pub mod worker;
 
-pub use cluster::{calibrated_report, Cluster, ClusterConfig};
+pub use cluster::{calibrated_report, Cluster, ClusterConfig, RecoveryPolicy};
 pub use engine::ExecEngine;
 pub use group::GmpTopology;
 pub use modulo::ModuloPlan;

@@ -165,6 +165,30 @@ pub fn best(options: &[PlanOption]) -> Option<&PlanOption> {
     options.iter().find(|o| o.feasible)
 }
 
+/// Elastic re-planning after peer loss: the largest artifact-supported
+/// MP group size that (a) divides the survivor count and (b) does not
+/// exceed the pre-failure `old_mp` (growing the groups would inflate
+/// per-round traffic mid-run and need artifacts the run was not
+/// validated for). With `1` in `mp_sizes` — always true for generated
+/// artifact sets — a survivor set of any size re-plans to at least pure
+/// DP.
+pub fn survivor_mp(n_survivors: usize, old_mp: usize, mp_sizes: &[usize]) -> Result<usize> {
+    if n_survivors == 0 {
+        anyhow::bail!("no survivors to re-plan over");
+    }
+    mp_sizes
+        .iter()
+        .copied()
+        .filter(|&k| k >= 1 && k <= old_mp && n_survivors % k == 0)
+        .max()
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no supported mp size (of {mp_sizes:?}) divides {n_survivors} survivors \
+                 under the old group size {old_mp}"
+            )
+        })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,6 +293,23 @@ mod tests {
         if let Some(idx) = first_infeasible {
             assert!(options[idx..].iter().all(|o| !o.feasible));
         }
+    }
+
+    #[test]
+    fn survivor_mp_picks_largest_compatible_group() {
+        let sizes = [1usize, 2, 4, 8];
+        // 3 survivors of an mp=2 cluster: only pure DP divides 3.
+        assert_eq!(survivor_mp(3, 2, &sizes).unwrap(), 1);
+        // 2 survivors of an mp=2 cluster: the group shape survives.
+        assert_eq!(survivor_mp(2, 2, &sizes).unwrap(), 2);
+        // 6 survivors of an mp=4 cluster: 4 ∤ 6, shrink to 2.
+        assert_eq!(survivor_mp(6, 4, &sizes).unwrap(), 2);
+        // Never grows the groups past the pre-failure size.
+        assert_eq!(survivor_mp(8, 2, &sizes).unwrap(), 2);
+        // No survivors is an error.
+        assert!(survivor_mp(0, 2, &sizes).is_err());
+        // Pathological manifest without mp=1 can be unsatisfiable.
+        assert!(survivor_mp(3, 2, &[2, 4]).is_err());
     }
 
     #[test]

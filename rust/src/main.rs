@@ -3,6 +3,8 @@
 //! ```text
 //! splitbrain train    --workers 4 --mp 2 --steps 100 [--lr 0.05] [--avg-period 10]
 //!                     [--engine threaded|sequential] [--collectives ring|naive|rhd]
+//!                     [--recovery fail-fast|shrink] [--take-timeout-ms 120000]
+//!                     [--crash R@S] [--straggle R@S:MS] [--fault-seed N [--fault-count 2]]
 //! splitbrain sweep    --experiment table2|fig7a|fig7b|fig7b-algos|fig7c [--numeric]
 //! splitbrain inspect  [--mp 2]          # Table 1 + the Fig. 3 transform
 //! splitbrain memory                     # Fig. 7c memory accounting
@@ -38,9 +40,16 @@ fn main() -> Result<()> {
     }
 }
 
+/// Shared CLI defaults (also used by the fault-plan assembly, which
+/// draws random ranks/steps from the same ranges the run will have).
+const DEFAULT_WORKERS: usize = 2;
+const DEFAULT_STEPS: usize = 50;
+
 fn cluster_config(args: &Args) -> Result<ClusterConfig> {
+    let n_workers = args.usize_or("workers", DEFAULT_WORKERS)?;
+    let steps = args.usize_or("steps", DEFAULT_STEPS)?;
     Ok(ClusterConfig {
-        n_workers: args.usize_or("workers", 2)?,
+        n_workers,
         mp: args.usize_or("mp", 1)?,
         lr: args.f32_or("lr", 0.05)?,
         momentum: args.f32_or("momentum", 0.9)?,
@@ -51,14 +60,49 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
         avg_period: args.usize_or("avg-period", 10)?,
         seed: args.u64_or("seed", 42)?,
         dataset_size: args.usize_or("dataset-size", 2048)?,
+        recovery: splitbrain::coordinator::RecoveryPolicy::parse(
+            args.str_or("recovery", "fail-fast"),
+        )?,
+        take_timeout_ms: args.u64_or(
+            "take-timeout-ms",
+            splitbrain::comm::fabric::TAKE_TIMEOUT_SECS * 1000,
+        )?,
+        faults: fault_plan(args, n_workers, steps)?,
         ..Default::default()
     })
+}
+
+/// Assemble a fault-injection plan from the CLI:
+/// `--crash R@S` (rank R dies at step S), `--straggle R@S:MS`,
+/// and/or `--fault-seed N` for a seeded random scenario of
+/// `--fault-count` events (default 2) over the resolved run shape.
+fn fault_plan(args: &Args, n_workers: usize, steps: usize) -> Result<splitbrain::comm::FaultPlan> {
+    use splitbrain::comm::FaultPlan;
+    let mut plan = match args.u64_or("fault-seed", 0)? {
+        0 => FaultPlan::new(),
+        seed => FaultPlan::random(seed, n_workers, steps, args.usize_or("fault-count", 2)?),
+    };
+    let crash = args.str_or("crash", "");
+    if !crash.is_empty() {
+        let (r, s) = crash
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("--crash expects R@S, got {crash:?}"))?;
+        plan = plan.crash(r.trim().parse()?, s.trim().parse()?);
+    }
+    let straggle = args.str_or("straggle", "");
+    if !straggle.is_empty() {
+        let err = || anyhow::anyhow!("--straggle expects R@S:MS, got {straggle:?}");
+        let (r, rest) = straggle.split_once('@').ok_or_else(err)?;
+        let (s, ms) = rest.split_once(':').ok_or_else(err)?;
+        plan = plan.straggle(r.trim().parse()?, s.trim().parse()?, ms.trim().parse()?);
+    }
+    Ok(plan)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
     let cfg = cluster_config(args)?;
-    let steps = args.usize_or("steps", 50)?;
+    let steps = args.usize_or("steps", DEFAULT_STEPS)?;
     let log_every = args.usize_or("log-every", 10)?.max(1);
     println!(
         "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}, engine={}, collectives={}",
@@ -95,6 +139,17 @@ fn cmd_train(args: &Args) -> Result<()> {
                 m.step_secs() * 1e3
             );
         }
+    }
+    if cluster.recoveries > 0 {
+        println!(
+            "\nelastic recoveries: {} (ranks lost: {:?}) — now {} workers, mp={}, \
+             last restore point step {}",
+            cluster.recoveries,
+            cluster.lost_ranks,
+            cluster.cfg.n_workers,
+            cluster.cfg.mp,
+            cluster.last_checkpoint_step()
+        );
     }
     println!(
         "\nthroughput: {:.2} images/sec (simulated cluster)  comm fraction {:.1}%",

@@ -48,6 +48,14 @@ pub fn save(path: impl AsRef<Path>, tensors: &[(String, &HostTensor)]) -> Result
     Ok(())
 }
 
+/// Save owned named tensors (the in-memory snapshot shape the cluster's
+/// recovery path keeps — see `Cluster::snapshot_global`).
+pub fn save_named(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
+    let refs: Vec<(String, &HostTensor)> =
+        tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+    save(path, &refs)
+}
+
 /// Load all tensors, in file order.
 pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
     let mut f = std::io::BufReader::new(
@@ -133,6 +141,18 @@ mod tests {
         assert_eq!(loaded[0].1.shape, vec![2, 3]);
         assert_eq!(loaded[0].1.as_f32(), a.as_f32());
         assert_eq!(loaded[1].1.as_f32(), b.as_f32());
+    }
+
+    #[test]
+    fn save_named_matches_save() {
+        let a = HostTensor::f32(vec![3], vec![1., 2., 3.]);
+        let p1 = tmp("named1");
+        let p2 = tmp("named2");
+        save(&p1, &[("t".into(), &a)]).unwrap();
+        save_named(&p2, &[("t".into(), a.clone())]).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Fault injection + elastic recovery: the acceptance suite for the
+//! deterministic failure harness.
+//!
+//! What is proven here:
+//! * a single-worker crash injected at **any** step recovers under
+//!   `RecoveryPolicy::ShrinkAndContinue` — the cluster re-plans over the
+//!   survivor set (shrunk GMP groups), restores the latest checkpoint
+//!   and keeps training;
+//! * the same `FaultPlan` seed reproduces a faulted run
+//!   **bit-identically** (losses and parameters), recovery included;
+//! * peer loss is a **typed** error (`PeerLost` / `WorkerCrashed`), not
+//!   an opaque timeout;
+//! * dropped messages surface as presumed-dead peers through the
+//!   (configurable) take timeout;
+//! * straggle/delay faults move only the simulated clocks, never the
+//!   numerics;
+//! * recovery semantics are engine-independent (threaded == sequential,
+//!   bit-for-bit).
+//!
+//! Runs on the built-in native backend (no artifacts needed).
+
+use std::rc::Rc;
+
+use splitbrain::comm::fault::FaultEvent;
+use splitbrain::comm::{FaultPlan, PeerLost, WorkerCrashed};
+use splitbrain::coordinator::{Cluster, ClusterConfig, ExecEngine, RecoveryPolicy};
+use splitbrain::data::{Dataset, SyntheticCifar};
+use splitbrain::runtime::RuntimeClient;
+
+fn cfg(n: usize, mp: usize) -> ClusterConfig {
+    ClusterConfig {
+        n_workers: n,
+        mp,
+        lr: 0.02,
+        momentum: 0.9,
+        clip_norm: 1.0,
+        avg_period: 2,
+        seed: 77,
+        dataset_size: 256,
+        recovery: RecoveryPolicy::ShrinkAndContinue,
+        ..Default::default()
+    }
+}
+
+fn dataset() -> Rc<dyn Dataset> {
+    Rc::new(SyntheticCifar::new(256, 77))
+}
+
+/// Every worker's every parameter, flattened (exact f32 payloads).
+fn all_params(c: &Cluster) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    for rank in 0..c.cfg.n_workers {
+        let w = c.worker(rank);
+        for t in w.conv_params.iter().chain(w.fc_params.iter()) {
+            out.push(t.as_f32().to_vec());
+        }
+    }
+    out
+}
+
+/// Run `steps` steps, returning the exact per-step loss bit patterns.
+fn run_losses(c: &mut Cluster, steps: usize) -> Vec<u64> {
+    (0..steps).map(|_| c.step().unwrap().loss.to_bits()).collect()
+}
+
+/// The headline acceptance check: crash worker 1 at *every* step k of a
+/// small hybrid run. Each scenario must recover onto the 3 survivors
+/// (mp shrinks 2 → 1, since 2 ∤ 3) and finish training.
+#[test]
+fn crash_at_every_step_recovers_and_continues() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let steps = 3;
+    for k in 1..=steps {
+        let mut c = cfg(4, 2);
+        c.faults = FaultPlan::new().crash(1, k);
+        let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+        let losses = run_losses(&mut cluster, steps);
+        assert_eq!(losses.len(), steps, "crash@{k}: run must complete");
+        for (i, bits) in losses.iter().enumerate() {
+            assert!(
+                f64::from_bits(*bits).is_finite(),
+                "crash@{k}: loss at step {} not finite",
+                i + 1
+            );
+        }
+        assert_eq!(cluster.recoveries, 1, "crash@{k}");
+        assert_eq!(cluster.lost_ranks, vec![1], "crash@{k}");
+        assert_eq!(cluster.cfg.n_workers, 3, "crash@{k}: survivors");
+        assert_eq!(cluster.cfg.mp, 1, "crash@{k}: 2 does not divide 3 survivors");
+        assert_eq!(cluster.topo.n_workers, 3, "crash@{k}: topology re-planned");
+        assert_eq!(cluster.schedule.topo.mp, 1, "crash@{k}: schedule recompiled");
+        assert_eq!(cluster.fabric().ranks(), 3, "crash@{k}: fabric rebuilt");
+        assert_eq!(cluster.steps_done(), steps, "crash@{k}");
+        // The recovered cluster keeps training.
+        assert!(cluster.step().unwrap().loss.is_finite(), "crash@{k}: step after run");
+    }
+}
+
+/// Recovery converges: crash one of four workers early, then train on;
+/// the survivor cluster's loss still falls.
+#[test]
+fn recovery_converges_on_survivors() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut c = cfg(4, 2);
+    c.faults = FaultPlan::new().crash(1, 2);
+    let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+    // The step-2 crash precedes the first averaging boundary, so
+    // recovery restarts the survivors from the initial model — give the
+    // run enough steps to converge past that rollback.
+    let report = cluster.train_steps(10).unwrap();
+    assert_eq!(cluster.recoveries, 1);
+    assert_eq!(cluster.cfg.n_workers, 3);
+    let first = report.losses[0];
+    let tail = report.tail_loss(3).unwrap();
+    assert!(
+        tail < first * 0.8,
+        "survivor cluster must keep converging: first {first}, tail {tail} ({:?})",
+        report.losses
+    );
+}
+
+/// The second acceptance check: the same `FaultPlan::random` seed
+/// replays bit-identically — per-step losses and every parameter —
+/// recovery included.
+#[test]
+fn same_fault_seed_replays_bit_identically() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let steps = 3;
+    // Seed 9 → crash(rank 2, step 2) + a delay rule. Chosen to contain
+    // a crash (so the replay covers recovery) and no DropMsg (drops
+    // resolve through the take timeout, which would slow the test; the
+    // guard below fails loudly if the Rng stream ever changes — pick a
+    // new seed then).
+    let plan = FaultPlan::random(9, 4, steps, 2);
+    assert!(
+        plan.events().iter().any(|e| matches!(e, FaultEvent::Crash { .. })),
+        "seed must exercise recovery: {plan:?}"
+    );
+    assert!(
+        !plan.events().iter().any(|e| matches!(e, FaultEvent::DropMsg { .. })),
+        "re-pick a drop-free seed: {plan:?}"
+    );
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let mut c = cfg(4, 2);
+        c.faults = plan.clone();
+        let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+        let losses = run_losses(&mut cluster, steps);
+        runs.push((losses, all_params(&cluster), cluster.recoveries, cluster.lost_ranks.clone()));
+    }
+    assert_eq!(runs[0].0, runs[1].0, "per-step loss bits must replay identically");
+    assert_eq!(runs[0].2, runs[1].2, "recovery count must replay identically");
+    assert_eq!(runs[0].3, runs[1].3, "lost ranks must replay identically");
+    assert_eq!(runs[0].1.len(), runs[1].1.len());
+    for (i, (a, b)) in runs[0].1.iter().zip(runs[1].1.iter()).enumerate() {
+        assert_eq!(a, b, "parameter tensor {i} diverged between replays");
+    }
+    assert!(runs[0].2 >= 1, "the seeded crash must actually have fired");
+}
+
+/// Cascaded failures: a second crash in the survivor incarnation
+/// triggers a second shrink. (Fault ranks address the *current*
+/// incarnation; consumed events never re-fire.)
+#[test]
+fn cascaded_crashes_shrink_twice() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut c = cfg(4, 2);
+    c.faults = FaultPlan::new().crash(1, 2).crash(1, 3);
+    let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+    let losses = run_losses(&mut cluster, 3);
+    assert_eq!(losses.len(), 3);
+    assert_eq!(cluster.recoveries, 2);
+    assert_eq!(cluster.lost_ranks, vec![1, 1]);
+    assert_eq!(cluster.cfg.n_workers, 2);
+    assert_eq!(cluster.cfg.mp, 1);
+}
+
+/// Under the default fail-fast policy a crash surfaces as a typed
+/// `PeerLost`/`WorkerCrashed`, never an opaque timeout string.
+#[test]
+fn fail_fast_propagates_typed_peer_loss() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut c = cfg(2, 2);
+    c.recovery = RecoveryPolicy::FailFast;
+    c.faults = FaultPlan::new().crash(1, 1);
+    let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+    let e = cluster.step().unwrap_err();
+    let peer = e.downcast_ref::<PeerLost>().map(|p| p.rank);
+    let crashed = e.downcast_ref::<WorkerCrashed>().map(|w| w.rank);
+    assert!(
+        peer == Some(1) || crashed == Some(1),
+        "expected typed loss of rank 1, got: {e:#}"
+    );
+    assert_eq!(cluster.fabric().dead_ranks(), vec![1]);
+    assert_eq!(cluster.recoveries, 0, "fail-fast must not recover");
+}
+
+/// A dropped message is indistinguishable from a dead sender: the
+/// receiver's next miss on the dropped channel presumes the sender
+/// dead (no timeout wait needed), and recovery continues on the
+/// survivor.
+#[test]
+fn dropped_message_presumes_sender_dead_and_recovers() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut c = cfg(2, 2);
+    // Exercise the config plumbing too; the dropped-channel fast path
+    // means the run never actually waits this long.
+    c.take_timeout_ms = 8_000;
+    c.faults = FaultPlan::new().drop_msg(0, 1, 1, 1); // modulo-fwd slice
+    let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+    let m = cluster.step().unwrap();
+    assert!(m.loss.is_finite());
+    assert_eq!(cluster.recoveries, 1);
+    assert_eq!(cluster.lost_ranks, vec![0], "the silent sender is the presumed-dead one");
+    assert_eq!(cluster.cfg.n_workers, 1);
+    assert_eq!(cluster.cfg.mp, 1);
+}
+
+/// Same drop scenario on the sequential engine: the non-blocking take's
+/// miss on the dropped channel surfaces the same typed `PeerLost`, and
+/// recovery proceeds identically.
+#[test]
+fn dropped_message_recovers_on_sequential_engine_too() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut c = cfg(2, 2);
+    c.engine = ExecEngine::Sequential;
+    c.faults = FaultPlan::new().drop_msg(0, 1, 1, 1);
+    let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+    let m = cluster.step().unwrap();
+    assert!(m.loss.is_finite());
+    assert_eq!(cluster.recoveries, 1);
+    assert_eq!(cluster.lost_ranks, vec![0]);
+    assert_eq!(cluster.cfg.n_workers, 1);
+}
+
+/// Straggle and delay faults charge the simulated clocks (compute and
+/// comm respectively) and leave the numerics bit-identical.
+#[test]
+fn straggle_and_delay_move_clocks_not_numerics() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let base = cfg(2, 2);
+    let mut faulted = base.clone();
+    faulted.faults = FaultPlan::new()
+        .straggle(0, 1, 400)
+        .delay_msg(0, 1, 3, 1, 150); // phase 3 = shard-fwd allgather
+    let mut a = Cluster::with_dataset(&rt, base, dataset()).unwrap();
+    let mut b = Cluster::with_dataset(&rt, faulted, dataset()).unwrap();
+    let ma = a.step().unwrap();
+    let mb = b.step().unwrap();
+    assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "faults must not touch numerics");
+    assert!(mb.compute_secs >= 0.4, "straggle must inflate compute: {}", mb.compute_secs);
+    let delay = mb.mp_comm_secs - ma.mp_comm_secs;
+    assert!(
+        (delay - 0.15).abs() < 1e-9,
+        "delay must add exactly 150 simulated ms to mp-comm, added {delay}"
+    );
+    let pa = all_params(&a);
+    let pb = all_params(&b);
+    for (i, (x, y)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(x, y, "tensor {i} diverged under straggle/delay");
+    }
+}
+
+/// Recovery restores from the checkpoint taken at the last averaging
+/// boundary, and records the restore point.
+#[test]
+fn recovery_restores_from_last_averaging_checkpoint() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut c = cfg(2, 2); // avg_period = 2
+    c.faults = FaultPlan::new().crash(1, 3);
+    let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
+    assert_eq!(cluster.last_checkpoint_step(), 0, "initial model is the restore point");
+    let losses = run_losses(&mut cluster, 3);
+    assert_eq!(losses.len(), 3);
+    assert_eq!(cluster.recoveries, 1);
+    assert_eq!(
+        cluster.last_checkpoint_step(),
+        2,
+        "step-3 crash must restore from the step-2 averaging checkpoint"
+    );
+    assert_eq!(cluster.steps_done(), 3);
+}
+
+/// Recovery is engine-independent: the sequential and threaded engines
+/// agree bit-for-bit through a crash + shrink + continue run.
+#[test]
+fn sequential_and_threaded_recovery_agree_bitwise() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut ct = cfg(2, 2);
+    ct.faults = FaultPlan::new().crash(1, 2);
+    let mut cs = ct.clone();
+    cs.engine = ExecEngine::Sequential;
+    let mut thr = Cluster::with_dataset(&rt, ct, dataset()).unwrap();
+    let mut seq = Cluster::with_dataset(&rt, cs, dataset()).unwrap();
+    let lt = run_losses(&mut thr, 3);
+    let ls = run_losses(&mut seq, 3);
+    assert_eq!(lt, ls, "loss bits diverged between engines across recovery");
+    assert_eq!(thr.recoveries, seq.recoveries);
+    assert_eq!(thr.cfg.n_workers, seq.cfg.n_workers);
+    let pt = all_params(&thr);
+    let ps = all_params(&seq);
+    assert_eq!(pt.len(), ps.len());
+    for (i, (a, b)) in pt.iter().zip(ps.iter()).enumerate() {
+        assert_eq!(a, b, "parameter tensor {i} diverged between engines");
+    }
+}
+
+/// With no faults scheduled, enabling the recovery policy changes
+/// nothing: the fault hooks stay off the hot path.
+#[test]
+fn recovery_policy_is_free_without_faults() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let shrink = cfg(2, 2);
+    let mut fail = shrink.clone();
+    fail.recovery = RecoveryPolicy::FailFast;
+    let mut a = Cluster::with_dataset(&rt, shrink, dataset()).unwrap();
+    let mut b = Cluster::with_dataset(&rt, fail, dataset()).unwrap();
+    let la = run_losses(&mut a, 2);
+    let lb = run_losses(&mut b, 2);
+    assert_eq!(la, lb);
+    assert_eq!(a.recoveries, 0);
+    for (x, y) in all_params(&a).iter().zip(all_params(&b).iter()) {
+        assert_eq!(x, y);
+    }
+}

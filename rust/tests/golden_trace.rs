@@ -1,0 +1,145 @@
+//! Golden-trace regression: the per-step `CommTrace` integer counters
+//! (bytes, messages, phase occurrences) of every `CollectiveAlgo`
+//! variant are pinned against `tests/golden/comm_trace.json`.
+//!
+//! The counters come from the compiled `StepSchedule`'s analytic phase
+//! volumes — the same numbers the fabric's measured byte counters are
+//! cross-checked against in `cluster_integration` — so any silent
+//! protocol drift (a changed collective round structure, a mis-counted
+//! modulo volume, a reordered category) fails this test with a diff.
+//!
+//! To re-bless after an *intentional* protocol change:
+//!
+//! ```bash
+//! SPLITBRAIN_BLESS=1 cargo test golden_trace -q   # rewrites the file
+//! git diff rust/tests/golden/comm_trace.json      # review the drift!
+//! ```
+
+use splitbrain::comm::{CollectiveAlgo, CommTrace, NetModel};
+use splitbrain::coordinator::schedule::CommPhase;
+use splitbrain::coordinator::{GmpTopology, McastScheme, StepSchedule};
+use splitbrain::model::{partition_network, vgg11, PartitionConfig};
+use splitbrain::runtime::Manifest;
+
+/// Synthesize a minimal manifest accepted by `compile_with_algo` (same
+/// shape as the schedule unit tests): golden counters must not depend
+/// on which artifact backend is installed.
+fn manifest(batch: usize, ks: &[usize]) -> Manifest {
+    let mut text = format!(
+        "splitbrain-artifacts v1\nbatch {batch}\nmp_sizes {}\nfeature_dim 4096\nnum_classes 10\n",
+        ks.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let mut add = |name: &str| {
+        text.push_str(&format!(
+            "artifact {name} file={name}.hlo.txt\nin x float32 1\nout y float32 1\nend\n"
+        ));
+    };
+    for name in ["conv_fwd", "conv_bwd", "full_step", "full_eval", "head_step", "head_fwd"] {
+        add(name);
+    }
+    for &k in ks {
+        if k > 1 {
+            for seg in ["fc0_fwd", "fc0_bwd", "fc1_fwd", "fc1_bwd"] {
+                add(&format!("{seg}_k{k}"));
+            }
+        }
+    }
+    Manifest::parse(&text, std::path::PathBuf::from("/tmp")).unwrap()
+}
+
+/// Accumulate a trace exactly the way `Cluster::train_steps` records a
+/// single occurrence of the given phase list.
+fn trace_of(phases: &[CommPhase]) -> CommTrace {
+    let net = NetModel::default();
+    let mut t = CommTrace::new();
+    for p in phases {
+        for _ in 0..p.times {
+            t.record_uniform(p.category, &net, p.ranks, p.per_member);
+        }
+    }
+    t
+}
+
+/// The full golden document: one per-MP-step trace and one
+/// per-averaging-event trace for every (topology, algorithm) pair.
+fn golden_doc() -> String {
+    let m = manifest(32, &[1, 2, 4, 8]);
+    let mut lines = Vec::new();
+    for &(n, mp) in &[(2usize, 2usize), (4, 2), (4, 4)] {
+        for algo in [CollectiveAlgo::Naive, CollectiveAlgo::Ring, CollectiveAlgo::Rhd] {
+            let net = partition_network(
+                &vgg11(),
+                vec![32, 32, 3],
+                &PartitionConfig { mp, ..Default::default() },
+            )
+            .unwrap();
+            let topo = GmpTopology::new(n, mp).unwrap();
+            let s = StepSchedule::compile_with_algo(
+                &net,
+                topo,
+                &m,
+                false,
+                McastScheme::BoverK,
+                algo,
+            )
+            .unwrap();
+            lines.push(format!(
+                "  \"n{n}_mp{mp}_{algo}_step\": {}",
+                trace_of(&s.mp_phases).to_json()
+            ));
+            lines.push(format!(
+                "  \"n{n}_mp{mp}_{algo}_avg\": {}",
+                trace_of(&s.avg_phases).to_json()
+            ));
+        }
+    }
+    format!("{{\n{}\n}}\n", lines.join(",\n"))
+}
+
+#[test]
+fn comm_trace_counters_match_committed_golden() {
+    let doc = golden_doc();
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/comm_trace.json");
+    if std::env::var("SPLITBRAIN_BLESS").is_ok() {
+        std::fs::write(path, &doc).unwrap();
+    }
+    let want = std::fs::read_to_string(path)
+        .expect("missing golden file — run with SPLITBRAIN_BLESS=1 to create it");
+    assert_eq!(
+        doc.trim_end(),
+        want.trim_end(),
+        "CommTrace counters drifted from the committed golden.\n\
+         If the protocol change is intentional, re-bless with \
+         SPLITBRAIN_BLESS=1 and review the JSON diff.\nCurrent counters:\n{doc}"
+    );
+}
+
+/// Sanity on the golden content itself: the invariants the numbers
+/// encode (so a bad bless can't silently pin nonsense).
+#[test]
+fn golden_invariants_hold() {
+    let m = manifest(32, &[1, 2, 4, 8]);
+    let net = partition_network(
+        &vgg11(),
+        vec![32, 32, 3],
+        &PartitionConfig { mp: 4, ..Default::default() },
+    )
+    .unwrap();
+    let topo = GmpTopology::new(4, 4).unwrap();
+    let compile = |algo| {
+        StepSchedule::compile_with_algo(&net, topo, &m, false, McastScheme::BoverK, algo).unwrap()
+    };
+    let naive = trace_of(&compile(CollectiveAlgo::Naive).mp_phases);
+    let ring = trace_of(&compile(CollectiveAlgo::Ring).mp_phases);
+    // Shard bytes are algorithm-invariant; the *phase structure* is not
+    // (ring serializes k-1 neighbor rounds where naive posts one burst).
+    assert_eq!(naive.total_bytes(), ring.total_bytes());
+    assert!(
+        ring.phases(splitbrain::comm::CommCategory::ShardFwd)
+            > naive.phases(splitbrain::comm::CommCategory::ShardFwd)
+    );
+    // Averaging: ring moves 2(n-1)/n·V vs naive's (n-1)·V.
+    let a_naive = trace_of(&compile(CollectiveAlgo::Naive).avg_phases);
+    let a_ring = trace_of(&compile(CollectiveAlgo::Ring).avg_phases);
+    assert!(a_ring.total_bytes() < a_naive.total_bytes());
+}

@@ -9,25 +9,46 @@
 //! * `Display` shows the outermost message only;
 //! * alternate display (`{:#}`) shows the whole context chain joined
 //!   with `": "`;
-//! * any `std::error::Error + Send + Sync + 'static` converts via `?`.
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`,
+//!   and the original value stays retrievable through
+//!   [`Error::downcast_ref`] (upstream's typed-error contract — the
+//!   fault-tolerant cluster driver uses it to tell a `PeerLost` apart
+//!   from an ordinary schedule bug).
 
+use std::any::Any;
 use std::fmt;
 
 /// A context-carrying error value (outermost context first).
 pub struct Error {
     chain: Vec<String>,
+    /// The original typed error (when built via `From`), kept so
+    /// callers can recover it with [`Error::downcast_ref`].
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a single printable message.
     pub fn msg<M: fmt::Display>(m: M) -> Error {
-        Error { chain: vec![m.to_string()] }
+        Error { chain: vec![m.to_string()], payload: None }
     }
 
     /// Prepend a context message (the `anyhow::Context` operation).
+    /// The typed payload, if any, is preserved.
     pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
         self.chain.insert(0, c.to_string());
         self
+    }
+
+    /// Borrow the root-cause error as a concrete type, if this error
+    /// was converted from a value of that type (mirrors
+    /// `anyhow::Error::downcast_ref`).
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
+    }
+
+    /// True when the root cause is a value of type `T`.
+    pub fn is<T: 'static>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
     }
 
     /// The context chain, outermost first.
@@ -67,14 +88,15 @@ impl fmt::Debug for Error {
 
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        // Preserve the source chain as context entries.
+        // Preserve the source chain as context entries, then keep the
+        // value itself for downcasting.
         let mut chain = vec![e.to_string()];
         let mut src = e.source();
         while let Some(s) = src {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(e)) }
     }
 }
 
@@ -164,6 +186,25 @@ mod tests {
         let e = r.unwrap_err();
         assert_eq!(e.to_string(), "parsing");
         assert!(format!("{e:#}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn downcast_recovers_typed_root_cause() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl fmt::Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+        let e: Error = Error::from(Typed(7)).context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert!(e.is::<Typed>());
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(!e.is::<std::io::Error>());
+        // Message-built errors carry no payload.
+        assert!(!Error::msg("plain").is::<Typed>());
     }
 
     #[test]
