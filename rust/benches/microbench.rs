@@ -84,8 +84,8 @@ fn main() -> anyhow::Result<()> {
     let plan = ModuloPlan::new(vec![0, 1], b, 4096);
     let acts = vec![act.clone(), act.clone()];
     let s = bench(20, || {
-        let mut fab = Fabric::new(2);
-        let out = plan.assemble(&mut fab, &acts, 0, Tag::new(1, 0, 0)).unwrap();
+        let fab = Fabric::new(2);
+        let out = plan.assemble(&fab, &acts, 0, Tag::new(1, 0, 0)).unwrap();
         std::hint::black_box(out);
     });
     table.row(vec!["modulo assemble k=2".into(), s.summary(), "fabric".into()]);
@@ -96,15 +96,15 @@ fn main() -> anyhow::Result<()> {
         HostTensor::f32(vec![b, 512], rng.normal_vec(b * 512, 1.0)),
     ];
     let s = bench(20, || {
-        let mut fab = Fabric::new(2);
-        std::hint::black_box(shard.gather_full(&mut fab, &parts, Tag::new(3, 0, 0)).unwrap());
+        let fab = Fabric::new(2);
+        std::hint::black_box(shard.gather_full(&fab, &parts, Tag::new(3, 0, 0)).unwrap());
     });
     table.row(vec!["shard gather k=2".into(), s.summary(), "fabric".into()]);
 
     let mut bufs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(1_745_738, 0.1)).collect();
     let s = bench(5, || {
-        let mut fab = Fabric::new(8);
-        ring_allreduce_mean(&mut fab, &(0..8).collect::<Vec<_>>(), &mut bufs, 1).unwrap();
+        let fab = Fabric::new(8);
+        ring_allreduce_mean(&fab, &(0..8).collect::<Vec<_>>(), &mut bufs, 1).unwrap();
     });
     table.row(vec!["ring allreduce 8x6.7MB".into(), s.summary(), "fabric".into()]);
 

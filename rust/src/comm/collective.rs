@@ -26,7 +26,7 @@
 //! ## SPMD (`*_rank`) variants
 //!
 //! The threaded cluster engine runs one program per rank, so every
-//! collective also has a per-rank form using [`Fabric::take_blocking`].
+//! collective also has a per-rank form using [`Transport::take_blocking`].
 //! The group-view ("god view") dispatchers used by the sequential
 //! engine execute the *same* per-rank programs on a local thread scope,
 //! so both engines produce bit-identical results by construction.
@@ -37,7 +37,8 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::fabric::{Fabric, Tag};
+use super::fabric::Tag;
+use super::transport::Transport;
 use crate::runtime::HostTensor;
 
 /// Which collective algorithm family moves the data.
@@ -149,7 +150,7 @@ fn offsets_of(widths: &[usize]) -> Vec<usize> {
 /// contributes its `[B, w_i]` partition; returns the `[B, sum w_i]`
 /// full tensor for each member, assembled in group order.
 pub fn allgather_cols(
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     parts: &[HostTensor],
     tag: Tag,
@@ -192,7 +193,7 @@ pub fn allgather_cols(
 /// the reduced (summed) `[B, w_i]` slice of its own partition. Each
 /// member scatters the foreign slices and reduces what it gathers.
 pub fn reduce_scatter_cols(
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     fulls: &[HostTensor],
     widths: &[usize],
@@ -236,7 +237,7 @@ pub fn reduce_scatter_cols(
 /// assembled `[B, sum widths]` tensor. Blocking (threaded engine).
 pub fn allgather_cols_rank(
     algo: CollectiveAlgo,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     gi: usize,
     part: &HostTensor,
@@ -292,7 +293,7 @@ pub fn allgather_cols_rank(
 /// `[B, widths[gi]]` slice it owns. Blocking (threaded engine).
 pub fn reduce_scatter_cols_rank(
     algo: CollectiveAlgo,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     gi: usize,
     full: &HostTensor,
@@ -374,7 +375,7 @@ fn scatter_gather_scope<T: Send>(
 /// member's assembled tensor, in group order.
 pub fn allgather_cols_algo(
     algo: CollectiveAlgo,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     parts: &[HostTensor],
     tag: Tag,
@@ -394,7 +395,7 @@ pub fn allgather_cols_algo(
 /// member's reduced own-partition slice, in group order.
 pub fn reduce_scatter_cols_algo(
     algo: CollectiveAlgo,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     fulls: &[HostTensor],
     widths: &[usize],
@@ -418,7 +419,7 @@ pub fn reduce_scatter_cols_algo(
 /// so the fabric's byte counters match the 2·(n-1)/n·V optimum.
 /// Group view, non-blocking takes (all posts precede their takes).
 pub fn ring_allreduce_mean(
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     bufs: &mut [Vec<f32>],
     tag_base: u16,
@@ -440,7 +441,7 @@ pub fn ring_allreduce_mean(
     // Phase 1: reduce-scatter. Round r: member i sends chunk (i-r) mod n
     // to its successor, which accumulates.
     for r in 0..n - 1 {
-        let tag = Tag::new(tag_base, r as u16, 0);
+        let tag = Tag::new(tag_base, r, 0);
         for i in 0..n {
             let c = (i + n - r) % n;
             let (lo, hi) = bounds(c);
@@ -460,7 +461,7 @@ pub fn ring_allreduce_mean(
     // Phase 2: allgather. Round r: member i sends its (now reduced)
     // chunk (i+1-r) mod n forward.
     for r in 0..n - 1 {
-        let tag = Tag::new(tag_base, (n + r) as u16, 0);
+        let tag = Tag::new(tag_base, n + r, 0);
         for i in 0..n {
             let c = (i + 1 + n - r) % n;
             let (lo, hi) = bounds(c);
@@ -491,7 +492,7 @@ pub fn ring_allreduce_mean(
 /// engines agree bit-for-bit.
 pub fn allreduce_mean_rank(
     algo: CollectiveAlgo,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     gi: usize,
     buf: &mut [f32],
@@ -551,7 +552,7 @@ pub fn allreduce_mean_rank(
             let succ = group[(gi + 1) % n];
             let pred = group[(gi + n - 1) % n];
             for r in 0..n - 1 {
-                let tag = Tag::new(tag_base, r as u16, 0);
+                let tag = Tag::new(tag_base, r, 0);
                 let c = (gi + n - r) % n;
                 let (lo, hi) = bounds(c);
                 fabric.post(me, succ, tag, buf[lo..hi].to_vec());
@@ -563,7 +564,7 @@ pub fn allreduce_mean_rank(
                 }
             }
             for r in 0..n - 1 {
-                let tag = Tag::new(tag_base, (n + r) as u16, 0);
+                let tag = Tag::new(tag_base, n + r, 0);
                 let c = (gi + 1 + n - r) % n;
                 let (lo, hi) = bounds(c);
                 fabric.post(me, succ, tag, buf[lo..hi].to_vec());
@@ -586,7 +587,7 @@ pub fn allreduce_mean_rank(
 /// two fold the surplus ranks (index ≥ p, the largest power of two)
 /// into partner ranks before the halving tree and unfold afterwards.
 fn rhd_allreduce_mean_rank(
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     gi: usize,
     buf: &mut [f32],
@@ -622,7 +623,7 @@ fn rhd_allreduce_mean_rank(
     let mut seg = (0usize, len);
     let mut mask = p / 2;
     let mut steps: Vec<(usize, usize, usize, usize)> = Vec::new(); // (lo, mid, hi, mask)
-    let mut step_id = 2u16;
+    let mut step_id = 2usize;
     while mask >= 1 {
         let partner_gi = gi ^ mask;
         let partner = group[partner_gi];
@@ -683,7 +684,7 @@ fn rhd_allreduce_mean_rank(
 /// every member's buffer in place.
 pub fn allreduce_mean(
     algo: CollectiveAlgo,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     group: &[usize],
     bufs: &mut [Vec<f32>],
     tag_base: u16,
@@ -711,6 +712,7 @@ pub fn allreduce_mean(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Fabric;
 
     fn tensor(rows: usize, cols: usize, base: f32) -> HostTensor {
         HostTensor::f32(
@@ -721,10 +723,10 @@ mod tests {
 
     #[test]
     fn allgather_assembles_in_group_order() {
-        let mut f = Fabric::new(4);
+        let f = Fabric::new(4);
         let group = [1, 3]; // global ranks
         let parts = [tensor(2, 2, 0.0), tensor(2, 2, 100.0)];
-        let outs = allgather_cols(&mut f, &group, &parts, Tag::new(1, 0, 0)).unwrap();
+        let outs = allgather_cols(&f, &group, &parts, Tag::new(1, 0, 0)).unwrap();
         assert_eq!(outs.len(), 2);
         for o in &outs {
             assert_eq!(o.shape, vec![2, 4]);
@@ -737,15 +739,15 @@ mod tests {
 
     #[test]
     fn allgather_uneven_widths() {
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         let parts = [tensor(1, 3, 0.0), tensor(1, 1, 9.0)];
-        let outs = allgather_cols(&mut f, &[0, 1], &parts, Tag::new(1, 0, 0)).unwrap();
+        let outs = allgather_cols(&f, &[0, 1], &parts, Tag::new(1, 0, 0)).unwrap();
         assert_eq!(outs[0].as_f32(), &[0., 1., 2., 9.]);
     }
 
     #[test]
     fn reduce_scatter_sums_partials() {
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         let group = [0, 1];
         // Both members hold a full-width [1,4] partial gradient.
         let fulls = [
@@ -753,7 +755,7 @@ mod tests {
             HostTensor::f32(vec![1, 4], vec![10., 20., 30., 40.]),
         ];
         let outs =
-            reduce_scatter_cols(&mut f, &group, &fulls, &[2, 2], Tag::new(2, 0, 0)).unwrap();
+            reduce_scatter_cols(&f, &group, &fulls, &[2, 2], Tag::new(2, 0, 0)).unwrap();
         // Member 0 owns cols 0..2 summed; member 1 owns cols 2..4.
         assert_eq!(outs[0].as_f32(), &[11., 22.]);
         assert_eq!(outs[1].as_f32(), &[33., 44.]);
@@ -764,7 +766,7 @@ mod tests {
     fn gather_then_reduce_is_identity_on_single_contributor() {
         // If only member 0's partial is nonzero, reduce-scatter returns
         // exactly its slices.
-        let mut f = Fabric::new(3);
+        let f = Fabric::new(3);
         let group = [0, 1, 2];
         let fulls = [
             HostTensor::f32(vec![1, 3], vec![5., 6., 7.]),
@@ -772,7 +774,7 @@ mod tests {
             HostTensor::zeros(vec![1, 3]),
         ];
         let outs =
-            reduce_scatter_cols(&mut f, &group, &fulls, &[1, 1, 1], Tag::new(2, 0, 0)).unwrap();
+            reduce_scatter_cols(&f, &group, &fulls, &[1, 1, 1], Tag::new(2, 0, 0)).unwrap();
         assert_eq!(outs[0].as_f32(), &[5.]);
         assert_eq!(outs[1].as_f32(), &[6.]);
         assert_eq!(outs[2].as_f32(), &[7.]);
@@ -780,7 +782,7 @@ mod tests {
 
     #[test]
     fn ring_allreduce_computes_mean() {
-        let mut f = Fabric::new(4);
+        let f = Fabric::new(4);
         let group = [0, 1, 2, 3];
         let mut bufs: Vec<Vec<f32>> = (0..4)
             .map(|i| (0..10).map(|j| (i * 10 + j) as f32).collect())
@@ -788,7 +790,7 @@ mod tests {
         let expect: Vec<f32> = (0..10)
             .map(|j| (0..4).map(|i| (i * 10 + j) as f32).sum::<f32>() / 4.0)
             .collect();
-        ring_allreduce_mean(&mut f, &group, &mut bufs, 7).unwrap();
+        ring_allreduce_mean(&f, &group, &mut bufs, 7).unwrap();
         for b in &bufs {
             for (a, e) in b.iter().zip(expect.iter()) {
                 assert!((a - e).abs() < 1e-5, "{a} vs {e}");
@@ -799,9 +801,9 @@ mod tests {
 
     #[test]
     fn ring_allreduce_bytes_near_optimal() {
-        let mut f = Fabric::new(4);
+        let f = Fabric::new(4);
         let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; 1000]).collect();
-        ring_allreduce_mean(&mut f, &[0, 1, 2, 3], &mut bufs, 7).unwrap();
+        ring_allreduce_mean(&f, &[0, 1, 2, 3], &mut bufs, 7).unwrap();
         // Per-rank optimum: 2*(n-1)/n*V = 2*3/4*4000 = 6000 bytes.
         let per_rank = f.bytes_from(0);
         assert!((5900..=6100).contains(&per_rank), "{per_rank}");
@@ -810,9 +812,9 @@ mod tests {
     #[test]
     fn ring_allreduce_uneven_length() {
         // len=7 not divisible by n=3: last chunk absorbs remainder.
-        let mut f = Fabric::new(3);
+        let f = Fabric::new(3);
         let mut bufs: Vec<Vec<f32>> = vec![vec![3.0; 7], vec![6.0; 7], vec![0.0; 7]];
-        ring_allreduce_mean(&mut f, &[0, 1, 2], &mut bufs, 1).unwrap();
+        ring_allreduce_mean(&f, &[0, 1, 2], &mut bufs, 1).unwrap();
         for b in &bufs {
             for v in b {
                 assert!((v - 3.0).abs() < 1e-6);
@@ -822,9 +824,9 @@ mod tests {
 
     #[test]
     fn single_member_group_is_noop() {
-        let mut f = Fabric::new(1);
+        let f = Fabric::new(1);
         let mut bufs = vec![vec![2.0; 5]];
-        ring_allreduce_mean(&mut f, &[0], &mut bufs, 1).unwrap();
+        ring_allreduce_mean(&f, &[0], &mut bufs, 1).unwrap();
         assert_eq!(bufs[0], vec![2.0; 5]);
         assert_eq!(f.total_bytes(), 0);
     }

@@ -71,15 +71,40 @@ pub const TAKE_TIMEOUT_SECS: u64 = 120;
 pub struct Tag(pub u64);
 
 impl Tag {
-    /// Compose a tag from (phase id, modulo iteration, layer id).
-    pub fn new(phase: u16, iter: u16, layer: u16) -> Tag {
-        Tag(((phase as u64) << 32) | ((iter as u64) << 16) | layer as u64)
+    /// Compose a tag from (phase id, modulo iteration, layer/group id).
+    ///
+    /// The iteration and layer components are packed into 16-bit
+    /// fields. Callers pass them at natural width (`usize`) and the
+    /// debug assertions below catch any value that would wrap — a
+    /// silently aliased tag would cross-deliver payloads between
+    /// unrelated exchanges on the wire, which is far harder to debug
+    /// than this panic.
+    pub fn new(phase: u16, iter: usize, layer: usize) -> Tag {
+        debug_assert!(
+            iter <= u16::MAX as usize,
+            "Tag iteration {iter} overflows the 16-bit wire field — tags would alias"
+        );
+        debug_assert!(
+            layer <= u16::MAX as usize,
+            "Tag layer/group id {layer} overflows the 16-bit wire field — tags would alias"
+        );
+        Tag(((phase as u64) << 32) | (((iter as u64) & 0xFFFF) << 16) | ((layer as u64) & 0xFFFF))
     }
 
     /// The phase id the tag was composed with (what [`FaultPlan`]
     /// drop/delay rules match on).
     pub fn phase(self) -> u16 {
         (self.0 >> 32) as u16
+    }
+
+    /// The iteration field the tag was composed with.
+    pub fn iter(self) -> u16 {
+        (self.0 >> 16) as u16
+    }
+
+    /// The layer/group field the tag was composed with.
+    pub fn layer(self) -> u16 {
+        self.0 as u16
     }
 }
 
@@ -544,6 +569,33 @@ mod tests {
         assert_ne!(Tag::new(0, 1, 0), Tag::new(0, 0, 1));
         assert_eq!(Tag::new(7, 3, 1).phase(), 7);
         assert_eq!(Tag::new(2000, 0, 0).phase(), 2000);
+        let t = Tag::new(9, 513, 77);
+        assert_eq!((t.phase(), t.iter(), t.layer()), (9, 513, 77));
+    }
+
+    #[test]
+    fn tag_fields_span_their_full_width_without_aliasing() {
+        // The extremes of each 16-bit field stay distinct — no field
+        // bleeds into a neighbor.
+        let hi = u16::MAX as usize;
+        assert_ne!(Tag::new(0, hi, 0), Tag::new(1, 0, 0));
+        assert_ne!(Tag::new(0, 0, hi), Tag::new(0, 1, 0));
+        let t = Tag::new(u16::MAX, hi, hi);
+        assert_eq!((t.phase(), t.iter() as usize, t.layer() as usize), (u16::MAX, hi, hi));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the 16-bit wire field")]
+    fn tag_iter_wraparound_is_caught() {
+        // A 65536-iteration run (or 65536-wide model for the layer
+        // field) must trip the guard instead of silently aliasing.
+        let _ = Tag::new(1, u16::MAX as usize + 1, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the 16-bit wire field")]
+    fn tag_layer_wraparound_is_caught() {
+        let _ = Tag::new(1, 0, u16::MAX as usize + 1);
     }
 
     #[test]

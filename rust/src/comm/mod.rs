@@ -14,6 +14,13 @@
 //! forms. [`fault`] adds the deterministic fault-injection layer
 //! (seeded crash/straggle/drop/delay plans) and the typed peer-loss
 //! errors the elastic recovery path is built on.
+//!
+//! [`transport`] abstracts the whole fabric surface behind the
+//! [`Transport`] trait: the in-process mailbox fabric is one backend,
+//! and [`TcpTransport`] is another — real sockets, a length-prefixed
+//! CRC-checked wire protocol, and one worker *process* per rank
+//! (`splitbrain launch`), bit-identical to the in-proc engines. See
+//! `docs/ARCHITECTURE.md` §Transport.
 
 pub mod collective;
 pub mod fabric;
@@ -21,6 +28,7 @@ pub mod fault;
 pub mod netmodel;
 pub mod topology;
 pub mod trace;
+pub mod transport;
 
 pub use collective::CollectiveAlgo;
 pub use fabric::Fabric;
@@ -28,3 +36,4 @@ pub use fault::{FaultEvent, FaultPlan, PeerLost, StepAborted, WorkerCrashed};
 pub use netmodel::NetModel;
 pub use topology::CommGraph;
 pub use trace::{CommCategory, CommTrace};
+pub use transport::{TcpTransport, Transport, WireError};

@@ -1,0 +1,223 @@
+//! Pluggable transport layer: the fabric surface as a trait, with an
+//! in-process backend (the [`Fabric`] mailbox fabric) and a
+//! multi-process TCP backend ([`TcpTransport`]).
+//!
+//! The paper's deployment substrate is GASPI one-sided RDMA over
+//! InfiniBand; everything above it only needs four semantic families,
+//! which [`Transport`] captures:
+//!
+//! * **post/take** — one-sided write+notify into a per
+//!   (src, dst, [`Tag`]) channel, FIFO per channel, with exact payload
+//!   byte accounting;
+//! * **failure observation** — peers become *dead* (declared, or
+//!   presumed after a take timeout) and takes on their channels return
+//!   typed [`PeerLost`](super::fault::PeerLost) errors;
+//! * **step teardown** — any failure aborts the BSP step, waking every
+//!   parked take with a typed
+//!   [`StepAborted`](super::fault::StepAborted) so teardown costs one
+//!   detection, not N timeouts;
+//! * **deterministic fault injection** — crash/straggle polls and
+//!   drop/delay rules fire identically on every backend.
+//!
+//! The two execution engines and the per-rank step programs
+//! (`coordinator::engine`, the modulo/shard/scheme plans, the
+//! collectives, model averaging) are all written against
+//! `&dyn Transport`, so the *same* per-rank arithmetic runs unchanged
+//! whether the peers are threads sharing one address space or processes
+//! across a network — the property the `transport_parity` suite pins
+//! down bit-for-bit.
+//!
+//! ## Counter scope
+//!
+//! The in-process fabric observes every rank, so its counters are
+//! global. A distributed transport can only observe its **own** sends:
+//! [`Transport::bytes_from`] for a foreign rank returns 0 there, and
+//! the aggregate counters degenerate to the local rank's row. Callers
+//! that need cluster-wide aggregates (the in-proc cluster driver's
+//! `last_fabric_bytes`) keep working because they run on the in-proc
+//! backend; the multi-process driver records its local row and the
+//! launcher aggregates.
+
+pub mod tcp;
+pub mod wire;
+
+use anyhow::Result;
+
+use super::fabric::{Fabric, Tag};
+
+pub use tcp::{TcpPeer, TcpTransport, CRASH_EXIT_CODE};
+pub use wire::{Frame, FrameKind, WireError, MAX_FRAME_PAYLOAD, WIRE_MAGIC, WIRE_VERSION};
+
+/// The fabric surface every backend provides. Object-safe: engines and
+/// per-rank programs take `&dyn Transport`.
+///
+/// All ranks are *logical* ranks of the current cluster incarnation
+/// (elastic recovery re-numbers survivors contiguously; a distributed
+/// backend maintains the mapping to its stable peer identities
+/// internally).
+pub trait Transport: Sync {
+    /// Number of ranks the transport connects (current incarnation).
+    fn ranks(&self) -> usize;
+
+    /// Start training step `step` (1-based): clears the abort flag (for
+    /// aborts belonging to earlier steps) and per-step fault
+    /// accumulators. Dead-rank flags persist.
+    fn begin_step(&self, step: usize);
+
+    /// The current 1-based training step (0 before any `begin_step`).
+    fn current_step(&self) -> usize;
+
+    /// One-sided write+notify: push `payload` into dst's segment.
+    /// Self-sends are forbidden. Drop/delay fault rules apply here.
+    fn post(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>);
+
+    /// Non-blocking take (coordinator-interleaved schedules): a miss is
+    /// an immediate error. Distributed backends, which have no god-view
+    /// scheduler, may implement this as [`Transport::take_blocking`].
+    fn take(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>>;
+
+    /// Blocking take: parks until the payload lands, the sender dies
+    /// (typed `PeerLost`), the step aborts (typed `StepAborted`) or the
+    /// timeout expires (the sender is then presumed dead).
+    fn take_blocking(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>>;
+
+    /// Declare `rank` dead and abort the current step.
+    fn declare_dead(&self, rank: usize);
+
+    /// Abort the current step without declaring anyone dead.
+    fn abort_step(&self);
+
+    /// Ranks currently declared (or presumed) dead, ascending.
+    fn dead_ranks(&self) -> Vec<usize>;
+
+    /// True while the current step is being torn down.
+    fn step_aborted(&self) -> bool;
+
+    /// Fire a pending injected Crash event for (`rank`, current step).
+    /// Returns true when the crash fired (the rank is then dead and the
+    /// step aborted).
+    fn poll_crash(&self, rank: usize) -> bool;
+
+    /// Fire pending injected Straggle events for (`rank`, current
+    /// step); returns injected simulated seconds.
+    fn poll_straggle(&self, rank: usize) -> f64;
+
+    /// Simulated seconds injected by DelayMsg faults this step.
+    fn injected_delay_secs(&self) -> f64;
+
+    /// True if no undelivered messages remain (local view).
+    fn drained(&self) -> bool;
+
+    /// Payload bytes sent by `src` since the last counter reset (0 for
+    /// ranks a distributed backend cannot observe).
+    fn bytes_from(&self, src: usize) -> u64;
+
+    /// Total observable payload bytes since the last reset.
+    fn total_bytes(&self) -> u64;
+
+    /// Max observable bytes pushed by a single rank since the last
+    /// reset.
+    fn max_bytes_per_rank(&self) -> u64;
+
+    /// Total observable messages posted since the last reset.
+    fn total_msgs(&self) -> u64;
+
+    /// Zero the byte/message counters (mailboxes untouched).
+    fn reset_counters(&self);
+}
+
+/// The in-process mailbox fabric is the reference backend: the trait
+/// methods delegate 1:1 to the inherent methods (zero behavior change —
+/// the pre-trait test suite keeps running against the inherent surface).
+impl Transport for Fabric {
+    fn ranks(&self) -> usize {
+        Fabric::ranks(self)
+    }
+    fn begin_step(&self, step: usize) {
+        Fabric::begin_step(self, step)
+    }
+    fn current_step(&self) -> usize {
+        Fabric::current_step(self)
+    }
+    fn post(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
+        Fabric::post(self, src, dst, tag, payload)
+    }
+    fn take(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
+        Fabric::take(self, dst, src, tag)
+    }
+    fn take_blocking(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
+        Fabric::take_blocking(self, dst, src, tag)
+    }
+    fn declare_dead(&self, rank: usize) {
+        Fabric::declare_dead(self, rank)
+    }
+    fn abort_step(&self) {
+        Fabric::abort_step(self)
+    }
+    fn dead_ranks(&self) -> Vec<usize> {
+        Fabric::dead_ranks(self)
+    }
+    fn step_aborted(&self) -> bool {
+        Fabric::step_aborted(self)
+    }
+    fn poll_crash(&self, rank: usize) -> bool {
+        Fabric::poll_crash(self, rank)
+    }
+    fn poll_straggle(&self, rank: usize) -> f64 {
+        Fabric::poll_straggle(self, rank)
+    }
+    fn injected_delay_secs(&self) -> f64 {
+        Fabric::injected_delay_secs(self)
+    }
+    fn drained(&self) -> bool {
+        Fabric::drained(self)
+    }
+    fn bytes_from(&self, src: usize) -> u64 {
+        Fabric::bytes_from(self, src)
+    }
+    fn total_bytes(&self) -> u64 {
+        Fabric::total_bytes(self)
+    }
+    fn max_bytes_per_rank(&self) -> u64 {
+        Fabric::max_bytes_per_rank(self)
+    }
+    fn total_msgs(&self) -> u64 {
+        Fabric::total_msgs(self)
+    }
+    fn reset_counters(&self) {
+        Fabric::reset_counters(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fabric_is_a_transport_object() {
+        let f = Fabric::new(2);
+        let t: &dyn Transport = &f;
+        t.begin_step(1);
+        t.post(0, 1, Tag::new(1, 0, 0), vec![1.0, 2.0]);
+        assert_eq!(t.take(1, 0, Tag::new(1, 0, 0)).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(t.ranks(), 2);
+        assert_eq!(t.current_step(), 1);
+        assert_eq!(t.bytes_from(0), 8);
+        assert_eq!(t.total_msgs(), 1);
+        assert!(t.drained());
+        t.reset_counters();
+        assert_eq!(t.total_bytes(), 0);
+    }
+
+    #[test]
+    fn trait_failure_surface_matches_inherent() {
+        let f = Fabric::new(2);
+        let t: &dyn Transport = &f;
+        t.begin_step(3);
+        t.declare_dead(0);
+        assert_eq!(t.dead_ranks(), vec![0]);
+        assert!(t.step_aborted());
+        let e = t.take_blocking(1, 0, Tag::new(1, 0, 0)).unwrap_err();
+        assert!(e.is::<crate::comm::fault::PeerLost>());
+    }
+}

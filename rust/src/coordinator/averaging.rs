@@ -19,7 +19,7 @@
 use anyhow::Result;
 
 use crate::comm::collective::{allreduce_mean, allreduce_mean_rank, CollectiveAlgo};
-use crate::comm::Fabric;
+use crate::comm::transport::Transport;
 
 use super::group::GmpTopology;
 use super::worker::Worker;
@@ -31,7 +31,7 @@ const TAG_SHARD_BASE: u16 = 2000;
 /// Average replicated parameters across all workers. Returns bytes
 /// pushed by the busiest rank (for the trace).
 pub fn average_replicated(
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     workers: &mut [Worker],
     algo: CollectiveAlgo,
 ) -> Result<u64> {
@@ -53,7 +53,7 @@ pub fn average_replicated(
 /// Average FC shard parameters across same-offset peers (one allreduce
 /// group per shard offset). Returns bytes pushed by the busiest rank.
 pub fn average_shards(
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     workers: &mut [Worker],
     topo: &GmpTopology,
     algo: CollectiveAlgo,
@@ -80,7 +80,7 @@ pub fn average_shards(
 /// in place; every rank of the cluster must call this in the same BSP
 /// superstep.
 pub fn average_rank(
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     worker: &mut Worker,
     rank: usize,
     n_workers: usize,
@@ -108,6 +108,7 @@ pub fn average_rank(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Fabric;
     use crate::coordinator::worker::init_full_params;
 
     fn workers(n: usize, mp: usize) -> (Vec<Worker>, GmpTopology) {

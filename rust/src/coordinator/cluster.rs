@@ -220,7 +220,7 @@ pub struct Cluster<'rt> {
 /// The plan pipeline shared by cluster construction and elastic
 /// recovery: validate artifact support, build the (n, mp) GMP topology,
 /// partition the network and compile the step schedule.
-fn plan_topology(
+pub(crate) fn plan_topology(
     rt: &RuntimeClient,
     cfg: &ClusterConfig,
     n: usize,
@@ -608,22 +608,21 @@ impl<'rt> Cluster<'rt> {
             _ => "head_step".to_string(),
         };
         for it in 0..rounds {
-            let it16 = it as u16;
-            let tag = |phase: u16| Tag::new(phase, it16, gid as u16);
+            let tag = |phase: u16| Tag::new(phase, it, gid);
 
             // Modulo fprop: assemble activations + labels.
             let (assembled, labs) = match scheme {
                 McastScheme::BoverK => (
-                    modulo.assemble(&mut self.fabric, &acts, it, tag(1))?,
-                    modulo_lab.assemble(&mut self.fabric, &labels_f32, it, tag(2))?,
+                    modulo.assemble(&self.fabric, &acts, it, tag(1))?,
+                    modulo_lab.assemble(&self.fabric, &labels_f32, it, tag(2))?,
                 ),
                 McastScheme::B => (
-                    assemble_scheme_b(&modulo, &mut self.fabric, &acts, it, tag(1))?,
-                    assemble_scheme_b(&modulo_lab, &mut self.fabric, &labels_f32, it, tag(2))?,
+                    assemble_scheme_b(&modulo, &self.fabric, &acts, it, tag(1))?,
+                    assemble_scheme_b(&modulo_lab, &self.fabric, &labels_f32, it, tag(2))?,
                 ),
                 McastScheme::BK => (
-                    assemble_bk(&modulo, &mut self.fabric, &acts, tag(1))?,
-                    assemble_bk(&modulo_lab, &mut self.fabric, &labels_f32, tag(2))?,
+                    assemble_bk(&modulo, &self.fabric, &acts, tag(1))?,
+                    assemble_bk(&modulo_lab, &self.fabric, &labels_f32, tag(2))?,
                 ),
             };
 
@@ -640,7 +639,7 @@ impl<'rt> Cluster<'rt> {
                 h0l.push(out.into_iter().next().unwrap());
             }
             // Shard gather to full width.
-            let h0 = shard0.gather_full(&mut self.fabric, &h0l, tag(3))?;
+            let h0 = shard0.gather_full(&self.fabric, &h0l, tag(3))?;
 
             // FC1 shard fwd.
             let mut h1l = Vec::with_capacity(k);
@@ -654,7 +653,7 @@ impl<'rt> Cluster<'rt> {
                 w.compute_secs += t.elapsed_secs();
                 h1l.push(out.into_iter().next().unwrap());
             }
-            let h1 = shard1.gather_full(&mut self.fabric, &h1l, tag(4))?;
+            let h1 = shard1.gather_full(&self.fabric, &h1l, tag(4))?;
 
             // Replicated head: loss + gw2 + gb2 + gh1 per member.
             let mut gh1_full = Vec::with_capacity(k);
@@ -676,7 +675,7 @@ impl<'rt> Cluster<'rt> {
             }
 
             // Shard1 bwd: replicated above -> local slice, no wire.
-            let g_h1l = shard1.backward(&mut self.fabric, &gh1_full, tag(5))?;
+            let g_h1l = shard1.backward(&self.fabric, &gh1_full, tag(5))?;
 
             // FC1 shard bwd.
             let mut gh0_partials = Vec::with_capacity(k);
@@ -698,7 +697,7 @@ impl<'rt> Cluster<'rt> {
             }
 
             // Shard0 bwd: partitioned above -> reduce partials.
-            let g_h0l = shard0.backward(&mut self.fabric, &gh0_partials, tag(6))?;
+            let g_h0l = shard0.backward(&self.fabric, &gh0_partials, tag(6))?;
 
             // FC0 shard bwd.
             let mut gbatch_partials = Vec::with_capacity(k);
@@ -726,14 +725,14 @@ impl<'rt> Cluster<'rt> {
                 .collect();
             match scheme {
                 McastScheme::BoverK => modulo.scatter_reduce(
-                    &mut self.fabric, &gbatch_partials, &mut g_acts, it, tag(7),
+                    &self.fabric, &gbatch_partials, &mut g_acts, it, tag(7),
                 )?,
                 McastScheme::B => scatter_reduce_scheme_b(
-                    &modulo, &mut self.fabric, &gbatch_partials, &mut g_acts, it, tag(7),
+                    &modulo, &self.fabric, &gbatch_partials, &mut g_acts, it, tag(7),
                 )?,
                 McastScheme::BK => {
                     scatter_reduce_bk(
-                        &modulo, &mut self.fabric, &gbatch_partials, &mut g_acts, tag(7),
+                        &modulo, &self.fabric, &gbatch_partials, &mut g_acts, tag(7),
                     )?;
                     // LR consistency: BK's head averaged over B*K
                     // examples, so the routed gradient is 1/K of the

@@ -35,7 +35,7 @@
 //! Injected faults ([`FaultPlan`](crate::comm::fault::FaultPlan)) enter
 //! here and in the fabric: each rank polls for a scheduled crash at the
 //! top of its MP phase; message drops/delays fire inside
-//! [`Fabric::post`]; straggles are charged by the cluster driver to the
+//! [`Transport::post`](crate::comm::transport::Transport::post); straggles are charged by the cluster driver to the
 //! simulated compute clock.
 
 use std::sync::Barrier;
@@ -43,7 +43,8 @@ use std::sync::Barrier;
 use anyhow::{anyhow, bail, Result};
 
 use crate::comm::collective::CollectiveAlgo;
-use crate::comm::fabric::{Fabric, Tag};
+use crate::comm::fabric::Tag;
+use crate::comm::transport::Transport;
 use crate::comm::fault::{PeerLost, StepAborted, WorkerCrashed};
 use crate::data::Batch;
 use crate::runtime::{HostTensor, RuntimeClient};
@@ -96,7 +97,7 @@ impl std::fmt::Display for ExecEngine {
 /// Everything a worker thread needs for one step (shared, read-only).
 pub(crate) struct StepCtx<'a> {
     pub rt: &'a RuntimeClient,
-    pub fabric: &'a Fabric,
+    pub fabric: &'a dyn Transport,
     pub topo: &'a GmpTopology,
     pub schedule: &'a StepSchedule,
     pub scheme: McastScheme,
@@ -220,14 +221,14 @@ pub(crate) fn full_step_worker(rt: &RuntimeClient, w: &mut Worker, batch: &Batch
     Ok(())
 }
 
-fn full_step_rank(w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
+pub(crate) fn full_step_rank(w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
     full_step_worker(ctx.rt, w, batch)
 }
 
 /// The hybrid path, per rank: Fig. 3's transformed network phase by
 /// phase — the SPMD mirror of the sequential engine's `step_group`,
 /// with blocking per-rank exchanges instead of god-view collectives.
-fn group_step_rank(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
+pub(crate) fn group_step_rank(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
     let gid = ctx.topo.gid(rank);
     let members = ctx.topo.members(gid);
     let gi = ctx.topo.offset(rank);
@@ -271,8 +272,7 @@ fn group_step_rank(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>
         _ => "head_step".to_string(),
     };
     for it in 0..rounds {
-        let it16 = it as u16;
-        let tag = |phase: u16| Tag::new(phase, it16, gid as u16);
+        let tag = |phase: u16| Tag::new(phase, it, gid);
 
         // Modulo fprop: assemble activations + labels.
         let (assembled, labs) = match scheme {

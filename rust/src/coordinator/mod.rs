@@ -9,6 +9,8 @@
 //! - [`engine`] — the threaded (one thread per worker) execution engine
 //! - [`cluster`] — the numeric simulator + calibrated throughput mode,
 //!   with elastic shrink-and-continue recovery on peer loss
+//! - [`procdriver`] — the multi-process rank driver (`splitbrain
+//!   worker`): the same per-rank step programs over the TCP transport
 //! - [`planner`] — feasible-configuration search under a memory budget,
 //!   plus survivor re-planning for elastic recovery
 
@@ -18,6 +20,7 @@ pub mod engine;
 pub mod group;
 pub mod modulo;
 pub mod planner;
+pub mod procdriver;
 pub mod schedule;
 pub mod scheme;
 pub mod shard;

@@ -16,7 +16,8 @@
 
 use anyhow::Result;
 
-use crate::comm::fabric::{Fabric, Tag};
+use crate::comm::fabric::Tag;
+use crate::comm::transport::Transport;
 use crate::runtime::HostTensor;
 
 /// Compile-time facts of a modulo exchange for one MP group.
@@ -64,7 +65,7 @@ impl ModuloPlan {
     /// the `[B, width]` assembled batch per member.
     pub fn assemble(
         &self,
-        fabric: &Fabric,
+        fabric: &dyn Transport,
         acts: &[HostTensor],
         k: usize,
         tag: Tag,
@@ -115,7 +116,7 @@ impl ModuloPlan {
     /// activation-gradient accumulator.
     pub fn scatter_reduce(
         &self,
-        fabric: &Fabric,
+        fabric: &dyn Transport,
         gbatches: &[HostTensor],
         g_acts: &mut [HostTensor],
         k: usize,
@@ -167,7 +168,7 @@ impl ModuloPlan {
     /// is identical to [`ModuloPlan::assemble`].
     pub fn assemble_rank(
         &self,
-        fabric: &Fabric,
+        fabric: &dyn Transport,
         gi: usize,
         act: &HostTensor,
         k: usize,
@@ -203,7 +204,7 @@ impl ModuloPlan {
     /// `g_act`.
     pub fn scatter_reduce_rank(
         &self,
-        fabric: &Fabric,
+        fabric: &dyn Transport,
         gi: usize,
         gbatch: &HostTensor,
         g_act: &mut HostTensor,
@@ -241,6 +242,7 @@ impl ModuloPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Fabric;
 
     fn acts(k: usize, b: usize, w: usize) -> Vec<HostTensor> {
         // member j, row r, col c = 100*j + r + 0.01*c
@@ -257,10 +259,10 @@ mod tests {
     #[test]
     fn assemble_places_rows_by_owner() {
         let plan = ModuloPlan::new(vec![0, 1], 4, 3);
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         let a = acts(2, 4, 3);
         // Iteration 0: rows 0..2 of each member.
-        let out = plan.assemble(&mut f, &a, 0, Tag::new(1, 0, 0)).unwrap();
+        let out = plan.assemble(&f, &a, 0, Tag::new(1, 0, 0)).unwrap();
         for o in &out {
             // rows 0..2 from member 0 (rows 0..2 of its act),
             // rows 2..4 from member 1.
@@ -273,9 +275,9 @@ mod tests {
     #[test]
     fn assemble_iteration_1_uses_second_slice() {
         let plan = ModuloPlan::new(vec![0, 1], 4, 3);
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         let a = acts(2, 4, 3);
-        let out = plan.assemble(&mut f, &a, 1, Tag::new(1, 1, 0)).unwrap();
+        let out = plan.assemble(&f, &a, 1, Tag::new(1, 1, 0)).unwrap();
         // Member 0's contribution is now its rows 2..4.
         assert_eq!(out[0].as_f32()[0], 2.0);
         assert_eq!(out[1].as_f32()[2 * 3], 102.0);
@@ -284,16 +286,16 @@ mod tests {
     #[test]
     fn fwd_bytes_formula_matches_fabric() {
         let plan = ModuloPlan::new(vec![0, 1, 2, 3], 8, 16);
-        let mut f = Fabric::new(4);
+        let f = Fabric::new(4);
         let a = acts(4, 8, 16);
-        plan.assemble(&mut f, &a, 0, Tag::new(1, 0, 0)).unwrap();
+        plan.assemble(&f, &a, 0, Tag::new(1, 0, 0)).unwrap();
         assert_eq!(f.bytes_from(0), plan.fwd_bytes_per_member());
     }
 
     #[test]
     fn scatter_reduce_sums_partials() {
         let plan = ModuloPlan::new(vec![0, 1], 2, 2);
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         // Both members produce all-ones partial gradients over the
         // assembled batch -> each owner's rows sum to 2.
         let gb = vec![
@@ -301,7 +303,7 @@ mod tests {
             HostTensor::f32(vec![2, 2], vec![1.0; 4]),
         ];
         let mut g_acts = vec![HostTensor::zeros(vec![2, 2]), HostTensor::zeros(vec![2, 2])];
-        plan.scatter_reduce(&mut f, &gb, &mut g_acts, 0, Tag::new(2, 0, 0)).unwrap();
+        plan.scatter_reduce(&f, &gb, &mut g_acts, 0, Tag::new(2, 0, 0)).unwrap();
         // Iteration 0 wrote rows 0..1 (size=1) of each member's g_act.
         assert_eq!(g_acts[0].as_f32(), &[2.0, 2.0, 0.0, 0.0]);
         assert_eq!(g_acts[1].as_f32(), &[2.0, 2.0, 0.0, 0.0]);
@@ -311,7 +313,7 @@ mod tests {
     #[test]
     fn scatter_reduce_routes_to_owner() {
         let plan = ModuloPlan::new(vec![0, 1], 2, 1);
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         // Member 0's gradient: rows [10, 20]; member 1's: [1, 2].
         // Owner of row 0 = member 0 -> gets 10+1; owner row 1 = member 1
         // -> gets 20+2.
@@ -320,7 +322,7 @@ mod tests {
             HostTensor::f32(vec![2, 1], vec![1.0, 2.0]),
         ];
         let mut g = vec![HostTensor::zeros(vec![2, 1]), HostTensor::zeros(vec![2, 1])];
-        plan.scatter_reduce(&mut f, &gb, &mut g, 1, Tag::new(2, 1, 0)).unwrap();
+        plan.scatter_reduce(&f, &gb, &mut g, 1, Tag::new(2, 1, 0)).unwrap();
         // Iteration 1 writes row 1 of each local buffer.
         assert_eq!(g[0].as_f32(), &[0.0, 11.0]);
         assert_eq!(g[1].as_f32(), &[0.0, 22.0]);
@@ -329,9 +331,9 @@ mod tests {
     #[test]
     fn k1_group_has_no_traffic() {
         let plan = ModuloPlan::new(vec![0], 4, 2);
-        let mut f = Fabric::new(1);
+        let f = Fabric::new(1);
         let a = acts(1, 4, 2);
-        let out = plan.assemble(&mut f, &a, 0, Tag::new(1, 0, 0)).unwrap();
+        let out = plan.assemble(&f, &a, 0, Tag::new(1, 0, 0)).unwrap();
         // K=1: assembled batch = the full local batch (size = B).
         assert_eq!(out[0].as_f32(), a[0].as_f32());
         assert_eq!(f.total_bytes(), 0);
@@ -347,10 +349,10 @@ mod tests {
         let k = plan.k();
         let a = acts(2, 4, 3);
         let mut g_acts = vec![HostTensor::zeros(vec![4, 3]), HostTensor::zeros(vec![4, 3])];
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         for it in 0..k {
-            let assembled = plan.assemble(&mut f, &a, it, Tag::new(1, it as u16, 0)).unwrap();
-            plan.scatter_reduce(&mut f, &assembled, &mut g_acts, it, Tag::new(2, it as u16, 0))
+            let assembled = plan.assemble(&f, &a, it, Tag::new(1, it, 0)).unwrap();
+            plan.scatter_reduce(&f, &assembled, &mut g_acts, it, Tag::new(2, it, 0))
                 .unwrap();
         }
         // Every member's reduced gradient = K * its own activations.

@@ -1,0 +1,471 @@
+//! The multi-process rank driver: one training process = one rank over
+//! the TCP transport.
+//!
+//! This is the per-process mirror of the in-proc
+//! [`Cluster`](super::cluster::Cluster) driver
+//! (`splitbrain worker --rank R --peers ...`, spawned by
+//! `splitbrain launch`). It runs the **same per-rank step programs**
+//! the threaded engine runs — `engine::full_step_rank` /
+//! `engine::group_step_rank` for the MP phase, `averaging::average_rank`
+//! for BSP model averaging — against a [`TcpTransport`] instead of the
+//! in-proc fabric. Because the arithmetic and its order are shared code,
+//! a multi-process run is bit-identical to the threaded and sequential
+//! engines on the same seed (the `transport_parity` suite asserts it).
+//!
+//! ## One BSP step across processes
+//!
+//! ```text
+//! begin_step → crash poll → MP phase → MID barrier
+//!            → averaging (if due) → checkpoint refresh → END barrier
+//! ```
+//!
+//! The END barrier keeps the processes in per-step lockstep (what the
+//! thread-join gives the in-proc engines), so a failure at step k is
+//! observed by every survivor at step k, never one step later. The
+//! checkpoint refresh replaces the in-proc driver's local
+//! `snapshot_global()`: right after averaging — when replicas provably
+//! agree — the group's FC shards are exchanged on the control plane
+//! (uncounted, exactly like the in-proc snapshot's local memory reads)
+//! so every process holds the full global model to restore from.
+//!
+//! ## Failure & recovery
+//!
+//! An injected crash makes the process broadcast its death and exit
+//! with [`CRASH_EXIT_CODE`] — to its peers it is indistinguishable from
+//! a real death (the `Dead` frame races the connection reset; either
+//! works). Survivors observe typed `PeerLost`/`StepAborted` errors,
+//! agree on the survivor set ([`TcpTransport::recovery_sync`]), then
+//! re-plan exactly like [`Cluster`](super::cluster::Cluster) does: `planner::survivor_mp`, the
+//! shared `plan_topology` pipeline, `Worker::new` from the latest
+//! checkpoint, data iterators rebuilt over the survivor shape and
+//! advanced to the current step.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::fabric::Tag;
+use crate::comm::fault::WorkerCrashed;
+use crate::comm::transport::tcp::{SyncOutcome, BARRIER_END, BARRIER_MID};
+use crate::comm::transport::{TcpPeer, TcpTransport, Transport};
+use crate::data::BatchIter;
+use crate::runtime::{HostTensor, RuntimeClient};
+use crate::train::checkpoint;
+
+use super::averaging::average_rank;
+use super::cluster::{plan_topology, ClusterConfig, RecoveryPolicy};
+use super::engine::{full_step_rank, group_step_rank, StepCtx};
+use super::group::GmpTopology;
+use super::schedule::StepSchedule;
+use super::worker::{init_full_params, Worker};
+
+pub use crate::comm::transport::CRASH_EXIT_CODE;
+
+/// Exit code of a worker the cluster evicted (it was presumed dead
+/// while actually alive — the membership verdict excluded it).
+pub const EVICTED_EXIT_CODE: i32 = 43;
+
+/// Tag phase for the control-plane checkpoint-refresh exchange (well
+/// clear of the MP phases 1–7 and the averaging bases 1000/2000+).
+const TAG_CKPT: u16 = 3000;
+
+/// Configuration of one worker process.
+pub struct ProcConfig {
+    /// Launch-time cluster configuration (`n_workers` = launch size).
+    pub cluster: ClusterConfig,
+    /// Training steps to run.
+    pub steps: usize,
+    /// This process's stable id (= its launch-time rank).
+    pub opid: usize,
+    /// The full mesh, ordered by opid.
+    pub peers: Vec<TcpPeer>,
+    /// Artifact directory for the runtime.
+    pub artifacts: String,
+    /// Where to write the end-of-run state (`opid<N>.meta` /
+    /// `opid<N>.ckpt`); no files are written when `None`.
+    pub out_dir: Option<std::path::PathBuf>,
+    /// Mesh bring-up timeout in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Print a progress line every this many steps (0 = quiet).
+    pub log_every: usize,
+}
+
+/// How a worker process's run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// All requested steps completed.
+    Completed,
+    /// An injected crash fault fired on this rank at the given step;
+    /// the process must exit with [`CRASH_EXIT_CODE`].
+    Crashed {
+        /// Step the crash fired on.
+        step: usize,
+    },
+    /// The membership verdict excluded this process; it must exit with
+    /// [`EVICTED_EXIT_CODE`].
+    Evicted,
+}
+
+/// Deterministic FNV-1a fingerprint over the run shape, exchanged in
+/// the handshake so workers from different launches can never mesh.
+pub fn run_fingerprint(cfg: &ClusterConfig, steps: usize) -> u64 {
+    let text = format!(
+        "v1|n={}|mp={}|lr={}|mom={}|clip={}|avg={}|seed={}|ds={}|scheme={}|coll={}|rec={}|steps={}|seg={}",
+        cfg.n_workers,
+        cfg.mp,
+        cfg.lr,
+        cfg.momentum,
+        cfg.clip_norm,
+        cfg.avg_period,
+        cfg.seed,
+        cfg.dataset_size,
+        cfg.scheme,
+        cfg.collectives,
+        cfg.recovery,
+        steps,
+        cfg.segmented_mp1,
+    );
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1_0000_01b3);
+    }
+    h
+}
+
+/// Run one worker process to completion (see the module docs). Returns
+/// the outcome; the caller maps it onto an exit code.
+pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
+    let rt = RuntimeClient::load(&pc.artifacts)?;
+    let cfg = &pc.cluster;
+    if pc.peers.len() != cfg.n_workers {
+        bail!(
+            "peer list has {} entries but the launch declares {} workers",
+            pc.peers.len(),
+            cfg.n_workers
+        );
+    }
+    let transport = TcpTransport::connect(
+        pc.opid,
+        &pc.peers,
+        run_fingerprint(cfg, pc.steps),
+        cfg.take_timeout_ms,
+        Duration::from_millis(pc.connect_timeout_ms.max(1)),
+        cfg.faults.clone(),
+    )
+    .context("bringing up the TCP mesh")?;
+
+    let (data, _desc) = crate::data::load_default(cfg.dataset_size, cfg.seed);
+
+    // Current-incarnation shape (shrinks on recovery).
+    let mut n = cfg.n_workers;
+    let mut mp = cfg.mp;
+    let mut my_rank = pc.opid;
+    let (mut topo, _transformed, mut schedule) = plan_topology(&rt, cfg, n, mp)?;
+    let batch = rt.manifest.batch;
+
+    let (conv, fc) = init_full_params(cfg.seed);
+    let mut worker = Worker::new(
+        my_rank,
+        &topo,
+        &conv,
+        &fc,
+        batch,
+        schedule.boundary_width.max(1),
+        cfg.lr,
+        cfg.momentum,
+        cfg.clip_norm,
+    )?;
+    let mut iter = BatchIter::new(data.clone(), batch, my_rank, n, cfg.seed);
+
+    // The latest global checkpoint (conv 14 + full FC 6, the
+    // `snapshot_global` tensor order). The initial model is a valid
+    // restore point: every process derives it from the shared seed.
+    let mut ckpt: Vec<HostTensor> = conv.iter().cloned().chain(fc.iter().cloned()).collect();
+
+    let mut step_count = 0usize;
+    let mut recoveries = 0usize;
+    let mut losses: Vec<(usize, f64)> = Vec::with_capacity(pc.steps);
+    let mut bytes_sent = 0u64;
+
+    while step_count < pc.steps {
+        let step_no = step_count + 1;
+        let res = try_step(
+            &rt, &transport, cfg, n, mp, &topo, &schedule, &mut worker, &mut iter, my_rank,
+            step_no, batch, &mut ckpt,
+        );
+        match res {
+            Ok(loss) => {
+                bytes_sent += transport.bytes_from(my_rank);
+                transport.reset_counters();
+                step_count += 1;
+                losses.push((step_count, loss));
+                if pc.log_every > 0 && (step_count % pc.log_every == 0 || step_count == pc.steps)
+                {
+                    eprintln!("[rank {my_rank}/{n} opid {}] step {step_count:>4}  loss {loss:.4}", pc.opid);
+                }
+            }
+            Err(e) => {
+                if let Some(c) = e.downcast_ref::<WorkerCrashed>() {
+                    // Injected crash: this process dies. Peers already
+                    // saw the Dead broadcast; dropping the transport
+                    // closes the sockets like a real crash would.
+                    eprintln!("[rank {my_rank} opid {}] {c} — exiting", pc.opid);
+                    if let Some(dir) = &pc.out_dir {
+                        let _ = std::fs::write(
+                            dir.join(format!("opid{}.crashed", pc.opid)),
+                            format!("step {}\n", c.step),
+                        );
+                    }
+                    return Ok(RunOutcome::Crashed { step: c.step });
+                }
+                // The death notice behind a step abort may still be in
+                // flight on another socket: give the gossip a bounded
+                // window before concluding this was not a peer loss.
+                let dead =
+                    transport.wait_for_dead(Duration::from_millis(cfg.take_timeout_ms.min(2_000)));
+                if cfg.recovery != RecoveryPolicy::ShrinkAndContinue || dead.is_empty() {
+                    return Err(e.context(format!("step {step_no} failed (fail-fast)")));
+                }
+                eprintln!(
+                    "[rank {my_rank} opid {}] step {step_no} lost peers {dead:?}: {e:#} — recovering",
+                    pc.opid
+                );
+                match transport.recovery_sync()? {
+                    SyncOutcome::Evicted => {
+                        eprintln!("[opid {}] evicted by the membership verdict", pc.opid);
+                        return Ok(RunOutcome::Evicted);
+                    }
+                    SyncOutcome::Continue { survivors, my_rank: new_rank } => {
+                        recoveries += 1;
+                        n = survivors.len();
+                        my_rank = new_rank;
+                        mp = super::planner::survivor_mp(n, mp, &rt.manifest.mp_sizes)?;
+                        let planned = plan_topology(&rt, cfg, n, mp)?;
+                        topo = planned.0;
+                        schedule = planned.2;
+                        let conv_t = &ckpt[..14];
+                        let fc_t = &ckpt[14..20];
+                        worker = Worker::new(
+                            my_rank,
+                            &topo,
+                            conv_t,
+                            fc_t,
+                            batch,
+                            schedule.boundary_width.max(1),
+                            cfg.lr,
+                            cfg.momentum,
+                            cfg.clip_norm,
+                        )?;
+                        // Survivor iterators advance to the current
+                        // position, exactly like `Cluster::recover`.
+                        iter = BatchIter::new(data.clone(), batch, my_rank, n, cfg.seed);
+                        for _ in 0..step_count {
+                            iter.next_batch();
+                        }
+                        eprintln!(
+                            "[opid {}] recovered: {n} survivors, mp={mp}, now rank {my_rank}",
+                            pc.opid
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    if let Some(dir) = &pc.out_dir {
+        write_outputs(dir, pc.opid, my_rank, n, mp, recoveries, &losses, bytes_sent, &worker)?;
+    }
+    transport.shutdown();
+    Ok(RunOutcome::Completed)
+}
+
+/// One step attempt on the current incarnation (the per-process mirror
+/// of `Cluster::try_step`). Returns this rank's per-step loss.
+#[allow(clippy::too_many_arguments)]
+fn try_step(
+    rt: &RuntimeClient,
+    transport: &TcpTransport,
+    cfg: &ClusterConfig,
+    n: usize,
+    mp: usize,
+    topo: &GmpTopology,
+    schedule: &StepSchedule,
+    worker: &mut Worker,
+    iter: &mut BatchIter,
+    my_rank: usize,
+    step_no: usize,
+    batch_size: usize,
+    ckpt: &mut Vec<HostTensor>,
+) -> Result<f64> {
+    transport.begin_step(step_no);
+    worker.begin_step();
+    worker.compute_secs = 0.0;
+    let batch = iter.next_batch();
+    let averaging_due = n > 1 && step_no % cfg.avg_period == 0;
+
+    // The per-rank programs only touch the std barrier in the threaded
+    // engine's worker_step; here the BSP barrier is the transport's.
+    let local_barrier = std::sync::Barrier::new(1);
+    let ctx = StepCtx {
+        rt,
+        fabric: transport,
+        topo,
+        schedule,
+        scheme: cfg.scheme,
+        algo: cfg.collectives,
+        segmented_mp1: cfg.segmented_mp1,
+        batch: batch_size,
+        averaging: averaging_due,
+        barrier: &local_barrier,
+    };
+
+    // Crash poll at the top of the MP phase, like both engines.
+    if transport.poll_crash(my_rank) {
+        return Err(WorkerCrashed { rank: my_rank, step: step_no }.into());
+    }
+    let mp_res = if topo.mp == 1 && !cfg.segmented_mp1 {
+        full_step_rank(worker, &batch, &ctx)
+    } else {
+        group_step_rank(my_rank, worker, &batch, &ctx)
+    };
+    if let Err(e) = mp_res {
+        transport.abort_step();
+        return Err(e);
+    }
+    transport.barrier(step_no, BARRIER_MID)?;
+
+    if averaging_due {
+        if let Err(e) = average_rank(transport, worker, my_rank, n, topo, cfg.collectives) {
+            transport.abort_step();
+            return Err(e);
+        }
+        // Replicas provably agree now: refresh the global restore
+        // point (control plane — the in-proc equivalent is a local
+        // memory read, so nothing lands on the data counters).
+        match refresh_ckpt(transport, worker, my_rank, topo) {
+            Ok(t) => *ckpt = t,
+            Err(e) => {
+                transport.abort_step();
+                return Err(e);
+            }
+        }
+    }
+    // Drain check must precede the END barrier: once our END frame is
+    // out, a fast peer may legitimately post step-(s+1) data into our
+    // mailbox. At this point every take of step s has returned, so any
+    // leftover mail is genuinely over-posted.
+    if !transport.drained() {
+        bail!("transport not drained after step {step_no} — schedule bug");
+    }
+    transport.barrier(step_no, BARRIER_END)?;
+    // Keep the injected-fault clocks ticking identically to the in-proc
+    // driver (fired flags must consume in the same order).
+    let straggle = transport.poll_straggle(my_rank);
+    if straggle > 0.0 {
+        worker.compute_secs += straggle;
+    }
+    let rounds = cfg.scheme.rounds(mp.max(1)) as f64;
+    Ok(worker.loss_acc / rounds)
+}
+
+/// Rebuild the full global model (the `snapshot_global` tensor set)
+/// from this rank's replica + a control-plane allgather of its group's
+/// FC shards. Only called right after averaging, when every replica
+/// and every same-offset shard provably agree bit-for-bit.
+fn refresh_ckpt(
+    transport: &TcpTransport,
+    worker: &Worker,
+    rank: usize,
+    topo: &GmpTopology,
+) -> Result<Vec<HostTensor>> {
+    let group = topo.group_of(rank);
+    let k = group.len();
+    let gi = topo.offset(rank);
+    let mut shard_flats: Vec<Vec<f32>> = vec![Vec::new(); k];
+    shard_flats[gi] = worker.shards_flat();
+    if k > 1 {
+        let tag = Tag::new(TAG_CKPT, 0, topo.gid(rank));
+        for &dst in &group {
+            if dst != rank {
+                transport.post_uncounted(rank, dst, tag, shard_flats[gi].clone());
+            }
+        }
+        for (j, &src) in group.iter().enumerate() {
+            if j != gi {
+                shard_flats[j] = transport.take_blocking(rank, src, tag)?;
+            }
+        }
+    }
+
+    // Reassemble the full FC stack from the shard flats (the layout
+    // `Worker::shards_flat` packs: w0 | b0 | w1 | b1 per member).
+    let (d0, s0) = (worker.fc_params[0].shape[0], worker.fc_params[0].shape[1]);
+    let (d1, s1) = (worker.fc_params[2].shape[0], worker.fc_params[2].shape[1]);
+    let mut full = Vec::with_capacity(6);
+    for (fc_idx, (din, s)) in [(0usize, (d0, s0)), (1usize, (d1, s1))] {
+        let mut w = HostTensor::zeros(vec![din, s * k]);
+        let mut bias = Vec::with_capacity(s * k);
+        for (j, flat) in shard_flats.iter().enumerate() {
+            let w_off = if fc_idx == 0 { 0 } else { d0 * s0 + s0 };
+            let b_off = w_off + din * s;
+            if flat.len() < b_off + s {
+                bail!("shard flat from member {j} is {} floats, need {}", flat.len(), b_off + s);
+            }
+            let wj = HostTensor::f32(vec![din, s], flat[w_off..w_off + din * s].to_vec());
+            w.set_cols(j * s, &wj);
+            bias.extend_from_slice(&flat[b_off..b_off + s]);
+        }
+        full.push(w);
+        full.push(HostTensor::f32(vec![s * k], bias));
+    }
+    full.push(worker.fc_params[4].clone());
+    full.push(worker.fc_params[5].clone());
+
+    let mut out: Vec<HostTensor> = worker.conv_params.clone();
+    out.extend(full);
+    debug_assert_eq!(out.len(), 20);
+    Ok(out)
+}
+
+/// Write this process's end-of-run state for the launcher and the
+/// parity suite: `opid<N>.meta` (final rank/shape, per-step loss bit
+/// patterns, byte counters) and `opid<N>.ckpt` (every local parameter
+/// tensor, bit-exact).
+#[allow(clippy::too_many_arguments)]
+fn write_outputs(
+    dir: &Path,
+    opid: usize,
+    my_rank: usize,
+    n: usize,
+    mp: usize,
+    recoveries: usize,
+    losses: &[(usize, f64)],
+    bytes_sent: u64,
+    worker: &Worker,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating out dir {}", dir.display()))?;
+    let mut meta = String::new();
+    meta.push_str(&format!("opid {opid}\n"));
+    meta.push_str(&format!("rank {my_rank}\n"));
+    meta.push_str(&format!("workers {n}\n"));
+    meta.push_str(&format!("mp {mp}\n"));
+    meta.push_str(&format!("recoveries {recoveries}\n"));
+    meta.push_str(&format!("bytes {bytes_sent}\n"));
+    for (step, loss) in losses {
+        meta.push_str(&format!("loss {step} {:016x}\n", loss.to_bits()));
+    }
+    std::fs::write(dir.join(format!("opid{opid}.meta")), meta)?;
+
+    let named: Vec<(String, &HostTensor)> = worker
+        .conv_params
+        .iter()
+        .chain(worker.fc_params.iter())
+        .enumerate()
+        .map(|(i, t)| (format!("p{i}"), t))
+        .collect();
+    checkpoint::save(dir.join(format!("opid{opid}.ckpt")), &named)?;
+    Ok(())
+}

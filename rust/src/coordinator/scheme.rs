@@ -20,7 +20,8 @@ use std::fmt;
 
 use anyhow::{bail, Result};
 
-use crate::comm::fabric::{Fabric, Tag};
+use crate::comm::fabric::Tag;
+use crate::comm::transport::Transport;
 use crate::runtime::HostTensor;
 
 use super::modulo::ModuloPlan;
@@ -97,7 +98,7 @@ impl fmt::Display for McastScheme {
 /// assembled batch at every member IS member k's batch.
 pub fn assemble_scheme_b(
     plan: &ModuloPlan,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     acts: &[HostTensor],
     round: usize,
     tag: Tag,
@@ -127,7 +128,7 @@ pub fn assemble_scheme_b(
 /// its whole activation-gradient buffer.
 pub fn scatter_reduce_scheme_b(
     plan: &ModuloPlan,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     gbatches: &[HostTensor],
     g_acts: &mut [HostTensor],
     round: usize,
@@ -155,7 +156,7 @@ pub fn scatter_reduce_scheme_b(
 /// `[B*K, width]`.
 pub fn assemble_bk(
     plan: &ModuloPlan,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     acts: &[HostTensor],
     tag: Tag,
 ) -> Result<Vec<HostTensor>> {
@@ -189,7 +190,7 @@ pub fn assemble_bk(
 /// summed gradient for its own batch in `g_acts[i]`.
 pub fn scatter_reduce_bk(
     plan: &ModuloPlan,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     gbatches: &[HostTensor],
     g_acts: &mut [HostTensor],
     tag: Tag,
@@ -226,7 +227,7 @@ pub fn scatter_reduce_bk(
 /// its whole batch; everyone returns the owner's batch.
 pub fn assemble_scheme_b_rank(
     plan: &ModuloPlan,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     gi: usize,
     act: &HostTensor,
     round: usize,
@@ -254,7 +255,7 @@ pub fn assemble_scheme_b_rank(
 /// its whole activation-gradient buffer (peers in group order).
 pub fn scatter_reduce_scheme_b_rank(
     plan: &ModuloPlan,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     gi: usize,
     gbatch: &HostTensor,
     g_act: &mut HostTensor,
@@ -282,7 +283,7 @@ pub fn scatter_reduce_scheme_b_rank(
 /// whole batch; returns the member-ordered `[B*K, width]` concatenation.
 pub fn assemble_bk_rank(
     plan: &ModuloPlan,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     gi: usize,
     act: &HostTensor,
     tag: Tag,
@@ -312,7 +313,7 @@ pub fn assemble_bk_rank(
 /// first, then peers in group order).
 pub fn scatter_reduce_bk_rank(
     plan: &ModuloPlan,
-    fabric: &Fabric,
+    fabric: &dyn Transport,
     gi: usize,
     gbatch: &HostTensor,
     g_act: &mut HostTensor,
@@ -340,6 +341,7 @@ pub fn scatter_reduce_bk_rank(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Fabric;
 
     fn acts(k: usize, b: usize, w: usize) -> Vec<HostTensor> {
         (0..k)
@@ -356,8 +358,8 @@ mod tests {
     fn scheme_b_round_k_is_owner_batch() {
         let plan = ModuloPlan::new(vec![0, 1, 2], 3, 2);
         let a = acts(3, 3, 2);
-        let mut f = Fabric::new(3);
-        let out = assemble_scheme_b(&plan, &mut f, &a, 1, Tag::new(1, 1, 0)).unwrap();
+        let f = Fabric::new(3);
+        let out = assemble_scheme_b(&plan, &f, &a, 1, Tag::new(1, 1, 0)).unwrap();
         for o in &out {
             assert_eq!(o.as_f32(), a[1].as_f32());
         }
@@ -375,8 +377,8 @@ mod tests {
             HostTensor::f32(vec![2, 1], vec![10.0, 20.0]),
         ];
         let mut g = vec![HostTensor::zeros(vec![2, 1]), HostTensor::zeros(vec![2, 1])];
-        let mut f = Fabric::new(2);
-        scatter_reduce_scheme_b(&plan, &mut f, &gb, &mut g, 0, Tag::new(2, 0, 0)).unwrap();
+        let f = Fabric::new(2);
+        scatter_reduce_scheme_b(&plan, &f, &gb, &mut g, 0, Tag::new(2, 0, 0)).unwrap();
         assert_eq!(g[0].as_f32(), &[11.0, 22.0]);
         assert_eq!(g[1].as_f32(), &[0.0, 0.0]); // untouched this round
         assert!(f.drained());
@@ -386,8 +388,8 @@ mod tests {
     fn bk_assembles_member_ordered_concat() {
         let plan = ModuloPlan::new(vec![0, 1], 2, 2);
         let a = acts(2, 2, 2);
-        let mut f = Fabric::new(2);
-        let out = assemble_bk(&plan, &mut f, &a, Tag::new(3, 0, 0)).unwrap();
+        let f = Fabric::new(2);
+        let out = assemble_bk(&plan, &f, &a, Tag::new(3, 0, 0)).unwrap();
         for o in &out {
             assert_eq!(o.shape, vec![4, 2]);
             assert_eq!(&o.as_f32()[..4], a[0].as_f32());
@@ -406,8 +408,8 @@ mod tests {
             HostTensor::f32(vec![4, 1], vec![10.0, 20.0, 30.0, 40.0]),
         ];
         let mut g = vec![HostTensor::zeros(vec![2, 1]), HostTensor::zeros(vec![2, 1])];
-        let mut f = Fabric::new(2);
-        scatter_reduce_bk(&plan, &mut f, &gb, &mut g, Tag::new(4, 0, 0)).unwrap();
+        let f = Fabric::new(2);
+        scatter_reduce_bk(&plan, &f, &gb, &mut g, Tag::new(4, 0, 0)).unwrap();
         assert_eq!(g[0].as_f32(), &[11.0, 22.0]);
         assert_eq!(g[1].as_f32(), &[33.0, 44.0]);
         assert!(f.drained());

@@ -23,7 +23,8 @@ use crate::comm::collective::{
     allgather_cols_algo, allgather_cols_rank, reduce_scatter_cols_algo, reduce_scatter_cols_rank,
     CollectiveAlgo,
 };
-use crate::comm::fabric::{Fabric, Tag};
+use crate::comm::fabric::Tag;
+use crate::comm::transport::Transport;
 use crate::runtime::HostTensor;
 
 /// How bprop recovers the local-partition gradient.
@@ -89,7 +90,7 @@ impl ShardPlan {
     /// member (group order = partition order).
     pub fn gather_full(
         &self,
-        fabric: &Fabric,
+        fabric: &dyn Transport,
         parts: &[HostTensor],
         tag: Tag,
     ) -> Result<Vec<HostTensor>> {
@@ -104,7 +105,7 @@ impl ShardPlan {
     /// contributes its `[B, part]` partition, blocking-takes the rest.
     pub fn gather_full_rank(
         &self,
-        fabric: &Fabric,
+        fabric: &dyn Transport,
         gi: usize,
         part: &HostTensor,
         tag: Tag,
@@ -120,7 +121,7 @@ impl ShardPlan {
     /// members' `[B, full]` input gradients.
     pub fn backward(
         &self,
-        fabric: &Fabric,
+        fabric: &dyn Transport,
         full_grads: &[HostTensor],
         tag: Tag,
     ) -> Result<Vec<HostTensor>> {
@@ -147,7 +148,7 @@ impl ShardPlan {
     /// `[B, part]` gradient from its `[B, full]` input gradient.
     pub fn backward_rank(
         &self,
-        fabric: &Fabric,
+        fabric: &dyn Transport,
         gi: usize,
         full_grad: &HostTensor,
         tag: Tag,
@@ -171,6 +172,7 @@ impl ShardPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Fabric;
 
     fn part(rows: usize, w: usize, base: f32) -> HostTensor {
         HostTensor::f32(vec![rows, w], (0..rows * w).map(|i| base + i as f32).collect())
@@ -179,9 +181,9 @@ mod tests {
     #[test]
     fn fprop_restores_full_width() {
         let plan = ShardPlan::new(vec![0, 1], 2, ShardBwdMode::ReducePartials);
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         let parts = [part(1, 2, 0.0), part(1, 2, 10.0)];
-        let full = plan.gather_full(&mut f, &parts, Tag::new(3, 0, 0)).unwrap();
+        let full = plan.gather_full(&f, &parts, Tag::new(3, 0, 0)).unwrap();
         for fl in &full {
             assert_eq!(fl.as_f32(), &[0.0, 1.0, 10.0, 11.0]);
         }
@@ -191,12 +193,12 @@ mod tests {
     #[test]
     fn bwd_reduce_partials_sums() {
         let plan = ShardPlan::new(vec![0, 1], 1, ShardBwdMode::ReducePartials);
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         let fulls = [
             HostTensor::f32(vec![1, 2], vec![1.0, 2.0]),
             HostTensor::f32(vec![1, 2], vec![10.0, 20.0]),
         ];
-        let outs = plan.backward(&mut f, &fulls, Tag::new(4, 0, 0)).unwrap();
+        let outs = plan.backward(&f, &fulls, Tag::new(4, 0, 0)).unwrap();
         assert_eq!(outs[0].as_f32(), &[11.0]); // col 0 summed
         assert_eq!(outs[1].as_f32(), &[22.0]); // col 1 summed
         assert!(f.drained());
@@ -205,10 +207,10 @@ mod tests {
     #[test]
     fn bwd_slice_replicated_no_traffic_no_double_count() {
         let plan = ShardPlan::new(vec![0, 1], 1, ShardBwdMode::SliceReplicated);
-        let mut f = Fabric::new(2);
+        let f = Fabric::new(2);
         // Replicated head: both members hold the identical gradient.
         let g = HostTensor::f32(vec![1, 2], vec![5.0, 7.0]);
-        let outs = plan.backward(&mut f, &[g.clone(), g], Tag::new(4, 0, 0)).unwrap();
+        let outs = plan.backward(&f, &[g.clone(), g], Tag::new(4, 0, 0)).unwrap();
         assert_eq!(outs[0].as_f32(), &[5.0]);
         assert_eq!(outs[1].as_f32(), &[7.0]);
         assert_eq!(f.total_bytes(), 0);
@@ -218,11 +220,11 @@ mod tests {
     #[test]
     fn k1_is_identity() {
         let plan = ShardPlan::new(vec![0], 4, ShardBwdMode::ReducePartials);
-        let mut f = Fabric::new(1);
+        let f = Fabric::new(1);
         let p = [part(2, 4, 0.0)];
-        let full = plan.gather_full(&mut f, &p, Tag::new(3, 0, 0)).unwrap();
+        let full = plan.gather_full(&f, &p, Tag::new(3, 0, 0)).unwrap();
         assert_eq!(full[0].as_f32(), p[0].as_f32());
-        let back = plan.backward(&mut f, &full, Tag::new(4, 0, 0)).unwrap();
+        let back = plan.backward(&f, &full, Tag::new(4, 0, 0)).unwrap();
         assert_eq!(back[0].as_f32(), p[0].as_f32());
         assert_eq!(f.total_bytes(), 0);
     }
@@ -234,10 +236,10 @@ mod tests {
         // partitioned case each member contributes 1/k of it. Check the
         // partial path reconstructs the all-ones gradient.
         let plan = ShardPlan::new(vec![0, 1, 2], 2, ShardBwdMode::ReducePartials);
-        let mut f = Fabric::new(3);
+        let f = Fabric::new(3);
         let partial = HostTensor::f32(vec![1, 6], vec![1.0 / 3.0; 6]);
         let outs = plan
-            .backward(&mut f, &[partial.clone(), partial.clone(), partial], Tag::new(4, 0, 0))
+            .backward(&f, &[partial.clone(), partial.clone(), partial], Tag::new(4, 0, 0))
             .unwrap();
         for o in &outs {
             for v in o.as_f32() {

@@ -5,6 +5,9 @@
 //!                     [--engine threaded|sequential] [--collectives ring|naive|rhd]
 //!                     [--recovery fail-fast|shrink] [--take-timeout-ms 120000]
 //!                     [--crash R@S] [--straggle R@S:MS] [--fault-seed N [--fault-count 2]]
+//! splitbrain launch   --workers 4 --mp 2 --steps 100   # multi-process TCP training
+//!                     [--out-dir DIR] [--verify-replicas] + the train flags above
+//! splitbrain worker   --rank R --workers N --peers a0,a1,...  # one rank (launch spawns these)
 //! splitbrain sweep    --experiment table2|fig7a|fig7b|fig7b-algos|fig7c [--numeric]
 //! splitbrain inspect  [--mp 2]          # Table 1 + the Fig. 3 transform
 //! splitbrain memory                     # Fig. 7c memory accounting
@@ -14,7 +17,7 @@
 //! Runs on the built-in native backend out of the box; an `artifacts/`
 //! directory produced by `python -m compile.aot` overrides the manifest.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use splitbrain::bench::{self, Fidelity};
 use splitbrain::coordinator::{Cluster, ClusterConfig};
@@ -27,14 +30,20 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional(0) {
         Some("train") => cmd_train(&args),
+        Some("launch") => cmd_launch(&args),
+        Some("worker") => cmd_worker(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("memory") => cmd_memory(&args),
         Some("profile") => cmd_profile(&args),
         Some("plan") => cmd_plan(&args),
-        Some(other) => bail!("unknown subcommand {other:?} (try: train, sweep, inspect, memory, profile, plan)"),
+        Some(other) => bail!(
+            "unknown subcommand {other:?} (try: train, launch, worker, sweep, inspect, memory, profile, plan)"
+        ),
         None => {
-            eprintln!("usage: splitbrain <train|sweep|inspect|memory|profile|plan> [--flags]");
+            eprintln!(
+                "usage: splitbrain <train|launch|worker|sweep|inspect|memory|profile|plan> [--flags]"
+            );
             Ok(())
         }
     }
@@ -155,6 +164,219 @@ fn cmd_train(args: &Args) -> Result<()> {
         "\nthroughput: {:.2} images/sec (simulated cluster)  comm fraction {:.1}%",
         report.images_per_sec(),
         report.comm_fraction() * 100.0
+    );
+    Ok(())
+}
+
+/// One rank of a multi-process TCP run (spawned by `launch`; see
+/// `coordinator::procdriver`). Exits with `CRASH_EXIT_CODE` when an
+/// injected crash fault fires on this rank, `EVICTED_EXIT_CODE` when
+/// the membership verdict excludes it.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use splitbrain::comm::transport::TcpPeer;
+    use splitbrain::coordinator::procdriver::{self, ProcConfig, RunOutcome};
+    if !args.has("rank") {
+        bail!("--rank is required for the worker role");
+    }
+    let rank = args.usize_or("rank", 0)?;
+    let peers_str = args.str_or("peers", "");
+    if peers_str.is_empty() {
+        bail!("--peers host:port,host:port,... (one per rank, in rank order) is required");
+    }
+    let peers: Vec<TcpPeer> = peers_str
+        .split(',')
+        .enumerate()
+        .map(|(opid, addr)| TcpPeer { opid, addr: addr.trim().to_string() })
+        .collect();
+    let cfg = cluster_config(args)?;
+    if cfg.n_workers != peers.len() {
+        bail!("--workers {} does not match the {} peer addresses", cfg.n_workers, peers.len());
+    }
+    if rank >= peers.len() {
+        bail!("--rank {rank} out of range for {} peers", peers.len());
+    }
+    let out_dir = match args.str_or("out-dir", "") {
+        "" => None,
+        d => Some(std::path::PathBuf::from(d)),
+    };
+    let pc = ProcConfig {
+        cluster: cfg,
+        steps: args.usize_or("steps", DEFAULT_STEPS)?,
+        opid: rank,
+        peers,
+        artifacts: args.str_or("artifacts", "artifacts").to_string(),
+        out_dir,
+        connect_timeout_ms: args.u64_or("connect-timeout-ms", 30_000)?,
+        log_every: args.usize_or("log-every", 10)?,
+    };
+    match procdriver::run_worker(&pc)? {
+        RunOutcome::Completed => Ok(()),
+        RunOutcome::Crashed { .. } => std::process::exit(procdriver::CRASH_EXIT_CODE),
+        RunOutcome::Evicted => std::process::exit(procdriver::EVICTED_EXIT_CODE),
+    }
+}
+
+/// Local multi-process launcher: allocate loopback ports, spawn one
+/// `splitbrain worker` process per rank, wait for all of them, check
+/// exit codes (an injected-crash exit is expected only when the CLI
+/// scheduled a crash fault) and optionally verify end-of-run replica
+/// parity across the surviving processes.
+fn cmd_launch(args: &Args) -> Result<()> {
+    let n = args.usize_or("workers", 4)?;
+    if n == 0 {
+        bail!("--workers must be positive");
+    }
+    let steps = args.usize_or("steps", DEFAULT_STEPS)?;
+    let avg_period = args.usize_or("avg-period", 10)?;
+
+    // Reserve n distinct loopback ports (bind :0, record, release).
+    // Known, accepted race: the ports are free between the release here
+    // and each worker's own bind a few ms later, so another process on
+    // the host could in principle steal one (the worker then fails its
+    // bind and the launch aborts cleanly — rerun). Closing it for real
+    // needs inherited sockets, which is not worth the portability cost
+    // for a local launcher.
+    let mut addrs = Vec::with_capacity(n);
+    {
+        let listeners: Vec<std::net::TcpListener> = (0..n)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0"))
+            .collect::<std::io::Result<_>>()
+            .context("reserving loopback ports")?;
+        for l in &listeners {
+            addrs.push(l.local_addr()?.to_string());
+        }
+    }
+    let peers_arg = addrs.join(",");
+    let out_dir = match args.str_or("out-dir", "") {
+        "" => std::env::temp_dir().join(format!("splitbrain-launch-{}", std::process::id())),
+        d => std::path::PathBuf::from(d),
+    };
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating out dir {}", out_dir.display()))?;
+
+    let exe = std::env::current_exe().context("locating the splitbrain binary")?;
+    // Flags forwarded verbatim to every worker (same values ⇒ same
+    // fault plans, fingerprints and numerics in every process).
+    const FORWARD: &[&str] = &[
+        "mp", "steps", "lr", "momentum", "clip-norm", "scheme", "collectives", "avg-period",
+        "seed", "dataset-size", "recovery", "take-timeout-ms", "crash", "straggle",
+        "fault-seed", "fault-count", "artifacts", "log-every", "connect-timeout-ms",
+    ];
+    println!("launching {n} worker processes on 127.0.0.1 ({steps} steps)...");
+    let mut children = Vec::with_capacity(n);
+    for rank in 0..n {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--workers")
+            .arg(n.to_string())
+            .arg("--peers")
+            .arg(&peers_arg)
+            .arg("--out-dir")
+            .arg(&out_dir);
+        for &key in FORWARD {
+            if args.has(key) {
+                cmd.arg(format!("--{key}")).arg(args.str_or(key, ""));
+            }
+        }
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning worker {rank}"))?;
+        children.push((rank, child));
+    }
+
+    let crash_planned = args.has("crash") || args.u64_or("fault-seed", 0)? != 0;
+    let shrink_requested = args.str_or("recovery", "").starts_with("shrink")
+        || args.str_or("recovery", "") == "shrink-and-continue";
+    let mut failures = 0usize;
+    let mut crashes = 0usize;
+    for (rank, mut child) in children {
+        let status = child.wait().with_context(|| format!("waiting for worker {rank}"))?;
+        let code = status.code().unwrap_or(-1);
+        if code == 0 {
+            println!("worker {rank}: clean exit");
+        } else if code == splitbrain::coordinator::procdriver::CRASH_EXIT_CODE && crash_planned {
+            crashes += 1;
+            println!("worker {rank}: crashed by the injected fault (planned)");
+        } else if code == splitbrain::coordinator::procdriver::EVICTED_EXIT_CODE
+            && shrink_requested
+        {
+            // A live worker was presumed dead (e.g. a genuine stall past
+            // the take timeout) and the membership verdict excluded it —
+            // the designed outcome of shrink-and-continue, not a failure
+            // of the launch: the survivors completed the run.
+            crashes += 1;
+            println!("worker {rank}: evicted by the membership verdict (cluster shrank past it)");
+        } else {
+            failures += 1;
+            eprintln!("worker {rank}: unexpected exit code {code}");
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} worker process(es) failed");
+    }
+
+    if args.bool_or("verify-replicas", false)? {
+        if steps % avg_period != 0 {
+            println!(
+                "verify-replicas: skipped (final step {steps} is not an averaging boundary \
+                 with --avg-period {avg_period}, so replicas legitimately differ)"
+            );
+        } else {
+            verify_replicas(&out_dir, n)?;
+        }
+    }
+    println!(
+        "launch complete: {} worker(s) finished, {} planned crash(es); state in {}",
+        n - crashes,
+        crashes,
+        out_dir.display()
+    );
+    Ok(())
+}
+
+/// Cross-process parity check: every surviving worker's replicated
+/// parameters (the conv stack + FC2) must be bit-identical after a
+/// final averaging boundary.
+fn verify_replicas(dir: &std::path::Path, n: usize) -> Result<()> {
+    use splitbrain::train::checkpoint;
+    let mut reference: Option<(usize, Vec<(String, splitbrain::runtime::HostTensor)>)> = None;
+    let mut compared = 0usize;
+    for opid in 0..n {
+        if !dir.join(format!("opid{opid}.meta")).exists() {
+            continue; // crashed/evicted worker: no final state
+        }
+        let ckpt = checkpoint::load(dir.join(format!("opid{opid}.ckpt")))
+            .with_context(|| format!("loading opid {opid}'s state"))?;
+        match &reference {
+            None => reference = Some((opid, ckpt)),
+            Some((ref_opid, ref_ckpt)) => {
+                // Tensors 0..14 are the conv replica, 18/19 the
+                // replicated FC2 — identical across ranks by the BSP
+                // averaging contract. (FC0/FC1 are shards: rank-local.)
+                for idx in (0..14).chain([18usize, 19]) {
+                    let a = ref_ckpt[idx].1.as_f32();
+                    let b = ckpt[idx].1.as_f32();
+                    let same = a.len() == b.len()
+                        && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+                    if !same {
+                        bail!(
+                            "replica divergence: tensor {idx} differs between \
+                             opid {ref_opid} and opid {opid}"
+                        );
+                    }
+                }
+                compared += 1;
+            }
+        }
+    }
+    if compared == 0 {
+        bail!("verify-replicas: need at least two surviving worker states");
+    }
+    println!(
+        "replica parity: conv + FC2 bit-identical across {} surviving workers",
+        compared + 1
     );
     Ok(())
 }

@@ -7,6 +7,11 @@
 
 use anyhow::{bail, Result};
 
+/// Maximum tensor rank the wire encoding accepts (the model never
+/// exceeds 4; 8 leaves headroom while keeping hostile headers cheap to
+/// reject).
+pub const MAX_WIRE_NDIM: usize = 8;
+
 /// Element type of a [`HostTensor`]. The SplitBrain model is f32
 /// throughout; labels are i32.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +49,25 @@ pub struct HostTensor {
     pub shape: Vec<usize>,
     f32_data: Vec<f32>,
     i32_data: Vec<i32>,
+}
+
+impl PartialEq for HostTensor {
+    /// **Bit-exact** equality: same dtype, same shape, same payload bit
+    /// patterns. Two NaNs with identical bits compare equal — this is
+    /// the identity the parity suites assert, deliberately not IEEE
+    /// `==` semantics.
+    fn eq(&self, other: &HostTensor) -> bool {
+        self.dtype == other.dtype
+            && self.shape == other.shape
+            && match self.dtype {
+                DType::F32 => self
+                    .f32_data
+                    .iter()
+                    .zip(other.f32_data.iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                DType::I32 => self.i32_data == other.i32_data,
+            }
+    }
 }
 
 impl HostTensor {
@@ -84,6 +108,13 @@ impl HostTensor {
     pub fn as_f32(&self) -> &[f32] {
         debug_assert_eq!(self.dtype, DType::F32);
         &self.f32_data
+    }
+
+    /// Consume the tensor, returning its flat f32 payload without a
+    /// copy (the receive hot path of the TCP transport).
+    pub fn into_f32(self) -> Vec<f32> {
+        debug_assert_eq!(self.dtype, DType::F32);
+        self.f32_data
     }
 
     /// Mutably borrow the flat f32 payload.
@@ -173,6 +204,101 @@ impl HostTensor {
         }
     }
 
+    /// Serialize to the self-describing little-endian byte layout the
+    /// wire protocol frames tensors with:
+    ///
+    /// ```text
+    /// u8  dtype        (0 = f32, 1 = i32)
+    /// u8  ndim         (≤ MAX_WIRE_NDIM)
+    /// u32 dims[ndim]
+    /// u32 data[numel]  (f32 bit patterns / i32 two's complement)
+    /// ```
+    ///
+    /// The payload is the raw bit pattern — NaNs, infinities and
+    /// negative zeros survive a round-trip bit-exactly.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 + 4 * self.shape.len() + self.size_bytes());
+        out.push(match self.dtype {
+            DType::F32 => 0u8,
+            DType::I32 => 1u8,
+        });
+        debug_assert!(self.shape.len() <= MAX_WIRE_NDIM, "shape rank exceeds wire limit");
+        out.push(self.shape.len() as u8);
+        for &d in &self.shape {
+            debug_assert!(d <= u32::MAX as usize, "dim exceeds wire limit");
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match self.dtype {
+            DType::F32 => {
+                for &v in &self.f32_data {
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            DType::I32 => {
+                for &v in &self.i32_data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode the [`HostTensor::to_bytes`] layout. Every failure is a
+    /// typed error, never a panic, and no allocation happens before the
+    /// declared sizes are validated against the actual byte count — a
+    /// hostile length field cannot trigger an unbounded allocation.
+    pub fn from_bytes(buf: &[u8]) -> Result<HostTensor> {
+        if buf.len() < 2 {
+            bail!("tensor header truncated: {} bytes", buf.len());
+        }
+        let dtype = match buf[0] {
+            0 => DType::F32,
+            1 => DType::I32,
+            other => bail!("unknown wire dtype {other}"),
+        };
+        let ndim = buf[1] as usize;
+        if ndim > MAX_WIRE_NDIM {
+            bail!("implausible tensor rank {ndim} (max {MAX_WIRE_NDIM})");
+        }
+        let dims_end = 2 + 4 * ndim;
+        if buf.len() < dims_end {
+            bail!("tensor dims truncated: {} bytes for rank {ndim}", buf.len());
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut numel: usize = 1;
+        for i in 0..ndim {
+            let d = u32::from_le_bytes(buf[2 + 4 * i..6 + 4 * i].try_into().unwrap()) as usize;
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| anyhow::anyhow!("tensor shape overflows: {shape:?} x {d}"))?;
+            shape.push(d);
+        }
+        let data = &buf[dims_end..];
+        let need = numel
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("tensor byte size overflows: {shape:?}"))?;
+        if data.len() != need {
+            bail!(
+                "tensor payload length mismatch: shape {shape:?} needs {need} bytes, got {}",
+                data.len()
+            );
+        }
+        Ok(match dtype {
+            DType::F32 => HostTensor::f32(
+                shape,
+                data.chunks_exact(4)
+                    .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                    .collect(),
+            ),
+            DType::I32 => HostTensor::i32(
+                shape,
+                data.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+        })
+    }
+
     /// Max |a - b| — test helper.
     pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
         assert_eq!(self.shape, other.shape);
@@ -249,6 +375,53 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn byte_roundtrip_f32_and_i32() {
+        let t = t2x3();
+        let back = HostTensor::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(back.shape, t.shape);
+        assert_eq!(back.as_f32(), t.as_f32());
+        let i = HostTensor::i32(vec![4], vec![-1, 0, i32::MAX, i32::MIN]);
+        let back = HostTensor::from_bytes(&i.to_bytes()).unwrap();
+        assert_eq!(back.dtype, DType::I32);
+        assert_eq!(back.as_i32(), i.as_i32());
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_non_finite_bits() {
+        let t = HostTensor::f32(
+            vec![5],
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, f32::from_bits(0x7fc0_dead)],
+        );
+        let back = HostTensor::from_bytes(&t.to_bytes()).unwrap();
+        for (a, b) in t.as_f32().iter().zip(back.as_f32()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn byte_decode_rejects_malformed() {
+        assert!(HostTensor::from_bytes(&[]).is_err());
+        assert!(HostTensor::from_bytes(&[9, 0]).is_err(), "unknown dtype");
+        assert!(HostTensor::from_bytes(&[0, 200]).is_err(), "implausible rank");
+        // Shape promises more data than present: typed error, no alloc.
+        let mut b = vec![0u8, 1];
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(HostTensor::from_bytes(&b).is_err());
+        // Overflowing shape product.
+        let mut b = vec![0u8, 4];
+        for _ in 0..4 {
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        assert!(HostTensor::from_bytes(&b).is_err());
+        // Element count fits usize but the byte size overflows it:
+        // typed error, no debug-overflow panic (2^31 × 2^31 × 4 = 2^64).
+        let mut b = vec![0u8, 2];
+        b.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        b.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        assert!(HostTensor::from_bytes(&b).is_err());
     }
 
     #[test]

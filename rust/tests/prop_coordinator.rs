@@ -35,13 +35,13 @@ fn prop_modulo_covers_each_example_exactly_once() {
         let plan = ModuloPlan::new((0..k).collect(), b, w);
         let acts: Vec<HostTensor> =
             (0..k).map(|_| rand_tensor(&mut rng, vec![b, w])).collect();
-        let mut fabric = Fabric::new(k);
+        let fabric = Fabric::new(k);
 
         let size = b / k;
         let mut seen: HashSet<(usize, usize)> = HashSet::new(); // (member, row)
         for it in 0..k {
             let assembled = plan
-                .assemble(&mut fabric, &acts, it, Tag::new(1, it as u16, case as u16))
+                .assemble(&fabric, &acts, it, Tag::new(1, it, case))
                 .unwrap();
             // All members assemble the identical batch.
             for m in 1..k {
@@ -77,12 +77,12 @@ fn prop_modulo_bwd_conserves_gradient_mass() {
         let b = k * (1 + rng.below(3));
         let w = 1 + rng.below(5);
         let plan = ModuloPlan::new((0..k).collect(), b, w);
-        let mut fabric = Fabric::new(k);
+        let fabric = Fabric::new(k);
         let gbatches: Vec<HostTensor> =
             (0..k).map(|_| rand_tensor(&mut rng, vec![b, w])).collect();
         let mut g_acts: Vec<HostTensor> = (0..k).map(|_| HostTensor::zeros(vec![b, w])).collect();
         let it = rng.below(k);
-        plan.scatter_reduce(&mut fabric, &gbatches, &mut g_acts, it, Tag::new(2, 0, 0))
+        plan.scatter_reduce(&fabric, &gbatches, &mut g_acts, it, Tag::new(2, 0, 0))
             .unwrap();
 
         let mass_in: f64 = gbatches
@@ -116,8 +116,8 @@ fn prop_shard_gather_slice_roundtrip() {
         let plan = ShardPlan::new((0..k).collect(), part, ShardBwdMode::ReducePartials);
         let parts: Vec<HostTensor> =
             (0..k).map(|_| rand_tensor(&mut rng, vec![rows, part])).collect();
-        let mut fabric = Fabric::new(k);
-        let fulls = plan.gather_full(&mut fabric, &parts, Tag::new(3, 0, 0)).unwrap();
+        let fabric = Fabric::new(k);
+        let fulls = plan.gather_full(&fabric, &parts, Tag::new(3, 0, 0)).unwrap();
         for m in 0..k {
             assert_eq!(fulls[m].shape, vec![rows, part * k]);
             for j in 0..k {
@@ -140,8 +140,8 @@ fn prop_shard_reduce_is_columnwise_sum() {
         let plan = ShardPlan::new((0..k).collect(), part, ShardBwdMode::ReducePartials);
         let fulls: Vec<HostTensor> =
             (0..k).map(|_| rand_tensor(&mut rng, vec![rows, part * k])).collect();
-        let mut fabric = Fabric::new(k);
-        let outs = plan.backward(&mut fabric, &fulls, Tag::new(4, 0, 0)).unwrap();
+        let fabric = Fabric::new(k);
+        let outs = plan.backward(&fabric, &fulls, Tag::new(4, 0, 0)).unwrap();
         for (m, out) in outs.iter().enumerate() {
             for r in 0..rows {
                 for c in 0..part {
@@ -210,8 +210,8 @@ fn prop_ring_allreduce_equals_naive_mean() {
         let expect: Vec<f32> = (0..len)
             .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>() / n as f32)
             .collect();
-        let mut fabric = Fabric::new(n);
-        ring_allreduce_mean(&mut fabric, &(0..n).collect::<Vec<_>>(), &mut bufs, 1).unwrap();
+        let fabric = Fabric::new(n);
+        ring_allreduce_mean(&fabric, &(0..n).collect::<Vec<_>>(), &mut bufs, 1).unwrap();
         for b in &bufs {
             for (got, want) in b.iter().zip(expect.iter()) {
                 assert!((got - want).abs() < 1e-4, "case {case}");

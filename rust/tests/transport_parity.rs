@@ -1,0 +1,280 @@
+//! Transport parity: a 4-process TCP training run must be
+//! **bit-identical** — per-rank per-step losses and every parameter —
+//! to the in-proc threaded engine (which `engine_parity` already pins
+//! to the sequential reference) on the same seed, and a crash-at-step-k
+//! TCP run must recover via ShrinkAndContinue onto the same survivor
+//! set with the same bit-exact result as the in-proc fault-injection
+//! harness.
+//!
+//! The TCP side runs real `splitbrain worker` processes spawned by
+//! `splitbrain launch` over localhost sockets (the binary under test,
+//! via `CARGO_BIN_EXE_splitbrain`); each worker dumps its final
+//! parameters and per-step loss bit patterns, which this test compares
+//! against an in-proc cluster run with the identical configuration.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use splitbrain::comm::FaultPlan;
+use splitbrain::coordinator::{Cluster, ClusterConfig, RecoveryPolicy};
+use splitbrain::runtime::RuntimeClient;
+use splitbrain::train::checkpoint;
+
+const SEED: u64 = 123;
+const DATASET: usize = 256;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_splitbrain")
+}
+
+fn base_cfg(n: usize, mp: usize, avg_period: usize) -> ClusterConfig {
+    ClusterConfig {
+        n_workers: n,
+        mp,
+        lr: 0.02,
+        momentum: 0.9,
+        clip_norm: 1.0,
+        avg_period,
+        seed: SEED,
+        dataset_size: DATASET,
+        ..Default::default()
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("splitbrain-parity-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One worker process's dumped end state.
+struct WorkerState {
+    rank: usize,
+    workers: usize,
+    mp: usize,
+    recoveries: usize,
+    bytes: u64,
+    /// step → loss bit pattern
+    losses: HashMap<usize, u64>,
+    /// The 20 local parameter tensors (conv 14 + fc 6), flattened.
+    params: Vec<Vec<u32>>,
+}
+
+fn read_worker_state(dir: &Path, opid: usize) -> WorkerState {
+    let meta = std::fs::read_to_string(dir.join(format!("opid{opid}.meta")))
+        .unwrap_or_else(|e| panic!("opid {opid} meta missing: {e}"));
+    let mut rank = usize::MAX;
+    let mut workers = 0;
+    let mut mp = 0;
+    let mut recoveries = 0;
+    let mut bytes = 0u64;
+    let mut losses = HashMap::new();
+    for line in meta.lines() {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("rank") => rank = it.next().unwrap().parse().unwrap(),
+            Some("workers") => workers = it.next().unwrap().parse().unwrap(),
+            Some("mp") => mp = it.next().unwrap().parse().unwrap(),
+            Some("recoveries") => recoveries = it.next().unwrap().parse().unwrap(),
+            Some("bytes") => bytes = it.next().unwrap().parse().unwrap(),
+            Some("loss") => {
+                let step: usize = it.next().unwrap().parse().unwrap();
+                let bits = u64::from_str_radix(it.next().unwrap(), 16).unwrap();
+                losses.insert(step, bits);
+            }
+            _ => {}
+        }
+    }
+    let ckpt = checkpoint::load(dir.join(format!("opid{opid}.ckpt"))).unwrap();
+    let params = ckpt
+        .into_iter()
+        .map(|(_, t)| t.as_f32().iter().map(|v| v.to_bits()).collect())
+        .collect();
+    WorkerState { rank, workers, mp, recoveries, bytes, losses, params }
+}
+
+/// In-proc rank `r`'s parameters as bit patterns, in the same order the
+/// worker process dumps them (conv 14 then fc 6).
+fn inproc_params(c: &Cluster, r: usize) -> Vec<Vec<u32>> {
+    let w = c.worker(r);
+    w.conv_params
+        .iter()
+        .chain(w.fc_params.iter())
+        .map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// The headline acceptance check: 4 TCP processes (mp=2, two MP
+/// groups, ring collectives, two averaging boundaries) are
+/// bit-identical to the in-proc threaded engine over 10 steps.
+#[test]
+fn tcp_4proc_bit_identical_to_threaded_10_steps() {
+    let (n, mp, steps, avg) = (4usize, 2usize, 10usize, 5usize);
+
+    // --- in-proc reference (threaded engine, the default) ---
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut cluster = Cluster::new(&rt, base_cfg(n, mp, avg)).unwrap();
+    let mut ref_losses: Vec<Vec<u64>> = Vec::new(); // [step][rank]
+    let mut ref_total_bytes = 0u64;
+    for _ in 0..steps {
+        cluster.step().unwrap();
+        let rounds = cluster.cfg.scheme.rounds(cluster.cfg.mp.max(1)) as f64;
+        ref_losses.push(
+            (0..n).map(|r| (cluster.worker(r).loss_acc / rounds).to_bits()).collect(),
+        );
+        ref_total_bytes += cluster.last_fabric_bytes.1;
+    }
+
+    // --- 4-process TCP run over localhost ---
+    let dir = tmp_dir("smoke");
+    let status = Command::new(bin())
+        .args([
+            "launch",
+            "--workers", "4",
+            "--mp", "2",
+            "--steps", "10",
+            "--avg-period", "5",
+            "--lr", "0.02",
+            "--momentum", "0.9",
+            "--clip-norm", "1.0",
+            "--seed", "123",
+            "--dataset-size", "256",
+            "--take-timeout-ms", "120000",
+            "--log-every", "5",
+            "--verify-replicas",
+        ])
+        .arg("--out-dir")
+        .arg(&dir)
+        .status()
+        .expect("launching the 4-process run");
+    assert!(status.success(), "launch must exit cleanly, got {status:?}");
+
+    let mut tcp_total_bytes = 0u64;
+    for opid in 0..n {
+        let ws = read_worker_state(&dir, opid);
+        assert_eq!(ws.rank, opid, "no recovery: logical rank == opid");
+        assert_eq!(ws.workers, n);
+        assert_eq!(ws.mp, mp);
+        assert_eq!(ws.recoveries, 0);
+        tcp_total_bytes += ws.bytes;
+        // Per-step losses bit-identical to the threaded engine.
+        assert_eq!(ws.losses.len(), steps, "opid {opid} must record every step");
+        for (step, row) in ref_losses.iter().enumerate() {
+            assert_eq!(
+                ws.losses[&(step + 1)],
+                row[opid],
+                "opid {opid}: loss bits diverged at step {}",
+                step + 1
+            );
+        }
+        // Every parameter tensor bit-identical.
+        let ref_params = inproc_params(&cluster, opid);
+        assert_eq!(ws.params.len(), ref_params.len());
+        for (i, (a, b)) in ws.params.iter().zip(ref_params.iter()).enumerate() {
+            assert_eq!(a, b, "opid {opid}: parameter tensor {i} diverged over TCP");
+        }
+    }
+    // Exact byte-counter parity: the wire moved exactly what the
+    // in-proc fabric counted.
+    assert_eq!(
+        tcp_total_bytes, ref_total_bytes,
+        "cumulative data-plane bytes must match the in-proc fabric"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash-at-step-k parity: rank 1 of 4 crashes at step 3 (after the
+/// step-2 averaging checkpoint); both drivers must shrink onto
+/// survivors {0,2,3} (mp 2 → 1), restore the same checkpoint, and land
+/// on bit-identical survivor parameters and losses.
+#[test]
+fn tcp_crash_recovery_matches_inproc_shrink_and_continue() {
+    let (n, steps, avg, crash_rank, crash_step) = (4usize, 6usize, 2usize, 1usize, 3usize);
+
+    // --- in-proc reference (threaded engine + fault plan) ---
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut cfg = base_cfg(n, 2, avg);
+    cfg.recovery = RecoveryPolicy::ShrinkAndContinue;
+    cfg.faults = FaultPlan::new().crash(crash_rank, crash_step);
+    let mut cluster = Cluster::new(&rt, cfg).unwrap();
+    let mut ref_losses: Vec<Vec<u64>> = Vec::new(); // [step][current-rank]
+    for _ in 0..steps {
+        cluster.step().unwrap();
+        let rounds = cluster.cfg.scheme.rounds(cluster.cfg.mp.max(1)) as f64;
+        ref_losses.push(
+            (0..cluster.cfg.n_workers)
+                .map(|r| (cluster.worker(r).loss_acc / rounds).to_bits())
+                .collect(),
+        );
+    }
+    assert_eq!(cluster.recoveries, 1);
+    assert_eq!(cluster.lost_ranks, vec![crash_rank]);
+    assert_eq!(cluster.cfg.n_workers, 3);
+    assert_eq!(cluster.cfg.mp, 1, "2 does not divide 3 survivors");
+
+    // --- TCP run with the same injected crash ---
+    let dir = tmp_dir("crash");
+    let status = Command::new(bin())
+        .args([
+            "launch",
+            "--workers", "4",
+            "--mp", "2",
+            "--steps", "6",
+            "--avg-period", "2",
+            "--lr", "0.02",
+            "--momentum", "0.9",
+            "--clip-norm", "1.0",
+            "--seed", "123",
+            "--dataset-size", "256",
+            "--recovery", "shrink",
+            "--crash", "1@3",
+            "--take-timeout-ms", "120000",
+            "--log-every", "2",
+            "--verify-replicas",
+        ])
+        .arg("--out-dir")
+        .arg(&dir)
+        .status()
+        .expect("launching the crash-recovery run");
+    assert!(status.success(), "launch must treat the planned crash as expected: {status:?}");
+
+    // The crashed process left its marker and no final state.
+    let marker = std::fs::read_to_string(dir.join(format!("opid{crash_rank}.crashed"))).unwrap();
+    assert!(marker.contains(&format!("step {crash_step}")), "marker: {marker}");
+    assert!(!dir.join(format!("opid{crash_rank}.meta")).exists());
+
+    // Survivor opids 0, 2, 3 → new ranks 0, 1, 2 (the in-proc
+    // renumbering). opid → rank-at-step mapping for the loss trace.
+    let survivors = [0usize, 2, 3];
+    for (new_rank, &opid) in survivors.iter().enumerate() {
+        let ws = read_worker_state(&dir, opid);
+        assert_eq!(ws.rank, new_rank, "opid {opid} must renumber like the in-proc shrink");
+        assert_eq!(ws.workers, 3);
+        assert_eq!(ws.mp, 1);
+        assert_eq!(ws.recoveries, 1);
+        assert_eq!(ws.losses.len(), steps);
+        for step in 1..=steps {
+            // Before the crash step the process's rank was its opid;
+            // from the (retried) crash step on it is the survivor rank.
+            let idx = if step < crash_step { opid } else { new_rank };
+            assert_eq!(
+                ws.losses[&step],
+                ref_losses[step - 1][idx],
+                "opid {opid}: loss bits diverged at step {step}"
+            );
+        }
+        let ref_params = inproc_params(&cluster, new_rank);
+        assert_eq!(ws.params.len(), ref_params.len());
+        for (i, (a, b)) in ws.params.iter().zip(ref_params.iter()).enumerate() {
+            assert_eq!(
+                a, b,
+                "survivor opid {opid} (rank {new_rank}): parameter tensor {i} diverged"
+            );
+        }
+        assert!(ws.bytes > 0, "survivors moved real bytes");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
