@@ -1,0 +1,220 @@
+//! Bench: wall-clock training throughput — steps/sec for
+//! {sequential, threaded, TCP multi-process} × {BSP, overlap} at N=4 —
+//! the first real datapoint of the perf trajectory (`BENCH_throughput.json`).
+//!
+//! Every configuration trains the same (seed, shape) run on the native
+//! backend, so besides throughput this bench is an acceptance gate: the
+//! per-step loss bit patterns of every configuration must be identical
+//! (the overlapped executor's fixed-order-reduce invariant). The CI
+//! `bench-smoke` job runs it at reduced steps and fails on divergence.
+//!
+//! Flags: `--steps N` (default 12), `--workers N` (default 4),
+//! `--mp K` (default 2), `--out PATH` (default `BENCH_throughput.json`).
+//!
+//! The TCP rows run one `TcpTransport` per thread inside this process
+//! (the same rank driver `splitbrain worker` runs; `transport_parity`
+//! covers real processes) and include mesh bring-up in their wall time.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use splitbrain::comm::transport::TcpPeer;
+use splitbrain::coordinator::procdriver::{run_worker, ProcConfig, RunOutcome};
+use splitbrain::coordinator::{Cluster, ClusterConfig, ExecEngine};
+use splitbrain::runtime::RuntimeClient;
+use splitbrain::util::{Args, Table};
+
+const SEED: u64 = 123;
+
+fn cfg(n: usize, mp: usize, engine: ExecEngine, overlap: bool) -> ClusterConfig {
+    ClusterConfig {
+        n_workers: n,
+        mp,
+        lr: 0.02,
+        momentum: 0.9,
+        clip_norm: 1.0,
+        avg_period: 4,
+        seed: SEED,
+        dataset_size: 256,
+        engine,
+        overlap,
+        ..Default::default()
+    }
+}
+
+/// One measured configuration: wall seconds + per-step mean loss bits.
+struct RunResult {
+    name: &'static str,
+    wall_secs: f64,
+    /// Per-step cluster-mean loss bit patterns (the parity fingerprint).
+    loss_bits: Vec<u64>,
+}
+
+/// In-proc run (sequential or threaded engine).
+fn run_inproc(
+    rt: &RuntimeClient,
+    name: &'static str,
+    c: ClusterConfig,
+    steps: usize,
+) -> anyhow::Result<RunResult> {
+    let mut cluster = Cluster::new(rt, c)?;
+    let t = Instant::now();
+    let mut loss_bits = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let m = cluster.step()?;
+        loss_bits.push(m.loss.to_bits());
+    }
+    Ok(RunResult { name, wall_secs: t.elapsed().as_secs_f64(), loss_bits })
+}
+
+/// In-process TCP run: one rank driver per thread over loopback
+/// sockets. Loss bits are recovered from the per-rank meta dumps and
+/// averaged exactly like `StepMetrics::loss` (sum of per-rank losses /
+/// n), so they are comparable bit-for-bit with the in-proc engines.
+fn run_tcp(name: &'static str, c: ClusterConfig, steps: usize) -> anyhow::Result<RunResult> {
+    let n = c.n_workers;
+    // Reserve loopback ports (bind :0, record, release — the launcher's
+    // documented, accepted race).
+    let peers: Vec<TcpPeer> = {
+        let listeners: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind("127.0.0.1:0")).collect::<std::io::Result<_>>()?;
+        listeners
+            .iter()
+            .enumerate()
+            .map(|(opid, l)| {
+                Ok(TcpPeer { opid, addr: l.local_addr()?.to_string() })
+            })
+            .collect::<std::io::Result<_>>()?
+    };
+    let out_dir = std::env::temp_dir().join(format!(
+        "splitbrain-bench-{}-{name}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    std::fs::create_dir_all(&out_dir)?;
+
+    let t = Instant::now();
+    let outcomes: Vec<anyhow::Result<RunOutcome>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|opid| {
+                let pc = ProcConfig {
+                    cluster: c.clone(),
+                    steps,
+                    opid,
+                    peers: peers.clone(),
+                    artifacts: "artifacts".to_string(),
+                    out_dir: Some(out_dir.clone()),
+                    connect_timeout_ms: 30_000,
+                    log_every: 0,
+                };
+                s.spawn(move || run_worker(&pc))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("worker thread panicked")))
+            })
+            .collect()
+    });
+    let wall_secs = t.elapsed().as_secs_f64();
+    for (opid, o) in outcomes.into_iter().enumerate() {
+        match o? {
+            RunOutcome::Completed => {}
+            other => anyhow::bail!("tcp rank {opid} ended {other:?}, expected completion"),
+        }
+    }
+
+    // steps → sum of per-rank losses, rebuilt from the meta dumps.
+    let mut sums: HashMap<usize, f64> = HashMap::new();
+    for opid in 0..n {
+        let meta = std::fs::read_to_string(out_dir.join(format!("opid{opid}.meta")))?;
+        for line in meta.lines() {
+            let mut it = line.split_whitespace();
+            if it.next() == Some("loss") {
+                let step: usize = it.next().unwrap().parse()?;
+                let bits = u64::from_str_radix(it.next().unwrap(), 16)?;
+                *sums.entry(step).or_insert(0.0) += f64::from_bits(bits);
+            }
+        }
+    }
+    let loss_bits = (1..=steps)
+        .map(|s| (sums[&s] / n as f64).to_bits())
+        .collect();
+    let _ = std::fs::remove_dir_all(&out_dir);
+    Ok(RunResult { name, wall_secs, loss_bits })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 12)?;
+    let n = args.usize_or("workers", 4)?;
+    let mp = args.usize_or("mp", 2)?;
+    let out_path = PathBuf::from(args.str_or("out", "BENCH_throughput.json"));
+    let rt = RuntimeClient::load("artifacts")?;
+    let batch = rt.manifest.batch;
+
+    println!("=== throughput: N={n}, mp={mp}, B={batch}, {steps} steps per config ===\n");
+    let results = vec![
+        run_inproc(&rt, "sequential-bsp", cfg(n, mp, ExecEngine::Sequential, false), steps)?,
+        run_inproc(&rt, "threaded-bsp", cfg(n, mp, ExecEngine::Threaded, false), steps)?,
+        run_inproc(&rt, "threaded-overlap", cfg(n, mp, ExecEngine::Threaded, true), steps)?,
+        run_tcp("tcp-bsp", cfg(n, mp, ExecEngine::Threaded, false), steps)?,
+        run_tcp("tcp-overlap", cfg(n, mp, ExecEngine::Threaded, true), steps)?,
+    ];
+
+    // Acceptance: every configuration's per-step losses bit-identical.
+    let reference = &results[0];
+    let mut bit_identical = true;
+    for r in &results[1..] {
+        if r.loss_bits != reference.loss_bits {
+            bit_identical = false;
+            eprintln!("DIVERGENCE: {} loss bits differ from {}", r.name, reference.name);
+        }
+    }
+
+    let mut table = Table::new(vec!["config", "wall s", "steps/sec", "images/sec"]);
+    for r in &results {
+        let sps = steps as f64 / r.wall_secs;
+        table.row(vec![
+            r.name.to_string(),
+            format!("{:.2}", r.wall_secs),
+            format!("{:.3}", sps),
+            format!("{:.1}", sps * (n * batch) as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("numerics bit-identical across all configs: {bit_identical}");
+
+    // Emit the JSON trajectory point (hand-rolled: no serde offline).
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"throughput\",\n");
+    json.push_str(&format!(
+        "  \"workers\": {n},\n  \"mp\": {mp},\n  \"batch\": {batch},\n  \"steps\": {steps},\n"
+    ));
+    json.push_str(&format!("  \"bit_identical\": {bit_identical},\n"));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let sps = steps as f64 / r.wall_secs;
+        json.push_str(&format!(
+            "    {{\"config\": \"{}\", \"wall_secs\": {:.4}, \"steps_per_sec\": {:.4}, \"images_per_sec\": {:.2}}}{}\n",
+            r.name,
+            r.wall_secs,
+            sps,
+            sps * (n * batch) as f64,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {}", out_path.display());
+
+    if !bit_identical {
+        anyhow::bail!("overlap/BSP numerics diverged — the fixed-order-reduce invariant is broken");
+    }
+    println!("throughput bench OK");
+    Ok(())
+}

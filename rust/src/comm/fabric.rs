@@ -50,6 +50,20 @@
 //! Counters are updated atomically with the enqueue under the same
 //! lock, so per-step snapshots (`max_bytes_per_rank`, `total_bytes`)
 //! taken after the worker threads join are exact.
+//!
+//! ## Wakeups (no polling)
+//!
+//! Every wait on the message path is condvar-parked and woken by the
+//! event it waits for — [`Fabric::post`], [`Fabric::declare_dead`] and
+//! [`Fabric::abort_step`] all `notify_all` — so a cross-rank message
+//! costs a lock handoff, not a sleep quantum. The same discipline holds
+//! across the transport layer (the TCP backend's takes, barriers and
+//! connect path park on condvars/channels); the
+//! `blocking_take_wakes_promptly` test pins the wake latency well under
+//! the 20 ms polling floor the old connect loops imposed. This is what
+//! the overlapped executor leans on: eager posts land in the mailbox
+//! while the receiver computes, and its later take returns without
+//! parking at all.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
@@ -609,6 +623,35 @@ mod tests {
         f.post(0, 1, t, vec![7.0]);
         assert_eq!(h.join().unwrap(), vec![7.0]);
         assert!(f.drained());
+    }
+
+    #[test]
+    fn blocking_take_wakes_promptly() {
+        // A parked receiver must wake on the post's condvar notify, not
+        // on any polling interval: the post→return latency has to be
+        // far below the 20 ms floor a sleep-poll loop would impose. The
+        // real wake is microseconds, but a loaded CI runner can
+        // deschedule the receiver for tens of ms — so assert on the
+        // *minimum* over several attempts (a polling floor would push
+        // every attempt past it; scheduling noise only some).
+        let f = std::sync::Arc::new(Fabric::new(2));
+        let mut best = Duration::MAX;
+        for attempt in 0..10u16 {
+            let t = Tag::new(9, attempt as usize, 0);
+            let g = f.clone();
+            let h = std::thread::spawn(move || g.take_blocking(1, 0, t).unwrap());
+            // Let the receiver park first.
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            let posted = Instant::now();
+            f.post(0, 1, t, vec![4.0]);
+            let v = h.join().unwrap();
+            best = best.min(posted.elapsed());
+            assert_eq!(v, vec![4.0]);
+            if best < Duration::from_millis(15) {
+                return; // proven: no polling floor
+            }
+        }
+        panic!("best post→wake over 10 attempts was {best:?} — a polling floor crept back in");
     }
 
     #[test]

@@ -199,14 +199,23 @@ impl TcpTransport {
             }
         }
         let deadline = Instant::now() + connect_timeout;
+        // The listener stays in blocking mode: inbound peers queue in
+        // the OS backlog while we dial, and a dedicated acceptor thread
+        // below hands accepted streams over a channel — the main thread
+        // parks on the channel's condvar instead of sleep-polling a
+        // non-blocking accept (the seed's 20 ms loop put a fixed floor
+        // under every mesh bring-up).
         let listener = TcpListener::bind(&peers[my_opid].addr)
             .with_context(|| format!("binding {}", peers[my_opid].addr))?;
-        listener.set_nonblocking(true)?;
 
         let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
 
-        // Dial every lower opid (their listeners may not be up yet).
+        // Dial every lower opid (their listeners may not be up yet). On
+        // loopback a refused connection returns immediately, so retry
+        // with a parked sub-millisecond backoff rather than a fixed
+        // 20 ms sleep — bring-up is latency-bound, not polling-bound.
         for (opid, peer) in peers.iter().enumerate().take(my_opid) {
+            let mut backoff = Duration::from_micros(200);
             let stream = loop {
                 match TcpStream::connect(&peer.addr) {
                     Ok(s) => break s,
@@ -215,7 +224,8 @@ impl TcpTransport {
                             return Err(anyhow::Error::from(e))
                                 .with_context(|| format!("dialing opid {opid} at {}", peer.addr));
                         }
-                        std::thread::sleep(Duration::from_millis(20));
+                        std::thread::park_timeout(backoff);
+                        backoff = (backoff * 2).min(Duration::from_millis(5));
                     }
                 }
             };
@@ -223,26 +233,88 @@ impl TcpTransport {
             streams[opid] = Some(stream);
         }
 
-        // Accept every higher opid.
-        let mut pending = n - 1 - my_opid;
-        while pending > 0 {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    stream.set_nonblocking(false)?;
-                    let opid = handshake_accept(&stream, my_opid, n, fingerprint)?;
-                    if opid <= my_opid || opid >= n || streams[opid].is_some() {
-                        bail!("handshake from unexpected opid {opid}");
+        // Accept every higher opid via the acceptor thread + channel.
+        let pending_total = n - 1 - my_opid;
+        if pending_total > 0 {
+            let (tx, rx) = std::sync::mpsc::channel::<std::io::Result<TcpStream>>();
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let stop_in = Arc::clone(&stop);
+            let acceptor = std::thread::Builder::new()
+                .name("sb-accept".into())
+                .spawn(move || {
+                    while !stop_in.load(std::sync::atomic::Ordering::Acquire) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if tx.send(Ok(stream)).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                // Forward the root cause before exiting
+                                // so bring-up failures stay diagnosable.
+                                let _ = tx.send(Err(e));
+                                return;
+                            }
+                        }
                     }
-                    streams[opid] = Some(stream);
-                    pending -= 1;
+                })
+                .context("spawning acceptor thread")?;
+            let mut pending = pending_total;
+            let mut accept_err: Option<anyhow::Error> = None;
+            while pending > 0 {
+                let now = Instant::now();
+                let remain = deadline.saturating_duration_since(now);
+                if remain.is_zero() {
+                    accept_err = Some(anyhow::anyhow!(
+                        "timed out waiting for {pending} inbound peer connection(s)"
+                    ));
+                    break;
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
-                        bail!("timed out waiting for {pending} inbound peer connection(s)");
+                match rx.recv_timeout(remain) {
+                    Ok(Ok(stream)) => match handshake_accept(&stream, my_opid, n, fingerprint) {
+                        Ok(opid) if opid > my_opid && opid < n && streams[opid].is_none() => {
+                            streams[opid] = Some(stream);
+                            pending -= 1;
+                        }
+                        Ok(opid) => {
+                            accept_err =
+                                Some(anyhow::anyhow!("handshake from unexpected opid {opid}"));
+                            break;
+                        }
+                        Err(e) => {
+                            accept_err = Some(e);
+                            break;
+                        }
+                    },
+                    Ok(Err(e)) => {
+                        accept_err =
+                            Some(anyhow::Error::from(e).context("accepting peer"));
+                        break;
                     }
-                    std::thread::sleep(Duration::from_millis(20));
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        accept_err = Some(anyhow::anyhow!(
+                            "timed out waiting for {pending} inbound peer connection(s)"
+                        ));
+                        break;
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        accept_err = Some(anyhow::anyhow!("acceptor thread exited early"));
+                        break;
+                    }
                 }
-                Err(e) => return Err(anyhow::Error::from(e).context("accepting peer")),
+            }
+            // Retire the acceptor on every path (success and error): set
+            // the stop flag, then poke our own listener with a loopback
+            // connection so a blocking accept returns and re-checks it.
+            stop.store(true, std::sync::atomic::Ordering::Release);
+            let woke = TcpStream::connect(&peers[my_opid].addr).is_ok();
+            drop(rx);
+            if woke {
+                let _ = acceptor.join();
+            } // else: the acceptor stays parked in accept(); process
+              // teardown reclaims it (never observed on loopback).
+            if let Some(e) = accept_err {
+                return Err(e);
             }
         }
 

@@ -74,11 +74,57 @@ pub fn average_shards(
     Ok(fabric.max_bytes_per_rank() - before)
 }
 
-/// Per-rank averaging participation (threaded engine): rank `rank`
-/// contributes its replicated parameters to the all-N allreduce, then
-/// its FC shards to the same-offset peer allreduce. Mutates the worker
-/// in place; every rank of the cluster must call this in the same BSP
-/// superstep.
+/// Per-rank replicated-parameter averaging (the step program's
+/// `AverageReplicated` op): rank `rank` contributes its conv + FC2
+/// replica to the all-N allreduce-mean. No-op for a single worker.
+pub fn average_replicated_rank(
+    fabric: &dyn Transport,
+    worker: &mut Worker,
+    rank: usize,
+    n_workers: usize,
+    algo: CollectiveAlgo,
+) -> Result<()> {
+    if n_workers <= 1 {
+        return Ok(());
+    }
+    let group: Vec<usize> = (0..n_workers).collect();
+    let mut buf = worker.replicated_flat();
+    allreduce_mean_rank(algo, fabric, &group, rank, &mut buf, TAG_REPLICATED)?;
+    worker.set_replicated_flat(&buf);
+    Ok(())
+}
+
+/// Per-rank shard-parameter averaging (the step program's
+/// `AverageShards` op): rank `rank` contributes its FC0/FC1 shards to
+/// the allreduce-mean across its D same-offset peers. No-op when there
+/// is a single group or no model parallelism.
+pub fn average_shards_rank(
+    fabric: &dyn Transport,
+    worker: &mut Worker,
+    rank: usize,
+    topo: &GmpTopology,
+    algo: CollectiveAlgo,
+) -> Result<()> {
+    if topo.mp <= 1 || topo.n_groups() <= 1 {
+        return Ok(());
+    }
+    let offset = topo.offset(rank);
+    let peers = topo.shard_peers(offset);
+    let gi = topo.gid(rank);
+    debug_assert_eq!(peers[gi], rank);
+    let mut buf = worker.shards_flat();
+    allreduce_mean_rank(algo, fabric, &peers, gi, &mut buf, TAG_SHARD_BASE + offset as u16)?;
+    worker.set_shards_flat(&buf);
+    Ok(())
+}
+
+/// Per-rank averaging participation: rank `rank` contributes its
+/// replicated parameters to the all-N allreduce, then its FC shards to
+/// the same-offset peer allreduce — the order the step program's
+/// `AverageReplicated` → `AverageShards` ops run in. Every rank of the
+/// cluster must call this in the same BSP superstep. Kept as the
+/// embedder-facing combined form; the executor drives the two halves
+/// as separate ops.
 pub fn average_rank(
     fabric: &dyn Transport,
     worker: &mut Worker,
@@ -87,22 +133,8 @@ pub fn average_rank(
     topo: &GmpTopology,
     algo: CollectiveAlgo,
 ) -> Result<()> {
-    if n_workers > 1 {
-        let group: Vec<usize> = (0..n_workers).collect();
-        let mut buf = worker.replicated_flat();
-        allreduce_mean_rank(algo, fabric, &group, rank, &mut buf, TAG_REPLICATED)?;
-        worker.set_replicated_flat(&buf);
-    }
-    if topo.mp > 1 && topo.n_groups() > 1 {
-        let offset = topo.offset(rank);
-        let peers = topo.shard_peers(offset);
-        let gi = topo.gid(rank);
-        debug_assert_eq!(peers[gi], rank);
-        let mut buf = worker.shards_flat();
-        allreduce_mean_rank(algo, fabric, &peers, gi, &mut buf, TAG_SHARD_BASE + offset as u16)?;
-        worker.set_shards_flat(&buf);
-    }
-    Ok(())
+    average_replicated_rank(fabric, worker, rank, n_workers, algo)?;
+    average_shards_rank(fabric, worker, rank, topo, algo)
 }
 
 #[cfg(test)]

@@ -17,11 +17,15 @@
 //!
 //! ## Engines
 //!
-//! [`ExecEngine`] selects how a step executes: `Threaded` (default)
-//! runs every worker's compute + exchanges on its own scoped thread
-//! over the thread-safe fabric; `Sequential` is the seed's
-//! coordinator-interleaved reference. The two are bit-identical
-//! (`engine_parity` test); only host wall-clock differs. Caveat for
+//! Both engines execute the **same compiled step program**
+//! ([`super::program`]): [`ExecEngine::Threaded`] (default) runs every
+//! worker's whole program on its own scoped thread over the
+//! thread-safe fabric, with overlapped execution
+//! (`ClusterConfig::overlap`, default on) hoisting the program's post
+//! halves so exchange overlaps compute; `Sequential` drives the BSP
+//! program op-major on the coordinator thread — the strict-BSP
+//! reference. The engines are bit-identical (`engine_parity`,
+//! `overlap_parity` tests); only host wall-clock differs. Caveat for
 //! *measured* compute: the threaded engine oversubscribes this host's
 //! cores when N exceeds them, so per-worker `compute_secs` picks up
 //! contention — the numeric-fidelity benches therefore measure on the
@@ -49,27 +53,23 @@
 //! a fixed (seed, plan) pair replays bit-identically, recovery
 //! included. See `docs/ARCHITECTURE.md` §Failure semantics & recovery.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::comm::collective::CollectiveAlgo;
-use crate::comm::fabric::{Fabric, Tag, TAKE_TIMEOUT_SECS};
-use crate::comm::fault::{FaultPlan, WorkerCrashed};
+use crate::comm::fabric::{Fabric, TAKE_TIMEOUT_SECS};
+use crate::comm::fault::FaultPlan;
 use crate::comm::NetModel;
-use crate::data::{BatchIter, Dataset};
+use crate::data::{Batch, BatchIter, Dataset};
 use crate::model::{partition_network, PartitionConfig, TransformedNet, vgg11};
 use crate::runtime::{HostTensor, RuntimeClient};
 use crate::train::{MemoryReport, StepMetrics, TrainReport};
 use crate::util::Timer;
 
-use super::averaging::{average_replicated, average_shards};
-use super::engine::{full_step_worker, run_threaded_step, ExecEngine, StepCtx};
+use super::engine::{run_threaded_step, ExecEngine, StepCtx};
 use super::group::GmpTopology;
-use super::modulo::ModuloPlan;
+use super::program::{ExecCtx, StepProgram};
 use super::schedule::StepSchedule;
-use super::scheme::{
-    assemble_bk, assemble_scheme_b, scatter_reduce_bk, scatter_reduce_scheme_b, McastScheme,
-};
-use super::shard::{ShardBwdMode, ShardPlan};
+use super::scheme::McastScheme;
 use super::worker::{init_full_params, Worker};
 
 /// What the cluster does when a peer is lost mid-run (crash, or a
@@ -156,6 +156,15 @@ pub struct ClusterConfig {
     pub take_timeout_ms: u64,
     /// Deterministic fault-injection scenario (empty = no faults).
     pub faults: FaultPlan,
+    /// Overlapped execution (default on): the step program's post
+    /// halves are hoisted so gradient/activation exchange overlaps
+    /// backward/forward compute, and the input batch is double-buffered
+    /// (prefetched concurrently with worker compute). Numerics are
+    /// **bit-identical** either way
+    /// (every reduce consumes in fixed rank order — arrival order
+    /// affects wall-clock only); the sequential reference engine always
+    /// runs strict BSP regardless of this flag.
+    pub overlap: bool,
 }
 
 impl Default for ClusterConfig {
@@ -177,6 +186,7 @@ impl Default for ClusterConfig {
             recovery: RecoveryPolicy::FailFast,
             take_timeout_ms: TAKE_TIMEOUT_SECS * 1000,
             faults: FaultPlan::new(),
+            overlap: true,
         }
     }
 }
@@ -190,6 +200,10 @@ pub struct Cluster<'rt> {
     pub topo: GmpTopology,
     /// Compiled per-step schedule (compute inventory + comm volumes).
     pub schedule: StepSchedule,
+    /// The compiled per-rank step program both engines execute (the
+    /// threaded engine runs the overlapped variant when
+    /// `cfg.overlap`; the sequential engine always the BSP one).
+    pub program: StepProgram,
     /// The Fig. 3 transformed per-worker network.
     pub transformed: TransformedNet,
     workers: Vec<Worker>,
@@ -197,9 +211,16 @@ pub struct Cluster<'rt> {
     fabric: Fabric,
     step_count: usize,
     batch: usize,
+    /// Batches prefetched by the coordinator thread while the worker
+    /// threads computed the previous step (overlap's double
+    /// buffering); `None` falls back to a synchronous fetch at step
+    /// start. The final step of a run prefetches one batch set that is
+    /// never consumed — the cluster cannot know a step is the last;
+    /// the cost is one cheap synthetic batch per rank.
+    prefetched: Option<Vec<Batch>>,
     /// The dataset, kept so elastic recovery can rebuild the survivor
     /// iterators.
-    data: std::rc::Rc<dyn Dataset>,
+    data: std::sync::Arc<dyn Dataset>,
     /// Latest in-memory global checkpoint (named tensors, global-model
     /// coordinates) and the step it was taken at. Refreshed at every
     /// averaging boundary, when replicas provably agree.
@@ -260,9 +281,14 @@ impl<'rt> Cluster<'rt> {
     pub fn with_dataset(
         rt: &'rt RuntimeClient,
         cfg: ClusterConfig,
-        data: std::rc::Rc<dyn Dataset>,
+        data: std::sync::Arc<dyn Dataset>,
     ) -> Result<Cluster<'rt>> {
         let (topo, transformed, schedule) = plan_topology(rt, &cfg, cfg.n_workers, cfg.mp)?;
+        let program = schedule.compile_program(
+            cfg.scheme,
+            cfg.segmented_mp1,
+            cfg.overlap && cfg.engine == ExecEngine::Threaded,
+        );
         let batch = rt.manifest.batch;
 
         let (conv, fc) = init_full_params(cfg.seed);
@@ -291,12 +317,14 @@ impl<'rt> Cluster<'rt> {
             cfg,
             topo,
             schedule,
+            program,
             transformed,
             workers,
             iters,
             fabric,
             step_count: 0,
             batch,
+            prefetched: None,
             data,
             ckpt: Vec::new(),
             ckpt_step: 0,
@@ -369,7 +397,10 @@ impl<'rt> Cluster<'rt> {
         }
     }
 
-    /// One step attempt on the current incarnation (no recovery).
+    /// One step attempt on the current incarnation (no recovery). Both
+    /// engines execute the same compiled step program — the sequential
+    /// engine drives it op-major on this thread (`program::run_lockstep`),
+    /// the threaded engine runs it whole on one thread per worker.
     fn try_step(&mut self) -> Result<StepMetrics> {
         let step_no = self.step_count + 1;
         self.fabric.begin_step(step_no);
@@ -377,56 +408,39 @@ impl<'rt> Cluster<'rt> {
             w.begin_step();
             w.compute_secs = 0.0;
         }
-        let batches: Vec<_> = self.iters.iter_mut().map(|it| it.next_batch()).collect();
+        // Double buffering: consume the batches the worker threads
+        // prefetched during the previous step, falling back to a
+        // synchronous fetch (first step, sequential engine, overlap
+        // off). Either path consumes exactly one batch per rank per
+        // step, so the example sequence is mode-invariant.
+        let batches: Vec<Batch> = match self.prefetched.take() {
+            Some(b) => b,
+            None => self.iters.iter_mut().map(|it| it.next_batch()).collect(),
+        };
         // Averaging every avg_period steps (counting from step 1).
         let averaging_due =
             self.cfg.n_workers > 1 && (self.step_count + 1) % self.cfg.avg_period == 0;
 
+        let ctx = ExecCtx {
+            rt: self.rt,
+            transport: &self.fabric,
+            topo: &self.topo,
+            schedule: &self.schedule,
+            scheme: self.cfg.scheme,
+            algo: self.cfg.collectives,
+            batch: self.batch,
+            averaging: averaging_due,
+        };
         match self.cfg.engine {
             ExecEngine::Sequential => {
-                // Injected crashes fire before the coordinator-driven
-                // phases (the threaded engine polls per worker thread).
-                let mut crashed = None;
-                for rank in 0..self.cfg.n_workers {
-                    if self.fabric.poll_crash(rank) && crashed.is_none() {
-                        crashed = Some(rank);
-                    }
-                }
-                if let Some(rank) = crashed {
-                    return Err(WorkerCrashed { rank, step: step_no }.into());
-                }
-                if self.cfg.mp == 1 && !self.cfg.segmented_mp1 {
-                    self.step_pure_dp(&batches)?;
-                } else {
-                    for gid in 0..self.topo.n_groups() {
-                        self.step_group(gid, &batches)?;
-                    }
-                }
-                if averaging_due {
-                    average_replicated(&self.fabric, &mut self.workers, self.cfg.collectives)?;
-                    average_shards(
-                        &self.fabric,
-                        &mut self.workers,
-                        &self.topo,
-                        self.cfg.collectives,
-                    )?;
-                }
+                super::program::run_lockstep(&self.program, &mut self.workers, &batches, &ctx)?;
             }
             ExecEngine::Threaded => {
                 let barrier = std::sync::Barrier::new(self.cfg.n_workers);
-                let ctx = StepCtx {
-                    rt: self.rt,
-                    fabric: &self.fabric,
-                    topo: &self.topo,
-                    schedule: &self.schedule,
-                    scheme: self.cfg.scheme,
-                    algo: self.cfg.collectives,
-                    segmented_mp1: self.cfg.segmented_mp1,
-                    batch: self.batch,
-                    averaging: averaging_due,
-                    barrier: &barrier,
-                };
-                run_threaded_step(&mut self.workers, &batches, &ctx)?;
+                let sctx = StepCtx { exec: ctx, program: &self.program, barrier: &barrier };
+                let iters = if self.program.overlap { Some(&mut self.iters[..]) } else { None };
+                self.prefetched =
+                    run_threaded_step(&mut self.workers, &batches, iters, &sctx)?;
             }
         }
         self.step_count += 1;
@@ -502,7 +516,14 @@ impl<'rt> Cluster<'rt> {
         self.cfg.mp = mp;
         self.topo = topo;
         self.transformed = transformed;
+        self.program = schedule.compile_program(
+            self.cfg.scheme,
+            self.cfg.segmented_mp1,
+            self.cfg.overlap && self.cfg.engine == ExecEngine::Threaded,
+        );
         self.schedule = schedule;
+        // Prefetched batches belong to the lost incarnation's iterators.
+        self.prefetched = None;
 
         // Restore survivor workers from the latest global checkpoint
         // (re-sharded for the new mp; optimizer momentum resets, as on
@@ -547,218 +568,6 @@ impl<'rt> Cluster<'rt> {
             .with_timeout_ms(self.cfg.take_timeout_ms)
             .with_faults(self.cfg.faults.clone())
             .with_fired(fired);
-        Ok(())
-    }
-
-    /// mp=1 fast path: the fused full_step artifact per worker (the
-    /// same per-worker body the threaded engine runs — see
-    /// `engine::full_step_worker`).
-    fn step_pure_dp(&mut self, batches: &[crate::data::Batch]) -> Result<()> {
-        for (w, batch) in self.workers.iter_mut().zip(batches.iter()) {
-            full_step_worker(self.rt, w, batch).context("full_step")?;
-        }
-        Ok(())
-    }
-
-    /// The hybrid path for one MP group: Fig. 3's transformed network,
-    /// phase by phase.
-    fn step_group(&mut self, gid: usize, batches: &[crate::data::Batch]) -> Result<()> {
-        let members = self.topo.members(gid);
-        let k = members.len();
-        let b = self.batch;
-        let boundary = self.schedule.boundary_width;
-        let s0 = self.schedule.shard_widths[0];
-        let s1 = self.schedule.shard_widths[1];
-
-        let modulo = ModuloPlan::new(members.clone(), b, boundary);
-        let modulo_lab = ModuloPlan::new(members.clone(), b, 1);
-        let shard0 = ShardPlan::new(members.clone(), s0, ShardBwdMode::ReducePartials)
-            .with_algo(self.cfg.collectives);
-        let shard1 = ShardPlan::new(members.clone(), s1, ShardBwdMode::SliceReplicated)
-            .with_algo(self.cfg.collectives);
-
-        // --- conv fwd per member (timed per worker) ---
-        let mut acts = Vec::with_capacity(k);
-        let mut labels_f32 = Vec::with_capacity(k);
-        for (gi, &r) in members.iter().enumerate() {
-            let _ = gi;
-            let w = &mut self.workers[r];
-            let t = Timer::start();
-            let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
-            inputs.push(batches[r].images.clone());
-            let out = self.rt.run("conv_fwd", &inputs).context("conv_fwd")?;
-            w.compute_secs += t.elapsed_secs();
-            acts.push(out.into_iter().next().unwrap());
-            labels_f32.push(HostTensor::f32(
-                vec![b, 1],
-                batches[r].labels.as_i32().iter().map(|&v| v as f32).collect(),
-            ));
-        }
-
-        // --- modulo rounds through the FC stack (scheme-dependent:
-        // B/K and B run K rounds of B examples; BK one round of B*K) ---
-        // k=1 groups have no exchange at all; any scheme degrades to
-        // the local B/K path (which is exactly the local pipeline).
-        let scheme = if k > 1 { self.cfg.scheme } else { McastScheme::BoverK };
-        let rounds = scheme.rounds(k);
-        let fcb = scheme.fc_batch(b, k);
-        let suffix = scheme.artifact_suffix();
-        let head_name = match scheme {
-            McastScheme::BK if k > 1 => format!("head_step_bk{k}"),
-            _ => "head_step".to_string(),
-        };
-        for it in 0..rounds {
-            let tag = |phase: u16| Tag::new(phase, it, gid);
-
-            // Modulo fprop: assemble activations + labels.
-            let (assembled, labs) = match scheme {
-                McastScheme::BoverK => (
-                    modulo.assemble(&self.fabric, &acts, it, tag(1))?,
-                    modulo_lab.assemble(&self.fabric, &labels_f32, it, tag(2))?,
-                ),
-                McastScheme::B => (
-                    assemble_scheme_b(&modulo, &self.fabric, &acts, it, tag(1))?,
-                    assemble_scheme_b(&modulo_lab, &self.fabric, &labels_f32, it, tag(2))?,
-                ),
-                McastScheme::BK => (
-                    assemble_bk(&modulo, &self.fabric, &acts, tag(1))?,
-                    assemble_bk(&modulo_lab, &self.fabric, &labels_f32, tag(2))?,
-                ),
-            };
-
-            // FC0 shard fwd.
-            let mut h0l = Vec::with_capacity(k);
-            for (gi, &r) in members.iter().enumerate() {
-                let w = &mut self.workers[r];
-                let t = Timer::start();
-                let out = self.rt.run(
-                    &format!("fc0_fwd_k{k}{suffix}"),
-                    &[w.fc_params[0].clone(), w.fc_params[1].clone(), assembled[gi].clone()],
-                )?;
-                w.compute_secs += t.elapsed_secs();
-                h0l.push(out.into_iter().next().unwrap());
-            }
-            // Shard gather to full width.
-            let h0 = shard0.gather_full(&self.fabric, &h0l, tag(3))?;
-
-            // FC1 shard fwd.
-            let mut h1l = Vec::with_capacity(k);
-            for (gi, &r) in members.iter().enumerate() {
-                let w = &mut self.workers[r];
-                let t = Timer::start();
-                let out = self.rt.run(
-                    &format!("fc1_fwd_k{k}{suffix}"),
-                    &[w.fc_params[2].clone(), w.fc_params[3].clone(), h0[gi].clone()],
-                )?;
-                w.compute_secs += t.elapsed_secs();
-                h1l.push(out.into_iter().next().unwrap());
-            }
-            let h1 = shard1.gather_full(&self.fabric, &h1l, tag(4))?;
-
-            // Replicated head: loss + gw2 + gb2 + gh1 per member.
-            let mut gh1_full = Vec::with_capacity(k);
-            for (gi, &r) in members.iter().enumerate() {
-                let w = &mut self.workers[r];
-                let labels_i32 = HostTensor::i32(
-                    vec![fcb],
-                    labs[gi].as_f32().iter().map(|&v| v as i32).collect(),
-                );
-                let t = Timer::start();
-                let out = self.rt.run(
-                    &head_name,
-                    &[w.fc_params[4].clone(), w.fc_params[5].clone(), h1[gi].clone(), labels_i32],
-                )?;
-                w.compute_secs += t.elapsed_secs();
-                w.loss_acc += out[0].scalar() as f64;
-                w.accumulate_fc_grads(&[(4, out[1].clone()), (5, out[2].clone())]);
-                gh1_full.push(out[3].clone());
-            }
-
-            // Shard1 bwd: replicated above -> local slice, no wire.
-            let g_h1l = shard1.backward(&self.fabric, &gh1_full, tag(5))?;
-
-            // FC1 shard bwd.
-            let mut gh0_partials = Vec::with_capacity(k);
-            for (gi, &r) in members.iter().enumerate() {
-                let w = &mut self.workers[r];
-                let t = Timer::start();
-                let out = self.rt.run(
-                    &format!("fc1_bwd_k{k}{suffix}"),
-                    &[
-                        w.fc_params[2].clone(),
-                        w.fc_params[3].clone(),
-                        h0[gi].clone(),
-                        g_h1l[gi].clone(),
-                    ],
-                )?;
-                w.compute_secs += t.elapsed_secs();
-                w.accumulate_fc_grads(&[(2, out[0].clone()), (3, out[1].clone())]);
-                gh0_partials.push(out[2].clone());
-            }
-
-            // Shard0 bwd: partitioned above -> reduce partials.
-            let g_h0l = shard0.backward(&self.fabric, &gh0_partials, tag(6))?;
-
-            // FC0 shard bwd.
-            let mut gbatch_partials = Vec::with_capacity(k);
-            for (gi, &r) in members.iter().enumerate() {
-                let w = &mut self.workers[r];
-                let t = Timer::start();
-                let out = self.rt.run(
-                    &format!("fc0_bwd_k{k}{suffix}"),
-                    &[
-                        w.fc_params[0].clone(),
-                        w.fc_params[1].clone(),
-                        assembled[gi].clone(),
-                        g_h0l[gi].clone(),
-                    ],
-                )?;
-                w.compute_secs += t.elapsed_secs();
-                w.accumulate_fc_grads(&[(0, out[0].clone()), (1, out[1].clone())]);
-                gbatch_partials.push(out[2].clone());
-            }
-
-            // Modulo bprop: route + reduce into each member's g_act.
-            let mut g_acts: Vec<HostTensor> = members
-                .iter()
-                .map(|&r| self.workers[r].g_act.clone())
-                .collect();
-            match scheme {
-                McastScheme::BoverK => modulo.scatter_reduce(
-                    &self.fabric, &gbatch_partials, &mut g_acts, it, tag(7),
-                )?,
-                McastScheme::B => scatter_reduce_scheme_b(
-                    &modulo, &self.fabric, &gbatch_partials, &mut g_acts, it, tag(7),
-                )?,
-                McastScheme::BK => {
-                    scatter_reduce_bk(
-                        &modulo, &self.fabric, &gbatch_partials, &mut g_acts, tag(7),
-                    )?;
-                    // LR consistency: BK's head averaged over B*K
-                    // examples, so the routed gradient is 1/K of the
-                    // per-round schemes' — rescale (scheme.rs docs).
-                    for g in &mut g_acts {
-                        g.scale(k as f32);
-                    }
-                }
-            }
-            for (gi, &r) in members.iter().enumerate() {
-                self.workers[r].g_act = g_acts[gi].clone();
-            }
-        }
-
-        // --- conv bwd + optimizer updates per member ---
-        for &r in &members {
-            let w = &mut self.workers[r];
-            let t = Timer::start();
-            let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
-            inputs.push(batches[r].images.clone());
-            inputs.push(w.g_act.clone());
-            let grads = self.rt.run("conv_bwd", &inputs).context("conv_bwd")?;
-            w.update_conv(&grads);
-            w.update_fc(rounds);
-            w.compute_secs += t.elapsed_secs();
-        }
         Ok(())
     }
 

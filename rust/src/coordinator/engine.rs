@@ -3,73 +3,61 @@
 //! The seed drove every worker sequentially on one OS thread: the
 //! coordinator interleaved each BSP phase "god-view" (post everything,
 //! then take everything), so throughput could not scale with workers.
-//! This engine runs **each worker's whole step on its own scoped
-//! thread** — segment compute, modulo/shard exchanges and averaging
-//! included — with rendezvous provided by the thread-safe
-//! [`Fabric`](crate::comm::Fabric)'s blocking takes and one BSP barrier
-//! at the superstep boundary (MP phase → averaging phase), driven by
-//! the coordinator schedule.
+//! This engine runs **each worker's whole step program on its own
+//! scoped thread** — segment compute, modulo/shard exchanges and
+//! averaging included — with rendezvous provided by the thread-safe
+//! transport's blocking takes and one BSP barrier at the superstep
+//! boundary (MP phase → averaging phase).
+//!
+//! Since the step-program refactor the per-rank step itself lives in
+//! [`super::program`]: this module only owns the *drive* — one scoped
+//! thread per worker, the barrier, and the engine's failure semantics.
+//! The sequential engine drives the very same program op-major on the
+//! coordinator thread (`program::run_lockstep`), which is why the two
+//! cannot drift.
 //!
 //! ## Bit-identical numerics
 //!
-//! The per-rank programs here perform the *same arithmetic in the same
-//! order* as the sequential engine's group-view loops (own contribution
-//! first, then peers in group order; identical collective round
-//! structure), and the segment runtime is deterministic — so threaded
-//! and sequential training runs agree bit-for-bit. The
-//! `engine_parity` integration test asserts exactly this over ≥10
-//! steps.
+//! Every engine executes `program::exec_op` — the same arithmetic in
+//! the same order per rank, with every reduce consuming in fixed group
+//! order — and the segment runtime is deterministic, so threaded,
+//! sequential and multi-process training runs agree bit-for-bit
+//! (`engine_parity`, `transport_parity`, `overlap_parity` suites).
 //!
 //! ## Failure semantics
 //!
 //! A worker error (injected crash, bad artifact, schedule bug) does not
 //! hang the step: the erroring thread still reaches the barrier, and it
-//! aborts the step on the fabric first, so peers parked on blocking
+//! aborts the step on the transport first, so peers parked on blocking
 //! takes wake immediately with a typed error — [`PeerLost`] when the
 //! failed rank is dead, `StepAborted` otherwise — instead of waiting
 //! out the take timeout. After all threads join, a typed
 //! [`WorkerCrashed`]/[`PeerLost`] error is propagated in preference to
 //! the secondary teardown errors, so the cluster driver (and its
 //! `RecoveryPolicy`) sees the root cause.
-//!
-//! Injected faults ([`FaultPlan`](crate::comm::fault::FaultPlan)) enter
-//! here and in the fabric: each rank polls for a scheduled crash at the
-//! top of its MP phase; message drops/delays fire inside
-//! [`Transport::post`](crate::comm::transport::Transport::post); straggles are charged by the cluster driver to the
-//! simulated compute clock.
 
 use std::sync::Barrier;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::comm::collective::CollectiveAlgo;
-use crate::comm::fabric::Tag;
-use crate::comm::transport::Transport;
 use crate::comm::fault::{PeerLost, StepAborted, WorkerCrashed};
-use crate::data::Batch;
-use crate::runtime::{HostTensor, RuntimeClient};
-use crate::util::Timer;
+use crate::data::{Batch, BatchIter};
 
-use super::averaging::average_rank;
-use super::group::GmpTopology;
-use super::modulo::ModuloPlan;
-use super::schedule::StepSchedule;
-use super::scheme::{
-    assemble_bk_rank, assemble_scheme_b_rank, scatter_reduce_bk_rank,
-    scatter_reduce_scheme_b_rank, McastScheme,
-};
-use super::shard::{ShardBwdMode, ShardPlan};
+use super::program::{run_rank_threaded, ExecCtx, StepProgram};
 use super::worker::Worker;
 
 /// Which execution engine drives a training step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecEngine {
-    /// Coordinator-interleaved, single OS thread (the seed behavior;
-    /// also the reference the parity test compares against).
+    /// Coordinator-driven, single OS thread: the step program runs
+    /// op-major (all ranks execute op i before any executes op i+1) —
+    /// the strict-BSP reference the parity tests compare against, and
+    /// the engine the calibrated benches time (contention-free
+    /// compute).
     Sequential,
-    /// One scoped thread per worker; blocking fabric takes; BSP barrier
-    /// between the MP phase and model averaging. The default, matching
-    /// `ClusterConfig::default()`.
+    /// One scoped thread per worker; blocking transport takes; BSP
+    /// barrier between the MP phase and model averaging. The default,
+    /// matching `ClusterConfig::default()`.
     #[default]
     Threaded,
 }
@@ -96,45 +84,56 @@ impl std::fmt::Display for ExecEngine {
 
 /// Everything a worker thread needs for one step (shared, read-only).
 pub(crate) struct StepCtx<'a> {
-    pub rt: &'a RuntimeClient,
-    pub fabric: &'a dyn Transport,
-    pub topo: &'a GmpTopology,
-    pub schedule: &'a StepSchedule,
-    pub scheme: McastScheme,
-    pub algo: CollectiveAlgo,
-    pub segmented_mp1: bool,
-    pub batch: usize,
-    /// Whether model averaging fires at the end of this step.
-    pub averaging: bool,
+    /// The shared executor context (runtime, transport, topology,
+    /// schedule, scheme, collectives, averaging flag).
+    pub exec: ExecCtx<'a>,
+    /// The compiled step program every thread executes.
+    pub program: &'a StepProgram,
     /// BSP superstep barrier (MP phase → averaging phase), one slot per
     /// worker.
     pub barrier: &'a Barrier,
 }
 
-/// Run one training step with one scoped thread per worker. Returns
-/// after every thread joined. A typed root-cause error
-/// ([`WorkerCrashed`] / [`PeerLost`]) is propagated in preference to
-/// the secondary teardown errors of healthy peers; otherwise the first
-/// error by rank order wins.
+/// Run one training step with one scoped thread per worker, each
+/// executing the compiled step program. While the workers compute, the
+/// **coordinator thread** (which would otherwise idle in the join)
+/// assembles the next step's batches from `iters` when provided —
+/// overlap's double buffering, genuinely off the step's critical path.
+/// Returns after every thread joined, with the prefetched batches.
+/// A typed root-cause error ([`WorkerCrashed`] / [`PeerLost`]) is
+/// propagated in preference to the secondary teardown errors of healthy
+/// peers; otherwise the first error by rank order wins.
 pub(crate) fn run_threaded_step(
     workers: &mut [Worker],
     batches: &[Batch],
+    iters: Option<&mut [BatchIter]>,
     ctx: &StepCtx<'_>,
-) -> Result<()> {
-    let results: Vec<Result<()>> = std::thread::scope(|s| {
+) -> Result<Option<Vec<Batch>>> {
+    let (results, next): (Vec<Result<()>>, Option<Vec<Batch>>) = std::thread::scope(|s| {
         let handles: Vec<_> = workers
             .iter_mut()
             .zip(batches.iter())
             .enumerate()
-            .map(|(rank, (w, batch))| s.spawn(move || worker_step(rank, w, batch, ctx)))
+            .map(|(rank, (w, batch))| {
+                s.spawn(move || {
+                    run_rank_threaded(ctx.program, rank, w, batch, &ctx.exec, ctx.barrier)
+                })
+            })
             .collect();
-        handles
+        // Prefetch concurrently with the workers' compute. Fetched
+        // unconditionally (even if a worker then fails), so every
+        // rank's iterator advances uniformly; elastic recovery rebuilds
+        // iterators from scratch either way.
+        let next: Option<Vec<Batch>> =
+            iters.map(|its| its.iter_mut().map(|it| it.next_batch()).collect());
+        let results = handles
             .into_iter()
             .map(|h| {
                 h.join()
                     .unwrap_or_else(|_| Err(anyhow!("worker thread panicked")))
             })
-            .collect()
+            .collect();
+        (results, next)
     });
     // Root-cause preference: typed fault errors, then ordinary worker
     // errors, then the secondary StepAborted teardown errors.
@@ -154,246 +153,6 @@ pub(crate) fn run_threaded_step(
     }
     match typed.or(plain).or(aborted) {
         Some(e) => Err(e),
-        None => Ok(()),
+        None => Ok(next),
     }
-}
-
-/// One worker's whole step: crash poll, MP phase, superstep barrier,
-/// averaging. The barrier is reached on error *and panic* paths too
-/// (panics are caught and converted to errors), so a failing worker
-/// never wedges its peers at the barrier. Any failure aborts the step
-/// on the fabric before the barrier, so peers parked on blocking takes
-/// wake with a typed error instead of waiting out the take timeout.
-fn worker_step(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
-    use std::panic::{catch_unwind, AssertUnwindSafe};
-    let mp = if ctx.fabric.poll_crash(rank) {
-        // Injected fault: this rank dies at the top of its MP phase.
-        // poll_crash already declared it dead and aborted the step.
-        Err(WorkerCrashed { rank, step: ctx.fabric.current_step() }.into())
-    } else {
-        catch_unwind(AssertUnwindSafe(|| {
-            if ctx.topo.mp == 1 && !ctx.segmented_mp1 {
-                full_step_rank(&mut *w, batch, ctx)
-            } else {
-                group_step_rank(rank, &mut *w, batch, ctx)
-            }
-        }))
-        .unwrap_or_else(|_| Err(anyhow!("worker {rank} panicked in the MP phase")))
-    };
-    if mp.is_err() {
-        ctx.fabric.abort_step();
-    }
-    ctx.barrier.wait();
-    let avg = if mp.is_ok() && ctx.averaging {
-        catch_unwind(AssertUnwindSafe(|| {
-            average_rank(ctx.fabric, &mut *w, rank, ctx.topo.n_workers, ctx.topo, ctx.algo)
-        }))
-        .unwrap_or_else(|_| Err(anyhow!("worker {rank} panicked in averaging")))
-    } else {
-        Ok(())
-    };
-    if avg.is_err() {
-        ctx.fabric.abort_step();
-    }
-    mp.and(avg)
-}
-
-/// mp=1 fast path: one fused full_step call + local SGD update for one
-/// worker. Shared by the sequential engine's `step_pure_dp` loop and
-/// the threaded per-rank program, so the two can never drift apart.
-pub(crate) fn full_step_worker(rt: &RuntimeClient, w: &mut Worker, batch: &Batch) -> Result<()> {
-    let t = Timer::start();
-    let mut inputs: Vec<HostTensor> =
-        Vec::with_capacity(w.conv_params.len() + w.fc_params.len() + 2);
-    inputs.extend(w.conv_params.iter().cloned());
-    inputs.extend(w.fc_params.iter().cloned());
-    inputs.push(batch.images.clone());
-    inputs.push(batch.labels.clone());
-    let out = rt.run("full_step", &inputs)?;
-    w.loss_acc += out[0].scalar() as f64;
-    let conv_grads = &out[1..15];
-    let fc_grads = &out[15..21];
-    w.update_conv(conv_grads);
-    let fcg: Vec<(usize, HostTensor)> = fc_grads.iter().cloned().enumerate().collect();
-    w.accumulate_fc_grads(&fcg);
-    w.update_fc(1);
-    w.compute_secs += t.elapsed_secs();
-    Ok(())
-}
-
-pub(crate) fn full_step_rank(w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
-    full_step_worker(ctx.rt, w, batch)
-}
-
-/// The hybrid path, per rank: Fig. 3's transformed network phase by
-/// phase — the SPMD mirror of the sequential engine's `step_group`,
-/// with blocking per-rank exchanges instead of god-view collectives.
-pub(crate) fn group_step_rank(rank: usize, w: &mut Worker, batch: &Batch, ctx: &StepCtx<'_>) -> Result<()> {
-    let gid = ctx.topo.gid(rank);
-    let members = ctx.topo.members(gid);
-    let gi = ctx.topo.offset(rank);
-    let k = members.len();
-    let b = ctx.batch;
-    let fabric = ctx.fabric;
-    let boundary = ctx.schedule.boundary_width;
-    let s0 = ctx.schedule.shard_widths[0];
-    let s1 = ctx.schedule.shard_widths[1];
-
-    let modulo = ModuloPlan::new(members.clone(), b, boundary);
-    let modulo_lab = ModuloPlan::new(members.clone(), b, 1);
-    let shard0 = ShardPlan::new(members.clone(), s0, ShardBwdMode::ReducePartials)
-        .with_algo(ctx.algo);
-    let shard1 = ShardPlan::new(members.clone(), s1, ShardBwdMode::SliceReplicated)
-        .with_algo(ctx.algo);
-
-    // --- conv fwd ---
-    let t = Timer::start();
-    let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
-    inputs.push(batch.images.clone());
-    let act = ctx
-        .rt
-        .run("conv_fwd", &inputs)?
-        .into_iter()
-        .next()
-        .expect("conv_fwd returns one output");
-    w.compute_secs += t.elapsed_secs();
-    let labels_f32 = HostTensor::f32(
-        vec![b, 1],
-        batch.labels.as_i32().iter().map(|&v| v as f32).collect(),
-    );
-
-    // --- modulo rounds through the FC stack ---
-    let scheme = if k > 1 { ctx.scheme } else { McastScheme::BoverK };
-    let rounds = scheme.rounds(k);
-    let fcb = scheme.fc_batch(b, k);
-    let suffix = scheme.artifact_suffix();
-    let head_name = match scheme {
-        McastScheme::BK if k > 1 => format!("head_step_bk{k}"),
-        _ => "head_step".to_string(),
-    };
-    for it in 0..rounds {
-        let tag = |phase: u16| Tag::new(phase, it, gid);
-
-        // Modulo fprop: assemble activations + labels.
-        let (assembled, labs) = match scheme {
-            McastScheme::BoverK => (
-                modulo.assemble_rank(fabric, gi, &act, it, tag(1))?,
-                modulo_lab.assemble_rank(fabric, gi, &labels_f32, it, tag(2))?,
-            ),
-            McastScheme::B => (
-                assemble_scheme_b_rank(&modulo, fabric, gi, &act, it, tag(1))?,
-                assemble_scheme_b_rank(&modulo_lab, fabric, gi, &labels_f32, it, tag(2))?,
-            ),
-            McastScheme::BK => (
-                assemble_bk_rank(&modulo, fabric, gi, &act, tag(1))?,
-                assemble_bk_rank(&modulo_lab, fabric, gi, &labels_f32, tag(2))?,
-            ),
-        };
-
-        // FC0 shard fwd + gather to full width.
-        let t = Timer::start();
-        let h0l = ctx
-            .rt
-            .run(
-                &format!("fc0_fwd_k{k}{suffix}"),
-                &[w.fc_params[0].clone(), w.fc_params[1].clone(), assembled.clone()],
-            )?
-            .into_iter()
-            .next()
-            .expect("fc0_fwd returns one output");
-        w.compute_secs += t.elapsed_secs();
-        let h0 = shard0.gather_full_rank(fabric, gi, &h0l, tag(3))?;
-
-        // FC1 shard fwd + gather.
-        let t = Timer::start();
-        let h1l = ctx
-            .rt
-            .run(
-                &format!("fc1_fwd_k{k}{suffix}"),
-                &[w.fc_params[2].clone(), w.fc_params[3].clone(), h0.clone()],
-            )?
-            .into_iter()
-            .next()
-            .expect("fc1_fwd returns one output");
-        w.compute_secs += t.elapsed_secs();
-        let h1 = shard1.gather_full_rank(fabric, gi, &h1l, tag(4))?;
-
-        // Replicated head: loss + gw2 + gb2 + gh1.
-        let labels_i32 = HostTensor::i32(
-            vec![fcb],
-            labs.as_f32().iter().map(|&v| v as i32).collect(),
-        );
-        let t = Timer::start();
-        let out = ctx.rt.run(
-            &head_name,
-            &[w.fc_params[4].clone(), w.fc_params[5].clone(), h1.clone(), labels_i32],
-        )?;
-        w.compute_secs += t.elapsed_secs();
-        w.loss_acc += out[0].scalar() as f64;
-        w.accumulate_fc_grads(&[(4, out[1].clone()), (5, out[2].clone())]);
-        let gh1_full = out[3].clone();
-
-        // Shard1 bwd: replicated above -> local slice, no wire.
-        let g_h1l = shard1.backward_rank(fabric, gi, &gh1_full, tag(5))?;
-
-        // FC1 shard bwd.
-        let t = Timer::start();
-        let out = ctx.rt.run(
-            &format!("fc1_bwd_k{k}{suffix}"),
-            &[
-                w.fc_params[2].clone(),
-                w.fc_params[3].clone(),
-                h0.clone(),
-                g_h1l.clone(),
-            ],
-        )?;
-        w.compute_secs += t.elapsed_secs();
-        w.accumulate_fc_grads(&[(2, out[0].clone()), (3, out[1].clone())]);
-        let gh0_partial = out[2].clone();
-
-        // Shard0 bwd: partitioned above -> reduce partials.
-        let g_h0l = shard0.backward_rank(fabric, gi, &gh0_partial, tag(6))?;
-
-        // FC0 shard bwd.
-        let t = Timer::start();
-        let out = ctx.rt.run(
-            &format!("fc0_bwd_k{k}{suffix}"),
-            &[
-                w.fc_params[0].clone(),
-                w.fc_params[1].clone(),
-                assembled.clone(),
-                g_h0l.clone(),
-            ],
-        )?;
-        w.compute_secs += t.elapsed_secs();
-        w.accumulate_fc_grads(&[(0, out[0].clone()), (1, out[1].clone())]);
-        let gbatch_partial = out[2].clone();
-
-        // Modulo bprop: route + reduce into this member's g_act.
-        match scheme {
-            McastScheme::BoverK => {
-                modulo.scatter_reduce_rank(fabric, gi, &gbatch_partial, &mut w.g_act, it, tag(7))?
-            }
-            McastScheme::B => scatter_reduce_scheme_b_rank(
-                &modulo, fabric, gi, &gbatch_partial, &mut w.g_act, it, tag(7),
-            )?,
-            McastScheme::BK => {
-                scatter_reduce_bk_rank(&modulo, fabric, gi, &gbatch_partial, &mut w.g_act, tag(7))?;
-                // LR consistency: BK's head averaged over B*K examples —
-                // rescale exactly as the sequential engine does.
-                w.g_act.scale(k as f32);
-            }
-        }
-    }
-
-    // --- conv bwd + optimizer updates ---
-    let t = Timer::start();
-    let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
-    inputs.push(batch.images.clone());
-    inputs.push(w.g_act.clone());
-    let grads = ctx.rt.run("conv_bwd", &inputs)?;
-    w.update_conv(&grads);
-    w.update_fc(rounds);
-    w.compute_secs += t.elapsed_secs();
-    Ok(())
 }

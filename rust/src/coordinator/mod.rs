@@ -6,11 +6,14 @@
 //! - [`schedule`] — the compiled per-step plan + analytic comm volumes
 //! - [`averaging`] — BSP model averaging (replicated across N, shards across groups)
 //! - [`worker`] — per-worker parameter/optimizer/accumulator state
-//! - [`engine`] — the threaded (one thread per worker) execution engine
+//! - [`program`] — the compiled per-rank step-program IR + the single
+//!   executor all three engines (sequential, threaded, TCP) drive
+//! - [`engine`] — the threaded (one thread per worker) drive of the
+//!   step program
 //! - [`cluster`] — the numeric simulator + calibrated throughput mode,
 //!   with elastic shrink-and-continue recovery on peer loss
 //! - [`procdriver`] — the multi-process rank driver (`splitbrain
-//!   worker`): the same per-rank step programs over the TCP transport
+//!   worker`): the same compiled step program over the TCP transport
 //! - [`planner`] — feasible-configuration search under a memory budget,
 //!   plus survivor re-planning for elastic recovery
 
@@ -21,6 +24,7 @@ pub mod group;
 pub mod modulo;
 pub mod planner;
 pub mod procdriver;
+pub mod program;
 pub mod schedule;
 pub mod scheme;
 pub mod shard;
@@ -31,6 +35,7 @@ pub use engine::ExecEngine;
 pub use group::GmpTopology;
 pub use modulo::ModuloPlan;
 pub use planner::{best, plan, CostModel, PlanOption, PlanRequest};
+pub use program::{BarrierId, StepOp, StepProgram};
 pub use schedule::StepSchedule;
 pub use scheme::McastScheme;
 pub use shard::{ShardBwdMode, ShardPlan};

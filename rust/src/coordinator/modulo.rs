@@ -160,13 +160,36 @@ impl ModuloPlan {
         Ok(())
     }
 
-    // -- per-rank (SPMD) forms, used by the threaded engine ------------------
+    // -- per-rank (SPMD) forms, used by the step-program executor ------------
+    //
+    // Each exchange is split into a *post* half (pure sends — safe to
+    // issue as soon as the data exists, which is what the overlapped
+    // executor exploits) and a *take* half (blocking receives + the
+    // fixed-order assembly/reduction). The BSP program runs the halves
+    // back to back; the overlapped program hoists the post halves.
 
-    /// Per-rank fprop of iteration `k`: the member at group index `gi`
-    /// contributes `act` (its local `[B, width]` activations) and
-    /// receives every peer's slice with blocking takes. Data placement
-    /// is identical to [`ModuloPlan::assemble`].
-    pub fn assemble_rank(
+    /// Post half of the per-rank fprop of iteration `k`: push this
+    /// member's `[k·size, (k+1)·size)` slice of `act` to every peer.
+    /// Side-effect only — the overlapped executor issues this for every
+    /// iteration as soon as the activations exist.
+    pub fn post_fwd_rank(&self, fabric: &dyn Transport, gi: usize, act: &HostTensor, k: usize, tag: Tag) {
+        let kk = self.k();
+        let size = self.size();
+        assert!(k < kk && gi < kk);
+        let me = self.group[gi];
+        let local = act.slice_rows(k * size, (k + 1) * size);
+        for &dst in &self.group {
+            if dst != me {
+                fabric.post(me, dst, tag, local.as_f32().to_vec());
+            }
+        }
+    }
+
+    /// Take half of the per-rank fprop of iteration `k`: assemble the
+    /// `[B, width]` batch (own slice copied locally, peers' slices via
+    /// blocking takes, rows placed by the Fig. 6b owner mapping). Data
+    /// placement is identical to [`ModuloPlan::assemble`].
+    pub fn gather_fwd_rank(
         &self,
         fabric: &dyn Transport,
         gi: usize,
@@ -179,11 +202,6 @@ impl ModuloPlan {
         assert!(k < kk && gi < kk);
         let me = self.group[gi];
         let local = act.slice_rows(k * size, (k + 1) * size);
-        for &dst in &self.group {
-            if dst != me {
-                fabric.post(me, dst, tag, local.as_f32().to_vec());
-            }
-        }
         let mut batch = HostTensor::zeros(vec![self.batch, self.width]);
         for (j, &src) in self.group.iter().enumerate() {
             if j == gi {
@@ -196,13 +214,25 @@ impl ModuloPlan {
         Ok(batch)
     }
 
-    /// Per-rank bprop of iteration `k`: routes the member's assembled
-    /// `[B, width]` partial gradient back to owners, reduces the copies
-    /// destined for this member (own rows + peers in group order — the
-    /// same order as [`ModuloPlan::scatter_reduce`], so numerics are
-    /// bit-identical), and writes rows `[k·size, (k+1)·size)` of
-    /// `g_act`.
-    pub fn scatter_reduce_rank(
+    /// Post half of the per-rank bprop: route the rows of `gbatch`
+    /// owned by each peer back to that peer. Side-effect only.
+    pub fn post_bwd_rank(&self, fabric: &dyn Transport, gi: usize, gbatch: &HostTensor, tag: Tag) {
+        let size = self.size();
+        assert!(gi < self.k());
+        let me = self.group[gi];
+        for (i, &dst) in self.group.iter().enumerate() {
+            if i != gi {
+                let rows = gbatch.slice_rows(i * size, (i + 1) * size);
+                fabric.post(me, dst, tag, rows.as_f32().to_vec());
+            }
+        }
+    }
+
+    /// Take half of the per-rank bprop of iteration `k`: reduce the
+    /// copies destined for this member (own rows + peers in group order
+    /// — the fixed rank order that keeps all engines bit-identical) and
+    /// write rows `[k·size, (k+1)·size)` of `g_act`.
+    pub fn reduce_bwd_rank(
         &self,
         fabric: &dyn Transport,
         gi: usize,
@@ -215,12 +245,6 @@ impl ModuloPlan {
         let size = self.size();
         assert!(k < kk && gi < kk);
         let me = self.group[gi];
-        for (i, &dst) in self.group.iter().enumerate() {
-            if i != gi {
-                let rows = gbatch.slice_rows(i * size, (i + 1) * size);
-                fabric.post(me, dst, tag, rows.as_f32().to_vec());
-            }
-        }
         let mut acc = gbatch.slice_rows(gi * size, (gi + 1) * size);
         for &src in &self.group {
             if src != me {
@@ -237,6 +261,7 @@ impl ModuloPlan {
         }
         Ok(())
     }
+
 }
 
 #[cfg(test)]
@@ -337,6 +362,53 @@ mod tests {
         // K=1: assembled batch = the full local batch (size = B).
         assert_eq!(out[0].as_f32(), a[0].as_f32());
         assert_eq!(f.total_bytes(), 0);
+    }
+
+    #[test]
+    fn split_post_then_gather_supports_op_major_serial_drive() {
+        // The lockstep executor runs the post halves of every rank
+        // before any take half, serially, with no thread scope — the
+        // result must match the god-view assembly bit-for-bit.
+        let plan = ModuloPlan::new(vec![0, 1], 4, 3);
+        let f = Fabric::new(2);
+        let a = acts(2, 4, 3);
+        for gi in 0..2 {
+            plan.post_fwd_rank(&f, gi, &a[gi], 0, Tag::new(1, 0, 0));
+        }
+        let got: Vec<HostTensor> = (0..2)
+            .map(|gi| plan.gather_fwd_rank(&f, gi, &a[gi], 0, Tag::new(1, 0, 0)).unwrap())
+            .collect();
+        let f2 = Fabric::new(2);
+        let want = plan.assemble(&f2, &a, 0, Tag::new(1, 0, 0)).unwrap();
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.as_f32(), w.as_f32());
+        }
+        assert!(f.drained());
+        assert_eq!(f.total_bytes(), f2.total_bytes());
+    }
+
+    #[test]
+    fn split_bwd_post_then_reduce_matches_combined() {
+        let plan = ModuloPlan::new(vec![0, 1], 2, 2);
+        let gb = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            HostTensor::f32(vec![2, 2], vec![10.0, 20.0, 30.0, 40.0]),
+        ];
+        let f = Fabric::new(2);
+        let mut split = vec![HostTensor::zeros(vec![2, 2]), HostTensor::zeros(vec![2, 2])];
+        for gi in 0..2 {
+            plan.post_bwd_rank(&f, gi, &gb[gi], Tag::new(7, 0, 0));
+        }
+        for gi in 0..2 {
+            plan.reduce_bwd_rank(&f, gi, &gb[gi], &mut split[gi], 0, Tag::new(7, 0, 0)).unwrap();
+        }
+        let f2 = Fabric::new(2);
+        let mut combined = vec![HostTensor::zeros(vec![2, 2]), HostTensor::zeros(vec![2, 2])];
+        plan.scatter_reduce(&f2, &gb, &mut combined, 0, Tag::new(7, 0, 0)).unwrap();
+        for (a, b) in split.iter().zip(combined.iter()) {
+            assert_eq!(a.as_f32(), b.as_f32());
+        }
+        assert!(f.drained());
     }
 
     #[test]

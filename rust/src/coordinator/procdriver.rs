@@ -4,13 +4,15 @@
 //! This is the per-process mirror of the in-proc
 //! [`Cluster`](super::cluster::Cluster) driver
 //! (`splitbrain worker --rank R --peers ...`, spawned by
-//! `splitbrain launch`). It runs the **same per-rank step programs**
-//! the threaded engine runs — `engine::full_step_rank` /
-//! `engine::group_step_rank` for the MP phase, `averaging::average_rank`
-//! for BSP model averaging — against a [`TcpTransport`] instead of the
-//! in-proc fabric. Because the arithmetic and its order are shared code,
-//! a multi-process run is bit-identical to the threaded and sequential
-//! engines on the same seed (the `transport_parity` suite asserts it).
+//! `splitbrain launch`). It executes the **same compiled step program**
+//! ([`super::program`]) the in-proc engines run — the program's barrier
+//! markers realized as wire barriers, its `CheckpointRefresh` op as the
+//! control-plane shard allgather — against a [`TcpTransport`] instead
+//! of the in-proc fabric. Because the per-op arithmetic and its order
+//! are one shared implementation (`program::exec_op`), a multi-process
+//! run is bit-identical to the threaded and sequential engines on the
+//! same seed (the `transport_parity` suite asserts it), overlapped
+//! execution included (`overlap_parity`).
 //!
 //! ## One BSP step across processes
 //!
@@ -41,6 +43,7 @@
 //! advanced to the current step.
 
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -49,14 +52,13 @@ use crate::comm::fabric::Tag;
 use crate::comm::fault::WorkerCrashed;
 use crate::comm::transport::tcp::{SyncOutcome, BARRIER_END, BARRIER_MID};
 use crate::comm::transport::{TcpPeer, TcpTransport, Transport};
-use crate::data::BatchIter;
+use crate::data::{Batch, BatchIter};
 use crate::runtime::{HostTensor, RuntimeClient};
 use crate::train::checkpoint;
 
-use super::averaging::average_rank;
 use super::cluster::{plan_topology, ClusterConfig, RecoveryPolicy};
-use super::engine::{full_step_rank, group_step_rank, StepCtx};
 use super::group::GmpTopology;
+use super::program::{run_rank_span, ExecCtx, RankHooks, RankState, StepProgram};
 use super::schedule::StepSchedule;
 use super::worker::{init_full_params, Worker};
 
@@ -109,9 +111,11 @@ pub enum RunOutcome {
 
 /// Deterministic FNV-1a fingerprint over the run shape, exchanged in
 /// the handshake so workers from different launches can never mesh.
+/// Overlap is included for hygiene even though mixed-overlap meshes
+/// would still agree bit-for-bit (takes are tag-addressed).
 pub fn run_fingerprint(cfg: &ClusterConfig, steps: usize) -> u64 {
     let text = format!(
-        "v1|n={}|mp={}|lr={}|mom={}|clip={}|avg={}|seed={}|ds={}|scheme={}|coll={}|rec={}|steps={}|seg={}",
+        "v1|n={}|mp={}|lr={}|mom={}|clip={}|avg={}|seed={}|ds={}|scheme={}|coll={}|rec={}|steps={}|seg={}|ov={}",
         cfg.n_workers,
         cfg.mp,
         cfg.lr,
@@ -125,6 +129,7 @@ pub fn run_fingerprint(cfg: &ClusterConfig, steps: usize) -> u64 {
         cfg.recovery,
         steps,
         cfg.segmented_mp1,
+        cfg.overlap,
     );
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in text.as_bytes() {
@@ -163,6 +168,7 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
     let mut mp = cfg.mp;
     let mut my_rank = pc.opid;
     let (mut topo, _transformed, mut schedule) = plan_topology(&rt, cfg, n, mp)?;
+    let mut program = schedule.compile_program(cfg.scheme, cfg.segmented_mp1, cfg.overlap);
     let batch = rt.manifest.batch;
 
     let (conv, fc) = init_full_params(cfg.seed);
@@ -188,13 +194,35 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
     let mut recoveries = 0usize;
     let mut losses: Vec<(usize, f64)> = Vec::with_capacity(pc.steps);
     let mut bytes_sent = 0u64;
+    // Overlap's double buffer: the next step's batch is fetched on a
+    // scoped helper thread while the current step computes, so input
+    // assembly leaves the critical path. One batch is consumed per step
+    // either way, so the example sequence is mode-invariant.
+    let mut pending: Option<Batch> = None;
 
     while step_count < pc.steps {
         let step_no = step_count + 1;
-        let res = try_step(
-            &rt, &transport, cfg, n, mp, &topo, &schedule, &mut worker, &mut iter, my_rank,
-            step_no, batch, &mut ckpt,
-        );
+        let this_batch = match pending.take() {
+            Some(b) => b,
+            None => iter.next_batch(),
+        };
+        let prefetch_next = program.overlap && step_no < pc.steps;
+        let (res, next) = std::thread::scope(|s| {
+            let prefetch = if prefetch_next { Some(s.spawn(|| iter.next_batch())) } else { None };
+            let res = try_step(
+                &rt, &transport, cfg, n, mp, &topo, &schedule, &program, &mut worker,
+                &this_batch, my_rank, step_no, batch, &mut ckpt,
+            );
+            // A prefetch panic must stay loud: silently degrading to a
+            // synchronous fetch would desynchronize this rank's example
+            // sequence from its peers'.
+            let next = prefetch.map(|h| match h.join() {
+                Ok(b) => b,
+                Err(p) => std::panic::resume_unwind(p),
+            });
+            (res, next)
+        });
+        pending = next;
         match res {
             Ok(loss) => {
                 bytes_sent += transport.bytes_from(my_rank);
@@ -245,6 +273,11 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
                         let planned = plan_topology(&rt, cfg, n, mp)?;
                         topo = planned.0;
                         schedule = planned.2;
+                        program = schedule
+                            .compile_program(cfg.scheme, cfg.segmented_mp1, cfg.overlap);
+                        // Any prefetched batch belongs to the lost
+                        // incarnation's iterator shape: discard it.
+                        pending = None;
                         let conv_t = &ckpt[..14];
                         let fc_t = &ckpt[14..20];
                         worker = Worker::new(
@@ -282,7 +315,11 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
 }
 
 /// One step attempt on the current incarnation (the per-process mirror
-/// of `Cluster::try_step`). Returns this rank's per-step loss.
+/// of `Cluster::try_step`): this process executes the same compiled
+/// step program as the in-proc engines, with the program's barrier
+/// markers realized as the transport's MID/END wire barriers and the
+/// `CheckpointRefresh` op as the control-plane shard allgather. Returns
+/// this rank's per-step loss.
 #[allow(clippy::too_many_arguments)]
 fn try_step(
     rt: &RuntimeClient,
@@ -292,8 +329,9 @@ fn try_step(
     mp: usize,
     topo: &GmpTopology,
     schedule: &StepSchedule,
+    program: &StepProgram,
     worker: &mut Worker,
-    iter: &mut BatchIter,
+    batch: &Batch,
     my_rank: usize,
     step_no: usize,
     batch_size: usize,
@@ -302,54 +340,59 @@ fn try_step(
     transport.begin_step(step_no);
     worker.begin_step();
     worker.compute_secs = 0.0;
-    let batch = iter.next_batch();
     let averaging_due = n > 1 && step_no % cfg.avg_period == 0;
 
-    // The per-rank programs only touch the std barrier in the threaded
-    // engine's worker_step; here the BSP barrier is the transport's.
-    let local_barrier = std::sync::Barrier::new(1);
-    let ctx = StepCtx {
+    let ctx = ExecCtx {
         rt,
-        fabric: transport,
+        transport,
         topo,
         schedule,
         scheme: cfg.scheme,
         algo: cfg.collectives,
-        segmented_mp1: cfg.segmented_mp1,
         batch: batch_size,
         averaging: averaging_due,
-        barrier: &local_barrier,
     };
+    let mut st = RankState::new(my_rank, program, batch, &ctx);
 
-    // Crash poll at the top of the MP phase, like both engines.
-    if transport.poll_crash(my_rank) {
-        return Err(WorkerCrashed { rank: my_rank, step: step_no }.into());
-    }
-    let mp_res = if topo.mp == 1 && !cfg.segmented_mp1 {
-        full_step_rank(worker, &batch, &ctx)
-    } else {
-        group_step_rank(my_rank, worker, &batch, &ctx)
-    };
-    if let Err(e) = mp_res {
-        transport.abort_step();
+    // MP span (the program's CrashPoll op is its first instruction). An
+    // injected crash propagates *without* an abort broadcast — the Dead
+    // gossip already went out inside poll_crash; any other failure
+    // aborts the step so peers wake from their takes immediately.
+    if let Err(e) = run_rank_span(
+        program.mp_span(),
+        my_rank,
+        worker,
+        batch,
+        &mut st,
+        &ctx,
+        &RankHooks::none(),
+    ) {
+        if !e.is::<WorkerCrashed>() {
+            transport.abort_step();
+        }
         return Err(e);
     }
     transport.barrier(step_no, BARRIER_MID)?;
 
     if averaging_due {
-        if let Err(e) = average_rank(transport, worker, my_rank, n, topo, cfg.collectives) {
+        // Replicas provably agree right after the averaging ops: the
+        // CheckpointRefresh op refreshes the global restore point over
+        // the control plane (the in-proc equivalent is a local memory
+        // read, so nothing lands on the data counters).
+        let refreshed: Mutex<Option<Vec<HostTensor>>> = Mutex::new(None);
+        let refresh = |w: &Worker| -> Result<()> {
+            *refreshed.lock().unwrap() = Some(refresh_ckpt(transport, w, my_rank, topo)?);
+            Ok(())
+        };
+        let hooks = RankHooks { ckpt_refresh: Some(&refresh) };
+        if let Err(e) =
+            run_rank_span(program.avg_span(), my_rank, worker, batch, &mut st, &ctx, &hooks)
+        {
             transport.abort_step();
             return Err(e);
         }
-        // Replicas provably agree now: refresh the global restore
-        // point (control plane — the in-proc equivalent is a local
-        // memory read, so nothing lands on the data counters).
-        match refresh_ckpt(transport, worker, my_rank, topo) {
-            Ok(t) => *ckpt = t,
-            Err(e) => {
-                transport.abort_step();
-                return Err(e);
-            }
+        if let Some(t) = refreshed.into_inner().unwrap() {
+            *ckpt = t;
         }
     }
     // Drain check must precede the END barrier: once our END frame is

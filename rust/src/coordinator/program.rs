@@ -1,0 +1,1025 @@
+//! The compiled per-rank **step program**: one IR, one executor, every
+//! engine.
+//!
+//! Before this module existed the per-rank training step was hand-wired
+//! three times — once in the sequential cluster driver's god-view loops,
+//! once in the threaded engine's per-rank functions, and once in the
+//! multi-process TCP driver — which is exactly the drift hazard a
+//! bit-parity contract cannot afford. Now the step is **compiled once**
+//! from the partitioned network's [`StepSchedule`] (which embeds the
+//! [`GmpTopology`] and the transformed net's widths) into a flat list
+//! of [`StepOp`]s with explicit data dependencies, and a single
+//! executor (`exec_op`) runs those ops for all three engines:
+//!
+//! * **Sequential** — `run_lockstep`: op-major, rank-minor. Post ops
+//!   run for every rank before the matching take ops (so non-rendezvous
+//!   ops need no threads and compute stays contention-free for the
+//!   calibrated benches); ops whose internals interleave sends and
+//!   receives per round ([`StepOp::rendezvous`] — the ring/rhd
+//!   collectives) run on a local thread scope, exactly as the seed's
+//!   sequential engine already ran them.
+//! * **Threaded** — `engine::run_threaded_step`: each worker thread
+//!   executes the whole program in order, rendezvous provided by the
+//!   transport's blocking takes; the [`StepOp::Barrier`] markers map
+//!   onto the engine's BSP barrier.
+//! * **TCP multi-process** — `procdriver::try_step`: one rank per
+//!   process executes the same program; barrier markers map onto the
+//!   transport's wire barriers and [`StepOp::CheckpointRefresh`] onto
+//!   the control-plane shard allgather.
+//!
+//! ## Ops and dependencies
+//!
+//! | op | reads | writes | wire |
+//! |---|---|---|---|
+//! | `CrashPoll` | fault plan | — | gossip (TCP) |
+//! | `FullStep` | params, batch | params, loss | — |
+//! | `ConvFwd` | conv params, batch | `act` | — |
+//! | `PostLabels{r}` | labels | — | post |
+//! | `PostActs{r}` | `act` | — | post |
+//! | `ModuloGather{r}` | `act`, labels | `assembled`, `labs` | take |
+//! | `FcFwd{s,r}` | shard params, `assembled`/`h0` | `h0l`/`h1l` | — |
+//! | `ShardGather{s,r}` | `h0l`/`h1l` | `h0`/`h1` | post+take |
+//! | `HeadStep{r}` | `h1`, `labs` | loss, FC2 grads, `gh1` | — |
+//! | `ShardBwd{1,r}` | `gh1` | `g_h1l` | — (local slice) |
+//! | `FcBwd{1,r}` | `h0`, `g_h1l` | FC1 grads, `gh0` | — |
+//! | `ShardBwd{0,r}` | `gh0` | `g_h0l` | post+take (reduce) |
+//! | `FcBwd{0,r}` | `assembled`, `g_h0l` | FC0 grads, `gbatch` | — |
+//! | `PostGrads{r}` | `gbatch` | — | post |
+//! | `ReduceGrads{r}` | `gbatch` | `g_act` rows | take (fixed order) |
+//! | `ConvBwdUpdate` | `g_act` | all params | — |
+//! | `Barrier(_)` | — | — | engine-defined |
+//! | `AverageReplicated` | replica | replica | allreduce |
+//! | `AverageShards` | shards | shards | allreduce |
+//! | `CheckpointRefresh` | shards | restore point | control plane |
+//!
+//! ## Overlapped execution (`--overlap`)
+//!
+//! In BSP order every post is immediately followed by its takes, so a
+//! sender serializes: compute round r, post round r, wait. The overlap
+//! compile mode instead **hoists the post halves**: all rounds' label
+//! posts move before `ConvFwd` (labels never depend on it) and all
+//! rounds' activation posts move directly after it — every payload a
+//! peer will ever take this step is on the wire before the first FC
+//! round begins, so peers' takes are serviced while this rank computes
+//! (the in-proc mailbox parks receivers on a condvar; the TCP reader
+//! threads drain sockets in the background — nothing polls).
+//!
+//! **Bit-identity invariant:** overlap changes only *when* payloads are
+//! posted, never their contents, their tags, or the fixed group order
+//! in which every reduce consumes them ([`ModuloPlan::reduce_bwd_rank`],
+//! the collectives). Arrival order affects wall-clock only; the
+//! reduction tree is compiled, not raced. `overlap_parity` asserts
+//! this bit-for-bit across engines, transports and fault plans.
+
+use std::sync::Barrier;
+
+use anyhow::{anyhow, Result};
+
+use crate::comm::collective::CollectiveAlgo;
+use crate::comm::fabric::Tag;
+use crate::comm::fault::WorkerCrashed;
+use crate::comm::transport::Transport;
+use crate::data::Batch;
+use crate::runtime::{HostTensor, RuntimeClient};
+use crate::util::Timer;
+
+use super::averaging::{average_replicated_rank, average_shards_rank};
+use super::group::GmpTopology;
+use super::modulo::ModuloPlan;
+use super::schedule::StepSchedule;
+use super::scheme::{
+    gather_bk_rank, gather_scheme_b_rank, post_bk_rank, post_bwd_bk_rank,
+    post_bwd_scheme_b_rank, post_scheme_b_rank, reduce_bwd_bk_rank, reduce_bwd_scheme_b_rank,
+    McastScheme,
+};
+use super::shard::{ShardBwdMode, ShardPlan};
+use super::worker::Worker;
+
+/// Where a [`StepOp::Barrier`] sits in the step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarrierId {
+    /// End of the MP phase, before model averaging (the threaded
+    /// engine's std barrier; the TCP transport's MID wire barrier).
+    Mid,
+    /// End of the whole step (thread join in-proc; the TCP END wire
+    /// barrier that keeps processes in per-step lockstep).
+    End,
+}
+
+/// One op of the compiled per-rank step program (see the module-level
+/// op table for data dependencies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOp {
+    /// Fire a pending injected crash for this rank (both engines poll
+    /// at the top of the MP phase; consumption order is part of the
+    /// deterministic-replay contract).
+    CrashPoll,
+    /// mp=1 fused fast path: one `full_step` artifact call + local SGD.
+    FullStep,
+    /// Conv front forward: batch images → flattened activations.
+    ConvFwd,
+    /// Post half of the modulo label exchange for one round. Labels
+    /// depend only on the input batch, so the overlapped program hoists
+    /// these before [`StepOp::ConvFwd`].
+    PostLabels {
+        /// Modulo round.
+        round: usize,
+    },
+    /// Post half of the modulo activation exchange for one round.
+    /// Depends on [`StepOp::ConvFwd`] only — the overlapped program
+    /// hoists all rounds' posts directly after it.
+    PostActs {
+        /// Modulo round.
+        round: usize,
+    },
+    /// Take half of the modulo exchange: assemble this round's FC batch
+    /// and labels (own slice locally, peers' slices in group order).
+    ModuloGather {
+        /// Modulo round.
+        round: usize,
+    },
+    /// Sharded FC forward (`fc{seg}_fwd_k{K}` artifact).
+    FcFwd {
+        /// Sharded FC index (0 or 1).
+        seg: usize,
+        /// Modulo round.
+        round: usize,
+    },
+    /// Shard-layer fprop: allgather the partition outputs to full width
+    /// (naive or ring rounds — interleaved post/take, hence
+    /// rendezvous).
+    ShardGather {
+        /// Sharded FC index (0 or 1).
+        seg: usize,
+        /// Modulo round.
+        round: usize,
+    },
+    /// Replicated head: loss + FC2 grads + the full `g_h1`.
+    HeadStep {
+        /// Modulo round.
+        round: usize,
+    },
+    /// Shard-layer bprop. seg 1 sits under the replicated head: a
+    /// zero-wire local slice. seg 0 reduces partials across the group
+    /// (rendezvous).
+    ShardBwd {
+        /// Sharded FC index (0 or 1).
+        seg: usize,
+        /// Modulo round.
+        round: usize,
+    },
+    /// Sharded FC backward (`fc{seg}_bwd_k{K}` artifact).
+    FcBwd {
+        /// Sharded FC index (0 or 1).
+        seg: usize,
+        /// Modulo round.
+        round: usize,
+    },
+    /// Post half of the modulo bprop: route owner blocks of the batch
+    /// gradient back to their owners. Issued eagerly (right after
+    /// `FcBwd{0}` produces the gradient) in every mode.
+    PostGrads {
+        /// Modulo round.
+        round: usize,
+    },
+    /// Take half of the modulo bprop: reduce the routed copies in fixed
+    /// group order into this member's `g_act` rows. The fixed order is
+    /// what keeps overlapped and BSP runs bit-identical regardless of
+    /// arrival order.
+    ReduceGrads {
+        /// Modulo round.
+        round: usize,
+    },
+    /// Conv front backward + conv/FC optimizer updates.
+    ConvBwdUpdate,
+    /// BSP barrier marker — interpreted by each engine's driver (std
+    /// barrier / wire barrier / no-op under lockstep).
+    Barrier(BarrierId),
+    /// Allreduce-mean of the replicated parameters across all N ranks.
+    AverageReplicated,
+    /// Allreduce-mean of the FC shards across the D same-offset peers.
+    AverageShards,
+    /// Refresh the in-memory global restore point. In-proc drivers
+    /// snapshot centrally (no hook installed → no-op here); the TCP
+    /// driver installs a control-plane shard-allgather hook.
+    CheckpointRefresh,
+}
+
+impl StepOp {
+    /// True when the op's internals interleave sends and receives per
+    /// round (ring/rhd collectives, naive all-to-all gathers), so the
+    /// lockstep executor must run all ranks concurrently on a local
+    /// thread scope. All other ops are either pure compute, pure posts,
+    /// or takes whose payloads were posted by an earlier op.
+    pub fn rendezvous(self) -> bool {
+        matches!(
+            self,
+            StepOp::ShardGather { .. }
+                | StepOp::ShardBwd { seg: 0, .. }
+                | StepOp::AverageReplicated
+                | StepOp::AverageShards
+        )
+    }
+
+    /// True for ops that only run on averaging steps.
+    pub fn averaging_only(self) -> bool {
+        matches!(
+            self,
+            StepOp::AverageReplicated | StepOp::AverageShards | StepOp::CheckpointRefresh
+        )
+    }
+}
+
+/// The compiled step program (see the module docs).
+#[derive(Debug, Clone)]
+pub struct StepProgram {
+    ops: Vec<StepOp>,
+    /// Index of `Barrier(Mid)` in `ops`.
+    mid: usize,
+    /// Index of `Barrier(End)` in `ops`.
+    end: usize,
+    /// Modulo rounds per step (0 for the fused mp=1 path).
+    pub rounds: usize,
+    /// Whether post halves were hoisted (overlapped execution).
+    pub overlap: bool,
+}
+
+impl StepProgram {
+    /// Compile the per-rank step program from the compiled schedule
+    /// (which embeds the topology and the transformed net's widths).
+    /// `overlap` hoists the modulo post halves (see the module docs);
+    /// it never changes numerics.
+    pub fn compile(
+        schedule: &StepSchedule,
+        scheme: McastScheme,
+        segmented_mp1: bool,
+        overlap: bool,
+    ) -> StepProgram {
+        let k = schedule.topo.mp;
+        let fused = k == 1 && !segmented_mp1;
+        // k=1 groups have no exchange; any scheme degrades to the local
+        // B/K pipeline (same rule as the execution state below).
+        let eff = if k > 1 { scheme } else { McastScheme::BoverK };
+        let rounds = if fused { 0 } else { eff.rounds(k) };
+
+        let mut ops = vec![StepOp::CrashPoll];
+        if fused {
+            ops.push(StepOp::FullStep);
+        } else {
+            if overlap {
+                // Labels depend only on the batch: on the wire before
+                // the heaviest compute of the step even starts.
+                for r in 0..rounds {
+                    ops.push(StepOp::PostLabels { round: r });
+                }
+            }
+            ops.push(StepOp::ConvFwd);
+            if overlap {
+                // Every round's activation slice exists the moment the
+                // conv front finishes: post them all eagerly.
+                for r in 0..rounds {
+                    ops.push(StepOp::PostActs { round: r });
+                }
+            }
+            for r in 0..rounds {
+                if !overlap {
+                    ops.push(StepOp::PostActs { round: r });
+                    ops.push(StepOp::PostLabels { round: r });
+                }
+                ops.push(StepOp::ModuloGather { round: r });
+                ops.push(StepOp::FcFwd { seg: 0, round: r });
+                ops.push(StepOp::ShardGather { seg: 0, round: r });
+                ops.push(StepOp::FcFwd { seg: 1, round: r });
+                ops.push(StepOp::ShardGather { seg: 1, round: r });
+                ops.push(StepOp::HeadStep { round: r });
+                ops.push(StepOp::ShardBwd { seg: 1, round: r });
+                ops.push(StepOp::FcBwd { seg: 1, round: r });
+                ops.push(StepOp::ShardBwd { seg: 0, round: r });
+                ops.push(StepOp::FcBwd { seg: 0, round: r });
+                ops.push(StepOp::PostGrads { round: r });
+                ops.push(StepOp::ReduceGrads { round: r });
+            }
+            ops.push(StepOp::ConvBwdUpdate);
+        }
+        let mid = ops.len();
+        ops.push(StepOp::Barrier(BarrierId::Mid));
+        ops.push(StepOp::AverageReplicated);
+        if k > 1 {
+            ops.push(StepOp::AverageShards);
+        }
+        ops.push(StepOp::CheckpointRefresh);
+        let end = ops.len();
+        ops.push(StepOp::Barrier(BarrierId::End));
+        StepProgram { ops, mid, end, rounds, overlap }
+    }
+
+    /// The full op list, in execution order.
+    pub fn ops(&self) -> &[StepOp] {
+        &self.ops
+    }
+
+    /// Ops of the MP phase (everything before the MID barrier).
+    pub fn mp_span(&self) -> &[StepOp] {
+        &self.ops[..self.mid]
+    }
+
+    /// Ops of the averaging phase (between the MID and END barriers);
+    /// only executed on averaging steps.
+    pub fn avg_span(&self) -> &[StepOp] {
+        &self.ops[self.mid + 1..self.end]
+    }
+}
+
+/// Everything `exec_op` needs for one step (shared, read-only, `Sync`).
+pub(crate) struct ExecCtx<'a> {
+    pub rt: &'a RuntimeClient,
+    pub transport: &'a dyn Transport,
+    pub topo: &'a GmpTopology,
+    pub schedule: &'a StepSchedule,
+    pub scheme: McastScheme,
+    pub algo: CollectiveAlgo,
+    pub batch: usize,
+    /// Whether model averaging fires at the end of this step.
+    pub averaging: bool,
+}
+
+/// Per-driver hooks for the engine-specific ops.
+pub(crate) struct RankHooks<'a> {
+    /// Installed by the TCP driver only: refresh the global restore
+    /// point (control-plane shard allgather). In-proc drivers snapshot
+    /// centrally after the step instead.
+    pub ckpt_refresh: Option<&'a (dyn Fn(&Worker) -> Result<()> + Sync)>,
+}
+
+impl RankHooks<'_> {
+    pub(crate) fn none() -> RankHooks<'static> {
+        RankHooks { ckpt_refresh: None }
+    }
+}
+
+/// Per-group compile-time facts + plans for the segmented path.
+struct GroupPlans {
+    /// Effective scheme (k=1 degrades to B/K).
+    scheme: McastScheme,
+    rounds: usize,
+    /// FC-stack batch rows per round (B, or B·K for scheme BK).
+    fcb: usize,
+    /// Artifact-name suffix for this scheme's FC segments.
+    suffix: &'static str,
+    head_name: String,
+    modulo: ModuloPlan,
+    modulo_lab: ModuloPlan,
+    shard0: ShardPlan,
+    shard1: ShardPlan,
+}
+
+/// Per-rank transient state for one step of the program.
+pub(crate) struct RankState {
+    gid: usize,
+    gi: usize,
+    k: usize,
+    /// `None` on the fused mp=1 path (no exchanges, no plans).
+    plans: Option<GroupPlans>,
+    /// Labels as `[B, 1]` f32 for the modulo exchange; `None` on the
+    /// fused path (which feeds the i32 labels straight to `full_step`).
+    labels_f32: Option<HostTensor>,
+    act: Option<HostTensor>,
+    assembled: Option<HostTensor>,
+    labs: Option<HostTensor>,
+    h0l: Option<HostTensor>,
+    h0: Option<HostTensor>,
+    h1l: Option<HostTensor>,
+    h1: Option<HostTensor>,
+    gh1_full: Option<HostTensor>,
+    g_h1l: Option<HostTensor>,
+    gh0_partial: Option<HostTensor>,
+    g_h0l: Option<HostTensor>,
+    gbatch_partial: Option<HostTensor>,
+}
+
+impl RankState {
+    /// Build rank `rank`'s execution state for one step of `program`.
+    pub(crate) fn new(rank: usize, program: &StepProgram, batch: &Batch, ctx: &ExecCtx<'_>) -> RankState {
+        let gid = ctx.topo.gid(rank);
+        let gi = ctx.topo.offset(rank);
+        let k = ctx.topo.mp;
+        let b = ctx.batch;
+        // The fused mp=1 path feeds `full_step` directly: no plans, no
+        // label conversion — keep its per-step overhead at zero.
+        let (plans, labels_f32) = if program.rounds == 0 {
+            (None, None)
+        } else {
+            let members = ctx.topo.members(gid);
+            let labels_f32 = HostTensor::f32(
+                vec![b, 1],
+                batch.labels.as_i32().iter().map(|&v| v as f32).collect(),
+            );
+            let boundary = ctx.schedule.boundary_width;
+            let s0 = ctx.schedule.shard_widths[0];
+            let s1 = ctx.schedule.shard_widths[1];
+            let scheme = if k > 1 { ctx.scheme } else { McastScheme::BoverK };
+            let head_name = match scheme {
+                McastScheme::BK if k > 1 => format!("head_step_bk{k}"),
+                _ => "head_step".to_string(),
+            };
+            let plans = GroupPlans {
+                scheme,
+                rounds: scheme.rounds(k),
+                fcb: scheme.fc_batch(b, k),
+                suffix: scheme.artifact_suffix(),
+                head_name,
+                modulo: ModuloPlan::new(members.clone(), b, boundary),
+                modulo_lab: ModuloPlan::new(members.clone(), b, 1),
+                shard0: ShardPlan::new(members.clone(), s0, ShardBwdMode::ReducePartials)
+                    .with_algo(ctx.algo),
+                shard1: ShardPlan::new(members, s1, ShardBwdMode::SliceReplicated)
+                    .with_algo(ctx.algo),
+            };
+            (Some(plans), Some(labels_f32))
+        };
+        RankState {
+            gid,
+            gi,
+            k,
+            plans,
+            labels_f32,
+            act: None,
+            assembled: None,
+            labs: None,
+            h0l: None,
+            h0: None,
+            h1l: None,
+            h1: None,
+            gh1_full: None,
+            g_h1l: None,
+            gh0_partial: None,
+            g_h0l: None,
+            gbatch_partial: None,
+        }
+    }
+
+    fn plans(&self) -> &GroupPlans {
+        self.plans.as_ref().expect("segmented program op on the fused mp=1 path")
+    }
+}
+
+/// mp=1 fast path: one fused full_step call + local SGD update for one
+/// worker. The single shared body of the `FullStep` op, so no engine
+/// can drift from another.
+pub(crate) fn full_step_worker(rt: &RuntimeClient, w: &mut Worker, batch: &Batch) -> Result<()> {
+    let t = Timer::start();
+    let mut inputs: Vec<HostTensor> =
+        Vec::with_capacity(w.conv_params.len() + w.fc_params.len() + 2);
+    inputs.extend(w.conv_params.iter().cloned());
+    inputs.extend(w.fc_params.iter().cloned());
+    inputs.push(batch.images.clone());
+    inputs.push(batch.labels.clone());
+    let out = rt.run("full_step", &inputs)?;
+    w.loss_acc += out[0].scalar() as f64;
+    let conv_grads = &out[1..15];
+    let fc_grads = &out[15..21];
+    w.update_conv(conv_grads);
+    let fcg: Vec<(usize, HostTensor)> = fc_grads.iter().cloned().enumerate().collect();
+    w.accumulate_fc_grads(&fcg);
+    w.update_fc(1);
+    w.compute_secs += t.elapsed_secs();
+    Ok(())
+}
+
+/// Execute one op of the program for one rank. The only implementation
+/// of every op's per-rank body — all three engines funnel through here.
+pub(crate) fn exec_op(
+    op: StepOp,
+    rank: usize,
+    w: &mut Worker,
+    batch: &Batch,
+    st: &mut RankState,
+    ctx: &ExecCtx<'_>,
+    hooks: &RankHooks<'_>,
+) -> Result<()> {
+    let fabric = ctx.transport;
+    match op {
+        StepOp::CrashPoll => {
+            if fabric.poll_crash(rank) {
+                // poll_crash already declared this rank dead and
+                // aborted the step on the transport.
+                return Err(WorkerCrashed { rank, step: fabric.current_step() }.into());
+            }
+            Ok(())
+        }
+        StepOp::Barrier(_) => Ok(()), // driver-interpreted marker
+        StepOp::FullStep => full_step_worker(ctx.rt, w, batch),
+        StepOp::ConvFwd => {
+            let t = Timer::start();
+            let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
+            inputs.push(batch.images.clone());
+            let act = ctx
+                .rt
+                .run("conv_fwd", &inputs)?
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("conv_fwd returned no output"))?;
+            w.compute_secs += t.elapsed_secs();
+            st.act = Some(act);
+            Ok(())
+        }
+        StepOp::PostActs { round } => {
+            let p = st.plans();
+            let act = st.act.as_ref().expect("ConvFwd precedes PostActs");
+            let tag = Tag::new(1, round, st.gid);
+            match p.scheme {
+                McastScheme::BoverK => p.modulo.post_fwd_rank(fabric, st.gi, act, round, tag),
+                McastScheme::B => post_scheme_b_rank(&p.modulo, fabric, st.gi, act, round, tag),
+                McastScheme::BK => post_bk_rank(&p.modulo, fabric, st.gi, act, tag),
+            }
+            Ok(())
+        }
+        StepOp::PostLabels { round } => {
+            let p = st.plans();
+            let labels = st.labels_f32.as_ref().expect("segmented path carries f32 labels");
+            let tag = Tag::new(2, round, st.gid);
+            match p.scheme {
+                McastScheme::BoverK => {
+                    p.modulo_lab.post_fwd_rank(fabric, st.gi, labels, round, tag)
+                }
+                McastScheme::B => {
+                    post_scheme_b_rank(&p.modulo_lab, fabric, st.gi, labels, round, tag)
+                }
+                McastScheme::BK => post_bk_rank(&p.modulo_lab, fabric, st.gi, labels, tag),
+            }
+            Ok(())
+        }
+        StepOp::ModuloGather { round } => {
+            let (assembled, labs) = {
+                let p = st.plans();
+                let act = st.act.as_ref().expect("ConvFwd precedes ModuloGather");
+                let labels = st.labels_f32.as_ref().expect("segmented path carries f32 labels");
+                let tag1 = Tag::new(1, round, st.gid);
+                let tag2 = Tag::new(2, round, st.gid);
+                match p.scheme {
+                    McastScheme::BoverK => (
+                        p.modulo.gather_fwd_rank(fabric, st.gi, act, round, tag1)?,
+                        p.modulo_lab.gather_fwd_rank(fabric, st.gi, labels, round, tag2)?,
+                    ),
+                    McastScheme::B => (
+                        gather_scheme_b_rank(&p.modulo, fabric, st.gi, act, round, tag1)?,
+                        gather_scheme_b_rank(&p.modulo_lab, fabric, st.gi, labels, round, tag2)?,
+                    ),
+                    McastScheme::BK => (
+                        gather_bk_rank(&p.modulo, fabric, st.gi, act, tag1)?,
+                        gather_bk_rank(&p.modulo_lab, fabric, st.gi, labels, tag2)?,
+                    ),
+                }
+            };
+            st.assembled = Some(assembled);
+            st.labs = Some(labs);
+            Ok(())
+        }
+        StepOp::FcFwd { seg, round: _ } => {
+            let out = {
+                let p = st.plans();
+                let k = st.k;
+                let (input, wi) = if seg == 0 {
+                    (st.assembled.as_ref().expect("ModuloGather precedes FcFwd{0}"), 0)
+                } else {
+                    (st.h0.as_ref().expect("ShardGather{0} precedes FcFwd{1}"), 2)
+                };
+                let t = Timer::start();
+                let out = ctx
+                    .rt
+                    .run(
+                        &format!("fc{seg}_fwd_k{k}{}", p.suffix),
+                        &[w.fc_params[wi].clone(), w.fc_params[wi + 1].clone(), input.clone()],
+                    )?
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("fc{seg}_fwd returned no output"))?;
+                w.compute_secs += t.elapsed_secs();
+                out
+            };
+            if seg == 0 {
+                st.h0l = Some(out);
+            } else {
+                st.h1l = Some(out);
+            }
+            Ok(())
+        }
+        StepOp::ShardGather { seg, round } => {
+            let full = {
+                let p = st.plans();
+                if seg == 0 {
+                    let part = st.h0l.as_ref().expect("FcFwd{0} precedes ShardGather{0}");
+                    p.shard0.gather_full_rank(fabric, st.gi, part, Tag::new(3, round, st.gid))?
+                } else {
+                    let part = st.h1l.as_ref().expect("FcFwd{1} precedes ShardGather{1}");
+                    p.shard1.gather_full_rank(fabric, st.gi, part, Tag::new(4, round, st.gid))?
+                }
+            };
+            if seg == 0 {
+                st.h0 = Some(full);
+            } else {
+                st.h1 = Some(full);
+            }
+            Ok(())
+        }
+        StepOp::HeadStep { round: _ } => {
+            let (loss, g4, g5, gh1) = {
+                let p = st.plans();
+                let h1 = st.h1.as_ref().expect("ShardGather{1} precedes HeadStep");
+                let labs = st.labs.as_ref().expect("ModuloGather precedes HeadStep");
+                let labels_i32 = HostTensor::i32(
+                    vec![p.fcb],
+                    labs.as_f32().iter().map(|&v| v as i32).collect(),
+                );
+                let t = Timer::start();
+                let out = ctx.rt.run(
+                    &p.head_name,
+                    &[w.fc_params[4].clone(), w.fc_params[5].clone(), h1.clone(), labels_i32],
+                )?;
+                w.compute_secs += t.elapsed_secs();
+                (out[0].scalar() as f64, out[1].clone(), out[2].clone(), out[3].clone())
+            };
+            w.loss_acc += loss;
+            w.accumulate_fc_grads(&[(4, g4), (5, g5)]);
+            st.gh1_full = Some(gh1);
+            Ok(())
+        }
+        StepOp::ShardBwd { seg, round } => {
+            let out = {
+                let p = st.plans();
+                if seg == 1 {
+                    // Replicated head above: zero-wire local slice.
+                    let g = st.gh1_full.as_ref().expect("HeadStep precedes ShardBwd{1}");
+                    p.shard1.backward_rank(fabric, st.gi, g, Tag::new(5, round, st.gid))?
+                } else {
+                    // Partitioned layer above: reduce the partial sums.
+                    let g = st.gh0_partial.as_ref().expect("FcBwd{1} precedes ShardBwd{0}");
+                    p.shard0.backward_rank(fabric, st.gi, g, Tag::new(6, round, st.gid))?
+                }
+            };
+            if seg == 1 {
+                st.g_h1l = Some(out);
+            } else {
+                st.g_h0l = Some(out);
+            }
+            Ok(())
+        }
+        StepOp::FcBwd { seg, round: _ } => {
+            let (ga, gb, gx) = {
+                let p = st.plans();
+                let k = st.k;
+                let (x, gy, wi) = if seg == 1 {
+                    (
+                        st.h0.as_ref().expect("ShardGather{0} precedes FcBwd{1}"),
+                        st.g_h1l.as_ref().expect("ShardBwd{1} precedes FcBwd{1}"),
+                        2,
+                    )
+                } else {
+                    (
+                        st.assembled.as_ref().expect("ModuloGather precedes FcBwd{0}"),
+                        st.g_h0l.as_ref().expect("ShardBwd{0} precedes FcBwd{0}"),
+                        0,
+                    )
+                };
+                let t = Timer::start();
+                let out = ctx.rt.run(
+                    &format!("fc{seg}_bwd_k{k}{}", p.suffix),
+                    &[
+                        w.fc_params[wi].clone(),
+                        w.fc_params[wi + 1].clone(),
+                        x.clone(),
+                        gy.clone(),
+                    ],
+                )?;
+                w.compute_secs += t.elapsed_secs();
+                (out[0].clone(), out[1].clone(), out[2].clone())
+            };
+            let wi = if seg == 1 { 2 } else { 0 };
+            w.accumulate_fc_grads(&[(wi, ga), (wi + 1, gb)]);
+            if seg == 1 {
+                st.gh0_partial = Some(gx);
+            } else {
+                st.gbatch_partial = Some(gx);
+            }
+            Ok(())
+        }
+        StepOp::PostGrads { round } => {
+            let p = st.plans();
+            let g = st.gbatch_partial.as_ref().expect("FcBwd{0} precedes PostGrads");
+            let tag = Tag::new(7, round, st.gid);
+            match p.scheme {
+                McastScheme::BoverK => p.modulo.post_bwd_rank(fabric, st.gi, g, tag),
+                McastScheme::B => post_bwd_scheme_b_rank(&p.modulo, fabric, st.gi, g, round, tag),
+                McastScheme::BK => post_bwd_bk_rank(&p.modulo, fabric, st.gi, g, tag),
+            }
+            Ok(())
+        }
+        StepOp::ReduceGrads { round } => {
+            // Split the g_act accumulator out of the worker so the plan
+            // borrow and the mutable write don't overlap.
+            let mut g_act = std::mem::replace(&mut w.g_act, HostTensor::zeros(vec![0]));
+            let res = {
+                let p = st.plans();
+                let g = st.gbatch_partial.as_ref().expect("FcBwd{0} precedes ReduceGrads");
+                let tag = Tag::new(7, round, st.gid);
+                match p.scheme {
+                    McastScheme::BoverK => {
+                        p.modulo.reduce_bwd_rank(fabric, st.gi, g, &mut g_act, round, tag)
+                    }
+                    McastScheme::B => reduce_bwd_scheme_b_rank(
+                        &p.modulo, fabric, st.gi, g, &mut g_act, round, tag,
+                    ),
+                    McastScheme::BK => {
+                        let r = reduce_bwd_bk_rank(&p.modulo, fabric, st.gi, g, &mut g_act, tag);
+                        if r.is_ok() && st.k > 1 {
+                            // LR consistency: BK's head averaged over
+                            // B*K examples — rescale (scheme.rs docs).
+                            g_act.scale(st.k as f32);
+                        }
+                        r
+                    }
+                }
+            };
+            w.g_act = g_act;
+            res
+        }
+        StepOp::ConvBwdUpdate => {
+            let rounds = st.plans().rounds;
+            let t = Timer::start();
+            let mut inputs: Vec<HostTensor> = w.conv_params.to_vec();
+            inputs.push(batch.images.clone());
+            inputs.push(w.g_act.clone());
+            let grads = ctx.rt.run("conv_bwd", &inputs)?;
+            w.update_conv(&grads);
+            w.update_fc(rounds);
+            w.compute_secs += t.elapsed_secs();
+            Ok(())
+        }
+        StepOp::AverageReplicated => {
+            average_replicated_rank(fabric, w, rank, ctx.topo.n_workers, ctx.algo)
+        }
+        StepOp::AverageShards => average_shards_rank(fabric, w, rank, ctx.topo, ctx.algo),
+        StepOp::CheckpointRefresh => match hooks.ckpt_refresh {
+            Some(refresh) => refresh(w),
+            None => Ok(()),
+        },
+    }
+}
+
+/// Run a span of the program for one rank, in order, stopping at the
+/// first error. Barrier markers are no-ops here — the caller owns them.
+pub(crate) fn run_rank_span(
+    ops: &[StepOp],
+    rank: usize,
+    w: &mut Worker,
+    batch: &Batch,
+    st: &mut RankState,
+    ctx: &ExecCtx<'_>,
+    hooks: &RankHooks<'_>,
+) -> Result<()> {
+    for &op in ops {
+        exec_op(op, rank, w, batch, st, ctx, hooks)?;
+    }
+    Ok(())
+}
+
+/// Drive the whole program **op-major** over every rank on the calling
+/// thread — the sequential engine. Non-rendezvous ops run rank-by-rank
+/// (compute stays contention-free, which is what the calibrated benches
+/// time); rendezvous ops run all ranks on a local thread scope, exactly
+/// like the seed's sequential engine ran its collectives. Per-rank
+/// arithmetic is `exec_op`'s, so numerics are bit-identical to the
+/// threaded and TCP engines by construction.
+pub(crate) fn run_lockstep(
+    program: &StepProgram,
+    workers: &mut [Worker],
+    batches: &[Batch],
+    ctx: &ExecCtx<'_>,
+) -> Result<()> {
+    let n = workers.len();
+    let mut states: Vec<RankState> = (0..n)
+        .map(|r| RankState::new(r, program, &batches[r], ctx))
+        .collect();
+    let hooks = RankHooks::none();
+    for &op in program.ops() {
+        match op {
+            StepOp::Barrier(_) => {}
+            StepOp::CrashPoll => {
+                // Fire every rank's pending crash in rank order (the
+                // fired-flag consumption order is part of the replay
+                // contract), then propagate the first crashed rank.
+                let mut crashed = None;
+                for rank in 0..n {
+                    if ctx.transport.poll_crash(rank) && crashed.is_none() {
+                        crashed = Some(rank);
+                    }
+                }
+                if let Some(rank) = crashed {
+                    return Err(
+                        WorkerCrashed { rank, step: ctx.transport.current_step() }.into()
+                    );
+                }
+            }
+            op if op.averaging_only() && !ctx.averaging => {}
+            op if op.rendezvous() => {
+                let results: Vec<Result<()>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = workers
+                        .iter_mut()
+                        .zip(states.iter_mut())
+                        .zip(batches.iter())
+                        .enumerate()
+                        .map(|(rank, ((w, st), batch))| {
+                            let hooks = &hooks;
+                            s.spawn(move || exec_op(op, rank, w, batch, st, ctx, hooks))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| {
+                            h.join()
+                                .unwrap_or_else(|_| Err(anyhow!("lockstep worker panicked")))
+                        })
+                        .collect()
+                });
+                for r in results {
+                    r?;
+                }
+            }
+            op => {
+                for (rank, (w, st)) in workers.iter_mut().zip(states.iter_mut()).enumerate() {
+                    exec_op(op, rank, w, &batches[rank], st, ctx, &hooks)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The threaded engine's per-thread drive of the program: MP span,
+/// barrier (reached on error and panic paths too, so a failing worker
+/// never wedges its peers), then the averaging span. Any failure aborts
+/// the step on the transport first, so peers parked on blocking takes
+/// wake with a typed error instead of waiting out the take timeout.
+pub(crate) fn run_rank_threaded(
+    program: &StepProgram,
+    rank: usize,
+    w: &mut Worker,
+    batch: &Batch,
+    ctx: &ExecCtx<'_>,
+    barrier: &Barrier,
+) -> Result<()> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let hooks = RankHooks::none();
+    let mut st = RankState::new(rank, program, batch, ctx);
+    let mp = catch_unwind(AssertUnwindSafe(|| {
+        run_rank_span(program.mp_span(), rank, &mut *w, batch, &mut st, ctx, &hooks)
+    }))
+    .unwrap_or_else(|_| Err(anyhow!("worker {rank} panicked in the MP phase")));
+    if mp.is_err() {
+        ctx.transport.abort_step();
+    }
+    barrier.wait();
+    let avg = if mp.is_ok() && ctx.averaging {
+        catch_unwind(AssertUnwindSafe(|| {
+            run_rank_span(program.avg_span(), rank, &mut *w, batch, &mut st, ctx, &hooks)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("worker {rank} panicked in averaging")))
+    } else {
+        Ok(())
+    };
+    if avg.is_err() {
+        ctx.transport.abort_step();
+    }
+    mp.and(avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{partition_network, vgg11, PartitionConfig};
+    use crate::runtime::RuntimeClient;
+
+    fn program(n: usize, mp: usize, scheme: McastScheme, overlap: bool) -> StepProgram {
+        let rt = RuntimeClient::native().unwrap();
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )
+        .unwrap();
+        let topo = GmpTopology::new(n, mp).unwrap();
+        let schedule = StepSchedule::compile_with_algo(
+            &net,
+            topo,
+            &rt.manifest,
+            false,
+            scheme,
+            CollectiveAlgo::Ring,
+        )
+        .unwrap();
+        StepProgram::compile(&schedule, scheme, false, overlap)
+    }
+
+    #[test]
+    fn fused_program_shape() {
+        let p = program(4, 1, McastScheme::BoverK, false);
+        assert_eq!(p.rounds, 0);
+        assert_eq!(p.mp_span(), &[StepOp::CrashPoll, StepOp::FullStep]);
+        // mp=1: no shard averaging op compiled.
+        assert_eq!(
+            p.avg_span(),
+            &[StepOp::AverageReplicated, StepOp::CheckpointRefresh]
+        );
+        assert_eq!(p.ops().first(), Some(&StepOp::CrashPoll));
+        assert_eq!(p.ops().last(), Some(&StepOp::Barrier(BarrierId::End)));
+    }
+
+    #[test]
+    fn segmented_program_has_k_rounds_and_shard_average() {
+        let p = program(4, 2, McastScheme::BoverK, false);
+        assert_eq!(p.rounds, 2);
+        let gathers = p
+            .ops()
+            .iter()
+            .filter(|o| matches!(o, StepOp::ModuloGather { .. }))
+            .count();
+        assert_eq!(gathers, 2);
+        assert!(p.avg_span().contains(&StepOp::AverageShards));
+        // BSP order: each round's posts immediately precede its gather.
+        let ops = p.mp_span();
+        let gather0 = ops
+            .iter()
+            .position(|o| *o == StepOp::ModuloGather { round: 0 })
+            .unwrap();
+        assert_eq!(ops[gather0 - 2], StepOp::PostActs { round: 0 });
+        assert_eq!(ops[gather0 - 1], StepOp::PostLabels { round: 0 });
+    }
+
+    #[test]
+    fn overlap_hoists_posts_without_changing_takes() {
+        let bsp = program(4, 2, McastScheme::BoverK, false);
+        let ovl = program(4, 2, McastScheme::BoverK, true);
+        // Same multiset of ops (overlap moves posts, never adds/drops).
+        let count = |p: &StepProgram, f: &dyn Fn(&StepOp) -> bool| {
+            p.ops().iter().filter(|&o| f(o)).count()
+        };
+        for f in [
+            (&|o: &StepOp| matches!(o, StepOp::PostActs { .. })) as &dyn Fn(&StepOp) -> bool,
+            &|o: &StepOp| matches!(o, StepOp::PostLabels { .. }),
+            &|o: &StepOp| matches!(o, StepOp::ModuloGather { .. }),
+            &|o: &StepOp| matches!(o, StepOp::ReduceGrads { .. }),
+        ] {
+            assert_eq!(count(&bsp, f), count(&ovl, f));
+        }
+        // Take order is untouched by the hoist.
+        let takes = |p: &StepProgram| -> Vec<StepOp> {
+            p.ops()
+                .iter()
+                .copied()
+                .filter(|o| {
+                    matches!(
+                        o,
+                        StepOp::ModuloGather { .. }
+                            | StepOp::ShardGather { .. }
+                            | StepOp::ReduceGrads { .. }
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(takes(&bsp), takes(&ovl));
+        // Hoisted: every label post precedes ConvFwd; every act post
+        // precedes the first gather.
+        let ops = ovl.mp_span();
+        let conv = ops.iter().position(|o| *o == StepOp::ConvFwd).unwrap();
+        let first_gather = ops
+            .iter()
+            .position(|o| matches!(o, StepOp::ModuloGather { .. }))
+            .unwrap();
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                StepOp::PostLabels { .. } => assert!(i < conv, "label post after ConvFwd"),
+                StepOp::PostActs { .. } => {
+                    assert!(i > conv && i < first_gather, "act post not hoisted")
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn rendezvous_classification() {
+        assert!(StepOp::ShardGather { seg: 0, round: 0 }.rendezvous());
+        assert!(StepOp::ShardBwd { seg: 0, round: 0 }.rendezvous());
+        assert!(!StepOp::ShardBwd { seg: 1, round: 0 }.rendezvous(), "local slice, no wire");
+        assert!(StepOp::AverageReplicated.rendezvous());
+        assert!(!StepOp::ModuloGather { round: 0 }.rendezvous(), "posts precede op-major takes");
+        assert!(!StepOp::PostActs { round: 0 }.rendezvous());
+    }
+
+    #[test]
+    fn bk_scheme_compiles_single_round() {
+        let p = program(2, 2, McastScheme::BK, true);
+        assert_eq!(p.rounds, 1);
+        assert!(p.overlap);
+    }
+}

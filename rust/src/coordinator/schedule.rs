@@ -332,6 +332,20 @@ impl StepSchedule {
         })
     }
 
+    /// Compile the per-rank step program for this schedule — the op
+    /// list every execution engine drives (see
+    /// [`super::program::StepProgram`]). `overlap` hoists the modulo
+    /// post halves for comm/compute overlap; numerics are identical
+    /// either way.
+    pub fn compile_program(
+        &self,
+        scheme: McastScheme,
+        segmented_mp1: bool,
+        overlap: bool,
+    ) -> super::program::StepProgram {
+        super::program::StepProgram::compile(self, scheme, segmented_mp1, overlap)
+    }
+
     /// Modeled MP communication seconds per step.
     pub fn mp_comm_secs(&self, net: &NetModel) -> f64 {
         let t: f64 = self

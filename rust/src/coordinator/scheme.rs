@@ -218,14 +218,41 @@ pub fn scatter_reduce_bk(
 }
 
 // ---------------------------------------------------------------------------
-// Per-rank (SPMD) forms, used by the threaded engine. Reduction orders
-// mirror the group-view functions above exactly (own contribution
-// first, then peers in group order), so the two engines agree
-// bit-for-bit.
+// Per-rank (SPMD) forms, used by the step-program executor. Reduction
+// orders mirror the group-view functions above exactly (own
+// contribution first, then peers in group order), so every engine
+// agrees bit-for-bit. Like the B/K plan in `modulo.rs`, each exchange
+// is split into a post half (pure sends, hoistable by the overlapped
+// executor) and a take half (blocking receives + fixed-order reduce);
+// the BSP program runs them back to back, the overlapped one hoists
+// the posts.
 
-/// Per-rank scheme-B fprop, round `round`: the round's owner broadcasts
-/// its whole batch; everyone returns the owner's batch.
-pub fn assemble_scheme_b_rank(
+/// Post half of the per-rank scheme-B fprop, round `round`: the round's
+/// owner broadcasts its whole batch; non-owners send nothing.
+pub fn post_scheme_b_rank(
+    plan: &ModuloPlan,
+    fabric: &dyn Transport,
+    gi: usize,
+    act: &HostTensor,
+    round: usize,
+    tag: Tag,
+) {
+    let kk = plan.k();
+    assert!(round < kk && gi < kk);
+    if gi != round {
+        return;
+    }
+    let owner = plan.group[round];
+    for &dst in &plan.group {
+        if dst != owner {
+            fabric.post(owner, dst, tag, act.as_f32().to_vec());
+        }
+    }
+}
+
+/// Take half of the per-rank scheme-B fprop: everyone returns the
+/// round owner's batch (the owner its own copy, peers via a take).
+pub fn gather_scheme_b_rank(
     plan: &ModuloPlan,
     fabric: &dyn Transport,
     gi: usize,
@@ -235,25 +262,37 @@ pub fn assemble_scheme_b_rank(
 ) -> Result<HostTensor> {
     let kk = plan.k();
     assert!(round < kk && gi < kk);
+    if gi == round {
+        return Ok(act.clone());
+    }
     let owner = plan.group[round];
     let me = plan.group[gi];
-    if gi == round {
-        for &dst in &plan.group {
-            if dst != owner {
-                fabric.post(owner, dst, tag, act.as_f32().to_vec());
-            }
-        }
-        Ok(act.clone())
-    } else {
-        let data = fabric.take_blocking(me, owner, tag)?;
-        Ok(HostTensor::f32(vec![plan.batch, plan.width], data))
-    }
+    let data = fabric.take_blocking(me, owner, tag)?;
+    Ok(HostTensor::f32(vec![plan.batch, plan.width], data))
 }
 
-/// Per-rank scheme-B bprop, round `round`: non-owners send their full
-/// partial gradient to the owner; the owner reduces the K copies into
-/// its whole activation-gradient buffer (peers in group order).
-pub fn scatter_reduce_scheme_b_rank(
+/// Post half of the per-rank scheme-B bprop: non-owners send their full
+/// partial gradient to the round's owner.
+pub fn post_bwd_scheme_b_rank(
+    plan: &ModuloPlan,
+    fabric: &dyn Transport,
+    gi: usize,
+    gbatch: &HostTensor,
+    round: usize,
+    tag: Tag,
+) {
+    if gi == round {
+        return;
+    }
+    let owner = plan.group[round];
+    let me = plan.group[gi];
+    fabric.post(me, owner, tag, gbatch.as_f32().to_vec());
+}
+
+/// Take half of the per-rank scheme-B bprop: the owner reduces the K
+/// copies (own first, then peers in group order) into its whole
+/// activation-gradient buffer; non-owners do nothing.
+pub fn reduce_bwd_scheme_b_rank(
     plan: &ModuloPlan,
     fabric: &dyn Transport,
     gi: usize,
@@ -262,12 +301,10 @@ pub fn scatter_reduce_scheme_b_rank(
     round: usize,
     tag: Tag,
 ) -> Result<()> {
-    let owner = plan.group[round];
-    let me = plan.group[gi];
     if gi != round {
-        fabric.post(me, owner, tag, gbatch.as_f32().to_vec());
         return Ok(());
     }
+    let owner = plan.group[round];
     let mut acc = gbatch.clone();
     for &src in &plan.group {
         if src != owner {
@@ -279,9 +316,20 @@ pub fn scatter_reduce_scheme_b_rank(
     Ok(())
 }
 
-/// Per-rank scheme-BK fprop (single round): every member broadcasts its
-/// whole batch; returns the member-ordered `[B*K, width]` concatenation.
-pub fn assemble_bk_rank(
+/// Post half of the per-rank scheme-BK fprop: broadcast this member's
+/// whole batch to every peer.
+pub fn post_bk_rank(plan: &ModuloPlan, fabric: &dyn Transport, gi: usize, act: &HostTensor, tag: Tag) {
+    let me = plan.group[gi];
+    for &dst in &plan.group {
+        if dst != me {
+            fabric.post(me, dst, tag, act.as_f32().to_vec());
+        }
+    }
+}
+
+/// Take half of the per-rank scheme-BK fprop: assemble the
+/// member-ordered `[B*K, width]` concatenation.
+pub fn gather_bk_rank(
     plan: &ModuloPlan,
     fabric: &dyn Transport,
     gi: usize,
@@ -291,11 +339,6 @@ pub fn assemble_bk_rank(
     let kk = plan.k();
     let b = plan.batch;
     let me = plan.group[gi];
-    for &dst in &plan.group {
-        if dst != me {
-            fabric.post(me, dst, tag, act.as_f32().to_vec());
-        }
-    }
     let mut big = HostTensor::zeros(vec![b * kk, plan.width]);
     for (j, &src) in plan.group.iter().enumerate() {
         if j == gi {
@@ -308,10 +351,28 @@ pub fn assemble_bk_rank(
     Ok(big)
 }
 
-/// Per-rank scheme-BK bprop: routes the `[B*K, width]` partial gradient
-/// back by B-row owner block and reduces this member's block (own copy
-/// first, then peers in group order).
-pub fn scatter_reduce_bk_rank(
+/// Post half of the per-rank scheme-BK bprop: route each B-row owner
+/// block of the `[B*K, width]` partial gradient to its owner.
+pub fn post_bwd_bk_rank(
+    plan: &ModuloPlan,
+    fabric: &dyn Transport,
+    gi: usize,
+    gbatch: &HostTensor,
+    tag: Tag,
+) {
+    let b = plan.batch;
+    let me = plan.group[gi];
+    for (i, &dst) in plan.group.iter().enumerate() {
+        if i != gi {
+            let block = gbatch.slice_rows(i * b, (i + 1) * b);
+            fabric.post(me, dst, tag, block.as_f32().to_vec());
+        }
+    }
+}
+
+/// Take half of the per-rank scheme-BK bprop: reduce this member's
+/// block (own copy first, then peers in group order).
+pub fn reduce_bwd_bk_rank(
     plan: &ModuloPlan,
     fabric: &dyn Transport,
     gi: usize,
@@ -321,12 +382,6 @@ pub fn scatter_reduce_bk_rank(
 ) -> Result<()> {
     let b = plan.batch;
     let me = plan.group[gi];
-    for (i, &dst) in plan.group.iter().enumerate() {
-        if i != gi {
-            let block = gbatch.slice_rows(i * b, (i + 1) * b);
-            fabric.post(me, dst, tag, block.as_f32().to_vec());
-        }
-    }
     let mut acc = gbatch.slice_rows(gi * b, (gi + 1) * b);
     for &src in &plan.group {
         if src != me {

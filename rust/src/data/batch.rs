@@ -28,8 +28,10 @@ impl Batch {
     }
 }
 
-/// An indexable dataset of CIFAR-shaped examples.
-pub trait Dataset {
+/// An indexable dataset of CIFAR-shaped examples. `Send + Sync` so
+/// worker threads can prefetch batches (overlap's double buffering)
+/// and the multi-process driver can hand one shared handle around.
+pub trait Dataset: Send + Sync {
     /// Number of examples.
     fn len(&self) -> usize;
     /// True when the dataset is empty.
@@ -58,10 +60,10 @@ pub trait Dataset {
 }
 
 /// Epoch-shuffled, DP-sharded batch iterator. Infinite (wraps epochs).
-/// Holds the dataset by `Rc` so the cluster driver can hand one shared
-/// dataset to every worker's iterator.
+/// Holds the dataset by `Arc` so the cluster driver can hand one shared
+/// dataset to every worker's iterator (and worker threads can prefetch).
 pub struct BatchIter {
-    data: std::rc::Rc<dyn Dataset>,
+    data: std::sync::Arc<dyn Dataset>,
     batch: usize,
     worker: usize,
     n_workers: usize,
@@ -74,7 +76,7 @@ pub struct BatchIter {
 impl BatchIter {
     /// Build worker `worker`-of-`n_workers`'s iterator over `data`.
     pub fn new(
-        data: std::rc::Rc<dyn Dataset>,
+        data: std::sync::Arc<dyn Dataset>,
         batch: usize,
         worker: usize,
         n_workers: usize,
@@ -146,7 +148,7 @@ mod tests {
 
     #[test]
     fn batch_shapes() {
-        let ds: std::rc::Rc<dyn Dataset> = std::rc::Rc::new(Toy(100));
+        let ds: std::sync::Arc<dyn Dataset> = std::sync::Arc::new(Toy(100));
         let mut it = BatchIter::new(ds.clone(), 8, 0, 1, 1);
         let b = it.next_batch();
         assert_eq!(b.images.shape, vec![8, 32, 32, 3]);
@@ -156,7 +158,7 @@ mod tests {
 
     #[test]
     fn dp_shards_are_disjoint() {
-        let ds: std::rc::Rc<dyn Dataset> = std::rc::Rc::new(Toy(40));
+        let ds: std::sync::Arc<dyn Dataset> = std::sync::Arc::new(Toy(40));
         let mut seen = [vec![], vec![]];
         for w in 0..2 {
             let mut it = BatchIter::new(ds.clone(), 4, w, 2, 9);
@@ -173,7 +175,7 @@ mod tests {
 
     #[test]
     fn wraps_epochs() {
-        let ds: std::rc::Rc<dyn Dataset> = std::rc::Rc::new(Toy(6));
+        let ds: std::sync::Arc<dyn Dataset> = std::sync::Arc::new(Toy(6));
         let mut it = BatchIter::new(ds.clone(), 4, 0, 1, 3);
         assert_eq!(it.epoch(), 0);
         it.next_batch();
@@ -183,7 +185,7 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let ds: std::rc::Rc<dyn Dataset> = std::rc::Rc::new(Toy(50));
+        let ds: std::sync::Arc<dyn Dataset> = std::sync::Arc::new(Toy(50));
         let a: Vec<i32> = {
             let mut it = BatchIter::new(ds.clone(), 8, 0, 1, 42);
             it.next_batch().labels.as_i32().to_vec()
@@ -197,7 +199,7 @@ mod tests {
 
     #[test]
     fn shuffle_changes_across_epochs() {
-        let ds: std::rc::Rc<dyn Dataset> = std::rc::Rc::new(Toy(16));
+        let ds: std::sync::Arc<dyn Dataset> = std::sync::Arc::new(Toy(16));
         let mut it = BatchIter::new(ds.clone(), 16, 0, 1, 5);
         let e0 = it.next_batch().labels.as_i32().to_vec();
         let e1 = it.next_batch().labels.as_i32().to_vec();

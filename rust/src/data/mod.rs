@@ -16,7 +16,7 @@ pub use synthetic::SyntheticCifar;
 
 /// Load CIFAR-10 if available, else the synthetic fallback.
 /// Returns (dataset, source description).
-pub fn load_default(n_synthetic: usize, seed: u64) -> (std::rc::Rc<dyn Dataset>, String) {
+pub fn load_default(n_synthetic: usize, seed: u64) -> (std::sync::Arc<dyn Dataset>, String) {
     for dir in [
         std::env::var("CIFAR10_DIR").unwrap_or_default(),
         "data/cifar-10-batches-bin".to_string(),
@@ -24,11 +24,11 @@ pub fn load_default(n_synthetic: usize, seed: u64) -> (std::rc::Rc<dyn Dataset>,
         if !dir.is_empty() {
             if let Ok(ds) = cifar::Cifar10::load_dir(&dir) {
                 let desc = format!("CIFAR-10 from {dir} ({} images)", ds.len());
-                return (std::rc::Rc::new(ds), desc);
+                return (std::sync::Arc::new(ds), desc);
             }
         }
     }
     let ds = SyntheticCifar::new(n_synthetic, seed);
     let desc = format!("synthetic CIFAR-shaped ({n_synthetic} images, seed {seed})");
-    (std::rc::Rc::new(ds), desc)
+    (std::sync::Arc::new(ds), desc)
 }

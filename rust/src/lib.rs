@@ -25,7 +25,7 @@
 //! |---|---|
 //! | [`model`] | layer DSL, VGG-11 variant (Table 1), CCR estimates, the Listing-1 partitioner |
 //! | [`comm`] | pluggable transport (in-proc fabric + multi-process TCP wire fabric), naive/ring/rhd collectives, network cost model, comm tracing, deterministic fault injection |
-//! | [`coordinator`] | GMP topology, modulo/shard plans, step schedule, model averaging, threaded + sequential cluster engines, multi-process rank driver, elastic shrink-and-continue recovery |
+//! | [`coordinator`] | GMP topology, modulo/shard plans, step schedule, the compiled step-program IR + one executor for every engine (with overlapped execution), model averaging, threaded + sequential cluster engines, multi-process rank driver, elastic shrink-and-continue recovery |
 //! | [`runtime`] | artifact manifest + native segment executor, host tensors |
 //! | [`data`] | CIFAR-10 loader + synthetic generator, batching |
 //! | [`train`] | SGD, trainer loop, metrics, memory accounting |

@@ -3,6 +3,7 @@
 //! ```text
 //! splitbrain train    --workers 4 --mp 2 --steps 100 [--lr 0.05] [--avg-period 10]
 //!                     [--engine threaded|sequential] [--collectives ring|naive|rhd]
+//!                     [--overlap true|false] [--compute-threads N]
 //!                     [--recovery fail-fast|shrink] [--take-timeout-ms 120000]
 //!                     [--crash R@S] [--straggle R@S:MS] [--fault-seed N [--fault-count 2]]
 //! splitbrain launch   --workers 4 --mp 2 --steps 100   # multi-process TCP training
@@ -28,6 +29,9 @@ use splitbrain::util::{Args, Table};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // Deterministic compute tiling (runtime-global): any value yields
+    // bitwise-identical numerics; 1 (the default) is the seed behavior.
+    splitbrain::runtime::set_compute_threads(args.usize_or("compute-threads", 1)?);
     match args.positional(0) {
         Some("train") => cmd_train(&args),
         Some("launch") => cmd_launch(&args),
@@ -77,6 +81,7 @@ fn cluster_config(args: &Args) -> Result<ClusterConfig> {
             splitbrain::comm::fabric::TAKE_TIMEOUT_SECS * 1000,
         )?,
         faults: fault_plan(args, n_workers, steps)?,
+        overlap: args.bool_or("overlap", true)?,
         ..Default::default()
     })
 }
@@ -114,7 +119,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", DEFAULT_STEPS)?;
     let log_every = args.usize_or("log-every", 10)?.max(1);
     println!(
-        "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}, engine={}, collectives={}",
+        "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}, engine={}, collectives={}, overlap={}",
         cfg.n_workers,
         cfg.mp,
         cfg.n_workers / cfg.mp,
@@ -122,7 +127,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.lr,
         cfg.avg_period,
         cfg.engine,
-        cfg.collectives
+        cfg.collectives,
+        cfg.overlap
     );
     let mut cluster = Cluster::new(&rt, cfg)?;
     let mem = cluster.memory_report();
@@ -261,6 +267,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "mp", "steps", "lr", "momentum", "clip-norm", "scheme", "collectives", "avg-period",
         "seed", "dataset-size", "recovery", "take-timeout-ms", "crash", "straggle",
         "fault-seed", "fault-count", "artifacts", "log-every", "connect-timeout-ms",
+        "overlap", "compute-threads",
     ];
     println!("launching {n} worker processes on 127.0.0.1 ({steps} steps)...");
     let mut children = Vec::with_capacity(n);

@@ -22,4 +22,5 @@ pub mod tensor;
 
 pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
 pub use client::{Executable, RuntimeClient};
+pub use native::{compute_threads, set_compute_threads};
 pub use tensor::{DType, HostTensor};

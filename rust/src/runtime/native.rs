@@ -15,15 +15,88 @@
 //! test (sequential vs threaded cluster) is built on. All functions are
 //! pure and callable concurrently from worker threads.
 //!
+//! ## Deterministic compute tiling (`--compute-threads N`)
+//!
+//! The hot kernels (the three matmul forms, `conv3x3_relu`,
+//! `conv3x3_bwd`) optionally split their work across `N` scoped threads
+//! ([`set_compute_threads`]; default 1 = the seed's single-threaded
+//! loops). The split is a **fixed row-block partition** — block `b` of
+//! `t` covers rows `[rows·b/t, rows·(b+1)/t)` — chosen so that every
+//! output element is owned by exactly one thread and its floating-point
+//! accumulation sequence is *unchanged* from the single-threaded loop.
+//! Outputs are therefore bitwise identical for every thread count (the
+//! `tiled_*` unit tests pin this), which keeps the engine-parity and
+//! transport-parity contracts intact no matter how ranks are
+//! configured. `conv3x3_bwd` splits over *input channels* instead (its
+//! outputs `gw`/`gx` are reductions over output positions, but each
+//! `(ci, ·)` element's position-order sum is preserved within a block);
+//! `gb` is accumulated by the first block only.
+//!
 //! Layer architecture (Table 1 / `python/compile/model.py`):
 //! 7× [conv3x3 SAME + bias + relu], max-pool 2×2 after convs 1, 3, 6
 //! (32→16→8→4), flatten to 4096, then FC0/FC1 (relu) and the FC2 +
 //! log-softmax head.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use anyhow::{bail, Result};
 
 use super::artifacts::Manifest;
 use super::tensor::HostTensor;
+
+/// Runtime-global compute-tiling thread count (see the module docs).
+static COMPUTE_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the deterministic compute-tiling thread count
+/// (`--compute-threads`). 1 — the default — keeps the seed's
+/// single-threaded kernels; any value produces bitwise-identical
+/// outputs (fixed row-block split, per-element accumulation order
+/// unchanged). Values are clamped to ≥ 1.
+pub fn set_compute_threads(n: usize) {
+    COMPUTE_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The current compute-tiling thread count.
+pub fn compute_threads() -> usize {
+    COMPUTE_THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// Fixed row-block bounds: block `b` of `t` over `rows` rows is
+/// `[rows·b/t, rows·(b+1)/t)` — a pure function of `(rows, t)`, so the
+/// work split never depends on scheduling.
+fn block_bounds(rows: usize, t: usize) -> Vec<(usize, usize)> {
+    (0..t).map(|b| (rows * b / t, rows * (b + 1) / t)).collect()
+}
+
+/// Run `f(lo, hi, chunk)` over disjoint row blocks of `out` (row width
+/// `w` elements) on up to `t` scoped threads; serial when one block
+/// suffices. `chunk` is the output slice for rows `[lo, hi)`.
+fn par_row_blocks(
+    out: &mut [f32],
+    rows: usize,
+    w: usize,
+    t: usize,
+    f: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    let t = t.min(rows).max(1);
+    if t == 1 {
+        f(0, rows, out);
+        return;
+    }
+    let bounds = block_bounds(rows, t);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for &(lo, hi) in &bounds {
+            // mem::take detaches the remainder from `rest` so the split
+            // halves inherit the full outer lifetime (the chunks must
+            // outlive this loop iteration to enter the scoped threads).
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * w);
+            rest = tail;
+            let fref = &f;
+            s.spawn(move || fref(lo, hi, chunk));
+        }
+    });
+}
 
 /// Conv stack channel progression (Table 1).
 const CONV_CHANNELS: [(usize, usize); 7] =
@@ -176,55 +249,84 @@ pub fn execute(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
 
 /// `out[m,n] = a[m,k] @ b[k,n]`.
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_t(a, b, m, k, n, compute_threads())
+}
+
+/// [`matmul`] with an explicit tile count. Each output row is computed
+/// by exactly one thread with the seed's loop order, so the result is
+/// bitwise identical for every `t`.
+fn matmul_t(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, t: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let orow = &mut out[i * n..(i + 1) * n];
-        for l in 0..k {
-            let av = a[i * k + l];
-            if av != 0.0 {
-                let brow = &b[l * n..(l + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
+    par_row_blocks(&mut out, m, n, t, |lo, hi, chunk| {
+        for i in lo..hi {
+            let orow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+            for l in 0..k {
+                let av = a[i * k + l];
+                if av != 0.0 {
+                    let brow = &b[l * n..(l + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
                 }
             }
         }
-    }
+    });
     out
 }
 
 /// `out[m,n] = a[r,m]ᵀ @ g[r,n]` (weight gradients).
 fn matmul_tn(a: &[f32], g: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
+    matmul_tn_t(a, g, r, m, n, compute_threads())
+}
+
+/// [`matmul_tn`] with an explicit tile count. The seed iterated
+/// ri-outer over the whole output; here each row block iterates
+/// ri-outer over its own rows — for every output element the `ri`
+/// accumulation order is unchanged (ascending), so the result is
+/// bitwise identical to the seed at every `t` (pinned by
+/// `tiled_matmul_tn_matches_seed_order`).
+fn matmul_tn_t(a: &[f32], g: &[f32], r: usize, m: usize, n: usize, t: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
-    for ri in 0..r {
-        let grow = &g[ri * n..(ri + 1) * n];
-        for i in 0..m {
-            let av = a[ri * m + i];
-            if av != 0.0 {
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * grow[j];
+    par_row_blocks(&mut out, m, n, t, |lo, hi, chunk| {
+        for ri in 0..r {
+            let grow = &g[ri * n..(ri + 1) * n];
+            for i in lo..hi {
+                let av = a[ri * m + i];
+                if av != 0.0 {
+                    let orow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * grow[j];
+                    }
                 }
             }
         }
-    }
+    });
     out
 }
 
 /// `out[r,m] = g[r,n] @ w[m,n]ᵀ` (input gradients).
 fn matmul_nt(g: &[f32], w: &[f32], r: usize, n: usize, m: usize) -> Vec<f32> {
+    matmul_nt_t(g, w, r, n, m, compute_threads())
+}
+
+/// [`matmul_nt`] with an explicit tile count (rows are independent
+/// dot products — bitwise identical for every `t`).
+fn matmul_nt_t(g: &[f32], w: &[f32], r: usize, n: usize, m: usize, t: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; r * m];
-    for ri in 0..r {
-        let grow = &g[ri * n..(ri + 1) * n];
-        let orow = &mut out[ri * m..(ri + 1) * m];
-        for i in 0..m {
-            let wrow = &w[i * n..(i + 1) * n];
-            let mut acc = 0.0f32;
-            for j in 0..n {
-                acc += grow[j] * wrow[j];
+    par_row_blocks(&mut out, r, m, t, |lo, hi, chunk| {
+        for ri in lo..hi {
+            let grow = &g[ri * n..(ri + 1) * n];
+            let orow = &mut chunk[(ri - lo) * m..(ri - lo + 1) * m];
+            for i in 0..m {
+                let wrow = &w[i * n..(i + 1) * n];
+                let mut acc = 0.0f32;
+                for j in 0..n {
+                    acc += grow[j] * wrow[j];
+                }
+                orow[i] = acc;
             }
-            orow[i] = acc;
         }
-    }
+    });
     out
 }
 
@@ -400,12 +502,31 @@ fn conv3x3_relu(
     cin: usize,
     cout: usize,
 ) -> Vec<f32> {
+    conv3x3_relu_t(x, w, bias, b, hw, cin, cout, compute_threads())
+}
+
+/// [`conv3x3_relu`] with an explicit tile count: output rows
+/// `(bi, oy)` are independent, so any fixed row-block split is bitwise
+/// identical to the single-threaded loop.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_relu_t(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    hw: usize,
+    cin: usize,
+    cout: usize,
+    t: usize,
+) -> Vec<f32> {
+    let rows = b * hw; // one row = one (bi, oy) scanline of the output
     let mut out = vec![0.0f32; b * hw * hw * cout];
-    for bi in 0..b {
-        for oy in 0..hw {
+    par_row_blocks(&mut out, rows, hw * cout, t, |lo, hi, chunk| {
+        for row in lo..hi {
+            let (bi, oy) = (row / hw, row % hw);
             for ox in 0..hw {
-                let obase = ((bi * hw + oy) * hw + ox) * cout;
-                let orow = &mut out[obase..obase + cout];
+                let obase = ((row - lo) * hw + ox) * cout;
+                let orow = &mut chunk[obase..obase + cout];
                 orow.copy_from_slice(bias);
                 for ky in 0..3usize {
                     let iy = oy + ky;
@@ -438,7 +559,7 @@ fn conv3x3_relu(
                 }
             }
         }
-    }
+    });
     out
 }
 
@@ -494,9 +615,86 @@ fn conv3x3_bwd(
     cin: usize,
     cout: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    conv3x3_bwd_t(x, y, gy, w, b, hw, cin, cout, compute_threads())
+}
+
+/// [`conv3x3_bwd`] with an explicit tile count. `gw` and `gx` reduce
+/// over output positions, so the split is over **input channels**: each
+/// `(ci, ·)` output element is owned by exactly one thread and keeps
+/// the seed's position-order accumulation, so the result is bitwise
+/// identical at every `t`. The tiny `gb` is accumulated by the first
+/// block only. The stitch step is pure copies (exclusive ownership —
+/// no floating-point reorder).
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_bwd_t(
+    x: &[f32],
+    y: &[f32],
+    gy: &[f32],
+    w: &[f32],
+    b: usize,
+    hw: usize,
+    cin: usize,
+    cout: usize,
+    t: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let t = t.min(cin).max(1);
+    if t == 1 {
+        return conv3x3_bwd_ci(x, y, gy, w, b, hw, cin, cout, 0, cin);
+    }
+    let bounds = block_bounds(cin, t);
+    let parts: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = bounds
+            .iter()
+            .map(|&(clo, chi)| {
+                s.spawn(move || conv3x3_bwd_ci(x, y, gy, w, b, hw, cin, cout, clo, chi))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("conv bwd tile thread panicked"))
+            .collect()
+    });
     let mut gw = vec![0.0f32; 9 * cin * cout];
     let mut gb = vec![0.0f32; cout];
     let mut gx = vec![0.0f32; b * hw * hw * cin];
+    for (&(clo, chi), (gw_p, gb_p, gx_p)) in bounds.iter().zip(parts) {
+        let wci = chi - clo;
+        for kk in 0..9 {
+            gw[kk * cin * cout + clo * cout..kk * cin * cout + chi * cout]
+                .copy_from_slice(&gw_p[kk * wci * cout..(kk + 1) * wci * cout]);
+        }
+        for pos in 0..b * hw * hw {
+            gx[pos * cin + clo..pos * cin + chi]
+                .copy_from_slice(&gx_p[pos * wci..(pos + 1) * wci]);
+        }
+        if clo == 0 {
+            gb.copy_from_slice(&gb_p);
+        }
+    }
+    (gw, gb, gx)
+}
+
+/// One input-channel block `[clo, chi)` of the conv backward. Private
+/// block-local layouts: `gw_p[9][chi-clo][cout]`, `gx_p[pos][chi-clo]`.
+/// With `(clo, chi) = (0, cin)` the layouts coincide with the global
+/// ones and the loop is, element for element, the seed's backward.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_bwd_ci(
+    x: &[f32],
+    y: &[f32],
+    gy: &[f32],
+    w: &[f32],
+    b: usize,
+    hw: usize,
+    cin: usize,
+    cout: usize,
+    clo: usize,
+    chi: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let wci = chi - clo;
+    let mut gw = vec![0.0f32; 9 * wci * cout];
+    let mut gb = vec![0.0f32; cout];
+    let mut gx = vec![0.0f32; b * hw * hw * wci];
     let mut gprevec = vec![0.0f32; cout];
     for bi in 0..b {
         for oy in 0..hw {
@@ -511,8 +709,10 @@ fn conv3x3_bwd(
                 if !any {
                     continue;
                 }
-                for co in 0..cout {
-                    gb[co] += gprevec[co];
+                if clo == 0 {
+                    for co in 0..cout {
+                        gb[co] += gprevec[co];
+                    }
                 }
                 for ky in 0..3usize {
                     let iy = oy + ky;
@@ -526,21 +726,22 @@ fn conv3x3_bwd(
                             continue;
                         }
                         let ix = ix - 1;
-                        let xbase = ((bi * hw + iy) * hw + ix) * cin;
+                        let pos = (bi * hw + iy) * hw + ix;
+                        let xbase = pos * cin;
                         let wbase = (ky * 3 + kx) * cin * cout;
-                        let xrow = &x[xbase..xbase + cin];
-                        let gxrow = &mut gx[xbase..xbase + cin];
-                        for ci in 0..cin {
-                            let av = xrow[ci];
+                        let gwbase = (ky * 3 + kx) * wci * cout;
+                        let gxrow = &mut gx[pos * wci..(pos + 1) * wci];
+                        for ci in clo..chi {
+                            let av = x[xbase + ci];
                             let wrow = &w[wbase + ci * cout..][..cout];
-                            let gwrow = &mut gw[wbase + ci * cout..][..cout];
+                            let gwrow = &mut gw[gwbase + (ci - clo) * cout..][..cout];
                             let mut acc = 0.0f32;
                             for co in 0..cout {
                                 let g = gprevec[co];
                                 gwrow[co] += av * g;
                                 acc += wrow[co] * g;
                             }
-                            gxrow[ci] += acc;
+                            gxrow[ci - clo] += acc;
                         }
                     }
                 }
@@ -885,6 +1086,96 @@ mod tests {
         assert_eq!(arg, vec![3]);
         let gx = maxpool2_bwd(&[5.0], &arg, 4);
         assert_eq!(gx, vec![0.0, 0.0, 0.0, 5.0]);
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn tiled_matmuls_bitwise_match_single_thread() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (7, 13, 9); // odd sizes: uneven blocks
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let g = rng.normal_vec(m * n, 1.0);
+        for t in [2usize, 3, 5, 16] {
+            assert_eq!(bits(&matmul_t(&a, &b, m, k, n, 1)), bits(&matmul_t(&a, &b, m, k, n, t)), "matmul t={t}");
+            assert_eq!(
+                bits(&matmul_tn_t(&a, &g, m, k, n, 1)),
+                bits(&matmul_tn_t(&a, &g, m, k, n, t)),
+                "matmul_tn t={t}"
+            );
+            assert_eq!(
+                bits(&matmul_nt_t(&g, &b, m, n, k, 1)),
+                bits(&matmul_nt_t(&g, &b, m, n, k, t)),
+                "matmul_nt t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_tn_matches_seed_order() {
+        // The seed's ri-outer loop, verbatim: the i-outer restructure in
+        // matmul_tn_t must reproduce it bit-for-bit (the per-element
+        // accumulation order over ri is unchanged).
+        fn matmul_tn_seed(a: &[f32], g: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
+            let mut out = vec![0.0f32; m * n];
+            for ri in 0..r {
+                let grow = &g[ri * n..(ri + 1) * n];
+                for i in 0..m {
+                    let av = a[ri * m + i];
+                    if av != 0.0 {
+                        let orow = &mut out[i * n..(i + 1) * n];
+                        for j in 0..n {
+                            orow[j] += av * grow[j];
+                        }
+                    }
+                }
+            }
+            out
+        }
+        let mut rng = Rng::new(12);
+        let (r, m, n) = (10, 6, 5);
+        let a = rng.normal_vec(r * m, 1.0);
+        let g = rng.normal_vec(r * n, 1.0);
+        let seed = matmul_tn_seed(&a, &g, r, m, n);
+        assert_eq!(bits(&seed), bits(&matmul_tn_t(&a, &g, r, m, n, 1)));
+        assert_eq!(bits(&seed), bits(&matmul_tn_t(&a, &g, r, m, n, 4)));
+    }
+
+    #[test]
+    fn tiled_conv_kernels_bitwise_match_single_thread() {
+        let mut rng = Rng::new(13);
+        let (b, hw, cin, cout) = (2usize, 6usize, 4usize, 5usize);
+        let x = rng.normal_vec(b * hw * hw * cin, 1.0);
+        let w = rng.normal_vec(9 * cin * cout, 0.5);
+        let bias = rng.normal_vec(cout, 0.1);
+        let y1 = conv3x3_relu_t(&x, &w, &bias, b, hw, cin, cout, 1);
+        for t in [2usize, 3, 7] {
+            let yt = conv3x3_relu_t(&x, &w, &bias, b, hw, cin, cout, t);
+            assert_eq!(bits(&y1), bits(&yt), "conv3x3_relu t={t}");
+        }
+        let gy = rng.normal_vec(b * hw * hw * cout, 1.0);
+        let (gw1, gb1, gx1) = conv3x3_bwd_t(&x, &y1, &gy, &w, b, hw, cin, cout, 1);
+        for t in [2usize, 3, 4, 9] {
+            let (gwt, gbt, gxt) = conv3x3_bwd_t(&x, &y1, &gy, &w, b, hw, cin, cout, t);
+            assert_eq!(bits(&gw1), bits(&gwt), "conv3x3_bwd gw t={t}");
+            assert_eq!(bits(&gb1), bits(&gbt), "conv3x3_bwd gb t={t}");
+            assert_eq!(bits(&gx1), bits(&gxt), "conv3x3_bwd gx t={t}");
+        }
+    }
+
+    #[test]
+    fn block_bounds_partition_exactly() {
+        for (rows, t) in [(7usize, 3usize), (8, 4), (5, 5), (10, 1)] {
+            let b = block_bounds(rows, t);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[t - 1].1, rows);
+            for i in 1..t {
+                assert_eq!(b[i - 1].1, b[i].0, "contiguous");
+            }
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! Runs on the built-in native backend; an `artifacts/` directory (from
 //! `python -m compile.aot`) overrides the manifest when present.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use splitbrain::comm::NetModel;
 use splitbrain::coordinator::{Cluster, ClusterConfig};
@@ -55,8 +55,8 @@ fn cfg_train(n: usize, mp: usize) -> ClusterConfig {
     ClusterConfig { clip_norm: 1.0, ..cfg(n, mp) }
 }
 
-fn dataset() -> Rc<dyn Dataset> {
-    Rc::new(SyntheticCifar::new(512, 99))
+fn dataset() -> Arc<dyn Dataset> {
+    Arc::new(SyntheticCifar::new(512, 99))
 }
 
 /// The decomposition theorem, end-to-end through PJRT (mirrors the

@@ -6,7 +6,7 @@
 //!
 //! Runs on the built-in native backend (no artifacts needed).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use splitbrain::comm::CollectiveAlgo;
 use splitbrain::coordinator::{Cluster, ClusterConfig, ExecEngine, McastScheme};
@@ -29,8 +29,8 @@ fn cfg(n: usize, mp: usize, engine: ExecEngine, algo: CollectiveAlgo) -> Cluster
     }
 }
 
-fn dataset() -> Rc<dyn Dataset> {
-    Rc::new(SyntheticCifar::new(256, 123))
+fn dataset() -> Arc<dyn Dataset> {
+    Arc::new(SyntheticCifar::new(256, 123))
 }
 
 /// Every worker's every parameter, flattened (exact f32 payloads).

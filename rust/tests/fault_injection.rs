@@ -19,7 +19,7 @@
 //!
 //! Runs on the built-in native backend (no artifacts needed).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use splitbrain::comm::fault::FaultEvent;
 use splitbrain::comm::{FaultPlan, PeerLost, WorkerCrashed};
@@ -42,8 +42,8 @@ fn cfg(n: usize, mp: usize) -> ClusterConfig {
     }
 }
 
-fn dataset() -> Rc<dyn Dataset> {
-    Rc::new(SyntheticCifar::new(256, 77))
+fn dataset() -> Arc<dyn Dataset> {
+    Arc::new(SyntheticCifar::new(256, 77))
 }
 
 /// Every worker's every parameter, flattened (exact f32 payloads).

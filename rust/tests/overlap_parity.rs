@@ -1,0 +1,316 @@
+//! Overlapped-execution parity: the overlapped executor (eager post
+//! halves + double-buffered batches) must be **bit-identical** — per-step
+//! losses, every parameter, and the data-plane byte counters — to the
+//! strict-BSP sequential reference, across engines and transports,
+//! schemes and collective algorithms, and *through* fault injection
+//! (crash-at-step-k recovery and straggle plans fired mid-overlap).
+//!
+//! This is the tentpole invariant of the step-program refactor: overlap
+//! changes only *when* payloads are posted, never their contents, tags,
+//! or the fixed group order every reduce consumes them in — arrival
+//! order affects wall-clock only, never the reduction tree.
+//!
+//! Runs on the built-in native backend (no artifacts needed).
+
+use std::sync::Arc;
+
+use splitbrain::comm::transport::TcpPeer;
+use splitbrain::comm::{CollectiveAlgo, FaultPlan};
+use splitbrain::coordinator::procdriver::{run_worker, ProcConfig, RunOutcome};
+use splitbrain::coordinator::{Cluster, ClusterConfig, ExecEngine, McastScheme, RecoveryPolicy};
+use splitbrain::data::{Dataset, SyntheticCifar};
+use splitbrain::runtime::RuntimeClient;
+
+const SEED: u64 = 123;
+const DATASET: usize = 256;
+
+fn cfg(n: usize, mp: usize, engine: ExecEngine, overlap: bool) -> ClusterConfig {
+    ClusterConfig {
+        n_workers: n,
+        mp,
+        lr: 0.02,
+        momentum: 0.9,
+        clip_norm: 1.0,
+        avg_period: 4,
+        seed: SEED,
+        dataset_size: DATASET,
+        engine,
+        collectives: CollectiveAlgo::Ring,
+        overlap,
+        ..Default::default()
+    }
+}
+
+fn dataset() -> Arc<dyn Dataset> {
+    Arc::new(SyntheticCifar::new(DATASET, SEED))
+}
+
+/// Every worker's every parameter as bit patterns.
+fn all_param_bits(c: &Cluster) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    for rank in 0..c.cfg.n_workers {
+        let w = c.worker(rank);
+        for t in w.conv_params.iter().chain(w.fc_params.iter()) {
+            out.push(t.as_f32().iter().map(|v| v.to_bits()).collect());
+        }
+    }
+    out
+}
+
+/// Step both clusters `steps` times asserting bit-equal losses, then
+/// bit-equal parameters and identical per-step byte counters.
+fn assert_parity(mut a: Cluster, mut b: Cluster, steps: usize, what: &str) {
+    for step in 1..=steps {
+        let ma = a.step().unwrap();
+        let mb = b.step().unwrap();
+        assert_eq!(
+            ma.loss.to_bits(),
+            mb.loss.to_bits(),
+            "{what}: loss diverged at step {step}: {} vs {}",
+            ma.loss,
+            mb.loss
+        );
+        assert_eq!(
+            a.last_fabric_bytes, b.last_fabric_bytes,
+            "{what}: byte counters diverged at step {step}"
+        );
+    }
+    let pa = all_param_bits(&a);
+    let pb = all_param_bits(&b);
+    assert_eq!(pa.len(), pb.len(), "{what}: parameter tensor count");
+    for (i, (x, y)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: parameter tensor {i} diverged");
+    }
+}
+
+/// The headline check: overlapped threaded execution (eager posts +
+/// prefetch) over two MP groups is bit-identical to the strict-BSP
+/// sequential reference across 10 steps (two averaging boundaries).
+#[test]
+fn overlap_threaded_matches_sequential_bsp_10_steps() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let seq = Cluster::with_dataset(
+        &rt,
+        cfg(4, 2, ExecEngine::Sequential, false),
+        dataset(),
+    )
+    .unwrap();
+    let ovl = Cluster::with_dataset(&rt, cfg(4, 2, ExecEngine::Threaded, true), dataset())
+        .unwrap();
+    assert_parity(seq, ovl, 10, "n=4 mp=2 overlap vs sequential BSP");
+}
+
+/// Overlap vs BSP on the *same* threaded engine: identical numerics and
+/// identical per-rank wire volumes (the hoist moves posts in time, not
+/// in content).
+#[test]
+fn overlap_matches_bsp_threaded_and_schedule_bytes() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut bsp =
+        Cluster::with_dataset(&rt, cfg(2, 2, ExecEngine::Threaded, false), dataset()).unwrap();
+    let mut ovl =
+        Cluster::with_dataset(&rt, cfg(2, 2, ExecEngine::Threaded, true), dataset()).unwrap();
+    let mb = bsp.step().unwrap();
+    let mo = ovl.step().unwrap();
+    assert_eq!(mb.loss.to_bits(), mo.loss.to_bits());
+    assert_eq!(bsp.last_fabric_bytes, ovl.last_fabric_bytes);
+    // And both match the analytic schedule volume exactly.
+    assert_eq!(ovl.last_fabric_bytes.0, ovl.schedule.mp_bytes_per_member());
+}
+
+/// The BK scheme (single B·K round, distinct artifacts, gradient
+/// rescale) and the B scheme (serialized owner) under overlap.
+#[test]
+fn overlap_parity_across_schemes() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    for scheme in [McastScheme::B, McastScheme::BK] {
+        let mut ca = cfg(2, 2, ExecEngine::Sequential, false);
+        ca.scheme = scheme;
+        let mut cb = cfg(2, 2, ExecEngine::Threaded, true);
+        cb.scheme = scheme;
+        let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
+        let ovl = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
+        assert_parity(seq, ovl, 2, &format!("scheme={scheme} overlap"));
+    }
+}
+
+/// Naive all-to-all collectives under overlap (different rendezvous
+/// structure inside the shard ops).
+#[test]
+fn overlap_parity_naive_collectives() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut ca = cfg(4, 2, ExecEngine::Sequential, false);
+    ca.collectives = CollectiveAlgo::Naive;
+    ca.avg_period = 1;
+    let mut cb = cfg(4, 2, ExecEngine::Threaded, true);
+    cb.collectives = CollectiveAlgo::Naive;
+    cb.avg_period = 1;
+    let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
+    let ovl = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
+    assert_parity(seq, ovl, 2, "naive collectives overlap");
+}
+
+/// Elastic recovery fired mid-overlap: rank 1 of 4 crashes at step 3
+/// (after the step-2 averaging checkpoint under avg_period=2); the
+/// overlapped engine must shrink onto the same survivors and land on
+/// the same bits as the sequential BSP reference with the same plan.
+#[test]
+fn overlap_crash_recovery_matches_sequential_bsp() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut ca = cfg(4, 2, ExecEngine::Sequential, false);
+    ca.avg_period = 2;
+    ca.recovery = RecoveryPolicy::ShrinkAndContinue;
+    ca.faults = FaultPlan::new().crash(1, 3);
+    let mut cb = cfg(4, 2, ExecEngine::Threaded, true);
+    cb.avg_period = 2;
+    cb.recovery = RecoveryPolicy::ShrinkAndContinue;
+    cb.faults = FaultPlan::new().crash(1, 3);
+    let mut seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
+    let mut ovl = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
+    for step in 1..=6 {
+        let ma = seq.step().unwrap();
+        let mb = ovl.step().unwrap();
+        assert_eq!(
+            ma.loss.to_bits(),
+            mb.loss.to_bits(),
+            "loss diverged at step {step} across recovery"
+        );
+    }
+    assert_eq!(seq.recoveries, 1);
+    assert_eq!(ovl.recoveries, 1);
+    assert_eq!(seq.lost_ranks, vec![1]);
+    assert_eq!(ovl.lost_ranks, vec![1]);
+    assert_eq!(seq.cfg.n_workers, 3);
+    assert_eq!(ovl.cfg.n_workers, 3);
+    let pa = all_param_bits(&seq);
+    let pb = all_param_bits(&ovl);
+    for (i, (x, y)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(x, y, "post-recovery parameter tensor {i} diverged");
+    }
+}
+
+/// Straggle faults only inflate the simulated clock — never the bits —
+/// and must do so identically under overlap.
+#[test]
+fn overlap_straggle_is_clock_only() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let plan = FaultPlan::new().straggle(0, 2, 750);
+    let mut ca = cfg(2, 2, ExecEngine::Sequential, false);
+    ca.faults = plan.clone();
+    let mut cb = cfg(2, 2, ExecEngine::Threaded, true);
+    cb.faults = plan;
+    let mut seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
+    let mut ovl = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
+    for step in 1..=3 {
+        let ma = seq.step().unwrap();
+        let mb = ovl.step().unwrap();
+        assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "step {step}");
+        if step == 2 {
+            // Both engines charge the injected 0.75 simulated seconds.
+            assert!(ma.compute_secs >= 0.75, "sequential straggle lost: {}", ma.compute_secs);
+            assert!(mb.compute_secs >= 0.75, "overlap straggle lost: {}", mb.compute_secs);
+        }
+    }
+    let pa = all_param_bits(&seq);
+    let pb = all_param_bits(&ovl);
+    for (x, y) in pa.iter().zip(pb.iter()) {
+        assert_eq!(x, y);
+    }
+}
+
+/// TCP transport with overlap *disabled* against the in-proc threaded
+/// engine with overlap *enabled*: both must match the same bits (the
+/// real-process overlapped TCP path is covered by `transport_parity`,
+/// whose reference is the overlap-default threaded engine). Runs the
+/// rank drivers on threads over loopback sockets inside this process.
+#[test]
+fn tcp_bsp_toggle_bit_identical_to_overlapped_threaded() {
+    let (n, mp, steps) = (2usize, 2usize, 4usize);
+    let rt = RuntimeClient::load("artifacts").unwrap();
+
+    // In-proc overlapped reference.
+    let mut cluster =
+        Cluster::with_dataset(&rt, cfg(n, mp, ExecEngine::Threaded, true), dataset()).unwrap();
+    let mut ref_losses: Vec<Vec<u64>> = Vec::new();
+    for _ in 0..steps {
+        cluster.step().unwrap();
+        let rounds = cluster.cfg.scheme.rounds(cluster.cfg.mp.max(1)) as f64;
+        ref_losses.push(
+            (0..n).map(|r| (cluster.worker(r).loss_acc / rounds).to_bits()).collect(),
+        );
+    }
+
+    // In-process TCP mesh, overlap off.
+    let peers: Vec<TcpPeer> = {
+        let listeners: Vec<std::net::TcpListener> = (0..n)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        listeners
+            .iter()
+            .enumerate()
+            .map(|(opid, l)| TcpPeer { opid, addr: l.local_addr().unwrap().to_string() })
+            .collect()
+    };
+    let out_dir = std::env::temp_dir()
+        .join(format!("splitbrain-overlap-parity-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let tcp_cfg = cfg(n, mp, ExecEngine::Threaded, false);
+    let outcomes: Vec<RunOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|opid| {
+                let pc = ProcConfig {
+                    cluster: tcp_cfg.clone(),
+                    steps,
+                    opid,
+                    peers: peers.clone(),
+                    artifacts: "artifacts".to_string(),
+                    out_dir: Some(out_dir.clone()),
+                    connect_timeout_ms: 30_000,
+                    log_every: 0,
+                };
+                s.spawn(move || run_worker(&pc).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(outcomes.iter().all(|o| *o == RunOutcome::Completed));
+
+    for opid in 0..n {
+        let meta =
+            std::fs::read_to_string(out_dir.join(format!("opid{opid}.meta"))).unwrap();
+        let mut seen = 0usize;
+        for line in meta.lines() {
+            let mut it = line.split_whitespace();
+            if it.next() == Some("loss") {
+                let step: usize = it.next().unwrap().parse().unwrap();
+                let bits = u64::from_str_radix(it.next().unwrap(), 16).unwrap();
+                assert_eq!(
+                    bits,
+                    ref_losses[step - 1][opid],
+                    "opid {opid}: TCP/BSP loss bits diverged at step {step}"
+                );
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, steps, "opid {opid} must record every step");
+        // Final parameters bitwise equal to the in-proc worker's.
+        let ckpt = splitbrain::train::checkpoint::load(
+            out_dir.join(format!("opid{opid}.ckpt")),
+        )
+        .unwrap();
+        let w = cluster.worker(opid);
+        let inproc: Vec<Vec<u32>> = w
+            .conv_params
+            .iter()
+            .chain(w.fc_params.iter())
+            .map(|t| t.as_f32().iter().map(|v| v.to_bits()).collect())
+            .collect();
+        assert_eq!(ckpt.len(), inproc.len());
+        for (i, ((_, t), b)) in ckpt.iter().zip(inproc.iter()).enumerate() {
+            let got: Vec<u32> = t.as_f32().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(&got, b, "opid {opid}: parameter tensor {i} diverged");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&out_dir);
+}

@@ -12,7 +12,7 @@
 //! No proptest crate in the offline registry: seeded randomized sweeps,
 //! every failure reproduces from the printed case id.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use splitbrain::coordinator::{Cluster, ClusterConfig};
 use splitbrain::data::{Dataset, SyntheticCifar};
@@ -36,8 +36,8 @@ fn cfg(n: usize, mp: usize, seed: u64) -> ClusterConfig {
     }
 }
 
-fn dataset(seed: u64) -> Rc<dyn Dataset> {
-    Rc::new(SyntheticCifar::new(256, seed))
+fn dataset(seed: u64) -> Arc<dyn Dataset> {
+    Arc::new(SyntheticCifar::new(256, seed))
 }
 
 fn tmp(name: &str) -> std::path::PathBuf {
