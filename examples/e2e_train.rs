@@ -13,10 +13,9 @@
 //! exists; otherwise the deterministic synthetic task (same shapes,
 //! learnable by construction — DESIGN.md §1).
 
-use splitbrain::coordinator::{Cluster, ClusterConfig};
+use splitbrain::api::SessionBuilder;
 use splitbrain::data::load_default;
 use splitbrain::runtime::RuntimeClient;
-use splitbrain::train::TrainReport;
 use splitbrain::util::Timer;
 
 fn main() -> anyhow::Result<()> {
@@ -34,42 +33,34 @@ fn main() -> anyhow::Result<()> {
         rt.manifest.batch
     );
 
-    let cfg = ClusterConfig {
-        n_workers: workers,
-        mp,
-        lr: 0.02,
-        momentum: 0.9,
-        avg_period: 10,
-        seed: 1234,
-        ..Default::default()
-    };
-    let mut cluster = Cluster::with_dataset(&rt, cfg, data.clone())?;
-    let mem = cluster.memory_report();
+    let plan = SessionBuilder::new()
+        .workers(workers)
+        .mp(mp)
+        .steps(steps)
+        .lr(0.02)
+        .momentum(0.9)
+        .avg_period(10)
+        .seed(1234)
+        .dataset(data.clone())
+        .validate(&rt)?;
+    let mem = plan.memory();
     println!(
         "cluster: {workers} workers = {} group(s) x mp={mp}; per-worker {:.2} MB params ({:.2} MB total)\n",
-        cluster.topo.n_groups(),
+        plan.topology().n_groups(),
         mem.param_mb(),
         mem.total_mb()
     );
+    let mut session = plan.start()?;
 
-    let (eval_loss0, eval_acc0) = cluster.evaluate(&*data, 8)?;
+    let (eval_loss0, eval_acc0) = session.evaluate(&*data, 8)?;
     println!("before training: eval loss {eval_loss0:.4}, accuracy {:.1}%\n", eval_acc0 * 100.0);
 
+    // Drive the run step-at-a-time (bit-identical to `session.run()`)
+    // so evaluation and custom logging interleave with training.
     let wall = Timer::start();
-    let mut report = TrainReport::new(workers, mp, rt.manifest.batch);
-    for step in 1..=steps {
-        let m = cluster.step()?;
-        for ph in &cluster.schedule.mp_phases {
-            for _ in 0..ph.times {
-                report.trace.record_uniform(ph.category, &cluster.cfg.net, ph.ranks, ph.per_member);
-            }
-        }
-        if m.dp_comm_secs > 0.0 {
-            for ph in &cluster.schedule.avg_phases {
-                report.trace.record_uniform(ph.category, &cluster.cfg.net, ph.ranks, ph.per_member);
-            }
-        }
-        report.push(&m);
+    while !session.is_done() {
+        let m = session.step()?;
+        let step = m.step;
         if step % 10 == 0 || step == 1 || step == steps {
             println!(
                 "step {step:>4}/{steps}  loss {:.4}  sim-step {:.0} ms  (compute {:.0} + mp {:.2} + dp {:.2} ms)",
@@ -82,8 +73,9 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let wall_secs = wall.elapsed_secs();
+    let report = session.report().train;
 
-    let (eval_loss1, eval_acc1) = cluster.evaluate(&*data, 8)?;
+    let (eval_loss1, eval_acc1) = session.evaluate(&*data, 8)?;
     println!("\n== results ==");
     println!(
         "loss: first {:.4} -> tail(10) {:.4}   eval: {:.4} -> {:.4}   accuracy: {:.1}% -> {:.1}%",

@@ -12,7 +12,7 @@
 //! ```
 
 use splitbrain::bench::{fig7b, fig7c, Fidelity};
-use splitbrain::coordinator::ClusterConfig;
+use splitbrain::api::SessionBuilder;
 use splitbrain::runtime::RuntimeClient;
 
 fn main() -> anyhow::Result<()> {
@@ -23,7 +23,8 @@ fn main() -> anyhow::Result<()> {
         Fidelity::Calibrated
     };
     let rt = RuntimeClient::load("artifacts")?;
-    let base = ClusterConfig::default();
+    // The sweep shares the builder's defaults (the one ClusterConfig source).
+    let base = SessionBuilder::new().cluster_config()?;
 
     println!("== GMP sweep on 8 machines ({:?}) ==\n", fidelity);
     let (comm_table, _) = fig7b(&rt, fidelity, &base)?;

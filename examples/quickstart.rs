@@ -1,15 +1,39 @@
-//! Quickstart: train the VGG-11 CIFAR variant on a 2-worker hybrid
-//! cluster (one MP group of 2) for 20 steps and print the loss curve.
+//! Quickstart: the `SessionBuilder → Plan → Session` lifecycle on the
+//! smallest hybrid topology — 2 workers, one MP group of 2 (Fig. 4's
+//! walkthrough) — for 20 steps, with a custom event sink watching the
+//! loss curve.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use splitbrain::coordinator::{Cluster, ClusterConfig};
+use splitbrain::api::{Event, EventSink, SessionBuilder};
 use splitbrain::runtime::RuntimeClient;
 
+/// A tiny observer: prints each step from the structured event stream
+/// (instead of scraping stdout) and remembers the best loss.
+struct LossWatcher {
+    best: f64,
+}
+
+impl EventSink for LossWatcher {
+    fn on_event(&mut self, event: &Event) {
+        if let Event::StepCompleted(step) = event {
+            self.best = self.best.min(step.loss);
+            println!(
+                "step {:>3}  loss {:.4}  (compute {:.0} ms + mp-comm {:.2} ms)",
+                step.step,
+                step.loss,
+                step.compute_secs * 1e3,
+                step.mp_comm_secs * 1e3
+            );
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    // 1. Connect the PJRT runtime to the AOT artifacts.
+    // 1. Connect the runtime to the AOT artifacts (native fallback
+    //    when no artifacts directory exists).
     let rt = RuntimeClient::load("artifacts")?;
     println!(
         "runtime: {} | batch {} | artifacts: {}",
@@ -18,35 +42,41 @@ fn main() -> anyhow::Result<()> {
         rt.manifest.artifacts.len()
     );
 
-    // 2. Configure the cluster: 2 workers, MP group size 2 — the
-    //    smallest hybrid topology (Fig. 4's walkthrough).
-    let cfg = ClusterConfig {
-        n_workers: 2,
-        mp: 2,
-        lr: 0.02,
-        momentum: 0.9,
-        avg_period: 10,
-        seed: 7,
-        ..Default::default()
-    };
-    let mut cluster = Cluster::new(&rt, cfg)?;
+    // 2. Build and validate the configuration. Illegal combinations
+    //    (mp that doesn't divide the workers, zero steps, out-of-range
+    //    fault ranks, ...) surface here as typed ConfigErrors — before
+    //    any worker state exists.
+    let plan = SessionBuilder::new()
+        .workers(2)
+        .mp(2)
+        .steps(20)
+        .lr(0.02)
+        .momentum(0.9)
+        .avg_period(10)
+        .seed(7)
+        .validate(&rt)?;
+
+    // 3. Inspect the plan: topology, predicted memory (Fig. 7c
+    //    accounting) and per-step communication — all pre-compute.
     println!(
-        "cluster: {} workers, {} MP group(s); per-worker params {:.2} MB\n",
-        cluster.cfg.n_workers,
-        cluster.topo.n_groups(),
-        cluster.memory_report().param_mb()
+        "plan: {} workers, {} MP group(s); per-worker params {:.2} MB; {} MP bytes/step\n",
+        plan.manifest().workers,
+        plan.topology().n_groups(),
+        plan.memory().param_mb(),
+        plan.comm().mp_bytes_per_step
     );
 
-    // 3. Train.
-    for step in 1..=20 {
-        let m = cluster.step()?;
-        println!(
-            "step {step:>3}  loss {:.4}  (compute {:.0} ms + mp-comm {:.2} ms)",
-            m.loss,
-            m.compute_secs * 1e3,
-            m.mp_comm_secs * 1e3
-        );
-    }
+    // 4. Start the session, attach an observer, train.
+    let mut session = plan.start()?;
+    session.attach(Box::new(LossWatcher { best: f64::INFINITY }));
+    let report = session.run()?;
+
+    println!(
+        "\ntrained {} steps: final loss {:.4}, {:.2} images/sec (simulated)",
+        report.steps_done,
+        report.train.final_loss().unwrap_or(f64::NAN),
+        report.train.images_per_sec()
+    );
     println!("\nquickstart OK");
     Ok(())
 }

@@ -6,7 +6,7 @@
 //! and the speedup relative to perfect linear scaling.
 
 use splitbrain::bench::{fig7a, Fidelity};
-use splitbrain::coordinator::ClusterConfig;
+use splitbrain::api::SessionBuilder;
 use splitbrain::runtime::RuntimeClient;
 
 fn main() -> anyhow::Result<()> {
@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
         Fidelity::Calibrated
     };
     let rt = RuntimeClient::load("artifacts")?;
-    let base = ClusterConfig::default();
+    // Benches share the builder's defaults (the one ClusterConfig source).
+    let base = SessionBuilder::new().cluster_config()?;
 
     println!("=== Fig. 7a: throughput scaling at MP=2 ({fidelity:?}) ===\n");
     let (table, raw) = fig7a(&rt, fidelity, &base)?;

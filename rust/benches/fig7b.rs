@@ -8,7 +8,7 @@
 
 use splitbrain::bench::{fig7b, Fidelity};
 use splitbrain::comm::CommCategory;
-use splitbrain::coordinator::ClusterConfig;
+use splitbrain::api::SessionBuilder;
 use splitbrain::runtime::RuntimeClient;
 
 fn main() -> anyhow::Result<()> {
@@ -19,7 +19,8 @@ fn main() -> anyhow::Result<()> {
         Fidelity::Calibrated
     };
     let rt = RuntimeClient::load("artifacts")?;
-    let base = ClusterConfig::default();
+    // Benches share the builder's defaults (the one ClusterConfig source).
+    let base = SessionBuilder::new().cluster_config()?;
 
     println!("=== Fig. 7b: communication overhead vs MP group size, 8 machines ({fidelity:?}) ===\n");
     let (table, raw) = fig7b(&rt, fidelity, &base)?;

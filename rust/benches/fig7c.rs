@@ -7,7 +7,7 @@
 //! full-MP throughput.
 
 use splitbrain::bench::{fig7c, Fidelity};
-use splitbrain::coordinator::ClusterConfig;
+use splitbrain::api::SessionBuilder;
 use splitbrain::runtime::RuntimeClient;
 
 fn main() -> anyhow::Result<()> {
@@ -18,7 +18,8 @@ fn main() -> anyhow::Result<()> {
         Fidelity::Calibrated
     };
     let rt = RuntimeClient::load("artifacts")?;
-    let base = ClusterConfig::default();
+    // Benches share the builder's defaults (the one ClusterConfig source).
+    let base = SessionBuilder::new().cluster_config()?;
 
     println!("=== Fig. 7c: throughput vs memory, 8 machines ({fidelity:?}) ===\n");
     let (table, raw) = fig7c(&rt, fidelity, &base)?;

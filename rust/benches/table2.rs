@@ -12,7 +12,7 @@
 //! machines throughput orders as mp=1 > mp=2 > mp=4 > mp=8.
 
 use splitbrain::bench::{table2, table2_paper, Fidelity};
-use splitbrain::coordinator::ClusterConfig;
+use splitbrain::api::SessionBuilder;
 use splitbrain::runtime::RuntimeClient;
 
 fn main() -> anyhow::Result<()> {
@@ -23,7 +23,8 @@ fn main() -> anyhow::Result<()> {
         Fidelity::Calibrated
     };
     let rt = RuntimeClient::load("artifacts")?;
-    let base = ClusterConfig::default();
+    // Benches share the builder's defaults (the one ClusterConfig source).
+    let base = SessionBuilder::new().cluster_config()?;
 
     println!("=== Table 2: CIFAR-10 throughputs in combinations of DP and MP ({fidelity:?}) ===\n");
     let (table, raw) = table2(&rt, fidelity, &base)?;
@@ -32,10 +33,9 @@ fn main() -> anyhow::Result<()> {
     // The paper's 2016 GASPI/BSP software regime (per-phase overhead
     // dominates the wire volume — see NetModel::paper_2016 docs): this
     // is the regime where the paper's mp=8 collapse appears.
-    let paper_base = splitbrain::coordinator::ClusterConfig {
-        net: splitbrain::comm::NetModel::paper_2016(),
-        ..base.clone()
-    };
+    let paper_base = SessionBuilder::new()
+        .net(splitbrain::comm::NetModel::paper_2016())
+        .cluster_config()?;
     println!("=== same sweep under the paper-2016 software-overhead regime ===\n");
     let (ptable, praw) = table2(&rt, fidelity, &paper_base)?;
     println!("{}", ptable.render());

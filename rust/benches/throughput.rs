@@ -8,43 +8,49 @@
 //! (the overlapped executor's fixed-order-reduce invariant). The CI
 //! `bench-smoke` job runs it at reduced steps and fails on divergence.
 //!
+//! Timing comes from the **per-step event stream**, not a wall clock
+//! around the whole run: in-proc rows sum the `StepReport::wall_secs`
+//! of the session's `StepCompleted` events, TCP rows sum the `stepsecs`
+//! records each rank driver dumps (max over ranks — the critical path).
+//! Construction and mesh bring-up are therefore excluded everywhere,
+//! so the engines compare on steady-state step cost.
+//!
 //! Flags: `--steps N` (default 12), `--workers N` (default 4),
 //! `--mp K` (default 2), `--out PATH` (default `BENCH_throughput.json`).
 //!
 //! The TCP rows run one `TcpTransport` per thread inside this process
 //! (the same rank driver `splitbrain worker` runs; `transport_parity`
-//! covers real processes) and include mesh bring-up in their wall time.
+//! covers real processes).
 
 use std::collections::HashMap;
 use std::net::TcpListener;
 use std::path::PathBuf;
-use std::time::Instant;
 
+use splitbrain::api::{step_reports, CollectSink, SessionBuilder};
 use splitbrain::comm::transport::TcpPeer;
 use splitbrain::coordinator::procdriver::{run_worker, ProcConfig, RunOutcome};
-use splitbrain::coordinator::{Cluster, ClusterConfig, ExecEngine};
+use splitbrain::coordinator::ExecEngine;
 use splitbrain::runtime::RuntimeClient;
 use splitbrain::util::{Args, Table};
 
 const SEED: u64 = 123;
 
-fn cfg(n: usize, mp: usize, engine: ExecEngine, overlap: bool) -> ClusterConfig {
-    ClusterConfig {
-        n_workers: n,
-        mp,
-        lr: 0.02,
-        momentum: 0.9,
-        clip_norm: 1.0,
-        avg_period: 4,
-        seed: SEED,
-        dataset_size: 256,
-        engine,
-        overlap,
-        ..Default::default()
-    }
+fn builder(n: usize, mp: usize, engine: ExecEngine, overlap: bool) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .lr(0.02)
+        .momentum(0.9)
+        .clip_norm(1.0)
+        .avg_period(4)
+        .seed(SEED)
+        .dataset_size(256)
+        .engine(engine)
+        .overlap(overlap)
 }
 
-/// One measured configuration: wall seconds + per-step mean loss bits.
+/// One measured configuration: summed per-step wall seconds + per-step
+/// mean loss bits.
 struct RunResult {
     name: &'static str,
     wall_secs: f64,
@@ -52,28 +58,37 @@ struct RunResult {
     loss_bits: Vec<u64>,
 }
 
-/// In-proc run (sequential or threaded engine).
+/// In-proc run (sequential or threaded engine) through the session
+/// API: a collecting sink captures every `StepCompleted` event and the
+/// row's wall time is the sum of the per-step timings.
 fn run_inproc(
     rt: &RuntimeClient,
     name: &'static str,
-    c: ClusterConfig,
+    b: SessionBuilder,
     steps: usize,
 ) -> anyhow::Result<RunResult> {
-    let mut cluster = Cluster::new(rt, c)?;
-    let t = Instant::now();
-    let mut loss_bits = Vec::with_capacity(steps);
-    for _ in 0..steps {
-        let m = cluster.step()?;
-        loss_bits.push(m.loss.to_bits());
-    }
-    Ok(RunResult { name, wall_secs: t.elapsed().as_secs_f64(), loss_bits })
+    let mut session = b.steps(steps).validate(rt)?.start()?;
+    let sink = CollectSink::new();
+    let events = sink.events();
+    session.attach(Box::new(sink));
+    session.run()?;
+    let reports = step_reports(&events.borrow());
+    anyhow::ensure!(reports.len() == steps, "{name}: {} step events, want {steps}", reports.len());
+    Ok(RunResult {
+        name,
+        wall_secs: reports.iter().map(|r| r.wall_secs).sum(),
+        loss_bits: reports.iter().map(|r| r.loss.to_bits()).collect(),
+    })
 }
 
 /// In-process TCP run: one rank driver per thread over loopback
 /// sockets. Loss bits are recovered from the per-rank meta dumps and
 /// averaged exactly like `StepMetrics::loss` (sum of per-rank losses /
-/// n), so they are comparable bit-for-bit with the in-proc engines.
-fn run_tcp(name: &'static str, c: ClusterConfig, steps: usize) -> anyhow::Result<RunResult> {
+/// n), so they are comparable bit-for-bit with the in-proc engines;
+/// wall time is the critical path over ranks of their summed per-step
+/// `stepsecs` records.
+fn run_tcp(name: &'static str, b: SessionBuilder, steps: usize) -> anyhow::Result<RunResult> {
+    let c = b.steps(steps).cluster_config()?;
     let n = c.n_workers;
     // Reserve loopback ports (bind :0, record, release — the launcher's
     // documented, accepted race).
@@ -95,7 +110,6 @@ fn run_tcp(name: &'static str, c: ClusterConfig, steps: usize) -> anyhow::Result
     let _ = std::fs::remove_dir_all(&out_dir);
     std::fs::create_dir_all(&out_dir)?;
 
-    let t = Instant::now();
     let outcomes: Vec<anyhow::Result<RunOutcome>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..n)
             .map(|opid| {
@@ -120,7 +134,6 @@ fn run_tcp(name: &'static str, c: ClusterConfig, steps: usize) -> anyhow::Result
             })
             .collect()
     });
-    let wall_secs = t.elapsed().as_secs_f64();
     for (opid, o) in outcomes.into_iter().enumerate() {
         match o? {
             RunOutcome::Completed => {}
@@ -128,18 +141,30 @@ fn run_tcp(name: &'static str, c: ClusterConfig, steps: usize) -> anyhow::Result
         }
     }
 
-    // steps → sum of per-rank losses, rebuilt from the meta dumps.
+    // step → sum of per-rank losses, and per-rank step-time sums, both
+    // rebuilt from the meta dumps (the TCP side's event stream).
     let mut sums: HashMap<usize, f64> = HashMap::new();
+    let mut wall_secs = 0.0f64;
     for opid in 0..n {
         let meta = std::fs::read_to_string(out_dir.join(format!("opid{opid}.meta")))?;
+        let mut rank_secs = 0.0f64;
         for line in meta.lines() {
             let mut it = line.split_whitespace();
-            if it.next() == Some("loss") {
-                let step: usize = it.next().unwrap().parse()?;
-                let bits = u64::from_str_radix(it.next().unwrap(), 16)?;
-                *sums.entry(step).or_insert(0.0) += f64::from_bits(bits);
+            match it.next() {
+                Some("loss") => {
+                    let step: usize = it.next().unwrap().parse()?;
+                    let bits = u64::from_str_radix(it.next().unwrap(), 16)?;
+                    *sums.entry(step).or_insert(0.0) += f64::from_bits(bits);
+                }
+                Some("stepsecs") => {
+                    let _step: usize = it.next().unwrap().parse()?;
+                    let bits = u64::from_str_radix(it.next().unwrap(), 16)?;
+                    rank_secs += f64::from_bits(bits);
+                }
+                _ => {}
             }
         }
+        wall_secs = wall_secs.max(rank_secs);
     }
     let loss_bits = (1..=steps)
         .map(|s| (sums[&s] / n as f64).to_bits())
@@ -150,6 +175,9 @@ fn run_tcp(name: &'static str, c: ClusterConfig, steps: usize) -> anyhow::Result
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    args.check_known(&["steps", "workers", "mp", "out", "bench", "compute-threads"])?;
+    // Honor the flag like the CLI does (any value is bit-identical).
+    splitbrain::runtime::set_compute_threads(args.usize_or("compute-threads", 1)?);
     let steps = args.usize_or("steps", 12)?;
     let n = args.usize_or("workers", 4)?;
     let mp = args.usize_or("mp", 2)?;
@@ -159,11 +187,11 @@ fn main() -> anyhow::Result<()> {
 
     println!("=== throughput: N={n}, mp={mp}, B={batch}, {steps} steps per config ===\n");
     let results = vec![
-        run_inproc(&rt, "sequential-bsp", cfg(n, mp, ExecEngine::Sequential, false), steps)?,
-        run_inproc(&rt, "threaded-bsp", cfg(n, mp, ExecEngine::Threaded, false), steps)?,
-        run_inproc(&rt, "threaded-overlap", cfg(n, mp, ExecEngine::Threaded, true), steps)?,
-        run_tcp("tcp-bsp", cfg(n, mp, ExecEngine::Threaded, false), steps)?,
-        run_tcp("tcp-overlap", cfg(n, mp, ExecEngine::Threaded, true), steps)?,
+        run_inproc(&rt, "sequential-bsp", builder(n, mp, ExecEngine::Sequential, false), steps)?,
+        run_inproc(&rt, "threaded-bsp", builder(n, mp, ExecEngine::Threaded, false), steps)?,
+        run_inproc(&rt, "threaded-overlap", builder(n, mp, ExecEngine::Threaded, true), steps)?,
+        run_tcp("tcp-bsp", builder(n, mp, ExecEngine::Threaded, false), steps)?,
+        run_tcp("tcp-overlap", builder(n, mp, ExecEngine::Threaded, true), steps)?,
     ];
 
     // Acceptance: every configuration's per-step losses bit-identical.
@@ -176,7 +204,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let mut table = Table::new(vec!["config", "wall s", "steps/sec", "images/sec"]);
+    let mut table = Table::new(vec!["config", "step-sum s", "steps/sec", "images/sec"]);
     for r in &results {
         let sps = steps as f64 / r.wall_secs;
         table.row(vec![
@@ -192,6 +220,7 @@ fn main() -> anyhow::Result<()> {
     // Emit the JSON trajectory point (hand-rolled: no serde offline).
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"throughput\",\n");
+    json.push_str("  \"timing_source\": \"per-step event stream\",\n");
     json.push_str(&format!(
         "  \"workers\": {n},\n  \"mp\": {mp},\n  \"batch\": {batch},\n  \"steps\": {steps},\n"
     ));

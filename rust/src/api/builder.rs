@@ -1,0 +1,541 @@
+//! The typed session builder — the **one place** in the codebase where
+//! a [`ClusterConfig`] is constructed and validated.
+//!
+//! Every caller (the CLI, the benches, the test suites, the examples)
+//! goes through [`SessionBuilder`]: per-field setters, then a single
+//! [`validate`](SessionBuilder::validate) that either returns a staged
+//! [`Plan`] or a typed, actionable [`ConfigError`] — never a mid-run
+//! panic.
+
+use std::sync::Arc;
+
+use crate::comm::fabric::TAKE_TIMEOUT_SECS;
+use crate::comm::fault::{FaultEvent, FaultPlan};
+use crate::comm::{CollectiveAlgo, NetModel};
+use crate::coordinator::cluster::plan_topology;
+use crate::coordinator::{ClusterConfig, ExecEngine, McastScheme, RecoveryPolicy};
+use crate::data::Dataset;
+use crate::runtime::RuntimeClient;
+
+use super::error::ConfigError;
+use super::manifest::RunManifest;
+use super::plan::Plan;
+
+/// Default training steps when the builder (and the CLI) are not told
+/// otherwise.
+pub const DEFAULT_STEPS: usize = 50;
+/// Default worker count (the smallest interesting cluster).
+pub const DEFAULT_WORKERS: usize = 2;
+/// Default CLI/report logging cadence (a presentation knob — not part
+/// of the run manifest, but shared by `ConsoleSink` and the CLI).
+pub const DEFAULT_LOG_EVERY: usize = 10;
+
+/// Typed builder for a training session.
+///
+/// Defaults match `splitbrain train` with no flags: 2 workers, pure DP,
+/// 50 steps, the paper's trainer hyper-parameters, threaded engine with
+/// ring collectives, overlap resolved per engine.
+///
+/// # Examples
+///
+/// Build, validate, inspect the plan, then train:
+///
+/// ```no_run
+/// use splitbrain::api::SessionBuilder;
+/// use splitbrain::runtime::RuntimeClient;
+///
+/// let rt = RuntimeClient::load("artifacts")?;
+/// let plan = SessionBuilder::new()
+///     .workers(4)
+///     .mp(2)
+///     .steps(100)
+///     .lr(0.02)
+///     .validate(&rt)?;
+/// println!(
+///     "{} groups, {:.2} MB params/worker, {} MP bytes/step",
+///     plan.topology().n_groups(),
+///     plan.memory().param_mb(),
+///     plan.comm().mp_bytes_per_step,
+/// );
+/// let mut session = plan.start()?;
+/// let report = session.run()?;
+/// println!("{} images/sec", report.train.images_per_sec());
+/// # anyhow::Result::<()>::Ok(())
+/// ```
+///
+/// Illegal combinations are typed errors, caught before any compute:
+///
+/// ```
+/// use splitbrain::api::{ConfigError, SessionBuilder};
+///
+/// let err = SessionBuilder::new().workers(4).mp(3).cluster_config().unwrap_err();
+/// assert!(matches!(err, ConfigError::MpNotDivisor { .. }));
+/// ```
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    workers: usize,
+    mp: usize,
+    steps: usize,
+    lr: f32,
+    momentum: f32,
+    clip_norm: f32,
+    avg_period: usize,
+    seed: u64,
+    dataset_size: usize,
+    scheme: McastScheme,
+    engine: ExecEngine,
+    collectives: CollectiveAlgo,
+    recovery: RecoveryPolicy,
+    take_timeout_ms: u64,
+    /// `None` = auto: on for engines that can overlap (threaded, TCP),
+    /// off for the sequential BSP reference.
+    overlap: Option<bool>,
+    segmented_mp1: bool,
+    net: NetModel,
+    faults: FaultPlan,
+    /// Dataset injected by tests; `None` loads the default
+    /// (CIFAR-10 when present, synthetic otherwise).
+    dataset: Option<Arc<dyn Dataset>>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            workers: DEFAULT_WORKERS,
+            mp: 1,
+            steps: DEFAULT_STEPS,
+            lr: 0.05,
+            momentum: 0.9,
+            clip_norm: 1.0,
+            avg_period: 10,
+            seed: 42,
+            dataset_size: 2048,
+            scheme: McastScheme::BoverK,
+            engine: ExecEngine::Threaded,
+            collectives: CollectiveAlgo::Ring,
+            recovery: RecoveryPolicy::FailFast,
+            take_timeout_ms: TAKE_TIMEOUT_SECS * 1000,
+            overlap: None,
+            segmented_mp1: false,
+            net: NetModel::default(),
+            faults: FaultPlan::new(),
+            dataset: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// A builder with the default configuration (see the type docs).
+    pub fn new() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Seed every field from a parsed run manifest; flags/setters may
+    /// still override afterwards. See [`RunManifest`] for the schema.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use splitbrain::api::{RunManifest, SessionBuilder};
+    ///
+    /// let cfg = SessionBuilder::new().workers(4).mp(2).seed(7).cluster_config().unwrap();
+    /// let json = RunManifest::from_config(&cfg, 20).to_json();
+    /// let rebuilt = SessionBuilder::from_manifest(&json).unwrap().cluster_config().unwrap();
+    /// assert_eq!(rebuilt.seed, 7);
+    /// assert_eq!(rebuilt.mp, 2);
+    /// ```
+    pub fn from_manifest(text: &str) -> anyhow::Result<SessionBuilder> {
+        Ok(Self::from_run_manifest(&RunManifest::parse(text)?))
+    }
+
+    /// [`from_manifest`](Self::from_manifest), reading the JSON from a
+    /// file (the `splitbrain train --manifest run.json` path).
+    pub fn from_manifest_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<SessionBuilder> {
+        use anyhow::Context;
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::from_manifest(&text)
+            .with_context(|| format!("loading manifest {}", path.display()))
+    }
+
+    /// Seed every field from an already-parsed [`RunManifest`].
+    pub fn from_run_manifest(m: &RunManifest) -> SessionBuilder {
+        SessionBuilder {
+            workers: m.workers,
+            mp: m.mp,
+            steps: m.steps,
+            lr: m.lr,
+            momentum: m.momentum,
+            clip_norm: m.clip_norm,
+            avg_period: m.avg_period,
+            seed: m.seed,
+            dataset_size: m.dataset_size,
+            scheme: m.scheme,
+            engine: m.engine,
+            collectives: m.collectives,
+            recovery: m.recovery,
+            take_timeout_ms: m.take_timeout_ms,
+            overlap: Some(m.overlap),
+            segmented_mp1: m.segmented_mp1,
+            net: m.net,
+            faults: m.faults.clone(),
+            dataset: None,
+        }
+    }
+
+    /// Total workers N.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// MP group size (1 = pure DP). Must divide the worker count.
+    pub fn mp(mut self, mp: usize) -> Self {
+        self.mp = mp;
+        self
+    }
+
+    /// Training steps the session will run.
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// SGD learning rate (finite, positive).
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// SGD momentum (finite, in `[0, 1)`).
+    pub fn momentum(mut self, momentum: f32) -> Self {
+        self.momentum = momentum;
+        self
+    }
+
+    /// Global-norm gradient clip (0 = off).
+    pub fn clip_norm(mut self, clip_norm: f32) -> Self {
+        self.clip_norm = clip_norm;
+        self
+    }
+
+    /// Model-averaging period in steps (§4's "communication batches").
+    pub fn avg_period(mut self, avg_period: usize) -> Self {
+        self.avg_period = avg_period;
+        self
+    }
+
+    /// Master seed (parameters, data order, fault randomness).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Synthetic dataset size when CIFAR-10 is absent.
+    pub fn dataset_size(mut self, n: usize) -> Self {
+        self.dataset_size = n;
+        self
+    }
+
+    /// §3.1 communication scheme for the modulo layer.
+    pub fn scheme(mut self, scheme: McastScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Execution engine (threaded default; sequential = BSP reference).
+    pub fn engine(mut self, engine: ExecEngine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Collective algorithm for shard exchange and model averaging.
+    pub fn collectives(mut self, algo: CollectiveAlgo) -> Self {
+        self.collectives = algo;
+        self
+    }
+
+    /// Peer-loss policy (fail fast, or shrink and continue).
+    pub fn recovery(mut self, recovery: RecoveryPolicy) -> Self {
+        self.recovery = recovery;
+        self
+    }
+
+    /// Blocking-take timeout in milliseconds.
+    pub fn take_timeout_ms(mut self, ms: u64) -> Self {
+        self.take_timeout_ms = ms;
+        self
+    }
+
+    /// Force overlapped execution on or off. Unset, it resolves
+    /// automatically: on for the threaded/TCP engines, off for the
+    /// sequential reference. Explicitly forcing it **on** with the
+    /// sequential engine is a [`ConfigError::OverlapOnSequential`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use splitbrain::api::{ConfigError, SessionBuilder};
+    /// use splitbrain::coordinator::ExecEngine;
+    ///
+    /// let err = SessionBuilder::new()
+    ///     .engine(ExecEngine::Sequential)
+    ///     .overlap(true)
+    ///     .cluster_config()
+    ///     .unwrap_err();
+    /// assert!(matches!(err, ConfigError::OverlapOnSequential));
+    ///
+    /// // Unset overlap resolves per engine: off for sequential.
+    /// let cfg = SessionBuilder::new()
+    ///     .engine(ExecEngine::Sequential)
+    ///     .cluster_config()
+    ///     .unwrap();
+    /// assert!(!cfg.overlap);
+    /// ```
+    pub fn overlap(mut self, overlap: bool) -> Self {
+        self.overlap = Some(overlap);
+        self
+    }
+
+    /// Run mp=1 through the segmented pipeline (bench fidelity knob —
+    /// holds per-op efficiency constant across the DP/MP comparison).
+    pub fn segmented_mp1(mut self, on: bool) -> Self {
+        self.segmented_mp1 = on;
+        self
+    }
+
+    /// α–β network cost model for the simulated clock.
+    pub fn net(mut self, net: NetModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Deterministic fault-injection scenario.
+    pub fn faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Train on an explicit dataset instead of the default loader
+    /// (tests inject toy data here; not part of the manifest).
+    pub fn dataset(mut self, data: Arc<dyn Dataset>) -> Self {
+        self.dataset = Some(data);
+        self
+    }
+
+    /// The worker count the builder currently holds (the CLI uses this
+    /// to scope seeded random fault plans before validation).
+    pub fn current_workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The step count the builder currently holds.
+    pub fn current_steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Validate every runtime-independent combination and return the
+    /// resolved [`ClusterConfig`]. This — via [`validate`](Self::validate) —
+    /// is the **only** constructor of `ClusterConfig` in the tree; see
+    /// [`ConfigError`] for the full matrix of rejections.
+    ///
+    /// Most callers want [`validate`](Self::validate), which also
+    /// checks the runtime's artifact support and returns a staged
+    /// [`Plan`]; `cluster_config` exists for tests and benches that
+    /// drive [`Cluster`](crate::coordinator::Cluster) directly.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use splitbrain::api::SessionBuilder;
+    ///
+    /// let cfg = SessionBuilder::new().workers(4).mp(2).cluster_config().unwrap();
+    /// assert_eq!((cfg.n_workers, cfg.mp), (4, 2));
+    /// assert!(cfg.overlap, "threaded engine resolves overlap on");
+    /// ```
+    pub fn cluster_config(&self) -> Result<ClusterConfig, ConfigError> {
+        if self.workers == 0 {
+            return Err(ConfigError::ZeroWorkers);
+        }
+        if self.mp == 0 {
+            return Err(ConfigError::ZeroMp);
+        }
+        if self.workers % self.mp != 0 {
+            return Err(ConfigError::MpNotDivisor { n_workers: self.workers, mp: self.mp });
+        }
+        if self.steps == 0 {
+            return Err(ConfigError::ZeroSteps);
+        }
+        if self.avg_period == 0 {
+            return Err(ConfigError::ZeroAvgPeriod);
+        }
+        if self.dataset_size == 0 {
+            return Err(ConfigError::ZeroDataset);
+        }
+        if self.take_timeout_ms == 0 {
+            return Err(ConfigError::ZeroTakeTimeout);
+        }
+        if !self.lr.is_finite() || self.lr <= 0.0 {
+            return Err(ConfigError::InvalidLr { lr: self.lr });
+        }
+        if !self.momentum.is_finite() || !(0.0..1.0).contains(&self.momentum) {
+            return Err(ConfigError::InvalidMomentum { momentum: self.momentum });
+        }
+        if !self.clip_norm.is_finite() || self.clip_norm < 0.0 {
+            return Err(ConfigError::InvalidClipNorm { clip_norm: self.clip_norm });
+        }
+        for (field, value, lo_ok) in [
+            ("alpha", self.net.alpha, false),
+            ("beta", self.net.beta, false),
+            ("phase_overhead", self.net.phase_overhead, true),
+        ] {
+            if !value.is_finite() || value < 0.0 || (!lo_ok && value == 0.0) {
+                return Err(ConfigError::InvalidNetModel { field, value });
+            }
+        }
+        let overlap = match self.overlap {
+            Some(true) if self.engine == ExecEngine::Sequential => {
+                return Err(ConfigError::OverlapOnSequential);
+            }
+            Some(v) => v,
+            None => self.engine != ExecEngine::Sequential,
+        };
+        for (event, ev) in self.faults.events().iter().enumerate() {
+            let (ranks, step) = match *ev {
+                FaultEvent::Crash { rank, step } => (vec![rank], step),
+                FaultEvent::Straggle { rank, step, .. } => (vec![rank], step),
+                FaultEvent::DropMsg { src, dst, step, .. } => (vec![src, dst], step),
+                FaultEvent::DelayMsg { src, dst, step, .. } => (vec![src, dst], step),
+            };
+            for rank in ranks {
+                if rank >= self.workers {
+                    return Err(ConfigError::FaultRankOutOfRange {
+                        event,
+                        rank,
+                        n_workers: self.workers,
+                    });
+                }
+            }
+            if step == 0 || step > self.steps {
+                return Err(ConfigError::FaultStepOutOfRange { event, step, steps: self.steps });
+            }
+        }
+        Ok(ClusterConfig {
+            n_workers: self.workers,
+            mp: self.mp,
+            lr: self.lr,
+            momentum: self.momentum,
+            clip_norm: self.clip_norm,
+            avg_period: self.avg_period,
+            seed: self.seed,
+            net: self.net,
+            dataset_size: self.dataset_size,
+            segmented_mp1: self.segmented_mp1,
+            scheme: self.scheme,
+            engine: self.engine,
+            collectives: self.collectives,
+            recovery: self.recovery,
+            take_timeout_ms: self.take_timeout_ms,
+            faults: self.faults.clone(),
+            overlap,
+        })
+    }
+
+    /// Validate the full configuration against the runtime and stage a
+    /// [`Plan`]: the resolved GMP topology, the Fig. 3 partitioned
+    /// network, the compiled step schedule, the predicted memory and
+    /// communication volumes, and the canonical [`RunManifest`] —
+    /// **before any compute runs**.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use splitbrain::api::SessionBuilder;
+    /// use splitbrain::runtime::RuntimeClient;
+    ///
+    /// let rt = RuntimeClient::load("artifacts").unwrap();
+    /// let plan = SessionBuilder::new().workers(4).mp(2).steps(8).validate(&rt).unwrap();
+    /// assert_eq!(plan.topology().n_groups(), 2);
+    /// assert!(plan.memory().param_mb() > 0.0);
+    /// assert_eq!(plan.manifest().workers, 4);
+    /// ```
+    pub fn validate<'rt>(&self, rt: &'rt RuntimeClient) -> Result<Plan<'rt>, ConfigError> {
+        let cfg = self.cluster_config()?;
+        if !rt.manifest.supports_mp(cfg.mp) {
+            return Err(ConfigError::MpUnsupported {
+                mp: cfg.mp,
+                supported: rt.manifest.mp_sizes.clone(),
+            });
+        }
+        let (topo, transformed, schedule) = plan_topology(rt, &cfg, cfg.n_workers, cfg.mp)
+            .map_err(|e| ConfigError::Planning(format!("{e:#}")))?;
+        let manifest = RunManifest::from_config(&cfg, self.steps);
+        Ok(Plan::new(
+            rt,
+            manifest,
+            cfg,
+            self.steps,
+            topo,
+            transformed,
+            schedule,
+            self.dataset.clone(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid_and_resolve_overlap() {
+        let cfg = SessionBuilder::new().cluster_config().unwrap();
+        assert_eq!(cfg.n_workers, DEFAULT_WORKERS);
+        assert!(cfg.overlap, "threaded default resolves overlap on");
+        let seq = SessionBuilder::new()
+            .engine(ExecEngine::Sequential)
+            .cluster_config()
+            .unwrap();
+        assert!(!seq.overlap);
+    }
+
+    #[test]
+    fn fault_plan_ranges_are_validated() {
+        let err = SessionBuilder::new()
+            .workers(2)
+            .steps(10)
+            .faults(FaultPlan::new().crash(2, 3))
+            .cluster_config()
+            .unwrap_err();
+        assert!(matches!(err, ConfigError::FaultRankOutOfRange { rank: 2, n_workers: 2, .. }));
+
+        let err = SessionBuilder::new()
+            .workers(2)
+            .steps(10)
+            .faults(FaultPlan::new().straggle(1, 11, 50))
+            .cluster_config()
+            .unwrap_err();
+        assert!(matches!(err, ConfigError::FaultStepOutOfRange { step: 11, steps: 10, .. }));
+    }
+
+    #[test]
+    fn builder_matches_cli_defaults() {
+        // The CLI relies on the builder's defaults being exactly the
+        // historical flag defaults; pin them.
+        let cfg = SessionBuilder::new().cluster_config().unwrap();
+        assert_eq!(cfg.mp, 1);
+        assert_eq!(cfg.lr, 0.05);
+        assert_eq!(cfg.momentum, 0.9);
+        assert_eq!(cfg.clip_norm, 1.0);
+        assert_eq!(cfg.avg_period, 10);
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.dataset_size, 2048);
+        assert_eq!(cfg.scheme, McastScheme::BoverK);
+        assert_eq!(cfg.engine, ExecEngine::Threaded);
+        assert_eq!(cfg.collectives, CollectiveAlgo::Ring);
+        assert_eq!(cfg.recovery, RecoveryPolicy::FailFast);
+        assert_eq!(cfg.take_timeout_ms, TAKE_TIMEOUT_SECS * 1000);
+        assert!(!cfg.segmented_mp1);
+    }
+}

@@ -1,0 +1,169 @@
+//! Typed configuration errors — every illegal combination a
+//! [`SessionBuilder`](super::SessionBuilder) can express is caught by
+//! `validate()` / `cluster_config()` **before any compute runs**, as a
+//! matchable [`ConfigError`] instead of a mid-run panic or an opaque
+//! string. The `config_errors` integration suite asserts the full
+//! matrix: every invalid combination yields the right variant.
+
+use std::fmt;
+
+/// Why a session configuration was rejected.
+///
+/// Implements [`std::error::Error`], so `?` converts it into
+/// `anyhow::Error` at CLI boundaries while library callers can still
+/// match on the variant.
+///
+/// # Examples
+///
+/// ```
+/// use splitbrain::api::{ConfigError, SessionBuilder};
+///
+/// let err = SessionBuilder::new().workers(4).mp(3).cluster_config().unwrap_err();
+/// assert!(matches!(err, ConfigError::MpNotDivisor { n_workers: 4, mp: 3 }));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    /// `workers` was 0 — a cluster needs at least one rank.
+    ZeroWorkers,
+    /// `mp` was 0 — the MP group size is at least 1 (1 = pure DP).
+    ZeroMp,
+    /// `mp` does not divide `workers`, so no GMP topology exists
+    /// (Fig. 6 needs `workers = groups × mp` exactly).
+    MpNotDivisor {
+        /// Requested worker count N.
+        n_workers: usize,
+        /// Requested MP group size.
+        mp: usize,
+    },
+    /// The runtime's artifacts were not lowered for this `mp` — re-run
+    /// `make artifacts` with the size included, or pick a supported one.
+    MpUnsupported {
+        /// Requested MP group size.
+        mp: usize,
+        /// Sizes the artifact manifest supports.
+        supported: Vec<usize>,
+    },
+    /// `steps` was 0 — a run must train at least one step.
+    ZeroSteps,
+    /// `avg_period` was 0 — model averaging needs a positive period
+    /// (every step = 1).
+    ZeroAvgPeriod,
+    /// `dataset_size` was 0 — the synthetic dataset needs examples.
+    ZeroDataset,
+    /// `take_timeout_ms` was 0 — a zero blocking-take timeout presumes
+    /// every peer dead immediately.
+    ZeroTakeTimeout,
+    /// `lr` was not a finite positive number.
+    InvalidLr {
+        /// The rejected value.
+        lr: f32,
+    },
+    /// `momentum` was outside the finite range `[0, 1)`.
+    InvalidMomentum {
+        /// The rejected value.
+        momentum: f32,
+    },
+    /// `clip_norm` was negative or non-finite (0 means clipping off).
+    InvalidClipNorm {
+        /// The rejected value.
+        clip_norm: f32,
+    },
+    /// `overlap(true)` combined with the sequential engine: the
+    /// sequential reference is the strict-BSP baseline and never
+    /// overlaps. Leave overlap unset (it resolves per engine) or use
+    /// the threaded engine.
+    OverlapOnSequential,
+    /// A fault-plan event targets a rank outside `0..workers`.
+    FaultRankOutOfRange {
+        /// Index of the offending event in the plan.
+        event: usize,
+        /// The out-of-range rank.
+        rank: usize,
+        /// The configured worker count.
+        n_workers: usize,
+    },
+    /// A fault-plan event's step is 0 or beyond the run's `steps`
+    /// (steps are 1-based; an event past the end would never fire).
+    FaultStepOutOfRange {
+        /// Index of the offending event in the plan.
+        event: usize,
+        /// The out-of-range step.
+        step: usize,
+        /// The run's step count.
+        steps: usize,
+    },
+    /// The net-model parameters were not finite and positive
+    /// (`alpha`/`beta` > 0, `phase_overhead` ≥ 0).
+    InvalidNetModel {
+        /// Which parameter was rejected.
+        field: &'static str,
+        /// The rejected value.
+        value: f64,
+    },
+    /// Planning failed after every per-field check passed (artifact or
+    /// partitioner inconsistency) — carries the underlying message.
+    Planning(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::ZeroWorkers => {
+                write!(f, "workers must be positive (a cluster needs at least one rank)")
+            }
+            ConfigError::ZeroMp => {
+                write!(f, "mp must be positive (1 = pure data parallelism)")
+            }
+            ConfigError::MpNotDivisor { n_workers, mp } => write!(
+                f,
+                "mp={mp} does not divide workers={n_workers}: the GMP topology needs \
+                 workers = groups x mp exactly (try mp in the divisors of {n_workers})"
+            ),
+            ConfigError::MpUnsupported { mp, supported } => write!(
+                f,
+                "artifacts were not lowered for mp={mp} (supported: {supported:?}) — \
+                 re-run `make artifacts` or pick a supported group size"
+            ),
+            ConfigError::ZeroSteps => write!(f, "steps must be positive"),
+            ConfigError::ZeroAvgPeriod => {
+                write!(f, "avg-period must be positive (1 = average every step)")
+            }
+            ConfigError::ZeroDataset => write!(f, "dataset-size must be positive"),
+            ConfigError::ZeroTakeTimeout => write!(
+                f,
+                "take-timeout-ms must be positive (0 would presume every peer dead instantly)"
+            ),
+            ConfigError::InvalidLr { lr } => {
+                write!(f, "lr must be a finite positive number, got {lr}")
+            }
+            ConfigError::InvalidMomentum { momentum } => {
+                write!(f, "momentum must be finite and in [0, 1), got {momentum}")
+            }
+            ConfigError::InvalidClipNorm { clip_norm } => write!(
+                f,
+                "clip-norm must be finite and non-negative (0 = off), got {clip_norm}"
+            ),
+            ConfigError::OverlapOnSequential => write!(
+                f,
+                "overlap=true is meaningless on the sequential engine (the strict-BSP \
+                 reference): leave overlap unset or use --engine threaded"
+            ),
+            ConfigError::FaultRankOutOfRange { event, rank, n_workers } => write!(
+                f,
+                "fault plan event {event} targets rank {rank}, but the run has ranks \
+                 0..{n_workers}"
+            ),
+            ConfigError::FaultStepOutOfRange { event, step, steps } => write!(
+                f,
+                "fault plan event {event} fires at step {step}, but steps are 1-based \
+                 and the run trains {steps} step(s)"
+            ),
+            ConfigError::InvalidNetModel { field, value } => {
+                write!(f, "net model {field} must be finite and positive, got {value}")
+            }
+            ConfigError::Planning(msg) => write!(f, "planning failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}

@@ -1,0 +1,300 @@
+//! The structured event stream — observers ([`EventSink`]) receive
+//! typed run/step/recovery events instead of scraping stdout.
+//!
+//! [`ConsoleSink`] reproduces the historical `splitbrain train` output
+//! **byte-for-byte** (pinned by the `api_session` suite), so the CLI is
+//! just a session with a console sink attached; [`CollectSink`] buffers
+//! events for programmatic consumers (the throughput bench derives
+//! steps/sec from collected [`StepReport`]s rather than wall-clocking
+//! around the whole run).
+
+use std::cell::RefCell;
+use std::io::Write;
+use std::rc::Rc;
+
+use crate::comm::CollectiveAlgo;
+use crate::coordinator::ExecEngine;
+
+/// Static facts about a run, emitted once before the first step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunInfo {
+    /// Total workers N.
+    pub n_workers: usize,
+    /// MP group size.
+    pub mp: usize,
+    /// Number of MP groups (N / mp).
+    pub n_groups: usize,
+    /// Per-worker batch size B.
+    pub batch: usize,
+    /// Steps the session plans to run.
+    pub steps: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Model-averaging period.
+    pub avg_period: usize,
+    /// Execution engine.
+    pub engine: ExecEngine,
+    /// Collective algorithm.
+    pub collectives: CollectiveAlgo,
+    /// Overlapped execution (resolved).
+    pub overlap: bool,
+    /// Predicted per-worker parameter megabytes.
+    pub param_mb: f64,
+    /// Predicted per-worker total megabytes.
+    pub total_mb: f64,
+}
+
+/// One completed training step: loss, per-phase timings, and the
+/// data-plane byte counters — everything `Session::step` returns and
+/// every sink observes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepReport {
+    /// 1-based step index (== `Session::steps_done` after the step).
+    pub step: usize,
+    /// Cluster-mean loss.
+    pub loss: f64,
+    /// Simulated compute seconds (max over workers — BSP critical path).
+    pub compute_secs: f64,
+    /// Simulated MP-communication seconds.
+    pub mp_comm_secs: f64,
+    /// Simulated averaging-communication seconds (0 off boundaries).
+    pub dp_comm_secs: f64,
+    /// Host wall-clock seconds the step actually took.
+    pub wall_secs: f64,
+    /// Data-plane bytes pushed by the busiest rank this step.
+    pub bytes_busiest_rank: u64,
+    /// Total data-plane bytes pushed this step.
+    pub bytes_total: u64,
+}
+
+impl StepReport {
+    /// Simulated step seconds (compute + MP comm + averaging comm).
+    pub fn step_secs(&self) -> f64 {
+        self.compute_secs + self.mp_comm_secs + self.dp_comm_secs
+    }
+}
+
+/// An elastic shrink-and-continue recovery transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryInfo {
+    /// The step whose retry completed on the shrunk cluster.
+    pub step: usize,
+    /// Ranks lost in this recovery (numbered in the incarnation they
+    /// died in).
+    pub lost_ranks: Vec<usize>,
+    /// Surviving worker count after the shrink.
+    pub n_workers: usize,
+    /// MP group size after re-planning.
+    pub mp: usize,
+    /// Step of the checkpoint the survivors restored from.
+    pub restore_step: usize,
+}
+
+/// End-of-run roll-up, emitted by `Session::run`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSummary {
+    /// Steps completed.
+    pub steps: usize,
+    /// Simulated-cluster throughput.
+    pub images_per_sec: f64,
+    /// Fraction of simulated step time spent communicating.
+    pub comm_fraction: f64,
+    /// Elastic recoveries performed.
+    pub recoveries: usize,
+    /// All ranks lost over the run, in detection order.
+    pub lost_ranks: Vec<usize>,
+    /// Final worker count.
+    pub n_workers: usize,
+    /// Final MP group size.
+    pub mp: usize,
+    /// Step of the last in-memory restore point.
+    pub last_checkpoint_step: usize,
+}
+
+/// One observation from a training session.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Emitted once, before the first step's work.
+    RunStarted(RunInfo),
+    /// Emitted after every completed step.
+    StepCompleted(StepReport),
+    /// Emitted when an elastic recovery re-planned the cluster.
+    Recovered(RecoveryInfo),
+    /// Emitted by `Session::run` after the last step.
+    RunCompleted(RunSummary),
+}
+
+/// A session observer. Attach with
+/// [`Session::attach`](super::Session::attach); every event is
+/// delivered to every sink, in attach order.
+///
+/// # Examples
+///
+/// A sink that tracks the best (lowest) loss seen:
+///
+/// ```
+/// use splitbrain::api::{Event, EventSink, StepReport};
+///
+/// struct BestLoss(f64);
+/// impl EventSink for BestLoss {
+///     fn on_event(&mut self, event: &Event) {
+///         if let Event::StepCompleted(step) = event {
+///             self.0 = self.0.min(step.loss);
+///         }
+///     }
+/// }
+///
+/// let mut sink = BestLoss(f64::INFINITY);
+/// sink.on_event(&Event::StepCompleted(StepReport {
+///     step: 1, loss: 2.3, compute_secs: 0.0, mp_comm_secs: 0.0,
+///     dp_comm_secs: 0.0, wall_secs: 0.0, bytes_busiest_rank: 0, bytes_total: 0,
+/// }));
+/// assert_eq!(sink.0, 2.3);
+/// ```
+pub trait EventSink {
+    /// Observe one event.
+    fn on_event(&mut self, event: &Event);
+}
+
+/// The CLI's sink: renders events exactly like the pre-API
+/// `splitbrain train` loop printed them (same format strings, same
+/// blank lines — the `api_session` suite pins the bytes).
+pub struct ConsoleSink {
+    log_every: usize,
+    steps: usize,
+    out: Box<dyn Write>,
+}
+
+impl ConsoleSink {
+    /// Log to stdout, printing every `log_every`-th step (and the
+    /// last). `log_every` is clamped to ≥ 1.
+    pub fn new(log_every: usize) -> ConsoleSink {
+        Self::with_writer(log_every, Box::new(std::io::stdout()))
+    }
+
+    /// Log into an arbitrary writer (tests capture the byte stream).
+    pub fn with_writer(log_every: usize, out: Box<dyn Write>) -> ConsoleSink {
+        ConsoleSink { log_every: log_every.max(1), steps: 0, out }
+    }
+}
+
+impl EventSink for ConsoleSink {
+    fn on_event(&mut self, event: &Event) {
+        // Console logging is best-effort: a closed pipe must not take
+        // the training run down with it.
+        let _ = match event {
+            Event::RunStarted(i) => {
+                self.steps = i.steps;
+                writeln!(
+                    self.out,
+                    "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}, engine={}, collectives={}, overlap={}",
+                    i.n_workers,
+                    i.mp,
+                    i.n_groups,
+                    i.batch,
+                    i.lr,
+                    i.avg_period,
+                    i.engine,
+                    i.collectives,
+                    i.overlap
+                )
+                .and_then(|()| {
+                    writeln!(
+                        self.out,
+                        "per-worker memory: {:.2} MB params, {:.2} MB total\n",
+                        i.param_mb, i.total_mb
+                    )
+                })
+            }
+            Event::StepCompleted(r) => {
+                if r.step % self.log_every == 0 || r.step == self.steps {
+                    writeln!(
+                        self.out,
+                        "step {:>4}  loss {:.4}  compute {:.1} ms  mp-comm {:.2} ms  step {:.1} ms",
+                        r.step,
+                        r.loss,
+                        r.compute_secs * 1e3,
+                        r.mp_comm_secs * 1e3,
+                        r.step_secs() * 1e3
+                    )
+                } else {
+                    Ok(())
+                }
+            }
+            // The historical CLI reported recoveries only in the final
+            // summary; staying byte-identical means staying quiet here.
+            Event::Recovered(_) => Ok(()),
+            Event::RunCompleted(s) => {
+                let recov = if s.recoveries > 0 {
+                    writeln!(
+                        self.out,
+                        "\nelastic recoveries: {} (ranks lost: {:?}) — now {} workers, mp={}, \
+                         last restore point step {}",
+                        s.recoveries, s.lost_ranks, s.n_workers, s.mp, s.last_checkpoint_step
+                    )
+                } else {
+                    Ok(())
+                };
+                recov.and_then(|()| {
+                    writeln!(
+                        self.out,
+                        "\nthroughput: {:.2} images/sec (simulated cluster)  comm fraction {:.1}%",
+                        s.images_per_sec,
+                        s.comm_fraction * 100.0
+                    )
+                })
+            }
+        };
+    }
+}
+
+/// A sink that buffers every event for later inspection (benches and
+/// tests read the stream after the run).
+///
+/// # Examples
+///
+/// ```
+/// use splitbrain::api::{CollectSink, Event, EventSink};
+///
+/// let mut sink = CollectSink::new();
+/// let events = sink.events();
+/// sink.on_event(&Event::Recovered(splitbrain::api::RecoveryInfo {
+///     step: 3, lost_ranks: vec![1], n_workers: 3, mp: 1, restore_step: 2,
+/// }));
+/// assert_eq!(events.borrow().len(), 1);
+/// ```
+#[derive(Default)]
+pub struct CollectSink {
+    events: Rc<RefCell<Vec<Event>>>,
+}
+
+impl CollectSink {
+    /// An empty collector.
+    pub fn new() -> CollectSink {
+        CollectSink::default()
+    }
+
+    /// Shared handle to the buffered events (clone it out before
+    /// moving the sink into a session).
+    pub fn events(&self) -> Rc<RefCell<Vec<Event>>> {
+        self.events.clone()
+    }
+}
+
+impl EventSink for CollectSink {
+    fn on_event(&mut self, event: &Event) {
+        self.events.borrow_mut().push(event.clone());
+    }
+}
+
+/// Extract the step reports from a collected event stream (the common
+/// consumer shape: `session.run()` then analyze per-step data).
+pub fn step_reports(events: &[Event]) -> Vec<StepReport> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            Event::StepCompleted(r) => Some(r.clone()),
+            _ => None,
+        })
+        .collect()
+}

@@ -1,0 +1,407 @@
+//! Serializable run manifests — the canonical `run.json` description
+//! of a resolved training run.
+//!
+//! A [`RunManifest`] captures **everything that determines the run's
+//! numerics and lifecycle**: shape (workers/mp/steps), trainer
+//! hyper-parameters, seed, scheme/engine/collectives/recovery choices,
+//! overlap, the α–β network model and the full fault plan. It
+//! deliberately excludes host-level knobs (artifact paths, log cadence,
+//! connect timeouts, compute tiling) — two hosts running the same
+//! manifest produce bit-identical training.
+//!
+//! Properties the `api_manifest` property suite pins:
+//!
+//! * **Canonical**: serialize → parse → serialize is byte-identical.
+//! * **Lossless**: every field round-trips exactly (floats via Rust's
+//!   shortest-round-trip formatting, `u64` seeds as raw tokens).
+//! * **Fingerprinted**: [`RunManifest::fingerprint`] hashes the
+//!   canonical text; the TCP mesh's Hello handshake compares the
+//!   fingerprints of every worker pair, so processes given different
+//!   manifests can never train together
+//!   (see `coordinator::procdriver::run_fingerprint`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::fault::{FaultEvent, FaultPlan};
+use crate::comm::{CollectiveAlgo, NetModel};
+use crate::coordinator::{ClusterConfig, ExecEngine, McastScheme, RecoveryPolicy};
+use crate::util::json::{escape_str, Json};
+
+/// Manifest schema version this build writes and reads.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// A resolved run description, serializable to canonical JSON.
+///
+/// Build one from a validated plan ([`Plan::manifest`](super::Plan::manifest)),
+/// from a resolved config ([`RunManifest::from_config`]), or by parsing
+/// a `run.json` ([`RunManifest::parse`]). Reload into a builder with
+/// [`SessionBuilder::from_manifest`](super::SessionBuilder::from_manifest).
+///
+/// # Examples
+///
+/// ```
+/// use splitbrain::api::{RunManifest, SessionBuilder};
+///
+/// let cfg = SessionBuilder::new().workers(4).mp(2).cluster_config().unwrap();
+/// let manifest = RunManifest::from_config(&cfg, 20);
+/// let text = manifest.to_json();
+/// let reparsed = RunManifest::parse(&text).unwrap();
+/// assert_eq!(reparsed.to_json(), text); // canonical round-trip
+/// assert_eq!(reparsed.fingerprint(), manifest.fingerprint());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunManifest {
+    /// Total workers N.
+    pub workers: usize,
+    /// MP group size.
+    pub mp: usize,
+    /// Training steps.
+    pub steps: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// SGD momentum.
+    pub momentum: f32,
+    /// Global-norm gradient clip (0 = off).
+    pub clip_norm: f32,
+    /// Model-averaging period in steps.
+    pub avg_period: usize,
+    /// Master seed (params, data order, fault randomness).
+    pub seed: u64,
+    /// Synthetic dataset size.
+    pub dataset_size: usize,
+    /// §3.1 communication scheme.
+    pub scheme: McastScheme,
+    /// Execution engine.
+    pub engine: ExecEngine,
+    /// Collective algorithm.
+    pub collectives: CollectiveAlgo,
+    /// Peer-loss policy.
+    pub recovery: RecoveryPolicy,
+    /// Overlapped execution (resolved; never "auto" in a manifest).
+    pub overlap: bool,
+    /// Run mp=1 through the segmented pipeline (bench fidelity knob).
+    pub segmented_mp1: bool,
+    /// Blocking-take timeout, milliseconds.
+    pub take_timeout_ms: u64,
+    /// α–β network cost model.
+    pub net: NetModel,
+    /// Deterministic fault scenario.
+    pub faults: FaultPlan,
+}
+
+impl RunManifest {
+    /// Capture a resolved [`ClusterConfig`] plus the step count.
+    pub fn from_config(cfg: &ClusterConfig, steps: usize) -> RunManifest {
+        RunManifest {
+            workers: cfg.n_workers,
+            mp: cfg.mp,
+            steps,
+            lr: cfg.lr,
+            momentum: cfg.momentum,
+            clip_norm: cfg.clip_norm,
+            avg_period: cfg.avg_period,
+            seed: cfg.seed,
+            dataset_size: cfg.dataset_size,
+            scheme: cfg.scheme,
+            engine: cfg.engine,
+            collectives: cfg.collectives,
+            recovery: cfg.recovery,
+            overlap: cfg.overlap,
+            segmented_mp1: cfg.segmented_mp1,
+            take_timeout_ms: cfg.take_timeout_ms,
+            net: cfg.net,
+            faults: cfg.faults.clone(),
+        }
+    }
+
+    /// The manifest as a resolved [`ClusterConfig`] (everything except
+    /// `steps`, which the manifest carries separately).
+    pub fn to_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            n_workers: self.workers,
+            mp: self.mp,
+            lr: self.lr,
+            momentum: self.momentum,
+            clip_norm: self.clip_norm,
+            avg_period: self.avg_period,
+            seed: self.seed,
+            net: self.net,
+            dataset_size: self.dataset_size,
+            segmented_mp1: self.segmented_mp1,
+            scheme: self.scheme,
+            engine: self.engine,
+            collectives: self.collectives,
+            recovery: self.recovery,
+            take_timeout_ms: self.take_timeout_ms,
+            faults: self.faults.clone(),
+            overlap: self.overlap,
+        }
+    }
+
+    /// Canonical JSON text (fixed key order, 2-space indent, trailing
+    /// newline). Serialize → [`parse`](RunManifest::parse) → serialize
+    /// is byte-identical.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"splitbrain_manifest\": {MANIFEST_VERSION},\n"));
+        s.push_str(&format!("  \"workers\": {},\n", self.workers));
+        s.push_str(&format!("  \"mp\": {},\n", self.mp));
+        s.push_str(&format!("  \"steps\": {},\n", self.steps));
+        s.push_str(&format!("  \"lr\": {},\n", self.lr));
+        s.push_str(&format!("  \"momentum\": {},\n", self.momentum));
+        s.push_str(&format!("  \"clip_norm\": {},\n", self.clip_norm));
+        s.push_str(&format!("  \"avg_period\": {},\n", self.avg_period));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"dataset_size\": {},\n", self.dataset_size));
+        s.push_str(&format!("  \"scheme\": \"{}\",\n", escape_str(&self.scheme.to_string())));
+        s.push_str(&format!("  \"engine\": \"{}\",\n", self.engine));
+        s.push_str(&format!("  \"collectives\": \"{}\",\n", self.collectives));
+        s.push_str(&format!("  \"recovery\": \"{}\",\n", self.recovery));
+        s.push_str(&format!("  \"overlap\": {},\n", self.overlap));
+        s.push_str(&format!("  \"segmented_mp1\": {},\n", self.segmented_mp1));
+        s.push_str(&format!("  \"take_timeout_ms\": {},\n", self.take_timeout_ms));
+        s.push_str(&format!(
+            "  \"net\": {{\"alpha\": {}, \"beta\": {}, \"phase_overhead\": {}}},\n",
+            self.net.alpha, self.net.beta, self.net.phase_overhead
+        ));
+        s.push_str("  \"faults\": [");
+        for (i, ev) in self.faults.events().iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            match ev {
+                FaultEvent::Crash { rank, step } => {
+                    s.push_str(&format!("{{\"kind\": \"crash\", \"rank\": {rank}, \"step\": {step}}}"));
+                }
+                FaultEvent::Straggle { rank, step, sim_ms } => {
+                    s.push_str(&format!(
+                        "{{\"kind\": \"straggle\", \"rank\": {rank}, \"step\": {step}, \"sim_ms\": {sim_ms}}}"
+                    ));
+                }
+                FaultEvent::DropMsg { src, dst, phase, step } => {
+                    s.push_str(&format!(
+                        "{{\"kind\": \"drop\", \"src\": {src}, \"dst\": {dst}, \"phase\": {phase}, \"step\": {step}}}"
+                    ));
+                }
+                FaultEvent::DelayMsg { src, dst, phase, step, sim_ms } => {
+                    s.push_str(&format!(
+                        "{{\"kind\": \"delay\", \"src\": {src}, \"dst\": {dst}, \"phase\": {phase}, \"step\": {step}, \"sim_ms\": {sim_ms}}}"
+                    ));
+                }
+            }
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+
+    /// Parse a manifest document. Strict: unknown or missing keys,
+    /// wrong types, and unsupported schema versions are errors (a typo
+    /// in a hand-edited manifest must not silently fall back to a
+    /// default — the same contract the CLI's unknown-flag check gives).
+    pub fn parse(text: &str) -> Result<RunManifest> {
+        let doc = Json::parse(text).context("parsing run manifest")?;
+        let fields = doc.fields().context("run manifest must be a JSON object")?;
+        const KNOWN: &[&str] = &[
+            "splitbrain_manifest", "workers", "mp", "steps", "lr", "momentum", "clip_norm",
+            "avg_period", "seed", "dataset_size", "scheme", "engine", "collectives",
+            "recovery", "overlap", "segmented_mp1", "take_timeout_ms", "net", "faults",
+        ];
+        for (key, _) in fields {
+            if !KNOWN.contains(&key.as_str()) {
+                bail!("run manifest: unknown key {key:?}");
+            }
+        }
+        let version = req_u64(&doc, "splitbrain_manifest")?;
+        if version != MANIFEST_VERSION {
+            bail!("run manifest: schema version {version} (this build reads {MANIFEST_VERSION})");
+        }
+        let net_doc = doc.get("net").context("run manifest: missing key \"net\"")?;
+        let net_fields = net_doc.fields().context("run manifest: \"net\" must be an object")?;
+        for (key, _) in net_fields {
+            if !["alpha", "beta", "phase_overhead"].contains(&key.as_str()) {
+                bail!("run manifest: unknown net key {key:?}");
+            }
+        }
+        let net = NetModel {
+            alpha: req_f64(net_doc, "alpha")?,
+            beta: req_f64(net_doc, "beta")?,
+            phase_overhead: req_f64(net_doc, "phase_overhead")?,
+        };
+        let faults_doc = doc.get("faults").context("run manifest: missing key \"faults\"")?;
+        let mut faults = FaultPlan::new();
+        for (i, ev) in faults_doc
+            .as_array()
+            .context("run manifest: \"faults\" must be an array")?
+            .iter()
+            .enumerate()
+        {
+            let kind = ev
+                .get("kind")
+                .and_then(Json::as_str)
+                .with_context(|| format!("fault event {i}: missing \"kind\""))?;
+            let num = |key: &str| -> Result<usize> {
+                ev.get(key)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("fault event {i} ({kind}): missing/bad \"{key}\""))
+            };
+            let num64 = |key: &str| -> Result<u64> {
+                ev.get(key)
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("fault event {i} ({kind}): missing/bad \"{key}\""))
+            };
+            faults = match kind {
+                "crash" => faults.crash(num("rank")?, num("step")?),
+                "straggle" => faults.straggle(num("rank")?, num("step")?, num64("sim_ms")?),
+                "drop" => faults.drop_msg(
+                    num("src")?,
+                    num("dst")?,
+                    u16::try_from(num("phase")?)
+                        .map_err(|_| anyhow::anyhow!("fault event {i}: phase exceeds u16"))?,
+                    num("step")?,
+                ),
+                "delay" => faults.delay_msg(
+                    num("src")?,
+                    num("dst")?,
+                    u16::try_from(num("phase")?)
+                        .map_err(|_| anyhow::anyhow!("fault event {i}: phase exceeds u16"))?,
+                    num("step")?,
+                    num64("sim_ms")?,
+                ),
+                other => bail!("fault event {i}: unknown kind {other:?}"),
+            };
+        }
+        Ok(RunManifest {
+            workers: req_usize(&doc, "workers")?,
+            mp: req_usize(&doc, "mp")?,
+            steps: req_usize(&doc, "steps")?,
+            lr: req_f32(&doc, "lr")?,
+            momentum: req_f32(&doc, "momentum")?,
+            clip_norm: req_f32(&doc, "clip_norm")?,
+            avg_period: req_usize(&doc, "avg_period")?,
+            seed: req_u64(&doc, "seed")?,
+            dataset_size: req_usize(&doc, "dataset_size")?,
+            scheme: McastScheme::parse(req_str(&doc, "scheme")?)?,
+            engine: ExecEngine::parse(req_str(&doc, "engine")?)?,
+            collectives: CollectiveAlgo::parse(req_str(&doc, "collectives")?)?,
+            recovery: RecoveryPolicy::parse(req_str(&doc, "recovery")?)?,
+            overlap: req_bool(&doc, "overlap")?,
+            segmented_mp1: req_bool(&doc, "segmented_mp1")?,
+            take_timeout_ms: req_u64(&doc, "take_timeout_ms")?,
+            net,
+            faults,
+        })
+    }
+
+    /// Deterministic FNV-1a fingerprint of the canonical JSON text.
+    ///
+    /// This is the value the TCP transport's Hello handshake exchanges:
+    /// every worker derives it from its own manifest, so a worker whose
+    /// manifest differs from the leader's (stale file, re-encoded
+    /// flags, wrong launch) fails mesh bring-up with a typed handshake
+    /// error instead of training a subtly different run.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_json().as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1_0000_01b3);
+        }
+        h
+    }
+}
+
+fn req<'a>(doc: &'a Json, key: &str) -> Result<&'a Json> {
+    doc.get(key)
+        .with_context(|| format!("run manifest: missing key {key:?}"))
+}
+
+fn req_usize(doc: &Json, key: &str) -> Result<usize> {
+    req(doc, key)?
+        .as_usize()
+        .with_context(|| format!("run manifest: {key:?} must be an unsigned integer"))
+}
+
+fn req_u64(doc: &Json, key: &str) -> Result<u64> {
+    req(doc, key)?
+        .as_u64()
+        .with_context(|| format!("run manifest: {key:?} must be an unsigned integer"))
+}
+
+fn req_f32(doc: &Json, key: &str) -> Result<f32> {
+    req(doc, key)?
+        .as_f32()
+        .with_context(|| format!("run manifest: {key:?} must be a number"))
+}
+
+fn req_f64(doc: &Json, key: &str) -> Result<f64> {
+    req(doc, key)?
+        .as_f64()
+        .with_context(|| format!("run manifest: {key:?} must be a number"))
+}
+
+fn req_bool(doc: &Json, key: &str) -> Result<bool> {
+    req(doc, key)?
+        .as_bool()
+        .with_context(|| format!("run manifest: {key:?} must be a boolean"))
+}
+
+fn req_str<'a>(doc: &'a Json, key: &str) -> Result<&'a str> {
+    req(doc, key)?
+        .as_str()
+        .with_context(|| format!("run manifest: {key:?} must be a string"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunManifest {
+        let cfg = crate::api::SessionBuilder::new()
+            .workers(4)
+            .mp(2)
+            .steps(10)
+            .faults(FaultPlan::new().crash(1, 3).straggle(0, 2, 250).drop_msg(0, 1, 1, 4))
+            .cluster_config()
+            .unwrap();
+        RunManifest::from_config(&cfg, 10)
+    }
+
+    #[test]
+    fn round_trip_is_byte_identical() {
+        let m = sample();
+        let text = m.to_json();
+        let reparsed = RunManifest::parse(&text).unwrap();
+        assert_eq!(reparsed, m);
+        assert_eq!(reparsed.to_json(), text);
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let m = sample();
+        let mut other = sample();
+        assert_eq!(m.fingerprint(), other.fingerprint());
+        other.seed += 1;
+        assert_ne!(m.fingerprint(), other.fingerprint());
+    }
+
+    #[test]
+    fn unknown_and_missing_keys_are_errors() {
+        let mut text = sample().to_json();
+        text = text.replace("\"workers\"", "\"wrokers\"");
+        assert!(RunManifest::parse(&text).is_err(), "typoed key must not fall back");
+
+        let bad_version = sample().to_json().replace(
+            "\"splitbrain_manifest\": 1",
+            "\"splitbrain_manifest\": 99",
+        );
+        assert!(RunManifest::parse(&bad_version).is_err());
+    }
+
+    #[test]
+    fn config_round_trips_through_manifest() {
+        let m = sample();
+        let cfg = m.to_config();
+        let back = RunManifest::from_config(&cfg, m.steps);
+        assert_eq!(back, m);
+    }
+}

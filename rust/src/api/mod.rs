@@ -1,0 +1,70 @@
+//! The library-first public API: a typed builder, a staged
+//! `Plan → Session → Report` lifecycle, a structured event stream, and
+//! serializable run manifests.
+//!
+//! This is the substrate every caller plugs into — the CLI, the
+//! benches, the test suites and the examples are all thin clients of
+//! this module; [`ClusterConfig`](crate::coordinator::ClusterConfig)
+//! construction and validation live here and nowhere else.
+//!
+//! ## Lifecycle
+//!
+//! ```text
+//! SessionBuilder ──validate(&rt)──▶ Plan ──start()──▶ Session ──run()──▶ RunReport
+//!      ▲    │                        │                  │
+//!      │    └─ ConfigError (typed,   │ topology()       │ step() / checkpoint()
+//!      │       before any compute)   │ memory()         │ restore() / evaluate()
+//!      │                             │ comm()           │ attach(EventSink)
+//!      └──── from_manifest(run.json) ◀ manifest()
+//! ```
+//!
+//! * [`SessionBuilder`] — per-field setters over the full
+//!   configuration surface; [`SessionBuilder::validate`] catches every
+//!   illegal combination as a typed [`ConfigError`].
+//! * [`Plan`] — the resolved run *before any compute*: GMP topology,
+//!   shard plan, predicted memory (Fig. 7c accounting) and
+//!   communication volumes, plus the canonical [`RunManifest`].
+//! * [`Session`] — live training: whole-run [`Session::run`],
+//!   incremental [`Session::step`] (bit-identical to `run`), and
+//!   checkpoint/restore.
+//! * [`EventSink`] — structured observation (per-step loss, phase
+//!   timings, byte counters, recovery transitions); [`ConsoleSink`]
+//!   reproduces the historical CLI output byte-for-byte.
+//! * [`RunManifest`] — every resolved config serializes to a canonical
+//!   `run.json`, reloadable via [`SessionBuilder::from_manifest`] and
+//!   `splitbrain train --manifest run.json`; the multi-process
+//!   launcher hands one manifest to every worker and the TCP handshake
+//!   compares manifest fingerprints.
+//!
+//! # Examples
+//!
+//! ```no_run
+//! use splitbrain::api::{ConsoleSink, SessionBuilder};
+//! use splitbrain::runtime::RuntimeClient;
+//!
+//! let rt = RuntimeClient::load("artifacts")?;
+//! let plan = SessionBuilder::new().workers(4).mp(2).steps(100).validate(&rt)?;
+//! std::fs::write("run.json", plan.manifest().to_json())?; // reproducible
+//! let mut session = plan.start()?;
+//! session.attach(Box::new(ConsoleSink::new(10)));
+//! let report = session.run()?;
+//! println!("{} images/sec", report.train.images_per_sec());
+//! # anyhow::Result::<()>::Ok(())
+//! ```
+
+pub mod builder;
+pub mod error;
+pub mod events;
+pub mod manifest;
+pub mod plan;
+pub mod session;
+
+pub use builder::{SessionBuilder, DEFAULT_LOG_EVERY, DEFAULT_STEPS, DEFAULT_WORKERS};
+pub use error::ConfigError;
+pub use events::{
+    step_reports, CollectSink, ConsoleSink, Event, EventSink, RecoveryInfo, RunInfo, RunSummary,
+    StepReport,
+};
+pub use manifest::{RunManifest, MANIFEST_VERSION};
+pub use plan::{CommEstimate, Plan};
+pub use session::{RunReport, Session};

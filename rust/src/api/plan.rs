@@ -1,0 +1,155 @@
+//! The staged plan — everything knowable about a run **before any
+//! compute**: resolved GMP topology, the Fig. 3 partitioned network,
+//! the compiled step schedule, predicted per-worker memory (the
+//! Fig. 7c accounting) and communication volumes, and the canonical
+//! run manifest.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Cluster, ClusterConfig, GmpTopology, StepSchedule};
+use crate::data::Dataset;
+use crate::model::TransformedNet;
+use crate::runtime::RuntimeClient;
+use crate::train::MemoryReport;
+
+use super::manifest::RunManifest;
+use super::session::Session;
+
+/// Predicted per-step communication of a planned run (analytic, from
+/// the compiled schedule and the α–β network model — the same numbers
+/// the simulated clock will charge).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommEstimate {
+    /// Bytes the busiest rank pushes per step in the MP phases.
+    pub mp_bytes_per_step: u64,
+    /// Bytes the busiest rank pushes at each model-averaging boundary.
+    pub avg_bytes_per_boundary: u64,
+    /// Modeled seconds of MP communication per step.
+    pub mp_secs_per_step: f64,
+    /// Modeled seconds of averaging communication per boundary.
+    pub avg_secs_per_boundary: f64,
+}
+
+/// A validated, fully resolved run — stage two of the
+/// `SessionBuilder → Plan → Session` lifecycle.
+///
+/// Everything here is derived without touching worker state: callers
+/// can inspect (or reject) a configuration's topology, memory and
+/// communication profile before committing any resources, then
+/// [`start`](Plan::start) the session.
+///
+/// # Examples
+///
+/// ```
+/// use splitbrain::api::SessionBuilder;
+/// use splitbrain::runtime::RuntimeClient;
+///
+/// let rt = RuntimeClient::load("artifacts").unwrap();
+/// let plan = SessionBuilder::new().workers(8).mp(4).steps(10).validate(&rt).unwrap();
+/// assert_eq!(plan.topology().n_groups(), 2);
+/// let est = plan.comm();
+/// assert!(est.mp_bytes_per_step > 0, "mp=4 moves activations every step");
+/// println!("predicted {:.2} MB params/worker", plan.memory().param_mb());
+/// ```
+pub struct Plan<'rt> {
+    rt: &'rt RuntimeClient,
+    manifest: RunManifest,
+    cfg: ClusterConfig,
+    steps: usize,
+    topo: GmpTopology,
+    transformed: TransformedNet,
+    schedule: StepSchedule,
+    dataset: Option<Arc<dyn Dataset>>,
+}
+
+impl<'rt> Plan<'rt> {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        rt: &'rt RuntimeClient,
+        manifest: RunManifest,
+        cfg: ClusterConfig,
+        steps: usize,
+        topo: GmpTopology,
+        transformed: TransformedNet,
+        schedule: StepSchedule,
+        dataset: Option<Arc<dyn Dataset>>,
+    ) -> Plan<'rt> {
+        Plan { rt, manifest, cfg, steps, topo, transformed, schedule, dataset }
+    }
+
+    /// The resolved DP×MP topology (Fig. 6).
+    pub fn topology(&self) -> &GmpTopology {
+        &self.topo
+    }
+
+    /// The Fig. 3 transformed per-worker network.
+    pub fn transformed(&self) -> &TransformedNet {
+        &self.transformed
+    }
+
+    /// The compiled per-step schedule (compute inventory, per-phase
+    /// comm volumes, shard plan widths).
+    pub fn schedule(&self) -> &StepSchedule {
+        &self.schedule
+    }
+
+    /// Per-FC-boundary shard widths of the plan (each worker owns
+    /// `width / mp` columns of the sharded linears).
+    pub fn shard_widths(&self) -> &[usize] {
+        &self.schedule.shard_widths
+    }
+
+    /// Predicted per-worker memory (the Fig. 7c accounting) for this
+    /// topology and batch — available before any worker state exists.
+    pub fn memory(&self) -> MemoryReport {
+        MemoryReport::of_scheme(&self.transformed, self.rt.manifest.batch, self.cfg.scheme)
+    }
+
+    /// Predicted per-step communication volumes and modeled times.
+    pub fn comm(&self) -> CommEstimate {
+        CommEstimate {
+            mp_bytes_per_step: self.schedule.mp_bytes_per_member(),
+            avg_bytes_per_boundary: self.schedule.avg_bytes_per_member(),
+            mp_secs_per_step: self.schedule.mp_comm_secs(&self.cfg.net),
+            avg_secs_per_boundary: self.schedule.avg_comm_secs(&self.cfg.net),
+        }
+    }
+
+    /// The canonical, serializable description of this run — write
+    /// [`RunManifest::to_json`] to `run.json` and any host can
+    /// reproduce the run bit-identically
+    /// (`splitbrain train --manifest run.json`).
+    pub fn manifest(&self) -> &RunManifest {
+        &self.manifest
+    }
+
+    /// The resolved low-level [`ClusterConfig`] (for tests and benches
+    /// that drive [`Cluster`] directly).
+    pub fn cluster_config(&self) -> ClusterConfig {
+        self.cfg.clone()
+    }
+
+    /// Training steps the session will run.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Build the session: initialize workers, shards and the fabric on
+    /// the planned dataset (the builder's injected dataset, or the
+    /// default loader).
+    pub fn start(self) -> Result<Session<'rt>> {
+        let data = match &self.dataset {
+            Some(d) => d.clone(),
+            None => crate::data::load_default(self.cfg.dataset_size, self.cfg.seed).0,
+        };
+        self.start_with_dataset(data)
+    }
+
+    /// [`start`](Plan::start) on an explicit dataset.
+    pub fn start_with_dataset(self, data: Arc<dyn Dataset>) -> Result<Session<'rt>> {
+        let cluster = Cluster::with_dataset(self.rt, self.cfg.clone(), data)?;
+        Ok(Session::new(cluster, self.steps, self.rt.manifest.batch))
+    }
+}

@@ -1,0 +1,263 @@
+//! The live training session — stage three of the
+//! `SessionBuilder → Plan → Session` lifecycle.
+//!
+//! A [`Session`] owns the cluster state and exposes both granularities:
+//! [`run`](Session::run) drives the whole planned run, and
+//! [`step`](Session::step) advances exactly one training step — the two
+//! are **bit-identical** (`run` is a `step` loop; the `api_session`
+//! suite asserts it), so callers can interleave checkpoints,
+//! evaluation, or their own control logic between steps at no numeric
+//! cost. Observability flows through attached [`EventSink`]s.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::Cluster;
+use crate::data::Dataset;
+use crate::train::{MemoryReport, TrainReport};
+use crate::util::Timer;
+
+use super::events::{Event, EventSink, RecoveryInfo, RunInfo, RunSummary, StepReport};
+
+/// End-of-run report: the aggregate [`TrainReport`] plus the recovery
+/// trajectory.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Aggregated per-step metrics (losses, timing stats, comm trace).
+    pub train: TrainReport,
+    /// Steps completed.
+    pub steps_done: usize,
+    /// Elastic recoveries performed.
+    pub recoveries: usize,
+    /// Ranks lost, in detection order.
+    pub lost_ranks: Vec<usize>,
+    /// Final worker count (shrinks under recovery).
+    pub n_workers: usize,
+    /// Final MP group size.
+    pub mp: usize,
+    /// Step of the last in-memory restore point.
+    pub last_checkpoint_step: usize,
+}
+
+impl RunReport {
+    /// The scalar roll-up emitted as [`Event::RunCompleted`].
+    pub fn summary(&self) -> RunSummary {
+        RunSummary {
+            steps: self.steps_done,
+            images_per_sec: self.train.images_per_sec(),
+            comm_fraction: self.train.comm_fraction(),
+            recoveries: self.recoveries,
+            lost_ranks: self.lost_ranks.clone(),
+            n_workers: self.n_workers,
+            mp: self.mp,
+            last_checkpoint_step: self.last_checkpoint_step,
+        }
+    }
+}
+
+/// A running training session over the in-proc cluster.
+///
+/// # Examples
+///
+/// Drive a run step-at-a-time, checkpointing mid-way — bit-identical
+/// to an uninterrupted [`run`](Session::run):
+///
+/// ```no_run
+/// use splitbrain::api::SessionBuilder;
+/// use splitbrain::runtime::RuntimeClient;
+///
+/// let rt = RuntimeClient::load("artifacts")?;
+/// let mut session = SessionBuilder::new()
+///     .workers(2)
+///     .mp(2)
+///     .steps(20)
+///     .validate(&rt)?
+///     .start()?;
+/// while !session.is_done() {
+///     let step = session.step()?;
+///     if step.step == 10 {
+///         session.checkpoint("mid.ckpt")?;
+///     }
+/// }
+/// println!("final loss {:?}", session.report().train.final_loss());
+/// # anyhow::Result::<()>::Ok(())
+/// ```
+pub struct Session<'rt> {
+    cluster: Cluster<'rt>,
+    steps: usize,
+    batch: usize,
+    train: TrainReport,
+    sinks: Vec<Box<dyn EventSink>>,
+    started: bool,
+}
+
+impl<'rt> Session<'rt> {
+    pub(crate) fn new(cluster: Cluster<'rt>, steps: usize, batch: usize) -> Session<'rt> {
+        let train = TrainReport::new(cluster.cfg.n_workers, cluster.cfg.mp, batch);
+        Session { cluster, steps, batch, train, sinks: Vec::new(), started: false }
+    }
+
+    /// Attach an observer; every event goes to every sink in attach
+    /// order. Attach before the first [`step`](Session::step) to see
+    /// [`Event::RunStarted`].
+    pub fn attach(&mut self, sink: Box<dyn EventSink>) {
+        self.sinks.push(sink);
+    }
+
+    fn emit(&mut self, event: &Event) {
+        for sink in &mut self.sinks {
+            sink.on_event(event);
+        }
+    }
+
+    /// Advance exactly one training step (recovering first under
+    /// shrink-and-continue, like the cluster driver) and report it.
+    /// Emits [`Event::RunStarted`] before the first step's work,
+    /// [`Event::Recovered`] when the step survived a re-plan, and
+    /// [`Event::StepCompleted`] on the way out.
+    pub fn step(&mut self) -> Result<StepReport> {
+        if !self.started {
+            self.started = true;
+            let mem = self.cluster.memory_report();
+            let info = RunInfo {
+                n_workers: self.cluster.cfg.n_workers,
+                mp: self.cluster.cfg.mp,
+                n_groups: self.cluster.cfg.n_workers / self.cluster.cfg.mp.max(1),
+                batch: self.batch,
+                steps: self.steps,
+                lr: self.cluster.cfg.lr,
+                avg_period: self.cluster.cfg.avg_period,
+                engine: self.cluster.cfg.engine,
+                collectives: self.cluster.cfg.collectives,
+                overlap: self.cluster.cfg.overlap,
+                param_mb: mem.param_mb(),
+                total_mb: mem.total_mb(),
+            };
+            self.emit(&Event::RunStarted(info));
+        }
+        let recoveries_before = self.cluster.recoveries;
+        let lost_before = self.cluster.lost_ranks.len();
+        let timer = Timer::start();
+        let m = self.cluster.step()?;
+        let wall_secs = timer.elapsed_secs();
+
+        // Mirror the modeled comm phases into the trace (what the
+        // pre-API callers did by hand around `Cluster::step`).
+        for p in &self.cluster.schedule.mp_phases {
+            for _ in 0..p.times {
+                self.train.trace.record_uniform(
+                    p.category,
+                    &self.cluster.cfg.net,
+                    p.ranks,
+                    p.per_member,
+                );
+            }
+        }
+        if m.dp_comm_secs > 0.0 {
+            for p in &self.cluster.schedule.avg_phases {
+                self.train.trace.record_uniform(
+                    p.category,
+                    &self.cluster.cfg.net,
+                    p.ranks,
+                    p.per_member,
+                );
+            }
+        }
+        self.train.push(&m);
+
+        if self.cluster.recoveries > recoveries_before {
+            let info = RecoveryInfo {
+                step: self.cluster.steps_done(),
+                lost_ranks: self.cluster.lost_ranks[lost_before..].to_vec(),
+                n_workers: self.cluster.cfg.n_workers,
+                mp: self.cluster.cfg.mp,
+                restore_step: self.cluster.last_checkpoint_step(),
+            };
+            self.emit(&Event::Recovered(info));
+        }
+        let (bytes_busiest_rank, bytes_total) = self.cluster.last_fabric_bytes;
+        let report = StepReport {
+            step: self.cluster.steps_done(),
+            loss: m.loss,
+            compute_secs: m.compute_secs,
+            mp_comm_secs: m.mp_comm_secs,
+            dp_comm_secs: m.dp_comm_secs,
+            wall_secs,
+            bytes_busiest_rank,
+            bytes_total,
+        };
+        self.emit(&Event::StepCompleted(report.clone()));
+        Ok(report)
+    }
+
+    /// Run every remaining planned step, emit [`Event::RunCompleted`],
+    /// and return the report. Bit-identical to calling
+    /// [`step`](Session::step) in a loop — it *is* that loop.
+    pub fn run(&mut self) -> Result<RunReport> {
+        while !self.is_done() {
+            self.step()?;
+        }
+        let report = self.report();
+        self.emit(&Event::RunCompleted(report.summary()));
+        Ok(report)
+    }
+
+    /// True once the planned step count has completed.
+    pub fn is_done(&self) -> bool {
+        self.cluster.steps_done() >= self.steps
+    }
+
+    /// Steps completed so far.
+    pub fn steps_done(&self) -> usize {
+        self.cluster.steps_done()
+    }
+
+    /// Steps the session plans to run in total.
+    pub fn steps_planned(&self) -> usize {
+        self.steps
+    }
+
+    /// Snapshot the report at the current step (also what
+    /// [`run`](Session::run) returns at the end).
+    pub fn report(&self) -> RunReport {
+        RunReport {
+            train: self.train.clone(),
+            steps_done: self.cluster.steps_done(),
+            recoveries: self.cluster.recoveries,
+            lost_ranks: self.cluster.lost_ranks.clone(),
+            n_workers: self.cluster.cfg.n_workers,
+            mp: self.cluster.cfg.mp,
+            last_checkpoint_step: self.cluster.last_checkpoint_step(),
+        }
+    }
+
+    /// Save the global model to a checkpoint file (valid at any step;
+    /// see [`Cluster::save_checkpoint`]).
+    pub fn checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.cluster.save_checkpoint(path)
+    }
+
+    /// Restore a checkpoint into every worker (re-sharding for this
+    /// topology; optimizer momentum resets, as on any restore).
+    pub fn restore(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        self.cluster.restore_checkpoint(path)
+    }
+
+    /// Evaluate the current model on `n_batches` × batch examples;
+    /// returns (mean loss, accuracy).
+    pub fn evaluate(&mut self, data: &dyn Dataset, n_batches: usize) -> Result<(f64, f64)> {
+        self.cluster.evaluate(data, n_batches)
+    }
+
+    /// Per-worker memory accounting of the live cluster.
+    pub fn memory_report(&self) -> MemoryReport {
+        self.cluster.memory_report()
+    }
+
+    /// Read access to the underlying cluster (worker parameters,
+    /// topology, schedule — what the parity suites inspect).
+    pub fn cluster(&self) -> &Cluster<'rt> {
+        &self.cluster
+    }
+}

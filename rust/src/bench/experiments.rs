@@ -32,8 +32,13 @@ pub fn run_config(
     cfg_base: &ClusterConfig,
 ) -> Result<TrainReport> {
     // Segmented mp=1 baseline: identical per-op efficiency across the
-    // DP/MP comparison (see StepSchedule::compile_opts).
-    let mut cfg = ClusterConfig { n_workers, mp, segmented_mp1: true, ..cfg_base.clone() };
+    // DP/MP comparison (see StepSchedule::compile_opts). The base
+    // config comes from the caller's SessionBuilder; only the swept
+    // shape is overridden here.
+    let mut cfg = cfg_base.clone();
+    cfg.n_workers = n_workers;
+    cfg.mp = mp;
+    cfg.segmented_mp1 = true;
     match fidelity {
         Fidelity::Numeric { steps } => {
             // Timing fidelity: per-worker compute must be measured

@@ -12,7 +12,7 @@
 //! depend on (DESIGN.md §1).
 
 /// Network parameters. Defaults = the paper's InfiniBand backplane.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetModel {
     /// Per-message latency (software + NIC + switch), seconds.
     pub alpha: f64,

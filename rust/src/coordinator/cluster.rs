@@ -110,6 +110,12 @@ impl std::fmt::Display for RecoveryPolicy {
 }
 
 /// Training-run configuration (§4's trainer parameters).
+///
+/// Construct via [`crate::api::SessionBuilder`] — the builder is the
+/// one place that validates every field combination (typed
+/// [`ConfigError`](crate::api::ConfigError)s instead of mid-run
+/// failures) and resolves defaults; nothing else in the tree builds
+/// this struct by literal.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     /// Total workers N.

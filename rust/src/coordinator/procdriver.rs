@@ -109,34 +109,18 @@ pub enum RunOutcome {
     Evicted,
 }
 
-/// Deterministic FNV-1a fingerprint over the run shape, exchanged in
-/// the handshake so workers from different launches can never mesh.
-/// Overlap is included for hygiene even though mixed-overlap meshes
-/// would still agree bit-for-bit (takes are tag-addressed).
+/// Deterministic fingerprint over the run, exchanged in the Hello
+/// handshake so workers from different launches (or holding different
+/// manifests) can never mesh.
+///
+/// The preimage is the **canonical run manifest**
+/// ([`RunManifest::to_json`](crate::api::RunManifest::to_json)) — the
+/// same `run.json` the launcher writes and hands to every worker — so
+/// "my manifest matches the leader's" is exactly what every
+/// worker-pair handshake asserts. It also covers what the old
+/// flag-string preimage missed: the fault plan and the network model.
 pub fn run_fingerprint(cfg: &ClusterConfig, steps: usize) -> u64 {
-    let text = format!(
-        "v1|n={}|mp={}|lr={}|mom={}|clip={}|avg={}|seed={}|ds={}|scheme={}|coll={}|rec={}|steps={}|seg={}|ov={}",
-        cfg.n_workers,
-        cfg.mp,
-        cfg.lr,
-        cfg.momentum,
-        cfg.clip_norm,
-        cfg.avg_period,
-        cfg.seed,
-        cfg.dataset_size,
-        cfg.scheme,
-        cfg.collectives,
-        cfg.recovery,
-        steps,
-        cfg.segmented_mp1,
-        cfg.overlap,
-    );
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in text.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x1_0000_01b3);
-    }
-    h
+    crate::api::RunManifest::from_config(cfg, steps).fingerprint()
 }
 
 /// Run one worker process to completion (see the module docs). Returns
@@ -193,6 +177,11 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
     let mut step_count = 0usize;
     let mut recoveries = 0usize;
     let mut losses: Vec<(usize, f64)> = Vec::with_capacity(pc.steps);
+    // Host wall-clock per completed step (the per-process event
+    // stream): dumped as `stepsecs` meta lines so the throughput bench
+    // derives TCP steps/sec from per-step timings — mesh bring-up and
+    // teardown excluded — exactly like the in-proc `StepReport`s.
+    let mut step_secs: Vec<(usize, f64)> = Vec::with_capacity(pc.steps);
     let mut bytes_sent = 0u64;
     // Overlap's double buffer: the next step's batch is fetched on a
     // scoped helper thread while the current step computes, so input
@@ -207,6 +196,7 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
             None => iter.next_batch(),
         };
         let prefetch_next = program.overlap && step_no < pc.steps;
+        let step_timer = std::time::Instant::now();
         let (res, next) = std::thread::scope(|s| {
             let prefetch = if prefetch_next { Some(s.spawn(|| iter.next_batch())) } else { None };
             let res = try_step(
@@ -229,6 +219,7 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
                 transport.reset_counters();
                 step_count += 1;
                 losses.push((step_count, loss));
+                step_secs.push((step_count, step_timer.elapsed().as_secs_f64()));
                 if pc.log_every > 0 && (step_count % pc.log_every == 0 || step_count == pc.steps)
                 {
                     eprintln!("[rank {my_rank}/{n} opid {}] step {step_count:>4}  loss {loss:.4}", pc.opid);
@@ -308,7 +299,9 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
     }
 
     if let Some(dir) = &pc.out_dir {
-        write_outputs(dir, pc.opid, my_rank, n, mp, recoveries, &losses, bytes_sent, &worker)?;
+        write_outputs(
+            dir, pc.opid, my_rank, n, mp, recoveries, &losses, &step_secs, bytes_sent, &worker,
+        )?;
     }
     transport.shutdown();
     Ok(RunOutcome::Completed)
@@ -474,8 +467,8 @@ fn refresh_ckpt(
 
 /// Write this process's end-of-run state for the launcher and the
 /// parity suite: `opid<N>.meta` (final rank/shape, per-step loss bit
-/// patterns, byte counters) and `opid<N>.ckpt` (every local parameter
-/// tensor, bit-exact).
+/// patterns, per-step wall seconds, byte counters) and `opid<N>.ckpt`
+/// (every local parameter tensor, bit-exact).
 #[allow(clippy::too_many_arguments)]
 fn write_outputs(
     dir: &Path,
@@ -485,6 +478,7 @@ fn write_outputs(
     mp: usize,
     recoveries: usize,
     losses: &[(usize, f64)],
+    step_secs: &[(usize, f64)],
     bytes_sent: u64,
     worker: &Worker,
 ) -> Result<()> {
@@ -499,6 +493,9 @@ fn write_outputs(
     meta.push_str(&format!("bytes {bytes_sent}\n"));
     for (step, loss) in losses {
         meta.push_str(&format!("loss {step} {:016x}\n", loss.to_bits()));
+    }
+    for (step, secs) in step_secs {
+        meta.push_str(&format!("stepsecs {step} {:016x}\n", secs.to_bits()));
     }
     std::fs::write(dir.join(format!("opid{opid}.meta")), meta)?;
 

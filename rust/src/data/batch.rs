@@ -41,6 +41,12 @@ pub trait Dataset: Send + Sync {
     /// Image `i` as 32*32*3 f32s (NHWC row-major) + label.
     fn example(&self, i: usize) -> (Vec<f32>, i32);
 
+    /// Debug-friendly description (trait objects appear in
+    /// `#[derive(Debug)]` holders like `api::SessionBuilder`).
+    fn describe(&self) -> String {
+        format!("Dataset(len={})", self.len())
+    }
+
     /// Assemble a batch from explicit indices.
     fn gather(&self, indices: &[usize]) -> Batch {
         let b = indices.len();
@@ -56,6 +62,12 @@ pub trait Dataset: Send + Sync {
             images: HostTensor::f32(vec![b, 32, 32, 3], images),
             labels: HostTensor::i32(vec![b], labels),
         }
+    }
+}
+
+impl std::fmt::Debug for dyn Dataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.describe())
     }
 }
 

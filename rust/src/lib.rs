@@ -23,6 +23,7 @@
 //!
 //! | module | role |
 //! |---|---|
+//! | [`api`] | the public session API: typed builder → staged plan → session, structured event stream, serializable run manifests |
 //! | [`model`] | layer DSL, VGG-11 variant (Table 1), CCR estimates, the Listing-1 partitioner |
 //! | [`comm`] | pluggable transport (in-proc fabric + multi-process TCP wire fabric), naive/ring/rhd collectives, network cost model, comm tracing, deterministic fault injection |
 //! | [`coordinator`] | GMP topology, modulo/shard plans, step schedule, the compiled step-program IR + one executor for every engine (with overlapped execution), model averaging, threaded + sequential cluster engines, multi-process rank driver, elastic shrink-and-continue recovery |
@@ -34,19 +35,25 @@
 //!
 //! ## Quickstart
 //!
+//! Build a session through the typed [`api`]: validate the
+//! configuration into a [`api::Plan`] (topology, predicted memory and
+//! comm volumes — before any compute), then start and run it:
+//!
 //! ```no_run
-//! use splitbrain::coordinator::cluster::{Cluster, ClusterConfig};
+//! use splitbrain::api::SessionBuilder;
 //! use splitbrain::runtime::RuntimeClient;
 //!
 //! let rt = RuntimeClient::load("artifacts").unwrap();
-//! let cfg = ClusterConfig { n_workers: 4, mp: 2, ..Default::default() };
-//! let mut cluster = Cluster::new(&rt, cfg).unwrap();
-//! let report = cluster.train_steps(100).unwrap();
-//! println!("{} images/sec", report.images_per_sec());
+//! let plan = SessionBuilder::new().workers(4).mp(2).steps(100).validate(&rt).unwrap();
+//! println!("per-worker params: {:.2} MB", plan.memory().param_mb());
+//! let mut session = plan.start().unwrap();
+//! let report = session.run().unwrap();
+//! println!("{} images/sec", report.train.images_per_sec());
 //! ```
 
 #![warn(missing_docs)]
 
+pub mod api;
 pub mod bench;
 pub mod comm;
 pub mod coordinator;

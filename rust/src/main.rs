@@ -1,4 +1,4 @@
-//! `splitbrain` — the leader CLI.
+//! `splitbrain` — the leader CLI, a thin client of [`splitbrain::api`].
 //!
 //! ```text
 //! splitbrain train    --workers 4 --mp 2 --steps 100 [--lr 0.05] [--avg-period 10]
@@ -6,26 +6,57 @@
 //!                     [--overlap true|false] [--compute-threads N]
 //!                     [--recovery fail-fast|shrink] [--take-timeout-ms 120000]
 //!                     [--crash R@S] [--straggle R@S:MS] [--fault-seed N [--fault-count 2]]
+//!                     [--manifest run.json] [--emit-manifest run.json]
 //! splitbrain launch   --workers 4 --mp 2 --steps 100   # multi-process TCP training
 //!                     [--out-dir DIR] [--verify-replicas] + the train flags above
-//! splitbrain worker   --rank R --workers N --peers a0,a1,...  # one rank (launch spawns these)
+//! splitbrain worker   --rank R --peers a0,a1,... --manifest run.json  # one rank
 //! splitbrain sweep    --experiment table2|fig7a|fig7b|fig7b-algos|fig7c [--numeric]
 //! splitbrain inspect  [--mp 2]          # Table 1 + the Fig. 3 transform
 //! splitbrain memory                     # Fig. 7c memory accounting
 //! splitbrain profile  --workers 2 --mp 2 --steps 3   # per-artifact hot-path profile
 //! ```
 //!
+//! Every configuration flag is a [`SessionBuilder`] setter; the flags
+//! resolve to a canonical run manifest (`--emit-manifest` writes it,
+//! `--manifest` reloads it, and `launch` hands one `run.json` to every
+//! worker process instead of re-encoding flags). Unknown flags are
+//! rejected with a "did you mean" suggestion instead of silently
+//! running with defaults.
+//!
 //! Runs on the built-in native backend out of the box; an `artifacts/`
 //! directory produced by `python -m compile.aot` overrides the manifest.
 
 use anyhow::{bail, Context, Result};
 
+use splitbrain::api::{ConsoleSink, RunManifest, SessionBuilder, DEFAULT_LOG_EVERY};
 use splitbrain::bench::{self, Fidelity};
-use splitbrain::coordinator::{Cluster, ClusterConfig};
+use splitbrain::comm::fault::FaultEvent;
+use splitbrain::coordinator::RecoveryPolicy;
 use splitbrain::model::{partition_network, vgg11, PartitionConfig};
 use splitbrain::runtime::RuntimeClient;
 use splitbrain::train::MemoryReport;
 use splitbrain::util::{Args, Table};
+
+/// Flags that configure the run itself — one per [`SessionBuilder`]
+/// setter (plus the composite fault flags and `--manifest`). The
+/// builder owns every default; the CLI only overrides what was given.
+const CONFIG_FLAGS: &[&str] = &[
+    "manifest", "workers", "mp", "steps", "lr", "momentum", "clip-norm", "scheme", "engine",
+    "collectives", "avg-period", "seed", "dataset-size", "recovery", "take-timeout-ms",
+    "overlap", "crash", "straggle", "fault-seed", "fault-count",
+];
+
+/// Host-level flags every subcommand accepts (never part of the run
+/// manifest: they change where/how this process runs, not the run).
+const HOST_FLAGS: &[&str] = &["artifacts", "log-every", "compute-threads"];
+
+/// The known-flag list for a subcommand: config + host + its extras.
+fn known_flags(extra: &[&str]) -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = CONFIG_FLAGS.to_vec();
+    v.extend_from_slice(HOST_FLAGS);
+    v.extend_from_slice(extra);
+    v
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -53,37 +84,75 @@ fn main() -> Result<()> {
     }
 }
 
-/// Shared CLI defaults (also used by the fault-plan assembly, which
-/// draws random ranks/steps from the same ranges the run will have).
-const DEFAULT_WORKERS: usize = 2;
-const DEFAULT_STEPS: usize = 50;
+/// Build a [`SessionBuilder`] from the CLI: `--manifest run.json`
+/// seeds every field from the file, then any explicitly given flag
+/// overrides it. Without a manifest the builder's defaults (the
+/// historical flag defaults) fill the gaps — defaults live in exactly
+/// one place.
+fn builder_from_args(args: &Args) -> Result<SessionBuilder> {
+    builder_with_base(args, SessionBuilder::new())
+}
 
-fn cluster_config(args: &Args) -> Result<ClusterConfig> {
-    let n_workers = args.usize_or("workers", DEFAULT_WORKERS)?;
-    let steps = args.usize_or("steps", DEFAULT_STEPS)?;
-    Ok(ClusterConfig {
-        n_workers,
-        mp: args.usize_or("mp", 1)?,
-        lr: args.f32_or("lr", 0.05)?,
-        momentum: args.f32_or("momentum", 0.9)?,
-        clip_norm: args.f32_or("clip-norm", 1.0)?,
-        scheme: splitbrain::coordinator::McastScheme::parse(args.str_or("scheme", "b/k"))?,
-        engine: splitbrain::coordinator::ExecEngine::parse(args.str_or("engine", "threaded"))?,
-        collectives: splitbrain::comm::CollectiveAlgo::parse(args.str_or("collectives", "ring"))?,
-        avg_period: args.usize_or("avg-period", 10)?,
-        seed: args.u64_or("seed", 42)?,
-        dataset_size: args.usize_or("dataset-size", 2048)?,
-        recovery: splitbrain::coordinator::RecoveryPolicy::parse(
-            args.str_or("recovery", "fail-fast"),
-        )?,
-        take_timeout_ms: args.u64_or(
-            "take-timeout-ms",
-            splitbrain::comm::fabric::TAKE_TIMEOUT_SECS * 1000,
-        )?,
-        faults: fault_plan(args, n_workers, steps)?,
-        overlap: args.bool_or("overlap", true)?,
-        ..Default::default()
-    })
+/// [`builder_from_args`] over an explicit no-manifest base — the
+/// launcher passes a 4-worker base (its historical default), and the
+/// base must be in place **before** `--fault-seed` draws its random
+/// scenario, so seeded fault plans are scoped to the real run shape.
+fn builder_with_base(args: &Args, base: SessionBuilder) -> Result<SessionBuilder> {
+    let mut b = match args.str_or("manifest", "") {
+        "" => base,
+        path => SessionBuilder::from_manifest_file(path)?,
+    };
+    if args.has("workers") {
+        b = b.workers(args.usize_or("workers", 0)?);
+    }
+    if args.has("mp") {
+        b = b.mp(args.usize_or("mp", 0)?);
+    }
+    if args.has("steps") {
+        b = b.steps(args.usize_or("steps", 0)?);
+    }
+    if args.has("lr") {
+        b = b.lr(args.f32_or("lr", 0.0)?);
+    }
+    if args.has("momentum") {
+        b = b.momentum(args.f32_or("momentum", 0.0)?);
+    }
+    if args.has("clip-norm") {
+        b = b.clip_norm(args.f32_or("clip-norm", 0.0)?);
+    }
+    if args.has("scheme") {
+        b = b.scheme(splitbrain::coordinator::McastScheme::parse(args.str_or("scheme", ""))?);
+    }
+    if args.has("engine") {
+        b = b.engine(splitbrain::coordinator::ExecEngine::parse(args.str_or("engine", ""))?);
+    }
+    if args.has("collectives") {
+        b = b.collectives(splitbrain::comm::CollectiveAlgo::parse(args.str_or("collectives", ""))?);
+    }
+    if args.has("avg-period") {
+        b = b.avg_period(args.usize_or("avg-period", 0)?);
+    }
+    if args.has("seed") {
+        b = b.seed(args.u64_or("seed", 0)?);
+    }
+    if args.has("dataset-size") {
+        b = b.dataset_size(args.usize_or("dataset-size", 0)?);
+    }
+    if args.has("recovery") {
+        b = b.recovery(RecoveryPolicy::parse(args.str_or("recovery", ""))?);
+    }
+    if args.has("take-timeout-ms") {
+        b = b.take_timeout_ms(args.u64_or("take-timeout-ms", 0)?);
+    }
+    if args.has("overlap") {
+        b = b.overlap(args.bool_or("overlap", true)?);
+    }
+    // Fault flags assemble a fresh plan (replacing any manifest plan —
+    // mixing the two would make the scenario ambiguous).
+    if args.has("crash") || args.has("straggle") || args.has("fault-seed") {
+        b = b.faults(fault_plan(args, b.current_workers(), b.current_steps())?);
+    }
+    Ok(b)
 }
 
 /// Assemble a fault-injection plan from the CLI:
@@ -114,73 +183,37 @@ fn fault_plan(args: &Args, n_workers: usize, steps: usize) -> Result<splitbrain:
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(&known_flags(&["emit-manifest"]))?;
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
-    let cfg = cluster_config(args)?;
-    let steps = args.usize_or("steps", DEFAULT_STEPS)?;
-    let log_every = args.usize_or("log-every", 10)?.max(1);
-    println!(
-        "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}, engine={}, collectives={}, overlap={}",
-        cfg.n_workers,
-        cfg.mp,
-        cfg.n_workers / cfg.mp,
-        rt.manifest.batch,
-        cfg.lr,
-        cfg.avg_period,
-        cfg.engine,
-        cfg.collectives,
-        cfg.overlap
-    );
-    let mut cluster = Cluster::new(&rt, cfg)?;
-    let mem = cluster.memory_report();
-    println!(
-        "per-worker memory: {:.2} MB params, {:.2} MB total\n",
-        mem.param_mb(),
-        mem.total_mb()
-    );
-    let mut report = splitbrain::train::TrainReport::new(
-        cluster.cfg.n_workers,
-        cluster.cfg.mp,
-        rt.manifest.batch,
-    );
-    for step in 1..=steps {
-        let m = cluster.step()?;
-        report.push(&m);
-        if step % log_every == 0 || step == steps {
-            println!(
-                "step {step:>4}  loss {:.4}  compute {:.1} ms  mp-comm {:.2} ms  step {:.1} ms",
-                m.loss,
-                m.compute_secs * 1e3,
-                m.mp_comm_secs * 1e3,
-                m.step_secs() * 1e3
-            );
+    let plan = builder_from_args(args)?.validate(&rt)?;
+    match args.str_or("emit-manifest", "") {
+        "" => {}
+        path => {
+            std::fs::write(path, plan.manifest().to_json())
+                .with_context(|| format!("writing manifest {path}"))?;
+            println!("wrote run manifest to {path}");
         }
     }
-    if cluster.recoveries > 0 {
-        println!(
-            "\nelastic recoveries: {} (ranks lost: {:?}) — now {} workers, mp={}, \
-             last restore point step {}",
-            cluster.recoveries,
-            cluster.lost_ranks,
-            cluster.cfg.n_workers,
-            cluster.cfg.mp,
-            cluster.last_checkpoint_step()
-        );
-    }
-    println!(
-        "\nthroughput: {:.2} images/sec (simulated cluster)  comm fraction {:.1}%",
-        report.images_per_sec(),
-        report.comm_fraction() * 100.0
-    );
+    let log_every = args.usize_or("log-every", DEFAULT_LOG_EVERY)?;
+    let mut session = plan.start()?;
+    session.attach(Box::new(ConsoleSink::new(log_every)));
+    session.run()?;
     Ok(())
 }
 
 /// One rank of a multi-process TCP run (spawned by `launch`; see
-/// `coordinator::procdriver`). Exits with `CRASH_EXIT_CODE` when an
-/// injected crash fault fires on this rank, `EVICTED_EXIT_CODE` when
-/// the membership verdict excludes it.
+/// `coordinator::procdriver`). The run configuration arrives as a
+/// manifest file (`--manifest run.json`, written by the launcher) —
+/// the worker's manifest fingerprint is what the TCP Hello handshake
+/// exchanges, so a worker holding a different manifest than the
+/// leader's fails mesh bring-up instead of training a different run.
+/// Exits with `CRASH_EXIT_CODE` when an injected crash fault fires on
+/// this rank, `EVICTED_EXIT_CODE` when the membership verdict excludes
+/// it.
 fn cmd_worker(args: &Args) -> Result<()> {
     use splitbrain::comm::transport::TcpPeer;
     use splitbrain::coordinator::procdriver::{self, ProcConfig, RunOutcome};
+    args.check_known(&known_flags(&["rank", "peers", "out-dir", "connect-timeout-ms"]))?;
     if !args.has("rank") {
         bail!("--rank is required for the worker role");
     }
@@ -194,9 +227,15 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .enumerate()
         .map(|(opid, addr)| TcpPeer { opid, addr: addr.trim().to_string() })
         .collect();
-    let cfg = cluster_config(args)?;
+    let builder = builder_from_args(args)?;
+    let steps = builder.current_steps();
+    let cfg = builder.cluster_config()?;
     if cfg.n_workers != peers.len() {
-        bail!("--workers {} does not match the {} peer addresses", cfg.n_workers, peers.len());
+        bail!(
+            "the manifest declares {} workers but {} peer addresses were given",
+            cfg.n_workers,
+            peers.len()
+        );
     }
     if rank >= peers.len() {
         bail!("--rank {rank} out of range for {} peers", peers.len());
@@ -207,13 +246,13 @@ fn cmd_worker(args: &Args) -> Result<()> {
     };
     let pc = ProcConfig {
         cluster: cfg,
-        steps: args.usize_or("steps", DEFAULT_STEPS)?,
+        steps,
         opid: rank,
         peers,
         artifacts: args.str_or("artifacts", "artifacts").to_string(),
         out_dir,
         connect_timeout_ms: args.u64_or("connect-timeout-ms", 30_000)?,
-        log_every: args.usize_or("log-every", 10)?,
+        log_every: args.usize_or("log-every", DEFAULT_LOG_EVERY)?,
     };
     match procdriver::run_worker(&pc)? {
         RunOutcome::Completed => Ok(()),
@@ -222,18 +261,22 @@ fn cmd_worker(args: &Args) -> Result<()> {
     }
 }
 
-/// Local multi-process launcher: allocate loopback ports, spawn one
-/// `splitbrain worker` process per rank, wait for all of them, check
-/// exit codes (an injected-crash exit is expected only when the CLI
-/// scheduled a crash fault) and optionally verify end-of-run replica
-/// parity across the surviving processes.
+/// Local multi-process launcher: resolve the flags into one canonical
+/// `run.json`, allocate loopback ports, spawn one `splitbrain worker`
+/// per rank **pointing at that manifest** (no per-flag re-encoding —
+/// the drift hazard the manifest exists to close), wait for all of
+/// them, check exit codes (an injected-crash exit is expected only
+/// when the resolved fault plan schedules a crash) and optionally
+/// verify end-of-run replica parity across the surviving processes.
 fn cmd_launch(args: &Args) -> Result<()> {
-    let n = args.usize_or("workers", 4)?;
-    if n == 0 {
-        bail!("--workers must be positive");
-    }
-    let steps = args.usize_or("steps", DEFAULT_STEPS)?;
-    let avg_period = args.usize_or("avg-period", 10)?;
+    args.check_known(&known_flags(&["out-dir", "verify-replicas", "connect-timeout-ms"]))?;
+    // The launcher's historical default is 4 workers (not the
+    // builder's 2); seeding the base here keeps `--fault-seed`
+    // scenarios scoped to the real run shape.
+    let builder = builder_with_base(args, SessionBuilder::new().workers(4))?;
+    let steps = builder.current_steps();
+    let cfg = builder.cluster_config()?;
+    let n = cfg.n_workers;
 
     // Reserve n distinct loopback ports (bind :0, record, release).
     // Known, accepted race: the ports are free between the release here
@@ -260,29 +303,32 @@ fn cmd_launch(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&out_dir)
         .with_context(|| format!("creating out dir {}", out_dir.display()))?;
 
+    // One manifest for every worker: the single source of the run.
+    let manifest = RunManifest::from_config(&cfg, steps);
+    let manifest_path = out_dir.join("run.json");
+    std::fs::write(&manifest_path, manifest.to_json())
+        .with_context(|| format!("writing {}", manifest_path.display()))?;
+
     let exe = std::env::current_exe().context("locating the splitbrain binary")?;
-    // Flags forwarded verbatim to every worker (same values ⇒ same
-    // fault plans, fingerprints and numerics in every process).
-    const FORWARD: &[&str] = &[
-        "mp", "steps", "lr", "momentum", "clip-norm", "scheme", "collectives", "avg-period",
-        "seed", "dataset-size", "recovery", "take-timeout-ms", "crash", "straggle",
-        "fault-seed", "fault-count", "artifacts", "log-every", "connect-timeout-ms",
-        "overlap", "compute-threads",
-    ];
+    // Host-level flags forwarded verbatim (everything run-semantic
+    // rides the manifest).
+    const FORWARD_HOST: &[&str] =
+        &["artifacts", "log-every", "connect-timeout-ms", "compute-threads"];
     println!("launching {n} worker processes on 127.0.0.1 ({steps} steps)...");
+    println!("run manifest: {} (fingerprint {:#018x})", manifest_path.display(), manifest.fingerprint());
     let mut children = Vec::with_capacity(n);
     for rank in 0..n {
         let mut cmd = std::process::Command::new(&exe);
         cmd.arg("worker")
             .arg("--rank")
             .arg(rank.to_string())
-            .arg("--workers")
-            .arg(n.to_string())
             .arg("--peers")
             .arg(&peers_arg)
+            .arg("--manifest")
+            .arg(&manifest_path)
             .arg("--out-dir")
             .arg(&out_dir);
-        for &key in FORWARD {
+        for &key in FORWARD_HOST {
             if args.has(key) {
                 cmd.arg(format!("--{key}")).arg(args.str_or(key, ""));
             }
@@ -293,9 +339,9 @@ fn cmd_launch(args: &Args) -> Result<()> {
         children.push((rank, child));
     }
 
-    let crash_planned = args.has("crash") || args.u64_or("fault-seed", 0)? != 0;
-    let shrink_requested = args.str_or("recovery", "").starts_with("shrink")
-        || args.str_or("recovery", "") == "shrink-and-continue";
+    let crash_planned =
+        cfg.faults.events().iter().any(|e| matches!(e, FaultEvent::Crash { .. }));
+    let shrink_requested = cfg.recovery == RecoveryPolicy::ShrinkAndContinue;
     let mut failures = 0usize;
     let mut crashes = 0usize;
     for (rank, mut child) in children {
@@ -325,10 +371,11 @@ fn cmd_launch(args: &Args) -> Result<()> {
     }
 
     if args.bool_or("verify-replicas", false)? {
-        if steps % avg_period != 0 {
+        if steps % cfg.avg_period != 0 {
             println!(
                 "verify-replicas: skipped (final step {steps} is not an averaging boundary \
-                 with --avg-period {avg_period}, so replicas legitimately differ)"
+                 with --avg-period {}, so replicas legitimately differ)",
+                cfg.avg_period
             );
         } else {
             verify_replicas(&out_dir, n)?;
@@ -389,8 +436,9 @@ fn verify_replicas(dir: &std::path::Path, n: usize) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
+    args.check_known(&known_flags(&["experiment", "numeric"]))?;
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
-    let base = cluster_config(args)?;
+    let base = builder_from_args(args)?.cluster_config()?;
     let fidelity = if args.bool_or("numeric", false)? {
         Fidelity::Numeric { steps: args.usize_or("steps", 5)? }
     } else {
@@ -411,6 +459,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
+    args.check_known(&known_flags(&["spec"]))?;
     // Custom model spec (the Torch-like frontend of §4) or the built-in
     // VGG variant.
     let (net, input_dim) = match args.str_or("spec", "") {
@@ -445,6 +494,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_memory(args: &Args) -> Result<()> {
+    args.check_known(&known_flags(&["batch"]))?;
     let batch = args.usize_or("batch", 32)?;
     let mut table = Table::new(vec![
         "mp", "params MB", "grads MB", "optimizer MB", "activations MB", "total MB", "saving %",
@@ -475,11 +525,15 @@ fn cmd_memory(args: &Args) -> Result<()> {
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {
+    args.check_known(&known_flags(&[]))?;
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
-    let cfg = cluster_config(args)?;
-    let steps = args.usize_or("steps", 3)?;
-    let mut cluster = Cluster::new(&rt, cfg)?;
-    cluster.train_steps(steps)?;
+    let mut builder = builder_from_args(args)?;
+    if !args.has("steps") {
+        builder = builder.steps(3); // profiling wants a short run
+    }
+    let steps = builder.current_steps();
+    let mut session = builder.validate(&rt)?.start()?;
+    session.run()?;
     let mut table = Table::new(vec!["artifact", "calls", "total s", "ms/call"]);
     for (name, calls, secs) in rt.profile_report() {
         table.row(vec![
@@ -496,6 +550,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
 /// The §7-future-work planner: best (mp, scheme) under a memory budget.
 fn cmd_plan(args: &Args) -> Result<()> {
     use splitbrain::coordinator::planner::{best, plan, CostModel, PlanRequest};
+    args.check_known(&known_flags(&["budget-mb"]))?;
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
     let budget_mb = args.usize_or("budget-mb", 64)?;
     let req = PlanRequest {

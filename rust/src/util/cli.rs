@@ -97,6 +97,38 @@ impl Args {
         }
     }
 
+    /// Reject flags outside `known`, with a "did you mean" suggestion
+    /// for near-misses. Before this check existed a typo like
+    /// `--avg-perod 5` ran silently with the default — every subcommand
+    /// (and Args-driven bench) now calls this with its flag list.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use splitbrain::util::Args;
+    /// let args = Args::parse_from(["--avg-perod".into(), "5".into()]);
+    /// let err = args.check_known(&["avg-period", "steps"]).unwrap_err();
+    /// assert!(format!("{err:#}").contains("did you mean --avg-period"));
+    /// ```
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !known.contains(k))
+            .collect();
+        unknown.sort_unstable(); // deterministic message across HashMap orders
+        let Some(&flag) = unknown.first() else { return Ok(()) };
+        let suggestion = known
+            .iter()
+            .map(|k| (edit_distance(flag, k), *k))
+            .min()
+            .filter(|(d, _)| *d <= 2)
+            .map(|(_, k)| format!(" (did you mean --{k}?)"))
+            .unwrap_or_default();
+        bail!("unknown flag --{flag}{suggestion}");
+    }
+
     /// Comma-separated usize list, e.g. `--machines 1,2,4,8`.
     pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.flags.get(key) {
@@ -108,6 +140,24 @@ impl Args {
                 .collect(),
         }
     }
+}
+
+/// Levenshtein distance (ASCII-oriented; flags are ASCII), used for
+/// the unknown-flag "did you mean" suggestion.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -149,6 +199,28 @@ mod tests {
         assert!(a.usize_or("workers", 1).is_err());
         let b = args("--flag maybe");
         assert!(b.bool_or("flag", false).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected_with_suggestion() {
+        let a = args("train --avg-perod 5 --workers 4");
+        let err = a.check_known(&["avg-period", "workers", "steps"]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--avg-perod"), "{msg}");
+        assert!(msg.contains("did you mean --avg-period"), "{msg}");
+
+        // Exact flags pass; far-off typos get no bogus suggestion.
+        args("train --workers 4").check_known(&["workers"]).unwrap();
+        let err = args("--zzzzz 1").check_known(&["workers"]).unwrap_err();
+        assert!(!format!("{err:#}").contains("did you mean"));
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("avg-perod", "avg-period"), 1);
+        assert_eq!(edit_distance("same", "same"), 0);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

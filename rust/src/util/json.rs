@@ -1,0 +1,379 @@
+//! Minimal JSON reader/writer (the offline registry has no serde).
+//!
+//! Powers the serializable run manifests (`api::manifest`): a strict
+//! recursive-descent parser into [`Json`] plus the string-escaping
+//! helper the hand-rolled writers share. Two properties matter to the
+//! manifest contract and are pinned by tests here and in
+//! `rust/tests/api_manifest.rs`:
+//!
+//! * **Numbers are lossless.** [`Json::Num`] stores the raw token text,
+//!   so a `u64` seed survives untouched (an `f64` mantissa would not),
+//!   and floats written with Rust's shortest-round-trip `{}` formatting
+//!   parse back to the identical bits.
+//! * **Object key order is preserved** (a `Vec`, not a map), so
+//!   serialize → parse → serialize is byte-identical.
+
+use anyhow::{bail, Result};
+
+/// One parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// A number, kept as its raw token text (lossless for u64 and f64).
+    Num(String),
+    /// A string (unescaped).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, in source key order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing whitespace allowed,
+    /// trailing garbage rejected).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use splitbrain::util::json::Json;
+    /// let v = Json::parse(r#"{"workers": 4, "scheme": "B/K"}"#).unwrap();
+    /// assert_eq!(v.get("workers").unwrap().as_usize().unwrap(), 4);
+    /// assert_eq!(v.get("scheme").unwrap().as_str().unwrap(), "B/K");
+    /// ```
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("json: trailing garbage at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None on missing key or non-object).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The object's fields in source order (None for non-objects).
+    pub fn fields(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(fields) => Some(fields),
+            _ => None,
+        }
+    }
+
+    /// Array elements (None for non-arrays).
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// String payload (None for non-strings).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Boolean payload (None for non-booleans).
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The number token parsed as `u64` (None for non-numbers or
+    /// tokens that are not exact unsigned integers).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// The number token parsed as `usize`.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// The number token parsed as `f64`.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// The number token parsed as `f32`.
+    pub fn as_f32(&self) -> Option<f32> {
+        match self {
+            Json::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+}
+
+/// Escape a string for embedding in a JSON document (adds no quotes).
+pub fn escape_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, b: u8) -> Result<()> {
+    if *pos < bytes.len() && bytes[*pos] == b {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("json: expected {:?} at byte {}", b as char, *pos)
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => bail!("json: unexpected end of input"),
+        Some(b'{') => parse_object(bytes, pos),
+        Some(b'[') => parse_array(bytes, pos),
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
+        Some(b't') => parse_keyword(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_keyword(bytes, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_keyword(bytes, pos, "null", Json::Null),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => parse_number(bytes, pos),
+        Some(c) => bail!("json: unexpected byte {:?} at {}", *c as char, *pos),
+    }
+}
+
+fn parse_keyword(bytes: &[u8], pos: &mut usize, word: &str, value: Json) -> Result<Json> {
+    if bytes[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(value)
+    } else {
+        bail!("json: bad literal at byte {}", *pos)
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    if bytes.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    let tok = std::str::from_utf8(&bytes[start..*pos]).unwrap();
+    // Validate by the loosest consumer: every token must at least be a
+    // finite f64 (typed getters re-parse as the exact target type).
+    match tok.parse::<f64>() {
+        Ok(v) if v.is_finite() => Ok(Json::Num(tok.to_string())),
+        _ => bail!("json: bad number {tok:?} at byte {start}"),
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => bail!("json: unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or_else(|| anyhow::anyhow!("json: truncated \\u escape"))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| anyhow::anyhow!("json: bad \\u escape {hex:?}"))?;
+                        // Surrogate pairs are not needed by any writer in
+                        // this crate; reject rather than mis-decode.
+                        let c = char::from_u32(code)
+                            .ok_or_else(|| anyhow::anyhow!("json: \\u{hex} is not a scalar"))?;
+                        out.push(c);
+                        *pos += 4;
+                    }
+                    other => bail!("json: bad escape {other:?}"),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (the input is a &str, so the
+                // byte stream is valid UTF-8 by construction).
+                let rest = std::str::from_utf8(&bytes[*pos..]).unwrap();
+                let c = rest.chars().next().unwrap();
+                if (c as u32) < 0x20 {
+                    bail!("json: raw control character in string");
+                }
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_array(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(bytes, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => bail!("json: expected ',' or ']' at byte {}", *pos),
+        }
+    }
+}
+
+fn parse_object(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(bytes, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        expect(bytes, pos, b':')?;
+        let value = parse_value(bytes, pos)?;
+        if fields.iter().any(|(k, _)| *k == key) {
+            bail!("json: duplicate key {key:?}");
+        }
+        fields.push((key, value));
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => bail!("json: expected ',' or '}}' at byte {}", *pos),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_structure() {
+        let v = Json::parse(
+            r#"{"a": 1, "b": -2.5e-3, "c": "x\ny", "d": [true, false, null], "e": {}}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(-2.5e-3));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("x\ny"));
+        let d = v.get("d").unwrap().as_array().unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].as_bool(), Some(true));
+        assert_eq!(d[2], Json::Null);
+        assert_eq!(v.get("e").unwrap().fields().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn u64_is_lossless() {
+        // 2^63 + 1 is not representable in f64; the raw-token Num must
+        // carry it exactly.
+        let v = Json::parse(r#"{"seed": 9223372036854775809}"#).unwrap();
+        assert_eq!(v.get("seed").unwrap().as_u64(), Some(9_223_372_036_854_775_809));
+    }
+
+    #[test]
+    fn float_shortest_repr_round_trips() {
+        for x in [0.05f32, 1.5e-6, 0.1, 123.456, f32::MIN_POSITIVE] {
+            let text = format!("{x}");
+            let v = Json::parse(&text).unwrap();
+            assert_eq!(v.as_f32().unwrap().to_bits(), x.to_bits(), "{text}");
+        }
+        for x in [5.0e9f64, 1.5e-6, 0.1] {
+            let text = format!("{x}");
+            let v = Json::parse(&text).unwrap();
+            assert_eq!(v.as_f64().unwrap().to_bits(), x.to_bits(), "{text}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\" 1}",
+            "{\"a\": 1} trailing",
+            "\"unterminated",
+            "01x",
+            "nul",
+            "{\"a\":1,\"a\":2}",
+            "1e999", // non-finite
+        ] {
+            assert!(Json::parse(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn escape_round_trips() {
+        let s = "quote \" backslash \\ newline \n tab \t unit\u{1}";
+        let doc = format!("\"{}\"", escape_str(s));
+        assert_eq!(Json::parse(&doc).unwrap().as_str(), Some(s));
+    }
+}

@@ -6,6 +6,7 @@
 //! simulator run bit-reproducible from a seed.
 
 pub mod cli;
+pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,167 @@
+//! Property: run manifests are **canonical and lossless** — for random
+//! valid configurations, serialize → parse → serialize is
+//! byte-identical, every field survives exactly (u64 seeds beyond
+//! f64's mantissa included), and the fingerprint tracks content.
+//!
+//! No proptest crate in the offline registry: seeded randomized
+//! sweeps, every failure reproduces from the printed case id.
+
+use splitbrain::api::{RunManifest, SessionBuilder};
+use splitbrain::comm::{CollectiveAlgo, FaultPlan, NetModel};
+use splitbrain::coordinator::{ExecEngine, McastScheme, RecoveryPolicy};
+use splitbrain::util::Rng;
+
+/// One random *valid* builder (every generated value passes the
+/// validation matrix by construction).
+fn random_builder(rng: &mut Rng) -> SessionBuilder {
+    let workers = 1 + rng.below(8);
+    let divisors: Vec<usize> = (1..=workers).filter(|k| workers % k == 0).collect();
+    let mp = divisors[rng.below(divisors.len())];
+    let steps = 1 + rng.below(200);
+    let engine = if rng.below(2) == 0 { ExecEngine::Sequential } else { ExecEngine::Threaded };
+    let mut b = SessionBuilder::new()
+        .workers(workers)
+        .mp(mp)
+        .steps(steps)
+        .lr(0.001 + rng.uniform() * 0.2)
+        .momentum(rng.uniform() * 0.99)
+        .clip_norm(rng.uniform() * 2.0)
+        .avg_period(1 + rng.below(20))
+        .seed(rng.next_u64()) // full u64 range: exercises losslessness
+        .dataset_size(1 + rng.below(4096))
+        .scheme([McastScheme::BoverK, McastScheme::B, McastScheme::BK][rng.below(3)])
+        .engine(engine)
+        .collectives(
+            [CollectiveAlgo::Naive, CollectiveAlgo::Ring, CollectiveAlgo::Rhd][rng.below(3)],
+        )
+        .recovery(
+            [RecoveryPolicy::FailFast, RecoveryPolicy::ShrinkAndContinue][rng.below(2)],
+        )
+        .take_timeout_ms(1 + rng.next_u64() % 1_000_000)
+        .segmented_mp1(rng.below(2) == 0)
+        .net(NetModel {
+            alpha: 1e-9 + rng.uniform_f64() * 1e-4,
+            beta: 1.0 + rng.uniform_f64() * 1e10,
+            phase_overhead: rng.uniform_f64() * 1e-2,
+        });
+    // Overlap: forced-on is only legal off the sequential reference.
+    b = match (engine, rng.below(3)) {
+        (_, 0) => b,                                      // auto
+        (_, 1) => b.overlap(false),                       // forced off
+        (ExecEngine::Threaded, _) => b.overlap(true),     // forced on
+        (ExecEngine::Sequential, _) => b,                 // auto again
+    };
+    if rng.below(2) == 0 {
+        b = b.faults(FaultPlan::random(rng.next_u64(), workers, steps, 1 + rng.below(4)));
+    }
+    b
+}
+
+#[test]
+fn prop_manifest_round_trip_is_byte_identical() {
+    let mut rng = Rng::new(0xA9_1FE5);
+    for case in 0..100 {
+        let builder = random_builder(&mut rng);
+        let cfg = builder
+            .cluster_config()
+            .unwrap_or_else(|e| panic!("case {case}: generated config must be valid: {e}"));
+        let steps = builder.current_steps();
+        let manifest = RunManifest::from_config(&cfg, steps);
+        let text = manifest.to_json();
+
+        // serialize → parse → serialize: byte-identical.
+        let reparsed = RunManifest::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: parse failed: {e:#}\n{text}"));
+        assert_eq!(reparsed, manifest, "case {case}: manifest round-trip");
+        assert_eq!(reparsed.to_json(), text, "case {case}: canonical text round-trip");
+
+        // manifest → builder → config → manifest: identical again
+        // (including the resolved overlap and the fault plan).
+        let rebuilt_cfg = SessionBuilder::from_manifest(&text)
+            .unwrap_or_else(|e| panic!("case {case}: from_manifest failed: {e:#}"))
+            .cluster_config()
+            .unwrap_or_else(|e| panic!("case {case}: reloaded config invalid: {e}"));
+        let rebuilt = RunManifest::from_config(&rebuilt_cfg, steps);
+        assert_eq!(rebuilt.to_json(), text, "case {case}: builder round-trip");
+        assert_eq!(
+            rebuilt.fingerprint(),
+            manifest.fingerprint(),
+            "case {case}: fingerprint must be reproducible"
+        );
+    }
+}
+
+#[test]
+fn fingerprint_differs_when_any_field_changes() {
+    let mut rng = Rng::new(0xBEEF);
+    let base = random_builder(&mut rng);
+    let cfg = base.cluster_config().unwrap();
+    let m = RunManifest::from_config(&cfg, base.current_steps());
+    let fp = m.fingerprint();
+
+    let mut seed_changed = m.clone();
+    seed_changed.seed ^= 1;
+    assert_ne!(fp, seed_changed.fingerprint(), "seed must be covered");
+
+    let mut steps_changed = m.clone();
+    steps_changed.steps += 1;
+    assert_ne!(fp, steps_changed.fingerprint(), "steps must be covered");
+
+    let mut fault_changed = m.clone();
+    fault_changed.faults = fault_changed.faults.clone().crash(0, 1);
+    assert_ne!(
+        fp,
+        fault_changed.fingerprint(),
+        "the fault plan must be covered (the old flag-string preimage missed it)"
+    );
+
+    let mut net_changed = m.clone();
+    net_changed.net.alpha *= 2.0;
+    assert_ne!(fp, net_changed.fingerprint(), "the net model must be covered");
+}
+
+#[test]
+fn worker_and_leader_fingerprints_agree_through_the_file() {
+    // The launch → worker path: leader resolves flags to run.json,
+    // worker reloads the file; both fingerprints (what the TCP Hello
+    // handshake compares) must agree.
+    let leader_cfg = SessionBuilder::new()
+        .workers(4)
+        .mp(2)
+        .steps(6)
+        .seed(99)
+        .faults(FaultPlan::new().crash(1, 3))
+        .recovery(RecoveryPolicy::ShrinkAndContinue)
+        .cluster_config()
+        .unwrap();
+    let leader = RunManifest::from_config(&leader_cfg, 6);
+
+    let text = leader.to_json(); // what launch writes to run.json
+    let worker_builder = SessionBuilder::from_manifest(&text).unwrap();
+    let worker_cfg = worker_builder.cluster_config().unwrap();
+    let worker = RunManifest::from_config(&worker_cfg, worker_builder.current_steps());
+
+    assert_eq!(
+        splitbrain::coordinator::procdriver::run_fingerprint(&worker_cfg, 6),
+        splitbrain::coordinator::procdriver::run_fingerprint(&leader_cfg, 6),
+        "worker's manifest fingerprint must match the leader's handshake fingerprint"
+    );
+    assert_eq!(worker.to_json(), text);
+}
+
+#[test]
+fn hand_edited_drift_is_rejected_or_fingerprinted() {
+    let cfg = SessionBuilder::new().workers(2).cluster_config().unwrap();
+    let m = RunManifest::from_config(&cfg, 10);
+    let text = m.to_json();
+
+    // A typoed key must be an error, not a silent default.
+    let typo = text.replace("\"avg_period\"", "\"avg_perod\"");
+    assert!(RunManifest::parse(&typo).is_err());
+
+    // A changed value parses but fingerprints differently, so the
+    // handshake rejects the mesh.
+    let drifted = text.replace("\"seed\": 42", "\"seed\": 43");
+    let parsed = RunManifest::parse(&drifted).unwrap();
+    assert_ne!(parsed.fingerprint(), m.fingerprint());
+}

@@ -1,0 +1,330 @@
+//! The session lifecycle acceptance suite:
+//!
+//! * `Session::step` driven one-at-a-time is **bit-identical** to
+//!   `Session::run` (losses, parameters, byte counters);
+//! * `ConsoleSink` reproduces the historical `splitbrain train` output
+//!   **byte-for-byte** from the event stream (format pinned here);
+//! * a run rebuilt from its serialized manifest reproduces the
+//!   flag-built run bit-identically;
+//! * recovery transitions surface as structured events;
+//! * checkpoint/restore through the session keeps bit-exactness.
+//!
+//! Runs on the built-in native backend (no artifacts needed).
+
+use std::cell::RefCell;
+use std::io::Write;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use splitbrain::api::{
+    step_reports, CollectSink, ConsoleSink, Event, SessionBuilder, StepReport,
+};
+use splitbrain::comm::FaultPlan;
+use splitbrain::coordinator::RecoveryPolicy;
+use splitbrain::data::{Dataset, SyntheticCifar};
+use splitbrain::runtime::RuntimeClient;
+
+const SEED: u64 = 123;
+const DATASET: usize = 256;
+
+fn builder(n: usize, mp: usize, steps: usize) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .steps(steps)
+        .lr(0.02)
+        .momentum(0.9)
+        .clip_norm(1.0)
+        .avg_period(2)
+        .seed(SEED)
+        .dataset_size(DATASET)
+}
+
+fn dataset() -> Arc<dyn Dataset> {
+    Arc::new(SyntheticCifar::new(DATASET, SEED))
+}
+
+/// Every worker's every parameter as bit patterns.
+fn all_param_bits(s: &splitbrain::api::Session) -> Vec<Vec<u32>> {
+    let c = s.cluster();
+    let mut out = Vec::new();
+    for rank in 0..c.cfg.n_workers {
+        let w = c.worker(rank);
+        for t in w.conv_params.iter().chain(w.fc_params.iter()) {
+            out.push(t.as_f32().iter().map(|v| v.to_bits()).collect());
+        }
+    }
+    out
+}
+
+/// A writer handle the test can read back after the sink consumed it.
+#[derive(Clone, Default)]
+struct SharedBuf(Rc<RefCell<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.borrow_mut().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The headline lifecycle check: step-at-a-time == run(), bit for bit.
+#[test]
+fn step_by_step_is_bit_identical_to_run() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let steps = 6;
+
+    let mut whole = builder(4, 2, steps)
+        .dataset(dataset())
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    let sink = CollectSink::new();
+    let events = sink.events();
+    whole.attach(Box::new(sink));
+    let report = whole.run().unwrap();
+    let run_reports = step_reports(&events.borrow());
+
+    let mut stepped = builder(4, 2, steps)
+        .dataset(dataset())
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    let mut step_by_step: Vec<StepReport> = Vec::new();
+    while !stepped.is_done() {
+        step_by_step.push(stepped.step().unwrap());
+    }
+
+    assert_eq!(report.steps_done, steps);
+    assert_eq!(run_reports.len(), step_by_step.len());
+    for (a, b) in run_reports.iter().zip(step_by_step.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at step {}", a.step);
+        assert_eq!(
+            (a.bytes_busiest_rank, a.bytes_total),
+            (b.bytes_busiest_rank, b.bytes_total),
+            "byte counters diverged at step {}",
+            a.step
+        );
+    }
+    let pa = all_param_bits(&whole);
+    let pb = all_param_bits(&stepped);
+    assert_eq!(pa.len(), pb.len());
+    for (i, (x, y)) in pa.iter().zip(pb.iter()).enumerate() {
+        assert_eq!(x, y, "parameter tensor {i} diverged between run() and step()s");
+    }
+}
+
+/// ConsoleSink must render the event stream exactly like the pre-API
+/// CLI loop printed it — the format strings below are the historical
+/// ones, verbatim.
+#[test]
+fn console_sink_output_is_byte_identical_to_legacy_format() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let steps = 5;
+    let log_every = 2;
+
+    let mut session = builder(2, 2, steps)
+        .dataset(dataset())
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    let buf = SharedBuf::default();
+    session.attach(Box::new(ConsoleSink::with_writer(log_every, Box::new(buf.clone()))));
+    let collect = CollectSink::new();
+    let events = collect.events();
+    session.attach(Box::new(collect));
+    session.run().unwrap();
+
+    // Rebuild the expected text from the same events with the legacy
+    // `cmd_train` format strings.
+    let mut want = String::new();
+    for e in events.borrow().iter() {
+        match e {
+            Event::RunStarted(i) => {
+                want.push_str(&format!(
+                    "SplitBrain: {} workers, mp={} ({} groups), B={}, lr={}, avg_period={}, engine={}, collectives={}, overlap={}\n",
+                    i.n_workers, i.mp, i.n_groups, i.batch, i.lr, i.avg_period, i.engine,
+                    i.collectives, i.overlap
+                ));
+                want.push_str(&format!(
+                    "per-worker memory: {:.2} MB params, {:.2} MB total\n\n",
+                    i.param_mb, i.total_mb
+                ));
+            }
+            Event::StepCompleted(r) => {
+                if r.step % log_every == 0 || r.step == steps {
+                    want.push_str(&format!(
+                        "step {:>4}  loss {:.4}  compute {:.1} ms  mp-comm {:.2} ms  step {:.1} ms\n",
+                        r.step,
+                        r.loss,
+                        r.compute_secs * 1e3,
+                        r.mp_comm_secs * 1e3,
+                        r.step_secs() * 1e3
+                    ));
+                }
+            }
+            Event::Recovered(_) => {}
+            Event::RunCompleted(s) => {
+                assert_eq!(s.recoveries, 0);
+                want.push_str(&format!(
+                    "\nthroughput: {:.2} images/sec (simulated cluster)  comm fraction {:.1}%\n",
+                    s.images_per_sec,
+                    s.comm_fraction * 100.0
+                ));
+            }
+        }
+    }
+    let got = String::from_utf8(buf.0.borrow().clone()).unwrap();
+    assert_eq!(got, want, "ConsoleSink drifted from the legacy byte format");
+    assert!(got.contains("step    2"), "log_every=2 must print step 2:\n{got}");
+    assert!(!got.contains("step    3"), "step 3 is off-cadence:\n{got}");
+}
+
+/// `--manifest run.json` path: a session rebuilt from the serialized
+/// manifest reproduces the flag-built run bit-identically (losses and
+/// parameters), using the default dataset loader on both sides like
+/// the real CLI does.
+#[test]
+fn manifest_rebuilt_session_reproduces_flag_built_run() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let flags = builder(2, 2, 4);
+    let plan = flags.validate(&rt).unwrap();
+    let json = plan.manifest().to_json();
+
+    let mut a = plan.start().unwrap();
+    let sink_a = CollectSink::new();
+    let events_a = sink_a.events();
+    a.attach(Box::new(sink_a));
+    a.run().unwrap();
+
+    let mut b = SessionBuilder::from_manifest(&json)
+        .unwrap()
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    let sink_b = CollectSink::new();
+    let events_b = sink_b.events();
+    b.attach(Box::new(sink_b));
+    b.run().unwrap();
+
+    let ra = step_reports(&events_a.borrow());
+    let rb = step_reports(&events_b.borrow());
+    assert_eq!(ra.len(), rb.len());
+    for (x, y) in ra.iter().zip(rb.iter()) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "manifest-rebuilt run diverged at step {}",
+            x.step
+        );
+    }
+    for (i, (x, y)) in all_param_bits(&a).iter().zip(all_param_bits(&b).iter()).enumerate() {
+        assert_eq!(x, y, "parameter tensor {i} diverged after the manifest round-trip");
+    }
+}
+
+/// Elastic recovery surfaces as a structured `Recovered` event, and
+/// the end-of-run summary carries the recovery trajectory.
+#[test]
+fn recovery_emits_structured_events() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut session = builder(4, 2, 4)
+        .recovery(RecoveryPolicy::ShrinkAndContinue)
+        .faults(FaultPlan::new().crash(1, 3))
+        .dataset(dataset())
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    let sink = CollectSink::new();
+    let events = sink.events();
+    session.attach(Box::new(sink));
+    let report = session.run().unwrap();
+
+    let recoveries: Vec<_> = events
+        .borrow()
+        .iter()
+        .filter_map(|e| match e {
+            Event::Recovered(r) => Some(r.clone()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(recoveries.len(), 1, "exactly one recovery transition");
+    let r = &recoveries[0];
+    assert_eq!(r.step, 3, "the retried step completes on the shrunk cluster");
+    assert_eq!(r.lost_ranks, vec![1]);
+    assert_eq!(r.n_workers, 3);
+    assert_eq!(r.mp, 1, "2 does not divide 3 survivors");
+    assert_eq!(r.restore_step, 2, "restored from the step-2 averaging checkpoint");
+
+    assert_eq!(report.recoveries, 1);
+    assert_eq!(report.lost_ranks, vec![1]);
+    assert_eq!(report.n_workers, 3);
+    match events.borrow().last().unwrap() {
+        Event::RunCompleted(s) => {
+            assert_eq!(s.recoveries, 1);
+            assert_eq!(s.lost_ranks, vec![1]);
+        }
+        other => panic!("last event must be RunCompleted, got {other:?}"),
+    }
+}
+
+/// Checkpoint/restore through the session API: save at an averaging
+/// boundary, restore into a fresh session at the same data position,
+/// and continue bit-identically (momentum 0 ⇒ stateless SGD).
+#[test]
+fn session_checkpoint_restore_is_bit_exact() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let path = std::env::temp_dir().join(format!("sb-api-ckpt-{}.bin", std::process::id()));
+    let stateless = || builder(2, 2, 4).momentum(0.0).dataset(dataset());
+
+    let mut a = stateless().validate(&rt).unwrap().start().unwrap();
+    let mut ref_tail = Vec::new();
+    for _ in 0..2 {
+        a.step().unwrap();
+    }
+    a.checkpoint(&path).unwrap();
+    for _ in 0..2 {
+        ref_tail.push(a.step().unwrap().loss.to_bits());
+    }
+
+    let mut b = stateless().validate(&rt).unwrap().start().unwrap();
+    for _ in 0..2 {
+        b.step().unwrap(); // advance the data iterators identically
+    }
+    b.restore(&path).unwrap();
+    let mut tail = Vec::new();
+    for _ in 0..2 {
+        tail.push(b.step().unwrap().loss.to_bits());
+    }
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(tail, ref_tail, "post-restore losses must match bit-for-bit");
+    for (i, (x, y)) in all_param_bits(&a).iter().zip(all_param_bits(&b).iter()).enumerate() {
+        assert_eq!(x, y, "parameter tensor {i} diverged after restore");
+    }
+}
+
+/// The plan's pre-compute communication estimate matches what the live
+/// fabric then measures on a non-averaging step.
+#[test]
+fn plan_comm_estimate_matches_measured_bytes() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let plan = builder(2, 2, 3).dataset(dataset()).validate(&rt).unwrap();
+    let est = plan.comm();
+    let mut session = plan.start().unwrap();
+    let first = session.step().unwrap(); // step 1: no averaging (period 2)
+    assert_eq!(
+        first.bytes_busiest_rank, est.mp_bytes_per_step,
+        "plan promised {} MP bytes/step, fabric measured {}",
+        est.mp_bytes_per_step, first.bytes_busiest_rank
+    );
+}

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use splitbrain::comm::NetModel;
+use splitbrain::api::SessionBuilder;
 use splitbrain::coordinator::{Cluster, ClusterConfig};
 use splitbrain::data::{BatchIter, Dataset, SyntheticCifar};
 use splitbrain::runtime::{HostTensor, RuntimeClient};
@@ -25,24 +25,24 @@ fn runtime() -> Option<RuntimeClient> {
     }
 }
 
+/// Base builder: plain SGD (momentum 0, clipping off) so the one-step
+/// decomposition algebra holds exactly. Engine/collective defaults
+/// (threaded + ring) — the engine_parity suite asserts they are
+/// bit-identical to the sequential reference.
+fn builder(n: usize, mp: usize) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .lr(0.02)
+        .momentum(0.0)
+        .clip_norm(0.0)
+        .avg_period(4)
+        .seed(99)
+        .dataset_size(512)
+}
+
 fn cfg(n: usize, mp: usize) -> ClusterConfig {
-    ClusterConfig {
-        n_workers: n,
-        mp,
-        lr: 0.02,
-        momentum: 0.0,
-        clip_norm: 0.0,
-        avg_period: 4,
-        seed: 99,
-        net: NetModel::default(),
-        dataset_size: 512,
-        segmented_mp1: false,
-        scheme: splitbrain::coordinator::McastScheme::BoverK,
-        // Engine/collective defaults (threaded + ring) — the
-        // engine_parity suite asserts they are bit-identical to the
-        // sequential reference.
-        ..Default::default()
-    }
+    builder(n, mp).cluster_config().unwrap()
 }
 
 /// Multi-step training config. The seed ran these tests with
@@ -52,7 +52,7 @@ fn cfg(n: usize, mp: usize) -> ClusterConfig {
 /// `train::sgd`). The one-step decomposition tests keep plain SGD
 /// (`cfg`), where the `init - lr·g` algebra must hold exactly.
 fn cfg_train(n: usize, mp: usize) -> ClusterConfig {
-    ClusterConfig { clip_norm: 1.0, ..cfg(n, mp) }
+    builder(n, mp).clip_norm(1.0).cluster_config().unwrap()
 }
 
 fn dataset() -> Arc<dyn Dataset> {
@@ -232,8 +232,7 @@ fn segmented_mp1_baseline_matches_full_step_numerics() {
     let Some(rt) = runtime() else { return };
     // The segmented (Pallas-pipeline) mp=1 baseline used by the Table 2
     // benches must be numerically identical to the fused full_step path.
-    let mut seg_cfg = cfg(2, 1);
-    seg_cfg.segmented_mp1 = true;
+    let seg_cfg = builder(2, 1).segmented_mp1(true).cluster_config().unwrap();
     let mut a = Cluster::with_dataset(&rt, seg_cfg, dataset()).unwrap();
     let mut b = Cluster::with_dataset(&rt, cfg(2, 1), dataset()).unwrap();
     let la = a.step().unwrap().loss;
@@ -261,8 +260,7 @@ fn all_three_schemes_produce_identical_updates() {
     let mut params: Vec<Vec<Vec<f32>>> = Vec::new();
     let mut losses = Vec::new();
     for scheme in [McastScheme::BoverK, McastScheme::B, McastScheme::BK] {
-        let mut c = cfg(2, 2);
-        c.scheme = scheme;
+        let c = builder(2, 2).scheme(scheme).cluster_config().unwrap();
         let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
         let m = cluster.step().unwrap();
         losses.push(m.loss);
@@ -298,8 +296,7 @@ fn scheme_b_and_bk_respect_schedule_bytes() {
     let Some(rt) = runtime() else { return };
     use splitbrain::coordinator::McastScheme;
     // BK: uniform volumes -> max-rank fabric bytes == schedule.
-    let mut c = cfg(2, 2);
-    c.scheme = McastScheme::BK;
+    let c = builder(2, 2).scheme(McastScheme::BK).cluster_config().unwrap();
     let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
     cluster.step().unwrap();
     assert_eq!(cluster.last_fabric_bytes.0, cluster.schedule.mp_bytes_per_member());

@@ -1,0 +1,173 @@
+//! The `ConfigError` matrix: **every** invalid configuration the
+//! builder can express yields the right *typed* error — never a panic,
+//! never a mid-run bail — and the checks fire before any compute.
+
+use splitbrain::api::{ConfigError, SessionBuilder};
+use splitbrain::comm::{FaultPlan, NetModel};
+use splitbrain::coordinator::ExecEngine;
+use splitbrain::runtime::RuntimeClient;
+
+/// Build the full invalid-combination matrix as (description, builder,
+/// variant-matcher) rows. A closure per row keeps the assertion on the
+/// exact variant (and its payload), not just "some error".
+fn matrix() -> Vec<(&'static str, SessionBuilder, fn(&ConfigError) -> bool)> {
+    let b = SessionBuilder::new; // each row starts from defaults
+    vec![
+        ("zero workers", b().workers(0), |e| matches!(e, ConfigError::ZeroWorkers)),
+        ("zero mp", b().mp(0), |e| matches!(e, ConfigError::ZeroMp)),
+        (
+            "mp does not divide workers",
+            b().workers(4).mp(3),
+            |e| matches!(e, ConfigError::MpNotDivisor { n_workers: 4, mp: 3 }),
+        ),
+        ("zero steps", b().steps(0), |e| matches!(e, ConfigError::ZeroSteps)),
+        ("zero avg period", b().avg_period(0), |e| matches!(e, ConfigError::ZeroAvgPeriod)),
+        ("zero dataset", b().dataset_size(0), |e| matches!(e, ConfigError::ZeroDataset)),
+        (
+            "zero take timeout",
+            b().take_timeout_ms(0),
+            |e| matches!(e, ConfigError::ZeroTakeTimeout),
+        ),
+        ("zero lr", b().lr(0.0), |e| matches!(e, ConfigError::InvalidLr { .. })),
+        ("negative lr", b().lr(-0.1), |e| matches!(e, ConfigError::InvalidLr { .. })),
+        ("NaN lr", b().lr(f32::NAN), |e| matches!(e, ConfigError::InvalidLr { .. })),
+        (
+            "infinite lr",
+            b().lr(f32::INFINITY),
+            |e| matches!(e, ConfigError::InvalidLr { .. }),
+        ),
+        (
+            "momentum at 1",
+            b().momentum(1.0),
+            |e| matches!(e, ConfigError::InvalidMomentum { .. }),
+        ),
+        (
+            "negative momentum",
+            b().momentum(-0.1),
+            |e| matches!(e, ConfigError::InvalidMomentum { .. }),
+        ),
+        (
+            "NaN momentum",
+            b().momentum(f32::NAN),
+            |e| matches!(e, ConfigError::InvalidMomentum { .. }),
+        ),
+        (
+            "negative clip norm",
+            b().clip_norm(-1.0),
+            |e| matches!(e, ConfigError::InvalidClipNorm { .. }),
+        ),
+        (
+            "NaN clip norm",
+            b().clip_norm(f32::NAN),
+            |e| matches!(e, ConfigError::InvalidClipNorm { .. }),
+        ),
+        (
+            "overlap forced on the sequential reference",
+            b().engine(ExecEngine::Sequential).overlap(true),
+            |e| matches!(e, ConfigError::OverlapOnSequential),
+        ),
+        (
+            "crash rank out of range",
+            b().workers(2).faults(FaultPlan::new().crash(2, 1)),
+            |e| matches!(e, ConfigError::FaultRankOutOfRange { rank: 2, n_workers: 2, .. }),
+        ),
+        (
+            "straggle rank out of range",
+            b().workers(2).faults(FaultPlan::new().straggle(5, 1, 100)),
+            |e| matches!(e, ConfigError::FaultRankOutOfRange { rank: 5, .. }),
+        ),
+        (
+            "drop dst out of range",
+            b().workers(2).faults(FaultPlan::new().drop_msg(0, 2, 1, 1)),
+            |e| matches!(e, ConfigError::FaultRankOutOfRange { rank: 2, .. }),
+        ),
+        (
+            "delay src out of range",
+            b().workers(2).faults(FaultPlan::new().delay_msg(3, 0, 1, 1, 10)),
+            |e| matches!(e, ConfigError::FaultRankOutOfRange { rank: 3, .. }),
+        ),
+        (
+            "fault step zero (steps are 1-based)",
+            b().workers(2).steps(10).faults(FaultPlan::new().crash(1, 0)),
+            |e| matches!(e, ConfigError::FaultStepOutOfRange { step: 0, .. }),
+        ),
+        (
+            "fault step past the run",
+            b().workers(2).steps(10).faults(FaultPlan::new().crash(1, 11)),
+            |e| matches!(e, ConfigError::FaultStepOutOfRange { step: 11, steps: 10, .. }),
+        ),
+        (
+            "zero net alpha",
+            b().net(NetModel { alpha: 0.0, ..Default::default() }),
+            |e| matches!(e, ConfigError::InvalidNetModel { field: "alpha", .. }),
+        ),
+        (
+            "negative net beta",
+            b().net(NetModel { beta: -1.0, ..Default::default() }),
+            |e| matches!(e, ConfigError::InvalidNetModel { field: "beta", .. }),
+        ),
+        (
+            "NaN phase overhead",
+            b().net(NetModel { phase_overhead: f64::NAN, ..Default::default() }),
+            |e| matches!(e, ConfigError::InvalidNetModel { field: "phase_overhead", .. }),
+        ),
+    ]
+}
+
+#[test]
+fn every_invalid_combination_yields_the_right_typed_error() {
+    for (what, builder, is_expected) in matrix() {
+        let err = builder
+            .cluster_config()
+            .expect_err(&format!("{what}: must be rejected"));
+        assert!(is_expected(&err), "{what}: wrong variant: {err:?}");
+        // Every error renders an actionable message and behaves as a
+        // std error (so `?` converts it into anyhow at CLI boundaries).
+        assert!(!err.to_string().is_empty(), "{what}: empty message");
+        let _dyn_err: &dyn std::error::Error = &err;
+    }
+}
+
+#[test]
+fn validate_rejects_unsupported_mp_with_the_supported_list() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    // 3 divides 6, so the shape is fine — but no artifact set was
+    // lowered for mp=3.
+    let err = SessionBuilder::new().workers(6).mp(3).validate(&rt).unwrap_err();
+    match err {
+        ConfigError::MpUnsupported { mp: 3, supported } => {
+            assert!(!supported.contains(&3));
+            assert!(supported.contains(&1), "the supported list is actionable: {supported:?}");
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+}
+
+#[test]
+fn first_failing_check_wins_deterministically() {
+    // Multiple violations: the validation order is part of the
+    // contract (workers before mp before trainer fields), so callers
+    // can rely on stable error surfaces.
+    let err = SessionBuilder::new().workers(0).mp(0).lr(-1.0).cluster_config().unwrap_err();
+    assert!(matches!(err, ConfigError::ZeroWorkers), "got {err:?}");
+}
+
+#[test]
+fn valid_edges_stay_valid() {
+    // The legal boundary values next to every rejection above.
+    let b = SessionBuilder::new;
+    b().workers(1).cluster_config().unwrap();
+    b().momentum(0.0).cluster_config().unwrap();
+    b().clip_norm(0.0).cluster_config().unwrap(); // 0 = clipping off
+    b().avg_period(1).cluster_config().unwrap();
+    b().steps(1).cluster_config().unwrap();
+    b().engine(ExecEngine::Sequential).overlap(false).cluster_config().unwrap();
+    b().workers(2)
+        .steps(10)
+        .faults(FaultPlan::new().crash(1, 10)) // last step: in range
+        .cluster_config()
+        .unwrap();
+    b().net(NetModel { phase_overhead: 0.0, ..Default::default() })
+        .cluster_config()
+        .unwrap();
+}

@@ -8,25 +8,30 @@
 
 use std::sync::Arc;
 
+use splitbrain::api::SessionBuilder;
 use splitbrain::comm::CollectiveAlgo;
 use splitbrain::coordinator::{Cluster, ClusterConfig, ExecEngine, McastScheme};
 use splitbrain::data::{Dataset, SyntheticCifar};
 use splitbrain::runtime::RuntimeClient;
 
+/// All configs come from the typed builder (the one `ClusterConfig`
+/// constructor); tests tweak the returned builder before resolving.
+fn builder(n: usize, mp: usize, engine: ExecEngine, algo: CollectiveAlgo) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .lr(0.02)
+        .momentum(0.9)
+        .clip_norm(1.0)
+        .avg_period(4)
+        .seed(123)
+        .dataset_size(256)
+        .engine(engine)
+        .collectives(algo)
+}
+
 fn cfg(n: usize, mp: usize, engine: ExecEngine, algo: CollectiveAlgo) -> ClusterConfig {
-    ClusterConfig {
-        n_workers: n,
-        mp,
-        lr: 0.02,
-        momentum: 0.9,
-        clip_norm: 1.0,
-        avg_period: 4,
-        seed: 123,
-        dataset_size: 256,
-        engine,
-        collectives: algo,
-        ..Default::default()
-    }
+    builder(n, mp, engine, algo).cluster_config().unwrap()
 }
 
 fn dataset() -> Arc<dyn Dataset> {
@@ -90,10 +95,14 @@ fn threaded_matches_sequential_hybrid_10_steps() {
 #[test]
 fn threaded_matches_sequential_pure_dp() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut ca = cfg(2, 1, ExecEngine::Sequential, CollectiveAlgo::Ring);
-    ca.avg_period = 2;
-    let mut cb = ca.clone();
-    cb.engine = ExecEngine::Threaded;
+    let ca = builder(2, 1, ExecEngine::Sequential, CollectiveAlgo::Ring)
+        .avg_period(2)
+        .cluster_config()
+        .unwrap();
+    let cb = builder(2, 1, ExecEngine::Threaded, CollectiveAlgo::Ring)
+        .avg_period(2)
+        .cluster_config()
+        .unwrap();
     let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
     let thr = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
     assert_parity(seq, thr, 2, "pure DP n=2");
@@ -105,10 +114,15 @@ fn threaded_matches_sequential_pure_dp() {
 fn threaded_matches_sequential_all_collective_algos() {
     let rt = RuntimeClient::load("artifacts").unwrap();
     for algo in [CollectiveAlgo::Naive, CollectiveAlgo::Ring, CollectiveAlgo::Rhd] {
-        let mut ca = cfg(4, 2, ExecEngine::Sequential, algo);
-        ca.avg_period = 1; // average every step: exercise both rings
-        let mut cb = ca.clone();
-        cb.engine = ExecEngine::Threaded;
+        // avg_period 1: average every step, exercising both rings.
+        let ca = builder(4, 2, ExecEngine::Sequential, algo)
+            .avg_period(1)
+            .cluster_config()
+            .unwrap();
+        let cb = builder(4, 2, ExecEngine::Threaded, algo)
+            .avg_period(1)
+            .cluster_config()
+            .unwrap();
         let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
         let thr = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
         assert_parity(seq, thr, 1, &format!("n=4 mp=2 algo={algo}"));
@@ -120,10 +134,14 @@ fn threaded_matches_sequential_all_collective_algos() {
 #[test]
 fn threaded_matches_sequential_rhd_non_pow2() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut ca = cfg(3, 1, ExecEngine::Sequential, CollectiveAlgo::Rhd);
-    ca.avg_period = 1;
-    let mut cb = ca.clone();
-    cb.engine = ExecEngine::Threaded;
+    let ca = builder(3, 1, ExecEngine::Sequential, CollectiveAlgo::Rhd)
+        .avg_period(1)
+        .cluster_config()
+        .unwrap();
+    let cb = builder(3, 1, ExecEngine::Threaded, CollectiveAlgo::Rhd)
+        .avg_period(1)
+        .cluster_config()
+        .unwrap();
     let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
     let thr = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
     assert_parity(seq, thr, 2, "pure DP n=3 rhd");
@@ -134,10 +152,14 @@ fn threaded_matches_sequential_rhd_non_pow2() {
 #[test]
 fn threaded_matches_sequential_bk_scheme() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut ca = cfg(2, 2, ExecEngine::Sequential, CollectiveAlgo::Ring);
-    ca.scheme = McastScheme::BK;
-    let mut cb = ca.clone();
-    cb.engine = ExecEngine::Threaded;
+    let ca = builder(2, 2, ExecEngine::Sequential, CollectiveAlgo::Ring)
+        .scheme(McastScheme::BK)
+        .cluster_config()
+        .unwrap();
+    let cb = builder(2, 2, ExecEngine::Threaded, CollectiveAlgo::Ring)
+        .scheme(McastScheme::BK)
+        .cluster_config()
+        .unwrap();
     let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
     let thr = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
     assert_parity(seq, thr, 1, "n=2 mp=2 scheme=BK");

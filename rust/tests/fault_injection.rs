@@ -21,25 +21,30 @@
 
 use std::sync::Arc;
 
+use splitbrain::api::SessionBuilder;
 use splitbrain::comm::fault::FaultEvent;
 use splitbrain::comm::{FaultPlan, PeerLost, WorkerCrashed};
 use splitbrain::coordinator::{Cluster, ClusterConfig, ExecEngine, RecoveryPolicy};
 use splitbrain::data::{Dataset, SyntheticCifar};
 use splitbrain::runtime::RuntimeClient;
 
+/// Base builder for the failure scenarios; tests chain a fault plan
+/// (and any policy tweaks) before resolving with `cluster_config()`.
+fn builder(n: usize, mp: usize) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .lr(0.02)
+        .momentum(0.9)
+        .clip_norm(1.0)
+        .avg_period(2)
+        .seed(77)
+        .dataset_size(256)
+        .recovery(RecoveryPolicy::ShrinkAndContinue)
+}
+
 fn cfg(n: usize, mp: usize) -> ClusterConfig {
-    ClusterConfig {
-        n_workers: n,
-        mp,
-        lr: 0.02,
-        momentum: 0.9,
-        clip_norm: 1.0,
-        avg_period: 2,
-        seed: 77,
-        dataset_size: 256,
-        recovery: RecoveryPolicy::ShrinkAndContinue,
-        ..Default::default()
-    }
+    builder(n, mp).cluster_config().unwrap()
 }
 
 fn dataset() -> Arc<dyn Dataset> {
@@ -71,8 +76,7 @@ fn crash_at_every_step_recovers_and_continues() {
     let rt = RuntimeClient::load("artifacts").unwrap();
     let steps = 3;
     for k in 1..=steps {
-        let mut c = cfg(4, 2);
-        c.faults = FaultPlan::new().crash(1, k);
+        let c = builder(4, 2).faults(FaultPlan::new().crash(1, k)).cluster_config().unwrap();
         let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
         let losses = run_losses(&mut cluster, steps);
         assert_eq!(losses.len(), steps, "crash@{k}: run must complete");
@@ -101,8 +105,7 @@ fn crash_at_every_step_recovers_and_continues() {
 #[test]
 fn recovery_converges_on_survivors() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut c = cfg(4, 2);
-    c.faults = FaultPlan::new().crash(1, 2);
+    let c = builder(4, 2).faults(FaultPlan::new().crash(1, 2)).cluster_config().unwrap();
     let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
     // The step-2 crash precedes the first averaging boundary, so
     // recovery restarts the survivors from the initial model — give the
@@ -142,8 +145,7 @@ fn same_fault_seed_replays_bit_identically() {
     );
     let mut runs = Vec::new();
     for _ in 0..2 {
-        let mut c = cfg(4, 2);
-        c.faults = plan.clone();
+        let c = builder(4, 2).faults(plan.clone()).cluster_config().unwrap();
         let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
         let losses = run_losses(&mut cluster, steps);
         runs.push((losses, all_params(&cluster), cluster.recoveries, cluster.lost_ranks.clone()));
@@ -164,8 +166,10 @@ fn same_fault_seed_replays_bit_identically() {
 #[test]
 fn cascaded_crashes_shrink_twice() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut c = cfg(4, 2);
-    c.faults = FaultPlan::new().crash(1, 2).crash(1, 3);
+    let c = builder(4, 2)
+        .faults(FaultPlan::new().crash(1, 2).crash(1, 3))
+        .cluster_config()
+        .unwrap();
     let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
     let losses = run_losses(&mut cluster, 3);
     assert_eq!(losses.len(), 3);
@@ -180,9 +184,11 @@ fn cascaded_crashes_shrink_twice() {
 #[test]
 fn fail_fast_propagates_typed_peer_loss() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut c = cfg(2, 2);
-    c.recovery = RecoveryPolicy::FailFast;
-    c.faults = FaultPlan::new().crash(1, 1);
+    let c = builder(2, 2)
+        .recovery(RecoveryPolicy::FailFast)
+        .faults(FaultPlan::new().crash(1, 1))
+        .cluster_config()
+        .unwrap();
     let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
     let e = cluster.step().unwrap_err();
     let peer = e.downcast_ref::<PeerLost>().map(|p| p.rank);
@@ -202,11 +208,13 @@ fn fail_fast_propagates_typed_peer_loss() {
 #[test]
 fn dropped_message_presumes_sender_dead_and_recovers() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut c = cfg(2, 2);
-    // Exercise the config plumbing too; the dropped-channel fast path
-    // means the run never actually waits this long.
-    c.take_timeout_ms = 8_000;
-    c.faults = FaultPlan::new().drop_msg(0, 1, 1, 1); // modulo-fwd slice
+    // take_timeout exercises the config plumbing too; the
+    // dropped-channel fast path means the run never waits this long.
+    let c = builder(2, 2)
+        .take_timeout_ms(8_000)
+        .faults(FaultPlan::new().drop_msg(0, 1, 1, 1)) // modulo-fwd slice
+        .cluster_config()
+        .unwrap();
     let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
     let m = cluster.step().unwrap();
     assert!(m.loss.is_finite());
@@ -222,9 +230,11 @@ fn dropped_message_presumes_sender_dead_and_recovers() {
 #[test]
 fn dropped_message_recovers_on_sequential_engine_too() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut c = cfg(2, 2);
-    c.engine = ExecEngine::Sequential;
-    c.faults = FaultPlan::new().drop_msg(0, 1, 1, 1);
+    let c = builder(2, 2)
+        .engine(ExecEngine::Sequential)
+        .faults(FaultPlan::new().drop_msg(0, 1, 1, 1))
+        .cluster_config()
+        .unwrap();
     let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
     let m = cluster.step().unwrap();
     assert!(m.loss.is_finite());
@@ -239,10 +249,14 @@ fn dropped_message_recovers_on_sequential_engine_too() {
 fn straggle_and_delay_move_clocks_not_numerics() {
     let rt = RuntimeClient::load("artifacts").unwrap();
     let base = cfg(2, 2);
-    let mut faulted = base.clone();
-    faulted.faults = FaultPlan::new()
-        .straggle(0, 1, 400)
-        .delay_msg(0, 1, 3, 1, 150); // phase 3 = shard-fwd allgather
+    let faulted = builder(2, 2)
+        .faults(
+            FaultPlan::new()
+                .straggle(0, 1, 400)
+                .delay_msg(0, 1, 3, 1, 150), // phase 3 = shard-fwd allgather
+        )
+        .cluster_config()
+        .unwrap();
     let mut a = Cluster::with_dataset(&rt, base, dataset()).unwrap();
     let mut b = Cluster::with_dataset(&rt, faulted, dataset()).unwrap();
     let ma = a.step().unwrap();
@@ -266,8 +280,10 @@ fn straggle_and_delay_move_clocks_not_numerics() {
 #[test]
 fn recovery_restores_from_last_averaging_checkpoint() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut c = cfg(2, 2); // avg_period = 2
-    c.faults = FaultPlan::new().crash(1, 3);
+    let c = builder(2, 2) // avg_period = 2
+        .faults(FaultPlan::new().crash(1, 3))
+        .cluster_config()
+        .unwrap();
     let mut cluster = Cluster::with_dataset(&rt, c, dataset()).unwrap();
     assert_eq!(cluster.last_checkpoint_step(), 0, "initial model is the restore point");
     let losses = run_losses(&mut cluster, 3);
@@ -286,10 +302,12 @@ fn recovery_restores_from_last_averaging_checkpoint() {
 #[test]
 fn sequential_and_threaded_recovery_agree_bitwise() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut ct = cfg(2, 2);
-    ct.faults = FaultPlan::new().crash(1, 2);
-    let mut cs = ct.clone();
-    cs.engine = ExecEngine::Sequential;
+    let ct = builder(2, 2).faults(FaultPlan::new().crash(1, 2)).cluster_config().unwrap();
+    let cs = builder(2, 2)
+        .faults(FaultPlan::new().crash(1, 2))
+        .engine(ExecEngine::Sequential)
+        .cluster_config()
+        .unwrap();
     let mut thr = Cluster::with_dataset(&rt, ct, dataset()).unwrap();
     let mut seq = Cluster::with_dataset(&rt, cs, dataset()).unwrap();
     let lt = run_losses(&mut thr, 3);
@@ -311,8 +329,7 @@ fn sequential_and_threaded_recovery_agree_bitwise() {
 fn recovery_policy_is_free_without_faults() {
     let rt = RuntimeClient::load("artifacts").unwrap();
     let shrink = cfg(2, 2);
-    let mut fail = shrink.clone();
-    fail.recovery = RecoveryPolicy::FailFast;
+    let fail = builder(2, 2).recovery(RecoveryPolicy::FailFast).cluster_config().unwrap();
     let mut a = Cluster::with_dataset(&rt, shrink, dataset()).unwrap();
     let mut b = Cluster::with_dataset(&rt, fail, dataset()).unwrap();
     let la = run_losses(&mut a, 2);

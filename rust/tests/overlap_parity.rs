@@ -14,6 +14,7 @@
 
 use std::sync::Arc;
 
+use splitbrain::api::SessionBuilder;
 use splitbrain::comm::transport::TcpPeer;
 use splitbrain::comm::{CollectiveAlgo, FaultPlan};
 use splitbrain::coordinator::procdriver::{run_worker, ProcConfig, RunOutcome};
@@ -24,21 +25,25 @@ use splitbrain::runtime::RuntimeClient;
 const SEED: u64 = 123;
 const DATASET: usize = 256;
 
+/// Configs come from the typed builder; tests chain extra setters
+/// before resolving with `cluster_config()`.
+fn builder(n: usize, mp: usize, engine: ExecEngine, overlap: bool) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .lr(0.02)
+        .momentum(0.9)
+        .clip_norm(1.0)
+        .avg_period(4)
+        .seed(SEED)
+        .dataset_size(DATASET)
+        .engine(engine)
+        .collectives(CollectiveAlgo::Ring)
+        .overlap(overlap)
+}
+
 fn cfg(n: usize, mp: usize, engine: ExecEngine, overlap: bool) -> ClusterConfig {
-    ClusterConfig {
-        n_workers: n,
-        mp,
-        lr: 0.02,
-        momentum: 0.9,
-        clip_norm: 1.0,
-        avg_period: 4,
-        seed: SEED,
-        dataset_size: DATASET,
-        engine,
-        collectives: CollectiveAlgo::Ring,
-        overlap,
-        ..Default::default()
-    }
+    builder(n, mp, engine, overlap).cluster_config().unwrap()
 }
 
 fn dataset() -> Arc<dyn Dataset> {
@@ -124,10 +129,14 @@ fn overlap_matches_bsp_threaded_and_schedule_bytes() {
 fn overlap_parity_across_schemes() {
     let rt = RuntimeClient::load("artifacts").unwrap();
     for scheme in [McastScheme::B, McastScheme::BK] {
-        let mut ca = cfg(2, 2, ExecEngine::Sequential, false);
-        ca.scheme = scheme;
-        let mut cb = cfg(2, 2, ExecEngine::Threaded, true);
-        cb.scheme = scheme;
+        let ca = builder(2, 2, ExecEngine::Sequential, false)
+            .scheme(scheme)
+            .cluster_config()
+            .unwrap();
+        let cb = builder(2, 2, ExecEngine::Threaded, true)
+            .scheme(scheme)
+            .cluster_config()
+            .unwrap();
         let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
         let ovl = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
         assert_parity(seq, ovl, 2, &format!("scheme={scheme} overlap"));
@@ -139,12 +148,16 @@ fn overlap_parity_across_schemes() {
 #[test]
 fn overlap_parity_naive_collectives() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut ca = cfg(4, 2, ExecEngine::Sequential, false);
-    ca.collectives = CollectiveAlgo::Naive;
-    ca.avg_period = 1;
-    let mut cb = cfg(4, 2, ExecEngine::Threaded, true);
-    cb.collectives = CollectiveAlgo::Naive;
-    cb.avg_period = 1;
+    let ca = builder(4, 2, ExecEngine::Sequential, false)
+        .collectives(CollectiveAlgo::Naive)
+        .avg_period(1)
+        .cluster_config()
+        .unwrap();
+    let cb = builder(4, 2, ExecEngine::Threaded, true)
+        .collectives(CollectiveAlgo::Naive)
+        .avg_period(1)
+        .cluster_config()
+        .unwrap();
     let seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
     let ovl = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
     assert_parity(seq, ovl, 2, "naive collectives overlap");
@@ -157,14 +170,18 @@ fn overlap_parity_naive_collectives() {
 #[test]
 fn overlap_crash_recovery_matches_sequential_bsp() {
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut ca = cfg(4, 2, ExecEngine::Sequential, false);
-    ca.avg_period = 2;
-    ca.recovery = RecoveryPolicy::ShrinkAndContinue;
-    ca.faults = FaultPlan::new().crash(1, 3);
-    let mut cb = cfg(4, 2, ExecEngine::Threaded, true);
-    cb.avg_period = 2;
-    cb.recovery = RecoveryPolicy::ShrinkAndContinue;
-    cb.faults = FaultPlan::new().crash(1, 3);
+    let ca = builder(4, 2, ExecEngine::Sequential, false)
+        .avg_period(2)
+        .recovery(RecoveryPolicy::ShrinkAndContinue)
+        .faults(FaultPlan::new().crash(1, 3))
+        .cluster_config()
+        .unwrap();
+    let cb = builder(4, 2, ExecEngine::Threaded, true)
+        .avg_period(2)
+        .recovery(RecoveryPolicy::ShrinkAndContinue)
+        .faults(FaultPlan::new().crash(1, 3))
+        .cluster_config()
+        .unwrap();
     let mut seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
     let mut ovl = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
     for step in 1..=6 {
@@ -195,10 +212,14 @@ fn overlap_crash_recovery_matches_sequential_bsp() {
 fn overlap_straggle_is_clock_only() {
     let rt = RuntimeClient::load("artifacts").unwrap();
     let plan = FaultPlan::new().straggle(0, 2, 750);
-    let mut ca = cfg(2, 2, ExecEngine::Sequential, false);
-    ca.faults = plan.clone();
-    let mut cb = cfg(2, 2, ExecEngine::Threaded, true);
-    cb.faults = plan;
+    let ca = builder(2, 2, ExecEngine::Sequential, false)
+        .faults(plan.clone())
+        .cluster_config()
+        .unwrap();
+    let cb = builder(2, 2, ExecEngine::Threaded, true)
+        .faults(plan)
+        .cluster_config()
+        .unwrap();
     let mut seq = Cluster::with_dataset(&rt, ca, dataset()).unwrap();
     let mut ovl = Cluster::with_dataset(&rt, cb, dataset()).unwrap();
     for step in 1..=3 {

@@ -14,6 +14,7 @@
 
 use std::sync::Arc;
 
+use splitbrain::api::SessionBuilder;
 use splitbrain::coordinator::{Cluster, ClusterConfig};
 use splitbrain::data::{Dataset, SyntheticCifar};
 use splitbrain::runtime::RuntimeClient;
@@ -23,17 +24,17 @@ const SPLIT: usize = 2; // avg_period-aligned save point
 const TAIL: usize = 2; // steps after the restore
 
 fn cfg(n: usize, mp: usize, seed: u64) -> ClusterConfig {
-    ClusterConfig {
-        n_workers: n,
-        mp,
-        lr: 0.02,
-        momentum: 0.0, // stateless SGD: restore is exact
-        clip_norm: 1.0,
-        avg_period: SPLIT,
-        seed,
-        dataset_size: 256,
-        ..Default::default()
-    }
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .lr(0.02)
+        .momentum(0.0) // stateless SGD: restore is exact
+        .clip_norm(1.0)
+        .avg_period(SPLIT)
+        .seed(seed)
+        .dataset_size(256)
+        .cluster_config()
+        .unwrap()
 }
 
 fn dataset(seed: u64) -> Arc<dyn Dataset> {

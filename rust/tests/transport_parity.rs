@@ -16,6 +16,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::process::Command;
 
+use splitbrain::api::SessionBuilder;
 use splitbrain::comm::FaultPlan;
 use splitbrain::coordinator::{Cluster, ClusterConfig, RecoveryPolicy};
 use splitbrain::runtime::RuntimeClient;
@@ -28,18 +29,20 @@ fn bin() -> &'static str {
     env!("CARGO_BIN_EXE_splitbrain")
 }
 
+fn base_builder(n: usize, mp: usize, avg_period: usize) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .lr(0.02)
+        .momentum(0.9)
+        .clip_norm(1.0)
+        .avg_period(avg_period)
+        .seed(SEED)
+        .dataset_size(DATASET)
+}
+
 fn base_cfg(n: usize, mp: usize, avg_period: usize) -> ClusterConfig {
-    ClusterConfig {
-        n_workers: n,
-        mp,
-        lr: 0.02,
-        momentum: 0.9,
-        clip_norm: 1.0,
-        avg_period,
-        seed: SEED,
-        dataset_size: DATASET,
-        ..Default::default()
-    }
+    base_builder(n, mp, avg_period).cluster_config().unwrap()
 }
 
 fn tmp_dir(name: &str) -> PathBuf {
@@ -196,9 +199,11 @@ fn tcp_crash_recovery_matches_inproc_shrink_and_continue() {
 
     // --- in-proc reference (threaded engine + fault plan) ---
     let rt = RuntimeClient::load("artifacts").unwrap();
-    let mut cfg = base_cfg(n, 2, avg);
-    cfg.recovery = RecoveryPolicy::ShrinkAndContinue;
-    cfg.faults = FaultPlan::new().crash(crash_rank, crash_step);
+    let cfg = base_builder(n, 2, avg)
+        .recovery(RecoveryPolicy::ShrinkAndContinue)
+        .faults(FaultPlan::new().crash(crash_rank, crash_step))
+        .cluster_config()
+        .unwrap();
     let mut cluster = Cluster::new(&rt, cfg).unwrap();
     let mut ref_losses: Vec<Vec<u64>> = Vec::new(); // [step][current-rank]
     for _ in 0..steps {
