@@ -15,7 +15,8 @@ use crate::comm::{CollectiveAlgo, NetModel};
 use crate::coordinator::cluster::plan_topology;
 use crate::coordinator::{ClusterConfig, ExecEngine, McastScheme, RecoveryPolicy};
 use crate::data::Dataset;
-use crate::runtime::RuntimeClient;
+use crate::runtime::{HostTensor, RuntimeClient};
+use crate::store::{load_artifact, RunDir, StoreError};
 
 use super::error::ConfigError;
 use super::manifest::RunManifest;
@@ -96,6 +97,15 @@ pub struct SessionBuilder {
     /// Dataset injected by tests; `None` loads the default
     /// (CIFAR-10 when present, synthetic otherwise).
     dataset: Option<Arc<dyn Dataset>>,
+    /// Durable run directory (`None` = ephemeral run).
+    run_dir: Option<std::path::PathBuf>,
+    /// Rehydrate from `run_dir` instead of starting fresh (set by
+    /// [`SessionBuilder::resume_from`]).
+    resume: bool,
+    /// Initial global model for a branched run (set by
+    /// [`SessionBuilder::branch_from`]): restored — re-sharded for this
+    /// topology — right after worker init.
+    branch_global: Option<Vec<(String, HostTensor)>>,
 }
 
 impl Default for SessionBuilder {
@@ -120,6 +130,9 @@ impl Default for SessionBuilder {
             net: NetModel::default(),
             faults: FaultPlan::new(),
             dataset: None,
+            run_dir: None,
+            resume: false,
+            branch_global: None,
         }
     }
 }
@@ -181,7 +194,71 @@ impl SessionBuilder {
             net: m.net,
             faults: m.faults.clone(),
             dataset: None,
+            run_dir: None,
+            resume: false,
+            branch_global: None,
         }
+    }
+
+    /// Rehydrate the run persisted in `dir`: seed every field from its
+    /// `run.json`, and make [`validate`](Self::validate) →
+    /// [`Plan::start`] resume from the newest valid checkpoint artifact
+    /// with the event log's distrusted tail truncated (no artifact at
+    /// all restarts from step 0 — the initial model is a pure function
+    /// of the seed). The resumed run is **bit-identical** to the
+    /// uninterrupted one: per-worker parameters *and* optimizer
+    /// momentum come back exactly, data iterators fast-forward, and
+    /// consumed fault flags stay consumed.
+    ///
+    /// Overriding any manifest-bearing field after this call changes
+    /// the config fingerprint and `start()` fails with
+    /// [`StoreError::FingerprintMismatch`] — a resumed run must be the
+    /// *same* run. To continue a run's model under a different
+    /// configuration, branch instead ([`Self::branch_from`]).
+    pub fn resume_from(dir: impl AsRef<std::path::Path>) -> anyhow::Result<SessionBuilder> {
+        let rd = RunDir::open(dir.as_ref())?;
+        let mut b = Self::from_manifest(&rd.manifest_json()?)?;
+        b.run_dir = Some(dir.as_ref().to_path_buf());
+        b.resume = true;
+        Ok(b)
+    }
+
+    /// Clone the run persisted in `dir` into a **divergent** run: seed
+    /// every field from its `run.json` and take the global model of one
+    /// of its checkpoints (`at_step`, or the newest valid one) as this
+    /// run's initial parameters. Setters may then change anything —
+    /// topology, collectives, lr — and the global model re-shards to
+    /// fit; optimizer momentum restarts (the [`Session::restore`]
+    /// contract). The source dir is read-only here; give the branch its
+    /// own [`run_dir`](Self::run_dir) to persist it.
+    ///
+    /// [`Session::restore`]: super::Session::restore
+    pub fn branch_from(
+        dir: impl AsRef<std::path::Path>,
+        at_step: Option<usize>,
+    ) -> anyhow::Result<SessionBuilder> {
+        let rd = RunDir::open(dir.as_ref())?;
+        let manifest = RunManifest::parse(&rd.manifest_json()?)?;
+        let want = manifest.fingerprint();
+        let art = match at_step {
+            Some(step) => {
+                let art = load_artifact(rd.checkpoint_path(step))?;
+                if art.manifest_fingerprint != want {
+                    return Err(StoreError::FingerprintMismatch {
+                        got: art.manifest_fingerprint,
+                        want,
+                    }
+                    .into());
+                }
+                art
+            }
+            None => rd
+                .latest_valid_checkpoint(want)?
+                .ok_or_else(|| StoreError::NoCheckpoint(rd.root().display().to_string()))?,
+        };
+        let mut b = Self::from_run_manifest(&manifest);
+        b.branch_global = Some(art.state.global);
+        Ok(b)
     }
 
     /// Total workers N.
@@ -321,6 +398,19 @@ impl SessionBuilder {
     /// (tests inject toy data here; not part of the manifest).
     pub fn dataset(mut self, data: Arc<dyn Dataset>) -> Self {
         self.dataset = Some(data);
+        self
+    }
+
+    /// Persist this run durably under `dir`: `run.json` (the canonical
+    /// manifest), an append-only CRC-framed `events.log`, and a
+    /// fingerprinted checkpoint artifact at every averaging boundary —
+    /// the layout [`SessionBuilder::resume_from`] and
+    /// [`SessionBuilder::branch_from`] rehydrate. A fresh start refuses
+    /// a directory that already holds a run
+    /// ([`StoreError::RunExists`](crate::store::StoreError::RunExists));
+    /// resume instead.
+    pub fn run_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.run_dir = Some(dir.into());
         self
     }
 
@@ -480,6 +570,11 @@ impl SessionBuilder {
             transformed,
             schedule,
             self.dataset.clone(),
+            super::plan::StoreOptions {
+                run_dir: self.run_dir.clone(),
+                resume: self.resume,
+                branch_global: self.branch_global.clone(),
+            },
         ))
     }
 }

@@ -10,10 +10,12 @@
 
 use std::cell::RefCell;
 use std::io::Write;
+use std::path::Path;
 use std::rc::Rc;
 
 use crate::comm::CollectiveAlgo;
 use crate::coordinator::ExecEngine;
+use crate::store::{LogRecord, LogWriter, StoreError};
 
 /// Static facts about a run, emitted once before the first step.
 #[derive(Debug, Clone, PartialEq)]
@@ -284,6 +286,61 @@ impl CollectSink {
 impl EventSink for CollectSink {
     fn on_event(&mut self, event: &Event) {
         self.events.borrow_mut().push(event.clone());
+    }
+}
+
+/// A sink that mirrors every event into an append-only, CRC-framed,
+/// fsync'd on-disk log (the [`crate::store::log`] format — replayable
+/// with [`crate::store::replay`]).
+///
+/// This is the *observer* form of durable logging: attach it to any
+/// session to get a replayable event history at a path of your
+/// choosing. Sessions started with a run dir
+/// ([`SessionBuilder::run_dir`](super::SessionBuilder::run_dir))
+/// already write `events.log` themselves — with checkpoint and resume
+/// lineage records a plain sink never sees — so a `DiskSink` is for
+/// logging *outside* a run dir.
+///
+/// [`EventSink::on_event`] is infallible by design (observability must
+/// not take training down), so I/O errors are latched: the first
+/// failure stops further writes and is readable via
+/// [`error`](DiskSink::error).
+///
+/// # Examples
+///
+/// ```no_run
+/// use splitbrain::api::{DiskSink, EventSink};
+///
+/// let sink = DiskSink::create("events.log").unwrap();
+/// // session.attach(Box::new(sink));
+/// ```
+pub struct DiskSink {
+    writer: Option<LogWriter>,
+    error: Option<StoreError>,
+}
+
+impl DiskSink {
+    /// Create (or truncate) the log at `path`.
+    pub fn create(path: impl AsRef<Path>) -> Result<DiskSink, StoreError> {
+        Ok(DiskSink { writer: Some(LogWriter::create(path)?), error: None })
+    }
+
+    /// The first write error, if any. Once set, no further records are
+    /// written (the log ends at the last durable record, which replay
+    /// handles like any other clean prefix).
+    pub fn error(&self) -> Option<&StoreError> {
+        self.error.as_ref()
+    }
+}
+
+impl EventSink for DiskSink {
+    fn on_event(&mut self, event: &Event) {
+        if let Some(w) = &mut self.writer {
+            if let Err(e) = w.append(&LogRecord::from_event(event)) {
+                self.error = Some(e);
+                self.writer = None;
+            }
+        }
     }
 }
 

@@ -35,6 +35,15 @@
 //!   `splitbrain train --manifest run.json`; the multi-process
 //!   launcher hands one manifest to every worker and the TCP handshake
 //!   compares manifest fingerprints.
+//! * **Durable runs** ([`crate::store`]) —
+//!   [`SessionBuilder::run_dir`](builder::SessionBuilder::run_dir)
+//!   persists the event stream and fingerprinted checkpoint artifacts;
+//!   [`SessionBuilder::resume_from`](builder::SessionBuilder::resume_from)
+//!   rehydrates a killed run bit-identically, and
+//!   [`Session::branch`](session::Session::branch) /
+//!   [`SessionBuilder::branch_from`](builder::SessionBuilder::branch_from)
+//!   clone a run from any averaging boundary into a divergent
+//!   configuration.
 //!
 //! # Examples
 //!
@@ -62,8 +71,8 @@ pub mod session;
 pub use builder::{SessionBuilder, DEFAULT_LOG_EVERY, DEFAULT_STEPS, DEFAULT_WORKERS};
 pub use error::ConfigError;
 pub use events::{
-    step_reports, CollectSink, ConsoleSink, Event, EventSink, RecoveryInfo, RunInfo, RunSummary,
-    StepReport,
+    step_reports, CollectSink, ConsoleSink, DiskSink, Event, EventSink, RecoveryInfo, RunInfo,
+    RunSummary, StepReport,
 };
 pub use manifest::{RunManifest, MANIFEST_VERSION};
 pub use plan::{CommEstimate, Plan};

@@ -11,11 +11,24 @@ use anyhow::Result;
 use crate::coordinator::{Cluster, ClusterConfig, GmpTopology, StepSchedule};
 use crate::data::Dataset;
 use crate::model::TransformedNet;
-use crate::runtime::RuntimeClient;
+use crate::runtime::{HostTensor, RuntimeClient};
+use crate::store::{RunDir, StoreError};
 use crate::train::MemoryReport;
 
 use super::manifest::RunManifest;
 use super::session::Session;
+
+/// The builder's durability choices, carried into [`Plan::start`]:
+/// where (and whether) the run persists, whether it rehydrates, and the
+/// branched-in global model, if any.
+pub(crate) struct StoreOptions {
+    /// Durable run directory (`None` = ephemeral run).
+    pub(crate) run_dir: Option<std::path::PathBuf>,
+    /// Rehydrate from `run_dir` instead of starting fresh.
+    pub(crate) resume: bool,
+    /// Initial global model cloned from another run's checkpoint.
+    pub(crate) branch_global: Option<Vec<(String, HostTensor)>>,
+}
 
 /// Predicted per-step communication of a planned run (analytic, from
 /// the compiled schedule and the α–β network model — the same numbers
@@ -62,6 +75,7 @@ pub struct Plan<'rt> {
     transformed: TransformedNet,
     schedule: StepSchedule,
     dataset: Option<Arc<dyn Dataset>>,
+    store: StoreOptions,
 }
 
 impl<'rt> Plan<'rt> {
@@ -75,8 +89,9 @@ impl<'rt> Plan<'rt> {
         transformed: TransformedNet,
         schedule: StepSchedule,
         dataset: Option<Arc<dyn Dataset>>,
+        store: StoreOptions,
     ) -> Plan<'rt> {
-        Plan { rt, manifest, cfg, steps, topo, transformed, schedule, dataset }
+        Plan { rt, manifest, cfg, steps, topo, transformed, schedule, dataset, store }
     }
 
     /// The resolved DP×MP topology (Fig. 6).
@@ -148,8 +163,57 @@ impl<'rt> Plan<'rt> {
     }
 
     /// [`start`](Plan::start) on an explicit dataset.
+    ///
+    /// Durability ([`SessionBuilder::run_dir`]) and rehydration
+    /// ([`SessionBuilder::resume_from`] /
+    /// [`SessionBuilder::branch_from`]) resolve here:
+    ///
+    /// - **fresh + run dir** — create the dir, persist `run.json`,
+    ///   start logging events.
+    /// - **resume** — verify this plan's manifest fingerprint matches
+    ///   the persisted `run.json` (a typed
+    ///   [`StoreError::FingerprintMismatch`] otherwise), rebuild the
+    ///   cluster bit-exactly from the newest valid checkpoint artifact
+    ///   (step 0 if none), truncate the event log's distrusted tail and
+    ///   stamp a `Resumed` record.
+    /// - **branch** — fresh cluster, then the source checkpoint's
+    ///   global model restored (re-sharded) over it.
+    ///
+    /// [`SessionBuilder::run_dir`]: super::SessionBuilder::run_dir
+    /// [`SessionBuilder::resume_from`]: super::SessionBuilder::resume_from
+    /// [`SessionBuilder::branch_from`]: super::SessionBuilder::branch_from
     pub fn start_with_dataset(self, data: Arc<dyn Dataset>) -> Result<Session<'rt>> {
-        let cluster = Cluster::with_dataset(self.rt, self.cfg.clone(), data)?;
-        Ok(Session::new(cluster, self.steps, self.rt.manifest.batch))
+        let batch = self.rt.manifest.batch;
+        let current = self.manifest.fingerprint();
+        if self.store.resume {
+            let dirpath =
+                self.store.run_dir.as_ref().expect("resume_from always sets run_dir").clone();
+            let dir = RunDir::open(&dirpath)?;
+            let persisted = RunManifest::parse(&dir.manifest_json()?)?.fingerprint();
+            if persisted != current {
+                return Err(StoreError::FingerprintMismatch { got: current, want: persisted }
+                    .into());
+            }
+            let (cluster, resume_step) = match dir.latest_valid_checkpoint(persisted)? {
+                Some(art) => {
+                    let step = art.step;
+                    (Cluster::with_dataset_state(self.rt, self.cfg.clone(), data, art.state)?, step)
+                }
+                None => (Cluster::with_dataset(self.rt, self.cfg.clone(), data)?, 0),
+            };
+            let mut session = Session::new(cluster, self.steps, batch);
+            session.attach_store_resumed(dir, persisted, self.cfg.avg_period, resume_step)?;
+            return Ok(session);
+        }
+        let mut cluster = Cluster::with_dataset(self.rt, self.cfg.clone(), data)?;
+        if let Some(global) = &self.store.branch_global {
+            cluster.restore_from_global(global)?;
+        }
+        let mut session = Session::new(cluster, self.steps, batch);
+        if let Some(dirpath) = &self.store.run_dir {
+            let dir = RunDir::create(dirpath, &self.manifest.to_json())?;
+            session.attach_store_fresh(dir, current, self.cfg.avg_period)?;
+        }
+        Ok(session)
     }
 }

@@ -15,9 +15,14 @@ use anyhow::Result;
 
 use crate::coordinator::Cluster;
 use crate::data::Dataset;
+use crate::store::{
+    ckpt::fnv1a, replay, save_artifact, CheckpointArtifact, LogRecord, LogWriter, RunDir,
+    StoreError,
+};
 use crate::train::{MemoryReport, TrainReport};
 use crate::util::Timer;
 
+use super::builder::SessionBuilder;
 use super::events::{Event, EventSink, RecoveryInfo, RunInfo, RunSummary, StepReport};
 
 /// End-of-run report: the aggregate [`TrainReport`] plus the recovery
@@ -90,12 +95,100 @@ pub struct Session<'rt> {
     train: TrainReport,
     sinks: Vec<Box<dyn EventSink>>,
     started: bool,
+    store: Option<RunStore>,
+}
+
+/// The durable side of a session: the run dir, its event log, and the
+/// facts needed to stamp checkpoint artifacts at averaging boundaries.
+struct RunStore {
+    dir: RunDir,
+    log: LogWriter,
+    manifest_fingerprint: u64,
+    avg_period: usize,
 }
 
 impl<'rt> Session<'rt> {
     pub(crate) fn new(cluster: Cluster<'rt>, steps: usize, batch: usize) -> Session<'rt> {
         let train = TrainReport::new(cluster.cfg.n_workers, cluster.cfg.mp, batch);
-        Session { cluster, steps, batch, train, sinks: Vec::new(), started: false }
+        Session { cluster, steps, batch, train, sinks: Vec::new(), started: false, store: None }
+    }
+
+    /// Make this session durable in a freshly created run dir: every
+    /// event is appended (fsync'd, CRC-framed) to `events.log`, and a
+    /// fingerprinted checkpoint artifact lands at every averaging
+    /// boundary.
+    pub(crate) fn attach_store_fresh(
+        &mut self,
+        dir: RunDir,
+        manifest_fingerprint: u64,
+        avg_period: usize,
+    ) -> Result<()> {
+        let log = LogWriter::create(dir.events_path())?;
+        self.store = Some(RunStore { dir, log, manifest_fingerprint, avg_period });
+        Ok(())
+    }
+
+    /// [`attach_store_fresh`](Session::attach_store_fresh) for a
+    /// rehydrated session: truncate the event log's distrusted tail
+    /// (records past the resume point, or torn/corrupt bytes), restamp
+    /// the resume boundary's `Checkpoint` record if truncation dropped
+    /// it (the kill can land between the artifact rename and its log
+    /// record), then append the `Resumed` lineage marker.
+    pub(crate) fn attach_store_resumed(
+        &mut self,
+        dir: RunDir,
+        manifest_fingerprint: u64,
+        avg_period: usize,
+        resume_step: usize,
+    ) -> Result<()> {
+        let path = dir.events_path();
+        let mut log = if path.is_file() {
+            let rp = replay(&path)?;
+            let kept = rp.records_until_step(resume_step as u64);
+            let mut log = LogWriter::open_truncated(&path, rp.cut_for_step(resume_step as u64))?;
+            let boundary_logged = kept.iter().any(
+                |r| matches!(r, LogRecord::Checkpoint { step, .. } if *step == resume_step as u64),
+            );
+            if resume_step > 0 && !boundary_logged {
+                let p = dir.checkpoint_path(resume_step);
+                let bytes = std::fs::read(&p).map_err(|e| StoreError::io(&p, "read", e))?;
+                log.append(&LogRecord::Checkpoint {
+                    step: resume_step as u64,
+                    file: format!("step-{resume_step}.ckpt"),
+                    fingerprint: fnv1a(&bytes),
+                })?;
+            }
+            log
+        } else {
+            LogWriter::create(&path)?
+        };
+        log.append(&LogRecord::Resumed { step: resume_step as u64 })?;
+        self.store = Some(RunStore { dir, log, manifest_fingerprint, avg_period });
+        Ok(())
+    }
+
+    /// The durable run directory, when this session persists one.
+    pub fn run_dir(&self) -> Option<&Path> {
+        self.store.as_ref().map(|s| s.dir.root())
+    }
+
+    /// Seed a [`SessionBuilder`] that **branches** the run persisted in
+    /// `run_dir`: the builder starts from the source run's manifest with
+    /// the global model of its newest valid checkpoint as the initial
+    /// parameters, and `overrides` then diverges the configuration
+    /// (different collectives, lr, topology, ...). The source run dir is
+    /// never written; give the branch its own dir with
+    /// [`SessionBuilder::run_dir`] to persist it.
+    ///
+    /// Branching re-shards the global model for the (possibly new)
+    /// topology and restarts optimizer momentum — the same contract as
+    /// [`Session::restore`]. For bit-exact continuation of the *same*
+    /// configuration use [`SessionBuilder::resume_from`] instead.
+    pub fn branch(
+        run_dir: impl AsRef<Path>,
+        overrides: impl FnOnce(SessionBuilder) -> SessionBuilder,
+    ) -> Result<SessionBuilder> {
+        Ok(overrides(SessionBuilder::branch_from(run_dir, None)?))
     }
 
     /// Attach an observer; every event goes to every sink in attach
@@ -105,10 +198,46 @@ impl<'rt> Session<'rt> {
         self.sinks.push(sink);
     }
 
-    fn emit(&mut self, event: &Event) {
+    /// Deliver to every sink (infallible observers), then mirror into
+    /// the run dir's event log when this session is durable. A log
+    /// append failure is a real error — durability is a correctness
+    /// feature here, not best-effort observability.
+    fn emit(&mut self, event: &Event) -> Result<()> {
         for sink in &mut self.sinks {
             sink.on_event(event);
         }
+        if let Some(store) = &mut self.store {
+            store.log.append(&LogRecord::from_event(event))?;
+        }
+        Ok(())
+    }
+
+    /// Persist the complete training state at an averaging boundary:
+    /// write the fingerprinted artifact atomically, then witness it in
+    /// the event log. (Artifact first — a kill between the two is
+    /// healed by the resume path restamping the `Checkpoint` record.)
+    fn maybe_persist_boundary(&mut self) -> Result<()> {
+        let (avg_period, manifest_fingerprint) = match &self.store {
+            Some(s) => (s.avg_period, s.manifest_fingerprint),
+            None => return Ok(()),
+        };
+        let step = self.cluster.steps_done();
+        if step == 0 || step % avg_period != 0 {
+            return Ok(());
+        }
+        let art = CheckpointArtifact {
+            step,
+            manifest_fingerprint,
+            state: self.cluster.full_state(),
+        };
+        let store = self.store.as_mut().expect("store checked above");
+        let fingerprint = save_artifact(store.dir.checkpoint_path(step), &art)?;
+        store.log.append(&LogRecord::Checkpoint {
+            step: step as u64,
+            file: format!("step-{step}.ckpt"),
+            fingerprint,
+        })?;
+        Ok(())
     }
 
     /// Advance exactly one training step (recovering first under
@@ -134,7 +263,7 @@ impl<'rt> Session<'rt> {
                 param_mb: mem.param_mb(),
                 total_mb: mem.total_mb(),
             };
-            self.emit(&Event::RunStarted(info));
+            self.emit(&Event::RunStarted(info))?;
         }
         let recoveries_before = self.cluster.recoveries;
         let lost_before = self.cluster.lost_ranks.len();
@@ -174,7 +303,7 @@ impl<'rt> Session<'rt> {
                 mp: self.cluster.cfg.mp,
                 restore_step: self.cluster.last_checkpoint_step(),
             };
-            self.emit(&Event::Recovered(info));
+            self.emit(&Event::Recovered(info))?;
         }
         let (bytes_busiest_rank, bytes_total) = self.cluster.last_fabric_bytes;
         let report = StepReport {
@@ -187,7 +316,8 @@ impl<'rt> Session<'rt> {
             bytes_busiest_rank,
             bytes_total,
         };
-        self.emit(&Event::StepCompleted(report.clone()));
+        self.emit(&Event::StepCompleted(report.clone()))?;
+        self.maybe_persist_boundary()?;
         Ok(report)
     }
 
@@ -199,7 +329,7 @@ impl<'rt> Session<'rt> {
             self.step()?;
         }
         let report = self.report();
-        self.emit(&Event::RunCompleted(report.summary()));
+        self.emit(&Event::RunCompleted(report.summary()))?;
         Ok(report)
     }
 

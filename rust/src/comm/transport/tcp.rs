@@ -408,6 +408,19 @@ impl TcpTransport {
         self.inner.state.lock().unwrap().fired.clone()
     }
 
+    /// Preset the injected-fault fired flags (the TCP mirror of the
+    /// in-proc `Fabric::with_fired`): a resumed worker process marks the
+    /// faults its previous incarnation already consumed, keeping
+    /// injection at-most-once across a kill-resume. Length mismatches
+    /// are ignored (a resume against a different fault plan fails the
+    /// fingerprint check long before this).
+    pub fn preset_fired(&self, fired: &[bool]) {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.fired.len() == fired.len() {
+            st.fired.copy_from_slice(fired);
+        }
+    }
+
     /// Broadcast a clean-departure Goodbye to every reachable peer
     /// (write errors are ignored — the run is over).
     pub fn shutdown(&self) {

@@ -70,7 +70,7 @@ use super::group::GmpTopology;
 use super::program::{ExecCtx, StepProgram};
 use super::schedule::StepSchedule;
 use super::scheme::McastScheme;
-use super::worker::{init_full_params, Worker};
+use super::worker::{init_full_params, Worker, WorkerSnapshot};
 
 /// What the cluster does when a peer is lost mid-run (crash, or a
 /// fabric take timing out and presuming its sender dead).
@@ -195,6 +195,35 @@ impl Default for ClusterConfig {
             overlap: true,
         }
     }
+}
+
+/// Complete training state of a cluster incarnation at a step boundary
+/// — the payload of the durable checkpoint store ([`crate::store`]).
+///
+/// Two coordinate systems coexist deliberately: `workers` holds every
+/// rank's exact state (parameters *and* optimizer momentum) for
+/// bit-identical resume at the same topology, while `global` holds the
+/// 20-tensor global model that re-shards to any (n, mp) — the branch
+/// path, and the same form the elastic recovery restore point uses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterState {
+    /// Steps completed when the state was captured.
+    pub step: usize,
+    /// Worker count of this incarnation (shrinks under recovery).
+    pub n_workers: usize,
+    /// MP group size of this incarnation.
+    pub mp: usize,
+    /// Elastic recoveries performed so far.
+    pub recoveries: usize,
+    /// Ranks lost so far, in detection order.
+    pub lost_ranks: Vec<usize>,
+    /// Consumed fault-event flags (at-most-once injection survives the
+    /// round trip, so a resumed run cannot re-fire a spent fault).
+    pub fired: Vec<bool>,
+    /// The global model as named tensors (checkpoint order).
+    pub global: Vec<(String, HostTensor)>,
+    /// Per-rank exact state, rank order.
+    pub workers: Vec<WorkerSnapshot>,
 }
 
 /// The numeric-fidelity cluster.
@@ -343,6 +372,101 @@ impl<'rt> Cluster<'rt> {
         // averaging boundary restarts from it.
         cluster.ckpt = cluster.snapshot_global();
         Ok(cluster)
+    }
+
+    /// Rebuild a cluster from a captured [`ClusterState`] — the exact
+    /// kill-resume path. The state's own (n, mp) override the config's
+    /// (a run that shrank before the kill resumes shrunk); data
+    /// iterators are rebuilt and advanced `state.step` batches, exactly
+    /// like elastic recovery does, so the next step consumes the same
+    /// global batch indices the uninterrupted run would.
+    pub fn with_dataset_state(
+        rt: &'rt RuntimeClient,
+        cfg: ClusterConfig,
+        data: std::sync::Arc<dyn Dataset>,
+        state: ClusterState,
+    ) -> Result<Cluster<'rt>> {
+        let mut cfg = cfg;
+        cfg.n_workers = state.n_workers;
+        cfg.mp = state.mp;
+        if state.workers.len() != cfg.n_workers {
+            bail!(
+                "cluster state has {} worker snapshots for n_workers={}",
+                state.workers.len(),
+                cfg.n_workers
+            );
+        }
+        let (topo, transformed, schedule) = plan_topology(rt, &cfg, cfg.n_workers, cfg.mp)?;
+        let program = schedule.compile_program(
+            cfg.scheme,
+            cfg.segmented_mp1,
+            cfg.overlap && cfg.engine == ExecEngine::Threaded,
+        );
+        let batch = rt.manifest.batch;
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        for (rank, snap) in state.workers.into_iter().enumerate() {
+            if snap.rank != rank {
+                bail!("cluster state worker order broken: rank {} at position {rank}", snap.rank);
+            }
+            workers.push(Worker::from_snapshot(
+                snap,
+                batch,
+                schedule.boundary_width.max(1),
+                cfg.lr,
+                cfg.momentum,
+                cfg.clip_norm,
+            )?);
+        }
+        let iters = (0..cfg.n_workers)
+            .map(|rank| {
+                let mut it =
+                    BatchIter::new(data.clone(), batch, rank, cfg.n_workers, cfg.seed);
+                for _ in 0..state.step {
+                    it.next_batch();
+                }
+                it
+            })
+            .collect();
+        let fabric = Fabric::new(cfg.n_workers)
+            .with_timeout_ms(cfg.take_timeout_ms)
+            .with_faults(cfg.faults.clone())
+            .with_fired(state.fired);
+        Ok(Cluster {
+            rt,
+            cfg,
+            topo,
+            schedule,
+            program,
+            transformed,
+            workers,
+            iters,
+            fabric,
+            step_count: state.step,
+            batch,
+            prefetched: None,
+            data,
+            ckpt: state.global,
+            ckpt_step: state.step,
+            last_fabric_bytes: (0, 0),
+            recoveries: state.recoveries,
+            lost_ranks: state.lost_ranks,
+        })
+    }
+
+    /// Capture the complete training state (see [`ClusterState`]).
+    /// Meaningful at any step; the durable store calls it at averaging
+    /// boundaries, where replicas provably agree.
+    pub fn full_state(&self) -> ClusterState {
+        ClusterState {
+            step: self.step_count,
+            n_workers: self.cfg.n_workers,
+            mp: self.cfg.mp,
+            recoveries: self.recoveries,
+            lost_ranks: self.lost_ranks.clone(),
+            fired: self.fabric.fired_flags(),
+            global: self.snapshot_global(),
+            workers: self.workers.iter().map(Worker::snapshot).collect(),
+        }
     }
 
     /// Per-worker memory accounting (Fig. 7c).
@@ -651,8 +775,17 @@ impl<'rt> Cluster<'rt> {
     /// Restore a checkpoint into every worker (re-sharding the FC stack
     /// for this cluster's mp) and reset optimizer momentum.
     pub fn restore_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let loaded = crate::train::checkpoint::load(path)?;
+        self.restore_from_global(&loaded)
+    }
+
+    /// Restore from an in-memory global-model snapshot (named tensors
+    /// in checkpoint order — the shape [`Cluster::snapshot_global`]
+    /// produces and the durable store's branch path loads). Re-shards
+    /// for this cluster's (n, mp); optimizer momentum resets, as on any
+    /// restore.
+    pub fn restore_from_global(&mut self, loaded: &[(String, HostTensor)]) -> Result<()> {
         use crate::train::checkpoint;
-        let loaded = checkpoint::load(path)?;
         let names = checkpoint::model_names();
         if loaded.len() != names.len() {
             bail!("checkpoint has {} tensors, expected {}", loaded.len(), names.len());
@@ -662,7 +795,7 @@ impl<'rt> Cluster<'rt> {
                 bail!("checkpoint tensor order mismatch: {name} vs {expect}");
             }
         }
-        let tensors: Vec<HostTensor> = loaded.into_iter().map(|(_, t)| t).collect();
+        let tensors: Vec<HostTensor> = loaded.iter().map(|(_, t)| t.clone()).collect();
         let conv = &tensors[..14];
         let fc = &tensors[14..20];
         for rank in 0..self.cfg.n_workers {

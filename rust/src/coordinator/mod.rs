@@ -30,7 +30,7 @@ pub mod scheme;
 pub mod shard;
 pub mod worker;
 
-pub use cluster::{calibrated_report, Cluster, ClusterConfig, RecoveryPolicy};
+pub use cluster::{calibrated_report, Cluster, ClusterConfig, ClusterState, RecoveryPolicy};
 pub use engine::ExecEngine;
 pub use group::GmpTopology;
 pub use modulo::ModuloPlan;

@@ -48,15 +48,20 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::api::events::{RecoveryInfo, RunInfo, RunSummary, StepReport};
 use crate::comm::fabric::Tag;
 use crate::comm::fault::WorkerCrashed;
 use crate::comm::transport::tcp::{SyncOutcome, BARRIER_END, BARRIER_MID};
 use crate::comm::transport::{TcpPeer, TcpTransport, Transport};
 use crate::data::{Batch, BatchIter};
 use crate::runtime::{HostTensor, RuntimeClient};
-use crate::train::checkpoint;
+use crate::store::{
+    ckpt::fnv1a, load_artifact, replay, save_artifact, CheckpointArtifact, LogRecord, LogWriter,
+    RunDir, StoreError,
+};
+use crate::train::{checkpoint, MemoryReport};
 
-use super::cluster::{plan_topology, ClusterConfig, RecoveryPolicy};
+use super::cluster::{plan_topology, ClusterConfig, ClusterState, RecoveryPolicy};
 use super::group::GmpTopology;
 use super::program::{run_rank_span, ExecCtx, RankHooks, RankState, StepProgram};
 use super::schedule::StepSchedule;
@@ -91,6 +96,24 @@ pub struct ProcConfig {
     pub connect_timeout_ms: u64,
     /// Print a progress line every this many steps (0 = quiet).
     pub log_every: usize,
+    /// Durable run directory (`--run-dir`, created by the launcher):
+    /// this process writes its PID file, a per-opid checkpoint artifact
+    /// at every averaging boundary, and — opid 0 only — the run's
+    /// `events.log`. `None` = no persistence.
+    pub run_dir: Option<std::path::PathBuf>,
+    /// Resume from the step-`resume_step` per-opid artifacts instead of
+    /// the seed model (0 = fresh start). Requires `run_dir`.
+    pub resume_step: usize,
+}
+
+/// This process's slice of the durable store for a `--run-dir` launch.
+struct ProcStore {
+    dir: RunDir,
+    /// The run fingerprint stamped into every artifact.
+    fingerprint: u64,
+    /// The run's event log — leader (opid 0) only; a launch that loses
+    /// its leader keeps training but stops extending the log.
+    log: Option<LogWriter>,
 }
 
 /// How a worker process's run ended.
@@ -135,10 +158,15 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
             cfg.n_workers
         );
     }
+    // Open the durable store (pid file, leader log) *before* the mesh
+    // comes up: a kill-resume test must be able to find this process's
+    // pid even if a peer never arrives and bring-up blocks.
+    let fingerprint = run_fingerprint(cfg, pc.steps);
+    let mut pstore = open_store(pc, fingerprint)?;
     let transport = TcpTransport::connect(
         pc.opid,
         &pc.peers,
-        run_fingerprint(cfg, pc.steps),
+        fingerprint,
         cfg.take_timeout_ms,
         Duration::from_millis(pc.connect_timeout_ms.max(1)),
         cfg.faults.clone(),
@@ -151,23 +179,11 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
     let mut n = cfg.n_workers;
     let mut mp = cfg.mp;
     let mut my_rank = pc.opid;
-    let (mut topo, _transformed, mut schedule) = plan_topology(&rt, cfg, n, mp)?;
+    let (mut topo, transformed, mut schedule) = plan_topology(&rt, cfg, n, mp)?;
     let mut program = schedule.compile_program(cfg.scheme, cfg.segmented_mp1, cfg.overlap);
     let batch = rt.manifest.batch;
 
     let (conv, fc) = init_full_params(cfg.seed);
-    let mut worker = Worker::new(
-        my_rank,
-        &topo,
-        &conv,
-        &fc,
-        batch,
-        schedule.boundary_width.max(1),
-        cfg.lr,
-        cfg.momentum,
-        cfg.clip_norm,
-    )?;
-    let mut iter = BatchIter::new(data.clone(), batch, my_rank, n, cfg.seed);
 
     // The latest global checkpoint (conv 14 + full FC 6, the
     // `snapshot_global` tensor order). The initial model is a valid
@@ -176,6 +192,81 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
 
     let mut step_count = 0usize;
     let mut recoveries = 0usize;
+    let mut worker = if pc.resume_step > 0 {
+        // Kill-resume: rebuild this rank bit-exactly from its own
+        // step-K artifact. Only unshrunk runs resume — after an elastic
+        // shrink the opid↔rank map of the dead incarnation is gone.
+        let store = pstore.as_ref().context("--resume-step requires --run-dir")?;
+        let art = load_artifact(store.dir.worker_checkpoint_path(pc.resume_step, pc.opid))
+            .map_err(anyhow::Error::from)
+            .with_context(|| {
+                format!("loading the step-{} artifact for opid {}", pc.resume_step, pc.opid)
+            })?;
+        if art.manifest_fingerprint != fingerprint {
+            return Err(StoreError::FingerprintMismatch {
+                got: fingerprint,
+                want: art.manifest_fingerprint,
+            }
+            .into());
+        }
+        if art.state.n_workers != cfg.n_workers || art.state.mp != cfg.mp {
+            bail!(
+                "the step-{} artifact captured a shrunk incarnation ({}×mp{}, launch is {}×mp{}) — \
+                 multi-process resume supports unshrunk runs only",
+                pc.resume_step,
+                art.state.n_workers,
+                art.state.mp,
+                cfg.n_workers,
+                cfg.mp
+            );
+        }
+        if art.state.global.len() != 20 {
+            bail!("resume artifact global model has {} tensors (expected 20)", art.state.global.len());
+        }
+        let snap = art
+            .state
+            .workers
+            .into_iter()
+            .next()
+            .context("resume artifact carries no worker section")?;
+        if snap.rank != pc.opid {
+            bail!(
+                "resume artifact holds rank {} state, this process is opid {}",
+                snap.rank,
+                pc.opid
+            );
+        }
+        // The previous incarnation already consumed these injected
+        // faults: keep injection at-most-once across the kill.
+        transport.preset_fired(&art.state.fired);
+        recoveries = art.state.recoveries;
+        step_count = pc.resume_step;
+        ckpt = art.state.global.into_iter().map(|(_, t)| t).collect();
+        Worker::from_snapshot(
+            snap,
+            batch,
+            schedule.boundary_width.max(1),
+            cfg.lr,
+            cfg.momentum,
+            cfg.clip_norm,
+        )?
+    } else {
+        Worker::new(
+            my_rank,
+            &topo,
+            &conv,
+            &fc,
+            batch,
+            schedule.boundary_width.max(1),
+            cfg.lr,
+            cfg.momentum,
+            cfg.clip_norm,
+        )?
+    };
+    let mut iter = BatchIter::new(data.clone(), batch, my_rank, n, cfg.seed);
+    for _ in 0..step_count {
+        iter.next_batch();
+    }
     let mut losses: Vec<(usize, f64)> = Vec::with_capacity(pc.steps);
     // Host wall-clock per completed step (the per-process event
     // stream): dumped as `stepsecs` meta lines so the throughput bench
@@ -188,6 +279,30 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
     // assembly leaves the critical path. One batch is consumed per step
     // either way, so the example sequence is mode-invariant.
     let mut pending: Option<Batch> = None;
+    // The step `ckpt` currently restores to (a resume starts from its
+    // artifact's boundary; a fresh run from the step-0 seed model).
+    let mut ckpt_step = step_count;
+
+    if let Some(log) = pstore.as_mut().and_then(|s| s.log.as_mut()) {
+        // The leader's log mirrors the in-proc session's stream: a
+        // RunStarted header first (after a `Resumed` marker on resume —
+        // same lineage order the in-proc rehydration keeps).
+        let mem = MemoryReport::of_scheme(&transformed, batch, cfg.scheme);
+        log.append(&LogRecord::RunStarted(RunInfo {
+            n_workers: cfg.n_workers,
+            mp: cfg.mp,
+            n_groups: cfg.n_workers / cfg.mp.max(1),
+            batch,
+            steps: pc.steps,
+            lr: cfg.lr,
+            avg_period: cfg.avg_period,
+            engine: cfg.engine,
+            collectives: cfg.collectives,
+            overlap: cfg.overlap,
+            param_mb: mem.param_mb(),
+            total_mb: mem.total_mb(),
+        }))?;
+    }
 
     while step_count < pc.steps {
         let step_no = step_count + 1;
@@ -215,11 +330,40 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
         pending = next;
         match res {
             Ok(loss) => {
-                bytes_sent += transport.bytes_from(my_rank);
+                let step_bytes = transport.bytes_from(my_rank);
+                bytes_sent += step_bytes;
                 transport.reset_counters();
                 step_count += 1;
                 losses.push((step_count, loss));
-                step_secs.push((step_count, step_timer.elapsed().as_secs_f64()));
+                let wall = step_timer.elapsed().as_secs_f64();
+                step_secs.push((step_count, wall));
+                if n > 1 && step_count % cfg.avg_period == 0 {
+                    // try_step refreshed `ckpt` over the control plane.
+                    ckpt_step = step_count;
+                }
+                if let Some(store) = pstore.as_mut() {
+                    if let Some(log) = &mut store.log {
+                        // The wire path measures its own sends only (no
+                        // simulated clock, no cluster-wide counter), so
+                        // the modeled comm fields are zero and the byte
+                        // fields are the leader's view.
+                        log.append(&LogRecord::Step(StepReport {
+                            step: step_count,
+                            loss,
+                            compute_secs: worker.compute_secs,
+                            mp_comm_secs: 0.0,
+                            dp_comm_secs: 0.0,
+                            wall_secs: wall,
+                            bytes_busiest_rank: step_bytes,
+                            bytes_total: step_bytes,
+                        }))?;
+                    }
+                    if step_count % cfg.avg_period == 0 {
+                        persist_boundary(
+                            store, pc, &transport, step_count, n, mp, recoveries, &worker, &ckpt,
+                        )?;
+                    }
+                }
                 if pc.log_every > 0 && (step_count % pc.log_every == 0 || step_count == pc.steps)
                 {
                     eprintln!("[rank {my_rank}/{n} opid {}] step {step_count:>4}  loss {loss:.4}", pc.opid);
@@ -292,12 +436,44 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
                             "[opid {}] recovered: {n} survivors, mp={mp}, now rank {my_rank}",
                             pc.opid
                         );
+                        // Log the transition *before* the retried step's
+                        // record lands — the same ordering contract the
+                        // in-proc event stream keeps. `step` names the
+                        // step whose retry runs next.
+                        if let Some(log) = pstore.as_mut().and_then(|s| s.log.as_mut()) {
+                            log.append(&LogRecord::Recovered(RecoveryInfo {
+                                step: step_count + 1,
+                                lost_ranks: dead.clone(),
+                                n_workers: n,
+                                mp,
+                                restore_step: ckpt_step,
+                            }))?;
+                        }
                     }
                 }
             }
         }
     }
 
+    if let Some(store) = pstore.as_mut() {
+        if let Some(log) = &mut store.log {
+            // Throughput and comm fractions live in the per-step
+            // records (and the meta `stepsecs` lines); the roll-up here
+            // carries the shape and lineage facts.
+            log.append(&LogRecord::RunCompleted(RunSummary {
+                steps: step_count,
+                images_per_sec: 0.0,
+                comm_fraction: 0.0,
+                recoveries,
+                lost_ranks: Vec::new(),
+                n_workers: n,
+                mp,
+                last_checkpoint_step: ckpt_step,
+            }))?;
+        }
+        // A stale pid file means "killable": remove it on clean exit.
+        let _ = std::fs::remove_file(store.dir.pid_path(pc.opid));
+    }
     if let Some(dir) = &pc.out_dir {
         write_outputs(
             dir, pc.opid, my_rank, n, mp, recoveries, &losses, &step_secs, bytes_sent, &worker,
@@ -305,6 +481,91 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
     }
     transport.shutdown();
     Ok(RunOutcome::Completed)
+}
+
+/// Open this process's slice of the durable store: write the pid file,
+/// and (leader only) open the event log — truncated past the resume
+/// point with a `Resumed` marker on resume, fresh otherwise.
+fn open_store(pc: &ProcConfig, fingerprint: u64) -> Result<Option<ProcStore>> {
+    let Some(root) = &pc.run_dir else { return Ok(None) };
+    let dir = RunDir::open(root)?;
+    std::fs::write(dir.pid_path(pc.opid), format!("{}\n", std::process::id()))
+        .with_context(|| format!("writing pid file for opid {}", pc.opid))?;
+    let log = if pc.opid == 0 { Some(open_leader_log(&dir, pc.resume_step)?) } else { None };
+    Ok(Some(ProcStore { dir, fingerprint, log }))
+}
+
+/// Open the leader's event log for a (possibly resumed) launch: replay
+/// the longest valid prefix, cut everything past the resume step (the
+/// torn tail of the killed incarnation included), restamp the resume
+/// boundary's `Checkpoint` record if the cut dropped it, and append the
+/// `Resumed` marker — the multi-process mirror of the in-proc
+/// `Session` rehydration.
+fn open_leader_log(dir: &RunDir, resume_step: usize) -> Result<LogWriter> {
+    let path = dir.events_path();
+    if resume_step == 0 || !path.is_file() {
+        return Ok(LogWriter::create(&path)?);
+    }
+    let rp = replay(&path)?;
+    let step = resume_step as u64;
+    let logged = rp
+        .records_until_step(step)
+        .iter()
+        .any(|r| matches!(r, LogRecord::Checkpoint { step: s, .. } if *s == step));
+    let mut log = LogWriter::open_truncated(&path, rp.cut_for_step(step))?;
+    if !logged {
+        let file = format!("step-{resume_step}.opid-0.ckpt");
+        if let Ok(bytes) = std::fs::read(dir.checkpoints_dir().join(&file)) {
+            log.append(&LogRecord::Checkpoint { step, file, fingerprint: fnv1a(&bytes) })?;
+        }
+    }
+    log.append(&LogRecord::Resumed { step })?;
+    Ok(log)
+}
+
+/// Persist this process's averaging-boundary restore point: a per-opid
+/// checkpoint artifact (this rank's exact worker state + the refreshed
+/// global model), plus — leader only — the log's `Checkpoint` record.
+/// A launch is resumable at step K once **every** opid's step-K
+/// artifact exists (`RunDir::complete_worker_checkpoint_steps`).
+#[allow(clippy::too_many_arguments)]
+fn persist_boundary(
+    store: &mut ProcStore,
+    pc: &ProcConfig,
+    transport: &TcpTransport,
+    step: usize,
+    n: usize,
+    mp: usize,
+    recoveries: usize,
+    worker: &Worker,
+    ckpt: &[HostTensor],
+) -> Result<()> {
+    let art = CheckpointArtifact {
+        step,
+        manifest_fingerprint: store.fingerprint,
+        state: ClusterState {
+            step,
+            n_workers: n,
+            mp,
+            recoveries,
+            lost_ranks: Vec::new(),
+            fired: transport.fired_flags(),
+            global: checkpoint::model_names()
+                .into_iter()
+                .zip(ckpt.iter().cloned())
+                .collect(),
+            workers: vec![worker.snapshot()],
+        },
+    };
+    let fp = save_artifact(store.dir.worker_checkpoint_path(step, pc.opid), &art)?;
+    if let Some(log) = &mut store.log {
+        log.append(&LogRecord::Checkpoint {
+            step: step as u64,
+            file: format!("step-{step}.opid-{}.ckpt", pc.opid),
+            fingerprint: fp,
+        })?;
+    }
+    Ok(())
 }
 
 /// One step attempt on the current incarnation (the per-process mirror

@@ -7,7 +7,7 @@
 //! shard is the corresponding column slice of one shared He-initialized
 //! full matrix.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::model::vgg;
 use crate::runtime::HostTensor;
@@ -72,6 +72,25 @@ pub fn shard_fc(full: &[HostTensor], k: usize, offset: usize) -> Vec<HostTensor>
     out
 }
 
+/// A worker's complete training state in plain owned form — the unit
+/// the durable checkpoint store ([`crate::store`]) serializes. Carries
+/// optimizer momentum alongside the parameters: a resumed run is
+/// bit-identical to the uninterrupted one only if the velocity buffers
+/// survive the round trip.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnapshot {
+    /// Global rank in the incarnation the snapshot was taken from.
+    pub rank: usize,
+    /// 14 conv tensors (w,b ×7), full replica.
+    pub conv_params: Vec<HostTensor>,
+    /// 6 FC tensors: FC0/FC1 shards + replicated FC2.
+    pub fc_params: Vec<HostTensor>,
+    /// Conv optimizer velocity (empty = momentum not yet allocated).
+    pub conv_velocity: Vec<Vec<f32>>,
+    /// FC optimizer velocity (empty = momentum not yet allocated).
+    pub fc_velocity: Vec<Vec<f32>>,
+}
+
 /// One simulated worker.
 pub struct Worker {
     /// Global rank.
@@ -118,6 +137,76 @@ impl Worker {
             fc_params,
             conv_opt: Sgd::new(lr, momentum, 0.0).with_clip(clip_norm),
             fc_opt: Sgd::new(lr, momentum, 0.0).with_clip(clip_norm),
+            fc_grad_acc,
+            g_act: HostTensor::zeros(vec![batch, boundary]),
+            compute_secs: 0.0,
+            loss_acc: 0.0,
+        })
+    }
+
+    /// Capture this worker's full training state (parameters +
+    /// optimizer momentum) for the durable checkpoint store.
+    pub fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            rank: self.rank,
+            conv_params: self.conv_params.clone(),
+            fc_params: self.fc_params.clone(),
+            conv_velocity: self.conv_opt.velocity().to_vec(),
+            fc_velocity: self.fc_opt.velocity().to_vec(),
+        }
+    }
+
+    /// Rebuild a worker from a snapshot taken at the *same* (n, mp)
+    /// topology — the exact-resume path. Parameter tensor counts and
+    /// velocity lengths are validated; shapes are trusted to the
+    /// artifact's CRC + config fingerprint and re-asserted by the
+    /// optimizer on the next step.
+    pub fn from_snapshot(
+        snap: WorkerSnapshot,
+        batch: usize,
+        boundary: usize,
+        lr: f32,
+        momentum: f32,
+        clip_norm: f32,
+    ) -> Result<Worker> {
+        if snap.conv_params.len() != 14 || snap.fc_params.len() != 6 {
+            bail!(
+                "worker snapshot has {} conv + {} fc tensors (expected 14 + 6)",
+                snap.conv_params.len(),
+                snap.fc_params.len()
+            );
+        }
+        for (vel, params, which) in [
+            (&snap.conv_velocity, &snap.conv_params, "conv"),
+            (&snap.fc_velocity, &snap.fc_params, "fc"),
+        ] {
+            if vel.is_empty() {
+                continue;
+            }
+            if vel.len() != params.len() {
+                bail!("{which} velocity has {} buffers for {} params", vel.len(), params.len());
+            }
+            for (v, p) in vel.iter().zip(params.iter()) {
+                if v.len() != p.numel() {
+                    bail!("{which} velocity length {} vs param numel {}", v.len(), p.numel());
+                }
+            }
+        }
+        let fc_grad_acc = snap
+            .fc_params
+            .iter()
+            .map(|p| HostTensor::zeros(p.shape.clone()))
+            .collect();
+        let mut conv_opt = Sgd::new(lr, momentum, 0.0).with_clip(clip_norm);
+        conv_opt.set_velocity(snap.conv_velocity);
+        let mut fc_opt = Sgd::new(lr, momentum, 0.0).with_clip(clip_norm);
+        fc_opt.set_velocity(snap.fc_velocity);
+        Ok(Worker {
+            rank: snap.rank,
+            conv_params: snap.conv_params,
+            fc_params: snap.fc_params,
+            conv_opt,
+            fc_opt,
             fc_grad_acc,
             g_act: HostTensor::zeros(vec![batch, boundary]),
             compute_secs: 0.0,

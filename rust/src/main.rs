@@ -7,8 +7,10 @@
 //!                     [--recovery fail-fast|shrink] [--take-timeout-ms 120000]
 //!                     [--crash R@S] [--straggle R@S:MS] [--fault-seed N [--fault-count 2]]
 //!                     [--manifest run.json] [--emit-manifest run.json]
+//!                     [--run-dir DIR | --resume DIR]   # durable / resumed run
 //! splitbrain launch   --workers 4 --mp 2 --steps 100   # multi-process TCP training
 //!                     [--out-dir DIR] [--verify-replicas] + the train flags above
+//!                     [--run-dir DIR [--resume]]       # durable / kill-resumable launch
 //! splitbrain worker   --rank R --peers a0,a1,... --manifest run.json  # one rank
 //! splitbrain sweep    --experiment table2|fig7a|fig7b|fig7b-algos|fig7c [--numeric]
 //! splitbrain inspect  [--mp 2]          # Table 1 + the Fig. 3 transform
@@ -183,9 +185,26 @@ fn fault_plan(args: &Args, n_workers: usize, steps: usize) -> Result<splitbrain:
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    args.check_known(&known_flags(&["emit-manifest"]))?;
+    args.check_known(&known_flags(&["emit-manifest", "run-dir", "resume"]))?;
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
-    let plan = builder_from_args(args)?.validate(&rt)?;
+    // `--run-dir DIR` persists the run (event log + checkpoint
+    // artifacts); `--resume DIR` rehydrates a killed one from its own
+    // persisted manifest — config flags still apply on top, but any
+    // that change the run are rejected by the fingerprint check.
+    let resume = args.str_or("resume", "");
+    let mut builder = match resume {
+        "" => builder_from_args(args)?,
+        dir => {
+            if args.has("manifest") || args.has("run-dir") {
+                bail!("--resume loads the run dir's own manifest; drop --manifest/--run-dir");
+            }
+            builder_with_base(args, SessionBuilder::resume_from(dir)?)?
+        }
+    };
+    if args.has("run-dir") {
+        builder = builder.run_dir(args.str_or("run-dir", ""));
+    }
+    let plan = builder.validate(&rt)?;
     match args.str_or("emit-manifest", "") {
         "" => {}
         path => {
@@ -213,7 +232,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_worker(args: &Args) -> Result<()> {
     use splitbrain::comm::transport::TcpPeer;
     use splitbrain::coordinator::procdriver::{self, ProcConfig, RunOutcome};
-    args.check_known(&known_flags(&["rank", "peers", "out-dir", "connect-timeout-ms"]))?;
+    args.check_known(&known_flags(&[
+        "rank", "peers", "out-dir", "connect-timeout-ms", "run-dir", "resume-step",
+    ]))?;
     if !args.has("rank") {
         bail!("--rank is required for the worker role");
     }
@@ -244,6 +265,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
         "" => None,
         d => Some(std::path::PathBuf::from(d)),
     };
+    let run_dir = match args.str_or("run-dir", "") {
+        "" => None,
+        d => Some(std::path::PathBuf::from(d)),
+    };
+    let resume_step = args.usize_or("resume-step", 0)?;
+    if resume_step > 0 && run_dir.is_none() {
+        bail!("--resume-step requires --run-dir");
+    }
     let pc = ProcConfig {
         cluster: cfg,
         steps,
@@ -253,6 +282,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         out_dir,
         connect_timeout_ms: args.u64_or("connect-timeout-ms", 30_000)?,
         log_every: args.usize_or("log-every", DEFAULT_LOG_EVERY)?,
+        run_dir,
+        resume_step,
     };
     match procdriver::run_worker(&pc)? {
         RunOutcome::Completed => Ok(()),
@@ -269,11 +300,29 @@ fn cmd_worker(args: &Args) -> Result<()> {
 /// when the resolved fault plan schedules a crash) and optionally
 /// verify end-of-run replica parity across the surviving processes.
 fn cmd_launch(args: &Args) -> Result<()> {
-    args.check_known(&known_flags(&["out-dir", "verify-replicas", "connect-timeout-ms"]))?;
+    use splitbrain::store::RunDir;
+    args.check_known(&known_flags(&[
+        "out-dir", "verify-replicas", "connect-timeout-ms", "run-dir", "resume",
+    ]))?;
+    let run_dir = match args.str_or("run-dir", "") {
+        "" => None,
+        d => Some(std::path::PathBuf::from(d)),
+    };
+    let resume = args.bool_or("resume", false)?;
+    if resume && run_dir.is_none() {
+        bail!("--resume requires --run-dir");
+    }
     // The launcher's historical default is 4 workers (not the
     // builder's 2); seeding the base here keeps `--fault-seed`
-    // scenarios scoped to the real run shape.
-    let builder = builder_with_base(args, SessionBuilder::new().workers(4))?;
+    // scenarios scoped to the real run shape. A resumed launch takes
+    // its whole configuration from the run dir's persisted manifest —
+    // the workers' artifact fingerprints would reject anything else.
+    let builder = if resume {
+        let dir = RunDir::open(run_dir.as_ref().expect("checked above"))?;
+        SessionBuilder::from_manifest(&dir.manifest_json()?)?
+    } else {
+        builder_with_base(args, SessionBuilder::new().workers(4))?
+    };
     let steps = builder.current_steps();
     let cfg = builder.cluster_config()?;
     let n = cfg.n_workers;
@@ -296,18 +345,53 @@ fn cmd_launch(args: &Args) -> Result<()> {
         }
     }
     let peers_arg = addrs.join(",");
-    let out_dir = match args.str_or("out-dir", "") {
-        "" => std::env::temp_dir().join(format!("splitbrain-launch-{}", std::process::id())),
-        d => std::path::PathBuf::from(d),
+    // A durable launch anchors its outputs in the run dir unless told
+    // otherwise, so the resumable state and the end-of-run state travel
+    // together.
+    let out_dir = match (args.str_or("out-dir", ""), &run_dir) {
+        ("", Some(rd)) => rd.clone(),
+        ("", None) => {
+            std::env::temp_dir().join(format!("splitbrain-launch-{}", std::process::id()))
+        }
+        (d, _) => std::path::PathBuf::from(d),
     };
     std::fs::create_dir_all(&out_dir)
         .with_context(|| format!("creating out dir {}", out_dir.display()))?;
 
-    // One manifest for every worker: the single source of the run.
+    // One manifest for every worker: the single source of the run. A
+    // durable launch persists it as the run dir's `run.json` (the
+    // resume path re-reads exactly that file, so the fingerprint the
+    // workers handshake on cannot drift between incarnations).
     let manifest = RunManifest::from_config(&cfg, steps);
-    let manifest_path = out_dir.join("run.json");
-    std::fs::write(&manifest_path, manifest.to_json())
-        .with_context(|| format!("writing {}", manifest_path.display()))?;
+    let manifest_path = match &run_dir {
+        Some(rd) => {
+            if !resume {
+                RunDir::create(rd, &manifest.to_json())?;
+            }
+            rd.join("run.json")
+        }
+        None => {
+            let p = out_dir.join("run.json");
+            std::fs::write(&p, manifest.to_json())
+                .with_context(|| format!("writing {}", p.display()))?;
+            p
+        }
+    };
+
+    // A resumed launch restarts from the newest step where *every*
+    // opid's checkpoint artifact landed (0 = from scratch: the run was
+    // killed before its first averaging boundary).
+    let resume_step = match (&run_dir, resume) {
+        (Some(rd), true) => RunDir::open(rd)?
+            .complete_worker_checkpoint_steps(n)
+            .into_iter()
+            .max()
+            .unwrap_or(0),
+        _ => 0,
+    };
+    if resume {
+        println!("resuming from step {resume_step} (newest complete checkpoint set)");
+    }
 
     let exe = std::env::current_exe().context("locating the splitbrain binary")?;
     // Host-level flags forwarded verbatim (everything run-semantic
@@ -328,6 +412,12 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .arg(&manifest_path)
             .arg("--out-dir")
             .arg(&out_dir);
+        if let Some(rd) = &run_dir {
+            cmd.arg("--run-dir").arg(rd);
+            if resume_step > 0 {
+                cmd.arg("--resume-step").arg(resume_step.to_string());
+            }
+        }
         for &key in FORWARD_HOST {
             if args.has(key) {
                 cmd.arg(format!("--{key}")).arg(args.str_or(key, ""));

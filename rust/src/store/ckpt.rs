@@ -1,0 +1,375 @@
+//! Fingerprinted checkpoint artifacts: one file = the complete
+//! training state at an averaging boundary.
+//!
+//! ```text
+//! magic   "SBCKA1\n" + 0
+//! u16     version (1)
+//! u64     step
+//! u64     manifest fingerprint (FNV-1a of run.json — config identity)
+//! u64     n_workers, u64 mp, u64 recoveries
+//! u32 n + u64 lost_ranks[n]
+//! u32 n + u8  fired[n]               (consumed fault flags)
+//! u32 len + SBCKPT1 doc              (global model, 20 named tensors)
+//! u32 k × worker section             (k = n_workers for whole-cluster
+//!                                     artifacts; k = 1 for the launch
+//!                                     engine's per-process artifacts):
+//!   u64 rank
+//!   u32 len + SBCKPT1 doc            (14 conv tensors)
+//!   u32 len + SBCKPT1 doc            (6 fc tensors)
+//!   u32 n + (u64 len + f32[len])[n]  (conv optimizer velocity)
+//!   u32 n + (u64 len + f32[len])[n]  (fc optimizer velocity)
+//! u32     crc32 over every preceding byte
+//! ```
+//!
+//! The artifact carries **both** coordinate systems deliberately: the
+//! per-worker sections (with optimizer momentum) make exact resume
+//! bit-identical; the global section re-shards to any topology and is
+//! what branching clones. Writes are atomic (tmp + rename + fsync), so
+//! a kill mid-write leaves the previous boundary's artifact intact.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::comm::transport::wire::crc32;
+use crate::coordinator::cluster::ClusterState;
+use crate::coordinator::worker::WorkerSnapshot;
+use crate::runtime::HostTensor;
+use crate::train::checkpoint;
+
+use super::StoreError;
+
+const MAGIC: &[u8; 8] = b"SBCKA1\n\0";
+const VERSION: u16 = 1;
+/// Bound on any length-prefixed section, checked before allocation.
+const MAX_SECTION: u32 = 1 << 30;
+
+/// FNV-1a over bytes — the same offset/prime as
+/// [`RunManifest::fingerprint`](crate::api::RunManifest::fingerprint),
+/// applied to artifact bytes so the event log can name the exact
+/// checkpoint contents it witnessed.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_01b3);
+    }
+    h
+}
+
+/// A decoded checkpoint artifact: the cluster state plus the config
+/// identity it belongs to.
+#[derive(Debug, Clone)]
+pub struct CheckpointArtifact {
+    /// Averaging-boundary step the state captures.
+    pub step: usize,
+    /// FNV-1a fingerprint of the owning run's canonical manifest.
+    pub manifest_fingerprint: u64,
+    /// The complete training state.
+    pub state: ClusterState,
+}
+
+fn enc_doc(out: &mut Vec<u8>, tensors: &[(String, HostTensor)]) {
+    let doc = checkpoint::encode_named(tensors);
+    out.extend_from_slice(&(doc.len() as u32).to_le_bytes());
+    out.extend_from_slice(&doc);
+}
+
+fn enc_vel(out: &mut Vec<u8>, vel: &[Vec<f32>]) {
+    out.extend_from_slice(&(vel.len() as u32).to_le_bytes());
+    for v in vel {
+        out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Encode an artifact to its on-disk byte form (CRC trailer included).
+pub fn encode_artifact(art: &CheckpointArtifact) -> Vec<u8> {
+    let s = &art.state;
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(art.step as u64).to_le_bytes());
+    out.extend_from_slice(&art.manifest_fingerprint.to_le_bytes());
+    out.extend_from_slice(&(s.n_workers as u64).to_le_bytes());
+    out.extend_from_slice(&(s.mp as u64).to_le_bytes());
+    out.extend_from_slice(&(s.recoveries as u64).to_le_bytes());
+    out.extend_from_slice(&(s.lost_ranks.len() as u32).to_le_bytes());
+    for &r in &s.lost_ranks {
+        out.extend_from_slice(&(r as u64).to_le_bytes());
+    }
+    out.extend_from_slice(&(s.fired.len() as u32).to_le_bytes());
+    for &f in &s.fired {
+        out.push(f as u8);
+    }
+    enc_doc(&mut out, &s.global);
+    out.extend_from_slice(&(s.workers.len() as u32).to_le_bytes());
+    for w in &s.workers {
+        out.extend_from_slice(&(w.rank as u64).to_le_bytes());
+        let conv: Vec<(String, HostTensor)> = w
+            .conv_params
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (format!("conv{i}"), t.clone()))
+            .collect();
+        enc_doc(&mut out, &conv);
+        let fc: Vec<(String, HostTensor)> = w
+            .fc_params
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (format!("fc{i}"), t.clone()))
+            .collect();
+        enc_doc(&mut out, &fc);
+        enc_vel(&mut out, &w.conv_velocity);
+        enc_vel(&mut out, &w.fc_velocity);
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        if self.buf.len() - self.pos < n {
+            return Err(StoreError::Truncated { needed: n, got: self.buf.len() - self.pos });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16, StoreError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn section(&mut self) -> Result<&'a [u8], StoreError> {
+        let len = self.u32()?;
+        if len > MAX_SECTION {
+            return Err(StoreError::Oversized { len, max: MAX_SECTION });
+        }
+        self.take(len as usize)
+    }
+    fn doc(&mut self) -> Result<Vec<(String, HostTensor)>, StoreError> {
+        let bytes = self.section()?;
+        checkpoint::decode(bytes).map_err(|e| StoreError::BadPayload(format!("{e:#}")))
+    }
+    fn vel(&mut self) -> Result<Vec<Vec<f32>>, StoreError> {
+        let n = self.u32()? as usize;
+        if n > 64 {
+            return Err(StoreError::BadPayload(format!("{n} velocity buffers implausible")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = self.u64()? as usize;
+            if len > (MAX_SECTION as usize) / 4 {
+                return Err(StoreError::BadPayload(format!("velocity length {len} implausible")));
+            }
+            let bytes = self.take(len * 4)?;
+            out.push(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Decode an artifact from its full file bytes (verifies magic,
+/// version, CRC and structure; every failure is a typed error).
+pub fn decode_artifact(bytes: &[u8]) -> Result<CheckpointArtifact, StoreError> {
+    if bytes.len() < MAGIC.len() + 2 + 4 {
+        return Err(StoreError::Truncated { needed: MAGIC.len() + 6, got: bytes.len() });
+    }
+    if &bytes[..8] != MAGIC {
+        return Err(StoreError::BadMagic(u32::from_le_bytes(bytes[..4].try_into().unwrap())));
+    }
+    let carried = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let computed = crc32(&bytes[..bytes.len() - 4]);
+    if carried != computed {
+        return Err(StoreError::BadCrc { computed, carried });
+    }
+    let mut d = Dec { buf: &bytes[..bytes.len() - 4], pos: 8 };
+    let version = d.u16()?;
+    if version != VERSION {
+        return Err(StoreError::VersionMismatch { got: version, want: VERSION });
+    }
+    let step = d.u64()? as usize;
+    let manifest_fingerprint = d.u64()?;
+    let n_workers = d.u64()? as usize;
+    let mp = d.u64()? as usize;
+    let recoveries = d.u64()? as usize;
+    let n_lost = d.u32()? as usize;
+    if n_lost > 4096 {
+        return Err(StoreError::BadPayload(format!("{n_lost} lost ranks implausible")));
+    }
+    let mut lost_ranks = Vec::with_capacity(n_lost);
+    for _ in 0..n_lost {
+        lost_ranks.push(d.u64()? as usize);
+    }
+    let n_fired = d.u32()? as usize;
+    if n_fired > 1 << 20 {
+        return Err(StoreError::BadPayload(format!("{n_fired} fault flags implausible")));
+    }
+    let fired = d.take(n_fired)?.iter().map(|&b| b != 0).collect();
+    let global = d.doc()?;
+    let n_snaps = d.u32()? as usize;
+    // Whole-cluster artifacts carry n_workers sections, the launch
+    // engine's per-process artifacts exactly one; each loader validates
+    // the count it needs, the codec only bounds it.
+    if n_snaps > 4096 {
+        return Err(StoreError::BadPayload(format!("{n_snaps} worker sections implausible")));
+    }
+    let mut workers = Vec::with_capacity(n_snaps);
+    for _ in 0..n_snaps {
+        let rank = d.u64()? as usize;
+        let conv_params = d.doc()?.into_iter().map(|(_, t)| t).collect();
+        let fc_params = d.doc()?.into_iter().map(|(_, t)| t).collect();
+        let conv_velocity = d.vel()?;
+        let fc_velocity = d.vel()?;
+        workers.push(WorkerSnapshot { rank, conv_params, fc_params, conv_velocity, fc_velocity });
+    }
+    if d.pos != d.buf.len() {
+        return Err(StoreError::BadPayload(format!(
+            "{} trailing bytes after worker sections",
+            d.buf.len() - d.pos
+        )));
+    }
+    Ok(CheckpointArtifact {
+        step,
+        manifest_fingerprint,
+        state: ClusterState {
+            step,
+            n_workers,
+            mp,
+            recoveries,
+            lost_ranks,
+            fired,
+            global,
+            workers,
+        },
+    })
+}
+
+/// Write an artifact atomically (tmp + rename + fsync) and return the
+/// FNV-1a fingerprint of its bytes — the value the event log's
+/// `Checkpoint` record carries.
+pub fn save_artifact(path: impl AsRef<Path>, art: &CheckpointArtifact) -> Result<u64, StoreError> {
+    let path = path.as_ref();
+    let bytes = encode_artifact(art);
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut f =
+            std::fs::File::create(&tmp).map_err(|e| StoreError::io(&tmp, "create", e))?;
+        f.write_all(&bytes).map_err(|e| StoreError::io(&tmp, "write", e))?;
+        f.sync_data().map_err(|e| StoreError::io(&tmp, "fsync", e))?;
+    }
+    std::fs::rename(&tmp, path).map_err(|e| StoreError::io(path, "rename", e))?;
+    if let Some(parent) = path.parent() {
+        // Persist the rename itself: fsync the directory entry.
+        if let Ok(dir) = std::fs::File::open(parent) {
+            let _ = dir.sync_data();
+        }
+    }
+    Ok(fnv1a(&bytes))
+}
+
+/// Load and fully verify an artifact file.
+pub fn load_artifact(path: impl AsRef<Path>) -> Result<CheckpointArtifact, StoreError> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).map_err(|e| StoreError::io(path, "read", e))?;
+    decode_artifact(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_state() -> ClusterState {
+        let t = |v: Vec<f32>| HostTensor::f32(vec![v.len()], v);
+        ClusterState {
+            step: 4,
+            n_workers: 1,
+            mp: 1,
+            recoveries: 1,
+            lost_ranks: vec![2],
+            fired: vec![true, false],
+            global: vec![("g0".into(), t(vec![1.0, -2.5]))],
+            workers: vec![WorkerSnapshot {
+                rank: 0,
+                conv_params: vec![t(vec![0.5; 3])],
+                fc_params: vec![t(vec![1.5; 2])],
+                conv_velocity: vec![vec![0.1, 0.2, 0.3]],
+                fc_velocity: Vec::new(),
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_state_bit_exactly() {
+        let art = CheckpointArtifact {
+            step: 4,
+            manifest_fingerprint: 0xfeed_beef,
+            state: tiny_state(),
+        };
+        let bytes = encode_artifact(&art);
+        let back = decode_artifact(&bytes).unwrap();
+        assert_eq!(back.step, 4);
+        assert_eq!(back.manifest_fingerprint, 0xfeed_beef);
+        assert_eq!(back.state.lost_ranks, vec![2]);
+        assert_eq!(back.state.fired, vec![true, false]);
+        assert_eq!(back.state.workers[0].conv_velocity, vec![vec![0.1, 0.2, 0.3]]);
+        assert!(back.state.workers[0].fc_velocity.is_empty());
+        assert_eq!(back.state.global[0].1.as_f32(), art.state.global[0].1.as_f32());
+    }
+
+    #[test]
+    fn every_flipped_byte_is_detected() {
+        let art = CheckpointArtifact { step: 1, manifest_fingerprint: 7, state: tiny_state() };
+        let bytes = encode_artifact(&art);
+        // Flip a byte in each structural region: magic, header, body, crc.
+        for &at in &[0usize, 9, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x40;
+            assert!(decode_artifact(&bad).is_err(), "flip at {at} went undetected");
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let art = CheckpointArtifact { step: 1, manifest_fingerprint: 7, state: tiny_state() };
+        let bytes = encode_artifact(&art);
+        for keep in [0, 5, 20, bytes.len() - 1] {
+            let err = decode_artifact(&bytes[..keep]).unwrap_err();
+            assert!(
+                matches!(err, StoreError::Truncated { .. } | StoreError::BadCrc { .. }),
+                "truncation at {keep} gave {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn atomic_save_then_load() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("splitbrain-art-test-{}.ckpt", std::process::id()));
+        let art = CheckpointArtifact { step: 2, manifest_fingerprint: 9, state: tiny_state() };
+        let fp = save_artifact(&path, &art).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(fp, fnv1a(&bytes));
+        let back = load_artifact(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.step, 2);
+        assert_eq!(back.state.workers.len(), 1);
+    }
+}

@@ -1,0 +1,251 @@
+//! The `--run-dir` layout: one directory = one durable run.
+//!
+//! ```text
+//! <run-dir>/
+//!   run.json          canonical RunManifest — the run's config identity
+//!   events.log        append-only CRC-framed event log
+//!   opid<R>.pid       live worker PIDs (TCP launch engine only)
+//!   checkpoints/
+//!     step-K.ckpt           in-proc engines: whole-cluster artifact
+//!     step-K.opid-R.ckpt    launch engine: per-process artifact
+//! ```
+//!
+//! [`RunDir::create`] refuses a directory that already holds a run
+//! (resume instead of clobbering history); [`RunDir::open`] demands
+//! `run.json`. Checkpoint discovery is name-based and *verification
+//! happens at load*: [`RunDir::latest_valid_checkpoint`] walks steps
+//! newest-first and skips any artifact whose CRC or fingerprint fails,
+//! so a torn checkpoint write degrades to the previous boundary instead
+//! of an unusable run.
+
+use std::path::{Path, PathBuf};
+
+use super::ckpt::{load_artifact, CheckpointArtifact};
+use super::StoreError;
+
+/// Handle to a run directory (layout above).
+#[derive(Debug, Clone)]
+pub struct RunDir {
+    root: PathBuf,
+}
+
+impl RunDir {
+    /// Create a fresh run dir: make the directories, persist the
+    /// canonical manifest. Fails with [`StoreError::RunExists`] if the
+    /// directory already holds a `run.json`.
+    pub fn create(root: impl AsRef<Path>, manifest_json: &str) -> Result<RunDir, StoreError> {
+        let root = root.as_ref();
+        std::fs::create_dir_all(root.join("checkpoints"))
+            .map_err(|e| StoreError::io(root, "mkdir", e))?;
+        let run_json = root.join("run.json");
+        if run_json.exists() {
+            return Err(StoreError::RunExists(root.display().to_string()));
+        }
+        std::fs::write(&run_json, manifest_json)
+            .map_err(|e| StoreError::io(&run_json, "write", e))?;
+        Ok(RunDir { root: root.to_path_buf() })
+    }
+
+    /// Open an existing run dir (must contain `run.json`).
+    pub fn open(root: impl AsRef<Path>) -> Result<RunDir, StoreError> {
+        let root = root.as_ref();
+        if !root.join("run.json").is_file() {
+            return Err(StoreError::NotARunDir(root.display().to_string()));
+        }
+        std::fs::create_dir_all(root.join("checkpoints"))
+            .map_err(|e| StoreError::io(root, "mkdir", e))?;
+        Ok(RunDir { root: root.to_path_buf() })
+    }
+
+    /// Open if `run.json` exists, create otherwise — the launch
+    /// engine's idempotent entry point.
+    pub fn open_or_create(
+        root: impl AsRef<Path>,
+        manifest_json: &str,
+    ) -> Result<RunDir, StoreError> {
+        let r = root.as_ref();
+        if r.join("run.json").is_file() {
+            Self::open(r)
+        } else {
+            Self::create(r, manifest_json)
+        }
+    }
+
+    /// The directory itself.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// `run.json` path.
+    pub fn manifest_path(&self) -> PathBuf {
+        self.root.join("run.json")
+    }
+
+    /// Read the persisted canonical manifest.
+    pub fn manifest_json(&self) -> Result<String, StoreError> {
+        let p = self.manifest_path();
+        std::fs::read_to_string(&p).map_err(|e| StoreError::io(&p, "read", e))
+    }
+
+    /// `events.log` path.
+    pub fn events_path(&self) -> PathBuf {
+        self.root.join("events.log")
+    }
+
+    /// `checkpoints/` path.
+    pub fn checkpoints_dir(&self) -> PathBuf {
+        self.root.join("checkpoints")
+    }
+
+    /// In-proc artifact path for averaging boundary `step`.
+    pub fn checkpoint_path(&self, step: usize) -> PathBuf {
+        self.checkpoints_dir().join(format!("step-{step}.ckpt"))
+    }
+
+    /// Launch-engine per-process artifact path.
+    pub fn worker_checkpoint_path(&self, step: usize, opid: usize) -> PathBuf {
+        self.checkpoints_dir().join(format!("step-{step}.opid-{opid}.ckpt"))
+    }
+
+    /// PID file for launch-engine process `opid` (tests and the CI
+    /// kill-resume smoke read these to SIGKILL the coordinator).
+    pub fn pid_path(&self, opid: usize) -> PathBuf {
+        self.root.join(format!("opid{opid}.pid"))
+    }
+
+    /// Steps with an in-proc artifact file, ascending (presence only —
+    /// validity is checked at load).
+    pub fn checkpoint_steps(&self) -> Vec<usize> {
+        self.scan_steps(|name| {
+            name.strip_prefix("step-")?.strip_suffix(".ckpt")?.parse::<usize>().ok()
+        })
+    }
+
+    /// Steps where **every** opid in `0..n` has an artifact file,
+    /// ascending — the launch engine may die with some ranks a boundary
+    /// ahead of others; only a complete set is resumable.
+    pub fn complete_worker_checkpoint_steps(&self, n: usize) -> Vec<usize> {
+        let mut per_step: std::collections::BTreeMap<usize, usize> = Default::default();
+        for step in self.scan_steps(|name| {
+            let rest = name.strip_prefix("step-")?;
+            let (step, opid) = rest.strip_suffix(".ckpt")?.split_once(".opid-")?;
+            let opid: usize = opid.parse().ok()?;
+            if opid >= n {
+                return None;
+            }
+            step.parse::<usize>().ok()
+        }) {
+            *per_step.entry(step).or_insert(0) += 1;
+        }
+        per_step.into_iter().filter(|&(_, count)| count == n).map(|(s, _)| s).collect()
+    }
+
+    fn scan_steps(&self, parse: impl Fn(&str) -> Option<usize>) -> Vec<usize> {
+        let mut steps = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(self.checkpoints_dir()) {
+            for entry in entries.flatten() {
+                if let Some(step) = entry.file_name().to_str().and_then(&parse) {
+                    steps.push(step);
+                }
+            }
+        }
+        steps.sort_unstable();
+        steps
+    }
+
+    /// Newest artifact that decodes cleanly **and** belongs to this
+    /// configuration (fingerprint match). Artifacts that fail either
+    /// check are skipped — a torn checkpoint write degrades the resume
+    /// point by one boundary, it does not brick the run. `Ok(None)`
+    /// means no boundary was ever persisted: resume restarts from
+    /// step 0 (the initial model is a pure function of the seed).
+    pub fn latest_valid_checkpoint(
+        &self,
+        want_fingerprint: u64,
+    ) -> Result<Option<CheckpointArtifact>, StoreError> {
+        for step in self.checkpoint_steps().into_iter().rev() {
+            match load_artifact(self.checkpoint_path(step)) {
+                Ok(art) if art.manifest_fingerprint == want_fingerprint => {
+                    return Ok(Some(art));
+                }
+                Ok(_) | Err(_) => continue,
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("splitbrain-dir-test-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    #[test]
+    fn create_open_refuse_clobber() {
+        let root = tmp("create");
+        let d = RunDir::create(&root, "{}").unwrap();
+        assert_eq!(d.manifest_json().unwrap(), "{}");
+        assert!(matches!(RunDir::create(&root, "{}"), Err(StoreError::RunExists(_))));
+        RunDir::open(&root).unwrap();
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn open_missing_is_not_a_run_dir() {
+        let root = tmp("missing");
+        assert!(matches!(RunDir::open(&root), Err(StoreError::NotARunDir(_))));
+    }
+
+    #[test]
+    fn step_scans_parse_and_sort() {
+        let root = tmp("scan");
+        let d = RunDir::create(&root, "{}").unwrap();
+        for step in [10, 2, 6] {
+            std::fs::write(d.checkpoint_path(step), b"x").unwrap();
+        }
+        std::fs::write(d.checkpoints_dir().join("garbage.txt"), b"x").unwrap();
+        assert_eq!(d.checkpoint_steps(), vec![2, 6, 10]);
+        // Worker artifacts: step 4 complete for n=2, step 8 missing opid 1.
+        std::fs::write(d.worker_checkpoint_path(4, 0), b"x").unwrap();
+        std::fs::write(d.worker_checkpoint_path(4, 1), b"x").unwrap();
+        std::fs::write(d.worker_checkpoint_path(8, 0), b"x").unwrap();
+        assert_eq!(d.complete_worker_checkpoint_steps(2), vec![4]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn latest_valid_skips_broken_artifacts() {
+        use crate::coordinator::cluster::ClusterState;
+        use crate::store::ckpt::{save_artifact, CheckpointArtifact};
+        let root = tmp("latest");
+        let d = RunDir::create(&root, "{}").unwrap();
+        let state = ClusterState {
+            step: 2,
+            n_workers: 0,
+            mp: 1,
+            recoveries: 0,
+            lost_ranks: vec![],
+            fired: vec![],
+            global: vec![],
+            workers: vec![],
+        };
+        let art = CheckpointArtifact { step: 2, manifest_fingerprint: 77, state };
+        save_artifact(d.checkpoint_path(2), &art).unwrap();
+        // A newer but corrupt artifact, and an even newer wrong-config one.
+        std::fs::write(d.checkpoint_path(4), b"corrupt").unwrap();
+        let mut other = art.clone();
+        other.step = 6;
+        other.manifest_fingerprint = 99;
+        save_artifact(d.checkpoint_path(6), &other).unwrap();
+        let got = d.latest_valid_checkpoint(77).unwrap().unwrap();
+        assert_eq!(got.step, 2, "skips corrupt step 4 and wrong-config step 6");
+        assert!(d.latest_valid_checkpoint(1).unwrap().is_none());
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

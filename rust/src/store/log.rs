@@ -1,0 +1,605 @@
+//! The append-only event log: CRC-framed records, fsync'd appends,
+//! torn-tail-tolerant replay.
+//!
+//! Framing mirrors the TCP transport's `wire.rs` discipline (and reuses
+//! its CRC-32 tables):
+//!
+//! ```text
+//! u32  magic     "SBEL" (0x4C45_4253, little-endian)
+//! u16  version   1
+//! u8   kind      record discriminant
+//! u8   reserved  0
+//! u32  payload_len   bounded by MAX_RECORD_PAYLOAD *before* allocation
+//! [payload_len bytes]
+//! u32  crc32     over every preceding byte of the record
+//! ```
+//!
+//! [`replay`] decodes the longest valid prefix: a torn tail (partial
+//! append at the moment of a kill) or a flipped byte stops the replay
+//! at the last intact record and reports *why* as a typed
+//! [`StoreError`] — corruption is never a panic, and never silently
+//! skipped over (everything after the first bad byte is distrusted,
+//! because record boundaries can no longer be established).
+
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::api::events::{Event, RecoveryInfo, RunInfo, RunSummary, StepReport};
+use crate::comm::transport::wire::crc32;
+use crate::comm::CollectiveAlgo;
+use crate::coordinator::ExecEngine;
+
+use super::StoreError;
+
+/// Log record magic: `"SBEL"` as a little-endian u32.
+pub const LOG_MAGIC: u32 = u32::from_le_bytes(*b"SBEL");
+/// Log format version this build reads and writes.
+pub const LOG_VERSION: u16 = 1;
+/// Fixed bytes before the payload.
+pub const HEADER_LEN: usize = 12;
+/// Payload bound, checked before any allocation. Events are tiny; the
+/// only unbounded field is a lost-ranks list.
+pub const MAX_RECORD_PAYLOAD: u32 = 1 << 20;
+
+const KIND_RUN_STARTED: u8 = 1;
+const KIND_STEP: u8 = 2;
+const KIND_RECOVERED: u8 = 3;
+const KIND_RUN_COMPLETED: u8 = 4;
+const KIND_CHECKPOINT: u8 = 5;
+const KIND_RESUMED: u8 = 6;
+
+/// One durable record. The first four variants mirror the in-memory
+/// [`Event`] stream one-to-one; the store adds checkpoint and resume
+/// markers so a replayed log is a complete lineage of the run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LogRecord {
+    /// Mirror of [`Event::RunStarted`].
+    RunStarted(RunInfo),
+    /// Mirror of [`Event::StepCompleted`].
+    Step(StepReport),
+    /// Mirror of [`Event::Recovered`].
+    Recovered(RecoveryInfo),
+    /// Mirror of [`Event::RunCompleted`].
+    RunCompleted(RunSummary),
+    /// A checkpoint artifact reached disk for this step.
+    Checkpoint {
+        /// Averaging-boundary step the artifact captures.
+        step: u64,
+        /// Artifact file name, relative to `checkpoints/`.
+        file: String,
+        /// FNV-1a fingerprint of the artifact bytes.
+        fingerprint: u64,
+    },
+    /// A new process rehydrated the run from the step-`step` checkpoint.
+    Resumed {
+        /// The step execution restarted after.
+        step: u64,
+    },
+}
+
+impl LogRecord {
+    /// Build the durable mirror of an in-memory event.
+    pub fn from_event(event: &Event) -> LogRecord {
+        match event {
+            Event::RunStarted(i) => LogRecord::RunStarted(i.clone()),
+            Event::StepCompleted(r) => LogRecord::Step(r.clone()),
+            Event::Recovered(r) => LogRecord::Recovered(r.clone()),
+            Event::RunCompleted(s) => LogRecord::RunCompleted(s.clone()),
+        }
+    }
+
+    /// The training step this record is anchored to, if any. Resume
+    /// truncation keeps the prefix with `step() <= K`.
+    pub fn step(&self) -> Option<u64> {
+        match self {
+            LogRecord::RunStarted(_) => None,
+            LogRecord::Step(r) => Some(r.step as u64),
+            LogRecord::Recovered(r) => Some(r.step as u64),
+            // A completed run has executed every step; anchor past any
+            // checkpoint so resume truncation always drops it.
+            LogRecord::RunCompleted(_) => Some(u64::MAX),
+            LogRecord::Checkpoint { step, .. } => Some(*step),
+            LogRecord::Resumed { step } => Some(*step),
+        }
+    }
+
+    fn kind(&self) -> u8 {
+        match self {
+            LogRecord::RunStarted(_) => KIND_RUN_STARTED,
+            LogRecord::Step(_) => KIND_STEP,
+            LogRecord::Recovered(_) => KIND_RECOVERED,
+            LogRecord::RunCompleted(_) => KIND_RUN_COMPLETED,
+            LogRecord::Checkpoint { .. } => KIND_CHECKPOINT,
+            LogRecord::Resumed { .. } => KIND_RESUMED,
+        }
+    }
+
+    /// Encode as one framed record (header + payload + CRC trailer).
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        debug_assert!(payload.len() <= MAX_RECORD_PAYLOAD as usize);
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+        out.extend_from_slice(&LOG_MAGIC.to_le_bytes());
+        out.extend_from_slice(&LOG_VERSION.to_le_bytes());
+        out.push(self.kind());
+        out.push(0);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            LogRecord::RunStarted(i) => {
+                e.u64(i.n_workers as u64);
+                e.u64(i.mp as u64);
+                e.u64(i.n_groups as u64);
+                e.u64(i.batch as u64);
+                e.u64(i.steps as u64);
+                e.f32_bits(i.lr);
+                e.u64(i.avg_period as u64);
+                e.str(&i.engine.to_string());
+                e.str(&i.collectives.to_string());
+                e.u8(i.overlap as u8);
+                e.f64_bits(i.param_mb);
+                e.f64_bits(i.total_mb);
+            }
+            LogRecord::Step(r) => {
+                e.u64(r.step as u64);
+                e.f64_bits(r.loss);
+                e.f64_bits(r.compute_secs);
+                e.f64_bits(r.mp_comm_secs);
+                e.f64_bits(r.dp_comm_secs);
+                e.f64_bits(r.wall_secs);
+                e.u64(r.bytes_busiest_rank);
+                e.u64(r.bytes_total);
+            }
+            LogRecord::Recovered(r) => {
+                e.u64(r.step as u64);
+                e.u64_list(&r.lost_ranks);
+                e.u64(r.n_workers as u64);
+                e.u64(r.mp as u64);
+                e.u64(r.restore_step as u64);
+            }
+            LogRecord::RunCompleted(s) => {
+                e.u64(s.steps as u64);
+                e.f64_bits(s.images_per_sec);
+                e.f64_bits(s.comm_fraction);
+                e.u64(s.recoveries as u64);
+                e.u64_list(&s.lost_ranks);
+                e.u64(s.n_workers as u64);
+                e.u64(s.mp as u64);
+                e.u64(s.last_checkpoint_step as u64);
+            }
+            LogRecord::Checkpoint { step, file, fingerprint } => {
+                e.u64(*step);
+                e.str(file);
+                e.u64(*fingerprint);
+            }
+            LogRecord::Resumed { step } => e.u64(*step),
+        }
+        e.out
+    }
+
+    fn decode_payload(kind: u8, payload: &[u8]) -> Result<LogRecord, StoreError> {
+        let mut d = Dec::new(payload);
+        let rec = match kind {
+            KIND_RUN_STARTED => LogRecord::RunStarted(RunInfo {
+                n_workers: d.u64()? as usize,
+                mp: d.u64()? as usize,
+                n_groups: d.u64()? as usize,
+                batch: d.u64()? as usize,
+                steps: d.u64()? as usize,
+                lr: d.f32_bits()?,
+                avg_period: d.u64()? as usize,
+                engine: ExecEngine::parse(&d.str()?)
+                    .map_err(|e| StoreError::BadPayload(format!("{e:#}")))?,
+                collectives: CollectiveAlgo::parse(&d.str()?)
+                    .map_err(|e| StoreError::BadPayload(format!("{e:#}")))?,
+                overlap: d.u8()? != 0,
+                param_mb: d.f64_bits()?,
+                total_mb: d.f64_bits()?,
+            }),
+            KIND_STEP => LogRecord::Step(StepReport {
+                step: d.u64()? as usize,
+                loss: d.f64_bits()?,
+                compute_secs: d.f64_bits()?,
+                mp_comm_secs: d.f64_bits()?,
+                dp_comm_secs: d.f64_bits()?,
+                wall_secs: d.f64_bits()?,
+                bytes_busiest_rank: d.u64()?,
+                bytes_total: d.u64()?,
+            }),
+            KIND_RECOVERED => LogRecord::Recovered(RecoveryInfo {
+                step: d.u64()? as usize,
+                lost_ranks: d.u64_list()?,
+                n_workers: d.u64()? as usize,
+                mp: d.u64()? as usize,
+                restore_step: d.u64()? as usize,
+            }),
+            KIND_RUN_COMPLETED => LogRecord::RunCompleted(RunSummary {
+                steps: d.u64()? as usize,
+                images_per_sec: d.f64_bits()?,
+                comm_fraction: d.f64_bits()?,
+                recoveries: d.u64()? as usize,
+                lost_ranks: d.u64_list()?,
+                n_workers: d.u64()? as usize,
+                mp: d.u64()? as usize,
+                last_checkpoint_step: d.u64()? as usize,
+            }),
+            KIND_CHECKPOINT => LogRecord::Checkpoint {
+                step: d.u64()?,
+                file: d.str()?,
+                fingerprint: d.u64()?,
+            },
+            KIND_RESUMED => LogRecord::Resumed { step: d.u64()? },
+            other => return Err(StoreError::BadKind(other)),
+        };
+        d.finish()?;
+        Ok(rec)
+    }
+}
+
+/// Little-endian payload encoder.
+struct Enc {
+    out: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { out: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.out.push(v);
+    }
+    fn u64(&mut self, v: u64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32_bits(&mut self, v: f32) {
+        self.out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn f64_bits(&mut self, v: f64) {
+        self.out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        self.out.extend_from_slice(s.as_bytes());
+    }
+    fn u64_list(&mut self, v: &[usize]) {
+        self.out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        for &x in v {
+            self.u64(x as u64);
+        }
+    }
+}
+
+/// Little-endian payload decoder with typed structural errors.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        if self.buf.len() - self.pos < n {
+            return Err(StoreError::BadPayload(format!(
+                "payload ends early: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, StoreError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32_bits(&mut self) -> Result<f32, StoreError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64_bits(&mut self) -> Result<f64, StoreError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> Result<String, StoreError> {
+        let n = self.u32()? as usize;
+        if n > MAX_RECORD_PAYLOAD as usize {
+            return Err(StoreError::BadPayload(format!("string length {n} implausible")));
+        }
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|e| StoreError::BadPayload(format!("string not utf-8: {e}")))
+    }
+    fn u64_list(&mut self) -> Result<Vec<usize>, StoreError> {
+        let n = self.u32()? as usize;
+        if n > (MAX_RECORD_PAYLOAD as usize) / 8 {
+            return Err(StoreError::BadPayload(format!("list length {n} implausible")));
+        }
+        (0..n).map(|_| Ok(self.u64()? as usize)).collect()
+    }
+    fn finish(&self) -> Result<(), StoreError> {
+        if self.pos != self.buf.len() {
+            return Err(StoreError::BadPayload(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Appends framed records to `events.log`, fsync'ing each one so a
+/// record either survives whole or is a detectable torn tail.
+pub struct LogWriter {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl LogWriter {
+    /// Create (or truncate) a fresh log.
+    pub fn create(path: impl AsRef<Path>) -> Result<LogWriter, StoreError> {
+        let path = path.as_ref();
+        let file = std::fs::File::create(path).map_err(|e| StoreError::io(path, "create", e))?;
+        Ok(LogWriter { file, path: path.to_path_buf() })
+    }
+
+    /// Open an existing log for appending after `keep_bytes`, truncating
+    /// everything past that offset (resume drops the distrusted tail
+    /// before writing new history — appending after a torn record would
+    /// hide every later record from replay).
+    pub fn open_truncated(path: impl AsRef<Path>, keep_bytes: u64) -> Result<LogWriter, StoreError> {
+        let path = path.as_ref();
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .map_err(|e| StoreError::io(path, "open", e))?;
+        file.set_len(keep_bytes).map_err(|e| StoreError::io(path, "truncate", e))?;
+        let mut file = file;
+        file.seek(SeekFrom::End(0)).map_err(|e| StoreError::io(path, "seek", e))?;
+        let w = LogWriter { file, path: path.to_path_buf() };
+        w.sync()?;
+        Ok(w)
+    }
+
+    /// Append one record and fsync it to disk.
+    pub fn append(&mut self, rec: &LogRecord) -> Result<(), StoreError> {
+        let bytes = rec.encode();
+        self.file
+            .write_all(&bytes)
+            .map_err(|e| StoreError::io(&self.path, "append", e))?;
+        self.sync()
+    }
+
+    fn sync(&self) -> Result<(), StoreError> {
+        self.file.sync_data().map_err(|e| StoreError::io(&self.path, "fsync", e))
+    }
+}
+
+/// The result of replaying a log: the longest valid record prefix, the
+/// byte extent of each record, and — when the file did not end cleanly
+/// at a record boundary — the typed reason replay stopped.
+#[derive(Debug)]
+pub struct Replay {
+    /// Decoded records, in append order.
+    pub records: Vec<LogRecord>,
+    /// `(start, end)` byte offsets of each record in `records`.
+    pub offsets: Vec<(u64, u64)>,
+    /// Bytes of the valid prefix (== file length iff `tail` is `None`).
+    pub valid_bytes: u64,
+    /// Why replay stopped before end-of-file, if it did. A torn tail is
+    /// [`StoreError::Truncated`]; a flipped byte usually surfaces as
+    /// [`StoreError::BadCrc`] or [`StoreError::BadMagic`].
+    pub tail: Option<StoreError>,
+}
+
+impl Replay {
+    /// Byte offset up to which records anchor at steps `<= k` — the
+    /// resume truncation point. Records without a step anchor
+    /// (`RunStarted`) ride along with their neighbors; everything from
+    /// the first record past `k` is dropped.
+    pub fn cut_for_step(&self, k: u64) -> u64 {
+        for (rec, &(start, _)) in self.records.iter().zip(&self.offsets) {
+            if matches!(rec.step(), Some(s) if s > k) {
+                return start;
+            }
+        }
+        self.valid_bytes
+    }
+
+    /// The records kept by [`cut_for_step`](Replay::cut_for_step).
+    pub fn records_until_step(&self, k: u64) -> Vec<LogRecord> {
+        self.records
+            .iter()
+            .take_while(|rec| !matches!(rec.step(), Some(s) if s > k))
+            .cloned()
+            .collect()
+    }
+}
+
+/// Replay a log file. Returns `Err` only when the file cannot be read
+/// at all; a malformed *interior* is not an error here — it is the
+/// `tail` of the longest valid prefix.
+pub fn replay(path: impl AsRef<Path>) -> Result<Replay, StoreError> {
+    let path = path.as_ref();
+    let buf = std::fs::read(path).map_err(|e| StoreError::io(path, "read", e))?;
+    let mut records = Vec::new();
+    let mut offsets = Vec::new();
+    let mut pos = 0usize;
+    let mut tail = None;
+    while pos < buf.len() {
+        match decode_one(&buf[pos..]) {
+            Ok((rec, consumed)) => {
+                offsets.push((pos as u64, (pos + consumed) as u64));
+                records.push(rec);
+                pos += consumed;
+            }
+            Err(e) => {
+                tail = Some(e);
+                break;
+            }
+        }
+    }
+    Ok(Replay { records, offsets, valid_bytes: pos as u64, tail })
+}
+
+/// Decode one record from the head of `buf`; returns the record and the
+/// bytes consumed.
+fn decode_one(buf: &[u8]) -> Result<(LogRecord, usize), StoreError> {
+    if buf.len() < HEADER_LEN {
+        return Err(StoreError::Truncated { needed: HEADER_LEN, got: buf.len() });
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != LOG_MAGIC {
+        return Err(StoreError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    if version != LOG_VERSION {
+        return Err(StoreError::VersionMismatch { got: version, want: LOG_VERSION });
+    }
+    let kind = buf[6];
+    let len = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    if len > MAX_RECORD_PAYLOAD {
+        return Err(StoreError::Oversized { len, max: MAX_RECORD_PAYLOAD });
+    }
+    let total = HEADER_LEN + len as usize + 4;
+    if buf.len() < total {
+        return Err(StoreError::Truncated { needed: total, got: buf.len() });
+    }
+    let carried = u32::from_le_bytes(buf[total - 4..total].try_into().unwrap());
+    let computed = crc32(&buf[..total - 4]);
+    if carried != computed {
+        return Err(StoreError::BadCrc { computed, carried });
+    }
+    let rec = LogRecord::decode_payload(kind, &buf[HEADER_LEN..HEADER_LEN + len as usize])?;
+    Ok((rec, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("splitbrain-log-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    fn sample_records() -> Vec<LogRecord> {
+        vec![
+            LogRecord::Step(StepReport {
+                step: 1,
+                loss: 2.302,
+                compute_secs: 0.5,
+                mp_comm_secs: 0.01,
+                dp_comm_secs: 0.0,
+                wall_secs: 0.123,
+                bytes_busiest_rank: 4096,
+                bytes_total: 8192,
+            }),
+            LogRecord::Recovered(RecoveryInfo {
+                step: 2,
+                lost_ranks: vec![1, 3],
+                n_workers: 2,
+                mp: 1,
+                restore_step: 0,
+            }),
+            LogRecord::Checkpoint { step: 2, file: "step-2.ckpt".into(), fingerprint: 0xdead },
+            LogRecord::Resumed { step: 2 },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        let path = tmp("roundtrip");
+        let mut w = LogWriter::create(&path).unwrap();
+        for r in sample_records() {
+            w.append(&r).unwrap();
+        }
+        let replayed = replay(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(replayed.tail.is_none());
+        assert_eq!(replayed.records, sample_records());
+        assert_eq!(replayed.valid_bytes, replayed.offsets.last().unwrap().1);
+    }
+
+    #[test]
+    fn torn_tail_recovers_prefix() {
+        let path = tmp("torn");
+        let mut w = LogWriter::create(&path).unwrap();
+        for r in sample_records() {
+            w.append(&r).unwrap();
+        }
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let replayed = replay(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(replayed.records.len(), sample_records().len() - 1);
+        assert!(matches!(replayed.tail, Some(StoreError::Truncated { .. })));
+    }
+
+    #[test]
+    fn flipped_byte_is_bad_crc() {
+        let path = tmp("flip");
+        let mut w = LogWriter::create(&path).unwrap();
+        for r in sample_records() {
+            w.append(&r).unwrap();
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let replayed = replay(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(replayed.tail.is_some(), "corruption must be detected");
+        assert!(replayed.records.len() < sample_records().len());
+    }
+
+    #[test]
+    fn cut_for_step_drops_future_records() {
+        let path = tmp("cut");
+        let mut w = LogWriter::create(&path).unwrap();
+        let recs = sample_records();
+        for r in &recs {
+            w.append(r).unwrap();
+        }
+        let replayed = replay(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // Step-1 cut keeps only the first record.
+        assert_eq!(replayed.cut_for_step(1), replayed.offsets[0].1);
+        assert_eq!(replayed.records_until_step(1).len(), 1);
+        // Step-2 cut keeps everything.
+        assert_eq!(replayed.cut_for_step(2), replayed.valid_bytes);
+    }
+
+    #[test]
+    fn open_truncated_drops_tail_then_appends() {
+        let path = tmp("trunc-append");
+        let mut w = LogWriter::create(&path).unwrap();
+        for r in sample_records() {
+            w.append(&r).unwrap();
+        }
+        let replayed = replay(&path).unwrap();
+        let cut = replayed.offsets[1].1; // keep first two records
+        let mut w2 = LogWriter::open_truncated(&path, cut).unwrap();
+        w2.append(&LogRecord::Resumed { step: 9 }).unwrap();
+        let again = replay(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(again.tail.is_none());
+        assert_eq!(again.records.len(), 3);
+        assert_eq!(again.records[2], LogRecord::Resumed { step: 9 });
+    }
+}

@@ -1,0 +1,148 @@
+//! Durable, event-sourced runs: the on-disk store behind `--run-dir`.
+//!
+//! A run directory makes a training run survive its process:
+//!
+//! ```text
+//! <run-dir>/
+//!   run.json                     canonical RunManifest (config identity)
+//!   events.log                   append-only, fsync'd, CRC-framed event log
+//!   checkpoints/
+//!     step-K.ckpt                full cluster state at averaging boundary K
+//!     step-K.opid-R.ckpt         per-process variant (TCP launch engine)
+//! ```
+//!
+//! The pieces compose into the chemflow-style fingerprint / rehydrate /
+//! clone-for-branch contract:
+//!
+//! * **Fingerprint** — `run.json` is the canonical config; its FNV-1a
+//!   fingerprint (the same one the TCP handshake compares) is stamped
+//!   into every checkpoint artifact, so state from a different
+//!   configuration can never be silently resumed.
+//! * **Rehydrate** — [`Session`](crate::api::Session) resume loads the
+//!   manifest, picks the newest checkpoint whose CRC and fingerprint
+//!   verify, replays the event log's valid prefix, truncates any torn
+//!   tail, and continues **bit-identically** to the uninterrupted run
+//!   (checkpoints carry optimizer momentum per worker, not just the
+//!   global model).
+//! * **Branch** — [`Session::branch`](crate::api::Session::branch)
+//!   clones the *global* model out of any averaging boundary into a new
+//!   run under a divergent configuration (the global 20-tensor form
+//!   re-shards to any topology; momentum resets, as on any restore).
+//!
+//! Log framing reuses the `wire.rs` discipline — magic, version, kind,
+//! length-bounded payload, CRC-32 trailer — and every malformation maps
+//! to a typed [`StoreError`]: a torn tail write or flipped byte yields
+//! recovery to the last valid record, never a panic and never silent
+//! divergence (`prop_store` sweeps every truncation boundary).
+
+pub mod ckpt;
+pub mod dir;
+pub mod log;
+
+pub use ckpt::{load_artifact, save_artifact, CheckpointArtifact};
+pub use dir::RunDir;
+pub use log::{replay, LogRecord, LogWriter, Replay};
+
+/// Every way the durable store can fail, typed. I/O carries the path
+/// and operation; framing errors carry the observed vs expected values
+/// so a corrupted log diagnoses itself.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    /// An OS-level I/O failure (open/read/write/fsync/rename).
+    Io {
+        /// Path the operation touched.
+        path: String,
+        /// The operation that failed (e.g. `"create"`, `"fsync"`).
+        op: &'static str,
+        /// The OS error, stringified.
+        err: String,
+    },
+    /// The file ended mid-record (torn tail write).
+    Truncated {
+        /// Bytes the record needed.
+        needed: usize,
+        /// Bytes actually available.
+        got: usize,
+    },
+    /// The record header does not start with the expected magic.
+    BadMagic(u32),
+    /// The format version is not one this build reads.
+    VersionMismatch {
+        /// Version found in the file.
+        got: u16,
+        /// Version this build writes.
+        want: u16,
+    },
+    /// Declared payload length exceeds the format bound.
+    Oversized {
+        /// Declared length.
+        len: u32,
+        /// The bound.
+        max: u32,
+    },
+    /// CRC-32 over the record did not match its trailer.
+    BadCrc {
+        /// CRC computed over the bytes read.
+        computed: u32,
+        /// CRC carried in the file.
+        carried: u32,
+    },
+    /// Unknown record kind byte.
+    BadKind(u8),
+    /// The payload failed structural decoding (valid frame, bad body).
+    BadPayload(String),
+    /// A checkpoint/manifest belongs to a different configuration.
+    FingerprintMismatch {
+        /// Fingerprint found in the artifact.
+        got: u64,
+        /// Fingerprint of the configuration trying to use it.
+        want: u64,
+    },
+    /// The directory does not look like a run dir (no `run.json`).
+    NotARunDir(String),
+    /// The directory already holds a run (refuse to clobber; resume
+    /// instead).
+    RunExists(String),
+    /// Resume/branch needs a checkpoint but none decodes cleanly.
+    NoCheckpoint(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { path, op, err } => write!(f, "store i/o: {op} {path}: {err}"),
+            StoreError::Truncated { needed, got } => {
+                write!(f, "truncated record: needed {needed} bytes, got {got}")
+            }
+            StoreError::BadMagic(m) => write!(f, "bad log magic 0x{m:08x}"),
+            StoreError::VersionMismatch { got, want } => {
+                write!(f, "log version {got} (this build reads {want})")
+            }
+            StoreError::Oversized { len, max } => {
+                write!(f, "record payload {len} exceeds bound {max}")
+            }
+            StoreError::BadCrc { computed, carried } => {
+                write!(f, "record crc mismatch: computed 0x{computed:08x}, file carries 0x{carried:08x}")
+            }
+            StoreError::BadKind(k) => write!(f, "unknown record kind {k}"),
+            StoreError::BadPayload(why) => write!(f, "malformed record payload: {why}"),
+            StoreError::FingerprintMismatch { got, want } => {
+                write!(f, "config fingerprint mismatch: artifact {got:016x}, run {want:016x}")
+            }
+            StoreError::NotARunDir(d) => write!(f, "{d}: not a run directory (no run.json)"),
+            StoreError::RunExists(d) => {
+                write!(f, "{d}: already contains a run — resume it or pick a fresh directory")
+            }
+            StoreError::NoCheckpoint(d) => write!(f, "{d}: no decodable checkpoint artifact"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl StoreError {
+    /// Wrap an `std::io::Error` with path + operation context.
+    pub fn io(path: impl AsRef<std::path::Path>, op: &'static str, err: std::io::Error) -> StoreError {
+        StoreError::Io { path: path.as_ref().display().to_string(), op, err: err.to_string() }
+    }
+}

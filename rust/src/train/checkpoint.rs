@@ -31,6 +31,12 @@ pub fn save(path: impl AsRef<Path>, tensors: &[(String, &HostTensor)]) -> Result
         std::fs::File::create(path.as_ref())
             .with_context(|| format!("creating {:?}", path.as_ref()))?,
     );
+    write_to(&mut f, tensors)
+}
+
+/// Write the checkpoint document to any sink (file or an in-memory
+/// buffer — the durable store embeds these documents in its artifacts).
+pub fn write_to(f: &mut impl Write, tensors: &[(String, &HostTensor)]) -> Result<()> {
     f.write_all(MAGIC)?;
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
     for (name, t) in tensors {
@@ -48,6 +54,20 @@ pub fn save(path: impl AsRef<Path>, tensors: &[(String, &HostTensor)]) -> Result
     Ok(())
 }
 
+/// Encode owned named tensors to the checkpoint byte format in memory.
+pub fn encode_named(tensors: &[(String, HostTensor)]) -> Vec<u8> {
+    let refs: Vec<(String, &HostTensor)> = tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+    let mut out = Vec::new();
+    write_to(&mut out, &refs).expect("in-memory checkpoint encode cannot fail");
+    out
+}
+
+/// Decode a checkpoint document from memory (see [`load`]).
+pub fn decode(bytes: &[u8]) -> Result<Vec<(String, HostTensor)>> {
+    let mut cursor = std::io::Cursor::new(bytes);
+    read_from(&mut cursor)
+}
+
 /// Save owned named tensors (the in-memory snapshot shape the cluster's
 /// recovery path keeps — see `Cluster::snapshot_global`).
 pub fn save_named(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
@@ -62,6 +82,11 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
         std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening {:?}", path.as_ref()))?,
     );
+    read_from(&mut f)
+}
+
+/// Read a checkpoint document from any source (see [`load`]).
+pub fn read_from(f: &mut impl Read) -> Result<Vec<(String, HostTensor)>> {
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
     if &magic != MAGIC {

@@ -74,6 +74,21 @@ impl Sgd {
         params_numel * 4
     }
 
+    /// The momentum velocity buffers — empty until the first
+    /// [`step`](Sgd::step). Exposed so the durable checkpoint store can
+    /// persist optimizer state: an exact resume must carry momentum, or
+    /// the first post-resume steps diverge from the uninterrupted run.
+    pub fn velocity(&self) -> &[Vec<f32>] {
+        &self.velocity
+    }
+
+    /// Install velocity buffers (checkpoint restore). An empty vector
+    /// restores the lazily-unallocated state; otherwise lengths must
+    /// match the parameter set — [`step`](Sgd::step) re-asserts them.
+    pub fn set_velocity(&mut self, velocity: Vec<Vec<f32>>) {
+        self.velocity = velocity;
+    }
+
     /// Reset momentum (used when parameters are overwritten by model
     /// averaging with reset semantics).
     pub fn reset(&mut self) {

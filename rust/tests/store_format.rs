@@ -1,0 +1,182 @@
+//! Golden on-disk format pin for the durable store: the exact bytes of
+//! a fixed `events.log` (one record of every kind) and a fixed
+//! checkpoint artifact are blessed into `tests/golden/run_dir/` —
+//! any encoding drift (field order, a widened integer, a changed CRC
+//! span) fails these tests with a byte diff, because files written by
+//! an older build must stay readable forever.
+//!
+//! To re-bless after an *intentional* format change (which must also
+//! bump `LOG_VERSION` / the artifact version so old files keep
+//! decoding):
+//!
+//! ```bash
+//! SPLITBRAIN_BLESS=1 cargo test store_format -q   # rewrites the files
+//! git diff rust/tests/golden/run_dir/             # review the drift!
+//! ```
+
+use splitbrain::api::{RecoveryInfo, RunInfo, RunSummary, StepReport};
+use splitbrain::comm::CollectiveAlgo;
+use splitbrain::coordinator::worker::WorkerSnapshot;
+use splitbrain::coordinator::{ClusterState, ExecEngine};
+use splitbrain::runtime::HostTensor;
+use splitbrain::store::ckpt::{decode_artifact, encode_artifact, fnv1a};
+use splitbrain::store::{replay, CheckpointArtifact, LogRecord};
+
+/// FNV-1a of the blessed artifact bytes — the value a log `Checkpoint`
+/// record would carry for it. Pinned so the fingerprint function itself
+/// cannot drift silently.
+const GOLDEN_ARTIFACT_FNV1A: u64 = 0x0f57_10e9_5b37_3bd1;
+
+fn golden_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/run_dir"))
+        .join(name)
+}
+
+/// One record of every kind, every float exactly representable so the
+/// fixture is independent of decimal-to-binary rounding.
+fn golden_records() -> Vec<LogRecord> {
+    vec![
+        LogRecord::RunStarted(RunInfo {
+            n_workers: 4,
+            mp: 2,
+            n_groups: 2,
+            batch: 32,
+            steps: 4,
+            lr: 0.125,
+            avg_period: 2,
+            engine: ExecEngine::Threaded,
+            collectives: CollectiveAlgo::Ring,
+            overlap: true,
+            param_mb: 13.5,
+            total_mb: 29.75,
+        }),
+        LogRecord::Step(StepReport {
+            step: 1,
+            loss: 2.25,
+            compute_secs: 0.5,
+            mp_comm_secs: 0.0625,
+            dp_comm_secs: 0.0,
+            wall_secs: 0.25,
+            bytes_busiest_rank: 65536,
+            bytes_total: 262144,
+        }),
+        LogRecord::Checkpoint {
+            step: 2,
+            file: "step-2.ckpt".into(),
+            fingerprint: 0x1234_5678_9abc_def0,
+        },
+        LogRecord::Recovered(RecoveryInfo {
+            step: 3,
+            lost_ranks: vec![3],
+            n_workers: 3,
+            mp: 1,
+            restore_step: 2,
+        }),
+        LogRecord::Resumed { step: 2 },
+        LogRecord::RunCompleted(RunSummary {
+            steps: 4,
+            images_per_sec: 512.0,
+            comm_fraction: 0.25,
+            recoveries: 1,
+            lost_ranks: vec![3],
+            n_workers: 3,
+            mp: 1,
+            last_checkpoint_step: 4,
+        }),
+    ]
+}
+
+fn golden_artifact() -> CheckpointArtifact {
+    let t = |shape: Vec<usize>, v: Vec<f32>| HostTensor::f32(shape, v);
+    CheckpointArtifact {
+        step: 2,
+        manifest_fingerprint: 0xfeed_face,
+        state: ClusterState {
+            step: 2,
+            n_workers: 2,
+            mp: 1,
+            recoveries: 0,
+            lost_ranks: vec![],
+            fired: vec![false, true],
+            global: vec![
+                ("g0".into(), t(vec![2], vec![0.5, -1.5])),
+                ("g1".into(), t(vec![1, 2], vec![3.25, 4.0])),
+            ],
+            workers: vec![
+                WorkerSnapshot {
+                    rank: 0,
+                    conv_params: vec![t(vec![3], vec![0.5, 0.5, 0.5])],
+                    fc_params: vec![t(vec![2], vec![1.5, -2.0])],
+                    conv_velocity: vec![vec![0.25, 0.5, 0.75]],
+                    fc_velocity: vec![],
+                },
+                WorkerSnapshot {
+                    rank: 1,
+                    conv_params: vec![t(vec![3], vec![-0.5, 0.25, 1.0])],
+                    fc_params: vec![t(vec![2], vec![2.5, 0.125])],
+                    conv_velocity: vec![],
+                    fc_velocity: vec![vec![0.0625, -0.125]],
+                },
+            ],
+        },
+    }
+}
+
+fn check_golden(name: &str, encoded: &[u8]) {
+    let path = golden_path(name);
+    if std::env::var("SPLITBRAIN_BLESS").is_ok() {
+        std::fs::write(&path, encoded).unwrap();
+        return;
+    }
+    let blessed = std::fs::read(&path)
+        .expect("missing golden file — run with SPLITBRAIN_BLESS=1 to create it");
+    assert_eq!(
+        encoded,
+        &blessed[..],
+        "{name}: encoding drifted from the blessed v1 bytes. Old run dirs must stay \
+         readable; if the change is intentional, bump the format version, keep the v1 \
+         decode path, and re-bless with SPLITBRAIN_BLESS=1."
+    );
+}
+
+#[test]
+fn golden_event_log_bytes() {
+    let encoded: Vec<u8> = golden_records().iter().flat_map(|r| r.encode()).collect();
+    check_golden("events.log", &encoded);
+}
+
+#[test]
+fn golden_event_log_decodes() {
+    let rp = replay(golden_path("events.log")).unwrap();
+    assert!(rp.tail.is_none(), "blessed log must replay cleanly: {:?}", rp.tail);
+    assert_eq!(rp.records, golden_records());
+    // The blessed lineage also pins the resume-cut semantics: the cut
+    // is a *prefix* — everything from the first record past step 2
+    // (the step-3 recovery) is dropped, later low-step records
+    // included.
+    let kept = rp.records_until_step(2);
+    assert_eq!(kept.len(), 3, "RunStarted + step-1 Step + step-2 Checkpoint");
+    assert!(matches!(kept.last(), Some(LogRecord::Checkpoint { step: 2, .. })));
+    assert_eq!(rp.cut_for_step(2), rp.offsets[3].0, "cut lands at the recovery record");
+}
+
+#[test]
+fn golden_artifact_bytes() {
+    let encoded = encode_artifact(&golden_artifact());
+    check_golden("step-2.ckpt", &encoded);
+    assert_eq!(
+        fnv1a(&encoded),
+        GOLDEN_ARTIFACT_FNV1A,
+        "artifact fingerprint drifted — event logs name checkpoints by this value"
+    );
+}
+
+#[test]
+fn golden_artifact_decodes() {
+    let bytes = std::fs::read(golden_path("step-2.ckpt")).unwrap();
+    let art = decode_artifact(&bytes).unwrap();
+    let want = golden_artifact();
+    assert_eq!(art.step, want.step);
+    assert_eq!(art.manifest_fingerprint, want.manifest_fingerprint);
+    assert_eq!(art.state, want.state);
+}

@@ -1,0 +1,453 @@
+//! Kill–resume acceptance battery for durable runs.
+//!
+//! The contract under test: a run killed at **any** point and resumed
+//! from its `--run-dir` continues **bit-identically** to the run that
+//! was never interrupted — losses, parameters, optimizer momentum and
+//! the event-log lineage — for both in-proc engines and for real
+//! SIGKILL'd worker processes over TCP, including resuming *after* an
+//! elastic shrink recovery. Event ordering under recovery is pinned for
+//! both the in-memory sink and the durable log: `Recovered` precedes
+//! the retried step's `StepCompleted`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use splitbrain::api::{CollectSink, Event, Session, SessionBuilder};
+use splitbrain::comm::FaultPlan;
+use splitbrain::coordinator::{ExecEngine, RecoveryPolicy};
+use splitbrain::data::{Dataset, SyntheticCifar};
+use splitbrain::runtime::RuntimeClient;
+use splitbrain::store::{replay, LogRecord};
+use splitbrain::train::checkpoint;
+
+const SEED: u64 = 123;
+const DATASET: usize = 256;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_splitbrain")
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sb-resume-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn dataset() -> Arc<dyn Dataset> {
+    Arc::new(SyntheticCifar::new(DATASET, SEED))
+}
+
+fn base_builder(n: usize, mp: usize, steps: usize) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .steps(steps)
+        .lr(0.02)
+        .momentum(0.9)
+        .clip_norm(1.0)
+        .avg_period(2)
+        .seed(SEED)
+        .dataset_size(DATASET)
+}
+
+/// Drive `s` to completion, returning per-step
+/// `(loss bits, busiest-rank bytes, total bytes)`.
+fn run_out(s: &mut Session) -> Vec<(u64, u64, u64)> {
+    let mut steps = Vec::new();
+    while !s.is_done() {
+        let r = s.step().unwrap();
+        steps.push((r.loss.to_bits(), r.bytes_busiest_rank, r.bytes_total));
+    }
+    steps
+}
+
+/// A killed-then-resumed in-proc run must be bit-identical to the
+/// uninterrupted run — per engine. "Kill" here is dropping the Session
+/// mid-run: every log append is fsync'd and checkpoint artifacts land
+/// atomically, so an abandoned process and a dropped session leave the
+/// same on-disk states behind.
+#[test]
+fn inproc_kill_resume_is_bit_identical_per_engine() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let steps = 8;
+    for engine in [ExecEngine::Sequential, ExecEngine::Threaded] {
+        // Uninterrupted reference.
+        let mut reference = base_builder(4, 2, steps)
+            .engine(engine)
+            .dataset(dataset())
+            .validate(&rt)
+            .unwrap()
+            .start()
+            .unwrap();
+        let ref_losses = run_out(&mut reference);
+        assert_eq!(ref_losses.len(), steps);
+
+        // Durable run, killed after step 5 (between the step-4
+        // checkpoint and the step-6 one).
+        let dir = tmp_dir(&format!("inproc-{engine}"));
+        let mut victim = base_builder(4, 2, steps)
+            .engine(engine)
+            .run_dir(&dir)
+            .dataset(dataset())
+            .validate(&rt)
+            .unwrap()
+            .start()
+            .unwrap();
+        for _ in 0..5 {
+            victim.step().unwrap();
+        }
+        drop(victim); // the kill
+
+        // Resume: rewinds to the newest checkpoint (step 4) and replays.
+        let mut resumed = SessionBuilder::resume_from(&dir)
+            .unwrap()
+            .dataset(dataset())
+            .validate(&rt)
+            .unwrap()
+            .start()
+            .unwrap();
+        assert_eq!(resumed.steps_done(), 4, "{engine}: resume lands on the step-4 boundary");
+        assert_eq!(resumed.run_dir(), Some(dir.as_path()));
+        let tail = run_out(&mut resumed);
+        assert_eq!(
+            tail,
+            ref_losses[4..],
+            "{engine}: post-resume losses and byte counters must match the \
+             uninterrupted run bit-for-bit"
+        );
+        assert!(
+            resumed.cluster().full_state() == reference.cluster().full_state(),
+            "{engine}: full cluster state (params + momentum) must be bit-identical \
+             after resume"
+        );
+
+        // The durable lineage: both incarnations' records, the step-5
+        // orphan truncated away, one Resumed marker, and per-step loss
+        // bits that replay the uninterrupted run exactly.
+        let rp = replay(dir.join("events.log")).unwrap();
+        assert!(rp.tail.is_none(), "{engine}: finished log must replay cleanly");
+        assert!(matches!(rp.records.last(), Some(LogRecord::RunCompleted(_))));
+        let resumes: Vec<_> = rp
+            .records
+            .iter()
+            .filter_map(|r| match r {
+                LogRecord::Resumed { step } => Some(*step),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(resumes, vec![4], "{engine}: exactly one resume, at the boundary");
+        let ckpts: Vec<_> = rp
+            .records
+            .iter()
+            .filter_map(|r| match r {
+                LogRecord::Checkpoint { step, .. } => Some(*step),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ckpts, vec![2, 4, 6, 8], "{engine}: every averaging boundary persisted");
+        let logged: Vec<(u64, u64, u64, u64)> = rp
+            .records
+            .iter()
+            .filter_map(|r| match r {
+                LogRecord::Step(s) => {
+                    Some((s.step as u64, s.loss.to_bits(), s.bytes_busiest_rank, s.bytes_total))
+                }
+                _ => None,
+            })
+            .collect();
+        let want: Vec<(u64, u64, u64, u64)> = ref_losses
+            .iter()
+            .enumerate()
+            .map(|(i, &(loss, bb, bt))| (i as u64 + 1, loss, bb, bt))
+            .collect();
+        assert_eq!(logged, want, "{engine}: logged lineage must equal the uninterrupted run");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Resume *after* an elastic shrink: rank 3 of 4 crashes at step 3, the
+/// cluster shrinks to 3 workers (mp 2 → 1), the run is killed at step 6
+/// and resumed. The resumed incarnation must come back on the shrunk
+/// topology with the consumed fault staying consumed, and finish
+/// bit-identically to the never-killed faulted run.
+#[test]
+fn resume_after_shrink_recovery_is_bit_identical() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let steps = 8;
+    let faulted = |dir: Option<&Path>| {
+        let mut b = base_builder(4, 2, steps)
+            .recovery(RecoveryPolicy::ShrinkAndContinue)
+            .faults(FaultPlan::new().crash(3, 3));
+        if let Some(d) = dir {
+            b = b.run_dir(d);
+        }
+        b.dataset(dataset()).validate(&rt).unwrap().start().unwrap()
+    };
+
+    let mut reference = faulted(None);
+    let ref_losses = run_out(&mut reference);
+
+    let dir = tmp_dir("shrink");
+    let mut victim = faulted(Some(&dir));
+    for _ in 0..6 {
+        victim.step().unwrap();
+    }
+    drop(victim);
+
+    let mut resumed = SessionBuilder::resume_from(&dir)
+        .unwrap()
+        .dataset(dataset())
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    assert_eq!(resumed.steps_done(), 6, "step 6 is an averaging boundary of the shrunk run");
+    let c = resumed.cluster();
+    assert_eq!(c.cfg.n_workers, 3, "resume must come back on the shrunk topology");
+    assert_eq!(c.cfg.mp, 1);
+    assert_eq!(c.recoveries, 1);
+    let tail = run_out(&mut resumed);
+    assert_eq!(
+        tail,
+        ref_losses[6..],
+        "post-resume losses on the shrunk cluster must match the uninterrupted faulted run"
+    );
+    assert!(
+        resumed.cluster().full_state() == reference.cluster().full_state(),
+        "shrunk-cluster state must be bit-identical after resume (fired fault flags, \
+         survivor params, momentum)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Event ordering under recovery, in memory and on disk: `Recovered`
+/// arrives immediately before the retried step's `StepCompleted`, never
+/// after it — a replay consumer must know the topology changed *before*
+/// it sees the step that ran on the new topology.
+#[test]
+fn recovered_event_precedes_retried_step_in_sink_and_log() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let dir = tmp_dir("order");
+    let mut session = base_builder(4, 2, 4)
+        .recovery(RecoveryPolicy::ShrinkAndContinue)
+        .faults(FaultPlan::new().crash(1, 3))
+        .run_dir(&dir)
+        .dataset(dataset())
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    let sink = CollectSink::new();
+    let events = sink.events();
+    session.attach(Box::new(sink));
+    session.run().unwrap();
+    drop(session);
+
+    let events = events.borrow();
+    let idx = events
+        .iter()
+        .position(|e| matches!(e, Event::Recovered(_)))
+        .expect("the planned crash must surface a Recovered event");
+    let recovered = match &events[idx] {
+        Event::Recovered(r) => r.clone(),
+        _ => unreachable!(),
+    };
+    assert!(recovered.n_workers < 4, "recovery shrank the cluster");
+    match &events[idx + 1] {
+        Event::StepCompleted(s) => assert_eq!(
+            s.step, recovered.step,
+            "the event right after Recovered must be the retried step itself"
+        ),
+        other => panic!("Recovered must be followed by the retried StepCompleted, got {other:?}"),
+    }
+
+    // Same ordering in the durable log.
+    let rp = replay(dir.join("events.log")).unwrap();
+    assert!(rp.tail.is_none());
+    let li = rp
+        .records
+        .iter()
+        .position(|r| matches!(r, LogRecord::Recovered(_)))
+        .expect("the recovery must be in the durable log");
+    match (&rp.records[li], &rp.records[li + 1]) {
+        (LogRecord::Recovered(r), LogRecord::Step(s)) => {
+            assert_eq!(s.step, r.step, "log: Recovered then the retried Step, adjacent")
+        }
+        (r, next) => panic!("log ordering broken: {r:?} followed by {next:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Multi-process: real SIGKILL, real resume
+// ---------------------------------------------------------------------
+
+fn launch_args(dir: &Path, resume: bool) -> Vec<String> {
+    let mut v: Vec<String> = [
+        "launch",
+        "--workers", "4",
+        "--mp", "2",
+        "--steps", "8",
+        "--avg-period", "2",
+        "--lr", "0.02",
+        "--momentum", "0.9",
+        "--clip-norm", "1.0",
+        "--seed", "123",
+        "--dataset-size", "256",
+        "--take-timeout-ms", "120000",
+        "--log-every", "4",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    v.push("--run-dir".into());
+    v.push(dir.display().to_string());
+    if resume {
+        v.push("--resume".into());
+    }
+    v
+}
+
+/// step → loss bits from one worker process's meta dump.
+fn meta_losses(dir: &Path, opid: usize) -> HashMap<usize, u64> {
+    let meta = std::fs::read_to_string(dir.join(format!("opid{opid}.meta")))
+        .unwrap_or_else(|e| panic!("opid {opid} meta missing: {e}"));
+    let mut losses = HashMap::new();
+    for line in meta.lines() {
+        let mut it = line.split_whitespace();
+        if it.next() == Some("loss") {
+            let step: usize = it.next().unwrap().parse().unwrap();
+            let bits = u64::from_str_radix(it.next().unwrap(), 16).unwrap();
+            losses.insert(step, bits);
+        }
+    }
+    losses
+}
+
+fn param_bits(dir: &Path, opid: usize) -> Vec<Vec<u32>> {
+    checkpoint::load(dir.join(format!("opid{opid}.ckpt")))
+        .unwrap()
+        .into_iter()
+        .map(|(_, t)| t.as_f32().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// SIGKILL a 4-process TCP launch mid-run, then `launch --resume` it:
+/// the resumed processes must pick up from the newest complete
+/// checkpoint set and land on losses and parameters bit-identical to a
+/// launch that was never killed.
+#[test]
+fn launch_sigkill_resume_is_bit_identical() {
+    let n = 4usize;
+    let steps = 8usize;
+
+    // Reference: an uninterrupted durable launch.
+    let ref_dir = tmp_dir("launch-ref");
+    let status = Command::new(bin())
+        .args(launch_args(&ref_dir, false))
+        .status()
+        .expect("launching the reference run");
+    assert!(status.success(), "reference launch must exit cleanly: {status:?}");
+
+    // Victim: same launch, SIGKILL'd once every opid has persisted its
+    // step-2 checkpoint artifact (6 steps of runway before completion
+    // makes losing the race to a finished run implausible).
+    let dir = tmp_dir("launch-kill");
+    let mut launcher = Command::new(bin())
+        .args(launch_args(&dir, false))
+        .spawn()
+        .expect("spawning the victim launch");
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let ckpt_set = |step: usize| {
+        (0..n).all(|opid| {
+            dir.join("checkpoints").join(format!("step-{step}.opid-{opid}.ckpt")).is_file()
+        })
+    };
+    while !ckpt_set(2) {
+        assert!(Instant::now() < deadline, "step-2 checkpoint set never appeared");
+        if let Ok(Some(s)) = launcher.try_wait() {
+            panic!("victim launch exited before the step-2 checkpoints landed: {s:?}");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    launcher.kill().ok(); // SIGKILL the launcher first: nothing reaps or retries
+    let mut pids = Vec::new();
+    for opid in 0..n {
+        let pid = std::fs::read_to_string(dir.join(format!("opid{opid}.pid")))
+            .unwrap_or_else(|e| panic!("opid {opid} pid file missing: {e}"));
+        pids.push(pid.trim().to_string());
+    }
+    for pid in &pids {
+        let _ = Command::new("kill").args(["-9", pid]).status();
+    }
+    launcher.wait().ok();
+    std::thread::sleep(Duration::from_millis(200)); // let the SIGKILLs land
+    assert!(
+        !dir.join("opid0.meta").exists(),
+        "the kill must interrupt the run before it writes final outputs — \
+         if this fires the test lost the kill race"
+    );
+
+    // Resume in place. The launcher reports and restarts from the
+    // newest step where every opid's artifact landed.
+    let status = Command::new(bin())
+        .args(launch_args(&dir, true))
+        .status()
+        .expect("relaunching with --resume");
+    assert!(status.success(), "resumed launch must exit cleanly: {status:?}");
+
+    // Bit-identical to the uninterrupted launch: every step the resumed
+    // incarnation ran, and every parameter of every rank.
+    for opid in 0..n {
+        let got = meta_losses(&dir, opid);
+        let want = meta_losses(&ref_dir, opid);
+        assert_eq!(want.len(), steps);
+        assert!(
+            !got.is_empty() && got.len() < steps,
+            "opid {opid}: resumed incarnation must run a strict, non-empty suffix \
+             (ran {} of {steps} steps)",
+            got.len()
+        );
+        assert!(got.contains_key(&steps), "opid {opid}: resumed run must reach step {steps}");
+        for (step, bits) in &got {
+            assert_eq!(
+                bits, &want[step],
+                "opid {opid}: loss bits diverged at step {step} after SIGKILL + resume"
+            );
+        }
+        let a = param_bits(&dir, opid);
+        let b = param_bits(&ref_dir, opid);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x, y, "opid {opid}: parameter tensor {i} diverged after resume");
+        }
+        assert!(
+            !dir.join(format!("opid{opid}.pid")).exists(),
+            "opid {opid}: clean exit must remove the pid file"
+        );
+    }
+
+    // The durable lineage survived the SIGKILL: the leader's log
+    // replays cleanly end-to-end with exactly one Resumed marker at an
+    // averaging boundary, and closes with RunCompleted.
+    let rp = replay(dir.join("events.log")).unwrap();
+    assert!(rp.tail.is_none(), "torn tail must have been truncated on resume: {:?}", rp.tail);
+    let resumes: Vec<u64> = rp
+        .records
+        .iter()
+        .filter_map(|r| match r {
+            LogRecord::Resumed { step } => Some(*step),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(resumes.len(), 1, "exactly one resume: {resumes:?}");
+    assert!(resumes[0] >= 2 && resumes[0] % 2 == 0, "resumed at a boundary: {}", resumes[0]);
+    assert!(matches!(rp.records.last(), Some(LogRecord::RunCompleted(_))));
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
