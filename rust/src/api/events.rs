@@ -303,33 +303,50 @@ impl EventSink for CollectSink {
 ///
 /// [`EventSink::on_event`] is infallible by design (observability must
 /// not take training down), so I/O errors are latched: the first
-/// failure stops further writes and is readable via
-/// [`error`](DiskSink::error).
+/// failure warns once on stderr, stops further writes, and stays
+/// readable via [`error`](DiskSink::error) — or, after the sink has
+/// been moved into a session, via the shared
+/// [`error_handle`](DiskSink::error_handle). When the run completes
+/// with a latched error, a final stderr note flags the log as
+/// incomplete, so a failed sink is never *silent*.
 ///
 /// # Examples
 ///
 /// ```no_run
-/// use splitbrain::api::{DiskSink, EventSink};
+/// use splitbrain::api::DiskSink;
 ///
 /// let sink = DiskSink::create("events.log").unwrap();
+/// let errors = sink.error_handle(); // survives the attach below
 /// // session.attach(Box::new(sink));
+/// // ... after session.run():
+/// if let Some(e) = errors.borrow().as_ref() {
+///     eprintln!("event log is incomplete: {e}");
+/// }
 /// ```
 pub struct DiskSink {
     writer: Option<LogWriter>,
-    error: Option<StoreError>,
+    error: Rc<RefCell<Option<StoreError>>>,
 }
 
 impl DiskSink {
     /// Create (or truncate) the log at `path`.
     pub fn create(path: impl AsRef<Path>) -> Result<DiskSink, StoreError> {
-        Ok(DiskSink { writer: Some(LogWriter::create(path)?), error: None })
+        Ok(DiskSink { writer: Some(LogWriter::create(path)?), error: Rc::new(RefCell::new(None)) })
     }
 
     /// The first write error, if any. Once set, no further records are
     /// written (the log ends at the last durable record, which replay
     /// handles like any other clean prefix).
-    pub fn error(&self) -> Option<&StoreError> {
-        self.error.as_ref()
+    pub fn error(&self) -> Option<StoreError> {
+        self.error.borrow().clone()
+    }
+
+    /// Shared handle to the latched error — clone it out *before*
+    /// moving the sink into [`Session::attach`](super::Session::attach)
+    /// (the [`CollectSink::events`] pattern), then inspect it alongside
+    /// the run summary.
+    pub fn error_handle(&self) -> Rc<RefCell<Option<StoreError>>> {
+        Rc::clone(&self.error)
     }
 }
 
@@ -337,8 +354,17 @@ impl EventSink for DiskSink {
     fn on_event(&mut self, event: &Event) {
         if let Some(w) = &mut self.writer {
             if let Err(e) = w.append(&LogRecord::from_event(event)) {
-                self.error = Some(e);
+                eprintln!(
+                    "warning: event log sink failed ({e}); later events will not be persisted"
+                );
+                *self.error.borrow_mut() = Some(e);
                 self.writer = None;
+            }
+        } else if matches!(event, Event::RunCompleted(_)) {
+            if let Some(e) = self.error.borrow().as_ref() {
+                eprintln!(
+                    "warning: the persisted event log is incomplete — its sink failed earlier: {e}"
+                );
             }
         }
     }

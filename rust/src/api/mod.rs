@@ -44,6 +44,10 @@
 //!   [`SessionBuilder::branch_from`](builder::SessionBuilder::branch_from)
 //!   clone a run from any averaging boundary into a divergent
 //!   configuration.
+//! * **Watching** ([`Watcher`]) — observe any run dir from *outside*
+//!   its process, read-only: tail-follow the event log into a typed
+//!   [`RunStatus`] and classify liveness (running / completed /
+//!   stalled / dead) — the library half of `splitbrain watch`.
 //!
 //! # Examples
 //!
@@ -67,6 +71,7 @@ pub mod events;
 pub mod manifest;
 pub mod plan;
 pub mod session;
+pub mod watch;
 
 pub use builder::{SessionBuilder, DEFAULT_LOG_EVERY, DEFAULT_STEPS, DEFAULT_WORKERS};
 pub use error::ConfigError;
@@ -77,3 +82,4 @@ pub use events::{
 pub use manifest::{RunManifest, MANIFEST_VERSION};
 pub use plan::{CommEstimate, Plan};
 pub use session::{RunReport, Session};
+pub use watch::{Liveness, RunStatus, WatchDelta, Watcher};

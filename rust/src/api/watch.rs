@@ -1,0 +1,376 @@
+//! Watch a run from outside its process: typed status + liveness.
+//!
+//! A [`Watcher`] opens a run directory **read-only** (it never creates
+//! files, sweeps litter, or takes locks — safe to point at a live
+//! writer's dir, or at a blessed fixture), tail-follows `events.log`
+//! via [`LogFollower`], and folds every replayed [`LogRecord`] into a
+//! [`RunStatus`] snapshot: steps done, the loss-curve tail,
+//! throughput, byte counters, membership transitions, and the
+//! checkpoint / resume lineage. [`Watcher::liveness`] classifies the
+//! run as [`Running`](Liveness::Running) /
+//! [`Completed`](Liveness::Completed) /
+//! [`Stalled`](Liveness::Stalled) / [`Dead`](Liveness::Dead) from pid
+//! files plus append-frontier staleness — see
+//! [`liveness_at`](Watcher::liveness_at) for the exact rules.
+//!
+//! This is the library half of `splitbrain watch`; the CLI is a thin
+//! render loop over it.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
+
+use super::events::{RunInfo, RunSummary, StepReport};
+use crate::store::{FollowPoll, LogFollower, LogRecord, StoreError};
+
+/// How many recent [`StepReport`]s [`RunStatus`] retains — enough for
+/// a loss-curve tail and a windowed throughput estimate without
+/// unbounded growth on long runs.
+pub const STATUS_TAIL_LEN: usize = 32;
+
+/// Default staleness after which a run with no confirmed-dead pids is
+/// reported [`Stalled`](Liveness::Stalled).
+pub const DEFAULT_STALL_AFTER: Duration = Duration::from_secs(10);
+
+/// Default staleness after which even an apparently-alive pid is
+/// distrusted (pid recycling) and the run is reported
+/// [`Dead`](Liveness::Dead).
+pub const DEFAULT_DEAD_AFTER: Duration = Duration::from_secs(120);
+
+/// Liveness classification of a watched run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Liveness {
+    /// The frontier is fresh and nothing says the workers are gone.
+    Running,
+    /// The log ends in a `RunCompleted` summary — terminal.
+    Completed,
+    /// No progress for at least the stall threshold, but the workers
+    /// are not confirmed dead (slow step, long collective, debugger…).
+    Stalled,
+    /// Every recorded worker pid is confirmed gone, or the frontier
+    /// has been stale past the dead threshold (an "alive" pid that old
+    /// is distrusted as recycled). Resume with `--resume`.
+    Dead,
+}
+
+impl std::fmt::Display for Liveness {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Liveness::Running => "running",
+            Liveness::Completed => "completed",
+            Liveness::Stalled => "stalled",
+            Liveness::Dead => "dead",
+        })
+    }
+}
+
+/// Typed fold of a run's event log: everything a progress view needs,
+/// rebuilt incrementally (or from scratch after a resume rewrites
+/// history).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunStatus {
+    /// The run's configuration header, once a `RunStarted` is seen.
+    /// Resumed incarnations re-emit it, so this reflects the newest.
+    pub run: Option<RunInfo>,
+    /// Highest step with a completed `Step` record (or claimed by the
+    /// final summary).
+    pub steps_done: usize,
+    /// Planned total steps from the `RunStarted` header (0 until seen).
+    pub steps_planned: usize,
+    /// The last [`STATUS_TAIL_LEN`] step reports, oldest first — the
+    /// loss-curve tail and throughput window.
+    pub tail: Vec<StepReport>,
+    /// Sum of per-step busiest-rank comm bytes over the whole log.
+    pub bytes_busiest: u64,
+    /// Sum of per-step total comm bytes over the whole log.
+    pub bytes_total: u64,
+    /// Current worker count (tracks `Recovered` membership changes).
+    pub n_workers: usize,
+    /// Current model-parallel width (tracks `Recovered` re-plans).
+    pub mp: usize,
+    /// Elastic recoveries observed so far.
+    pub recoveries: usize,
+    /// Ranks lost across all recoveries, in event order.
+    pub lost_ranks: Vec<usize>,
+    /// Checkpoint lineage: `(step, file)` per `Checkpoint` record.
+    pub checkpoints: Vec<(u64, String)>,
+    /// Resume lineage: the boundary step of every `Resumed` marker.
+    pub resumes: Vec<u64>,
+    /// The final summary, once a `RunCompleted` is seen.
+    pub summary: Option<RunSummary>,
+    /// Total records folded in (across the whole log, post-reset).
+    pub records: usize,
+    /// Settled corruption at the frontier, stringified — the follower
+    /// refuses to decode past it (cleared if a resume rewrites it).
+    pub corrupt: Option<String>,
+}
+
+impl RunStatus {
+    /// Fold one log record into the snapshot.
+    pub fn apply(&mut self, rec: &LogRecord) {
+        self.records += 1;
+        match rec {
+            LogRecord::RunStarted(i) => {
+                self.steps_planned = i.steps;
+                self.n_workers = i.n_workers;
+                self.mp = i.mp;
+                self.run = Some(i.clone());
+            }
+            LogRecord::Step(r) => {
+                self.steps_done = self.steps_done.max(r.step);
+                self.bytes_busiest += r.bytes_busiest_rank;
+                self.bytes_total += r.bytes_total;
+                self.tail.push(r.clone());
+                if self.tail.len() > STATUS_TAIL_LEN {
+                    self.tail.remove(0);
+                }
+            }
+            LogRecord::Recovered(r) => {
+                self.recoveries += 1;
+                self.lost_ranks.extend_from_slice(&r.lost_ranks);
+                self.n_workers = r.n_workers;
+                self.mp = r.mp;
+            }
+            LogRecord::RunCompleted(s) => {
+                self.steps_done = self.steps_done.max(s.steps);
+                self.recoveries = self.recoveries.max(s.recoveries);
+                self.n_workers = s.n_workers;
+                self.mp = s.mp;
+                self.summary = Some(s.clone());
+            }
+            LogRecord::Checkpoint { step, file, .. } => {
+                self.checkpoints.push((*step, file.clone()));
+            }
+            LogRecord::Resumed { step } => self.resumes.push(*step),
+        }
+    }
+
+    /// Fold a whole record slice (fresh snapshot).
+    pub fn from_records(records: &[LogRecord]) -> RunStatus {
+        let mut st = RunStatus::default();
+        for r in records {
+            st.apply(r);
+        }
+        st
+    }
+
+    /// Wall-clock throughput over the retained tail:
+    /// `batch × launch workers × tail steps / Σ wall_secs`. `None`
+    /// before the header or the first step, or when wall time is zero.
+    pub fn images_per_sec_wall(&self) -> Option<f64> {
+        let run = self.run.as_ref()?;
+        let wall: f64 = self.tail.iter().map(|r| r.wall_secs).sum();
+        if wall <= 0.0 || self.tail.is_empty() {
+            return None;
+        }
+        Some((run.batch * run.n_workers * self.tail.len()) as f64 / wall)
+    }
+
+    /// Step of the newest checkpoint record, if any.
+    pub fn latest_checkpoint_step(&self) -> Option<u64> {
+        self.checkpoints.last().map(|(s, _)| *s)
+    }
+}
+
+/// What changed in one [`Watcher::poll`].
+#[derive(Debug, Clone, Copy)]
+pub struct WatchDelta {
+    /// Records folded into the status this poll.
+    pub new_records: usize,
+    /// True when the log's history was rewritten (resume cut) and the
+    /// status was rebuilt from scratch.
+    pub reset: bool,
+    /// Byte offset of the decode frontier after this poll.
+    pub frontier: u64,
+}
+
+/// A read-only observer of one run directory. See the
+/// [module docs](self) for the overall shape.
+///
+/// ```no_run
+/// use splitbrain::api::{Liveness, Watcher};
+///
+/// let mut w = Watcher::open("runs/exp-1").unwrap();
+/// loop {
+///     w.poll().unwrap();
+///     let st = w.status();
+///     println!("step {}/{}", st.steps_done, st.steps_planned);
+///     match w.liveness() {
+///         Liveness::Completed | Liveness::Dead => break,
+///         _ => std::thread::sleep(std::time::Duration::from_millis(500)),
+///     }
+/// }
+/// ```
+#[derive(Debug)]
+pub struct Watcher {
+    root: PathBuf,
+    follower: LogFollower,
+    status: RunStatus,
+    stall_after: Duration,
+    dead_after: Duration,
+}
+
+impl Watcher {
+    /// Open `dir` for watching. Unlike
+    /// [`RunDir::open`](crate::store::RunDir::open) this creates and
+    /// sweeps **nothing** (a watcher must be able to observe a dir it
+    /// does not own, including a blessed read-only fixture); it only
+    /// requires the directory to exist and to contain an `events.log`
+    /// or a `run.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Watcher, StoreError> {
+        let root = dir.as_ref();
+        if !root.is_dir()
+            || (!root.join("events.log").is_file() && !root.join("run.json").is_file())
+        {
+            return Err(StoreError::NotARunDir(root.display().to_string()));
+        }
+        Ok(Watcher {
+            root: root.to_path_buf(),
+            follower: LogFollower::new(root.join("events.log")),
+            status: RunStatus::default(),
+            stall_after: DEFAULT_STALL_AFTER,
+            dead_after: DEFAULT_DEAD_AFTER,
+        })
+    }
+
+    /// Replace the stall threshold (default [`DEFAULT_STALL_AFTER`]).
+    pub fn with_stall_after(mut self, d: Duration) -> Watcher {
+        self.stall_after = d;
+        self
+    }
+
+    /// Replace the dead threshold (default [`DEFAULT_DEAD_AFTER`]).
+    pub fn with_dead_after(mut self, d: Duration) -> Watcher {
+        self.dead_after = d;
+        self
+    }
+
+    /// The watched directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Current folded snapshot (poll first to refresh it).
+    pub fn status(&self) -> &RunStatus {
+        &self.status
+    }
+
+    /// Follow the log's frontier: fold newly settled records into the
+    /// status, rebuilding it from scratch when the follower detects a
+    /// history rewrite (truncate-for-resume).
+    pub fn poll(&mut self) -> Result<WatchDelta, StoreError> {
+        let FollowPoll { records, reset, frontier, corrupt } = self.follower.poll()?;
+        if reset {
+            self.status = RunStatus::default();
+        }
+        for rec in &records {
+            self.status.apply(rec);
+        }
+        self.status.corrupt = corrupt.map(|e| e.to_string());
+        Ok(WatchDelta { new_records: records.len(), reset, frontier })
+    }
+
+    /// [`liveness_at`](Self::liveness_at) against the current clock.
+    pub fn liveness(&self) -> Liveness {
+        self.liveness_at(SystemTime::now())
+    }
+
+    /// Classify the run's liveness as of `now` (injectable for
+    /// deterministic tests). The rules, in order:
+    ///
+    /// 1. A folded `RunCompleted` summary → [`Liveness::Completed`].
+    /// 2. Pid files are present (`opid<R>.pid`, multi-process launches
+    ///    only) and **every** recorded pid is confirmed gone →
+    ///    [`Liveness::Dead`] immediately — clean exits remove their
+    ///    pid files, so all-dead means SIGKILL. A *positive* pid check
+    ///    is never trusted on its own: the pid may be recycled.
+    /// 3. Otherwise staleness decides. Activity = newest mtime among
+    ///    `events.log`, `run.json`, and any pid files; stale ≥ the
+    ///    dead threshold → [`Liveness::Dead`], ≥ the stall threshold →
+    ///    [`Liveness::Stalled`], else [`Liveness::Running`].
+    ///
+    /// On platforms with no `/proc` (pid liveness unknowable), rule 2
+    /// is skipped and staleness alone decides.
+    pub fn liveness_at(&self, now: SystemTime) -> Liveness {
+        if self.status.summary.is_some() {
+            return Liveness::Completed;
+        }
+        let pids = self.pid_files();
+        let checks: Vec<Option<bool>> = pids.iter().map(|(p, _)| pid_alive(*p)).collect();
+        if !checks.is_empty() && checks.iter().all(|c| *c == Some(false)) {
+            return Liveness::Dead;
+        }
+        let mut newest: Option<SystemTime> = None;
+        let mut consider = |t: Option<SystemTime>| {
+            if let Some(t) = t {
+                newest = Some(match newest {
+                    Some(n) if n >= t => n,
+                    _ => t,
+                });
+            }
+        };
+        consider(mtime(&self.root.join("events.log")));
+        consider(mtime(&self.root.join("run.json")));
+        for (_, m) in &pids {
+            consider(Some(*m));
+        }
+        let Some(newest) = newest else {
+            // Nothing on disk to date the run by — it never got far
+            // enough to matter; report it dead rather than eternally
+            // running.
+            return Liveness::Dead;
+        };
+        let stale = now.duration_since(newest).unwrap_or(Duration::ZERO);
+        if stale >= self.dead_after {
+            Liveness::Dead
+        } else if stale >= self.stall_after {
+            Liveness::Stalled
+        } else {
+            Liveness::Running
+        }
+    }
+
+    /// `(pid, pid-file mtime)` for every `opid<R>.pid` in the dir.
+    fn pid_files(&self) -> Vec<(u32, SystemTime)> {
+        let mut out = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.root) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let Some(name) = name.to_str() else { continue };
+                let Some(num) = name.strip_prefix("opid").and_then(|r| r.strip_suffix(".pid"))
+                else {
+                    continue;
+                };
+                if num.parse::<usize>().is_err() {
+                    continue;
+                }
+                let Ok(text) = std::fs::read_to_string(e.path()) else { continue };
+                let Ok(pid) = text.trim().parse::<u32>() else { continue };
+                let mtime = e
+                    .metadata()
+                    .ok()
+                    .and_then(|m| m.modified().ok())
+                    .unwrap_or(SystemTime::UNIX_EPOCH);
+                out.push((pid, mtime));
+            }
+        }
+        out
+    }
+}
+
+/// Whether `pid` is currently running — `None` when unknowable (no
+/// `/proc` on this platform). A `Some(true)` still does not prove the
+/// *worker* is alive (pid recycling), which is why the liveness rules
+/// only ever act on confirmed death.
+fn pid_alive(pid: u32) -> Option<bool> {
+    let proc_dir = Path::new("/proc");
+    if proc_dir.is_dir() {
+        Some(proc_dir.join(pid.to_string()).is_dir())
+    } else {
+        None
+    }
+}
+
+/// Modification time of `path`, if stat-able.
+fn mtime(path: &Path) -> Option<SystemTime> {
+    std::fs::metadata(path).ok().and_then(|m| m.modified().ok())
+}

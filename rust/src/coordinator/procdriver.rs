@@ -381,6 +381,11 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
                             format!("step {}\n", c.step),
                         );
                     }
+                    // A crash exit is as final as a clean one: drop the
+                    // pid file so watchers never chase a recycled pid.
+                    if let Some(store) = pstore.as_ref() {
+                        let _ = std::fs::remove_file(store.dir.pid_path(pc.opid));
+                    }
                     return Ok(RunOutcome::Crashed { step: c.step });
                 }
                 // The death notice behind a step abort may still be in
@@ -398,6 +403,9 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
                 match transport.recovery_sync()? {
                     SyncOutcome::Evicted => {
                         eprintln!("[opid {}] evicted by the membership verdict", pc.opid);
+                        if let Some(store) = pstore.as_ref() {
+                            let _ = std::fs::remove_file(store.dir.pid_path(pc.opid));
+                        }
                         return Ok(RunOutcome::Evicted);
                     }
                     SyncOutcome::Continue { survivors, my_rank: new_rank } => {

@@ -28,7 +28,7 @@
 //! | [`comm`] | pluggable transport (in-proc fabric + multi-process TCP wire fabric), naive/ring/rhd collectives, network cost model, comm tracing, deterministic fault injection |
 //! | [`coordinator`] | GMP topology, modulo/shard plans, step schedule, the compiled step-program IR + one executor for every engine (with overlapped execution), model averaging, threaded + sequential cluster engines, multi-process rank driver, elastic shrink-and-continue recovery |
 //! | [`runtime`] | artifact manifest + native segment executor, host tensors |
-//! | [`store`] | durable event-sourced runs: append-only CRC-framed event log, fingerprinted checkpoint artifacts, the `--run-dir` layout with kill-resume and branching |
+//! | [`store`] | durable event-sourced runs: append-only CRC-framed event log, fingerprinted checkpoint artifacts, the `--run-dir` layout with kill-resume and branching, a tail-follower for live observation |
 //! | [`data`] | CIFAR-10 loader + synthetic generator, batching |
 //! | [`train`] | SGD, trainer loop, metrics, memory accounting |
 //! | [`bench`] | mini-bench harness + paper table printers |

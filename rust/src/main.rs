@@ -16,6 +16,8 @@
 //! splitbrain inspect  [--mp 2]          # Table 1 + the Fig. 3 transform
 //! splitbrain memory                     # Fig. 7c memory accounting
 //! splitbrain profile  --workers 2 --mp 2 --steps 3   # per-artifact hot-path profile
+//! splitbrain watch    <run-dir> [--follow|--once] [--interval-ms 500] [--plain]
+//!                                       # live progress view over a durable run
 //! ```
 //!
 //! Every configuration flag is a [`SessionBuilder`] setter; the flags
@@ -74,12 +76,13 @@ fn main() -> Result<()> {
         Some("memory") => cmd_memory(&args),
         Some("profile") => cmd_profile(&args),
         Some("plan") => cmd_plan(&args),
+        Some("watch") => cmd_watch(&args),
         Some(other) => bail!(
-            "unknown subcommand {other:?} (try: train, launch, worker, sweep, inspect, memory, profile, plan)"
+            "unknown subcommand {other:?} (try: train, launch, worker, sweep, inspect, memory, profile, plan, watch)"
         ),
         None => {
             eprintln!(
-                "usage: splitbrain <train|launch|worker|sweep|inspect|memory|profile|plan> [--flags]"
+                "usage: splitbrain <train|launch|worker|sweep|inspect|memory|profile|plan|watch> [--flags]"
             );
             Ok(())
         }
@@ -675,4 +678,187 @@ fn cmd_plan(args: &Args) -> Result<()> {
         None => println!("no feasible configuration — raise the budget or the MP sizes lowered in artifacts"),
     }
     Ok(())
+}
+
+/// `splitbrain watch <run-dir>`: a read-only progress view over a
+/// durable run — in-proc (`train --run-dir`) or multi-process
+/// (`launch --run-dir`), live or finished. Follow mode (the default)
+/// refreshes until the run completes or is classified dead; `--once`
+/// prints one snapshot and exits. Output auto-degrades to plain
+/// append-only lines when stdout is not a terminal (CI logs, `tee`);
+/// `--plain` forces that.
+fn cmd_watch(args: &Args) -> Result<()> {
+    use std::io::IsTerminal;
+    use std::time::Duration;
+
+    use splitbrain::api::{Liveness, Watcher};
+
+    // Deliberately not `known_flags(..)`: watch takes no run-config
+    // flags — it observes someone else's run.
+    args.check_known(&[
+        "run-dir", "follow", "once", "interval-ms", "plain", "stall-ms", "dead-ms",
+        "compute-threads",
+    ])?;
+    let dir = match (args.positional(1), args.str_or("run-dir", "")) {
+        (_, d) if !d.is_empty() => d.to_string(),
+        (Some(d), _) => d.to_string(),
+        // NB the flag parser binds `--once <dir>` as a value, so the
+        // dir must come before bare boolean flags — say so.
+        (None, _) => bail!(
+            "usage: splitbrain watch <run-dir> [--follow|--once] [--interval-ms N] [--plain]\n\
+             (put the run dir first, or pass it as --run-dir DIR)"
+        ),
+    };
+    let once = args.has("once");
+    if once && args.has("follow") {
+        bail!("--follow and --once are mutually exclusive");
+    }
+    let interval = Duration::from_millis(args.u64_or("interval-ms", 500)?);
+    let plain = args.bool_or("plain", false)? || !std::io::stdout().is_terminal();
+
+    let mut watcher = Watcher::open(&dir)
+        .map_err(|e| anyhow::anyhow!("cannot watch {dir}: {e}"))?;
+    if args.has("stall-ms") {
+        watcher = watcher.with_stall_after(Duration::from_millis(args.u64_or("stall-ms", 0)?));
+    }
+    if args.has("dead-ms") {
+        watcher = watcher.with_dead_after(Duration::from_millis(args.u64_or("dead-ms", 0)?));
+    }
+
+    if once {
+        watcher.poll()?;
+        print!("{}", render_status(&dir, &watcher));
+        return Ok(());
+    }
+
+    let mut drawn_lines = 0usize;
+    let mut last_line = String::new();
+    loop {
+        let delta = watcher.poll()?;
+        let live = watcher.liveness();
+        if plain {
+            if delta.reset {
+                println!("[watch] history rewritten (resume cut) — re-replaying");
+            }
+            let line = progress_line(&watcher, live, delta.frontier);
+            if line != last_line {
+                println!("{line}");
+                last_line = line;
+            }
+        } else {
+            // ANSI redraw: cursor up over the previous block, clear to
+            // end of screen, repaint.
+            if drawn_lines > 0 {
+                print!("\x1b[{drawn_lines}A\x1b[J");
+            }
+            let block = render_status(&dir, &watcher);
+            drawn_lines = block.lines().count();
+            print!("{block}");
+            use std::io::Write as _;
+            let _ = std::io::stdout().flush();
+        }
+        match live {
+            Liveness::Completed => {
+                if plain {
+                    print!("{}", render_status(&dir, &watcher));
+                }
+                return Ok(());
+            }
+            Liveness::Dead => {
+                if plain {
+                    print!("{}", render_status(&dir, &watcher));
+                }
+                bail!(
+                    "run is dead (workers gone / frontier stale) — resume with \
+                     `splitbrain launch --run-dir {dir} --resume` or `splitbrain train --resume {dir}`"
+                );
+            }
+            Liveness::Running | Liveness::Stalled => {}
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// One plain-mode progress line — append-only, diff-friendly, stable
+/// enough for CI to grep.
+fn progress_line(watcher: &splitbrain::api::Watcher, live: splitbrain::api::Liveness, frontier: u64) -> String {
+    let st = watcher.status();
+    let steps = match st.steps_planned {
+        0 => st.steps_done.to_string(),
+        n => format!("{}/{n}", st.steps_done),
+    };
+    let loss = match st.tail.last() {
+        Some(r) => format!("{:.4}", r.loss),
+        None => "-".to_string(),
+    };
+    let ckpt = match st.latest_checkpoint_step() {
+        Some(s) => s.to_string(),
+        None => "-".to_string(),
+    };
+    format!(
+        "[watch] step {steps}  loss {loss}  workers {} mp={}  ckpt {ckpt}  frontier {frontier}B  {live}",
+        st.n_workers, st.mp
+    )
+}
+
+/// The full status block (`--once` output and the ANSI-mode frame).
+/// The `store_watch` suite pins this byte-for-byte against the blessed
+/// golden run dir — change it only with the test.
+fn render_status(dir: &str, watcher: &splitbrain::api::Watcher) -> String {
+    use std::fmt::Write as _;
+    let st = watcher.status();
+    let mut out = String::new();
+    let _ = writeln!(out, "run dir: {dir}");
+    let _ = writeln!(out, "status:  {}", watcher.liveness());
+    if let Some(i) = &st.run {
+        let _ = writeln!(
+            out,
+            "config:  {} workers, mp={} ({} groups), B={}, engine={}, collectives={}, overlap={}",
+            i.n_workers, i.mp, i.n_groups, i.batch, i.engine, i.collectives, i.overlap
+        );
+    }
+    match st.steps_planned {
+        0 => {
+            let _ = writeln!(out, "steps:   {}", st.steps_done);
+        }
+        n => {
+            let _ = writeln!(
+                out,
+                "steps:   {}/{} ({:.1}%)",
+                st.steps_done,
+                n,
+                st.steps_done as f64 / n as f64 * 100.0
+            );
+        }
+    }
+    if let Some(r) = st.tail.last() {
+        let _ = writeln!(out, "loss:    {:.4} (step {})", r.loss, r.step);
+    }
+    if let Some(rate) = st.images_per_sec_wall() {
+        let _ = writeln!(out, "rate:    {rate:.1} images/sec (wall)");
+    }
+    if st.bytes_total > 0 {
+        let _ = writeln!(out, "bytes:   {} busiest rank / {} total", st.bytes_busiest, st.bytes_total);
+    }
+    let lost = if st.lost_ranks.is_empty() {
+        String::new()
+    } else {
+        format!(" (lost ranks {:?})", st.lost_ranks)
+    };
+    let _ = writeln!(
+        out,
+        "cluster: {} workers, mp={}, recoveries={}{lost}",
+        st.n_workers, st.mp, st.recoveries
+    );
+    if let Some(step) = st.latest_checkpoint_step() {
+        let _ = writeln!(out, "ckpts:   {} (latest step {step})", st.checkpoints.len());
+    }
+    if !st.resumes.is_empty() {
+        let steps: Vec<String> = st.resumes.iter().map(|s| format!("step {s}")).collect();
+        let _ = writeln!(out, "lineage: resumed at {}", steps.join(", "));
+    }
+    if let Some(c) = &st.corrupt {
+        let _ = writeln!(out, "corrupt: {c}");
+    }
+    out
 }

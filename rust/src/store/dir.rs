@@ -11,8 +11,12 @@
 //! ```
 //!
 //! [`RunDir::create`] refuses a directory that already holds a run
-//! (resume instead of clobbering history); [`RunDir::open`] demands
-//! `run.json`. Checkpoint discovery is name-based and *verification
+//! (resume instead of clobbering history) and publishes `run.json`
+//! atomically — tmp + hard-link + dir fsync, so a crash can tear a
+//! *tmp*, never the manifest, and concurrently spawned `launch`
+//! workers race to exactly one winner. [`RunDir::open`] demands a
+//! non-empty `run.json`; both entry points sweep stale `*.tmp` litter
+//! left by a SIGKILL mid-write. Checkpoint discovery is name-based and *verification
 //! happens at load*: [`RunDir::latest_valid_checkpoint`] walks steps
 //! newest-first and skips any artifact whose CRC or fingerprint fails,
 //! so a torn checkpoint write degrades to the previous boundary instead
@@ -30,44 +34,141 @@ pub struct RunDir {
 }
 
 impl RunDir {
-    /// Create a fresh run dir: make the directories, persist the
-    /// canonical manifest. Fails with [`StoreError::RunExists`] if the
-    /// directory already holds a `run.json`.
+    /// Create a fresh run dir: make the directories, sweep stale
+    /// atomic-write leftovers, and *atomically publish* the canonical
+    /// manifest (tmp + hard-link + parent-dir fsync, the
+    /// [`save_artifact`](super::save_artifact) discipline — the
+    /// hard-link is the no-clobber step, so concurrent creators race
+    /// safely and a crash can never leave a torn `run.json`). Fails
+    /// with [`StoreError::RunExists`] if the directory already holds a
+    /// published manifest.
     pub fn create(root: impl AsRef<Path>, manifest_json: &str) -> Result<RunDir, StoreError> {
         let root = root.as_ref();
         std::fs::create_dir_all(root.join("checkpoints"))
             .map_err(|e| StoreError::io(root, "mkdir", e))?;
-        let run_json = root.join("run.json");
-        if run_json.exists() {
-            return Err(StoreError::RunExists(root.display().to_string()));
-        }
-        std::fs::write(&run_json, manifest_json)
-            .map_err(|e| StoreError::io(&run_json, "write", e))?;
-        Ok(RunDir { root: root.to_path_buf() })
+        let d = RunDir { root: root.to_path_buf() };
+        d.sweep_stale_tmp();
+        d.publish_manifest(manifest_json)?;
+        Ok(d)
     }
 
-    /// Open an existing run dir (must contain `run.json`).
+    /// Open an existing run dir (must contain a non-empty `run.json`;
+    /// an *empty* one is the crash signature of a torn legacy write
+    /// and reads as not-a-run-dir). Sweeps stale `*.tmp` litter that a
+    /// SIGKILL mid-[`save_artifact`](super::save_artifact) left behind
+    /// — safe here because `open` is a writer's entry point; the
+    /// read-only [`Watcher`](crate::api::Watcher) never calls it.
     pub fn open(root: impl AsRef<Path>) -> Result<RunDir, StoreError> {
         let root = root.as_ref();
-        if !root.join("run.json").is_file() {
+        let d = RunDir { root: root.to_path_buf() };
+        if !d.has_manifest() {
             return Err(StoreError::NotARunDir(root.display().to_string()));
         }
         std::fs::create_dir_all(root.join("checkpoints"))
             .map_err(|e| StoreError::io(root, "mkdir", e))?;
-        Ok(RunDir { root: root.to_path_buf() })
+        d.sweep_stale_tmp();
+        Ok(d)
     }
 
-    /// Open if `run.json` exists, create otherwise — the launch
-    /// engine's idempotent entry point.
+    /// Open if a manifest exists, create otherwise — the launch
+    /// engine's idempotent entry point. A create race lost to a
+    /// concurrently spawned worker (its hard-link published first) is
+    /// a successful `open`, not an error.
     pub fn open_or_create(
         root: impl AsRef<Path>,
         manifest_json: &str,
     ) -> Result<RunDir, StoreError> {
         let r = root.as_ref();
-        if r.join("run.json").is_file() {
-            Self::open(r)
-        } else {
-            Self::create(r, manifest_json)
+        match Self::open(r) {
+            Ok(d) => Ok(d),
+            Err(StoreError::NotARunDir(_)) => match Self::create(r, manifest_json) {
+                Err(StoreError::RunExists(_)) => Self::open(r),
+                other => other,
+            },
+            Err(e) => Err(e),
+        }
+    }
+
+    /// True when a published (non-empty) `run.json` is present. Zero
+    /// length is the one state the legacy non-atomic writer could
+    /// crash into; it is treated as absent so the dir stays creatable.
+    fn has_manifest(&self) -> bool {
+        std::fs::metadata(self.manifest_path()).map(|m| m.len() > 0).unwrap_or(false)
+    }
+
+    /// Atomically publish `run.json`: write a per-process tmp, fsync
+    /// it, hard-link it into place (the filesystem picks exactly one
+    /// winner under concurrent creators), fsync the directory entry.
+    /// An existing *empty* `run.json` (torn legacy write) is healed by
+    /// removal first.
+    fn publish_manifest(&self, manifest_json: &str) -> Result<(), StoreError> {
+        let target = self.manifest_path();
+        match std::fs::metadata(&target) {
+            Ok(m) if m.len() > 0 => {
+                return Err(StoreError::RunExists(self.root.display().to_string()));
+            }
+            Ok(_) => {
+                std::fs::remove_file(&target)
+                    .map_err(|e| StoreError::io(&target, "unlink", e))?;
+            }
+            Err(_) => {}
+        }
+        let tmp = self.root.join(format!("run.json.tmp-{}", std::process::id()));
+        {
+            use std::io::Write as _;
+            let mut f =
+                std::fs::File::create(&tmp).map_err(|e| StoreError::io(&tmp, "create", e))?;
+            f.write_all(manifest_json.as_bytes())
+                .map_err(|e| StoreError::io(&tmp, "write", e))?;
+            f.sync_data().map_err(|e| StoreError::io(&tmp, "fsync", e))?;
+        }
+        let linked = std::fs::hard_link(&tmp, &target);
+        let _ = std::fs::remove_file(&tmp);
+        match linked {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                return Err(StoreError::RunExists(self.root.display().to_string()));
+            }
+            // A racing winner published *and* already swept our tmp
+            // (its `open`-side sweep): same lost race, different errno.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound && self.has_manifest() => {
+                return Err(StoreError::RunExists(self.root.display().to_string()));
+            }
+            Err(e) => return Err(StoreError::io(&target, "publish", e)),
+        }
+        if let Some(parent) = target.parent() {
+            // Persist the link itself: fsync the directory entry.
+            if let Ok(dir) = std::fs::File::open(parent) {
+                let _ = dir.sync_data();
+            }
+        }
+        Ok(())
+    }
+
+    /// Best-effort removal of stale atomic-write leftovers: a SIGKILL
+    /// mid-[`save_artifact`](super::save_artifact) strands a
+    /// `step-K….ckpt.tmp` in `checkpoints/` forever, and a killed
+    /// create strands a `run.json.tmp-<pid>`. Only called from
+    /// `create`/`open` — a process about to *own* the dir, before any
+    /// of its own artifact writes start. Manifest tmps are only swept
+    /// once a manifest is published, so a concurrent creator's
+    /// in-flight tmp is never deleted from under it.
+    fn sweep_stale_tmp(&self) {
+        if let Ok(entries) = std::fs::read_dir(self.checkpoints_dir()) {
+            for e in entries.flatten() {
+                if e.file_name().to_str().is_some_and(|n| n.ends_with(".tmp")) {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+        if self.has_manifest() {
+            if let Ok(entries) = std::fs::read_dir(&self.root) {
+                for e in entries.flatten() {
+                    if e.file_name().to_str().is_some_and(|n| n.starts_with("run.json.tmp-")) {
+                        let _ = std::fs::remove_file(e.path());
+                    }
+                }
+            }
         }
     }
 
@@ -200,6 +301,46 @@ mod tests {
     fn open_missing_is_not_a_run_dir() {
         let root = tmp("missing");
         assert!(matches!(RunDir::open(&root), Err(StoreError::NotARunDir(_))));
+    }
+
+    #[test]
+    fn torn_empty_manifest_is_healed_not_poisonous() {
+        let root = tmp("torn");
+        std::fs::create_dir_all(&root).unwrap();
+        // The legacy non-atomic writer's crash signature: run.json
+        // exists but is empty. It must neither open as a run...
+        std::fs::write(root.join("run.json"), b"").unwrap();
+        assert!(matches!(RunDir::open(&root), Err(StoreError::NotARunDir(_))));
+        // ...nor block re-creation (open_or_create heals it).
+        let d = RunDir::open_or_create(&root, "{\"v\":1}").unwrap();
+        assert_eq!(d.manifest_json().unwrap(), "{\"v\":1}");
+        // Once published, the manifest is durable and wins all races:
+        // a second create loses, a second open_or_create opens.
+        assert!(matches!(RunDir::create(&root, "{}"), Err(StoreError::RunExists(_))));
+        let again = RunDir::open_or_create(&root, "{\"v\":2}").unwrap();
+        assert_eq!(again.manifest_json().unwrap(), "{\"v\":1}", "lost race opens, not clobbers");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn open_sweeps_stale_tmp_litter() {
+        let root = tmp("sweep");
+        let d = RunDir::create(&root, "{}").unwrap();
+        // Plant the exact litter a SIGKILL mid-save_artifact leaves:
+        // the tmp sits next to a real artifact it never replaced.
+        std::fs::write(d.checkpoint_path(2), b"x").unwrap();
+        let stale = d.checkpoints_dir().join("step-4.ckpt.tmp");
+        std::fs::write(&stale, b"half-written").unwrap();
+        let stale_manifest = root.join("run.json.tmp-99999");
+        std::fs::write(&stale_manifest, b"half").unwrap();
+        // Stale tmps are never scanned as checkpoints...
+        assert_eq!(d.checkpoint_steps(), vec![2]);
+        // ...and the next open (a resume) removes them.
+        let d = RunDir::open(&root).unwrap();
+        assert!(!stale.exists(), "stale ckpt tmp must be swept on open");
+        assert!(!stale_manifest.exists(), "stale manifest tmp must be swept on open");
+        assert_eq!(d.checkpoint_steps(), vec![2], "real artifacts survive the sweep");
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

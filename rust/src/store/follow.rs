@@ -1,0 +1,263 @@
+//! Incremental tail-following of a run's `events.log`.
+//!
+//! [`replay`](super::replay) reads a log once, from the start — right
+//! for resume, wrong for *watching*: a watcher polls a file that a
+//! live writer is appending to (and, across a resume, truncating).
+//! [`LogFollower`] is the polling half: it remembers the byte offset
+//! of the last fully decoded record and, on each
+//! [`poll`](LogFollower::poll), decodes only what the writer appended
+//! since — with two hazards handled explicitly:
+//!
+//! * **Torn tail.** The writer may be mid-`append` when we read, so
+//!   the frontier can end inside a record ([`StoreError::Truncated`]).
+//!   That is not corruption and not terminal: the follower leaves the
+//!   partial bytes unconsumed and re-probes them on the next poll,
+//!   delivering the record exactly once — when it is whole.
+//! * **History rewrite.** Resume truncates the log to a record
+//!   boundary ([`LogWriter::open_truncated`](super::log::LogWriter::open_truncated))
+//!   and appends a new incarnation, so the frontier can move
+//!   *backwards* — or, worse, regrow past the follower's offset before
+//!   the next poll, leaving the length alone looking monotonic. The
+//!   follower detects both (length check + re-probing the CRC trailer
+//!   of the last delivered record) and signals a clean re-replay from
+//!   offset zero rather than decoding from the middle of unrelated
+//!   bytes.
+//!
+//! Real corruption (a flipped byte inside a settled record) is
+//! reported via [`FollowPoll::corrupt`] and the follower refuses to
+//! advance past it: downstream record boundaries cannot be trusted, so
+//! it re-reports on every poll until a resume rewrites the region
+//! (which the reset probe then catches).
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use super::log::{decode_one, LogRecord};
+use super::StoreError;
+
+/// Identity of the last record a follower delivered: where it ended
+/// and the CRC-32 trailer that must still be on disk there. If those
+/// four bytes change, history was rewritten under us.
+#[derive(Debug, Clone, Copy)]
+struct LastRecord {
+    /// Byte offset one past the record's CRC trailer (== the
+    /// follower's read offset).
+    end: u64,
+    /// The record's CRC-32 trailer value.
+    crc: u32,
+}
+
+/// The result of one [`LogFollower::poll`].
+#[derive(Debug)]
+pub struct FollowPoll {
+    /// Records decoded this poll, in log order. After a reset this is
+    /// the full re-replay, not a delta.
+    pub records: Vec<LogRecord>,
+    /// True when the log's history was rewritten since the last poll
+    /// (truncate-for-resume, or the file vanished): any state folded
+    /// from earlier polls is stale and must be rebuilt from
+    /// [`records`](Self::records), which restarts from the beginning
+    /// of the log.
+    pub reset: bool,
+    /// Byte offset of the decode frontier after this poll — advances
+    /// monotonically between resets, and only over fully decoded
+    /// records.
+    pub frontier: u64,
+    /// A non-torn decode error at the frontier (flipped byte, bad
+    /// magic/version). The follower does not advance past it; the same
+    /// error is re-reported on every poll until the region is
+    /// rewritten. A torn tail is *not* reported here — it is awaited.
+    pub corrupt: Option<StoreError>,
+}
+
+/// Polls an append-only event log and decodes records incrementally.
+///
+/// Create one per log file with [`LogFollower::new`] (the file need
+/// not exist yet) and call [`poll`](Self::poll) at whatever cadence
+/// suits the caller; each poll returns the newly settled records.
+/// The follower never writes, creates, or locks anything.
+#[derive(Debug)]
+pub struct LogFollower {
+    path: PathBuf,
+    /// Byte offset of the first not-yet-delivered byte. Invariant:
+    /// equals `last.end` whenever `last` is `Some`.
+    offset: u64,
+    last: Option<LastRecord>,
+}
+
+impl LogFollower {
+    /// A follower positioned at the start of `path`. The file may not
+    /// exist yet — polls before the writer creates it return empty.
+    pub fn new(path: impl AsRef<Path>) -> LogFollower {
+        LogFollower { path: path.as_ref().to_path_buf(), offset: 0, last: None }
+    }
+
+    /// The log file this follower reads.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Current decode frontier in bytes (0 until the first record
+    /// settles).
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Read everything the writer appended (or rewrote) since the last
+    /// poll.
+    ///
+    /// Errors only on hard I/O failures against an existing file; a
+    /// missing file and every decode-level malformation are reported
+    /// in-band through [`FollowPoll`].
+    pub fn poll(&mut self) -> Result<FollowPoll, StoreError> {
+        let len = match std::fs::metadata(&self.path) {
+            Ok(m) => m.len(),
+            Err(_) => {
+                // The writer has not created the log yet — or the run
+                // dir was removed wholesale. Not an error for a
+                // follower; if records were already delivered, the
+                // history they came from is gone: reset.
+                let reset = self.offset > 0;
+                self.offset = 0;
+                self.last = None;
+                return Ok(FollowPoll { records: Vec::new(), reset, frontier: 0, corrupt: None });
+            }
+        };
+        let mut file =
+            File::open(&self.path).map_err(|e| StoreError::io(&self.path, "open", e))?;
+
+        let mut reset = false;
+        if len < self.offset {
+            // Frontier moved backwards: a resume cut dropped records we
+            // already delivered.
+            reset = true;
+        } else if let Some(last) = self.last {
+            // The file is at least as long as our offset — but a resume
+            // cut below the offset followed by fast regrowth looks
+            // exactly like an append. Cheap rewrite probe: the CRC
+            // trailer of the last delivered record must still sit at
+            // the same offset.
+            if read_u32_at(&mut file, &self.path, last.end - 4)? != Some(last.crc) {
+                reset = true;
+            }
+        }
+        if reset {
+            self.offset = 0;
+            self.last = None;
+        }
+
+        file.seek(SeekFrom::Start(self.offset))
+            .map_err(|e| StoreError::io(&self.path, "seek", e))?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf).map_err(|e| StoreError::io(&self.path, "read", e))?;
+
+        let mut records = Vec::new();
+        let mut pos = 0usize;
+        let mut corrupt = None;
+        while pos < buf.len() {
+            match decode_one(&buf[pos..]) {
+                Ok((rec, consumed)) => {
+                    let end = pos + consumed;
+                    let crc = u32::from_le_bytes(buf[end - 4..end].try_into().unwrap());
+                    self.last = Some(LastRecord { end: self.offset + end as u64, crc });
+                    records.push(rec);
+                    pos = end;
+                }
+                // The writer is mid-append: leave the partial bytes
+                // unconsumed and re-probe next poll.
+                Err(StoreError::Truncated { .. }) => break,
+                // Settled corruption: report, never skip — boundaries
+                // past a bad record are meaningless.
+                Err(e) => {
+                    corrupt = Some(e);
+                    break;
+                }
+            }
+        }
+        self.offset += pos as u64;
+        Ok(FollowPoll { records, reset, frontier: self.offset, corrupt })
+    }
+}
+
+/// The little-endian `u32` at byte offset `at`, or `None` if the file
+/// ends before four bytes are available (the file shrank under us —
+/// the caller treats that as a rewrite).
+fn read_u32_at(file: &mut File, path: &Path, at: u64) -> Result<Option<u32>, StoreError> {
+    file.seek(SeekFrom::Start(at)).map_err(|e| StoreError::io(path, "seek", e))?;
+    let mut b = [0u8; 4];
+    match file.read_exact(&mut b) {
+        Ok(()) => Ok(Some(u32::from_le_bytes(b))),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
+        Err(e) => Err(StoreError::io(path, "read", e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::log::LogWriter;
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sb-follow-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rec(step: u64) -> LogRecord {
+        LogRecord::Resumed { step }
+    }
+
+    #[test]
+    fn polls_before_the_file_exists_are_empty_not_errors() {
+        let dir = tmp("nofile");
+        let mut fl = LogFollower::new(dir.join("events.log"));
+        let p = fl.poll().unwrap();
+        assert!(p.records.is_empty() && !p.reset && p.corrupt.is_none());
+        assert_eq!(p.frontier, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delivers_appends_incrementally() {
+        let dir = tmp("incr");
+        let path = dir.join("events.log");
+        let mut w = LogWriter::create(&path).unwrap();
+        let mut fl = LogFollower::new(&path);
+        w.append(&rec(1)).unwrap();
+        assert_eq!(fl.poll().unwrap().records, vec![rec(1)]);
+        w.append(&rec(2)).unwrap();
+        w.append(&rec(3)).unwrap();
+        let p = fl.poll().unwrap();
+        assert_eq!(p.records, vec![rec(2), rec(3)]);
+        assert!(!p.reset && p.corrupt.is_none());
+        assert!(fl.poll().unwrap().records.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncate_below_offset_resets_even_after_regrowth() {
+        let dir = tmp("regrow");
+        let path = dir.join("events.log");
+        let mut w = LogWriter::create(&path).unwrap();
+        for s in 1..=3 {
+            w.append(&rec(s)).unwrap();
+        }
+        let mut fl = LogFollower::new(&path);
+        assert_eq!(fl.poll().unwrap().records.len(), 3);
+        drop(w);
+        // Cut back to one record, then regrow *past* the old frontier:
+        // length alone cannot reveal the rewrite.
+        let rp = super::super::replay(&path).unwrap();
+        let mut w = LogWriter::open_truncated(&path, rp.offsets[0].1).unwrap();
+        for s in 10..=13 {
+            w.append(&rec(s)).unwrap();
+        }
+        assert!(std::fs::metadata(&path).unwrap().len() > rp.valid_bytes);
+        let p = fl.poll().unwrap();
+        assert!(p.reset);
+        assert_eq!(p.records, vec![rec(1), rec(10), rec(11), rec(12), rec(13)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

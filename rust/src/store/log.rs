@@ -457,8 +457,10 @@ pub fn replay(path: impl AsRef<Path>) -> Result<Replay, StoreError> {
 }
 
 /// Decode one record from the head of `buf`; returns the record and the
-/// bytes consumed.
-fn decode_one(buf: &[u8]) -> Result<(LogRecord, usize), StoreError> {
+/// bytes consumed. Shared with the incremental tail-follower in
+/// [`super::follow`], which needs record-at-a-time decoding from an
+/// arbitrary byte offset.
+pub(crate) fn decode_one(buf: &[u8]) -> Result<(LogRecord, usize), StoreError> {
     if buf.len() < HEADER_LEN {
         return Err(StoreError::Truncated { needed: HEADER_LEN, got: buf.len() });
     }

@@ -34,13 +34,20 @@
 //! to a typed [`StoreError`]: a torn tail write or flipped byte yields
 //! recovery to the last valid record, never a panic and never silent
 //! divergence (`prop_store` sweeps every truncation boundary).
+//!
+//! For *live* observation, [`LogFollower`] tail-follows a log that a
+//! writer is still appending to (or truncating across a resume) — the
+//! read side behind `splitbrain watch` and
+//! [`Watcher`](crate::api::Watcher).
 
 pub mod ckpt;
 pub mod dir;
+pub mod follow;
 pub mod log;
 
 pub use ckpt::{load_artifact, save_artifact, CheckpointArtifact};
 pub use dir::RunDir;
+pub use follow::{FollowPoll, LogFollower};
 pub use log::{replay, LogRecord, LogWriter, Replay};
 
 /// Every way the durable store can fail, typed. I/O carries the path

@@ -328,3 +328,121 @@ fn plan_comm_estimate_matches_measured_bytes() {
         est.mp_bytes_per_step, first.bytes_busiest_rank
     );
 }
+
+/// Resumed-run console output: the resumed incarnation re-emits the
+/// `RunStarted` header (setting `ConsoleSink`'s planned step count),
+/// prints no pre-resume steps, prints the *final* step even when it is
+/// off the log-every cadence, and the summary covers the whole run —
+/// not just the post-resume tail.
+#[test]
+fn console_sink_resumed_run_prints_final_step_and_full_summary() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let steps = 6;
+    let dir = std::env::temp_dir()
+        .join(format!("sb-api-console-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // A durable run killed after step 5: the newest complete boundary
+    // is step 4, so resume replays steps 5..=6.
+    let mut victim = builder(2, 2, steps)
+        .run_dir(&dir)
+        .dataset(dataset())
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    for _ in 0..5 {
+        victim.step().unwrap();
+    }
+    drop(victim);
+
+    let mut resumed = SessionBuilder::resume_from(&dir)
+        .unwrap()
+        .dataset(dataset())
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    assert_eq!(resumed.steps_done(), 4, "resume lands on the step-4 boundary");
+    let buf = SharedBuf::default();
+    // log_every=4: step 5 (first resumed) and step 6 (final, 6 % 4 != 0)
+    // are both off-cadence — only the final-step rule prints anything.
+    resumed.attach(Box::new(ConsoleSink::with_writer(4, Box::new(buf.clone()))));
+    let collect = CollectSink::new();
+    let events = collect.events();
+    resumed.attach(Box::new(collect));
+    resumed.run().unwrap();
+
+    let got = String::from_utf8(buf.0.borrow().clone()).unwrap();
+    assert_eq!(
+        got.matches("SplitBrain:").count(),
+        1,
+        "exactly one header from the resumed incarnation:\n{got}"
+    );
+    assert!(
+        !got.contains("step    4") && !got.contains("step    5"),
+        "no pre-resume or off-cadence steps:\n{got}"
+    );
+    assert!(
+        got.contains("step    6"),
+        "the final step must print even off the log-every cadence:\n{got}"
+    );
+    assert!(got.contains("\nthroughput: "), "summary footer present:\n{got}");
+    let summary_steps: Vec<usize> = events
+        .borrow()
+        .iter()
+        .filter_map(|e| match e {
+            Event::RunCompleted(s) => Some(s.steps),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(summary_steps, vec![steps], "summary counts the whole run");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `DiskSink` latches its first write error instead of failing the
+/// run — but never silently: it is readable via `error()` and the
+/// shared `error_handle()` after the sink moved into a session.
+#[test]
+fn disk_sink_latches_write_errors_and_exposes_them() {
+    use splitbrain::api::{DiskSink, EventSink, RunSummary};
+    // /dev/full accepts open() and fails every write with ENOSPC — the
+    // portable unwritable path on Linux CI. Elsewhere: skip.
+    if !std::path::Path::new("/dev/full").exists() {
+        eprintln!("skipping: /dev/full not available on this platform");
+        return;
+    }
+    let mut sink = DiskSink::create("/dev/full").unwrap();
+    let handle = sink.error_handle();
+    assert!(sink.error().is_none());
+    let report = StepReport {
+        step: 1,
+        loss: 2.5,
+        compute_secs: 0.0,
+        mp_comm_secs: 0.0,
+        dp_comm_secs: 0.0,
+        wall_secs: 0.0,
+        bytes_busiest_rank: 0,
+        bytes_total: 0,
+    };
+    sink.on_event(&Event::StepCompleted(report.clone()));
+    let first = sink.error().expect("the failed append must latch an error");
+    // Latched: later events neither write nor replace the error.
+    sink.on_event(&Event::StepCompleted(report));
+    assert_eq!(sink.error(), Some(first.clone()));
+    sink.on_event(&Event::RunCompleted(RunSummary {
+        steps: 1,
+        images_per_sec: 0.0,
+        comm_fraction: 0.0,
+        recoveries: 0,
+        lost_ranks: vec![],
+        n_workers: 2,
+        mp: 1,
+        last_checkpoint_step: 0,
+    }));
+    assert_eq!(
+        handle.borrow().clone(),
+        Some(first),
+        "the shared handle sees the same latched error after the run"
+    );
+}

@@ -1,0 +1,511 @@
+//! The watcher battery: `LogFollower` tail semantics (torn-tail
+//! re-probe, truncate-for-resume reset), the `Watcher`'s typed
+//! `RunStatus` fold and liveness rules, the pinned `splitbrain watch
+//! --once` snapshot over the blessed golden run dir, and the
+//! end-to-end SIGKILL → `Dead` → `--resume` → `Running`-with-lineage
+//! flow against a real multi-process launch.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::{Duration, Instant, SystemTime};
+
+use splitbrain::api::{
+    Liveness, RecoveryInfo, RunInfo, RunSummary, StepReport, Watcher,
+};
+use splitbrain::comm::CollectiveAlgo;
+use splitbrain::coordinator::ExecEngine;
+use splitbrain::store::{replay, LogFollower, LogRecord, LogWriter, StoreError};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_splitbrain")
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sb-watch-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A step record with exactly-representable floats (no rounding drift
+/// in the assertions).
+fn step(step: usize, loss: f64) -> LogRecord {
+    LogRecord::Step(StepReport {
+        step,
+        loss,
+        compute_secs: 0.5,
+        mp_comm_secs: 0.0625,
+        dp_comm_secs: 0.0,
+        wall_secs: 0.25,
+        bytes_busiest_rank: 1024,
+        bytes_total: 4096,
+    })
+}
+
+fn append_raw(path: &Path, bytes: &[u8]) {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().append(true).open(path).unwrap();
+    f.write_all(bytes).unwrap();
+}
+
+// ---------------------------------------------------------------- follower
+
+#[test]
+fn follower_delivers_incrementally_exactly_once() {
+    let dir = tmp_dir("incremental");
+    let path = dir.join("events.log");
+    let mut fl = LogFollower::new(&path);
+    // Before the writer creates the file: empty, not an error.
+    let p = fl.poll().unwrap();
+    assert!(p.records.is_empty() && !p.reset && p.corrupt.is_none());
+
+    let mut w = LogWriter::create(&path).unwrap();
+    w.append(&step(1, 2.5)).unwrap();
+    let p = fl.poll().unwrap();
+    assert_eq!(p.records, vec![step(1, 2.5)]);
+    assert!(!p.reset);
+    w.append(&step(2, 2.25)).unwrap();
+    w.append(&step(3, 2.0)).unwrap();
+    let p = fl.poll().unwrap();
+    assert_eq!(p.records, vec![step(2, 2.25), step(3, 2.0)], "only the new records");
+    // Quiescent writer: nothing re-delivered, frontier == file length.
+    let p = fl.poll().unwrap();
+    assert!(p.records.is_empty() && !p.reset && p.corrupt.is_none());
+    assert_eq!(p.frontier, std::fs::metadata(&path).unwrap().len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_tail_is_reprobed_then_delivered_exactly_once() {
+    let dir = tmp_dir("torn");
+    let path = dir.join("events.log");
+    let mut w = LogWriter::create(&path).unwrap();
+    w.append(&step(1, 2.5)).unwrap();
+    let mut fl = LogFollower::new(&path);
+    assert_eq!(fl.poll().unwrap().records.len(), 1);
+
+    // Simulate the writer caught mid-append: half of record 2's bytes.
+    let bytes = step(2, 2.25).encode();
+    let (head, tail) = bytes.split_at(bytes.len() / 2);
+    append_raw(&path, head);
+    for _ in 0..3 {
+        let p = fl.poll().unwrap();
+        assert!(p.records.is_empty(), "a torn tail must never be delivered");
+        assert!(p.corrupt.is_none(), "a torn tail is awaited, not corruption");
+        assert!(!p.reset, "a torn tail is not a rewrite");
+    }
+    // The writer finishes the record: delivered exactly once.
+    append_raw(&path, tail);
+    let p = fl.poll().unwrap();
+    assert_eq!(p.records, vec![step(2, 2.25)]);
+    assert!(fl.poll().unwrap().records.is_empty(), "never re-delivered");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn frontier_corruption_is_reported_and_never_skipped() {
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("events.log");
+    let mut w = LogWriter::create(&path).unwrap();
+    w.append(&step(1, 2.5)).unwrap();
+    w.append(&step(2, 2.25)).unwrap();
+    drop(w);
+    // Flip one byte in the middle of record 2.
+    let rp = replay(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = ((rp.offsets[1].0 + rp.offsets[1].1) / 2) as usize;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut fl = LogFollower::new(&path);
+    let p = fl.poll().unwrap();
+    assert_eq!(p.records, vec![step(1, 2.5)], "the clean prefix still arrives");
+    assert!(p.corrupt.is_some(), "the flipped byte must surface");
+    let frontier = p.frontier;
+    let p = fl.poll().unwrap();
+    assert!(p.records.is_empty());
+    assert!(p.corrupt.is_some(), "corruption is re-reported, not forgotten");
+    assert_eq!(p.frontier, frontier, "the follower never advances past corruption");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncate_for_resume_triggers_clean_rereplay() {
+    let dir = tmp_dir("reset");
+    let path = dir.join("events.log");
+    let mut w = LogWriter::create(&path).unwrap();
+    for s in 1..=4 {
+        w.append(&step(s, 3.0 - s as f64 * 0.25)).unwrap();
+    }
+    let mut fl = LogFollower::new(&path);
+    assert_eq!(fl.poll().unwrap().records.len(), 4);
+    drop(w);
+
+    // The resume cut: keep records 1-2, then append a new incarnation
+    // that regrows *past* the old frontier — length alone looks like a
+    // plain append, only the rewritten bytes reveal the cut.
+    let rp = replay(&path).unwrap();
+    let mut w = LogWriter::open_truncated(&path, rp.offsets[1].1).unwrap();
+    w.append(&LogRecord::Resumed { step: 2 }).unwrap();
+    w.append(&step(3, 9.0)).unwrap();
+    w.append(&step(4, 9.5)).unwrap();
+    w.append(&step(5, 10.0)).unwrap();
+    assert!(
+        std::fs::metadata(&path).unwrap().len() > rp.valid_bytes,
+        "fixture sanity: the log regrew past the follower's old frontier"
+    );
+    let p = fl.poll().unwrap();
+    assert!(p.reset, "rewritten history must trigger a reset, not divergence");
+    assert_eq!(p.records.len(), 6, "a reset re-replays the whole new history");
+    assert_eq!(p.records[2], LogRecord::Resumed { step: 2 });
+    assert_eq!(p.records[5], step(5, 10.0));
+    drop(w);
+
+    // A cut exactly at the follower's frontier is NOT a rewrite: the
+    // follower continues seamlessly.
+    let mut fl2 = LogFollower::new(&path);
+    fl2.poll().unwrap();
+    let rp = replay(&path).unwrap();
+    let mut w2 = LogWriter::open_truncated(&path, rp.valid_bytes).unwrap();
+    w2.append(&step(6, 1.0)).unwrap();
+    let p = fl2.poll().unwrap();
+    assert!(!p.reset);
+    assert_eq!(p.records, vec![step(6, 1.0)]);
+    drop(w2);
+
+    // Shrink-only rewrite (frontier goes backwards, no regrowth).
+    let rp = replay(&path).unwrap();
+    drop(LogWriter::open_truncated(&path, rp.offsets[0].1).unwrap());
+    let p = fl2.poll().unwrap();
+    assert!(p.reset);
+    assert_eq!(p.records.len(), 1);
+    assert_eq!(p.records[0], step(1, 2.75));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------------------------- watcher
+
+/// The blessed golden log's records (mirrors `store_format`): one of
+/// every kind.
+fn golden_like_records() -> Vec<LogRecord> {
+    vec![
+        LogRecord::RunStarted(RunInfo {
+            n_workers: 4,
+            mp: 2,
+            n_groups: 2,
+            batch: 32,
+            steps: 4,
+            lr: 0.125,
+            avg_period: 2,
+            engine: ExecEngine::Threaded,
+            collectives: CollectiveAlgo::Ring,
+            overlap: true,
+            param_mb: 13.5,
+            total_mb: 29.75,
+        }),
+        LogRecord::Step(StepReport {
+            step: 1,
+            loss: 2.25,
+            compute_secs: 0.5,
+            mp_comm_secs: 0.0625,
+            dp_comm_secs: 0.0,
+            wall_secs: 0.25,
+            bytes_busiest_rank: 65536,
+            bytes_total: 262144,
+        }),
+        LogRecord::Checkpoint { step: 2, file: "step-2.ckpt".into(), fingerprint: 0x1234 },
+        LogRecord::Recovered(RecoveryInfo {
+            step: 3,
+            lost_ranks: vec![3],
+            n_workers: 3,
+            mp: 1,
+            restore_step: 2,
+        }),
+        LogRecord::Resumed { step: 2 },
+        LogRecord::RunCompleted(RunSummary {
+            steps: 4,
+            images_per_sec: 512.0,
+            comm_fraction: 0.25,
+            recoveries: 1,
+            lost_ranks: vec![3],
+            n_workers: 3,
+            mp: 1,
+            last_checkpoint_step: 4,
+        }),
+    ]
+}
+
+#[test]
+fn watcher_folds_records_into_typed_status() {
+    let dir = tmp_dir("fold");
+    let mut w = LogWriter::create(dir.join("events.log")).unwrap();
+    for r in golden_like_records() {
+        w.append(&r).unwrap();
+    }
+    let mut watcher = Watcher::open(&dir).unwrap();
+    let delta = watcher.poll().unwrap();
+    assert_eq!(delta.new_records, 6);
+    assert!(!delta.reset);
+    let st = watcher.status();
+    assert_eq!((st.steps_done, st.steps_planned), (4, 4));
+    assert_eq!(st.tail.last().unwrap().loss, 2.25);
+    assert_eq!((st.bytes_busiest, st.bytes_total), (65536, 262144));
+    assert_eq!((st.n_workers, st.mp), (3, 1), "membership tracks the shrink");
+    assert_eq!((st.recoveries, st.lost_ranks.clone()), (1, vec![3]));
+    assert_eq!(st.checkpoints, vec![(2, "step-2.ckpt".to_string())]);
+    assert_eq!(st.resumes, vec![2]);
+    assert!(st.summary.is_some() && st.corrupt.is_none());
+    // 32 batch × 4 launch workers × 1 tail step / 0.25 s — exact.
+    assert_eq!(st.images_per_sec_wall(), Some(512.0));
+    assert_eq!(watcher.liveness(), Liveness::Completed, "summary trumps staleness");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn watcher_open_is_read_only_and_demands_a_run_dir() {
+    let dir = tmp_dir("readonly");
+    // An existing dir with neither events.log nor run.json: not a run.
+    assert!(matches!(Watcher::open(&dir), Err(StoreError::NotARunDir(_))));
+    assert!(matches!(Watcher::open(dir.join("nope")), Err(StoreError::NotARunDir(_))));
+    // run.json alone (a created-but-never-started run) is watchable…
+    std::fs::write(dir.join("run.json"), "{}").unwrap();
+    let mut watcher = Watcher::open(&dir).unwrap();
+    watcher.poll().unwrap();
+    // …and watching must not create anything (no checkpoints/ mkdir,
+    // no events.log, no sweep side effects).
+    let mut entries: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    entries.sort();
+    assert_eq!(entries, vec!["run.json".to_string()]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn liveness_classification_rules() {
+    let dir = tmp_dir("liveness");
+    let mut w = LogWriter::create(dir.join("events.log")).unwrap();
+    w.append(&step(1, 2.5)).unwrap();
+    let mut watcher = Watcher::open(&dir).unwrap();
+    watcher.poll().unwrap();
+    let now = SystemTime::now();
+    // Fresh frontier, no pid files (an in-proc run): running.
+    assert_eq!(watcher.liveness_at(now), Liveness::Running);
+    // Stale past the stall threshold (10 s default): stalled — the
+    // workers are not *confirmed* dead. Past the dead threshold
+    // (120 s): dead.
+    assert_eq!(watcher.liveness_at(now + Duration::from_secs(30)), Liveness::Stalled);
+    assert_eq!(watcher.liveness_at(now + Duration::from_secs(3600)), Liveness::Dead);
+
+    if Path::new("/proc").is_dir() {
+        // A pid file naming a live pid (ours): running while fresh,
+        // but a pid that *looks* alive is distrusted once the frontier
+        // is stale past the dead threshold — it may be recycled.
+        std::fs::write(dir.join("opid0.pid"), format!("{}\n", std::process::id())).unwrap();
+        assert_eq!(watcher.liveness_at(now), Liveness::Running);
+        assert_eq!(watcher.liveness_at(now + Duration::from_secs(3600)), Liveness::Dead);
+        // Every recorded pid confirmed gone → dead immediately, no
+        // staleness wait: clean exits remove their pid files, so
+        // all-dead means SIGKILL.
+        std::fs::write(dir.join("opid0.pid"), "999999999\n").unwrap();
+        assert_eq!(watcher.liveness_at(now), Liveness::Dead);
+        std::fs::remove_file(dir.join("opid0.pid")).unwrap();
+    }
+
+    // A RunCompleted summary is terminal whatever the clock says.
+    w.append(&LogRecord::RunCompleted(RunSummary {
+        steps: 1,
+        images_per_sec: 0.0,
+        comm_fraction: 0.0,
+        recoveries: 0,
+        lost_ranks: vec![],
+        n_workers: 2,
+        mp: 1,
+        last_checkpoint_step: 0,
+    }))
+    .unwrap();
+    watcher.poll().unwrap();
+    assert_eq!(watcher.liveness_at(now + Duration::from_secs(3600)), Liveness::Completed);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn watcher_survives_the_resume_cut() {
+    let dir = tmp_dir("watch-reset");
+    let path = dir.join("events.log");
+    let mut w = LogWriter::create(&path).unwrap();
+    for s in 1..=4 {
+        w.append(&step(s, 2.0)).unwrap();
+    }
+    let mut watcher = Watcher::open(&dir).unwrap();
+    watcher.poll().unwrap();
+    assert_eq!(watcher.status().steps_done, 4);
+    drop(w);
+    // Resume cut to step 2 + a new incarnation: the status must be
+    // rebuilt, not blended (steps_done would stick at 4 if stale state
+    // survived a shrink to step 3).
+    let rp = replay(&path).unwrap();
+    let mut w = LogWriter::open_truncated(&path, rp.offsets[1].1).unwrap();
+    w.append(&LogRecord::Resumed { step: 2 }).unwrap();
+    w.append(&step(3, 1.5)).unwrap();
+    let delta = watcher.poll().unwrap();
+    assert!(delta.reset);
+    let st = watcher.status();
+    assert_eq!(st.steps_done, 3, "rebuilt from the rewritten history");
+    assert_eq!(st.resumes, vec![2], "the lineage shows the resume");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------- CLI snapshot
+
+/// `splitbrain watch --once` over the blessed golden run dir prints a
+/// pinned snapshot — the CLI render is part of the format contract.
+#[test]
+fn watch_once_pins_the_golden_run_dir_snapshot() {
+    let golden = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/run_dir");
+    let out = Command::new(bin()).args(["watch", golden, "--once"]).output().unwrap();
+    assert!(
+        out.status.success(),
+        "watch --once failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let got = String::from_utf8(out.stdout).unwrap();
+    let want = format!(
+        "run dir: {golden}\n\
+         status:  completed\n\
+         config:  4 workers, mp=2 (2 groups), B=32, engine=threaded, collectives=ring, overlap=true\n\
+         steps:   4/4 (100.0%)\n\
+         loss:    2.2500 (step 1)\n\
+         rate:    512.0 images/sec (wall)\n\
+         bytes:   65536 busiest rank / 262144 total\n\
+         cluster: 3 workers, mp=1, recoveries=1 (lost ranks [3])\n\
+         ckpts:   1 (latest step 2)\n\
+         lineage: resumed at step 2\n"
+    );
+    assert_eq!(got, want, "the watch --once snapshot drifted from the blessed run dir");
+    // Watching is read-only: the blessed fixture must hold exactly its
+    // two committed files afterwards.
+    let mut entries: Vec<String> = std::fs::read_dir(golden)
+        .unwrap()
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    entries.sort();
+    assert_eq!(entries, vec!["events.log".to_string(), "step-2.ckpt".to_string()]);
+}
+
+// ------------------------------------------------- end-to-end kill/resume
+
+fn launch_args(dir: &Path, resume: bool) -> Vec<String> {
+    let mut v: Vec<String> = [
+        "launch",
+        "--workers", "4",
+        "--mp", "2",
+        "--steps", "6",
+        "--avg-period", "2",
+        "--lr", "0.02",
+        "--momentum", "0.9",
+        "--clip-norm", "1.0",
+        "--seed", "123",
+        "--dataset-size", "256",
+        "--take-timeout-ms", "120000",
+        "--log-every", "2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    v.push("--run-dir".into());
+    v.push(dir.display().to_string());
+    if resume {
+        v.push("--resume".into());
+    }
+    v
+}
+
+/// The acceptance flow: a SIGKILL'd `launch` is classified `Dead`;
+/// after `--resume` the *same* watcher (no re-open) follows the resume
+/// cut and observes the new incarnation `Running` with `Resumed`
+/// lineage, then `Completed`.
+#[test]
+fn launch_sigkill_is_dead_then_resume_runs_with_lineage() {
+    if !Path::new("/proc").is_dir() {
+        eprintln!("skipping: pid-file liveness needs /proc");
+        return;
+    }
+    let n = 4usize;
+    let dir = tmp_dir("launch");
+    let mut launcher = Command::new(bin()).args(launch_args(&dir, false)).spawn().unwrap();
+    // Wait for every worker's step-2 checkpoint (the resume point).
+    let ckpt_set = |step: usize| {
+        (0..n).all(|opid| {
+            dir.join("checkpoints").join(format!("step-{step}.opid-{opid}.ckpt")).is_file()
+        })
+    };
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !ckpt_set(2) {
+        assert!(Instant::now() < deadline, "step-2 checkpoint set never appeared");
+        if let Ok(Some(s)) = launcher.try_wait() {
+            panic!("launch exited before the kill: {s:?}");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let mut watcher = Watcher::open(&dir).unwrap();
+    watcher.poll().unwrap();
+    assert_eq!(watcher.liveness(), Liveness::Running, "a live launch reads as running");
+    assert!(watcher.status().resumes.is_empty());
+
+    // SIGKILL the launcher and every worker (the pid files the workers
+    // wrote are exactly what the watcher will distrust afterwards).
+    launcher.kill().ok();
+    for opid in 0..n {
+        let pid = std::fs::read_to_string(dir.join(format!("opid{opid}.pid")))
+            .unwrap_or_else(|e| panic!("opid {opid} pid file missing: {e}"));
+        let _ = Command::new("kill").args(["-9", pid.trim()]).status();
+    }
+    launcher.wait().ok();
+
+    // All recorded pids gone → Dead (give the kernel a moment to reap).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        watcher.poll().unwrap();
+        if watcher.liveness() == Liveness::Dead {
+            break;
+        }
+        assert!(Instant::now() < deadline, "SIGKILL'd launch never classified dead");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // Resume in the background; the same watcher must observe the new
+    // incarnation running with the Resumed marker in its lineage.
+    let mut resumer = Command::new(bin()).args(launch_args(&dir, true)).spawn().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut saw_running_with_lineage = false;
+    let mut resumer_done = false;
+    while !resumer_done {
+        assert!(Instant::now() < deadline, "resumed launch never finished");
+        resumer_done = matches!(resumer.try_wait(), Ok(Some(_)));
+        watcher.poll().unwrap();
+        if !watcher.status().resumes.is_empty() && watcher.liveness() == Liveness::Running {
+            saw_running_with_lineage = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(
+        saw_running_with_lineage,
+        "never observed Running with Resumed lineage mid-resume (resumes={:?})",
+        watcher.status().resumes
+    );
+    let status = resumer.wait().unwrap();
+    assert!(status.success(), "resumed launch must exit cleanly: {status:?}");
+
+    watcher.poll().unwrap();
+    assert_eq!(watcher.liveness(), Liveness::Completed);
+    let st = watcher.status();
+    assert_eq!(st.steps_done, 6, "the resumed run finished all steps");
+    assert_eq!(st.resumes.len(), 1, "exactly one Resumed marker: {:?}", st.resumes);
+    assert!(st.resumes[0] >= 2 && st.resumes[0] % 2 == 0, "resumed at a boundary");
+    std::fs::remove_dir_all(&dir).ok();
+}
