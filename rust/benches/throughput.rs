@@ -8,12 +8,16 @@
 //! (the overlapped executor's fixed-order-reduce invariant). The CI
 //! `bench-smoke` job runs it at reduced steps and fails on divergence.
 //!
-//! Timing comes from the **per-step event stream**, not a wall clock
-//! around the whole run: in-proc rows sum the `StepReport::wall_secs`
-//! of the session's `StepCompleted` events, TCP rows sum the `stepsecs`
-//! records each rank driver dumps (max over ranks — the critical path).
-//! Construction and mesh bring-up are therefore excluded everywhere,
-//! so the engines compare on steady-state step cost.
+//! Timing comes from structured observability, not a wall clock around
+//! the whole run: in-proc rows sum the `StepReport::wall_secs` of the
+//! session's `StepCompleted` events, TCP rows take the critical path
+//! over ranks of each rank's summed span time from the per-op tracing
+//! layer's `metrics-opid<R>.json` snapshot. Construction and mesh
+//! bring-up are therefore excluded everywhere, so the engines compare
+//! on steady-state step cost. Every row also runs with the tracer on
+//! and carries a per-phase breakdown (compute / MP comm / averaging
+//! comm, plus per-phase byte totals — identical across engines by the
+//! determinism contract) into the table and the JSON point.
 //!
 //! Flags: `--steps N` (default 12), `--workers N` (default 4),
 //! `--mp K` (default 2), `--out PATH` (default `BENCH_throughput.json`).
@@ -28,8 +32,10 @@ use std::path::PathBuf;
 
 use splitbrain::api::{step_reports, CollectSink, SessionBuilder};
 use splitbrain::comm::transport::TcpPeer;
+use splitbrain::comm::CommCategory;
 use splitbrain::coordinator::procdriver::{run_worker, ProcConfig, RunOutcome};
 use splitbrain::coordinator::ExecEngine;
+use splitbrain::obs::Metrics;
 use splitbrain::runtime::RuntimeClient;
 use splitbrain::util::{Args, Table};
 
@@ -49,44 +55,82 @@ fn builder(n: usize, mp: usize, engine: ExecEngine, overlap: bool) -> SessionBui
         .overlap(overlap)
 }
 
-/// One measured configuration: summed per-step wall seconds + per-step
-/// mean loss bits.
+/// One measured configuration: summed per-step wall seconds, per-step
+/// mean loss bits, and the merged per-op metrics for the phase columns.
 struct RunResult {
     name: &'static str,
     wall_secs: f64,
     /// Per-step cluster-mean loss bit patterns (the parity fingerprint).
     loss_bits: Vec<u64>,
+    /// Merged (all ranks) per-op metrics of the traced run.
+    metrics: Metrics,
+}
+
+impl RunResult {
+    /// Per-rank mean seconds: (compute, MP comm, averaging comm).
+    fn phase_secs(&self) -> (f64, f64, f64) {
+        let m = &self.metrics;
+        let ranks = m.ranks.max(1) as f64;
+        let mp_us: u64 = [
+            CommCategory::ModuloFwd,
+            CommCategory::ModuloBwd,
+            CommCategory::ShardFwd,
+            CommCategory::ShardBwd,
+        ]
+        .iter()
+        .map(|&c| m.phase_us(c))
+        .sum();
+        let avg_us: u64 = [CommCategory::DpAverage, CommCategory::ShardAverage]
+            .iter()
+            .map(|&c| m.phase_us(c))
+            .sum();
+        (
+            m.compute_us() as f64 / 1e6 / ranks,
+            mp_us as f64 / 1e6 / ranks,
+            avg_us as f64 / 1e6 / ranks,
+        )
+    }
+}
+
+/// A rank's total traced span time in seconds — compute plus every
+/// comm phase; the TCP rows' per-rank cost.
+fn span_secs(m: &Metrics) -> f64 {
+    let comm: u64 = CommCategory::ALL.iter().map(|&c| m.phase_us(c)).sum();
+    (m.compute_us() + comm) as f64 / 1e6
 }
 
 /// In-proc run (sequential or threaded engine) through the session
 /// API: a collecting sink captures every `StepCompleted` event and the
-/// row's wall time is the sum of the per-step timings.
+/// row's wall time is the sum of the per-step timings; the session's
+/// tracer supplies the phase breakdown.
 fn run_inproc(
     rt: &RuntimeClient,
     name: &'static str,
     b: SessionBuilder,
     steps: usize,
 ) -> anyhow::Result<RunResult> {
-    let mut session = b.steps(steps).validate(rt)?.start()?;
+    let mut session = b.steps(steps).trace(true).validate(rt)?.start()?;
     let sink = CollectSink::new();
     let events = sink.events();
     session.attach(Box::new(sink));
     session.run()?;
     let reports = step_reports(&events.borrow());
     anyhow::ensure!(reports.len() == steps, "{name}: {} step events, want {steps}", reports.len());
+    let metrics = session.metrics().expect("trace(true) was set on the builder");
     Ok(RunResult {
         name,
         wall_secs: reports.iter().map(|r| r.wall_secs).sum(),
         loss_bits: reports.iter().map(|r| r.loss.to_bits()).collect(),
+        metrics,
     })
 }
 
 /// In-process TCP run: one rank driver per thread over loopback
-/// sockets. Loss bits are recovered from the per-rank meta dumps and
-/// averaged exactly like `StepMetrics::loss` (sum of per-rank losses /
-/// n), so they are comparable bit-for-bit with the in-proc engines;
-/// wall time is the critical path over ranks of their summed per-step
-/// `stepsecs` records.
+/// sockets, tracing on. Loss bits are recovered from the per-rank meta
+/// dumps and averaged exactly like `StepMetrics::loss` (sum of
+/// per-rank losses / n), so they are comparable bit-for-bit with the
+/// in-proc engines; wall time is the critical path over ranks of each
+/// rank's summed span time from its `metrics-opid<R>.json`.
 fn run_tcp(name: &'static str, b: SessionBuilder, steps: usize) -> anyhow::Result<RunResult> {
     let c = b.steps(steps).cluster_config()?;
     let n = c.n_workers;
@@ -122,6 +166,9 @@ fn run_tcp(name: &'static str, b: SessionBuilder, steps: usize) -> anyhow::Resul
                     out_dir: Some(out_dir.clone()),
                     connect_timeout_ms: 30_000,
                     log_every: 0,
+                    run_dir: None,
+                    resume_step: 0,
+                    trace: true,
                 };
                 s.spawn(move || run_worker(&pc))
             })
@@ -141,36 +188,36 @@ fn run_tcp(name: &'static str, b: SessionBuilder, steps: usize) -> anyhow::Resul
         }
     }
 
-    // step → sum of per-rank losses, and per-rank step-time sums, both
-    // rebuilt from the meta dumps (the TCP side's event stream).
+    // step → sum of per-rank losses, rebuilt from the meta dumps.
     let mut sums: HashMap<usize, f64> = HashMap::new();
-    let mut wall_secs = 0.0f64;
     for opid in 0..n {
         let meta = std::fs::read_to_string(out_dir.join(format!("opid{opid}.meta")))?;
-        let mut rank_secs = 0.0f64;
         for line in meta.lines() {
             let mut it = line.split_whitespace();
-            match it.next() {
-                Some("loss") => {
-                    let step: usize = it.next().unwrap().parse()?;
-                    let bits = u64::from_str_radix(it.next().unwrap(), 16)?;
-                    *sums.entry(step).or_insert(0.0) += f64::from_bits(bits);
-                }
-                Some("stepsecs") => {
-                    let _step: usize = it.next().unwrap().parse()?;
-                    let bits = u64::from_str_radix(it.next().unwrap(), 16)?;
-                    rank_secs += f64::from_bits(bits);
-                }
-                _ => {}
+            if it.next() == Some("loss") {
+                let step: usize = it.next().unwrap().parse()?;
+                let bits = u64::from_str_radix(it.next().unwrap(), 16)?;
+                *sums.entry(step).or_insert(0.0) += f64::from_bits(bits);
             }
         }
-        wall_secs = wall_secs.max(rank_secs);
     }
+    // Timing + phase breakdown from the per-opid metrics snapshots.
+    let mut wall_secs = 0.0f64;
+    let mut parts = Vec::with_capacity(n);
+    for opid in 0..n {
+        let path = out_dir.join(format!("metrics-opid{opid}.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let m = Metrics::parse(&text)?;
+        wall_secs = wall_secs.max(span_secs(&m));
+        parts.push(m);
+    }
+    let metrics = Metrics::merge(&parts);
     let loss_bits = (1..=steps)
         .map(|s| (sums[&s] / n as f64).to_bits())
         .collect();
     let _ = std::fs::remove_dir_all(&out_dir);
-    Ok(RunResult { name, wall_secs, loss_bits })
+    Ok(RunResult { name, wall_secs, loss_bits, metrics })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -204,14 +251,20 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let mut table = Table::new(vec!["config", "step-sum s", "steps/sec", "images/sec"]);
+    let mut table = Table::new(vec![
+        "config", "step-sum s", "steps/sec", "images/sec", "compute s", "mp-comm s", "avg-comm s",
+    ]);
     for r in &results {
         let sps = steps as f64 / r.wall_secs;
+        let (compute, mp_comm, avg_comm) = r.phase_secs();
         table.row(vec![
             r.name.to_string(),
             format!("{:.2}", r.wall_secs),
             format!("{:.3}", sps),
             format!("{:.1}", sps * (n * batch) as f64),
+            format!("{compute:.2}"),
+            format!("{mp_comm:.3}"),
+            format!("{avg_comm:.3}"),
         ]);
     }
     println!("{}", table.render());
@@ -220,7 +273,7 @@ fn main() -> anyhow::Result<()> {
     // Emit the JSON trajectory point (hand-rolled: no serde offline).
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"throughput\",\n");
-    json.push_str("  \"timing_source\": \"per-step event stream\",\n");
+    json.push_str("  \"timing_source\": \"per-step event stream + per-op metrics\",\n");
     json.push_str(&format!(
         "  \"workers\": {n},\n  \"mp\": {mp},\n  \"batch\": {batch},\n  \"steps\": {steps},\n"
     ));
@@ -228,12 +281,24 @@ fn main() -> anyhow::Result<()> {
     json.push_str("  \"results\": [\n");
     for (i, r) in results.iter().enumerate() {
         let sps = steps as f64 / r.wall_secs;
+        let (compute, mp_comm, avg_comm) = r.phase_secs();
+        let phase_bytes: Vec<String> = CommCategory::ALL
+            .iter()
+            .map(|&c| format!("\"{c}\": {}", r.metrics.phase_bytes(c)))
+            .collect();
         json.push_str(&format!(
-            "    {{\"config\": \"{}\", \"wall_secs\": {:.4}, \"steps_per_sec\": {:.4}, \"images_per_sec\": {:.2}}}{}\n",
+            "    {{\"config\": \"{}\", \"wall_secs\": {:.4}, \"steps_per_sec\": {:.4}, \
+             \"images_per_sec\": {:.2}, \"compute_secs_rank\": {:.4}, \
+             \"mp_comm_secs_rank\": {:.4}, \"avg_comm_secs_rank\": {:.4}, \
+             \"phase_bytes\": {{{}}}}}{}\n",
             r.name,
             r.wall_secs,
             sps,
             sps * (n * batch) as f64,
+            compute,
+            mp_comm,
+            avg_comm,
+            phase_bytes.join(", "),
             if i + 1 < results.len() { "," } else { "" }
         ));
     }

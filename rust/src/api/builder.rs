@@ -106,6 +106,9 @@ pub struct SessionBuilder {
     /// [`SessionBuilder::branch_from`]): restored — re-sharded for this
     /// topology — right after worker init.
     branch_global: Option<Vec<(String, HostTensor)>>,
+    /// Record per-op spans; a host-level knob (like `run_dir`), not part
+    /// of the manifest or its fingerprint.
+    trace: bool,
 }
 
 impl Default for SessionBuilder {
@@ -133,6 +136,7 @@ impl Default for SessionBuilder {
             run_dir: None,
             resume: false,
             branch_global: None,
+            trace: false,
         }
     }
 }
@@ -197,6 +201,7 @@ impl SessionBuilder {
             run_dir: None,
             resume: false,
             branch_global: None,
+            trace: false,
         }
     }
 
@@ -414,6 +419,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Record one span per executed step-program op into a preallocated
+    /// per-rank ring buffer ([`crate::obs::TraceSet`]). With a
+    /// [`run_dir`](Self::run_dir), the session writes `metrics.json` at
+    /// every averaging boundary and `metrics.json` + `trace.json`
+    /// (Chrome-trace format) at run end; without one, read the data via
+    /// [`Session::metrics`](super::Session::metrics) and
+    /// [`Session::chrome_trace`](super::Session::chrome_trace). Like
+    /// `run_dir`, a host-level knob: not part of the run manifest or
+    /// its fingerprint, so tracing a resumed run is always legal.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
     /// The worker count the builder currently holds (the CLI uses this
     /// to scope seeded random fault plans before validation).
     pub fn current_workers(&self) -> usize {
@@ -574,6 +593,7 @@ impl SessionBuilder {
                 run_dir: self.run_dir.clone(),
                 resume: self.resume,
                 branch_global: self.branch_global.clone(),
+                trace: self.trace,
             },
         ))
     }

@@ -148,11 +148,18 @@ pub enum Event {
 ///
 /// let mut sink = BestLoss(f64::INFINITY);
 /// sink.on_event(&Event::StepCompleted(StepReport {
-///     step: 1, loss: 2.3, compute_secs: 0.0, mp_comm_secs: 0.0,
-///     dp_comm_secs: 0.0, wall_secs: 0.0, bytes_busiest_rank: 0, bytes_total: 0,
+///     step: 1, loss: 2.3, compute_secs: 0.018, mp_comm_secs: 0.004,
+///     dp_comm_secs: 0.0, wall_secs: 0.025, bytes_busiest_rank: 147_456,
+///     bytes_total: 589_824,
 /// }));
 /// assert_eq!(sink.0, 2.3);
 /// ```
+///
+/// Events are per-*step* granularity. For per-*op* granularity — one
+/// span per executed step-program op, Chrome-trace export, per-phase
+/// byte/time breakdowns — use the [`crate::obs`] tracing layer
+/// ([`SessionBuilder::trace`](super::SessionBuilder::trace)) instead
+/// of deriving it from step events.
 pub trait EventSink {
     /// Observe one event.
     fn on_event(&mut self, event: &Event);

@@ -28,6 +28,10 @@ pub(crate) struct StoreOptions {
     pub(crate) resume: bool,
     /// Initial global model cloned from another run's checkpoint.
     pub(crate) branch_global: Option<Vec<(String, HostTensor)>>,
+    /// Record per-op spans ([`SessionBuilder::trace`]).
+    ///
+    /// [`SessionBuilder::trace`]: super::SessionBuilder::trace
+    pub(crate) trace: bool,
 }
 
 /// Predicted per-step communication of a planned run (analytic, from
@@ -194,18 +198,24 @@ impl<'rt> Plan<'rt> {
                 return Err(StoreError::FingerprintMismatch { got: current, want: persisted }
                     .into());
             }
-            let (cluster, resume_step) = match dir.latest_valid_checkpoint(persisted)? {
+            let (mut cluster, resume_step) = match dir.latest_valid_checkpoint(persisted)? {
                 Some(art) => {
                     let step = art.step;
                     (Cluster::with_dataset_state(self.rt, self.cfg.clone(), data, art.state)?, step)
                 }
                 None => (Cluster::with_dataset(self.rt, self.cfg.clone(), data)?, 0),
             };
+            if self.store.trace {
+                cluster.set_tracer(Arc::new(crate::obs::TraceSet::new(self.cfg.n_workers)));
+            }
             let mut session = Session::new(cluster, self.steps, batch);
             session.attach_store_resumed(dir, persisted, self.cfg.avg_period, resume_step)?;
             return Ok(session);
         }
         let mut cluster = Cluster::with_dataset(self.rt, self.cfg.clone(), data)?;
+        if self.store.trace {
+            cluster.set_tracer(Arc::new(crate::obs::TraceSet::new(self.cfg.n_workers)));
+        }
         if let Some(global) = &self.store.branch_global {
             cluster.restore_from_global(global)?;
         }

@@ -237,7 +237,49 @@ impl<'rt> Session<'rt> {
             file: format!("step-{step}.ckpt"),
             fingerprint,
         })?;
+        self.write_metrics_snapshot()?;
         Ok(())
+    }
+
+    /// Rewrite `metrics.json` in the run dir from the live tracer —
+    /// called at every averaging boundary and again at run end, so the
+    /// read-only [`Watcher`](super::Watcher) (and `splitbrain watch`)
+    /// can surface a live per-phase breakdown mid-run. A no-op unless
+    /// the session is both durable and traced.
+    fn write_metrics_snapshot(&self) -> Result<()> {
+        let (Some(store), Some(m)) = (&self.store, self.metrics()) else {
+            return Ok(());
+        };
+        let p = store.dir.metrics_path();
+        std::fs::write(&p, m.to_json()).map_err(|e| StoreError::io(&p, "write", e))?;
+        Ok(())
+    }
+
+    /// Per-op metrics snapshot of the live tracer, or `None` when the
+    /// session was not built with [`SessionBuilder::trace`]. In-proc
+    /// engines have no TCP fabric, so the per-peer histogram list is
+    /// empty; everything else (op counts, bytes, durations) is
+    /// populated.
+    ///
+    /// [`SessionBuilder::trace`]: super::SessionBuilder::trace
+    pub fn metrics(&self) -> Option<crate::obs::Metrics> {
+        self.cluster.tracer().map(|t| {
+            crate::obs::Metrics::from_snapshot(
+                &t.snapshot(),
+                self.cluster.steps_done() as u64,
+                vec![],
+            )
+        })
+    }
+
+    /// Chrome-trace-event JSON of the live tracer (pid 0 — the in-proc
+    /// engines are a single process), or `None` when the session was
+    /// not built with [`SessionBuilder::trace`]. Load the string (or
+    /// the run dir's `trace.json`) in Perfetto / `chrome://tracing`.
+    ///
+    /// [`SessionBuilder::trace`]: super::SessionBuilder::trace
+    pub fn chrome_trace(&self) -> Option<String> {
+        self.cluster.tracer().map(|t| crate::obs::chrome_trace_json(0, &t.snapshot()))
     }
 
     /// Advance exactly one training step (recovering first under
@@ -330,6 +372,11 @@ impl<'rt> Session<'rt> {
         }
         let report = self.report();
         self.emit(&Event::RunCompleted(report.summary()))?;
+        self.write_metrics_snapshot()?;
+        if let (Some(store), Some(trace)) = (&self.store, self.chrome_trace()) {
+            let p = store.dir.trace_path();
+            std::fs::write(&p, trace).map_err(|e| StoreError::io(&p, "write", e))?;
+        }
         Ok(report)
     }
 

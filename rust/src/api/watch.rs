@@ -249,6 +249,46 @@ impl Watcher {
         &self.root
     }
 
+    /// The run's per-op metrics snapshot, when the run is traced
+    /// (`--trace` / [`SessionBuilder::trace`]): the merged
+    /// `metrics.json` when present, otherwise a merge of whatever
+    /// launch-engine `metrics-opid<R>.json` files have landed so far
+    /// (the canonical merge is only written once every worker exits).
+    /// Read-only like every other watcher access. `Ok(None)` means the
+    /// run is untraced or no boundary snapshot has landed yet; a
+    /// per-opid file torn by a concurrent writer is skipped, not an
+    /// error.
+    ///
+    /// [`SessionBuilder::trace`]: super::SessionBuilder::trace
+    pub fn metrics(&self) -> anyhow::Result<Option<crate::obs::Metrics>> {
+        let canonical = self.root.join("metrics.json");
+        if canonical.is_file() {
+            let text = std::fs::read_to_string(&canonical)
+                .map_err(|e| StoreError::io(&canonical, "read", e))?;
+            return Ok(Some(crate::obs::Metrics::parse(&text)?));
+        }
+        let mut paths: Vec<PathBuf> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.root) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if name.starts_with("metrics-opid") && name.ends_with(".json") {
+                    paths.push(e.path());
+                }
+            }
+        }
+        paths.sort();
+        let parts: Vec<crate::obs::Metrics> = paths
+            .iter()
+            .filter_map(|p| std::fs::read_to_string(p).ok())
+            .filter_map(|text| crate::obs::Metrics::parse(&text).ok())
+            .collect();
+        if parts.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(crate::obs::Metrics::merge(&parts)))
+    }
+
     /// Current folded snapshot (poll first to refresh it).
     pub fn status(&self) -> &RunStatus {
         &self.status

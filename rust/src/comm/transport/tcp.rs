@@ -57,6 +57,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::comm::fabric::Tag;
 use crate::comm::fault::{FaultEvent, FaultPlan, PeerLost, StepAborted};
+use crate::obs::{LogHistogram, PeerStat};
 use crate::runtime::{DType, HostTensor};
 
 use super::wire::{self, Message, FLAG_UNCOUNTED};
@@ -136,6 +137,17 @@ struct TcpState {
     sent_msgs: u64,
     /// Raw socket bytes written, headers included (never reset).
     wire_bytes: u64,
+    /// Cumulative run-long observability counters (never reset — unlike
+    /// the per-step `sent_payload`/`sent_msgs` above): counted sends,
+    /// counted data-plane receives, and blocking-take wait times. Fed
+    /// into `metrics-opid<N>.json` ([`TcpTransport::obs_stats`]).
+    obs_sent_bytes: u64,
+    obs_sent_msgs: u64,
+    obs_sent_hist: LogHistogram,
+    obs_recv_bytes: u64,
+    obs_recv_msgs: u64,
+    obs_recv_hist: LogHistogram,
+    obs_take_wait_us_hist: LogHistogram,
 }
 
 impl TcpState {
@@ -361,6 +373,13 @@ impl TcpTransport {
                 sent_payload: vec![0; n],
                 sent_msgs: 0,
                 wire_bytes: 0,
+                obs_sent_bytes: 0,
+                obs_sent_msgs: 0,
+                obs_sent_hist: LogHistogram::new(),
+                obs_recv_bytes: 0,
+                obs_recv_msgs: 0,
+                obs_recv_hist: LogHistogram::new(),
+                obs_take_wait_us_hist: LogHistogram::new(),
             }),
             arrived: Condvar::new(),
         });
@@ -395,6 +414,25 @@ impl TcpTransport {
     /// Raw socket bytes written so far (frame headers + CRCs included).
     pub fn wire_bytes(&self) -> u64 {
         self.inner.state.lock().unwrap().wire_bytes
+    }
+
+    /// Cumulative run-long transport statistics for this process's
+    /// `metrics-opid<N>.json`: counted sends/receives with log-bucketed
+    /// payload histograms, plus blocking-take wait times. Unlike the
+    /// per-step data-plane counters these survive step boundaries and
+    /// recovery epochs.
+    pub fn obs_stats(&self) -> PeerStat {
+        let st = self.inner.state.lock().unwrap();
+        PeerStat {
+            opid: self.inner.my_opid as u64,
+            sent_bytes: st.obs_sent_bytes,
+            sent_msgs: st.obs_sent_msgs,
+            recv_bytes: st.obs_recv_bytes,
+            recv_msgs: st.obs_recv_msgs,
+            sent_hist: st.obs_sent_hist.clone(),
+            recv_hist: st.obs_recv_hist.clone(),
+            take_wait_us_hist: st.obs_take_wait_us_hist.clone(),
+        }
     }
 
     /// Opids that died (crashed, presumed dead or evicted), ascending.
@@ -452,8 +490,12 @@ impl TcpTransport {
             debug_assert_eq!(src, st.my_rank, "TCP post must originate from the local rank");
             let dst_opid = st.rank_to_opid[dst];
             if counted {
-                st.sent_payload[dst_opid] += (payload.len() * 4) as u64;
+                let bytes = (payload.len() * 4) as u64;
+                st.sent_payload[dst_opid] += bytes;
                 st.sent_msgs += 1;
+                st.obs_sent_bytes += bytes;
+                st.obs_sent_msgs += 1;
+                st.obs_sent_hist.record(bytes);
             }
             if !inner.faults.is_empty() && counted {
                 let step = st.step;
@@ -1002,8 +1044,14 @@ fn reader_loop(inner: Arc<TcpInner>, opid: usize, stream: TcpStream) {
         };
         let mut st = inner.state.lock().unwrap();
         match msg {
-            Message::Tensor { epoch, tag, tensor, .. } => {
+            Message::Tensor { epoch, tag, flags, tensor, .. } => {
                 if epoch >= st.epoch && tensor.dtype == DType::F32 {
+                    if flags & FLAG_UNCOUNTED == 0 {
+                        let bytes = (tensor.numel() * 4) as u64;
+                        st.obs_recv_bytes += bytes;
+                        st.obs_recv_msgs += 1;
+                        st.obs_recv_hist.record(bytes);
+                    }
                     st.mail
                         .entry((epoch, opid, tag))
                         .or_default()
@@ -1075,7 +1123,8 @@ impl Transport for TcpTransport {
 
     fn take_blocking(&self, dst: usize, src: usize, tag: Tag) -> Result<Vec<f32>> {
         let inner = &*self.inner;
-        let deadline = Instant::now() + inner.timeout;
+        let start = Instant::now();
+        let deadline = start + inner.timeout;
         let mut st = inner.state.lock().unwrap();
         debug_assert_eq!(dst, st.my_rank, "TCP take must target the local rank");
         if src >= st.rank_to_opid.len() {
@@ -1086,6 +1135,7 @@ impl Transport for TcpTransport {
             let src_opid = st.rank_to_opid[src];
             if let Some(q) = st.mail.get_mut(&(epoch, src_opid, tag)) {
                 if let Some(payload) = q.pop_front() {
+                    st.obs_take_wait_us_hist.record(start.elapsed().as_micros() as u64);
                     return Ok(payload);
                 }
             }

@@ -271,6 +271,9 @@ pub struct Cluster<'rt> {
     /// contiguously after each shrink, so entries are relative to the
     /// incarnation they died in.
     pub lost_ranks: Vec<usize>,
+    /// Per-op span recorder (`--trace`); `None` keeps the hot path
+    /// instrumentation-free.
+    tracer: Option<std::sync::Arc<crate::obs::TraceSet>>,
 }
 
 /// The plan pipeline shared by cluster construction and elastic
@@ -366,6 +369,7 @@ impl<'rt> Cluster<'rt> {
             last_fabric_bytes: (0, 0),
             recoveries: 0,
             lost_ranks: Vec::new(),
+            tracer: None,
         };
         // The initial model is a valid global checkpoint (all replicas
         // identical by construction) — recovery before the first
@@ -450,6 +454,7 @@ impl<'rt> Cluster<'rt> {
             last_fabric_bytes: (0, 0),
             recoveries: state.recoveries,
             lost_ranks: state.lost_ranks,
+            tracer: None,
         })
     }
 
@@ -560,6 +565,8 @@ impl<'rt> Cluster<'rt> {
             algo: self.cfg.collectives,
             batch: self.batch,
             averaging: averaging_due,
+            step: step_no,
+            tracer: self.tracer.as_deref(),
         };
         match self.cfg.engine {
             ExecEngine::Sequential => {
@@ -834,6 +841,17 @@ impl<'rt> Cluster<'rt> {
     /// The fabric (tests inspect dead ranks and counters).
     pub fn fabric(&self) -> &Fabric {
         &self.fabric
+    }
+
+    /// Install a per-op span recorder: every subsequent step records
+    /// one span per executed [`StepOp`](super::program::StepOp).
+    pub fn set_tracer(&mut self, tracer: std::sync::Arc<crate::obs::TraceSet>) {
+        self.tracer = Some(tracer);
+    }
+
+    /// The installed span recorder, if tracing is on.
+    pub fn tracer(&self) -> Option<&std::sync::Arc<crate::obs::TraceSet>> {
+        self.tracer.as_ref()
     }
 }
 

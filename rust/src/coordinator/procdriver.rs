@@ -54,6 +54,7 @@ use crate::comm::fault::WorkerCrashed;
 use crate::comm::transport::tcp::{SyncOutcome, BARRIER_END, BARRIER_MID};
 use crate::comm::transport::{TcpPeer, TcpTransport, Transport};
 use crate::data::{Batch, BatchIter};
+use crate::obs::{chrome_trace_json, Metrics, TraceSet};
 use crate::runtime::{HostTensor, RuntimeClient};
 use crate::store::{
     ckpt::fnv1a, load_artifact, replay, save_artifact, CheckpointArtifact, LogRecord, LogWriter,
@@ -104,6 +105,11 @@ pub struct ProcConfig {
     /// Resume from the step-`resume_step` per-opid artifacts instead of
     /// the seed model (0 = fresh start). Requires `run_dir`.
     pub resume_step: usize,
+    /// Record per-op spans and write `metrics-opid<N>.json` /
+    /// `trace-opid<N>.json` into the run dir (falling back to
+    /// `out_dir`); the launcher merges them into the canonical
+    /// `metrics.json` / `trace.json`.
+    pub trace: bool,
 }
 
 /// This process's slice of the durable store for a `--run-dir` launch.
@@ -268,12 +274,11 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
         iter.next_batch();
     }
     let mut losses: Vec<(usize, f64)> = Vec::with_capacity(pc.steps);
-    // Host wall-clock per completed step (the per-process event
-    // stream): dumped as `stepsecs` meta lines so the throughput bench
-    // derives TCP steps/sec from per-step timings — mesh bring-up and
-    // teardown excluded — exactly like the in-proc `StepReport`s.
-    let mut step_secs: Vec<(usize, f64)> = Vec::with_capacity(pc.steps);
     let mut bytes_sent = 0u64;
+    // Per-op span recorder (`--trace`): one slot per launch-time rank
+    // so this process's spans keep their true rank as the Chrome-trace
+    // tid even after an elastic re-rank.
+    let tracer = if pc.trace { Some(TraceSet::new(cfg.n_workers)) } else { None };
     // Overlap's double buffer: the next step's batch is fetched on a
     // scoped helper thread while the current step computes, so input
     // assembly leaves the critical path. One batch is consumed per step
@@ -316,7 +321,7 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
             let prefetch = if prefetch_next { Some(s.spawn(|| iter.next_batch())) } else { None };
             let res = try_step(
                 &rt, &transport, cfg, n, mp, &topo, &schedule, &program, &mut worker,
-                &this_batch, my_rank, step_no, batch, &mut ckpt,
+                &this_batch, my_rank, step_no, batch, &mut ckpt, tracer.as_ref(),
             );
             // A prefetch panic must stay loud: silently degrading to a
             // synchronous fetch would desynchronize this rank's example
@@ -336,7 +341,6 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
                 step_count += 1;
                 losses.push((step_count, loss));
                 let wall = step_timer.elapsed().as_secs_f64();
-                step_secs.push((step_count, wall));
                 if n > 1 && step_count % cfg.avg_period == 0 {
                     // try_step refreshed `ckpt` over the control plane.
                     ckpt_step = step_count;
@@ -362,6 +366,13 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
                         persist_boundary(
                             store, pc, &transport, step_count, n, mp, recoveries, &worker, &ckpt,
                         )?;
+                    }
+                }
+                if step_count % cfg.avg_period == 0 {
+                    // Boundary metrics snapshot so `splitbrain watch`
+                    // can surface a live per-phase breakdown.
+                    if let (Some(t), Some(dir)) = (&tracer, obs_dir(pc)) {
+                        write_obs_snapshot(dir, pc.opid, t, &transport, step_count, false)?;
                     }
                 }
                 if pc.log_every > 0 && (step_count % pc.log_every == 0 || step_count == pc.steps)
@@ -463,11 +474,16 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
         }
     }
 
+    // Final observability snapshot: full metrics plus the Chrome-trace
+    // spans, merged by the launcher across opids.
+    if let (Some(t), Some(dir)) = (&tracer, obs_dir(pc)) {
+        write_obs_snapshot(dir, pc.opid, t, &transport, step_count, true)?;
+    }
     if let Some(store) = pstore.as_mut() {
         if let Some(log) = &mut store.log {
             // Throughput and comm fractions live in the per-step
-            // records (and the meta `stepsecs` lines); the roll-up here
-            // carries the shape and lineage facts.
+            // records (and the `metrics-opid` snapshots); the roll-up
+            // here carries the shape and lineage facts.
             log.append(&LogRecord::RunCompleted(RunSummary {
                 steps: step_count,
                 images_per_sec: 0.0,
@@ -483,12 +499,42 @@ pub fn run_worker(pc: &ProcConfig) -> Result<RunOutcome> {
         let _ = std::fs::remove_file(store.dir.pid_path(pc.opid));
     }
     if let Some(dir) = &pc.out_dir {
-        write_outputs(
-            dir, pc.opid, my_rank, n, mp, recoveries, &losses, &step_secs, bytes_sent, &worker,
-        )?;
+        write_outputs(dir, pc.opid, my_rank, n, mp, recoveries, &losses, bytes_sent, &worker)?;
     }
     transport.shutdown();
     Ok(RunOutcome::Completed)
+}
+
+/// Where this process's observability files land: the durable run dir
+/// when launched with one, else the plain output dir (the bench path).
+fn obs_dir(pc: &ProcConfig) -> Option<&Path> {
+    pc.run_dir.as_deref().or(pc.out_dir.as_deref())
+}
+
+/// Write this process's `metrics-opid<N>.json` (and, at run end, its
+/// `trace-opid<N>.json`). The deterministic fields — op counts, byte
+/// totals, sent/recv histograms — are bit-identical across seeded
+/// replays; timings are wall-clock.
+fn write_obs_snapshot(
+    dir: &Path,
+    opid: usize,
+    tracer: &TraceSet,
+    transport: &TcpTransport,
+    steps: usize,
+    with_trace: bool,
+) -> Result<()> {
+    let snap = tracer.snapshot();
+    let metrics = Metrics::from_snapshot(&snap, steps as u64, vec![transport.obs_stats()]);
+    std::fs::write(dir.join(format!("metrics-opid{opid}.json")), metrics.to_json())
+        .with_context(|| format!("writing metrics-opid{opid}.json"))?;
+    if with_trace {
+        std::fs::write(
+            dir.join(format!("trace-opid{opid}.json")),
+            chrome_trace_json(opid as u64, &snap),
+        )
+        .with_context(|| format!("writing trace-opid{opid}.json"))?;
+    }
+    Ok(())
 }
 
 /// Open this process's slice of the durable store: write the pid file,
@@ -598,6 +644,7 @@ fn try_step(
     step_no: usize,
     batch_size: usize,
     ckpt: &mut Vec<HostTensor>,
+    tracer: Option<&TraceSet>,
 ) -> Result<f64> {
     transport.begin_step(step_no);
     worker.begin_step();
@@ -613,6 +660,8 @@ fn try_step(
         algo: cfg.collectives,
         batch: batch_size,
         averaging: averaging_due,
+        step: step_no,
+        tracer,
     };
     let mut st = RankState::new(my_rank, program, batch, &ctx);
 
@@ -736,8 +785,9 @@ fn refresh_ckpt(
 
 /// Write this process's end-of-run state for the launcher and the
 /// parity suite: `opid<N>.meta` (final rank/shape, per-step loss bit
-/// patterns, per-step wall seconds, byte counters) and `opid<N>.ckpt`
-/// (every local parameter tensor, bit-exact).
+/// patterns, byte counters) and `opid<N>.ckpt` (every local parameter
+/// tensor, bit-exact). Timing lives in `metrics-opid<N>.json`
+/// (`--trace`), not here.
 #[allow(clippy::too_many_arguments)]
 fn write_outputs(
     dir: &Path,
@@ -747,7 +797,6 @@ fn write_outputs(
     mp: usize,
     recoveries: usize,
     losses: &[(usize, f64)],
-    step_secs: &[(usize, f64)],
     bytes_sent: u64,
     worker: &Worker,
 ) -> Result<()> {
@@ -762,9 +811,6 @@ fn write_outputs(
     meta.push_str(&format!("bytes {bytes_sent}\n"));
     for (step, loss) in losses {
         meta.push_str(&format!("loss {step} {:016x}\n", loss.to_bits()));
-    }
-    for (step, secs) in step_secs {
-        meta.push_str(&format!("stepsecs {step} {:016x}\n", secs.to_bits()));
     }
     std::fs::write(dir.join(format!("opid{opid}.meta")), meta)?;
 

@@ -80,6 +80,7 @@ use crate::comm::fabric::Tag;
 use crate::comm::fault::WorkerCrashed;
 use crate::comm::transport::Transport;
 use crate::data::Batch;
+use crate::obs::tracer::{OpKind, TraceSet};
 use crate::runtime::{HostTensor, RuntimeClient};
 use crate::util::Timer;
 
@@ -341,6 +342,11 @@ pub(crate) struct ExecCtx<'a> {
     pub batch: usize,
     /// Whether model averaging fires at the end of this step.
     pub averaging: bool,
+    /// 1-based step number, recorded on every span.
+    pub step: usize,
+    /// Span recorder; `None` when tracing is off (the wrapper then adds
+    /// zero work to the hot path).
+    pub tracer: Option<&'a TraceSet>,
 }
 
 /// Per-driver hooks for the engine-specific ops.
@@ -486,9 +492,74 @@ pub(crate) fn full_step_worker(rt: &RuntimeClient, w: &mut Worker, batch: &Batch
     Ok(())
 }
 
-/// Execute one op of the program for one rank. The only implementation
-/// of every op's per-rank body — all three engines funnel through here.
+/// The span identity of an op: its [`OpKind`] plus the (round, seg)
+/// coordinates recorded on the span. `None` for `CrashPoll` and
+/// `Barrier`, which the engines deliberately do NOT all route through
+/// `exec_op` (lockstep polls crashes centrally and treats barriers as
+/// no-ops), so recording them would make span counts engine-dependent.
+fn op_span(op: StepOp) -> Option<(OpKind, u32, u32)> {
+    match op {
+        StepOp::CrashPoll | StepOp::Barrier(_) => None,
+        StepOp::FullStep => Some((OpKind::FullStep, 0, 0)),
+        StepOp::ConvFwd => Some((OpKind::ConvFwd, 0, 0)),
+        StepOp::PostLabels { round } => Some((OpKind::PostLabels, round as u32, 0)),
+        StepOp::PostActs { round } => Some((OpKind::PostActs, round as u32, 0)),
+        StepOp::ModuloGather { round } => Some((OpKind::ModuloGather, round as u32, 0)),
+        StepOp::FcFwd { seg, round } => Some((OpKind::FcFwd, round as u32, seg as u32)),
+        StepOp::ShardGather { seg, round } => Some((OpKind::ShardGather, round as u32, seg as u32)),
+        StepOp::HeadStep { round } => Some((OpKind::HeadStep, round as u32, 0)),
+        StepOp::ShardBwd { seg, round } => Some((OpKind::ShardBwd, round as u32, seg as u32)),
+        StepOp::FcBwd { seg, round } => Some((OpKind::FcBwd, round as u32, seg as u32)),
+        StepOp::PostGrads { round } => Some((OpKind::PostGrads, round as u32, 0)),
+        StepOp::ReduceGrads { round } => Some((OpKind::ReduceGrads, round as u32, 0)),
+        StepOp::ConvBwdUpdate => Some((OpKind::ConvBwdUpdate, 0, 0)),
+        StepOp::AverageReplicated => Some((OpKind::AverageReplicated, 0, 0)),
+        StepOp::AverageShards => Some((OpKind::AverageShards, 0, 0)),
+        StepOp::CheckpointRefresh => Some((OpKind::CheckpointRefresh, 0, 0)),
+    }
+}
+
+/// Execute one op of the program for one rank, recording a span when
+/// tracing is on. Bytes are attributed by deltas of the transport's
+/// per-source post counter around the op — deterministic, because the
+/// counters reset only at step boundaries and each op's posts live in
+/// the op itself (overlap hoists whole post *ops*, never bytes between
+/// ops).
 pub(crate) fn exec_op(
+    op: StepOp,
+    rank: usize,
+    w: &mut Worker,
+    batch: &Batch,
+    st: &mut RankState,
+    ctx: &ExecCtx<'_>,
+    hooks: &RankHooks<'_>,
+) -> Result<()> {
+    let span = match ctx.tracer {
+        // Skip averaging-only ops on non-averaging steps for safety:
+        // the drivers already gate them, and a span here would break
+        // cross-engine span-count identity.
+        Some(_) if op.averaging_only() && !ctx.averaging => None,
+        Some(_) => op_span(op),
+        None => None,
+    };
+    let Some((kind, round, seg)) = span else {
+        return exec_op_inner(op, rank, w, batch, st, ctx, hooks);
+    };
+    let tracer = ctx.tracer.expect("span implies tracer");
+    let bytes0 = ctx.transport.bytes_from(rank);
+    let start = tracer.now_us();
+    let res = exec_op_inner(op, rank, w, batch, st, ctx, hooks);
+    let end = tracer.now_us();
+    if res.is_ok() {
+        let bytes = ctx.transport.bytes_from(rank).saturating_sub(bytes0);
+        tracer.record(rank, kind, ctx.step as u32, round, seg, bytes, start, end);
+    }
+    res
+}
+
+/// The single implementation of every op's per-rank body — all three
+/// engines funnel through [`exec_op`] into here.
+fn exec_op_inner(
     op: StepOp,
     rank: usize,
     w: &mut Worker,

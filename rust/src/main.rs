@@ -8,15 +8,19 @@
 //!                     [--crash R@S] [--straggle R@S:MS] [--fault-seed N [--fault-count 2]]
 //!                     [--manifest run.json] [--emit-manifest run.json]
 //!                     [--run-dir DIR | --resume DIR]   # durable / resumed run
+//!                     [--trace true]                   # per-op spans -> trace.json/metrics.json
 //! splitbrain launch   --workers 4 --mp 2 --steps 100   # multi-process TCP training
 //!                     [--out-dir DIR] [--verify-replicas] + the train flags above
 //!                     [--run-dir DIR [--resume]]       # durable / kill-resumable launch
+//!                     [--trace true]                   # per-op spans, merged across workers
 //! splitbrain worker   --rank R --peers a0,a1,... --manifest run.json  # one rank
 //! splitbrain sweep    --experiment table2|fig7a|fig7b|fig7b-algos|fig7c [--numeric]
 //! splitbrain inspect  [--mp 2]          # Table 1 + the Fig. 3 transform
 //! splitbrain memory                     # Fig. 7c memory accounting
 //! splitbrain profile  --workers 2 --mp 2 --steps 3   # per-artifact hot-path profile
+//! splitbrain profile  <run-dir>         # measured-vs-predicted comm profile (--trace runs)
 //! splitbrain watch    <run-dir> [--follow|--once] [--interval-ms 500] [--plain]
+//!                     [--stall-secs N] [--dead-secs N] # liveness thresholds
 //!                                       # live progress view over a durable run
 //! ```
 //!
@@ -188,7 +192,7 @@ fn fault_plan(args: &Args, n_workers: usize, steps: usize) -> Result<splitbrain:
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    args.check_known(&known_flags(&["emit-manifest", "run-dir", "resume"]))?;
+    args.check_known(&known_flags(&["emit-manifest", "run-dir", "resume", "trace"]))?;
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
     // `--run-dir DIR` persists the run (event log + checkpoint
     // artifacts); `--resume DIR` rehydrates a killed one from its own
@@ -207,6 +211,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.has("run-dir") {
         builder = builder.run_dir(args.str_or("run-dir", ""));
     }
+    let trace = args.bool_or("trace", false)?;
+    builder = builder.trace(trace);
     let plan = builder.validate(&rt)?;
     match args.str_or("emit-manifest", "") {
         "" => {}
@@ -220,6 +226,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut session = plan.start()?;
     session.attach(Box::new(ConsoleSink::new(log_every)));
     session.run()?;
+    if trace {
+        match session.run_dir() {
+            Some(dir) => println!(
+                "trace: wrote {0}/trace.json and {0}/metrics.json — `splitbrain profile {0}`",
+                dir.display()
+            ),
+            None => eprintln!(
+                "note: --trace without --run-dir records spans but writes no files \
+                 (use the library API, or add --run-dir DIR)"
+            ),
+        }
+    }
     Ok(())
 }
 
@@ -236,7 +254,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     use splitbrain::comm::transport::TcpPeer;
     use splitbrain::coordinator::procdriver::{self, ProcConfig, RunOutcome};
     args.check_known(&known_flags(&[
-        "rank", "peers", "out-dir", "connect-timeout-ms", "run-dir", "resume-step",
+        "rank", "peers", "out-dir", "connect-timeout-ms", "run-dir", "resume-step", "trace",
     ]))?;
     if !args.has("rank") {
         bail!("--rank is required for the worker role");
@@ -287,6 +305,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         log_every: args.usize_or("log-every", DEFAULT_LOG_EVERY)?,
         run_dir,
         resume_step,
+        trace: args.bool_or("trace", false)?,
     };
     match procdriver::run_worker(&pc)? {
         RunOutcome::Completed => Ok(()),
@@ -305,8 +324,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
 fn cmd_launch(args: &Args) -> Result<()> {
     use splitbrain::store::RunDir;
     args.check_known(&known_flags(&[
-        "out-dir", "verify-replicas", "connect-timeout-ms", "run-dir", "resume",
+        "out-dir", "verify-replicas", "connect-timeout-ms", "run-dir", "resume", "trace",
     ]))?;
+    let trace = args.bool_or("trace", false)?;
     let run_dir = match args.str_or("run-dir", "") {
         "" => None,
         d => Some(std::path::PathBuf::from(d)),
@@ -421,6 +441,11 @@ fn cmd_launch(args: &Args) -> Result<()> {
                 cmd.arg("--resume-step").arg(resume_step.to_string());
             }
         }
+        if trace {
+            // Explicit value: the flag parser binds `--trace <next>` as
+            // a value, so a bare `--trace` would swallow what follows.
+            cmd.arg("--trace").arg("true");
+        }
         for &key in FORWARD_HOST {
             if args.has(key) {
                 cmd.arg(format!("--{key}")).arg(args.str_or(key, ""));
@@ -462,6 +487,11 @@ fn cmd_launch(args: &Args) -> Result<()> {
     if failures > 0 {
         bail!("{failures} worker process(es) failed");
     }
+    if trace {
+        // Same precedence as the workers' obs_dir: a durable launch
+        // anchors its obs files in the run dir.
+        merge_obs_files(run_dir.as_deref().unwrap_or(&out_dir), n)?;
+    }
 
     if args.bool_or("verify-replicas", false)? {
         if steps % cfg.avg_period != 0 {
@@ -480,6 +510,45 @@ fn cmd_launch(args: &Args) -> Result<()> {
         crashes,
         out_dir.display()
     );
+    Ok(())
+}
+
+/// Merge the workers' per-opid `--trace` outputs
+/// (`metrics-opid<R>.json` / `trace-opid<R>.json`) into the canonical
+/// `metrics.json` / `trace.json` next to them. An opid with no files
+/// (a crashed or evicted worker) is simply absent from the merge.
+fn merge_obs_files(dir: &std::path::Path, n: usize) -> Result<()> {
+    use splitbrain::obs::{merge_chrome_traces, Metrics};
+    let mut metrics = Vec::new();
+    let mut traces = Vec::new();
+    for opid in 0..n {
+        let mp = dir.join(format!("metrics-opid{opid}.json"));
+        if let Ok(text) = std::fs::read_to_string(&mp) {
+            metrics.push(
+                Metrics::parse(&text).with_context(|| format!("parsing {}", mp.display()))?,
+            );
+        }
+        let tp = dir.join(format!("trace-opid{opid}.json"));
+        if let Ok(text) = std::fs::read_to_string(&tp) {
+            traces.push(text);
+        }
+    }
+    if !metrics.is_empty() {
+        let p = dir.join("metrics.json");
+        std::fs::write(&p, Metrics::merge(&metrics).to_json())
+            .with_context(|| format!("writing {}", p.display()))?;
+    }
+    if !traces.is_empty() {
+        let p = dir.join("trace.json");
+        std::fs::write(&p, merge_chrome_traces(&traces)?)
+            .with_context(|| format!("writing {}", p.display()))?;
+        println!(
+            "trace: merged {} worker trace(s) into {} — `splitbrain profile {}`",
+            traces.len(),
+            p.display(),
+            dir.display()
+        );
+    }
     Ok(())
 }
 
@@ -618,6 +687,19 @@ fn cmd_memory(args: &Args) -> Result<()> {
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {
+    // Two modes share the name: `profile <run-dir>` folds a traced
+    // run's measured metrics against the plan's predictions; with no
+    // positional it keeps the historical per-artifact hot-path profile.
+    if let Some(dir) = args.positional(1) {
+        let p = std::path::Path::new(dir);
+        if p.is_dir() {
+            return cmd_profile_run_dir(args, p);
+        }
+        bail!(
+            "profile: {dir:?} is not a directory — pass a `--trace` run dir, \
+             or no positional for the per-artifact hot-path profile"
+        );
+    }
     args.check_known(&known_flags(&[]))?;
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
     let mut builder = builder_from_args(args)?;
@@ -637,6 +719,34 @@ fn cmd_profile(args: &Args) -> Result<()> {
         ]);
     }
     println!("=== PJRT hot-path profile ({steps} steps) ===\n{}", table.render());
+    Ok(())
+}
+
+/// `splitbrain profile <run-dir>`: the measured-vs-predicted comm
+/// profile. Rebuilds the plan (analytic per-phase volumes + netmodel
+/// predictions) from the run dir's own `run.json`, folds the traced
+/// `metrics.json` against it, and prints the per-phase error table —
+/// deterministic byte columns land at exactly 0% error on an untorn
+/// uniform-scheme run, so any byte error is a real accounting bug.
+fn cmd_profile_run_dir(args: &Args, dir: &std::path::Path) -> Result<()> {
+    use splitbrain::obs::{profile, Metrics};
+    args.check_known(&known_flags(&[]))?;
+    let manifest_path = dir.join("run.json");
+    let manifest_text = std::fs::read_to_string(&manifest_path).with_context(|| {
+        format!("reading {} (is this a run dir?)", manifest_path.display())
+    })?;
+    let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
+    let plan = SessionBuilder::from_manifest(&manifest_text)?.validate(&rt)?;
+    let metrics_path = dir.join("metrics.json");
+    let metrics_text = std::fs::read_to_string(&metrics_path).with_context(|| {
+        format!(
+            "reading {} — produce it with `--trace` (launch merges it once the workers exit)",
+            metrics_path.display()
+        )
+    })?;
+    let metrics = Metrics::parse(&metrics_text)?;
+    let report = profile(plan.schedule(), &plan.cluster_config().net, &metrics);
+    print!("{}", report.render());
     Ok(())
 }
 
@@ -697,7 +807,7 @@ fn cmd_watch(args: &Args) -> Result<()> {
     // flags — it observes someone else's run.
     args.check_known(&[
         "run-dir", "follow", "once", "interval-ms", "plain", "stall-ms", "dead-ms",
-        "compute-threads",
+        "stall-secs", "dead-secs", "compute-threads",
     ])?;
     let dir = match (args.positional(1), args.str_or("run-dir", "")) {
         (_, d) if !d.is_empty() => d.to_string(),
@@ -723,6 +833,14 @@ fn cmd_watch(args: &Args) -> Result<()> {
     }
     if args.has("dead-ms") {
         watcher = watcher.with_dead_after(Duration::from_millis(args.u64_or("dead-ms", 0)?));
+    }
+    // Second-granularity forms of the same thresholds (defaults stay
+    // 10s/120s); the ms forms exist for tests, these for humans.
+    if args.has("stall-secs") {
+        watcher = watcher.with_stall_after(Duration::from_secs(args.u64_or("stall-secs", 0)?));
+    }
+    if args.has("dead-secs") {
+        watcher = watcher.with_dead_after(Duration::from_secs(args.u64_or("dead-secs", 0)?));
     }
 
     if once {
@@ -839,6 +957,25 @@ fn render_status(dir: &str, watcher: &splitbrain::api::Watcher) -> String {
     }
     if st.bytes_total > 0 {
         let _ = writeln!(out, "bytes:   {} busiest rank / {} total", st.bytes_busiest, st.bytes_total);
+    }
+    // Traced runs only (metrics.json / metrics-opid*.json present) —
+    // the golden fixture is untraced, so the pinned bytes are intact.
+    if let Ok(Some(m)) = watcher.metrics() {
+        let _ = writeln!(
+            out,
+            "trace:   {} spans / {} ranks over {} traced steps",
+            m.spans, m.ranks, m.steps
+        );
+        let mut phases: Vec<String> = Vec::new();
+        for cat in splitbrain::comm::CommCategory::ALL {
+            let bytes = m.phase_bytes(cat);
+            if bytes > 0 {
+                phases.push(format!("{cat} {:.1} MB", bytes as f64 / 1048576.0));
+            }
+        }
+        if !phases.is_empty() {
+            let _ = writeln!(out, "phases:  {}", phases.join(", "));
+        }
     }
     let lost = if st.lost_ranks.is_empty() {
         String::new()

@@ -1,0 +1,157 @@
+//! Chrome-trace-event export (`trace.json`), loadable in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`.
+//!
+//! One **process** (`pid`) per operating-system process (opid 0 for
+//! in-proc runs), one **thread** (`tid`) per rank; each span becomes a
+//! complete ("ph":"X") event with µs timestamps and the deterministic
+//! op arguments (step, round, seg, bytes) attached. Metadata records
+//! name the processes and threads so the UI shows "opid 0 / rank 2"
+//! instead of bare numbers.
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::tracer::TraceSnapshot;
+
+/// Render one process's snapshot as a complete Chrome-trace document:
+/// `{"traceEvents": [...]}`. `pid` is the operating-system process slot
+/// (opid; 0 for in-proc runs); rank indices become thread ids.
+pub fn chrome_trace_json(pid: u64, snap: &TraceSnapshot) -> String {
+    let mut events = Vec::new();
+    render_events(pid, snap, &mut events);
+    wrap_events(&events)
+}
+
+/// Merge several per-process documents (parsed leniently from
+/// [`chrome_trace_json`] output) into one, concatenating their
+/// `traceEvents` arrays in input order.
+pub fn merge_chrome_traces(parts: &[String]) -> Result<String> {
+    let mut events = Vec::new();
+    for (i, text) in parts.iter().enumerate() {
+        let doc = Json::parse(text).with_context(|| format!("parsing trace part {i}"))?;
+        let arr = doc
+            .get("traceEvents")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("trace part {i}: missing traceEvents array"))?;
+        for ev in arr {
+            events.push(render_json_value(ev));
+        }
+    }
+    Ok(wrap_events(&events))
+}
+
+fn wrap_events(events: &[String]) -> String {
+    let mut s = String::with_capacity(events.iter().map(|e| e.len() + 4).sum::<usize>() + 32);
+    s.push_str("{\"traceEvents\": [\n");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(ev);
+    }
+    s.push_str("\n]}\n");
+    s
+}
+
+fn render_events(pid: u64, snap: &TraceSnapshot, out: &mut Vec<String>) {
+    out.push(format!(
+        "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": 0, \
+         \"args\": {{\"name\": \"opid {pid}\"}}}}"
+    ));
+    for (rank, r) in snap.ranks.iter().enumerate() {
+        if r.spans.is_empty() {
+            continue;
+        }
+        out.push(format!(
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": {rank}, \
+             \"args\": {{\"name\": \"rank {rank}\"}}}}"
+        ));
+        for s in &r.spans {
+            out.push(format!(
+                "{{\"name\": \"{}\", \"cat\": \"op\", \"ph\": \"X\", \"pid\": {pid}, \
+                 \"tid\": {rank}, \"ts\": {}, \"dur\": {}, \"args\": {{\"step\": {}, \
+                 \"round\": {}, \"seg\": {}, \"bytes\": {}}}}}",
+                s.kind.name(),
+                s.start_us,
+                s.dur_us,
+                s.step,
+                s.round,
+                s.seg,
+                s.bytes
+            ));
+        }
+    }
+}
+
+/// Re-serialize a parsed JSON value (compact, source key order) — used
+/// when merging already-exported trace parts.
+fn render_json_value(v: &Json) -> String {
+    match v {
+        Json::Null => "null".into(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(s) => s.clone(),
+        Json::Str(s) => format!("\"{}\"", crate::util::json::escape_str(s)),
+        Json::Arr(items) => {
+            let inner: Vec<String> = items.iter().map(render_json_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+        Json::Obj(fields) => {
+            let inner: Vec<String> = fields
+                .iter()
+                .map(|(k, val)| {
+                    format!("\"{}\": {}", crate::util::json::escape_str(k), render_json_value(val))
+                })
+                .collect();
+            format!("{{{}}}", inner.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tracer::{OpKind, TraceSet};
+
+    fn snapshot() -> TraceSnapshot {
+        let t = TraceSet::new(2);
+        t.record(0, OpKind::ConvFwd, 1, 0, 0, 0, 0, 10);
+        t.record(1, OpKind::ShardGather, 1, 1, 0, 2048, 5, 40);
+        t.snapshot()
+    }
+
+    #[test]
+    fn export_is_valid_json_with_events() {
+        let text = chrome_trace_json(0, &snapshot());
+        let doc = Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+        // 1 process_name + 2 thread_name + 2 spans.
+        assert_eq!(events.len(), 5);
+        let span = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("shard-gather"))
+            .unwrap();
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("tid").unwrap().as_u64(), Some(1));
+        assert_eq!(span.get("ts").unwrap().as_u64(), Some(5));
+        assert_eq!(span.get("dur").unwrap().as_u64(), Some(35));
+        assert_eq!(span.get("args").unwrap().get("bytes").unwrap().as_u64(), Some(2048));
+    }
+
+    #[test]
+    fn merge_concatenates_parts() {
+        let a = chrome_trace_json(0, &snapshot());
+        let b = chrome_trace_json(1, &snapshot());
+        let merged = merge_chrome_traces(&[a, b]).unwrap();
+        let doc = Json::parse(&merged).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(events.len(), 10);
+        // Both pids present.
+        let pids: std::collections::HashSet<u64> =
+            events.iter().filter_map(|e| e.get("pid").and_then(Json::as_u64)).collect();
+        assert_eq!(pids.len(), 2);
+        // A merged document is still parseable by this merger.
+        assert!(merge_chrome_traces(&[merged]).is_ok());
+    }
+}

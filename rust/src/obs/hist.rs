@@ -1,0 +1,169 @@
+//! Log-bucketed histograms with **fixed bucket edges**.
+//!
+//! The edges are compile-time constants (powers of two), so histograms
+//! recorded by different processes merge bucket-by-bucket and the merged
+//! JSON is deterministic — no per-run bucket boundaries to drift. The
+//! `obs_trace` suite pins the edge layout; changing it is a schema
+//! change and must bump [`super::metrics::METRICS_VERSION`].
+
+/// A log₂-bucketed histogram of `u64` samples with fixed edges.
+///
+/// Bucket 0 counts exact zeros. Bucket `i` (1 ≤ i < 31) counts samples
+/// in `[2^(i-1), 2^i)`. The last bucket (31) is open-ended and counts
+/// everything ≥ 2^30 (~1 GiB for byte samples, ~18 min for µs samples)
+/// — far past anything a single message or blocking take produces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: [u64; LogHistogram::BUCKETS],
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    /// Number of buckets. Fixed: part of the metrics schema.
+    pub const BUCKETS: usize = 32;
+
+    /// An empty histogram.
+    pub fn new() -> LogHistogram {
+        LogHistogram { counts: [0; LogHistogram::BUCKETS] }
+    }
+
+    /// The bucket a sample falls into (see the type docs for edges).
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(LogHistogram::BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive lower edge of bucket `i` (0 for the zero bucket).
+    pub fn lower_bound(i: usize) -> u64 {
+        match i {
+            0 | 1 => i as u64,
+            _ => 1u64 << (i - 1),
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+    }
+
+    /// Count in bucket `i`.
+    pub fn count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// Total samples recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// True when no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    /// All bucket counts, in edge order.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Add another histogram's counts bucket-by-bucket (valid because
+    /// the edges are fixed).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// The histogram as a compact JSON array of bucket counts.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[");
+        for (i, c) in self.counts.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&c.to_string());
+        }
+        s.push(']');
+        s
+    }
+
+    /// Parse a histogram from the JSON array [`to_json`](Self::to_json)
+    /// writes. The bucket count must match exactly.
+    pub fn from_json(doc: &crate::util::json::Json) -> crate::Result<LogHistogram> {
+        let items = doc
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("histogram must be a JSON array"))?;
+        if items.len() != LogHistogram::BUCKETS {
+            anyhow::bail!(
+                "histogram has {} buckets, schema expects {}",
+                items.len(),
+                LogHistogram::BUCKETS
+            );
+        }
+        let mut h = LogHistogram::new();
+        for (i, item) in items.iter().enumerate() {
+            h.counts[i] = item
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("histogram bucket {i} is not a u64"))?;
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_pinned() {
+        // Zero has its own bucket; 1 starts the log ladder.
+        assert_eq!(LogHistogram::bucket_of(0), 0);
+        assert_eq!(LogHistogram::bucket_of(1), 1);
+        assert_eq!(LogHistogram::bucket_of(2), 2);
+        assert_eq!(LogHistogram::bucket_of(3), 2);
+        assert_eq!(LogHistogram::bucket_of(4), 3);
+        assert_eq!(LogHistogram::bucket_of(1023), 10);
+        assert_eq!(LogHistogram::bucket_of(1024), 11);
+        // The open-ended last bucket swallows everything huge.
+        assert_eq!(LogHistogram::bucket_of(1 << 30), LogHistogram::BUCKETS - 1);
+        assert_eq!(LogHistogram::bucket_of(u64::MAX), LogHistogram::BUCKETS - 1);
+        // Lower bounds invert bucket_of at the edges.
+        for i in 1..LogHistogram::BUCKETS - 1 {
+            let lo = LogHistogram::lower_bound(i);
+            assert_eq!(LogHistogram::bucket_of(lo), i, "bucket {i} lower edge");
+            if lo > 1 {
+                assert_eq!(LogHistogram::bucket_of(lo - 1), i - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn record_merge_and_json_round_trip() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in [0, 1, 12, 12, 4096] {
+            a.record(v);
+        }
+        b.record(12);
+        a.merge(&b);
+        assert_eq!(a.total(), 6);
+        assert_eq!(a.count(LogHistogram::bucket_of(12)), 3);
+        let doc = crate::util::json::Json::parse(&a.to_json()).unwrap();
+        let back = LogHistogram::from_json(&doc).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_width() {
+        let doc = crate::util::json::Json::parse("[1,2,3]").unwrap();
+        assert!(LogHistogram::from_json(&doc).is_err());
+    }
+}

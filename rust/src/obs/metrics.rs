@@ -1,0 +1,388 @@
+//! The `metrics.json` snapshot: exact per-op-kind counters, per-phase
+//! comm totals and per-peer transport histograms, serialized with a
+//! fixed key order so seeded replays produce bit-identical files for
+//! the deterministic fields (counts, bytes, histogram buckets) while
+//! wall-clock fields (`us`, `wall_us`, take-wait histograms) stay
+//! schema-stable but vary.
+//!
+//! One file is written per process: `metrics.json` by the in-proc
+//! session, `metrics-opid{K}.json` by each TCP worker; the launcher
+//! [`merge`](Metrics::merge)s the per-opid files into the canonical
+//! `metrics.json` after the run. Snapshots are rewritten at every
+//! averaging boundary so `splitbrain watch` can surface a live
+//! per-phase breakdown.
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::comm::CommCategory;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::hist::LogHistogram;
+use super::tracer::{OpKind, TraceSnapshot};
+
+/// Metrics schema version this build writes and reads.
+pub const METRICS_VERSION: u64 = 1;
+
+/// Exact aggregate for one op kind.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpStat {
+    /// Spans recorded.
+    pub count: u64,
+    /// Bytes posted during those spans (counted wire payload).
+    pub bytes: u64,
+    /// Wall µs spent (masked in determinism tests).
+    pub us: u64,
+}
+
+/// One process's transport-level peer statistics (TCP runs only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeerStat {
+    /// The observing process (stats are from its point of view).
+    pub opid: u64,
+    /// Counted payload bytes this process sent to peers.
+    pub sent_bytes: u64,
+    /// Counted messages sent.
+    pub sent_msgs: u64,
+    /// Counted payload bytes received from peers.
+    pub recv_bytes: u64,
+    /// Counted messages received.
+    pub recv_msgs: u64,
+    /// Sent-message payload sizes (log-bucketed, deterministic).
+    pub sent_hist: LogHistogram,
+    /// Received-message payload sizes (log-bucketed, deterministic).
+    pub recv_hist: LogHistogram,
+    /// Blocking-take wait times, µs (wall-clock: masked in tests).
+    pub take_wait_us_hist: LogHistogram,
+}
+
+/// A parsed or freshly-snapshotted metrics document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metrics {
+    /// Ranks covered (summed across merged per-opid files).
+    pub ranks: u64,
+    /// Training steps completed at snapshot time.
+    pub steps: u64,
+    /// Spans retained in the ring(s).
+    pub spans: u64,
+    /// Spans dropped by ring wrap (aggregates still exact).
+    pub spans_dropped: u64,
+    /// Wall µs from first span start to last span end.
+    pub wall_us: u64,
+    /// Per-kind aggregates, [`OpKind::ALL`] order.
+    pub ops: [OpStat; OpKind::COUNT],
+    /// Per-process transport stats, sorted by opid (empty in-proc).
+    pub peers: Vec<PeerStat>,
+}
+
+impl Metrics {
+    /// Build a metrics document from a tracer snapshot. `ranks` counts
+    /// the ranks that recorded anything: a TCP worker's tracer has one
+    /// slot per cluster rank but records only its own, so each per-opid
+    /// document covers one rank and the merged document covers `n`.
+    pub fn from_snapshot(snap: &TraceSnapshot, steps: u64, peers: Vec<PeerStat>) -> Metrics {
+        let mut ops = [OpStat::default(); OpKind::COUNT];
+        let mut active = 0u64;
+        for r in &snap.ranks {
+            if r.count.iter().any(|&c| c > 0) {
+                active += 1;
+            }
+            for i in 0..OpKind::COUNT {
+                ops[i].count += r.count[i];
+                ops[i].bytes += r.bytes[i];
+                ops[i].us += r.us[i];
+            }
+        }
+        let mut peers = peers;
+        peers.sort_by_key(|p| p.opid);
+        Metrics {
+            ranks: active,
+            steps,
+            spans: snap.span_count(),
+            spans_dropped: snap.dropped(),
+            wall_us: snap.wall_us(),
+            ops,
+            peers,
+        }
+    }
+
+    /// Aggregate stat for one op kind.
+    pub fn op(&self, kind: OpKind) -> OpStat {
+        self.ops[kind.index()]
+    }
+
+    /// Bytes attributed to a communication category (summing the op
+    /// kinds that map to it).
+    pub fn phase_bytes(&self, cat: CommCategory) -> u64 {
+        OpKind::ALL
+            .iter()
+            .filter(|k| k.category() == Some(cat))
+            .map(|k| self.ops[k.index()].bytes)
+            .sum()
+    }
+
+    /// Wall µs attributed to a communication category.
+    pub fn phase_us(&self, cat: CommCategory) -> u64 {
+        OpKind::ALL
+            .iter()
+            .filter(|k| k.category() == Some(cat))
+            .map(|k| self.ops[k.index()].us)
+            .sum()
+    }
+
+    /// Wall µs spent in compute ops (no comm category).
+    pub fn compute_us(&self) -> u64 {
+        OpKind::ALL
+            .iter()
+            .filter(|k| k.category().is_none())
+            .map(|k| self.ops[k.index()].us)
+            .sum()
+    }
+
+    /// Total counted bytes across all op kinds.
+    pub fn total_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.bytes).sum()
+    }
+
+    /// Fold several per-process documents (one per opid) into one:
+    /// counters sum, `steps`/`wall_us` take the maximum (every process
+    /// runs the same step count; epochs are per-process), peer lists
+    /// concatenate sorted by opid.
+    pub fn merge(parts: &[Metrics]) -> Metrics {
+        let mut out = Metrics {
+            ranks: 0,
+            steps: 0,
+            spans: 0,
+            spans_dropped: 0,
+            wall_us: 0,
+            ops: [OpStat::default(); OpKind::COUNT],
+            peers: Vec::new(),
+        };
+        for p in parts {
+            out.ranks += p.ranks;
+            out.steps = out.steps.max(p.steps);
+            out.spans += p.spans;
+            out.spans_dropped += p.spans_dropped;
+            out.wall_us = out.wall_us.max(p.wall_us);
+            for i in 0..OpKind::COUNT {
+                out.ops[i].count += p.ops[i].count;
+                out.ops[i].bytes += p.ops[i].bytes;
+                out.ops[i].us += p.ops[i].us;
+            }
+            out.peers.extend(p.peers.iter().cloned());
+        }
+        out.peers.sort_by_key(|p| p.opid);
+        out
+    }
+
+    /// Canonical JSON text: fixed key order, one top-level key per
+    /// line, trailing newline. Deterministic fields are bit-identical
+    /// across seeded replays; `us`/`wall_us`/take-wait histograms are
+    /// wall-clock.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(2048);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"splitbrain_metrics\": {METRICS_VERSION},\n"));
+        s.push_str(&format!("  \"ranks\": {},\n", self.ranks));
+        s.push_str(&format!("  \"steps\": {},\n", self.steps));
+        s.push_str(&format!("  \"spans\": {},\n", self.spans));
+        s.push_str(&format!("  \"spans_dropped\": {},\n", self.spans_dropped));
+        s.push_str(&format!("  \"wall_us\": {},\n", self.wall_us));
+        s.push_str("  \"ops\": {");
+        for (i, k) in OpKind::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let o = self.ops[k.index()];
+            s.push_str(&format!(
+                "\"{}\": {{\"count\": {}, \"bytes\": {}, \"us\": {}}}",
+                k.name(),
+                o.count,
+                o.bytes,
+                o.us
+            ));
+        }
+        s.push_str("},\n");
+        s.push_str("  \"phases\": {");
+        for (i, &c) in CommCategory::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "\"{c}\": {{\"bytes\": {}, \"us\": {}}}",
+                self.phase_bytes(c),
+                self.phase_us(c)
+            ));
+        }
+        s.push_str("},\n");
+        s.push_str("  \"peers\": {");
+        for (i, p) in self.peers.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "\"{}\": {{\"sent_bytes\": {}, \"sent_msgs\": {}, \"recv_bytes\": {}, \
+                 \"recv_msgs\": {}, \"sent_hist\": {}, \"recv_hist\": {}, \
+                 \"take_wait_us_hist\": {}}}",
+                p.opid,
+                p.sent_bytes,
+                p.sent_msgs,
+                p.recv_bytes,
+                p.recv_msgs,
+                p.sent_hist.to_json(),
+                p.recv_hist.to_json(),
+                p.take_wait_us_hist.to_json()
+            ));
+        }
+        s.push_str("}\n}\n");
+        s
+    }
+
+    /// Parse a metrics document. Strict on schema version and the ops
+    /// table; the derived `phases` object is validated for presence but
+    /// recomputed from `ops` (single source of truth).
+    pub fn parse(text: &str) -> Result<Metrics> {
+        let doc = Json::parse(text).context("parsing metrics.json")?;
+        let version = doc
+            .get("splitbrain_metrics")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("metrics: missing \"splitbrain_metrics\" version"))?;
+        if version != METRICS_VERSION {
+            bail!("metrics: schema version {version} (this build reads {METRICS_VERSION})");
+        }
+        let num = |key: &str| -> Result<u64> {
+            doc.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("metrics: missing/bad \"{key}\""))
+        };
+        let ops_doc = doc.get("ops").ok_or_else(|| anyhow!("metrics: missing \"ops\""))?;
+        let mut ops = [OpStat::default(); OpKind::COUNT];
+        for k in OpKind::ALL {
+            let o = ops_doc
+                .get(k.name())
+                .ok_or_else(|| anyhow!("metrics: ops missing \"{}\"", k.name()))?;
+            let field = |key: &str| -> Result<u64> {
+                o.get(key)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("metrics: ops.{}.{key} missing/bad", k.name()))
+            };
+            ops[k.index()] =
+                OpStat { count: field("count")?, bytes: field("bytes")?, us: field("us")? };
+        }
+        if doc.get("phases").is_none() {
+            bail!("metrics: missing \"phases\"");
+        }
+        let mut peers = Vec::new();
+        let peers_doc =
+            doc.get("peers").ok_or_else(|| anyhow!("metrics: missing \"peers\""))?;
+        for (key, p) in peers_doc
+            .fields()
+            .ok_or_else(|| anyhow!("metrics: \"peers\" must be an object"))?
+        {
+            let opid: u64 =
+                key.parse().map_err(|_| anyhow!("metrics: peer key {key:?} is not an opid"))?;
+            let field = |k: &str| -> Result<u64> {
+                p.get(k)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("metrics: peers.{opid}.{k} missing/bad"))
+            };
+            let hist = |k: &str| -> Result<LogHistogram> {
+                LogHistogram::from_json(
+                    p.get(k).ok_or_else(|| anyhow!("metrics: peers.{opid}.{k} missing"))?,
+                )
+            };
+            peers.push(PeerStat {
+                opid,
+                sent_bytes: field("sent_bytes")?,
+                sent_msgs: field("sent_msgs")?,
+                recv_bytes: field("recv_bytes")?,
+                recv_msgs: field("recv_msgs")?,
+                sent_hist: hist("sent_hist")?,
+                recv_hist: hist("recv_hist")?,
+                take_wait_us_hist: hist("take_wait_us_hist")?,
+            });
+        }
+        peers.sort_by_key(|p| p.opid);
+        Ok(Metrics {
+            ranks: num("ranks")?,
+            steps: num("steps")?,
+            spans: num("spans")?,
+            spans_dropped: num("spans_dropped")?,
+            wall_us: num("wall_us")?,
+            ops,
+            peers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tracer::TraceSet;
+
+    fn sample() -> Metrics {
+        let t = TraceSet::new(2);
+        t.record(0, OpKind::ConvFwd, 1, 0, 0, 0, 0, 10);
+        t.record(0, OpKind::PostActs, 1, 0, 0, 4096, 10, 12);
+        t.record(1, OpKind::ShardGather, 1, 0, 1, 2048, 5, 40);
+        let mut peer = PeerStat {
+            opid: 0,
+            sent_bytes: 4096,
+            sent_msgs: 1,
+            recv_bytes: 2048,
+            recv_msgs: 1,
+            sent_hist: LogHistogram::new(),
+            recv_hist: LogHistogram::new(),
+            take_wait_us_hist: LogHistogram::new(),
+        };
+        peer.sent_hist.record(4096);
+        peer.recv_hist.record(2048);
+        peer.take_wait_us_hist.record(35);
+        Metrics::from_snapshot(&t.snapshot(), 1, vec![peer])
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let m = sample();
+        let text = m.to_json();
+        let back = Metrics::parse(&text).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.to_json(), text, "canonical: serialize→parse→serialize");
+    }
+
+    #[test]
+    fn phases_derive_from_ops() {
+        let m = sample();
+        assert_eq!(m.phase_bytes(CommCategory::ModuloFwd), 4096);
+        assert_eq!(m.phase_bytes(CommCategory::ShardFwd), 2048);
+        assert_eq!(m.phase_us(CommCategory::ShardFwd), 35);
+        assert_eq!(m.compute_us(), 10);
+        assert_eq!(m.total_bytes(), 4096 + 2048);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_concats_peers() {
+        let a = sample();
+        let mut b = sample();
+        b.peers[0].opid = 1;
+        let m = Metrics::merge(&[a.clone(), b]);
+        assert_eq!(m.ranks, 4);
+        assert_eq!(m.steps, 1);
+        assert_eq!(m.spans, 6);
+        assert_eq!(m.op(OpKind::PostActs).bytes, 8192);
+        assert_eq!(m.peers.len(), 2);
+        assert_eq!((m.peers[0].opid, m.peers[1].opid), (0, 1));
+        // A merged document still round-trips.
+        assert_eq!(Metrics::parse(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn parse_rejects_bad_version_and_missing_ops() {
+        let text = sample().to_json().replace(
+            "\"splitbrain_metrics\": 1",
+            "\"splitbrain_metrics\": 9",
+        );
+        assert!(Metrics::parse(&text).is_err());
+        assert!(Metrics::parse("{}").is_err());
+    }
+}

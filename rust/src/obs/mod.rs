@@ -1,0 +1,35 @@
+//! Per-op observability: span tracing, metrics snapshots, Chrome-trace
+//! export, and the measured-vs-predicted cost-model report.
+//!
+//! Every engine (sequential lockstep, threaded in-proc, multi-process
+//! TCP) executes the step program through the single
+//! `coordinator::program::exec_op` choke point, so one instrumentation
+//! site covers all three. When tracing is enabled (builder
+//! [`trace`](crate::api::SessionBuilder), CLI `--trace`) each executed
+//! [`StepOp`](crate::coordinator::program::StepOp) is recorded as a
+//! [`Span`] in a preallocated per-rank ring buffer — no allocation on
+//! the hot path, and a no-op when disabled.
+//!
+//! At run end (and at every averaging boundary, for live watching) the
+//! spans are folded into a [`Metrics`] snapshot (`metrics.json`) and a
+//! Chrome-trace document (`trace.json`, Perfetto-loadable). The
+//! deterministic fields — op sequence, counts, byte totals — are
+//! bit-identical across seeded replays and across all three engines;
+//! timings are wall-clock but schema-stable.
+//!
+//! `splitbrain profile <run-dir>` then folds `metrics.json` against the
+//! plan's analytic communication volumes ([`profile`]): measured comm
+//! bytes must match the schedule's prediction exactly, while measured
+//! times quantify the α–β network model's honesty.
+
+pub mod chrome;
+pub mod hist;
+pub mod metrics;
+pub mod profile;
+pub mod tracer;
+
+pub use chrome::{chrome_trace_json, merge_chrome_traces};
+pub use hist::LogHistogram;
+pub use metrics::{Metrics, OpStat, PeerStat, METRICS_VERSION};
+pub use profile::{profile, PhaseRow, ProfileReport};
+pub use tracer::{OpKind, Span, TraceSet, TraceSnapshot};

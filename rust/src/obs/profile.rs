@@ -1,0 +1,304 @@
+//! The measured-vs-predicted cost-model report behind
+//! `splitbrain profile <run-dir>`.
+//!
+//! Folds a run's measured [`Metrics`] against the [`StepSchedule`]'s
+//! analytic per-phase communication volumes and the α–β [`NetModel`]'s
+//! time predictions, per [`CommCategory`]. Byte columns compare
+//! **cluster totals**: the schedule predicts what one member posts per
+//! phase occurrence, every participant posts it (uniform schemes), and
+//! the tracer measures exactly the transport's counted payload — so on
+//! a clean run the relative error of the byte columns is exactly 0 %,
+//! which is the honesty check the cost-model-driven auto-partitioner
+//! (ROADMAP) searches against. Time columns compare the model's
+//! critical path against the mean measured per-rank wall time and are
+//! expected to differ (that difference *is* the report's value).
+
+use crate::comm::{CommCategory, NetModel};
+use crate::coordinator::schedule::StepSchedule;
+
+use super::metrics::Metrics;
+use super::tracer::OpKind;
+
+/// One category's measured-vs-predicted comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseRow {
+    /// The communication category.
+    pub category: CommCategory,
+    /// Phase-occurrence count over the run (steps for MP categories,
+    /// averaging events for the averaging categories), derived from
+    /// the measured op counts.
+    pub events: u64,
+    /// Cluster-total predicted bytes over the run.
+    pub predicted_bytes: u64,
+    /// Cluster-total measured bytes over the run.
+    pub measured_bytes: u64,
+    /// Modeled seconds over the run (per-rank critical path).
+    pub predicted_secs: f64,
+    /// Mean measured per-rank wall seconds over the run.
+    pub measured_secs: f64,
+}
+
+impl PhaseRow {
+    /// Relative byte error (measured vs predicted); `None` when both
+    /// sides are zero.
+    pub fn bytes_rel_err(&self) -> Option<f64> {
+        rel_err(self.measured_bytes as f64, self.predicted_bytes as f64)
+    }
+
+    /// Relative time error; `None` when both sides are zero.
+    pub fn secs_rel_err(&self) -> Option<f64> {
+        rel_err(self.measured_secs, self.predicted_secs)
+    }
+}
+
+fn rel_err(measured: f64, predicted: f64) -> Option<f64> {
+    if predicted == 0.0 && measured == 0.0 {
+        None
+    } else if predicted == 0.0 {
+        Some(f64::INFINITY)
+    } else {
+        Some((measured - predicted) / predicted)
+    }
+}
+
+/// The full report: one row per category plus run-level context.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// Per-category rows, [`CommCategory::ALL`] order.
+    pub rows: Vec<PhaseRow>,
+    /// Ranks the metrics cover.
+    pub ranks: u64,
+    /// Steps the metrics cover.
+    pub steps: u64,
+    /// Mean measured per-rank compute seconds.
+    pub compute_secs: f64,
+    /// Measured wall seconds (first span start → last span end).
+    pub wall_secs: f64,
+}
+
+/// Fold measured metrics against the schedule's analytic volumes and
+/// the network model's time predictions.
+pub fn profile(schedule: &StepSchedule, net: &NetModel, metrics: &Metrics) -> ProfileReport {
+    let ranks = metrics.ranks.max(1);
+    // Occurrences: MP phases run every step; averaging phases run once
+    // per averaging event. Both are read off the measured op counts
+    // (every participating rank records one span per occurrence), so
+    // the byte columns isolate the *volume* model, not the scheduler.
+    let avg_events =
+        |kind: OpKind| -> u64 { metrics.op(kind).count / ranks };
+    let rows = CommCategory::ALL
+        .iter()
+        .map(|&cat| {
+            let (phases, events): (&[_], u64) = match cat {
+                CommCategory::DpAverage => {
+                    (&schedule.avg_phases, avg_events(OpKind::AverageReplicated))
+                }
+                CommCategory::ShardAverage => {
+                    (&schedule.avg_phases, avg_events(OpKind::AverageShards))
+                }
+                _ => (&schedule.mp_phases, metrics.steps),
+            };
+            let per_member_bytes: u64 = phases
+                .iter()
+                .filter(|p| p.category == cat)
+                .map(|p| p.times * p.per_member.bytes_out)
+                .sum();
+            let secs_per_event: f64 = phases
+                .iter()
+                .filter(|p| p.category == cat)
+                .map(|p| p.times as f64 * net.phase_time(p.per_member))
+                .sum();
+            PhaseRow {
+                category: cat,
+                events,
+                predicted_bytes: events * per_member_bytes * metrics.ranks,
+                measured_bytes: metrics.phase_bytes(cat),
+                predicted_secs: events as f64 * secs_per_event,
+                measured_secs: metrics.phase_us(cat) as f64 / 1e6 / ranks as f64,
+            }
+        })
+        .collect();
+    ProfileReport {
+        rows,
+        ranks: metrics.ranks,
+        steps: metrics.steps,
+        compute_secs: metrics.compute_us() as f64 / 1e6 / ranks as f64,
+        wall_secs: metrics.wall_us as f64 / 1e6,
+    }
+}
+
+impl ProfileReport {
+    /// Render the per-phase table. Byte columns (and their error) are
+    /// deterministic for seeded replays; time columns are wall-clock.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "=== measured vs predicted comm profile ({} ranks, {} steps) ===\n",
+            self.ranks, self.steps
+        ));
+        s.push_str(&format!(
+            "{:<14} {:>7} {:>14} {:>14} {:>8} {:>12} {:>12} {:>8}\n",
+            "phase", "events", "pred bytes", "meas bytes", "err", "pred s", "meas s/rank", "err"
+        ));
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:<14} {:>7} {:>14} {:>14} {:>8} {:>12.6} {:>12.6} {:>8}\n",
+                r.category.to_string(),
+                r.events,
+                r.predicted_bytes,
+                r.measured_bytes,
+                fmt_err(r.bytes_rel_err()),
+                r.predicted_secs,
+                r.measured_secs,
+                fmt_err(r.secs_rel_err()),
+            ));
+        }
+        let pred_total: u64 = self.rows.iter().map(|r| r.predicted_bytes).sum();
+        let meas_total: u64 = self.rows.iter().map(|r| r.measured_bytes).sum();
+        s.push_str(&format!(
+            "{:<14} {:>7} {:>14} {:>14} {:>8}\n",
+            "total",
+            "",
+            pred_total,
+            meas_total,
+            fmt_err(rel_err(meas_total as f64, pred_total as f64)),
+        ));
+        s.push_str(&format!(
+            "compute: {:.6} s/rank   wall: {:.6} s\n",
+            self.compute_secs, self.wall_secs
+        ));
+        s
+    }
+}
+
+fn fmt_err(err: Option<f64>) -> String {
+    match err {
+        None => "--".to_string(),
+        Some(e) if e.is_infinite() => "inf".to_string(),
+        Some(e) => format!("{:+.1}%", e * 100.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::netmodel::PhaseVolume;
+    use crate::coordinator::schedule::CommPhase;
+    use crate::obs::metrics::OpStat;
+
+    /// A hand-built schedule fragment + matching metrics: the byte
+    /// columns must come out exactly equal (0 % error).
+    #[test]
+    fn exact_bytes_give_zero_error() {
+        let rt = crate::runtime::RuntimeClient::native().unwrap();
+        let net_model = crate::model::partition_network(
+            &crate::model::vgg11(),
+            vec![32, 32, 3],
+            &crate::model::PartitionConfig { mp: 2, ..Default::default() },
+        )
+        .unwrap();
+        let topo = crate::coordinator::GmpTopology::new(4, 2).unwrap();
+        let schedule = StepSchedule::compile_with_algo(
+            &net_model,
+            topo,
+            &rt.manifest,
+            false,
+            crate::coordinator::McastScheme::BoverK,
+            crate::comm::CollectiveAlgo::Ring,
+        )
+        .unwrap();
+        let steps = 4u64;
+        let avg_events = 2u64;
+        let ranks = 4u64;
+        // Synthesize metrics whose per-category bytes equal the
+        // schedule's cluster-total predictions exactly.
+        let mut ops = [OpStat::default(); OpKind::COUNT];
+        for cat in CommCategory::ALL {
+            let (phases, events): (&[CommPhase], u64) = match cat {
+                CommCategory::DpAverage | CommCategory::ShardAverage => {
+                    (&schedule.avg_phases, avg_events)
+                }
+                _ => (&schedule.mp_phases, steps),
+            };
+            let bytes: u64 = phases
+                .iter()
+                .filter(|p| p.category == cat)
+                .map(|p| p.times * p.per_member.bytes_out)
+                .sum();
+            // Attribute everything to one representative op kind.
+            let kind = match cat {
+                CommCategory::DpAverage => OpKind::AverageReplicated,
+                CommCategory::ShardAverage => OpKind::AverageShards,
+                CommCategory::ModuloFwd => OpKind::PostActs,
+                CommCategory::ModuloBwd => OpKind::PostGrads,
+                CommCategory::ShardFwd => OpKind::ShardGather,
+                CommCategory::ShardBwd => OpKind::ShardBwd,
+            };
+            ops[kind.index()].bytes = events * bytes * ranks;
+        }
+        ops[OpKind::AverageReplicated.index()].count = avg_events * ranks;
+        ops[OpKind::AverageShards.index()].count = avg_events * ranks;
+        let metrics = Metrics {
+            ranks,
+            steps,
+            spans: 0,
+            spans_dropped: 0,
+            wall_us: 0,
+            ops,
+            peers: vec![],
+        };
+        let report = profile(&schedule, &NetModel::default(), &metrics);
+        for row in &report.rows {
+            assert_eq!(
+                row.predicted_bytes, row.measured_bytes,
+                "{}: bytes must match exactly",
+                row.category
+            );
+            let err = row.bytes_rel_err();
+            assert!(err.is_none() || err == Some(0.0), "{}: {err:?}", row.category);
+        }
+        let rendered = report.render();
+        assert!(rendered.contains("dp-average"));
+        assert!(rendered.contains("+0.0%") || rendered.contains("--"), "{rendered}");
+    }
+
+    #[test]
+    fn volume_mismatch_shows_up_as_error() {
+        let mut m = Metrics {
+            ranks: 2,
+            steps: 1,
+            spans: 0,
+            spans_dropped: 0,
+            wall_us: 0,
+            ops: [OpStat::default(); OpKind::COUNT],
+            peers: vec![],
+        };
+        m.ops[OpKind::PostActs.index()].bytes = 1000;
+        let schedule = StepSchedule {
+            topo: crate::coordinator::GmpTopology::new(2, 2).unwrap(),
+            batch: 8,
+            algo: crate::comm::CollectiveAlgo::Naive,
+            boundary_width: 4,
+            shard_widths: vec![4, 4],
+            compute: vec![],
+            mp_phases: vec![CommPhase {
+                category: CommCategory::ModuloFwd,
+                per_member: PhaseVolume::new(1, 400),
+                times: 1,
+                ranks: 2,
+            }],
+            avg_phases: vec![],
+            replicated_params: 0,
+            shard_params: 0,
+        };
+        let report = profile(&schedule, &NetModel::default(), &m);
+        let row = report
+            .rows
+            .iter()
+            .find(|r| r.category == CommCategory::ModuloFwd)
+            .unwrap();
+        assert_eq!(row.predicted_bytes, 800);
+        assert_eq!(row.measured_bytes, 1000);
+        assert!((row.bytes_rel_err().unwrap() - 0.25).abs() < 1e-12);
+    }
+}

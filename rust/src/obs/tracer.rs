@@ -1,0 +1,403 @@
+//! The per-rank span recorder behind `--trace`.
+//!
+//! One [`TraceSet`] serves a whole process: one preallocated ring of
+//! [`Span`]s per rank plus exact per-op-kind aggregates. The hot path
+//! (`record`) takes the rank's own uncontended mutex, writes one fixed-
+//! size slot and bumps a few counters — no allocation, no formatting,
+//! no syscalls. When the ring wraps, old spans are dropped from the
+//! Chrome trace (counted in `dropped`) but the aggregates stay exact,
+//! so `metrics.json` never lies.
+//!
+//! Determinism contract: the *sequence* of (kind, step, round, seg,
+//! bytes) per rank is identical across seeded replays and across all
+//! three engines for the same configuration — only `start_us`/`dur_us`
+//! are wall-clock. The `obs_trace` suite pins this.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::comm::CommCategory;
+
+/// The kind of a traced step-program op. Mirrors the traced subset of
+/// `coordinator::program::StepOp`: `CrashPoll` and `Barrier` are
+/// deliberately absent because the engines dispatch them asymmetrically
+/// (the sequential engine handles both outside the shared executor), so
+/// tracing them would break cross-engine span parity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum OpKind {
+    /// mp=1 fused fast path (`full_step` artifact + local SGD).
+    FullStep,
+    /// Conv front forward.
+    ConvFwd,
+    /// Modulo label post (fwd).
+    PostLabels,
+    /// Modulo activation post (fwd).
+    PostActs,
+    /// Modulo take/assemble (fwd).
+    ModuloGather,
+    /// Sharded FC forward segment.
+    FcFwd,
+    /// Shard-layer fprop allgather.
+    ShardGather,
+    /// Replicated head (loss + FC2 grads).
+    HeadStep,
+    /// Shard-layer bprop (slice or partial reduce).
+    ShardBwd,
+    /// Sharded FC backward segment.
+    FcBwd,
+    /// Modulo gradient post (bwd).
+    PostGrads,
+    /// Modulo gradient reduce (bwd).
+    ReduceGrads,
+    /// Conv front backward + optimizer updates.
+    ConvBwdUpdate,
+    /// DP allreduce-mean of replicated parameters.
+    AverageReplicated,
+    /// Inter-group allreduce-mean of FC shards.
+    AverageShards,
+    /// Restore-point refresh (control plane, uncounted bytes).
+    CheckpointRefresh,
+}
+
+impl OpKind {
+    /// Every kind, in reporting order (the `metrics.json` "ops" key
+    /// order — schema-stable).
+    pub const ALL: [OpKind; 16] = [
+        OpKind::FullStep,
+        OpKind::ConvFwd,
+        OpKind::PostLabels,
+        OpKind::PostActs,
+        OpKind::ModuloGather,
+        OpKind::FcFwd,
+        OpKind::ShardGather,
+        OpKind::HeadStep,
+        OpKind::ShardBwd,
+        OpKind::FcBwd,
+        OpKind::PostGrads,
+        OpKind::ReduceGrads,
+        OpKind::ConvBwdUpdate,
+        OpKind::AverageReplicated,
+        OpKind::AverageShards,
+        OpKind::CheckpointRefresh,
+    ];
+
+    /// Number of kinds (aggregate-array width).
+    pub const COUNT: usize = OpKind::ALL.len();
+
+    /// Stable kebab-case name (the `metrics.json` / Chrome-trace label).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::FullStep => "full-step",
+            OpKind::ConvFwd => "conv-fwd",
+            OpKind::PostLabels => "post-labels",
+            OpKind::PostActs => "post-acts",
+            OpKind::ModuloGather => "modulo-gather",
+            OpKind::FcFwd => "fc-fwd",
+            OpKind::ShardGather => "shard-gather",
+            OpKind::HeadStep => "head-step",
+            OpKind::ShardBwd => "shard-bwd",
+            OpKind::FcBwd => "fc-bwd",
+            OpKind::PostGrads => "post-grads",
+            OpKind::ReduceGrads => "reduce-grads",
+            OpKind::ConvBwdUpdate => "conv-bwd-update",
+            OpKind::AverageReplicated => "average-replicated",
+            OpKind::AverageShards => "average-shards",
+            OpKind::CheckpointRefresh => "checkpoint-refresh",
+        }
+    }
+
+    /// Index into the aggregate arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// The communication category the op's wire traffic (and wait time)
+    /// is attributed to; `None` for pure compute ops and the zero-byte
+    /// control-plane checkpoint refresh.
+    pub fn category(self) -> Option<CommCategory> {
+        match self {
+            OpKind::PostLabels | OpKind::PostActs | OpKind::ModuloGather => {
+                Some(CommCategory::ModuloFwd)
+            }
+            OpKind::PostGrads | OpKind::ReduceGrads => Some(CommCategory::ModuloBwd),
+            OpKind::ShardGather => Some(CommCategory::ShardFwd),
+            OpKind::ShardBwd => Some(CommCategory::ShardBwd),
+            OpKind::AverageReplicated => Some(CommCategory::DpAverage),
+            OpKind::AverageShards => Some(CommCategory::ShardAverage),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded op execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// What ran.
+    pub kind: OpKind,
+    /// Training step (1-based, as the drivers count).
+    pub step: u32,
+    /// Modulo round (0 for roundless ops).
+    pub round: u32,
+    /// Sharded-FC segment index (0 for segmentless ops).
+    pub seg: u32,
+    /// Bytes this rank posted during the op (counted wire payload).
+    pub bytes: u64,
+    /// Start, µs since the tracer's epoch. Wall-clock: masked in tests.
+    pub start_us: u64,
+    /// Duration, µs. Wall-clock: masked in tests.
+    pub dur_us: u64,
+}
+
+/// One rank's recording state: span ring + exact aggregates.
+#[derive(Debug)]
+struct RankTrace {
+    /// Preallocated ring (capacity fixed at construction).
+    spans: Vec<Span>,
+    /// Next ring slot to overwrite once full.
+    cursor: usize,
+    /// Total spans ever recorded (dropped = total - spans.len()).
+    total: u64,
+    count: [u64; OpKind::COUNT],
+    bytes: [u64; OpKind::COUNT],
+    us: [u64; OpKind::COUNT],
+    first_start_us: u64,
+    last_end_us: u64,
+}
+
+impl RankTrace {
+    fn new() -> RankTrace {
+        RankTrace {
+            spans: Vec::new(),
+            cursor: 0,
+            total: 0,
+            count: [0; OpKind::COUNT],
+            bytes: [0; OpKind::COUNT],
+            us: [0; OpKind::COUNT],
+            first_start_us: u64::MAX,
+            last_end_us: 0,
+        }
+    }
+}
+
+/// Read-only copy of one rank's trace at snapshot time.
+#[derive(Debug, Clone)]
+pub struct RankSnapshot {
+    /// Retained spans, oldest first.
+    pub spans: Vec<Span>,
+    /// Spans dropped by ring wrap (aggregates still include them).
+    pub dropped: u64,
+    /// Spans recorded per kind (exact, wrap-proof).
+    pub count: [u64; OpKind::COUNT],
+    /// Bytes posted per kind (exact).
+    pub bytes: [u64; OpKind::COUNT],
+    /// Wall µs spent per kind (exact).
+    pub us: [u64; OpKind::COUNT],
+    /// Earliest span start (µs since epoch; `u64::MAX` when empty).
+    pub first_start_us: u64,
+    /// Latest span end (µs since epoch; 0 when empty).
+    pub last_end_us: u64,
+}
+
+/// Read-only copy of the whole trace set at snapshot time.
+#[derive(Debug, Clone)]
+pub struct TraceSnapshot {
+    /// Per-rank snapshots, rank order.
+    pub ranks: Vec<RankSnapshot>,
+}
+
+impl TraceSnapshot {
+    /// Spans retained across all ranks.
+    pub fn span_count(&self) -> u64 {
+        self.ranks.iter().map(|r| r.spans.len() as u64).sum()
+    }
+
+    /// Spans dropped by ring wrap across all ranks.
+    pub fn dropped(&self) -> u64 {
+        self.ranks.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Wall µs from the earliest span start to the latest span end
+    /// (0 when nothing was recorded).
+    pub fn wall_us(&self) -> u64 {
+        let first = self.ranks.iter().map(|r| r.first_start_us).min().unwrap_or(u64::MAX);
+        let last = self.ranks.iter().map(|r| r.last_end_us).max().unwrap_or(0);
+        last.saturating_sub(if first == u64::MAX { last } else { first })
+    }
+}
+
+/// Default per-rank span-ring capacity (spans beyond it are dropped
+/// from the Chrome trace; aggregates stay exact). ~40 B per slot.
+pub const DEFAULT_SPAN_CAPACITY: usize = 65_536;
+
+/// A process's span recorder: one ring per rank, shared epoch.
+///
+/// In-proc engines hold one `TraceSet` covering every rank; each TCP
+/// worker process holds a single-rank set for its own rank and the
+/// launcher merges the exported files. Absence of a `TraceSet`
+/// (`--trace` off) short-circuits instrumentation to a `None` check.
+#[derive(Debug)]
+pub struct TraceSet {
+    epoch: Instant,
+    capacity: usize,
+    ranks: Vec<Mutex<RankTrace>>,
+}
+
+impl TraceSet {
+    /// A trace set for `ranks` ranks with the default ring capacity.
+    pub fn new(ranks: usize) -> TraceSet {
+        TraceSet::with_capacity(ranks, DEFAULT_SPAN_CAPACITY)
+    }
+
+    /// A trace set with an explicit per-rank ring capacity (tests pin
+    /// wrap behavior with tiny rings).
+    pub fn with_capacity(ranks: usize, capacity: usize) -> TraceSet {
+        TraceSet {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            ranks: (0..ranks).map(|_| Mutex::new(RankTrace::new())).collect(),
+        }
+    }
+
+    /// Ranks this set records.
+    pub fn ranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// µs since the tracer's epoch (span timestamps use this clock).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one span for `rank`. `start_us`/`end_us` are
+    /// [`now_us`](Self::now_us) readings around the op.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        rank: usize,
+        kind: OpKind,
+        step: u32,
+        round: u32,
+        seg: u32,
+        bytes: u64,
+        start_us: u64,
+        end_us: u64,
+    ) {
+        let span = Span {
+            kind,
+            step,
+            round,
+            seg,
+            bytes,
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+        };
+        let mut rt = self.ranks[rank].lock().unwrap();
+        let i = kind.index();
+        rt.count[i] += 1;
+        rt.bytes[i] += bytes;
+        rt.us[i] += span.dur_us;
+        rt.first_start_us = rt.first_start_us.min(start_us);
+        rt.last_end_us = rt.last_end_us.max(end_us);
+        rt.total += 1;
+        if rt.spans.len() < self.capacity {
+            rt.spans.push(span);
+        } else {
+            let slot = rt.cursor;
+            rt.spans[slot] = span;
+            rt.cursor = (slot + 1) % self.capacity;
+        }
+    }
+
+    /// Copy out the current state (spans re-ordered oldest-first across
+    /// the ring seam).
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let ranks = self
+            .ranks
+            .iter()
+            .map(|m| {
+                let rt = m.lock().unwrap();
+                let mut spans = Vec::with_capacity(rt.spans.len());
+                if rt.spans.len() == self.capacity && rt.cursor > 0 {
+                    spans.extend_from_slice(&rt.spans[rt.cursor..]);
+                    spans.extend_from_slice(&rt.spans[..rt.cursor]);
+                } else {
+                    spans.extend_from_slice(&rt.spans);
+                }
+                RankSnapshot {
+                    dropped: rt.total - rt.spans.len() as u64,
+                    spans,
+                    count: rt.count,
+                    bytes: rt.bytes,
+                    us: rt.us,
+                    first_start_us: rt.first_start_us,
+                    last_end_us: rt.last_end_us,
+                }
+            })
+            .collect();
+        TraceSnapshot { ranks }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_distinct_and_named() {
+        let mut names: Vec<&str> = OpKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), OpKind::COUNT);
+        for (i, k) in OpKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i, "ALL order must match discriminant order");
+        }
+    }
+
+    #[test]
+    fn record_updates_aggregates_and_ring() {
+        let t = TraceSet::with_capacity(2, 8);
+        t.record(0, OpKind::ConvFwd, 1, 0, 0, 0, 10, 25);
+        t.record(0, OpKind::PostActs, 1, 0, 0, 4096, 25, 30);
+        t.record(1, OpKind::ConvFwd, 1, 0, 0, 0, 12, 20);
+        let snap = t.snapshot();
+        assert_eq!(snap.span_count(), 3);
+        assert_eq!(snap.dropped(), 0);
+        let r0 = &snap.ranks[0];
+        assert_eq!(r0.count[OpKind::ConvFwd.index()], 1);
+        assert_eq!(r0.bytes[OpKind::PostActs.index()], 4096);
+        assert_eq!(r0.us[OpKind::ConvFwd.index()], 15);
+        assert_eq!((r0.first_start_us, r0.last_end_us), (10, 30));
+        assert_eq!(snap.wall_us(), 20);
+    }
+
+    #[test]
+    fn ring_wrap_drops_spans_but_not_aggregates() {
+        let t = TraceSet::with_capacity(1, 4);
+        for step in 1..=10u32 {
+            t.record(0, OpKind::FullStep, step, 0, 0, 0, step as u64, step as u64 + 1);
+        }
+        let snap = t.snapshot();
+        let r = &snap.ranks[0];
+        assert_eq!(r.spans.len(), 4);
+        assert_eq!(r.dropped, 6);
+        assert_eq!(r.count[OpKind::FullStep.index()], 10, "aggregates stay exact");
+        // Oldest-first across the seam: steps 7..=10 retained in order.
+        let steps: Vec<u32> = r.spans.iter().map(|s| s.step).collect();
+        assert_eq!(steps, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn categories_partition_comm_from_compute() {
+        use crate::comm::CommCategory;
+        assert_eq!(OpKind::PostActs.category(), Some(CommCategory::ModuloFwd));
+        assert_eq!(OpKind::ReduceGrads.category(), Some(CommCategory::ModuloBwd));
+        assert_eq!(OpKind::ShardGather.category(), Some(CommCategory::ShardFwd));
+        assert_eq!(OpKind::ShardBwd.category(), Some(CommCategory::ShardBwd));
+        assert_eq!(OpKind::AverageReplicated.category(), Some(CommCategory::DpAverage));
+        assert_eq!(OpKind::AverageShards.category(), Some(CommCategory::ShardAverage));
+        for k in [OpKind::FullStep, OpKind::ConvFwd, OpKind::HeadStep, OpKind::CheckpointRefresh] {
+            assert_eq!(k.category(), None, "{} is not comm", k.name());
+        }
+    }
+}

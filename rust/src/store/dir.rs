@@ -5,6 +5,10 @@
 //!   run.json          canonical RunManifest — the run's config identity
 //!   events.log        append-only CRC-framed event log
 //!   opid<R>.pid       live worker PIDs (TCP launch engine only)
+//!   metrics.json          --trace: merged per-op metrics snapshot
+//!   trace.json            --trace: merged Chrome-trace-event file
+//!   metrics-opid<R>.json  --trace, launch engine: per-process metrics
+//!   trace-opid<R>.json    --trace, launch engine: per-process trace
 //!   checkpoints/
 //!     step-K.ckpt           in-proc engines: whole-cluster artifact
 //!     step-K.opid-R.ckpt    launch engine: per-process artifact
@@ -212,6 +216,32 @@ impl RunDir {
     /// kill-resume smoke read these to SIGKILL the coordinator).
     pub fn pid_path(&self, opid: usize) -> PathBuf {
         self.root.join(format!("opid{opid}.pid"))
+    }
+
+    /// Merged Chrome-trace-event file (`--trace`; all ranks, one pid
+    /// per launch-engine process, one tid per rank).
+    pub fn trace_path(&self) -> PathBuf {
+        self.root.join("trace.json")
+    }
+
+    /// Merged per-op metrics snapshot (`--trace`), rewritten at every
+    /// averaging boundary and at run end.
+    pub fn metrics_path(&self) -> PathBuf {
+        self.root.join("metrics.json")
+    }
+
+    /// Launch-engine per-process Chrome-trace file for `opid`; the
+    /// launcher merges these into [`trace_path`](RunDir::trace_path)
+    /// once every worker exits.
+    pub fn worker_trace_path(&self, opid: usize) -> PathBuf {
+        self.root.join(format!("trace-opid{opid}.json"))
+    }
+
+    /// Launch-engine per-process metrics snapshot for `opid`; the
+    /// launcher merges these into
+    /// [`metrics_path`](RunDir::metrics_path) once every worker exits.
+    pub fn worker_metrics_path(&self, opid: usize) -> PathBuf {
+        self.root.join(format!("metrics-opid{opid}.json"))
     }
 
     /// Steps with an in-proc artifact file, ascending (presence only —

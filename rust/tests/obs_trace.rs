@@ -1,0 +1,349 @@
+//! Observability-layer integration suite: the determinism contract of
+//! the per-op tracer and its exports.
+//!
+//! The deterministic span fields — (kind, step, round, seg, bytes) per
+//! rank, in order — must be bit-identical across seeded replays and
+//! across all three engines (sequential, threaded, TCP multi-process);
+//! only the timing fields are wall-clock, so every comparison here
+//! masks them. On top of that: Chrome-trace exports must parse with the
+//! crate's own strict JSON parser, histogram bucket edges are pinned as
+//! schema, a disabled tracer must leave the numerics untouched, and
+//! `profile` over a fresh traced run dir must report **exactly 0%**
+//! byte error against the plan's analytic volumes.
+//!
+//! Runs on the built-in native backend (no artifacts needed).
+
+use splitbrain::api::{step_reports, CollectSink, SessionBuilder, Watcher};
+use splitbrain::comm::transport::TcpPeer;
+use splitbrain::comm::{CollectiveAlgo, CommCategory};
+use splitbrain::coordinator::procdriver::{run_worker, ProcConfig, RunOutcome};
+use splitbrain::coordinator::ExecEngine;
+use splitbrain::obs::{profile, LogHistogram, Metrics, OpKind};
+use splitbrain::runtime::RuntimeClient;
+use splitbrain::util::json::Json;
+
+const SEED: u64 = 123;
+const DATASET: usize = 256;
+
+fn builder(n: usize, mp: usize, engine: ExecEngine, overlap: bool) -> SessionBuilder {
+    SessionBuilder::new()
+        .workers(n)
+        .mp(mp)
+        .lr(0.02)
+        .momentum(0.9)
+        .clip_norm(1.0)
+        .avg_period(4)
+        .seed(SEED)
+        .dataset_size(DATASET)
+        .engine(engine)
+        .collectives(CollectiveAlgo::Ring)
+        .overlap(overlap)
+}
+
+/// A span with the wall-clock fields masked off — the deterministic
+/// identity the suite compares.
+type MaskedSpan = (&'static str, u32, u32, u32, u64);
+
+/// Run an in-proc traced session and return every rank's masked span
+/// sequence (rank-major, chronological within each rank).
+fn masked_spans(
+    rt: &RuntimeClient,
+    engine: ExecEngine,
+    n: usize,
+    mp: usize,
+    steps: usize,
+) -> Vec<Vec<MaskedSpan>> {
+    let mut session = builder(n, mp, engine, false)
+        .steps(steps)
+        .trace(true)
+        .validate(rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    session.run().unwrap();
+    let snap = session.cluster().tracer().unwrap().snapshot();
+    snap.ranks
+        .iter()
+        .map(|r| {
+            r.spans
+                .iter()
+                .map(|s| (s.kind.name(), s.step, s.round, s.seg, s.bytes))
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-kind (count, bytes) pairs — the timing-masked half of a
+/// [`Metrics`] document.
+fn masked_ops(m: &Metrics) -> Vec<(u64, u64)> {
+    OpKind::ALL.iter().map(|&k| (m.op(k).count, m.op(k).bytes)).collect()
+}
+
+#[test]
+fn span_sequences_bit_identical_across_seeded_replays() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let a = masked_spans(&rt, ExecEngine::Threaded, 4, 2, 8);
+    let b = masked_spans(&rt, ExecEngine::Threaded, 4, 2, 8);
+    assert!(!a.is_empty() && a.iter().any(|r| !r.is_empty()), "spans were recorded");
+    assert_eq!(a, b, "same seed + config must replay the same span sequence");
+}
+
+#[test]
+fn span_sequences_bit_identical_across_inproc_engines() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let seq = masked_spans(&rt, ExecEngine::Sequential, 4, 2, 8);
+    let thr = masked_spans(&rt, ExecEngine::Threaded, 4, 2, 8);
+    assert_eq!(seq.len(), thr.len());
+    for (rank, (a, b)) in seq.iter().zip(thr.iter()).enumerate() {
+        assert_eq!(a, b, "rank {rank}: sequential vs threaded span sequence diverged");
+    }
+}
+
+/// The TCP engine against the in-proc threaded engine: per-rank masked
+/// span sequences are recovered from each worker's exported
+/// `trace-opid<R>.json` (deterministic fields ride the export
+/// unscathed) and the merged per-opid metrics must agree with the
+/// in-proc session's metrics on every per-kind count and byte total.
+#[test]
+fn tcp_spans_and_metrics_match_inproc() {
+    let (n, mp, steps) = (2usize, 2usize, 4usize);
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let inproc = masked_spans(&rt, ExecEngine::Threaded, n, mp, steps);
+    let mut session = builder(n, mp, ExecEngine::Threaded, false)
+        .steps(steps)
+        .trace(true)
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    session.run().unwrap();
+    let inproc_metrics = session.metrics().unwrap();
+
+    let peers: Vec<TcpPeer> = {
+        let listeners: Vec<std::net::TcpListener> = (0..n)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        listeners
+            .iter()
+            .enumerate()
+            .map(|(opid, l)| TcpPeer { opid, addr: l.local_addr().unwrap().to_string() })
+            .collect()
+    };
+    let out_dir =
+        std::env::temp_dir().join(format!("splitbrain-obs-trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let cfg = builder(n, mp, ExecEngine::Threaded, false).cluster_config().unwrap();
+    let outcomes: Vec<RunOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|opid| {
+                let pc = ProcConfig {
+                    cluster: cfg.clone(),
+                    steps,
+                    opid,
+                    peers: peers.clone(),
+                    artifacts: "artifacts".to_string(),
+                    out_dir: Some(out_dir.clone()),
+                    connect_timeout_ms: 30_000,
+                    log_every: 0,
+                    run_dir: None,
+                    resume_step: 0,
+                    trace: true,
+                };
+                s.spawn(move || run_worker(&pc).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(outcomes.iter().all(|o| *o == RunOutcome::Completed));
+
+    let mut parts = Vec::new();
+    for opid in 0..n {
+        // Masked spans out of the Chrome export: "X" events, in order.
+        let text =
+            std::fs::read_to_string(out_dir.join(format!("trace-opid{opid}.json"))).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+        let spans: Vec<(String, u32, u32, u32, u64)> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| {
+                assert_eq!(
+                    e.get("tid").unwrap().as_u64(),
+                    Some(opid as u64),
+                    "a worker records only its own rank"
+                );
+                let args = e.get("args").unwrap();
+                (
+                    e.get("name").unwrap().as_str().unwrap().to_string(),
+                    args.get("step").unwrap().as_u64().unwrap() as u32,
+                    args.get("round").unwrap().as_u64().unwrap() as u32,
+                    args.get("seg").unwrap().as_u64().unwrap() as u32,
+                    args.get("bytes").unwrap().as_u64().unwrap(),
+                )
+            })
+            .collect();
+        let want: Vec<(String, u32, u32, u32, u64)> = inproc[opid]
+            .iter()
+            .map(|&(k, step, round, seg, bytes)| (k.to_string(), step, round, seg, bytes))
+            .collect();
+        assert_eq!(spans, want, "rank {opid}: TCP vs in-proc span sequence diverged");
+
+        let mtext =
+            std::fs::read_to_string(out_dir.join(format!("metrics-opid{opid}.json"))).unwrap();
+        parts.push(Metrics::parse(&mtext).unwrap());
+    }
+    let merged = Metrics::merge(&parts);
+    assert_eq!(merged.ranks, n as u64, "one active rank per opid file");
+    assert_eq!(merged.steps, steps as u64);
+    assert_eq!(masked_ops(&merged), masked_ops(&inproc_metrics));
+    assert_eq!(merged.total_bytes(), inproc_metrics.total_bytes());
+    assert!(!merged.peers.is_empty(), "TCP metrics carry per-peer transport stats");
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+/// `--trace` off: no metrics, no trace — and bit-identical numerics to
+/// a traced run (instrumentation must observe, never perturb).
+#[test]
+fn disabled_tracer_is_inert_and_bitwise_invisible() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let run = |trace: bool| {
+        let mut session = builder(2, 2, ExecEngine::Threaded, false)
+            .steps(4)
+            .trace(trace)
+            .validate(&rt)
+            .unwrap()
+            .start()
+            .unwrap();
+        let sink = CollectSink::new();
+        let events = sink.events();
+        session.attach(Box::new(sink));
+        session.run().unwrap();
+        let loss_bits: Vec<u64> =
+            step_reports(&events.borrow()).iter().map(|r| r.loss.to_bits()).collect();
+        (loss_bits, session.metrics(), session.chrome_trace())
+    };
+    let (plain_bits, plain_metrics, plain_trace) = run(false);
+    assert!(plain_metrics.is_none(), "untraced session has no metrics");
+    assert!(plain_trace.is_none(), "untraced session has no trace");
+    let (traced_bits, traced_metrics, traced_trace) = run(true);
+    assert!(traced_metrics.is_some() && traced_trace.is_some());
+    assert_eq!(plain_bits, traced_bits, "tracing changed the numerics");
+}
+
+#[test]
+fn chrome_trace_export_parses_and_counts_spans() {
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let mut session = builder(2, 2, ExecEngine::Threaded, false)
+        .steps(4)
+        .trace(true)
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    session.run().unwrap();
+    let snap = session.cluster().tracer().unwrap().snapshot();
+    let text = session.chrome_trace().unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+    let spans: Vec<&Json> =
+        events.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("X")).collect();
+    assert_eq!(spans.len() as u64, snap.span_count(), "one X event per retained span");
+    let metas =
+        events.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("M")).count();
+    let active_ranks = snap.ranks.iter().filter(|r| !r.spans.is_empty()).count();
+    assert_eq!(metas, 1 + active_ranks, "process_name + one thread_name per active rank");
+    for s in &spans {
+        let args = s.get("args").expect("span args");
+        for key in ["step", "round", "seg", "bytes"] {
+            assert!(args.get(key).and_then(Json::as_u64).is_some(), "span arg {key}");
+        }
+    }
+}
+
+/// The histogram bucket layout is schema ([`LogHistogram`] merges
+/// bucket-by-bucket across processes, so the edges may never drift):
+/// bucket 0 = zeros, bucket i = [2^(i-1), 2^i), bucket 31 open-ended.
+#[test]
+fn histogram_bucket_edges_are_schema() {
+    assert_eq!(LogHistogram::BUCKETS, 32);
+    for (v, bucket) in
+        [(0u64, 0usize), (1, 1), (2, 2), (3, 2), (4, 3), (1023, 10), (1024, 11), (1 << 30, 31), (u64::MAX, 31)]
+    {
+        assert_eq!(LogHistogram::bucket_of(v), bucket, "bucket_of({v})");
+    }
+    assert_eq!(LogHistogram::lower_bound(0), 0);
+    assert_eq!(LogHistogram::lower_bound(1), 1);
+    assert_eq!(LogHistogram::lower_bound(11), 1024);
+    let mut h = LogHistogram::new();
+    for v in [0, 1, 1024, u64::MAX] {
+        h.record(v);
+    }
+    let doc = Json::parse(&h.to_json()).unwrap();
+    assert_eq!(LogHistogram::from_json(&doc).unwrap(), h, "JSON round trip");
+}
+
+/// The acceptance criterion: a seeded 4-rank traced run persists
+/// `metrics.json` + `trace.json` into its run dir, the watcher reads
+/// the metrics back, and `profile` folds them against the plan's
+/// analytic volumes with **exactly zero** byte error on every phase
+/// that moved data.
+#[test]
+fn profile_over_fresh_traced_run_dir_has_zero_byte_error() {
+    let (n, mp, steps) = (4usize, 2usize, 8usize);
+    let rt = RuntimeClient::load("artifacts").unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("splitbrain-obs-profile-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut session = builder(n, mp, ExecEngine::Threaded, false)
+        .steps(steps)
+        .run_dir(&dir)
+        .trace(true)
+        .validate(&rt)
+        .unwrap()
+        .start()
+        .unwrap();
+    session.run().unwrap();
+    drop(session);
+    assert!(dir.join("trace.json").is_file(), "run end writes trace.json");
+    assert!(dir.join("metrics.json").is_file(), "boundaries + run end write metrics.json");
+
+    // The watcher reads the same snapshot back, read-only.
+    let watcher = Watcher::open(&dir).unwrap();
+    let metrics = watcher.metrics().unwrap().expect("traced run dir has metrics");
+    assert_eq!(metrics.ranks, n as u64);
+    assert_eq!(metrics.steps, steps as u64);
+
+    // Rebuild the plan from the run dir's own manifest (exactly what
+    // `splitbrain profile <run-dir>` does) and fold.
+    let manifest = std::fs::read_to_string(dir.join("run.json")).unwrap();
+    let plan = SessionBuilder::from_manifest(&manifest).unwrap().validate(&rt).unwrap();
+    let report = profile(plan.schedule(), &plan.cluster_config().net, &metrics);
+    assert_eq!(report.ranks, n as u64);
+    assert_eq!(report.steps, steps as u64);
+    let mut phases_with_traffic = 0;
+    for row in &report.rows {
+        assert_eq!(
+            row.measured_bytes, row.predicted_bytes,
+            "{}: measured bytes must hit the analytic volume exactly",
+            row.category
+        );
+        if row.predicted_bytes > 0 {
+            phases_with_traffic += 1;
+            assert_eq!(row.bytes_rel_err(), Some(0.0), "{}: 0% byte error", row.category);
+        }
+    }
+    assert!(phases_with_traffic >= 2, "MP and averaging phases both moved data");
+
+    // The deterministic portion of the rendered report is pinned;
+    // timing columns are wall-clock and deliberately not.
+    let rendered = report.render();
+    assert!(
+        rendered.contains("=== measured vs predicted comm profile (4 ranks, 8 steps) ==="),
+        "header line:\n{rendered}"
+    );
+    for cat in CommCategory::ALL {
+        assert!(rendered.contains(&cat.to_string()), "row for {cat}:\n{rendered}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -289,6 +289,9 @@ fn tcp_bsp_toggle_bit_identical_to_overlapped_threaded() {
                     out_dir: Some(out_dir.clone()),
                     connect_timeout_ms: 30_000,
                     log_every: 0,
+                    run_dir: None,
+                    resume_step: 0,
+                    trace: false,
                 };
                 s.spawn(move || run_worker(&pc).unwrap())
             })
