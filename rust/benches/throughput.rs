@@ -19,6 +19,13 @@
 //! comm, plus per-phase byte totals — identical across engines by the
 //! determinism contract) into the table and the JSON point.
 //!
+//! Besides the throughput table, every row reports per-kernel GFLOP/s
+//! (the `obs::kernel_rows` analytic-FLOPs model folded against the
+//! traced compute spans) and per-collective effective bandwidth in
+//! MB/s (traced bytes over traced span time per [`CommCategory`]) —
+//! both land in the JSON point so the CI regression gate can watch
+//! kernels and collectives individually, not just end-to-end steps/sec.
+//!
 //! Flags: `--steps N` (default 12), `--workers N` (default 4),
 //! `--mp K` (default 2), `--out PATH` (default `BENCH_throughput.json`).
 //!
@@ -35,7 +42,7 @@ use splitbrain::comm::transport::TcpPeer;
 use splitbrain::comm::CommCategory;
 use splitbrain::coordinator::procdriver::{run_worker, ProcConfig, RunOutcome};
 use splitbrain::coordinator::ExecEngine;
-use splitbrain::obs::Metrics;
+use splitbrain::obs::{kernel_rows, KernelRow, Metrics, OpKind};
 use splitbrain::runtime::RuntimeClient;
 use splitbrain::util::{Args, Table};
 
@@ -97,6 +104,51 @@ impl RunResult {
 fn span_secs(m: &Metrics) -> f64 {
     let comm: u64 = CommCategory::ALL.iter().map(|&c| m.phase_us(c)).sum();
     (m.compute_us() + comm) as f64 / 1e6
+}
+
+/// The compute kinds reported as per-kernel GFLOP/s columns, in
+/// step order.
+const KERNEL_KINDS: [OpKind; 6] = [
+    OpKind::FullStep,
+    OpKind::ConvFwd,
+    OpKind::FcFwd,
+    OpKind::HeadStep,
+    OpKind::FcBwd,
+    OpKind::ConvBwdUpdate,
+];
+
+/// GFLOP/s for one kind out of a config's kernel rows; `None` when the
+/// config never ran the kind (or recorded no time for it).
+fn kind_gflops(rows: &[KernelRow], kind: OpKind) -> Option<f64> {
+    rows.iter().find(|r| r.kind == kind).and_then(|r| r.gflops())
+}
+
+/// Effective per-rank bandwidth of one collective category in MB/s:
+/// cluster-total traced bytes over cluster-summed span time (the
+/// per-rank factors cancel). `None` when the category recorded no time.
+fn category_mbps(m: &Metrics, c: CommCategory) -> Option<f64> {
+    let us = m.phase_us(c);
+    if us == 0 {
+        None
+    } else {
+        Some(m.phase_bytes(c) as f64 / us as f64)
+    }
+}
+
+/// `{:.2}` or `--` for an optional throughput figure.
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        None => "--".to_string(),
+        Some(x) => format!("{x:.2}"),
+    }
+}
+
+/// JSON number or `null` for an optional throughput figure.
+fn json_opt(v: Option<f64>) -> String {
+    match v {
+        None => "null".to_string(),
+        Some(x) => format!("{x:.3}"),
+    }
 }
 
 /// In-proc run (sequential or threaded engine) through the session
@@ -270,6 +322,35 @@ fn main() -> anyhow::Result<()> {
     println!("{}", table.render());
     println!("numerics bit-identical across all configs: {bit_identical}");
 
+    // Per-kernel GFLOP/s and per-collective MB/s: the same transformed
+    // net underlies every configuration, so one plan supplies the
+    // FLOPs model for all rows.
+    let plan = builder(n, mp, ExecEngine::Sequential, false).steps(steps).validate(&rt)?;
+    let per_config_kernels: Vec<Vec<KernelRow>> = results
+        .iter()
+        .map(|r| kernel_rows(plan.transformed(), batch, &r.metrics))
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut kheader: Vec<String> = vec!["config".into()];
+    kheader.extend(KERNEL_KINDS.iter().map(|k| format!("{} GF/s", k.name())));
+    let mut ktable = Table::new(kheader);
+    for (r, krows) in results.iter().zip(&per_config_kernels) {
+        let mut cells = vec![r.name.to_string()];
+        cells.extend(KERNEL_KINDS.iter().map(|&k| fmt_opt(kind_gflops(krows, k))));
+        ktable.row(cells);
+    }
+    println!("{}", ktable.render());
+
+    let mut cheader: Vec<String> = vec!["config".into()];
+    cheader.extend(CommCategory::ALL.iter().map(|c| format!("{c} MB/s")));
+    let mut ctable = Table::new(cheader);
+    for r in &results {
+        let mut cells = vec![r.name.to_string()];
+        cells.extend(CommCategory::ALL.iter().map(|&c| fmt_opt(category_mbps(&r.metrics, c))));
+        ctable.row(cells);
+    }
+    println!("{}", ctable.render());
+
     // Emit the JSON trajectory point (hand-rolled: no serde offline).
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"throughput\",\n");
@@ -279,18 +360,27 @@ fn main() -> anyhow::Result<()> {
     ));
     json.push_str(&format!("  \"bit_identical\": {bit_identical},\n"));
     json.push_str("  \"results\": [\n");
-    for (i, r) in results.iter().enumerate() {
+    for (i, (r, krows)) in results.iter().zip(&per_config_kernels).enumerate() {
         let sps = steps as f64 / r.wall_secs;
         let (compute, mp_comm, avg_comm) = r.phase_secs();
         let phase_bytes: Vec<String> = CommCategory::ALL
             .iter()
             .map(|&c| format!("\"{c}\": {}", r.metrics.phase_bytes(c)))
             .collect();
+        let kernel_gflops: Vec<String> = KERNEL_KINDS
+            .iter()
+            .map(|&k| format!("\"{}\": {}", k.name(), json_opt(kind_gflops(krows, k))))
+            .collect();
+        let collective_mbps: Vec<String> = CommCategory::ALL
+            .iter()
+            .map(|&c| format!("\"{c}\": {}", json_opt(category_mbps(&r.metrics, c))))
+            .collect();
         json.push_str(&format!(
             "    {{\"config\": \"{}\", \"wall_secs\": {:.4}, \"steps_per_sec\": {:.4}, \
              \"images_per_sec\": {:.2}, \"compute_secs_rank\": {:.4}, \
              \"mp_comm_secs_rank\": {:.4}, \"avg_comm_secs_rank\": {:.4}, \
-             \"phase_bytes\": {{{}}}}}{}\n",
+             \"phase_bytes\": {{{}}}, \"kernel_gflops\": {{{}}}, \
+             \"collective_mbps\": {{{}}}}}{}\n",
             r.name,
             r.wall_secs,
             sps,
@@ -299,6 +389,8 @@ fn main() -> anyhow::Result<()> {
             mp_comm,
             avg_comm,
             phase_bytes.join(", "),
+            kernel_gflops.join(", "),
+            collective_mbps.join(", "),
             if i + 1 < results.len() { "," } else { "" }
         ));
     }

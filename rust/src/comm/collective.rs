@@ -23,6 +23,28 @@
 //!   `2·log2(k)` rounds at the same `2·(k-1)/k · V` bytes; non-powers
 //!   of two fold the surplus ranks into partners first.
 //!
+//! ## Chunk pipelining
+//!
+//! Large ring payloads are split into `S` sub-chunks
+//! ([`subchunks_for`]): a rank posts round `r+1`'s sub-chunk the
+//! moment round `r`'s same sub-chunk is taken and merged, so the
+//! successor starts reducing while the rest of round `r` is still in
+//! flight — send/recv/reduce overlap *within* one collective and the
+//! per-round full-group barrier disappears. `S` is a pure function of
+//! the payload size (identical on every rank, engine, and transport),
+//! sub-chunk bounds are proportional splits of the seed's chunk
+//! bounds, and every element still travels and reduces in exactly the
+//! seed's order — so results, per-rank byte counters, and the parity
+//! suites are all unchanged byte-for-byte. Small payloads (`S = 1`)
+//! reproduce the seed schedule — including its tags — exactly. The
+//! flat allreduce distinguishes sub-chunks in the tag's layer field;
+//! the column rings keep their single caller-provided tag (sub-chunks
+//! drain in posted FIFO order, as the rounds already did). Posts go
+//! through [`Transport::post_slice`], so the TCP transport serializes
+//! straight from the training buffer — the per-round `to_vec()`
+//! staging copies of the seed are gone (the in-proc mailbox still
+//! clones, it must own its payload).
+//!
 //! ## SPMD (`*_rank`) variants
 //!
 //! The threaded cluster engine runs one program per rank, so every
@@ -110,6 +132,38 @@ pub fn rhd_worst_rank_volume(n: usize, bytes: u64) -> crate::comm::netmodel::Pha
 }
 
 // ---------------------------------------------------------------------------
+// Chunk-pipelining policy.
+
+/// Elements (f32) above which a ring round's payload is pipelined in
+/// sub-chunks: 16 Ki elements = 64 KiB, comfortably past the point
+/// where per-message overhead stops mattering.
+pub const PIPELINE_SUBCHUNK_ELEMS: usize = 16 * 1024;
+
+/// Upper bound on the pipeline depth (sub-chunks per round).
+pub const MAX_PIPELINE_SUBCHUNKS: usize = 8;
+
+/// Pipeline depth for a ring whose largest per-round chunk is `elems`
+/// f32 values. A pure function of the size — identical on every rank,
+/// engine, and transport, so schedules (and message counters) can
+/// never diverge across a group. `1` means the seed's
+/// round-synchronous schedule, byte-for-byte including tags.
+pub fn subchunks_for(elems: usize) -> usize {
+    if elems <= PIPELINE_SUBCHUNK_ELEMS {
+        1
+    } else {
+        ((elems + PIPELINE_SUBCHUNK_ELEMS - 1) / PIPELINE_SUBCHUNK_ELEMS).min(MAX_PIPELINE_SUBCHUNKS)
+    }
+}
+
+/// Sub-chunk `b` of `s` over `[lo, hi)` — the same proportional split
+/// rule as the thread tiling's `block_bounds`, so sub-chunk bounds are
+/// a pure function of `(lo, hi, s)`.
+fn sub_bounds(lo: usize, hi: usize, s: usize, b: usize) -> (usize, usize) {
+    let len = hi - lo;
+    (lo + len * b / s, lo + len * (b + 1) / s)
+}
+
+// ---------------------------------------------------------------------------
 // Column-block helpers (row-major [rows, full_w] buffers).
 
 fn col_block(data: &[f32], rows: usize, full_w: usize, lo: usize, hi: usize) -> Vec<f32> {
@@ -118,17 +172,6 @@ fn col_block(data: &[f32], rows: usize, full_w: usize, lo: usize, hi: usize) -> 
         out.extend_from_slice(&data[r * full_w + lo..r * full_w + hi]);
     }
     out
-}
-
-fn add_col_block(data: &mut [f32], rows: usize, full_w: usize, lo: usize, hi: usize, src: &[f32]) {
-    let w = hi - lo;
-    for r in 0..rows {
-        let dst = &mut data[r * full_w + lo..r * full_w + hi];
-        let s = &src[r * w..(r + 1) * w];
-        for (a, b) in dst.iter_mut().zip(s) {
-            *a += *b;
-        }
-    }
 }
 
 fn offsets_of(widths: &[usize]) -> Vec<usize> {
@@ -270,22 +313,74 @@ pub fn allgather_cols_rank(
             }
         }
         CollectiveAlgo::Ring | CollectiveAlgo::Rhd => {
-            // Ring allgather: forward the chunk received last round.
-            let me = group[gi];
-            let succ = group[(gi + 1) % k];
-            let pred = group[(gi + k - 1) % k];
-            full.set_cols(offsets[gi], part);
-            let mut cur = part.as_f32().to_vec();
-            for r in 0..k - 1 {
-                fabric.post(me, succ, tag, cur);
-                let data = fabric.take_blocking(me, pred, tag)?;
-                let c = (gi + k - 1 - r) % k; // chunk index just received
-                full.set_cols(offsets[c], &HostTensor::f32(vec![rows, widths[c]], data.clone()));
-                cur = data;
-            }
+            let s = allgather_rs_pipeline_depth(rows, widths);
+            return allgather_cols_rank_pipelined(fabric, group, gi, part, widths, tag, s);
         }
     }
     Ok(full)
+}
+
+/// Ring allgather of column partitions with an explicit pipeline depth
+/// (`subchunks` row-range sub-chunks per round; see [`subchunks_for`]
+/// for the production policy). Forwards each received sub-chunk as the
+/// next round's post the moment it lands — and by *moving* the
+/// received buffer back into the transport, so no copy is made on the
+/// forwarding path. `subchunks = 1` is the seed's round-synchronous
+/// schedule. Results and per-rank byte counters are identical for
+/// every depth; only message granularity changes.
+pub fn allgather_cols_rank_pipelined(
+    fabric: &dyn Transport,
+    group: &[usize],
+    gi: usize,
+    part: &HostTensor,
+    widths: &[usize],
+    tag: Tag,
+    subchunks: usize,
+) -> Result<HostTensor> {
+    let k = group.len();
+    let rows = part.shape[0];
+    let offsets = offsets_of(widths);
+    let full_w = offsets[k];
+    if k == 1 {
+        return Ok(part.clone());
+    }
+    let me = group[gi];
+    let succ = group[(gi + 1) % k];
+    let pred = group[(gi + k - 1) % k];
+    let s = subchunks.min(rows).max(1);
+    let mut fullv = vec![0.0f32; rows * full_w];
+    // Own partition: straight strided copy into the assembled buffer.
+    let pv = part.as_f32();
+    let w0 = widths[gi];
+    for ri in 0..rows {
+        fullv[ri * full_w + offsets[gi]..ri * full_w + offsets[gi] + w0]
+            .copy_from_slice(&pv[ri * w0..(ri + 1) * w0]);
+    }
+    // Round 0: post the own partition, sub-chunk by sub-chunk (each is
+    // a contiguous row range of `part` — serialized in place).
+    for sub in 0..s {
+        let (r0, r1) = sub_bounds(0, rows, s, sub);
+        fabric.post_slice(me, succ, tag, &pv[r0 * w0..r1 * w0]);
+    }
+    for r in 0..k - 1 {
+        let c = (gi + k - 1 - r) % k; // chunk index received this round
+        let wc = widths[c];
+        for sub in 0..s {
+            let (r0, r1) = sub_bounds(0, rows, s, sub);
+            let data = fabric.take_blocking(me, pred, tag)?;
+            for ri in r0..r1 {
+                fullv[ri * full_w + offsets[c]..ri * full_w + offsets[c] + wc]
+                    .copy_from_slice(&data[(ri - r0) * wc..(ri - r0 + 1) * wc]);
+            }
+            if r + 1 < k - 1 {
+                // This sub-chunk is round r+1's payload: forward it
+                // now (overlapping the rest of round r) by moving the
+                // received buffer straight back into the transport.
+                fabric.post(me, succ, tag, data);
+            }
+        }
+    }
+    Ok(HostTensor::f32(vec![rows, full_w], fullv))
 }
 
 /// Per-rank reduce-scatter of column partitions: `full` is the
@@ -327,27 +422,93 @@ pub fn reduce_scatter_cols_rank(
             Ok(acc)
         }
         CollectiveAlgo::Ring | CollectiveAlgo::Rhd => {
-            // Ring reduce-scatter over column chunks: round r sends
-            // chunk (gi - r - 1) and accumulates chunk (gi - r - 2);
-            // after k-1 rounds chunk gi is fully reduced.
-            let succ = group[(gi + 1) % k];
-            let pred = group[(gi + k - 1) % k];
-            let mut work = full.as_f32().to_vec();
-            for r in 0..k - 1 {
-                let send_c = (gi + k - 1 - r) % k;
-                let payload =
-                    col_block(&work, rows, full_w, offsets[send_c], offsets[send_c + 1]);
-                fabric.post(me, succ, tag, payload);
-                let data = fabric.take_blocking(me, pred, tag)?;
-                let recv_c = (gi + 2 * k - 2 - r) % k;
-                add_col_block(&mut work, rows, full_w, offsets[recv_c], offsets[recv_c + 1], &data);
-            }
-            Ok(HostTensor::f32(
-                vec![rows, widths[gi]],
-                col_block(&work, rows, full_w, offsets[gi], offsets[gi + 1]),
-            ))
+            let s = allgather_rs_pipeline_depth(rows, widths);
+            reduce_scatter_cols_rank_pipelined(fabric, group, gi, full, widths, tag, s)
         }
     }
+}
+
+/// The production pipeline depth for the column rings: proportional
+/// row-range sub-chunks of the widest column block.
+fn allgather_rs_pipeline_depth(rows: usize, widths: &[usize]) -> usize {
+    subchunks_for(rows * widths.iter().copied().max().unwrap_or(1))
+}
+
+/// Ring reduce-scatter of column partitions with an explicit pipeline
+/// depth. Round `r` sends chunk `gi-1-r` and accumulates chunk
+/// `gi-2-r`; the accumulated chunk *is* round `r+1`'s payload, so each
+/// merged sub-chunk is re-staged and posted immediately — overlapping
+/// the rest of round `r` — through one staging buffer allocated per
+/// call (the seed allocated a fresh `col_block` every round).
+/// `subchunks = 1` reproduces the seed's round-synchronous schedule;
+/// results and per-rank byte counters are identical for every depth.
+pub fn reduce_scatter_cols_rank_pipelined(
+    fabric: &dyn Transport,
+    group: &[usize],
+    gi: usize,
+    full: &HostTensor,
+    widths: &[usize],
+    tag: Tag,
+    subchunks: usize,
+) -> Result<HostTensor> {
+    let k = group.len();
+    let rows = full.shape[0];
+    let offsets = offsets_of(widths);
+    let full_w = offsets[k];
+    if k == 1 {
+        return Ok(full.clone());
+    }
+    let me = group[gi];
+    let succ = group[(gi + 1) % k];
+    let pred = group[(gi + k - 1) % k];
+    let s = subchunks.min(rows).max(1);
+    let mut work = full.as_f32().to_vec();
+    let maxw = widths.iter().copied().max().unwrap_or(0);
+    // One staging buffer for the whole call: strided column blocks are
+    // gathered here so the transport can serialize from a contiguous
+    // slice ([`Transport::post_slice`]) without a per-round Vec.
+    let mut staging = vec![0.0f32; rows * maxw];
+    // Round 0's payload: stage and post the own send chunk.
+    let send0 = (gi + k - 1) % k;
+    let w0 = offsets[send0 + 1] - offsets[send0];
+    for ri in 0..rows {
+        staging[ri * w0..(ri + 1) * w0]
+            .copy_from_slice(&work[ri * full_w + offsets[send0]..ri * full_w + offsets[send0] + w0]);
+    }
+    for sub in 0..s {
+        let (r0, r1) = sub_bounds(0, rows, s, sub);
+        fabric.post_slice(me, succ, tag, &staging[r0 * w0..r1 * w0]);
+    }
+    for r in 0..k - 1 {
+        let recv_c = (gi + 2 * k - 2 - r) % k;
+        let (rlo, rhi) = (offsets[recv_c], offsets[recv_c + 1]);
+        let rw = rhi - rlo;
+        for sub in 0..s {
+            let (r0, r1) = sub_bounds(0, rows, s, sub);
+            let data = fabric.take_blocking(me, pred, tag)?;
+            for ri in r0..r1 {
+                let dst = &mut work[ri * full_w + rlo..ri * full_w + rhi];
+                let srow = &data[(ri - r0) * rw..(ri - r0 + 1) * rw];
+                for (a, b) in dst.iter_mut().zip(srow) {
+                    *a += *b;
+                }
+            }
+            if r + 1 < k - 1 {
+                // recv_c(r) == send_c(r+1): the sub-chunk just merged
+                // is the next round's payload — stage and forward it
+                // before taking the rest of this round.
+                for ri in r0..r1 {
+                    staging[ri * rw..(ri + 1) * rw]
+                        .copy_from_slice(&work[ri * full_w + rlo..ri * full_w + rhi]);
+                }
+                fabric.post_slice(me, succ, tag, &staging[r0 * rw..r1 * rw]);
+            }
+        }
+    }
+    Ok(HostTensor::f32(
+        vec![rows, widths[gi]],
+        col_block(&work, rows, full_w, offsets[gi], offsets[gi + 1]),
+    ))
 }
 
 // ---------------------------------------------------------------------------
@@ -417,7 +578,17 @@ pub fn reduce_scatter_cols_algo(
 /// Ring allreduce-mean over equally-shaped flat buffers (DP model
 /// averaging). Implements the textbook reduce-scatter + allgather ring,
 /// so the fabric's byte counters match the 2·(n-1)/n·V optimum.
-/// Group view, non-blocking takes (all posts precede their takes).
+/// Group view, non-blocking takes (every post precedes its take).
+///
+/// Large buffers are chunk-pipelined ([`subchunks_for`]): each ring
+/// chunk is split into `S` sub-chunks with their own tags, and a rank
+/// posts round `q+1`'s sub-chunk the moment round `q`'s copy of it has
+/// merged — before taking the rest of round `q` — so the per-round
+/// full-group barrier disappears. Payloads are serialized in place
+/// from the reduction buffers ([`Transport::post_slice`]); the seed's
+/// per-round `to_vec()` staging copies are gone. `S = 1` reproduces
+/// the seed schedule byte-for-byte, tags included; results and byte
+/// counters are identical for every depth.
 pub fn ring_allreduce_mean(
     fabric: &dyn Transport,
     group: &[usize],
@@ -430,50 +601,70 @@ pub fn ring_allreduce_mean(
     }
     let len = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == len));
-    // Chunk boundaries (last chunk absorbs the remainder).
     let chunk = len / n;
+    let s = subchunks_for(chunk + len % n);
+    let rounds = 2 * (n - 1);
+    // Unified round index q over both phases: q < n-1 is reduce-scatter
+    // round q (member i merges into chunk (i-1-q) mod n), q >= n-1 is
+    // allgather round q-(n-1) (member i overwrites chunk (i-q') mod n,
+    // q' = q-(n-1)). The chunk a member merges in round q is exactly
+    // the chunk it sends in round q+1 — the invariant that lets each
+    // merged sub-chunk be forwarded immediately.
     let bounds = |c: usize| -> (usize, usize) {
         let lo = c * chunk;
         let hi = if c + 1 == n { len } else { lo + chunk };
         (lo, hi)
     };
-
-    // Phase 1: reduce-scatter. Round r: member i sends chunk (i-r) mod n
-    // to its successor, which accumulates.
-    for r in 0..n - 1 {
-        let tag = Tag::new(tag_base, r, 0);
-        for i in 0..n {
-            let c = (i + n - r) % n;
-            let (lo, hi) = bounds(c);
-            let payload = bufs[i][lo..hi].to_vec();
-            fabric.post(group[i], group[(i + 1) % n], tag, payload);
+    let recv_c = |i: usize, q: usize| -> usize {
+        if q < n - 1 {
+            (i + 2 * n - 1 - q) % n
+        } else {
+            (i + n - (q - (n - 1))) % n
         }
-        for i in 0..n {
-            let src = group[(i + n - 1) % n];
-            let c = (i + n - 1 + n - r) % n;
-            let (lo, hi) = bounds(c);
-            let data = fabric.take(group[i], src, tag)?;
-            for (a, b) in bufs[i][lo..hi].iter_mut().zip(data.iter()) {
-                *a += *b;
-            }
+    };
+    let tag_of = |q: usize, sub: usize| -> Tag {
+        if q < n - 1 {
+            Tag::new(tag_base, q, sub)
+        } else {
+            Tag::new(tag_base, n + (q - (n - 1)), sub)
+        }
+    };
+    // Round 0: member i sends its own chunk i (= send_c(i, 0)).
+    for i in 0..n {
+        let (lo, hi) = bounds(i);
+        for sub in 0..s {
+            let (a, b) = sub_bounds(lo, hi, s, sub);
+            fabric.post_slice(group[i], group[(i + 1) % n], tag_of(0, sub), &bufs[i][a..b]);
         }
     }
-    // Phase 2: allgather. Round r: member i sends its (now reduced)
-    // chunk (i+1-r) mod n forward.
-    for r in 0..n - 1 {
-        let tag = Tag::new(tag_base, n + r, 0);
-        for i in 0..n {
-            let c = (i + 1 + n - r) % n;
-            let (lo, hi) = bounds(c);
-            let payload = bufs[i][lo..hi].to_vec();
-            fabric.post(group[i], group[(i + 1) % n], tag, payload);
-        }
-        for i in 0..n {
-            let src = group[(i + n - 1) % n];
-            let c = (i + n - r) % n;
-            let (lo, hi) = bounds(c);
-            let data = fabric.take(group[i], src, tag)?;
-            bufs[i][lo..hi].copy_from_slice(&data);
+    for q in 0..rounds {
+        for sub in 0..s {
+            for i in 0..n {
+                let (lo, hi) = bounds(recv_c(i, q));
+                let (a, b) = sub_bounds(lo, hi, s, sub);
+                let data = fabric.take(group[i], group[(i + n - 1) % n], tag_of(q, sub))?;
+                if q < n - 1 {
+                    for (x, y) in bufs[i][a..b].iter_mut().zip(data.iter()) {
+                        *x += *y;
+                    }
+                } else {
+                    bufs[i][a..b].copy_from_slice(&data);
+                }
+            }
+            if q + 1 < rounds {
+                // recv_c(i, q) == send_c(i, q+1): forward the merged
+                // sub-chunks straight out of the reduction buffers.
+                for i in 0..n {
+                    let (lo, hi) = bounds(recv_c(i, q));
+                    let (a, b) = sub_bounds(lo, hi, s, sub);
+                    fabric.post_slice(
+                        group[i],
+                        group[(i + 1) % n],
+                        tag_of(q + 1, sub),
+                        &bufs[i][a..b],
+                    );
+                }
+            }
         }
     }
     // Mean.
@@ -543,42 +734,92 @@ pub fn allreduce_mean_rank(
         }
         CollectiveAlgo::Ring => {
             let len = buf.len();
-            let chunk = len / n;
-            let bounds = |c: usize| -> (usize, usize) {
-                let lo = c * chunk;
-                let hi = if c + 1 == n { len } else { lo + chunk };
-                (lo, hi)
-            };
-            let succ = group[(gi + 1) % n];
-            let pred = group[(gi + n - 1) % n];
-            for r in 0..n - 1 {
-                let tag = Tag::new(tag_base, r, 0);
-                let c = (gi + n - r) % n;
-                let (lo, hi) = bounds(c);
-                fabric.post(me, succ, tag, buf[lo..hi].to_vec());
-                let c = (gi + n - 1 + n - r) % n;
-                let (lo, hi) = bounds(c);
-                let data = fabric.take_blocking(me, pred, tag)?;
-                for (a, b) in buf[lo..hi].iter_mut().zip(data.iter()) {
-                    *a += *b;
-                }
-            }
-            for r in 0..n - 1 {
-                let tag = Tag::new(tag_base, n + r, 0);
-                let c = (gi + 1 + n - r) % n;
-                let (lo, hi) = bounds(c);
-                fabric.post(me, succ, tag, buf[lo..hi].to_vec());
-                let c = (gi + n - r) % n;
-                let (lo, hi) = bounds(c);
-                let data = fabric.take_blocking(me, pred, tag)?;
-                buf[lo..hi].copy_from_slice(&data);
-            }
-            let inv = 1.0 / n as f32;
-            for v in buf.iter_mut() {
-                *v *= inv;
-            }
+            let s = subchunks_for(len / n + len % n);
+            ring_allreduce_mean_rank_pipelined(fabric, group, gi, buf, tag_base, s)?;
         }
         CollectiveAlgo::Rhd => rhd_allreduce_mean_rank(fabric, group, gi, buf, tag_base)?,
+    }
+    Ok(())
+}
+
+/// Per-rank ring allreduce-mean with an explicit pipeline depth
+/// (`subchunks` sub-chunks per ring chunk, each with its own tag).
+/// Same unified round schedule as the group-view [`ring_allreduce_mean`]
+/// — the chunk merged in round `q` is the chunk sent in round `q+1`,
+/// so each merged sub-chunk is posted forward before the rest of the
+/// round is taken. Payloads serialize in place from `buf`
+/// ([`Transport::post_slice`]); no per-round staging copies.
+/// `subchunks = 1` reproduces the seed's round-synchronous schedule
+/// byte-for-byte, tags included; results and per-rank byte counters
+/// are identical for every depth. Arithmetic per rank is identical to
+/// the group-view dispatch, so sequential and threaded engines agree
+/// bit-for-bit.
+pub fn ring_allreduce_mean_rank_pipelined(
+    fabric: &dyn Transport,
+    group: &[usize],
+    gi: usize,
+    buf: &mut [f32],
+    tag_base: u16,
+    subchunks: usize,
+) -> Result<()> {
+    let n = group.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    let len = buf.len();
+    let chunk = len / n;
+    let s = subchunks.max(1);
+    let rounds = 2 * (n - 1);
+    let me = group[gi];
+    let succ = group[(gi + 1) % n];
+    let pred = group[(gi + n - 1) % n];
+    let bounds = |c: usize| -> (usize, usize) {
+        let lo = c * chunk;
+        let hi = if c + 1 == n { len } else { lo + chunk };
+        (lo, hi)
+    };
+    let recv_c = |q: usize| -> usize {
+        if q < n - 1 {
+            (gi + 2 * n - 1 - q) % n
+        } else {
+            (gi + n - (q - (n - 1))) % n
+        }
+    };
+    let tag_of = |q: usize, sub: usize| -> Tag {
+        if q < n - 1 {
+            Tag::new(tag_base, q, sub)
+        } else {
+            Tag::new(tag_base, n + (q - (n - 1)), sub)
+        }
+    };
+    // Round 0: send own chunk gi (= send_c(0)), sub-chunk by sub-chunk.
+    let (lo, hi) = bounds(gi);
+    for sub in 0..s {
+        let (a, b) = sub_bounds(lo, hi, s, sub);
+        fabric.post_slice(me, succ, tag_of(0, sub), &buf[a..b]);
+    }
+    for q in 0..rounds {
+        let (lo, hi) = bounds(recv_c(q));
+        for sub in 0..s {
+            let (a, b) = sub_bounds(lo, hi, s, sub);
+            let data = fabric.take_blocking(me, pred, tag_of(q, sub))?;
+            if q < n - 1 {
+                for (x, y) in buf[a..b].iter_mut().zip(data.iter()) {
+                    *x += *y;
+                }
+            } else {
+                buf[a..b].copy_from_slice(&data);
+            }
+            if q + 1 < rounds {
+                // recv_c(q) == send_c(q+1): forward the merged
+                // sub-chunk immediately, straight out of `buf`.
+                fabric.post_slice(me, succ, tag_of(q + 1, sub), &buf[a..b]);
+            }
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for v in buf.iter_mut() {
+        *v *= inv;
     }
     Ok(())
 }
@@ -953,5 +1194,136 @@ mod tests {
         assert_eq!(prev_pow2(3), 2);
         assert_eq!(prev_pow2(6), 4);
         assert_eq!(prev_pow2(8), 8);
+    }
+
+    #[test]
+    fn subchunk_policy_values() {
+        assert_eq!(subchunks_for(0), 1);
+        assert_eq!(subchunks_for(PIPELINE_SUBCHUNK_ELEMS), 1);
+        assert_eq!(subchunks_for(PIPELINE_SUBCHUNK_ELEMS + 1), 2);
+        assert_eq!(subchunks_for(3 * PIPELINE_SUBCHUNK_ELEMS), 3);
+        assert_eq!(subchunks_for(100 * PIPELINE_SUBCHUNK_ELEMS), MAX_PIPELINE_SUBCHUNKS);
+        // sub_bounds partitions exactly, in order, no gaps.
+        let s = 3;
+        let mut cursor = 10;
+        for b in 0..s {
+            let (lo, hi) = sub_bounds(10, 27, s, b);
+            assert_eq!(lo, cursor);
+            assert!(hi >= lo);
+            cursor = hi;
+        }
+        assert_eq!(cursor, 27);
+    }
+
+    /// Deterministic value soup: varied magnitudes and signs so any
+    /// reassociation or misrouting flips bits.
+    fn soup(seed: u32, len: usize) -> Vec<f32> {
+        let mut x = seed.wrapping_mul(2654435761).wrapping_add(12345);
+        (0..len)
+            .map(|_| {
+                x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                ((x >> 8) as f32 / (1 << 16) as f32) - 128.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pipelined_flat_allreduce_matches_synchronous_bitwise_and_counters() {
+        let n = 4;
+        let group: Vec<usize> = (0..n).collect();
+        let len = 37; // uneven: last chunk absorbs the remainder
+        let inputs: Vec<Vec<f32>> = (0..n).map(|i| soup(i as u32, len)).collect();
+        // Reference: depth 1 == the seed's round-synchronous schedule.
+        let run = |s: usize| -> (Vec<Vec<f32>>, u64, u64) {
+            let f = Fabric::new(n);
+            let outs = scatter_gather_scope(n, |gi| {
+                let mut b = inputs[gi].clone();
+                ring_allreduce_mean_rank_pipelined(&f, &group, gi, &mut b, 7, s)?;
+                Ok(b)
+            })
+            .unwrap();
+            assert!(f.drained(), "s={s}");
+            (outs, f.total_bytes(), f.total_msgs())
+        };
+        let (ref_outs, ref_bytes, ref_msgs) = run(1);
+        assert_eq!(ref_msgs, (n * 2 * (n - 1)) as u64);
+        for s in [2usize, 3, 8] {
+            let (outs, bytes, msgs) = run(s);
+            for (a, b) in ref_outs.iter().zip(outs.iter()) {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "s={s}");
+                }
+            }
+            assert_eq!(bytes, ref_bytes, "s={s}: byte totals must not change");
+            assert_eq!(msgs, (s * n * 2 * (n - 1)) as u64, "s={s}");
+        }
+        // The group view agrees bit-for-bit with the per-rank dispatch.
+        let f = Fabric::new(n);
+        let mut bufs = inputs.clone();
+        ring_allreduce_mean(&f, &group, &mut bufs, 7).unwrap();
+        for (a, b) in ref_outs.iter().zip(bufs.iter()) {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(f.total_bytes(), ref_bytes);
+    }
+
+    #[test]
+    fn pipelined_column_rings_match_synchronous_bitwise_and_counters() {
+        let group = [0usize, 1, 2];
+        let k = group.len();
+        let rows = 5;
+        let widths = [3usize, 2, 4];
+        let full_w: usize = widths.iter().sum();
+        let parts: Vec<HostTensor> = (0..k)
+            .map(|i| HostTensor::f32(vec![rows, widths[i]], soup(40 + i as u32, rows * widths[i])))
+            .collect();
+        let fulls: Vec<HostTensor> =
+            (0..k).map(|i| HostTensor::f32(vec![rows, full_w], soup(80 + i as u32, rows * full_w))).collect();
+        let run_ag = |s: usize| -> (Vec<HostTensor>, u64, u64) {
+            let f = Fabric::new(k);
+            let outs = scatter_gather_scope(k, |gi| {
+                allgather_cols_rank_pipelined(&f, &group, gi, &parts[gi], &widths, Tag::new(1, 0, 0), s)
+            })
+            .unwrap();
+            assert!(f.drained(), "ag s={s}");
+            (outs, f.total_bytes(), f.total_msgs())
+        };
+        let run_rs = |s: usize| -> (Vec<HostTensor>, u64, u64) {
+            let f = Fabric::new(k);
+            let outs = scatter_gather_scope(k, |gi| {
+                reduce_scatter_cols_rank_pipelined(&f, &group, gi, &fulls[gi], &widths, Tag::new(2, 0, 0), s)
+            })
+            .unwrap();
+            assert!(f.drained(), "rs s={s}");
+            (outs, f.total_bytes(), f.total_msgs())
+        };
+        let (ag1, agb1, agm1) = run_ag(1);
+        let (rs1, rsb1, rsm1) = run_rs(1);
+        assert_eq!(agm1, (k * (k - 1)) as u64);
+        assert_eq!(rsm1, (k * (k - 1)) as u64);
+        for s in [2usize, 5] {
+            let (ag, agb, agm) = run_ag(s);
+            let (rs, rsb, rsm) = run_rs(s);
+            // `s` is clamped to the row count inside the collectives.
+            let eff = s.min(rows);
+            for (a, b) in ag1.iter().zip(ag.iter()) {
+                assert_eq!(a.shape, b.shape, "ag s={s}");
+                for (x, y) in a.as_f32().iter().zip(b.as_f32()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "ag s={s}");
+                }
+            }
+            for (a, b) in rs1.iter().zip(rs.iter()) {
+                assert_eq!(a.shape, b.shape, "rs s={s}");
+                for (x, y) in a.as_f32().iter().zip(b.as_f32()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "rs s={s}");
+                }
+            }
+            assert_eq!(agb, agb1, "ag s={s}: byte totals must not change");
+            assert_eq!(rsb, rsb1, "rs s={s}: byte totals must not change");
+            assert_eq!(agm, (eff * k * (k - 1)) as u64, "ag s={s}");
+            assert_eq!(rsm, (eff * k * (k - 1)) as u64, "rs s={s}");
+        }
     }
 }

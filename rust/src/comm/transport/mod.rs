@@ -71,6 +71,16 @@ pub trait Transport: Sync {
     /// Self-sends are forbidden. Drop/delay fault rules apply here.
     fn post(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>);
 
+    /// [`Transport::post`] from a borrowed slice: semantically
+    /// identical (same channel FIFO, counters, and fault rules), but a
+    /// backend that serializes payloads anyway (TCP) can encode straight
+    /// off the slice without the caller-side `to_vec`. The pipelined
+    /// ring collectives post sub-chunks of their reduction buffers
+    /// through this. Default: copy and delegate to `post`.
+    fn post_slice(&self, src: usize, dst: usize, tag: Tag, payload: &[f32]) {
+        self.post(src, dst, tag, payload.to_vec());
+    }
+
     /// Non-blocking take (coordinator-interleaved schedules): a miss is
     /// an immediate error. Distributed backends, which have no god-view
     /// scheduler, may implement this as [`Transport::take_blocking`].

@@ -58,7 +58,7 @@ use anyhow::{bail, Context, Result};
 use crate::comm::fabric::Tag;
 use crate::comm::fault::{FaultEvent, FaultPlan, PeerLost, StepAborted};
 use crate::obs::{LogHistogram, PeerStat};
-use crate::runtime::{DType, HostTensor};
+use crate::runtime::DType;
 
 use super::wire::{self, Message, FLAG_UNCOUNTED};
 use super::Transport;
@@ -478,10 +478,15 @@ impl TcpTransport {
     /// exchange, which the in-proc cluster performs as a local memory
     /// read).
     pub fn post_uncounted(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
-        self.post_inner(src, dst, tag, payload, false);
+        self.post_inner(src, dst, tag, &payload, false);
     }
 
-    fn post_inner(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>, counted: bool) {
+    /// Post path shared by `post`, `post_slice`, and `post_uncounted`:
+    /// counters and fault rules first, then the payload is serialized
+    /// straight off the borrowed slice ([`wire::encode_tensor_frame`])
+    /// — no owned tensor is materialized, which is what makes the
+    /// collectives' `post_slice` sub-chunk posts copy-free here.
+    fn post_inner(&self, src: usize, dst: usize, tag: Tag, payload: &[f32], counted: bool) {
         let inner = &*self.inner;
         let (dst_opid, epoch, step) = {
             let mut st = inner.state.lock().unwrap();
@@ -532,24 +537,23 @@ impl TcpTransport {
             (dst_opid, st.epoch, st.step)
         };
         let flags = if counted { 0 } else { FLAG_UNCOUNTED };
-        let n = payload.len();
-        let msg = Message::Tensor {
-            epoch,
-            step: step as u64,
-            src: src as u32,
-            flags,
-            tag,
-            tensor: HostTensor::f32(vec![n], payload),
-        };
-        self.send_to(dst_opid, &msg);
+        let bytes =
+            wire::encode_tensor_frame(epoch, step as u64, src as u32, flags, tag, payload);
+        self.send_frame_to(dst_opid, &bytes);
     }
 
     /// Encode + write one frame to `opid`; a write failure marks the
     /// peer dead (connection reset == peer loss).
     fn send_to(&self, opid: usize, msg: &Message) {
         let bytes = msg.encode();
+        self.send_frame_to(opid, &bytes);
+    }
+
+    /// Write one already-encoded frame to `opid`, with wire-byte
+    /// accounting and dead-peer marking.
+    fn send_frame_to(&self, opid: usize, bytes: &[u8]) {
         let ok = match &self.inner.writers[opid] {
-            Some(w) => w.lock().unwrap().write_all(&bytes).is_ok(),
+            Some(w) => w.lock().unwrap().write_all(bytes).is_ok(),
             None => false,
         };
         {
@@ -1112,6 +1116,12 @@ impl Transport for TcpTransport {
     }
 
     fn post(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
+        self.post_inner(src, dst, tag, &payload, true);
+    }
+
+    fn post_slice(&self, src: usize, dst: usize, tag: Tag, payload: &[f32]) {
+        // Zero-copy override: the frame is encoded straight off the
+        // borrowed slice, skipping the trait default's `to_vec`.
         self.post_inner(src, dst, tag, payload, true);
     }
 

@@ -536,6 +536,39 @@ impl Message {
     }
 }
 
+/// Encode a complete [`FrameKind::Tensor`] frame straight from a
+/// borrowed f32 slice: byte-identical to
+/// `Message::Tensor { tensor: HostTensor::f32(vec![data.len()], ...), .. }.encode()`
+/// (pinned by `tensor_frame_from_slice_matches_message_encode`) without
+/// materializing the owned tensor first. This is the serialization
+/// path behind `TcpTransport`'s `post_slice`: fabric payloads are
+/// always rank-1 f32, so the tensor header is a fixed 6 bytes.
+pub fn encode_tensor_frame(
+    epoch: u32,
+    step: u64,
+    src: u32,
+    flags: u32,
+    tag: Tag,
+    data: &[f32],
+) -> Vec<u8> {
+    debug_assert!(data.len() <= u32::MAX as usize, "dim exceeds wire limit");
+    // Routing header (28 bytes) + tensor header (dtype u8 + ndim u8 +
+    // one u32 dim) + payload words.
+    let mut p = Vec::with_capacity(28 + 6 + 4 * data.len());
+    p.extend_from_slice(&epoch.to_le_bytes());
+    p.extend_from_slice(&step.to_le_bytes());
+    p.extend_from_slice(&src.to_le_bytes());
+    p.extend_from_slice(&flags.to_le_bytes());
+    p.extend_from_slice(&tag.0.to_le_bytes());
+    p.push(0u8); // DType::F32 discriminant
+    p.push(1u8); // ndim = 1
+    p.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for &v in data {
+        p.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    encode_frame(FrameKind::Tensor, &p)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -584,6 +617,27 @@ mod tests {
                 }
                 (a, b) => assert_eq!(a, b),
             }
+        }
+    }
+
+    #[test]
+    fn tensor_frame_from_slice_matches_message_encode() {
+        // The zero-copy slice encoder must be byte-identical to the
+        // owned-tensor path for every payload, NaN/-0.0 included —
+        // post and post_slice are interchangeable on the wire.
+        for data in [vec![], vec![0.25f32], vec![1.0, f32::NAN, -0.0, 3.5, f32::MIN_POSITIVE]] {
+            let tag = Tag::new(7, 3, 2);
+            let via_msg = Message::Tensor {
+                epoch: 5,
+                step: 11,
+                src: 1,
+                flags: 0,
+                tag,
+                tensor: HostTensor::f32(vec![data.len()], data.clone()),
+            }
+            .encode();
+            let via_slice = encode_tensor_frame(5, 11, 1, 0, tag, &data);
+            assert_eq!(via_msg, via_slice);
         }
     }
 

@@ -729,7 +729,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
 /// deterministic byte columns land at exactly 0% error on an untorn
 /// uniform-scheme run, so any byte error is a real accounting bug.
 fn cmd_profile_run_dir(args: &Args, dir: &std::path::Path) -> Result<()> {
-    use splitbrain::obs::{profile, Metrics};
+    use splitbrain::obs::{kernel_rows, profile, render_kernel_table, Metrics};
     args.check_known(&known_flags(&[]))?;
     let manifest_path = dir.join("run.json");
     let manifest_text = std::fs::read_to_string(&manifest_path).with_context(|| {
@@ -747,6 +747,8 @@ fn cmd_profile_run_dir(args: &Args, dir: &std::path::Path) -> Result<()> {
     let metrics = Metrics::parse(&metrics_text)?;
     let report = profile(plan.schedule(), &plan.cluster_config().net, &metrics);
     print!("{}", report.render());
+    let krows = kernel_rows(plan.transformed(), plan.schedule().batch, &metrics)?;
+    print!("{}", render_kernel_table(&krows));
     Ok(())
 }
 

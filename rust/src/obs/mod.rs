@@ -31,5 +31,5 @@ pub mod tracer;
 pub use chrome::{chrome_trace_json, merge_chrome_traces};
 pub use hist::LogHistogram;
 pub use metrics::{Metrics, OpStat, PeerStat, METRICS_VERSION};
-pub use profile::{profile, PhaseRow, ProfileReport};
+pub use profile::{kernel_rows, profile, render_kernel_table, KernelRow, PhaseRow, ProfileReport};
 pub use tracer::{OpKind, Span, TraceSet, TraceSnapshot};

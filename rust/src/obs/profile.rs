@@ -13,8 +13,11 @@
 //! critical path against the mean measured per-rank wall time and are
 //! expected to differ (that difference *is* the report's value).
 
+use anyhow::{bail, Result};
+
 use crate::comm::{CommCategory, NetModel};
 use crate::coordinator::schedule::StepSchedule;
+use crate::model::{dims, Layer, TransformedNet};
 
 use super::metrics::Metrics;
 use super::tracer::OpKind;
@@ -171,6 +174,133 @@ impl ProfileReport {
     }
 }
 
+/// One compute [`OpKind`]'s measured kernel-throughput row: analytic
+/// matmul/conv FLOPs folded against the traced span time, so kernel
+/// regressions show up in `splitbrain profile` and not just the bench.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelRow {
+    /// The compute op kind.
+    pub kind: OpKind,
+    /// Measured span count over the run (all ranks).
+    pub count: u64,
+    /// Measured microseconds over the run (summed across ranks).
+    pub us: u64,
+    /// Run-total analytic FLOPs for this kind: the per-rank-per-step
+    /// matmul/conv FLOPs of the transformed network, times
+    /// `ranks * steps`. Bias adds, ReLU, pooling, and softmax are
+    /// excluded — the model counts the multiply-accumulate work the
+    /// blocked kernels in `runtime::native` actually optimize.
+    pub flops: u64,
+}
+
+impl KernelRow {
+    /// Mean per-rank GFLOP/s (`flops / us / 1000`); `None` when no time
+    /// was measured.
+    pub fn gflops(&self) -> Option<f64> {
+        if self.us == 0 {
+            None
+        } else {
+            Some(self.flops as f64 / self.us as f64 / 1000.0)
+        }
+    }
+}
+
+/// Analytic per-kind FLOPs folded against measured span times.
+///
+/// The FLOPs model walks the transformed network threading the feature
+/// shape with [`dims::resize`]: a `Conv{cin,cout,ksize}` on an
+/// `[h,w,cin]` input contributes `2*ksize^2*cin*cout*h*w` per example,
+/// a sharded `Linear` contributes `2*din*dout` (its 1/k shard) to the
+/// FC-shard bucket, and an unsharded `Linear` the same to the
+/// replicated-head bucket. Per rank per step, the conv front runs on
+/// `batch` examples while the FC stack sees `mp * batch` examples
+/// spread over the modulo rounds (every §3.1 scheme: `rounds *
+/// fc_batch == mp * batch`); backward passes count 2x forward (dX and
+/// dW), and the fused `full-step` path counts 3x everything. Kinds the
+/// run never recorded (zero span count) emit no row.
+pub fn kernel_rows(
+    net: &TransformedNet,
+    batch: usize,
+    metrics: &Metrics,
+) -> Result<Vec<KernelRow>> {
+    // Per-example FLOPs: conv front / sharded-FC stack / replicated head.
+    let (mut conv, mut shard, mut head) = (0u64, 0u64, 0u64);
+    let mut dim = net.input_dim.clone();
+    for layer in net.layers.iter().flat_map(|l| l.flatten()) {
+        match layer {
+            Layer::Conv { cin, cout, ksize, .. } => {
+                let (h, w) = match dim.as_slice() {
+                    [h, w, _] => (*h, *w),
+                    other => bail!("conv on non-spatial input {other:?}"),
+                };
+                conv += 2 * (ksize * ksize * cin * cout * h * w) as u64;
+            }
+            Layer::Linear { din, dout, shard_of, .. } => {
+                let f = 2 * (din * dout) as u64;
+                if shard_of.is_some() {
+                    shard += f;
+                } else {
+                    head += f;
+                }
+            }
+            _ => {}
+        }
+        dim = dims::resize(layer, &dim)?;
+    }
+    let mp = net.mp.max(1) as u64;
+    let b = batch as u64;
+    // (kind, per-rank-per-step FLOPs) in reporting order.
+    let per_rank_step: [(OpKind, u64); 6] = [
+        (OpKind::FullStep, 3 * (conv + shard + head) * b),
+        (OpKind::ConvFwd, conv * b),
+        (OpKind::FcFwd, shard * mp * b),
+        (OpKind::HeadStep, 3 * head * mp * b),
+        (OpKind::FcBwd, 2 * shard * mp * b),
+        (OpKind::ConvBwdUpdate, 2 * conv * b),
+    ];
+    let scale = metrics.ranks * metrics.steps;
+    Ok(per_rank_step
+        .iter()
+        .filter_map(|&(kind, flops)| {
+            let stat = metrics.op(kind);
+            if stat.count == 0 || flops == 0 {
+                return None;
+            }
+            Some(KernelRow { kind, count: stat.count, us: stat.us, flops: flops * scale })
+        })
+        .collect())
+}
+
+/// Render the measured kernel-throughput table produced by
+/// [`kernel_rows`]. Empty input renders nothing (e.g. a comm-only
+/// metrics file).
+pub fn render_kernel_table(rows: &[KernelRow]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let mut s = String::new();
+    s.push_str("=== measured kernel throughput (matmul/conv flops model) ===\n");
+    s.push_str(&format!(
+        "{:<16} {:>9} {:>14} {:>12} {:>10}\n",
+        "kind", "spans", "flops", "meas s", "GFLOP/s"
+    ));
+    for r in rows {
+        let g = match r.gflops() {
+            None => "--".to_string(),
+            Some(g) => format!("{g:.2}"),
+        };
+        s.push_str(&format!(
+            "{:<16} {:>9} {:>14} {:>12.6} {:>10}\n",
+            r.kind.name(),
+            r.count,
+            r.flops,
+            r.us as f64 / 1e6,
+            g,
+        ));
+    }
+    s
+}
+
 fn fmt_err(err: Option<f64>) -> String {
     match err {
         None => "--".to_string(),
@@ -300,5 +430,60 @@ mod tests {
         assert_eq!(row.predicted_bytes, 800);
         assert_eq!(row.measured_bytes, 1000);
         assert!((row.bytes_rel_err().unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    /// Hand-built transformed net + synthetic metrics: the FLOPs model
+    /// must produce exactly the analytic totals, and kinds the run
+    /// never recorded must emit no row.
+    #[test]
+    fn kernel_rows_match_analytic_flops() {
+        use crate::model::{Layer, TransformedNet};
+        let net = TransformedNet {
+            layers: vec![
+                Layer::Conv { name: "c0".into(), cin: 1, cout: 2, ksize: 3 },
+                Layer::Relu,
+                Layer::Reshape { out: vec![32] },
+                Layer::Modulo { dim: 32 },
+                Layer::Linear { name: "fc0".into(), din: 32, dout: 8, shard_of: Some(2) },
+                Layer::Shard { dim_part: 8, dim_full: 16 },
+                Layer::Linear { name: "fc1".into(), din: 16, dout: 10, shard_of: None },
+                Layer::LogSoftmax,
+            ],
+            mp: 2,
+            input_dim: vec![4, 4, 1],
+        };
+        let mut ops = [OpStat::default(); OpKind::COUNT];
+        ops[OpKind::ConvFwd.index()] = OpStat { count: 6, bytes: 0, us: 2000 };
+        ops[OpKind::FcFwd.index()] = OpStat { count: 12, bytes: 0, us: 1000 };
+        ops[OpKind::HeadStep.index()] = OpStat { count: 12, bytes: 0, us: 0 };
+        ops[OpKind::ConvBwdUpdate.index()] = OpStat { count: 6, bytes: 0, us: 3000 };
+        let metrics = Metrics {
+            ranks: 2,
+            steps: 3,
+            spans: 0,
+            spans_dropped: 0,
+            wall_us: 0,
+            ops,
+            peers: vec![],
+        };
+        let rows = kernel_rows(&net, 4, &metrics).unwrap();
+        // Per example: conv = 2*9*1*2*16 = 576, shard = 2*32*8 = 512,
+        // head = 2*16*10 = 320; batch 4, mp 2, ranks*steps = 6.
+        let kinds: Vec<OpKind> = rows.iter().map(|r| r.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![OpKind::ConvFwd, OpKind::FcFwd, OpKind::HeadStep, OpKind::ConvBwdUpdate]
+        );
+        assert_eq!(rows[0].flops, 576 * 4 * 6);
+        assert_eq!(rows[1].flops, 512 * 2 * 4 * 6);
+        assert_eq!(rows[2].flops, 3 * 320 * 2 * 4 * 6);
+        assert_eq!(rows[3].flops, 2 * 576 * 4 * 6);
+        let g = rows[0].gflops().unwrap();
+        assert!((g - 13824.0 / 2000.0 / 1000.0).abs() < 1e-12, "{g}");
+        assert_eq!(rows[2].gflops(), None);
+        let table = render_kernel_table(&rows);
+        assert!(table.contains("conv-fwd"), "{table}");
+        assert!(table.contains("--"), "{table}");
+        assert!(render_kernel_table(&[]).is_empty());
     }
 }

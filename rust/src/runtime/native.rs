@@ -32,6 +32,27 @@
 //! `(ci, ·)` element's position-order sum is preserved within a block);
 //! `gb` is accumulated by the first block only.
 //!
+//! ## Blocked, vectorizable microkernels
+//!
+//! Within a row block every hot kernel is cache-blocked around a
+//! fixed-width f32 microkernel the autovectorizer reliably lowers to
+//! SIMD — [`MM_NR`] = 16 output lanes (one 64-byte cache line) with a
+//! variable-width scalar tail for non-multiple-of-lane widths, and
+//! [`MM_KB`]-sized reduction panels so the streamed operand stays
+//! L1-resident across the row loop. The one invariant every variant
+//! preserves is the **per-output-element accumulation order**: each
+//! output element still receives exactly the seed's sequence of adds,
+//! ascending in the reduction index, with register partial sums stored
+//! back and reloaded *between* panels (exact — no reassociation). The
+//! dense paths also drop the seed's per-element `if av != 0.0` skip:
+//! the skipped terms are `av·b = ±0.0`, and an accumulator that starts
+//! at a non-negative-zero value can never *be* `-0.0` (round-to-nearest
+//! only yields `-0.0` from `-0.0 + -0.0`), so adding them is bitwise
+//! neutral for the finite, non-`-0.0`-bias workload this backend runs.
+//! The seed's scalar kernels are retained verbatim in [`oracle`] and
+//! the `kernel_parity` suite pins bitwise equality against them across
+//! an odd-shape × thread-count sweep.
+//!
 //! Layer architecture (Table 1 / `python/compile/model.py`):
 //! 7× [conv3x3 SAME + bias + relu], max-pool 2×2 after convs 1, 3, 6
 //! (32→16→8→4), flatten to 4096, then FC0/FC1 (relu) and the FC2 +
@@ -243,32 +264,75 @@ pub fn execute(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
 }
 
 // ---------------------------------------------------------------------------
-// FC primitives. Row-major throughout; `i-k-j` loop order keeps the
-// inner loop over contiguous output rows (autovectorizable) and the
-// reduction order fixed.
+// FC primitives. Row-major throughout. Each kernel is cache-blocked
+// around a fixed-width microkernel (see the module docs); the
+// per-output-element accumulation order is the seed's, ascending in
+// the reduction index.
+
+/// Output lanes per microkernel: 16 f32 = one 64-byte cache line. The
+/// unrolled fixed-width accumulator block is what the autovectorizer
+/// lowers to SIMD; widths that are not a multiple of this get a
+/// variable-width scalar tail with the identical accumulation order.
+pub const MM_NR: usize = 16;
+/// Reduction-panel depth: [`MM_NR`]·[`MM_KB`] f32 of the streamed
+/// operand (≈ 16 KiB) stay L1-resident across the row loop. Register
+/// partial sums are stored back to the output and reloaded between
+/// panels — exact, so blocking never reassociates the sum.
+pub const MM_KB: usize = 256;
+/// Independent accumulator chains in the dot-product kernel
+/// ([`matmul_nt_t`]): 8 concurrent output columns hide FMA latency
+/// where lane-splitting the dot itself would reorder the reduction.
+pub const MM_IB: usize = 8;
+/// Dot-product j-panel width: [`MM_IB`]·[`MM_JB`] f32 of `w` (≈ 16 KiB)
+/// stay L1-resident across the row loop of [`matmul_nt_t`].
+pub const MM_JB: usize = 512;
 
 /// `out[m,n] = a[m,k] @ b[k,n]`.
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     matmul_t(a, b, m, k, n, compute_threads())
 }
 
-/// [`matmul`] with an explicit tile count. Each output row is computed
-/// by exactly one thread with the seed's loop order, so the result is
-/// bitwise identical for every `t`.
-fn matmul_t(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, t: usize) -> Vec<f32> {
+/// [`matmul`] with an explicit tile count. Each output row is owned by
+/// exactly one thread, and within a row every element accumulates over
+/// `l` ascending (k-panels store/reload exact partials), so the result
+/// is bitwise identical to the seed loop for every `t`.
+pub fn matmul_t(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, t: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
     par_row_blocks(&mut out, m, n, t, |lo, hi, chunk| {
-        for i in lo..hi {
-            let orow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
-            for l in 0..k {
-                let av = a[i * k + l];
-                if av != 0.0 {
-                    let brow = &b[l * n..(l + 1) * n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
+        let mut jb = 0;
+        while jb < n {
+            let jw = MM_NR.min(n - jb);
+            let mut lb = 0;
+            while lb < k {
+                let lhi = (lb + MM_KB).min(k);
+                for i in lo..hi {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let obase = (i - lo) * n + jb;
+                    let orow = &mut chunk[obase..obase + jw];
+                    let mut acc = [0.0f32; MM_NR];
+                    acc[..jw].copy_from_slice(orow);
+                    if jw == MM_NR {
+                        for l in lb..lhi {
+                            let av = arow[l];
+                            let brow = &b[l * n + jb..][..MM_NR];
+                            for u in 0..MM_NR {
+                                acc[u] += av * brow[u];
+                            }
+                        }
+                    } else {
+                        for l in lb..lhi {
+                            let av = arow[l];
+                            let brow = &b[l * n + jb..][..jw];
+                            for u in 0..jw {
+                                acc[u] += av * brow[u];
+                            }
+                        }
                     }
+                    orow.copy_from_slice(&acc[..jw]);
                 }
+                lb = lhi;
             }
+            jb += jw;
         }
     });
     out
@@ -280,25 +344,46 @@ fn matmul_tn(a: &[f32], g: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
 }
 
 /// [`matmul_tn`] with an explicit tile count. The seed iterated
-/// ri-outer over the whole output; here each row block iterates
-/// ri-outer over its own rows — for every output element the `ri`
-/// accumulation order is unchanged (ascending), so the result is
-/// bitwise identical to the seed at every `t` (pinned by
-/// `tiled_matmul_tn_matches_seed_order`).
-fn matmul_tn_t(a: &[f32], g: &[f32], r: usize, m: usize, n: usize, t: usize) -> Vec<f32> {
+/// ri-outer over the whole output; here each output element still
+/// accumulates over `ri` ascending (r-panels store/reload exact
+/// partials), so the result is bitwise identical to the seed at every
+/// `t` (pinned by `tiled_matmul_tn_matches_seed_order`).
+pub fn matmul_tn_t(a: &[f32], g: &[f32], r: usize, m: usize, n: usize, t: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
     par_row_blocks(&mut out, m, n, t, |lo, hi, chunk| {
-        for ri in 0..r {
-            let grow = &g[ri * n..(ri + 1) * n];
-            for i in lo..hi {
-                let av = a[ri * m + i];
-                if av != 0.0 {
-                    let orow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
-                    for j in 0..n {
-                        orow[j] += av * grow[j];
+        let mut jb = 0;
+        while jb < n {
+            let jw = MM_NR.min(n - jb);
+            let mut rb = 0;
+            while rb < r {
+                let rhi = (rb + MM_KB).min(r);
+                for i in lo..hi {
+                    let obase = (i - lo) * n + jb;
+                    let orow = &mut chunk[obase..obase + jw];
+                    let mut acc = [0.0f32; MM_NR];
+                    acc[..jw].copy_from_slice(orow);
+                    if jw == MM_NR {
+                        for ri in rb..rhi {
+                            let av = a[ri * m + i];
+                            let grow = &g[ri * n + jb..][..MM_NR];
+                            for u in 0..MM_NR {
+                                acc[u] += av * grow[u];
+                            }
+                        }
+                    } else {
+                        for ri in rb..rhi {
+                            let av = a[ri * m + i];
+                            let grow = &g[ri * n + jb..][..jw];
+                            for u in 0..jw {
+                                acc[u] += av * grow[u];
+                            }
+                        }
                     }
+                    orow.copy_from_slice(&acc[..jw]);
                 }
+                rb = rhi;
             }
+            jb += jw;
         }
     });
     out
@@ -309,34 +394,80 @@ fn matmul_nt(g: &[f32], w: &[f32], r: usize, n: usize, m: usize) -> Vec<f32> {
     matmul_nt_t(g, w, r, n, m, compute_threads())
 }
 
-/// [`matmul_nt`] with an explicit tile count (rows are independent
-/// dot products — bitwise identical for every `t`).
-fn matmul_nt_t(g: &[f32], w: &[f32], r: usize, n: usize, m: usize, t: usize) -> Vec<f32> {
+/// [`matmul_nt`] with an explicit tile count. Each output element is a
+/// single dot product over `j` ascending — a chain that cannot be
+/// lane-split without reordering the reduction — so the microkernel
+/// instead runs [`MM_IB`] *independent* chains (adjacent output
+/// columns) concurrently, with j-panels storing/reloading exact
+/// partials. Bitwise identical to the seed for every `t`.
+pub fn matmul_nt_t(g: &[f32], w: &[f32], r: usize, n: usize, m: usize, t: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; r * m];
     par_row_blocks(&mut out, r, m, t, |lo, hi, chunk| {
-        for ri in lo..hi {
-            let grow = &g[ri * n..(ri + 1) * n];
-            let orow = &mut chunk[(ri - lo) * m..(ri - lo + 1) * m];
-            for i in 0..m {
-                let wrow = &w[i * n..(i + 1) * n];
-                let mut acc = 0.0f32;
-                for j in 0..n {
-                    acc += grow[j] * wrow[j];
+        let mut ib = 0;
+        while ib < m {
+            let iw = MM_IB.min(m - ib);
+            let mut jb = 0;
+            while jb < n {
+                let jhi = (jb + MM_JB).min(n);
+                for ri in lo..hi {
+                    let grow = &g[ri * n..(ri + 1) * n];
+                    let obase = (ri - lo) * m + ib;
+                    let orow = &mut chunk[obase..obase + iw];
+                    let mut acc = [0.0f32; MM_IB];
+                    acc[..iw].copy_from_slice(orow);
+                    if iw == MM_IB {
+                        for j in jb..jhi {
+                            let gv = grow[j];
+                            for u in 0..MM_IB {
+                                acc[u] += gv * w[(ib + u) * n + j];
+                            }
+                        }
+                    } else {
+                        for j in jb..jhi {
+                            let gv = grow[j];
+                            for u in 0..iw {
+                                acc[u] += gv * w[(ib + u) * n + j];
+                            }
+                        }
+                    }
+                    orow.copy_from_slice(&acc[..iw]);
                 }
-                orow[i] = acc;
+                jb = jhi;
             }
+            ib += iw;
         }
     });
     out
 }
 
-fn add_bias(pre: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
-    for ri in 0..rows {
-        let row = &mut pre[ri * cols..(ri + 1) * cols];
-        for j in 0..cols {
-            row[j] += bias[j];
+/// `pre[r, j] += bias[j]`, row-threaded (rows are independent and each
+/// element gets exactly one add — bitwise identical for every `t`).
+pub fn add_bias_t(pre: &mut [f32], bias: &[f32], rows: usize, cols: usize, t: usize) {
+    par_row_blocks(pre, rows, cols, t, |_lo, _hi, chunk| {
+        for row in chunk.chunks_exact_mut(cols) {
+            for j in 0..cols {
+                row[j] += bias[j];
+            }
         }
-    }
+    });
+}
+
+/// Fused `relu(pre + bias)` epilogue, row-threaded. Elementwise
+/// identical to [`add_bias_t`] followed by the seed's
+/// `if *v < 0.0 { *v = 0.0 }` relu sweep.
+pub fn add_bias_relu_t(pre: &mut [f32], bias: &[f32], rows: usize, cols: usize, t: usize) {
+    par_row_blocks(pre, rows, cols, t, |_lo, _hi, chunk| {
+        for row in chunk.chunks_exact_mut(cols) {
+            for j in 0..cols {
+                let v = row[j] + bias[j];
+                row[j] = if v < 0.0 { 0.0 } else { v };
+            }
+        }
+    });
+}
+
+fn add_bias(pre: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    add_bias_t(pre, bias, rows, cols, compute_threads());
 }
 
 /// `relu(x @ w + b)` — the `fc_fwd` segment (`model.py::fc_fwd`).
@@ -344,12 +475,7 @@ fn fc_fwd(w: &HostTensor, bias: &HostTensor, x: &HostTensor) -> HostTensor {
     let (din, dout) = (w.shape[0], w.shape[1]);
     let rows = x.shape[0];
     let mut pre = matmul(x.as_f32(), w.as_f32(), rows, din, dout);
-    add_bias(&mut pre, bias.as_f32(), rows, dout);
-    for v in pre.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
+    add_bias_relu_t(&mut pre, bias.as_f32(), rows, dout, compute_threads());
     HostTensor::f32(vec![rows, dout], pre)
 }
 
@@ -508,8 +634,16 @@ fn conv3x3_relu(
 /// [`conv3x3_relu`] with an explicit tile count: output rows
 /// `(bi, oy)` are independent, so any fixed row-block split is bitwise
 /// identical to the single-threaded loop.
+///
+/// Per output element the accumulation order is the seed's — bias
+/// first, then `(ky, kx, ci)` ascending with the SAME-padding skips —
+/// restricted to a [`MM_NR`]-wide `cout` lane block held in registers
+/// across the whole receptive field (the dense `ci` loop drops the
+/// seed's `if av != 0.0` skip; see the module docs for why that is
+/// bitwise neutral). The relu epilogue applies the seed's
+/// `if v < 0.0 { 0.0 }` to the register block before the single store.
 #[allow(clippy::too_many_arguments)]
-fn conv3x3_relu_t(
+pub fn conv3x3_relu_t(
     x: &[f32],
     w: &[f32],
     bias: &[f32],
@@ -524,39 +658,50 @@ fn conv3x3_relu_t(
     par_row_blocks(&mut out, rows, hw * cout, t, |lo, hi, chunk| {
         for row in lo..hi {
             let (bi, oy) = (row / hw, row % hw);
-            for ox in 0..hw {
-                let obase = ((row - lo) * hw + ox) * cout;
-                let orow = &mut chunk[obase..obase + cout];
-                orow.copy_from_slice(bias);
-                for ky in 0..3usize {
-                    let iy = oy + ky;
-                    if iy == 0 || iy > hw {
-                        continue;
-                    }
-                    let iy = iy - 1;
-                    for kx in 0..3usize {
-                        let ix = ox + kx;
-                        if ix == 0 || ix > hw {
+            let mut cb = 0;
+            while cb < cout {
+                let cw = MM_NR.min(cout - cb);
+                for ox in 0..hw {
+                    let mut acc = [0.0f32; MM_NR];
+                    acc[..cw].copy_from_slice(&bias[cb..cb + cw]);
+                    for ky in 0..3usize {
+                        let iy = oy + ky;
+                        if iy == 0 || iy > hw {
                             continue;
                         }
-                        let ix = ix - 1;
-                        let xrow = &x[((bi * hw + iy) * hw + ix) * cin..][..cin];
-                        let wbase = (ky * 3 + kx) * cin * cout;
-                        for (ci, &av) in xrow.iter().enumerate() {
-                            if av != 0.0 {
-                                let wrow = &w[wbase + ci * cout..][..cout];
-                                for co in 0..cout {
-                                    orow[co] += av * wrow[co];
+                        let iy = iy - 1;
+                        for kx in 0..3usize {
+                            let ix = ox + kx;
+                            if ix == 0 || ix > hw {
+                                continue;
+                            }
+                            let ix = ix - 1;
+                            let xrow = &x[((bi * hw + iy) * hw + ix) * cin..][..cin];
+                            let wbase = (ky * 3 + kx) * cin * cout + cb;
+                            if cw == MM_NR {
+                                for (ci, &av) in xrow.iter().enumerate() {
+                                    let wrow = &w[wbase + ci * cout..][..MM_NR];
+                                    for u in 0..MM_NR {
+                                        acc[u] += av * wrow[u];
+                                    }
+                                }
+                            } else {
+                                for (ci, &av) in xrow.iter().enumerate() {
+                                    let wrow = &w[wbase + ci * cout..][..cw];
+                                    for u in 0..cw {
+                                        acc[u] += av * wrow[u];
+                                    }
                                 }
                             }
                         }
                     }
-                }
-                for v in orow.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
+                    let obase = ((row - lo) * hw + ox) * cout + cb;
+                    let orow = &mut chunk[obase..obase + cw];
+                    for u in 0..cw {
+                        orow[u] = if acc[u] < 0.0 { 0.0 } else { acc[u] };
                     }
                 }
+                cb += cw;
             }
         }
     });
@@ -566,40 +711,104 @@ fn conv3x3_relu_t(
 /// Max-pool 2×2 stride 2; returns pooled values plus the flat input
 /// index of each window's (first) maximum for the backward pass.
 fn maxpool2(x: &[f32], b: usize, hw: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    maxpool2_t(x, b, hw, c, compute_threads())
+}
+
+/// One block of output scanlines `[lo, hi)` of the 2×2 max-pool. The
+/// window scan order (`dy`, `dx` ascending, strict `>` so the first
+/// maximum wins, matching `jnp.argmax`) is the seed's; `arg` indices
+/// stay absolute into `x`.
+fn maxpool2_rows(
+    x: &[f32],
+    hw: usize,
+    c: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+    arg: &mut [u32],
+) {
     let ohw = hw / 2;
-    let mut out = vec![0.0f32; b * ohw * ohw * c];
-    let mut arg = vec![0u32; b * ohw * ohw * c];
-    for bi in 0..b {
-        for oy in 0..ohw {
-            for ox in 0..ohw {
-                let obase = ((bi * ohw + oy) * ohw + ox) * c;
-                for ci in 0..c {
-                    let mut best = f32::NEG_INFINITY;
-                    let mut besti = 0u32;
-                    for dy in 0..2usize {
-                        for dx in 0..2usize {
-                            let idx = ((bi * hw + 2 * oy + dy) * hw + 2 * ox + dx) * c + ci;
-                            if x[idx] > best {
-                                best = x[idx];
-                                besti = idx as u32;
-                            }
+    for row in lo..hi {
+        let (bi, oy) = (row / ohw, row % ohw);
+        for ox in 0..ohw {
+            let obase = ((row - lo) * ohw + ox) * c;
+            for ci in 0..c {
+                let mut best = f32::NEG_INFINITY;
+                let mut besti = 0u32;
+                for dy in 0..2usize {
+                    for dx in 0..2usize {
+                        let idx = ((bi * hw + 2 * oy + dy) * hw + 2 * ox + dx) * c + ci;
+                        if x[idx] > best {
+                            best = x[idx];
+                            besti = idx as u32;
                         }
                     }
-                    out[obase + ci] = best;
-                    arg[obase + ci] = besti;
                 }
+                out[obase + ci] = best;
+                arg[obase + ci] = besti;
             }
         }
+    }
+}
+
+/// [`maxpool2`] with an explicit tile count: output scanlines
+/// `(bi, oy)` are independent, so any fixed row-block split of the
+/// `out`/`arg` pair is bitwise identical to the single-threaded loop.
+pub fn maxpool2_t(x: &[f32], b: usize, hw: usize, c: usize, t: usize) -> (Vec<f32>, Vec<u32>) {
+    let ohw = hw / 2;
+    let rows = b * ohw; // one row = one (bi, oy) scanline of the output
+    let w = ohw * c;
+    let mut out = vec![0.0f32; rows * w];
+    let mut arg = vec![0u32; rows * w];
+    let t = t.min(rows).max(1);
+    if t == 1 {
+        maxpool2_rows(x, hw, c, 0, rows, &mut out, &mut arg);
+    } else {
+        let bounds = block_bounds(rows, t);
+        std::thread::scope(|s| {
+            let mut orest = &mut out[..];
+            let mut arest = &mut arg[..];
+            for &(lo, hi) in &bounds {
+                let (ochunk, otail) = std::mem::take(&mut orest).split_at_mut((hi - lo) * w);
+                let (achunk, atail) = std::mem::take(&mut arest).split_at_mut((hi - lo) * w);
+                orest = otail;
+                arest = atail;
+                s.spawn(move || maxpool2_rows(x, hw, c, lo, hi, ochunk, achunk));
+            }
+        });
     }
     (out, arg)
 }
 
-/// Route pooled gradients back to their argmax positions.
-fn maxpool2_bwd(g: &[f32], arg: &[u32], input_len: usize) -> Vec<f32> {
-    let mut gx = vec![0.0f32; input_len];
-    for (i, &a) in arg.iter().enumerate() {
-        gx[a as usize] += g[i];
-    }
+/// Route pooled gradients back to their argmax positions. `hw` is the
+/// *input* spatial size (the pooled output is `hw/2 × hw/2`).
+fn maxpool2_bwd(g: &[f32], arg: &[u32], b: usize, hw: usize, c: usize) -> Vec<f32> {
+    maxpool2_bwd_t(g, arg, b, hw, c, compute_threads())
+}
+
+/// [`maxpool2_bwd`] with an explicit tile count. Output scanline `r`
+/// of the pool owns exactly the two input scanlines `2r, 2r+1` — a
+/// contiguous `2·hw·c` slice of `gx` — and pool windows are disjoint,
+/// so every `gx` element receives at most one add: any fixed row-block
+/// split over those slices is bitwise identical to the seed's scatter.
+pub fn maxpool2_bwd_t(
+    g: &[f32],
+    arg: &[u32],
+    b: usize,
+    hw: usize,
+    c: usize,
+    t: usize,
+) -> Vec<f32> {
+    let ohw = hw / 2;
+    let rows = b * ohw; // one row = one (bi, oy) scanline of the *output*
+    let w = 2 * hw * c; // gx elements owned by that scanline
+    let mut gx = vec![0.0f32; b * hw * hw * c];
+    par_row_blocks(&mut gx, rows, w, t, |lo, hi, chunk| {
+        let base = lo * w;
+        for i in lo * ohw * c..hi * ohw * c {
+            chunk[arg[i] as usize - base] += g[i];
+        }
+    });
     gx
 }
 
@@ -626,7 +835,7 @@ fn conv3x3_bwd(
 /// block only. The stitch step is pure copies (exclusive ownership —
 /// no floating-point reorder).
 #[allow(clippy::too_many_arguments)]
-fn conv3x3_bwd_t(
+pub fn conv3x3_bwd_t(
     x: &[f32],
     y: &[f32],
     gy: &[f32],
@@ -735,11 +944,17 @@ fn conv3x3_bwd_ci(
                             let av = x[xbase + ci];
                             let wrow = &w[wbase + ci * cout..][..cout];
                             let gwrow = &mut gw[gwbase + (ci - clo) * cout..][..cout];
+                            // The seed fused these two loops; fission
+                            // keeps every element's `co`-order sum
+                            // intact while letting the saxpy update
+                            // vectorize (the dot stays a scalar chain —
+                            // splitting it would reorder the sum).
+                            for co in 0..cout {
+                                gwrow[co] += av * gprevec[co];
+                            }
                             let mut acc = 0.0f32;
                             for co in 0..cout {
-                                let g = gprevec[co];
-                                gwrow[co] += av * g;
-                                acc += wrow[co] * g;
+                                acc += wrow[co] * gprevec[co];
                             }
                             gxrow[ci - clo] += acc;
                         }
@@ -837,7 +1052,7 @@ fn conv_backward(params: &[HostTensor], trace: &ConvTrace, g_act: &[f32], b: usi
         let (cin, cout) = CONV_CHANNELS[i];
         let hw = SPATIAL[i];
         if let Some(arg) = &trace.args[i] {
-            g = maxpool2_bwd(&g, arg, b * hw * hw * cout);
+            g = maxpool2_bwd(&g, arg, b, hw, cout);
         }
         let (gw, gb, gx) = conv3x3_bwd(
             trace.input_of(i),
@@ -966,6 +1181,320 @@ fn full_eval(
     ])
 }
 
+// ---------------------------------------------------------------------------
+// Seed oracles.
+
+/// The seed's scalar correctness-first kernels, retained **verbatim**
+/// as bitwise oracles for the blocked/vectorized kernels above.
+///
+/// The `kernel_parity` integration suite (and the unit tests below)
+/// pin every production kernel bitwise against these across an
+/// odd-shape × thread-count sweep — which is why they live in a normal
+/// `pub` module rather than under `#[cfg(test)]`: integration tests
+/// compile the library without the `test` cfg. They are not called on
+/// any hot path.
+///
+/// Parity caveat (the one deliberate difference): the production dense
+/// paths add the `av == 0.0` terms these oracles skip. Those terms are
+/// `±0.0` and bitwise-neutral **provided** inputs are finite and the
+/// conv bias contains no `-0.0` (an accumulator seeded at a
+/// non-negative-zero value can never become `-0.0`); both hold for
+/// everything this backend executes, and the parity suite exercises
+/// zero-laden inputs to prove the skip removal under exactly that
+/// contract.
+pub mod oracle {
+    use super::{block_bounds, par_row_blocks};
+
+    /// Seed `out[m,n] = a[m,k] @ b[k,n]` (branchy zero-skip loop).
+    pub fn matmul_t(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, t: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        par_row_blocks(&mut out, m, n, t, |lo, hi, chunk| {
+            for i in lo..hi {
+                let orow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+                for l in 0..k {
+                    let av = a[i * k + l];
+                    if av != 0.0 {
+                        let brow = &b[l * n..(l + 1) * n];
+                        for j in 0..n {
+                            orow[j] += av * brow[j];
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Seed `out[m,n] = a[r,m]ᵀ @ g[r,n]`.
+    pub fn matmul_tn_t(a: &[f32], g: &[f32], r: usize, m: usize, n: usize, t: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        par_row_blocks(&mut out, m, n, t, |lo, hi, chunk| {
+            for ri in 0..r {
+                let grow = &g[ri * n..(ri + 1) * n];
+                for i in lo..hi {
+                    let av = a[ri * m + i];
+                    if av != 0.0 {
+                        let orow = &mut chunk[(i - lo) * n..(i - lo + 1) * n];
+                        for j in 0..n {
+                            orow[j] += av * grow[j];
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Seed `out[r,m] = g[r,n] @ w[m,n]ᵀ` (one scalar dot per element).
+    pub fn matmul_nt_t(g: &[f32], w: &[f32], r: usize, n: usize, m: usize, t: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; r * m];
+        par_row_blocks(&mut out, r, m, t, |lo, hi, chunk| {
+            for ri in lo..hi {
+                let grow = &g[ri * n..(ri + 1) * n];
+                let orow = &mut chunk[(ri - lo) * m..(ri - lo + 1) * m];
+                for i in 0..m {
+                    let wrow = &w[i * n..(i + 1) * n];
+                    let mut acc = 0.0f32;
+                    for j in 0..n {
+                        acc += grow[j] * wrow[j];
+                    }
+                    orow[i] = acc;
+                }
+            }
+        });
+        out
+    }
+
+    /// Seed conv3x3 SAME + bias + relu (full-`cout` rows, zero-skip).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3x3_relu_t(
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        b: usize,
+        hw: usize,
+        cin: usize,
+        cout: usize,
+        t: usize,
+    ) -> Vec<f32> {
+        let rows = b * hw;
+        let mut out = vec![0.0f32; b * hw * hw * cout];
+        par_row_blocks(&mut out, rows, hw * cout, t, |lo, hi, chunk| {
+            for row in lo..hi {
+                let (bi, oy) = (row / hw, row % hw);
+                for ox in 0..hw {
+                    let obase = ((row - lo) * hw + ox) * cout;
+                    let orow = &mut chunk[obase..obase + cout];
+                    orow.copy_from_slice(bias);
+                    for ky in 0..3usize {
+                        let iy = oy + ky;
+                        if iy == 0 || iy > hw {
+                            continue;
+                        }
+                        let iy = iy - 1;
+                        for kx in 0..3usize {
+                            let ix = ox + kx;
+                            if ix == 0 || ix > hw {
+                                continue;
+                            }
+                            let ix = ix - 1;
+                            let xrow = &x[((bi * hw + iy) * hw + ix) * cin..][..cin];
+                            let wbase = (ky * 3 + kx) * cin * cout;
+                            for (ci, &av) in xrow.iter().enumerate() {
+                                if av != 0.0 {
+                                    let wrow = &w[wbase + ci * cout..][..cout];
+                                    for co in 0..cout {
+                                        orow[co] += av * wrow[co];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    for v in orow.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Seed conv3x3 backward, input-channel split (fused inner loop).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3x3_bwd_t(
+        x: &[f32],
+        y: &[f32],
+        gy: &[f32],
+        w: &[f32],
+        b: usize,
+        hw: usize,
+        cin: usize,
+        cout: usize,
+        t: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let t = t.min(cin).max(1);
+        if t == 1 {
+            return conv3x3_bwd_ci(x, y, gy, w, b, hw, cin, cout, 0, cin);
+        }
+        let bounds = block_bounds(cin, t);
+        let parts: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = bounds
+                .iter()
+                .map(|&(clo, chi)| {
+                    s.spawn(move || conv3x3_bwd_ci(x, y, gy, w, b, hw, cin, cout, clo, chi))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("conv bwd oracle tile thread panicked"))
+                .collect()
+        });
+        let mut gw = vec![0.0f32; 9 * cin * cout];
+        let mut gb = vec![0.0f32; cout];
+        let mut gx = vec![0.0f32; b * hw * hw * cin];
+        for (&(clo, chi), (gw_p, gb_p, gx_p)) in bounds.iter().zip(parts) {
+            let wci = chi - clo;
+            for kk in 0..9 {
+                gw[kk * cin * cout + clo * cout..kk * cin * cout + chi * cout]
+                    .copy_from_slice(&gw_p[kk * wci * cout..(kk + 1) * wci * cout]);
+            }
+            for pos in 0..b * hw * hw {
+                gx[pos * cin + clo..pos * cin + chi]
+                    .copy_from_slice(&gx_p[pos * wci..(pos + 1) * wci]);
+            }
+            if clo == 0 {
+                gb.copy_from_slice(&gb_p);
+            }
+        }
+        (gw, gb, gx)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv3x3_bwd_ci(
+        x: &[f32],
+        y: &[f32],
+        gy: &[f32],
+        w: &[f32],
+        b: usize,
+        hw: usize,
+        cin: usize,
+        cout: usize,
+        clo: usize,
+        chi: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let wci = chi - clo;
+        let mut gw = vec![0.0f32; 9 * wci * cout];
+        let mut gb = vec![0.0f32; cout];
+        let mut gx = vec![0.0f32; b * hw * hw * wci];
+        let mut gprevec = vec![0.0f32; cout];
+        for bi in 0..b {
+            for oy in 0..hw {
+                for ox in 0..hw {
+                    let obase = ((bi * hw + oy) * hw + ox) * cout;
+                    let mut any = false;
+                    for co in 0..cout {
+                        let g = if y[obase + co] > 0.0 { gy[obase + co] } else { 0.0 };
+                        gprevec[co] = g;
+                        any |= g != 0.0;
+                    }
+                    if !any {
+                        continue;
+                    }
+                    if clo == 0 {
+                        for co in 0..cout {
+                            gb[co] += gprevec[co];
+                        }
+                    }
+                    for ky in 0..3usize {
+                        let iy = oy + ky;
+                        if iy == 0 || iy > hw {
+                            continue;
+                        }
+                        let iy = iy - 1;
+                        for kx in 0..3usize {
+                            let ix = ox + kx;
+                            if ix == 0 || ix > hw {
+                                continue;
+                            }
+                            let ix = ix - 1;
+                            let pos = (bi * hw + iy) * hw + ix;
+                            let xbase = pos * cin;
+                            let wbase = (ky * 3 + kx) * cin * cout;
+                            let gwbase = (ky * 3 + kx) * wci * cout;
+                            let gxrow = &mut gx[pos * wci..(pos + 1) * wci];
+                            for ci in clo..chi {
+                                let av = x[xbase + ci];
+                                let wrow = &w[wbase + ci * cout..][..cout];
+                                let gwrow = &mut gw[gwbase + (ci - clo) * cout..][..cout];
+                                let mut acc = 0.0f32;
+                                for co in 0..cout {
+                                    let g = gprevec[co];
+                                    gwrow[co] += av * g;
+                                    acc += wrow[co] * g;
+                                }
+                                gxrow[ci - clo] += acc;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (gw, gb, gx)
+    }
+
+    /// Seed single-threaded 2×2 max-pool.
+    pub fn maxpool2(x: &[f32], b: usize, hw: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+        let ohw = hw / 2;
+        let mut out = vec![0.0f32; b * ohw * ohw * c];
+        let mut arg = vec![0u32; b * ohw * ohw * c];
+        for bi in 0..b {
+            for oy in 0..ohw {
+                for ox in 0..ohw {
+                    let obase = ((bi * ohw + oy) * ohw + ox) * c;
+                    for ci in 0..c {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut besti = 0u32;
+                        for dy in 0..2usize {
+                            for dx in 0..2usize {
+                                let idx =
+                                    ((bi * hw + 2 * oy + dy) * hw + 2 * ox + dx) * c + ci;
+                                if x[idx] > best {
+                                    best = x[idx];
+                                    besti = idx as u32;
+                                }
+                            }
+                        }
+                        out[obase + ci] = best;
+                        arg[obase + ci] = besti;
+                    }
+                }
+            }
+        }
+        (out, arg)
+    }
+
+    /// Seed single-threaded max-pool gradient scatter.
+    pub fn maxpool2_bwd(g: &[f32], arg: &[u32], input_len: usize) -> Vec<f32> {
+        let mut gx = vec![0.0f32; input_len];
+        for (i, &a) in arg.iter().enumerate() {
+            gx[a as usize] += g[i];
+        }
+        gx
+    }
+
+    /// Seed single-threaded bias add.
+    pub fn add_bias(pre: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+        for ri in 0..rows {
+            let row = &mut pre[ri * cols..(ri + 1) * cols];
+            for j in 0..cols {
+                row[j] += bias[j];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1084,7 +1613,7 @@ mod tests {
         let (y, arg) = maxpool2(&x, 1, 2, 1);
         assert_eq!(y, vec![9.0]);
         assert_eq!(arg, vec![3]);
-        let gx = maxpool2_bwd(&[5.0], &arg, 4);
+        let gx = maxpool2_bwd(&[5.0], &arg, 1, 2, 1);
         assert_eq!(gx, vec![0.0, 0.0, 0.0, 5.0]);
     }
 
@@ -1164,6 +1693,85 @@ mod tests {
             assert_eq!(bits(&gb1), bits(&gbt), "conv3x3_bwd gb t={t}");
             assert_eq!(bits(&gx1), bits(&gxt), "conv3x3_bwd gx t={t}");
         }
+    }
+
+    /// Fast in-crate slice of the kernel_parity contract: blocked
+    /// kernels vs the seed oracles, bitwise, on zero-laden inputs
+    /// (exercising exactly the `if av != 0.0` skip the blocked dense
+    /// paths removed).
+    #[test]
+    fn blocked_kernels_match_oracles_on_zero_laden_inputs() {
+        let mut rng = Rng::new(21);
+        let zero_laden = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            let mut v = rng.normal_vec(len, 1.0);
+            for (i, x) in v.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *x = 0.0;
+                }
+            }
+            v
+        };
+        let (m, k, n) = (5, 40, 21); // n straddles one full lane block + a tail
+        let a = zero_laden(&mut rng, m * k);
+        let b = zero_laden(&mut rng, k * n);
+        let g = zero_laden(&mut rng, m * n);
+        for t in [1usize, 3] {
+            assert_eq!(
+                bits(&matmul_t(&a, &b, m, k, n, t)),
+                bits(&oracle::matmul_t(&a, &b, m, k, n, t)),
+                "matmul t={t}"
+            );
+            assert_eq!(
+                bits(&matmul_tn_t(&a, &g, m, k, n, t)),
+                bits(&oracle::matmul_tn_t(&a, &g, m, k, n, t)),
+                "matmul_tn t={t}"
+            );
+            assert_eq!(
+                bits(&matmul_nt_t(&g, &b, m, n, k, t)),
+                bits(&oracle::matmul_nt_t(&g, &b, m, n, k, t)),
+                "matmul_nt t={t}"
+            );
+        }
+        let (cb, hw, cin, cout) = (1usize, 4usize, 3usize, 19usize);
+        let x = zero_laden(&mut rng, cb * hw * hw * cin);
+        let w = zero_laden(&mut rng, 9 * cin * cout);
+        let bias = rng.normal_vec(cout, 0.1);
+        for t in [1usize, 2] {
+            let got = conv3x3_relu_t(&x, &w, &bias, cb, hw, cin, cout, t);
+            let want = oracle::conv3x3_relu_t(&x, &w, &bias, cb, hw, cin, cout, t);
+            assert_eq!(bits(&got), bits(&want), "conv3x3_relu t={t}");
+            let gy = zero_laden(&mut rng, cb * hw * hw * cout);
+            let (gw1, gb1, gx1) = conv3x3_bwd_t(&x, &got, &gy, &w, cb, hw, cin, cout, t);
+            let (gw2, gb2, gx2) = oracle::conv3x3_bwd_t(&x, &want, &gy, &w, cb, hw, cin, cout, t);
+            assert_eq!(bits(&gw1), bits(&gw2), "conv bwd gw t={t}");
+            assert_eq!(bits(&gb1), bits(&gb2), "conv bwd gb t={t}");
+            assert_eq!(bits(&gx1), bits(&gx2), "conv bwd gx t={t}");
+        }
+        // Pool fwd/bwd and the threaded epilogues.
+        let (pout, parg) = maxpool2_t(&x, cb, hw, cin, 3);
+        let (oout, oarg) = oracle::maxpool2(&x, cb, hw, cin);
+        assert_eq!(bits(&pout), bits(&oout));
+        assert_eq!(parg, oarg);
+        let pg = zero_laden(&mut rng, pout.len());
+        assert_eq!(
+            bits(&maxpool2_bwd_t(&pg, &parg, cb, hw, cin, 3)),
+            bits(&oracle::maxpool2_bwd(&pg, &oarg, cb * hw * hw * cin))
+        );
+        let pre = zero_laden(&mut rng, m * n);
+        let bias2 = rng.normal_vec(n, 0.1);
+        let mut p1 = pre.clone();
+        let mut p2 = pre.clone();
+        add_bias_t(&mut p1, &bias2, m, n, 4);
+        oracle::add_bias(&mut p2, &bias2, m, n);
+        assert_eq!(bits(&p1), bits(&p2), "add_bias");
+        let mut p3 = pre.clone();
+        add_bias_relu_t(&mut p3, &bias2, m, n, 2);
+        for v in p2.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        assert_eq!(bits(&p3), bits(&p2), "add_bias_relu");
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Kernel and collective parity battery.
+//!
+//! Every blocked/vectorized production kernel in `runtime::native` is
+//! pinned **bitwise** against the retained seed oracle
+//! (`runtime::native::oracle`) across an odd-shape × thread-count
+//! sweep: non-multiple-of-lane `cout`/`n`, hw ∈ {4, 8, 32},
+//! cin/cout ∈ {1, 3, 16, 64}, and every `--compute-threads` in 1..=8.
+//! Inputs are zero-laden (every third element exactly 0.0) so the
+//! removal of the seed's `if av != 0.0` skip is exercised under the
+//! exact contract that makes it bitwise neutral (finite inputs, no
+//! `-0.0` bias).
+//!
+//! The second half pins the chunk-pipelined ring collectives against
+//! the round-synchronous schedule (`subchunks = 1`, the seed): bitwise
+//! identical results and identical byte counters on buffers large
+//! enough that the production policy actually pipelines.
+
+use splitbrain::comm::collective::{
+    allgather_cols_rank, allgather_cols_rank_pipelined, allreduce_mean_rank,
+    reduce_scatter_cols_rank, reduce_scatter_cols_rank_pipelined,
+    ring_allreduce_mean, ring_allreduce_mean_rank_pipelined, subchunks_for,
+    CollectiveAlgo, MAX_PIPELINE_SUBCHUNKS, PIPELINE_SUBCHUNK_ELEMS,
+};
+use splitbrain::comm::fabric::{Fabric, Tag};
+use splitbrain::runtime::native::{self, oracle};
+use splitbrain::runtime::HostTensor;
+
+/// Deterministic zero-laden value soup: every third element is exactly
+/// `0.0` (exercising the dense paths' branch removal and max-pool
+/// ties), the rest spread across magnitudes and signs. Finite, never
+/// `-0.0`.
+fn zero_laden(seed: u32, len: usize) -> Vec<f32> {
+    let mut x = seed.wrapping_mul(2654435761).wrapping_add(99991);
+    (0..len)
+        .map(|i| {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            if i % 3 == 2 {
+                0.0
+            } else {
+                ((x >> 9) as f32 / (1 << 21) as f32) - 1.0
+            }
+        })
+        .collect()
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn matmul_kernels_match_oracle_across_shapes_and_threads() {
+    for &(m, k, n) in &[
+        (1usize, 7usize, 1usize),
+        (5, 7, 16),
+        (5, 40, 21),
+        (8, 300, 33),
+        (3, 300, 16),
+        (16, 40, 1),
+    ] {
+        let a = zero_laden(1, m * k);
+        let b = zero_laden(2, k * n);
+        let g = zero_laden(3, m * n);
+        for t in 1..=8usize {
+            let what = format!("m={m} k={k} n={n} t={t}");
+            assert_bits(
+                &native::matmul_t(&a, &b, m, k, n, t),
+                &oracle::matmul_t(&a, &b, m, k, n, t),
+                &format!("matmul {what}"),
+            );
+            // tn: out[k,n] = a[m,k]ᵀ @ g[m,n] (r=m rows reduced).
+            assert_bits(
+                &native::matmul_tn_t(&a, &g, m, k, n, t),
+                &oracle::matmul_tn_t(&a, &g, m, k, n, t),
+                &format!("matmul_tn {what}"),
+            );
+            // nt: out[m,k] = g[m,n] @ b[k,n]ᵀ.
+            assert_bits(
+                &native::matmul_nt_t(&g, &b, m, n, k, t),
+                &oracle::matmul_nt_t(&g, &b, m, n, k, t),
+                &format!("matmul_nt {what}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn conv_and_pool_kernels_match_oracle_across_shapes_and_threads() {
+    for &(hw, b) in &[(4usize, 2usize), (8, 2), (32, 1)] {
+        for &cin in &[1usize, 3, 16, 64] {
+            for &cout in &[1usize, 3, 16, 64] {
+                // The 32×32 plane with 64×64 channels is the expensive
+                // corner; the small planes sweep every thread count.
+                if hw == 32 && cin.max(cout) > 16 && !(cin == 64 && cout == 64) {
+                    continue;
+                }
+                let threads: &[usize] =
+                    if hw == 32 { &[1, 2, 5, 8] } else { &[1, 2, 3, 4, 5, 6, 7, 8] };
+                let x = zero_laden(10 + cin as u32, b * hw * hw * cin);
+                let w = zero_laden(20 + cout as u32, 9 * cin * cout);
+                let bias = zero_laden(30, cout);
+                let yref = oracle::conv3x3_relu_t(&x, &w, &bias, b, hw, cin, cout, 1);
+                let gy = zero_laden(40, b * hw * hw * cout);
+                let (gw_ref, gb_ref, gx_ref) =
+                    oracle::conv3x3_bwd_t(&x, &yref, &gy, &w, b, hw, cin, cout, 1);
+                for &t in threads {
+                    let what = format!("hw={hw} cin={cin} cout={cout} t={t}");
+                    let y = native::conv3x3_relu_t(&x, &w, &bias, b, hw, cin, cout, t);
+                    assert_bits(&y, &yref, &format!("conv fwd {what}"));
+                    let (gw, gb, gx) =
+                        native::conv3x3_bwd_t(&x, &y, &gy, &w, b, hw, cin, cout, t);
+                    assert_bits(&gw, &gw_ref, &format!("conv bwd gw {what}"));
+                    assert_bits(&gb, &gb_ref, &format!("conv bwd gb {what}"));
+                    assert_bits(&gx, &gx_ref, &format!("conv bwd gx {what}"));
+                    // Pool fwd/bwd over the conv output (even planes).
+                    let (pref, aref) = oracle::maxpool2(&y, b, hw, cout);
+                    let (p, arg) = native::maxpool2_t(&y, b, hw, cout, t);
+                    assert_bits(&p, &pref, &format!("pool fwd {what}"));
+                    assert_eq!(arg, aref, "pool arg {what}");
+                    let pg = zero_laden(50, p.len());
+                    assert_bits(
+                        &native::maxpool2_bwd_t(&pg, &arg, b, hw, cout, t),
+                        &oracle::maxpool2_bwd(&pg, &aref, b * hw * hw * cout),
+                        &format!("pool bwd {what}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bias_epilogues_match_oracle_across_threads() {
+    for &(rows, cols) in &[(1usize, 1usize), (7, 21), (16, 1024)] {
+        let pre = zero_laden(60, rows * cols);
+        let bias = zero_laden(61, cols);
+        let mut plain_ref = pre.clone();
+        oracle::add_bias(&mut plain_ref, &bias, rows, cols);
+        let mut relu_ref = plain_ref.clone();
+        for v in relu_ref.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        for t in 1..=8usize {
+            let what = format!("rows={rows} cols={cols} t={t}");
+            let mut p1 = pre.clone();
+            native::add_bias_t(&mut p1, &bias, rows, cols, t);
+            assert_bits(&p1, &plain_ref, &format!("add_bias {what}"));
+            let mut p2 = pre.clone();
+            native::add_bias_relu_t(&mut p2, &bias, rows, cols, t);
+            assert_bits(&p2, &relu_ref, &format!("add_bias_relu {what}"));
+        }
+    }
+}
+
+/// Run a per-rank collective program on a scoped thread per rank.
+fn per_rank<T: Send>(
+    n: usize,
+    f: impl Fn(usize) -> anyhow::Result<T> + Sync,
+) -> Vec<T> {
+    let fref = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n).map(|gi| s.spawn(move || fref(gi))).collect();
+        handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect()
+    })
+}
+
+#[test]
+fn pipelined_flat_allreduce_matches_seed_schedule_at_scale() {
+    // Large enough that the production policy pipelines at the cap.
+    let n = 4usize;
+    let len = 600_000usize;
+    assert_eq!(subchunks_for(len / n + len % n), MAX_PIPELINE_SUBCHUNKS);
+    let group: Vec<usize> = (0..n).collect();
+    let inputs: Vec<Vec<f32>> = (0..n).map(|i| zero_laden(70 + i as u32, len)).collect();
+    let run = |s: Option<usize>| -> (Vec<Vec<f32>>, u64) {
+        let f = Fabric::new(n);
+        let outs = per_rank(n, |gi| {
+            let mut b = inputs[gi].clone();
+            match s {
+                // The production dispatch picks the depth itself.
+                None => allreduce_mean_rank(CollectiveAlgo::Ring, &f, &group, gi, &mut b, 7)?,
+                Some(s) => {
+                    ring_allreduce_mean_rank_pipelined(&f, &group, gi, &mut b, 7, s)?
+                }
+            }
+            Ok(b)
+        });
+        assert!(f.drained());
+        (outs, f.total_bytes())
+    };
+    let (seed_outs, seed_bytes) = run(Some(1)); // the seed's schedule
+    let (prod_outs, prod_bytes) = run(None);
+    for (a, b) in seed_outs.iter().zip(prod_outs.iter()) {
+        assert_bits(a, b, "flat allreduce policy vs seed");
+    }
+    assert_eq!(seed_bytes, prod_bytes);
+    // Group view (sequential engine's path) agrees too.
+    let f = Fabric::new(n);
+    let mut bufs = inputs.clone();
+    ring_allreduce_mean(&f, &group, &mut bufs, 7).unwrap();
+    for (a, b) in seed_outs.iter().zip(bufs.iter()) {
+        assert_bits(a, b, "flat allreduce group view vs seed");
+    }
+    assert_eq!(f.total_bytes(), seed_bytes);
+}
+
+#[test]
+fn pipelined_column_rings_match_seed_schedule_at_scale() {
+    let group = [0usize, 1, 2];
+    let k = group.len();
+    let rows = 64usize;
+    let widths = [2000usize, 1500, 3000];
+    let full_w: usize = widths.iter().sum();
+    assert!(rows * 3000 > PIPELINE_SUBCHUNK_ELEMS, "must actually pipeline");
+    let parts: Vec<HostTensor> = (0..k)
+        .map(|i| HostTensor::f32(vec![rows, widths[i]], zero_laden(80 + i as u32, rows * widths[i])))
+        .collect();
+    let fulls: Vec<HostTensor> = (0..k)
+        .map(|i| HostTensor::f32(vec![rows, full_w], zero_laden(90 + i as u32, rows * full_w)))
+        .collect();
+    // Allgather: production policy vs explicit depth 1 (the seed).
+    let run_ag = |s: Option<usize>| -> (Vec<HostTensor>, u64) {
+        let f = Fabric::new(k);
+        let outs = per_rank(k, |gi| match s {
+            None => allgather_cols_rank(
+                CollectiveAlgo::Ring,
+                &f,
+                &group,
+                gi,
+                &parts[gi],
+                &widths,
+                Tag::new(1, 0, 0),
+            ),
+            Some(s) => allgather_cols_rank_pipelined(
+                &f,
+                &group,
+                gi,
+                &parts[gi],
+                &widths,
+                Tag::new(1, 0, 0),
+                s,
+            ),
+        });
+        assert!(f.drained());
+        (outs, f.total_bytes())
+    };
+    let (ag_seed, agb_seed) = run_ag(Some(1));
+    let (ag_prod, agb_prod) = run_ag(None);
+    for (a, b) in ag_seed.iter().zip(ag_prod.iter()) {
+        assert_eq!(a.shape, b.shape);
+        assert_bits(a.as_f32(), b.as_f32(), "allgather policy vs seed");
+    }
+    assert_eq!(agb_seed, agb_prod);
+    // Reduce-scatter likewise.
+    let run_rs = |s: Option<usize>| -> (Vec<HostTensor>, u64) {
+        let f = Fabric::new(k);
+        let outs = per_rank(k, |gi| match s {
+            None => reduce_scatter_cols_rank(
+                CollectiveAlgo::Ring,
+                &f,
+                &group,
+                gi,
+                &fulls[gi],
+                &widths,
+                Tag::new(2, 0, 0),
+            ),
+            Some(s) => reduce_scatter_cols_rank_pipelined(
+                &f,
+                &group,
+                gi,
+                &fulls[gi],
+                &widths,
+                Tag::new(2, 0, 0),
+                s,
+            ),
+        });
+        assert!(f.drained());
+        (outs, f.total_bytes())
+    };
+    let (rs_seed, rsb_seed) = run_rs(Some(1));
+    let (rs_prod, rsb_prod) = run_rs(None);
+    for (a, b) in rs_seed.iter().zip(rs_prod.iter()) {
+        assert_eq!(a.shape, b.shape);
+        assert_bits(a.as_f32(), b.as_f32(), "reduce-scatter policy vs seed");
+    }
+    assert_eq!(rsb_seed, rsb_prod);
+}

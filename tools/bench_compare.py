@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_throughput.json against the committed baseline.
+
+Usage: bench_compare.py BASELINE FRESH OUT
+
+The CI bench-smoke job runs the throughput bench into FRESH and calls
+this script with the repo's committed BASELINE. Two modes:
+
+* **Seed mode** — the baseline has no results (the committed file is
+  the unblessed placeholder, or a config is brand new). The script
+  records the fresh numbers in OUT, prints how to bless them, and
+  exits 0: a gate can't be armed against numbers that were never
+  measured on this hardware class.
+
+* **Gate mode** — the baseline carries results. Every baseline config
+  must be present in FRESH and its steps/sec must not regress by more
+  than MAX_REGRESSION (15%). Per-kernel GFLOP/s and per-collective
+  MB/s deltas are recorded in OUT for inspection but do not gate (they
+  are far noisier than end-to-end steps/sec on shared runners).
+
+OUT is a JSON comparison artifact either way, and always embeds a
+blessing candidate: commit OUT's `fresh` object as the repo's
+BENCH_throughput.json (or copy the uploaded fresh file directly) to
+re-baseline after an accepted perf change.
+"""
+
+import json
+import sys
+
+MAX_REGRESSION = 0.15
+
+
+def by_config(doc):
+    return {r["config"]: r for r in doc.get("results", [])}
+
+
+def deltas(base_row, fresh_row, key):
+    """Relative per-entry deltas for a nested {name: number} column."""
+    out = {}
+    for name, b in (base_row.get(key) or {}).items():
+        f = (fresh_row.get(key) or {}).get(name)
+        if b is None or f is None or b == 0:
+            out[name] = None
+        else:
+            out[name] = (f - b) / b
+    return out
+
+
+def main():
+    if len(sys.argv) != 4:
+        sys.exit(f"usage: {sys.argv[0]} BASELINE FRESH OUT")
+    base_path, fresh_path, out_path = sys.argv[1:4]
+    with open(base_path) as fh:
+        base = json.load(fh)
+    with open(fresh_path) as fh:
+        fresh = json.load(fh)
+
+    base_rows, fresh_rows = by_config(base), by_config(fresh)
+    comparison = {
+        "bench": "throughput-comparison",
+        "max_regression": MAX_REGRESSION,
+        "fresh": fresh,
+    }
+    failures = []
+
+    if not base_rows:
+        comparison["mode"] = "seed"
+        print("bench_compare: baseline has no results — seed mode.")
+        print("bench_compare: to arm the regression gate, commit the fresh")
+        print(f"bench_compare: results ({fresh_path}) as {base_path}.")
+    else:
+        comparison["mode"] = "gate"
+        rows = []
+        for config, b in base_rows.items():
+            f = fresh_rows.get(config)
+            if f is None:
+                failures.append(f"{config}: present in baseline, missing from fresh run")
+                continue
+            rel = (f["steps_per_sec"] - b["steps_per_sec"]) / b["steps_per_sec"]
+            rows.append(
+                {
+                    "config": config,
+                    "baseline_steps_per_sec": b["steps_per_sec"],
+                    "fresh_steps_per_sec": f["steps_per_sec"],
+                    "delta": rel,
+                    "kernel_gflops_delta": deltas(b, f, "kernel_gflops"),
+                    "collective_mbps_delta": deltas(b, f, "collective_mbps"),
+                }
+            )
+            verdict = "FAIL" if rel < -MAX_REGRESSION else "ok"
+            print(
+                f"bench_compare: {config}: {b['steps_per_sec']:.3f} -> "
+                f"{f['steps_per_sec']:.3f} steps/sec ({rel:+.1%}) {verdict}"
+            )
+            if rel < -MAX_REGRESSION:
+                failures.append(
+                    f"{config}: steps/sec regressed {rel:+.1%} "
+                    f"(limit -{MAX_REGRESSION:.0%})"
+                )
+        comparison["rows"] = rows
+
+    comparison["failures"] = failures
+    with open(out_path, "w") as fh:
+        json.dump(comparison, fh, indent=2)
+        fh.write("\n")
+    print(f"bench_compare: wrote {out_path}")
+
+    if failures:
+        for f in failures:
+            print(f"bench_compare: FAILURE: {f}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
