@@ -1,0 +1,147 @@
+//! Bench: serving throughput and latency under open-loop load —
+//! req/s and p50/p95/p99 for {mp=1, mp=2, mp=2 × 2 replicas}, the
+//! serving trajectory point (`BENCH_serving.json`).
+//!
+//! Every configuration hosts the same seeded model behind the real
+//! frontend (TCP framing, deadline-aware batching, bounded admission)
+//! and drives it with the open-loop Poisson load generator, so the
+//! measured numbers include everything a client sees: framing, queue
+//! wait, batch close, the sharded forward, and the reply path. Batch
+//! occupancy comes from the frontend's own log₂ histogram.
+//!
+//! Flags: `--requests N` (default 1000 — point it at 1000000 for the
+//! full load soak), `--rate R` req/s (default 500), `--replicas N`
+//! (default 2, third config only), `--deadline-ms D` (default 0),
+//! `--out PATH` (default `BENCH_serving.json`).
+//!
+//! The CI `serving-smoke` job runs it at reduced request counts and
+//! `tools/bench_compare.py` gates `reqs_per_sec` / `p99_ms` against
+//! the committed baseline.
+
+use std::path::PathBuf;
+
+use splitbrain::api::RunManifest;
+use splitbrain::coordinator::ClusterConfig;
+use splitbrain::serve::{run_loadgen, LoadgenConfig, ServeConfig, ServeModel, Server};
+use splitbrain::util::{Args, Table};
+
+const SEED: u64 = 123;
+
+fn fresh_model(mp: usize) -> anyhow::Result<ServeModel> {
+    let cfg = ClusterConfig { n_workers: mp.max(1), mp, seed: SEED, ..Default::default() };
+    ServeModel::from_manifest_text(&RunManifest::from_config(&cfg, 1).to_json())
+}
+
+struct BenchRow {
+    config: String,
+    report: splitbrain::serve::LoadgenReport,
+    batches: usize,
+    occupancy_json: String,
+}
+
+fn run_config(
+    config: &str,
+    mp: usize,
+    replicas: usize,
+    requests: usize,
+    rate: f64,
+    deadline_ms: u32,
+) -> anyhow::Result<BenchRow> {
+    let server = Server::start(
+        fresh_model(mp)?,
+        ServeConfig { replicas, ..ServeConfig::default() },
+    )?;
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        rate,
+        requests,
+        deadline_ms,
+        seed: SEED,
+    })?;
+    let stats = server.stats();
+    let batches = stats.batches.load(std::sync::atomic::Ordering::SeqCst);
+    let occupancy_json = stats.occupancy.lock().unwrap().to_json();
+    server.shutdown();
+    anyhow::ensure!(
+        report.wrong_shape == 0,
+        "{config}: {} wrong-shape replies — serving is broken, not slow",
+        report.wrong_shape
+    );
+    Ok(BenchRow { config: config.to_string(), report, batches, occupancy_json })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    args.check_known(&[
+        "requests", "rate", "replicas", "deadline-ms", "out", "bench", "compute-threads",
+    ])?;
+    splitbrain::runtime::set_compute_threads(args.usize_or("compute-threads", 1)?);
+    let requests = args.usize_or("requests", 1000)?;
+    let rate = args.f32_or("rate", 500.0)? as f64;
+    let replicas = args.usize_or("replicas", 2)?.max(1);
+    let deadline_ms = args.u64_or("deadline-ms", 0)? as u32;
+    let out_path = PathBuf::from(args.str_or("out", "BENCH_serving.json"));
+
+    println!("=== serving: {requests} requests per config, {rate} req/s offered ===\n");
+    let rows = vec![
+        run_config("serve_mp1", 1, 1, requests, rate, deadline_ms)?,
+        run_config("serve_mp2", 2, 1, requests, rate, deadline_ms)?,
+        run_config(
+            &format!("serve_mp2_r{replicas}"),
+            2,
+            replicas,
+            requests,
+            rate,
+            deadline_ms,
+        )?,
+    ];
+
+    let mut table = Table::new(vec![
+        "config", "replies", "rejected", "req/s", "p50 ms", "p95 ms", "p99 ms", "batches",
+        "occ avg",
+    ]);
+    for r in &rows {
+        let rep = &r.report;
+        let rejected = rep.rejected_queue + rep.rejected_deadline + rep.rejected_draining;
+        let occ = if r.batches > 0 { rep.replies as f64 / r.batches as f64 } else { 0.0 };
+        table.row(vec![
+            r.config.clone(),
+            rep.replies.to_string(),
+            rejected.to_string(),
+            format!("{:.1}", rep.reqs_per_sec),
+            format!("{:.2}", rep.p50_ms),
+            format!("{:.2}", rep.p95_ms),
+            format!("{:.2}", rep.p99_ms),
+            r.batches.to_string(),
+            format!("{occ:.1}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Emit the JSON trajectory point (hand-rolled: no serde offline).
+    // Row schema is `LoadgenReport::bench_row` — what the regression
+    // gate reads — plus the frontend-side occupancy histogram.
+    let mut json = String::from("{\n  \"bench\": \"serving\",\n");
+    json.push_str(&format!(
+        "  \"requests\": {requests},\n  \"offered_rate\": {rate},\n  \"results\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        let row = r.report.bench_row(&r.config);
+        // Graft the occupancy histogram into the row object.
+        let row = format!(
+            "{}, \"batches\": {}, \"occupancy\": {}}}",
+            &row[..row.len() - 1],
+            r.batches,
+            r.occupancy_json
+        );
+        json.push_str(&format!(
+            "    {row}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {}", out_path.display());
+    println!("serving bench OK");
+    Ok(())
+}

@@ -80,6 +80,6 @@ pub use events::{
     RunSummary, StepReport,
 };
 pub use manifest::{RunManifest, MANIFEST_VERSION};
-pub use plan::{CommEstimate, Plan};
+pub use plan::{CommEstimate, Plan, ServingEstimate};
 pub use session::{RunReport, Session};
-pub use watch::{Liveness, RunStatus, WatchDelta, Watcher};
+pub use watch::{Liveness, RunStatus, ServeStatus, WatchDelta, Watcher};

@@ -49,6 +49,25 @@ pub struct CommEstimate {
     pub avg_secs_per_boundary: f64,
 }
 
+/// Predicted forward-only (serving) profile of a planned topology —
+/// what a replica of this shape costs to host and to feed, before any
+/// serving process exists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingEstimate {
+    /// Per-rank inference memory: parameters + activation staging,
+    /// zero gradients, zero optimizer state.
+    pub memory: MemoryReport,
+    /// Fraction of the training footprint a forward-only replica
+    /// avoids.
+    pub memory_saving: f64,
+    /// Forward-only exchange bytes one member pushes per serving step.
+    pub step_bytes_per_member: u64,
+    /// Exchange bytes per served request (member volume over B).
+    pub bytes_per_request: f64,
+    /// Requests one serving step answers (k·B).
+    pub requests_per_step: usize,
+}
+
 /// A validated, fully resolved run — stage two of the
 /// `SessionBuilder → Plan → Session` lifecycle.
 ///
@@ -133,6 +152,23 @@ impl<'rt> Plan<'rt> {
             avg_bytes_per_boundary: self.schedule.avg_bytes_per_member(),
             mp_secs_per_step: self.schedule.mp_comm_secs(&self.cfg.net),
             avg_secs_per_boundary: self.schedule.avg_comm_secs(&self.cfg.net),
+        }
+    }
+
+    /// Predicted forward-only (serving) profile of this topology: the
+    /// inference memory footprint (no gradients, no optimizer state —
+    /// the Fig.-7c-style saving an inference replica banks on top of
+    /// the shard saving) and the per-request exchange volume. Compare
+    /// against the measured `serve_status.json` /
+    /// `BENCH_serving.json` numbers with `splitbrain profile`.
+    pub fn serving(&self) -> ServingEstimate {
+        let b = self.rt.manifest.batch;
+        ServingEstimate {
+            memory: MemoryReport::inference_of(&self.transformed, b),
+            memory_saving: MemoryReport::inference_saving(&self.transformed, b),
+            step_bytes_per_member: self.schedule.infer_bytes_per_member(),
+            bytes_per_request: self.schedule.infer_bytes_per_request(),
+            requests_per_step: self.cfg.mp.max(1) * b,
         }
     }
 

@@ -63,6 +63,60 @@ impl std::fmt::Display for Liveness {
     }
 }
 
+/// Snapshot of a serving frontend's `serve_status.json` — the status
+/// surface `splitbrain serve` refreshes in its run dir and `splitbrain
+/// watch` renders instead of misreading a quiet (no training events)
+/// server as stalled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeStatus {
+    /// MP group size of every replica.
+    pub mp: usize,
+    /// Replicas spawned.
+    pub replicas: usize,
+    /// Replicas still alive.
+    pub replicas_live: usize,
+    /// Predict requests accepted off sockets.
+    pub received: u64,
+    /// Logits replies sent.
+    pub replied: u64,
+    /// Typed rejections, all reasons summed.
+    pub rejected: u64,
+    /// Forward steps served.
+    pub batches: u64,
+    /// Requests dispatched and not yet replied.
+    pub inflight: u64,
+    /// Seconds since the frontend started.
+    pub uptime_secs: f64,
+    /// Replies per second of uptime.
+    pub reqs_per_sec: f64,
+}
+
+impl ServeStatus {
+    /// Parse the `serve_status.json` schema written by
+    /// [`ServeStats::to_json`](crate::serve::ServeStats::to_json).
+    pub fn parse(text: &str) -> anyhow::Result<ServeStatus> {
+        use crate::util::json::Json;
+        let doc = Json::parse(text)?;
+        let num = |k: &str| doc.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        let f = |k: &str| doc.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if doc.get("serving").and_then(|v| v.as_bool()) != Some(true) {
+            anyhow::bail!("not a serve_status.json document");
+        }
+        Ok(ServeStatus {
+            mp: num("mp") as usize,
+            replicas: num("replicas") as usize,
+            replicas_live: num("replicas_live") as usize,
+            received: num("received"),
+            replied: num("replied"),
+            rejected: num("rejected_queue") + num("rejected_deadline") + num("rejected_draining"),
+            batches: num("batches"),
+            inflight: num("inflight"),
+            uptime_secs: f("uptime_secs"),
+            reqs_per_sec: f("reqs_per_sec"),
+        })
+    }
+}
+
 /// Typed fold of a run's event log: everything a progress view needs,
 /// rebuilt incrementally (or from scratch after a resume rewrites
 /// history).
@@ -294,6 +348,15 @@ impl Watcher {
         &self.status
     }
 
+    /// The serving frontend's status surface, when a `splitbrain
+    /// serve` is (or was) pointed at this run dir: a parse of
+    /// `serve_status.json`. `None` when the file is absent or torn —
+    /// the writer publishes via rename, so torn reads are transient.
+    pub fn serve_status(&self) -> Option<ServeStatus> {
+        let text = std::fs::read_to_string(self.root.join("serve_status.json")).ok()?;
+        ServeStatus::parse(&text).ok()
+    }
+
     /// Follow the log's frontier: fold newly settled records into the
     /// status, rebuilding it from scratch when the follower detects a
     /// history rewrite (truncate-for-resume).
@@ -324,8 +387,11 @@ impl Watcher {
     ///    pid files, so all-dead means SIGKILL. A *positive* pid check
     ///    is never trusted on its own: the pid may be recycled.
     /// 3. Otherwise staleness decides. Activity = newest mtime among
-    ///    `events.log`, `run.json`, and any pid files; stale ≥ the
-    ///    dead threshold → [`Liveness::Dead`], ≥ the stall threshold →
+    ///    `events.log`, `run.json`, `serve_status.json` (a serving
+    ///    frontend appends no training events, but refreshes its
+    ///    status surface — without it an idle server would misread as
+    ///    stalled), and any pid files; stale ≥ the dead threshold →
+    ///    [`Liveness::Dead`], ≥ the stall threshold →
     ///    [`Liveness::Stalled`], else [`Liveness::Running`].
     ///
     /// On platforms with no `/proc` (pid liveness unknowable), rule 2
@@ -350,6 +416,7 @@ impl Watcher {
         };
         consider(mtime(&self.root.join("events.log")));
         consider(mtime(&self.root.join("run.json")));
+        consider(mtime(&self.root.join("serve_status.json")));
         for (_, m) in &pids {
             consider(Some(*m));
         }

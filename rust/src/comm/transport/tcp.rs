@@ -1089,6 +1089,9 @@ fn reader_loop(inner: Arc<TcpInner>, opid: usize, stream: TcpStream) {
                 st.departed[opid] = true;
             }
             Message::Hello { .. } => {} // late/duplicate handshake: ignore
+            // Serving frames share the wire format but never ride the
+            // training transport's peer links: ignore strays.
+            Message::Predict { .. } | Message::Reply { .. } | Message::Overloaded { .. } => {}
         }
         drop(st);
         inner.arrived.notify_all();

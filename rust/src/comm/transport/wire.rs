@@ -188,6 +188,13 @@ pub enum FrameKind {
     /// Clean shutdown: the peer is leaving; EOF after this is not a
     /// failure.
     Goodbye = 8,
+    /// Serving: a prediction request (image + deadline budget).
+    Predict = 9,
+    /// Serving: a successful prediction reply (raw logits).
+    Reply = 10,
+    /// Serving: typed admission rejection (queue full / deadline /
+    /// draining).
+    Overloaded = 11,
 }
 
 impl FrameKind {
@@ -201,6 +208,9 @@ impl FrameKind {
             6 => FrameKind::Sync,
             7 => FrameKind::Verdict,
             8 => FrameKind::Goodbye,
+            9 => FrameKind::Predict,
+            10 => FrameKind::Reply,
+            11 => FrameKind::Overloaded,
             other => return Err(WireError::BadKind(other)),
         })
     }
@@ -399,6 +409,35 @@ pub enum Message {
     },
     /// Clean departure.
     Goodbye,
+    /// Serving request: predict the class logits for one input image.
+    Predict {
+        /// Client-chosen request id, echoed on the reply.
+        id: u64,
+        /// Deadline budget in milliseconds from submission; a request
+        /// whose budget expires while queued is dropped before compute
+        /// with an [`Message::Overloaded`] reply (reason "deadline").
+        deadline_ms: u32,
+        /// The input image tensor (`[32, 32, 3]` f32 for CIFAR-10).
+        image: HostTensor,
+    },
+    /// Serving reply: the raw class logits for a request.
+    Reply {
+        /// The request id this answers.
+        id: u64,
+        /// Raw class logits (`[num_classes]` f32), bit-identical to the
+        /// training forward pass's internal logits.
+        logits: HostTensor,
+    },
+    /// Serving rejection: the request was not computed. Typed, so
+    /// clients distinguish backpressure from failure.
+    Overloaded {
+        /// The request id being rejected.
+        id: u64,
+        /// Rejection reason code (see the `serve::protocol` constants:
+        /// 1 = admission queue full, 2 = deadline expired before
+        /// compute, 3 = server draining).
+        reason: u32,
+    },
 }
 
 fn need(buf: &[u8], n: usize) -> Result<(), WireError> {
@@ -475,6 +514,28 @@ impl Message {
                 encode_frame(FrameKind::Verdict, &p)
             }
             Message::Goodbye => encode_frame(FrameKind::Goodbye, &[]),
+            Message::Predict { id, deadline_ms, image } => {
+                let tb = image.to_bytes();
+                // id u64 | deadline_ms u32 = 12 bytes, then the tensor.
+                let mut p = Vec::with_capacity(12 + tb.len());
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&deadline_ms.to_le_bytes());
+                p.extend_from_slice(&tb);
+                encode_frame(FrameKind::Predict, &p)
+            }
+            Message::Reply { id, logits } => {
+                let tb = logits.to_bytes();
+                let mut p = Vec::with_capacity(8 + tb.len());
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&tb);
+                encode_frame(FrameKind::Reply, &p)
+            }
+            Message::Overloaded { id, reason } => {
+                let mut p = Vec::with_capacity(12);
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&reason.to_le_bytes());
+                encode_frame(FrameKind::Overloaded, &p)
+            }
         }
     }
 
@@ -532,6 +593,22 @@ impl Message {
                 }
             }
             FrameKind::Goodbye => Message::Goodbye,
+            FrameKind::Predict => {
+                need(p, 12)?;
+                let image = HostTensor::from_bytes(&p[12..])
+                    .map_err(|e| WireError::BadPayload(format!("image: {e}")))?;
+                Message::Predict { id: u64_at(p, 0), deadline_ms: u32_at(p, 8), image }
+            }
+            FrameKind::Reply => {
+                need(p, 8)?;
+                let logits = HostTensor::from_bytes(&p[8..])
+                    .map_err(|e| WireError::BadPayload(format!("logits: {e}")))?;
+                Message::Reply { id: u64_at(p, 0), logits }
+            }
+            FrameKind::Overloaded => {
+                need(p, 12)?;
+                Message::Overloaded { id: u64_at(p, 0), reason: u32_at(p, 8) }
+            }
         })
     }
 }
@@ -598,6 +675,18 @@ mod tests {
             Message::Sync { epoch: 3, dead_mask: 0b10, fired_mask: 0b1 },
             Message::Verdict { epoch: 3, survivor_mask: 0b1101, fired_mask: 0b11 },
             Message::Goodbye,
+            // Plain finite payloads: these hit the fallback `assert_eq!`
+            // arm below (NaN bit-exactness is pinned by the Tensor case).
+            Message::Predict {
+                id: 0x1234_5678_9ABC,
+                deadline_ms: 250,
+                image: HostTensor::f32(vec![1, 2, 2], vec![0.5, -1.0, 0.25, 2.0]),
+            },
+            Message::Reply {
+                id: 0x1234_5678_9ABC,
+                logits: HostTensor::f32(vec![4], vec![0.1, -2.5, 3.5, 7.75]),
+            },
+            Message::Overloaded { id: 7, reason: 2 },
         ];
         for m in msgs {
             let bytes = m.encode();

@@ -37,9 +37,11 @@
 //! | `PostLabels{r}` | labels | — | post |
 //! | `PostActs{r}` | `act` | — | post |
 //! | `ModuloGather{r}` | `act`, labels | `assembled`, `labs` | take |
+//! | `InferGather{r}` | `act` | `assembled` | take (serving) |
 //! | `FcFwd{s,r}` | shard params, `assembled`/`h0` | `h0l`/`h1l` | — |
 //! | `ShardGather{s,r}` | `h0l`/`h1l` | `h0`/`h1` | post+take |
 //! | `HeadStep{r}` | `h1`, `labs` | loss, FC2 grads, `gh1` | — |
+//! | `HeadLogits{r}` | `h1` | `logits[r]` | — (serving) |
 //! | `ShardBwd{1,r}` | `gh1` | `g_h1l` | — (local slice) |
 //! | `FcBwd{1,r}` | `h0`, `g_h1l` | FC1 grads, `gh0` | — |
 //! | `ShardBwd{0,r}` | `gh0` | `g_h0l` | post+take (reduce) |
@@ -139,6 +141,14 @@ pub enum StepOp {
         /// Modulo round.
         round: usize,
     },
+    /// Forward-only (serving) take half of the modulo exchange:
+    /// assemble this round's FC batch from activations alone — no
+    /// labels ride the wire, a prediction request has none. Compiled
+    /// only by [`StepProgram::compile_forward`]; always scheme B/K.
+    InferGather {
+        /// Modulo round.
+        round: usize,
+    },
     /// Sharded FC forward (`fc{seg}_fwd_k{K}` artifact).
     FcFwd {
         /// Sharded FC index (0 or 1).
@@ -157,6 +167,15 @@ pub enum StepOp {
     },
     /// Replicated head: loss + FC2 grads + the full `g_h1`.
     HeadStep {
+        /// Modulo round.
+        round: usize,
+    },
+    /// Forward-only (serving) replicated head: raw logits for this
+    /// round's assembled batch, no labels, no loss, no gradients. The
+    /// `head_logits` artifact is bit-identical to the logit computation
+    /// inside every training-side head. Compiled only by
+    /// [`StepProgram::compile_forward`].
+    HeadLogits {
         /// Modulo round.
         round: usize,
     },
@@ -314,6 +333,40 @@ impl StepProgram {
         StepProgram { ops, mid, end, rounds, overlap }
     }
 
+    /// Compile the **forward-only** per-rank program for serving: the
+    /// training step's exact forward half (conv front → modulo
+    /// activation exchange → sharded FC segments with full-width
+    /// allgathers) capped with [`StepOp::HeadLogits`] instead of the
+    /// loss head — no labels, no backward ops, no averaging. Always
+    /// scheme B/K (k rounds of B rows each; the serving group answers
+    /// k·B requests per step). Executed by the same [`exec_op`] as
+    /// training, so serving logits are bit-identical to the training
+    /// forward pass.
+    pub fn compile_forward(schedule: &StepSchedule) -> StepProgram {
+        let k = schedule.topo.mp;
+        // k=1 still runs the segmented single-round pipeline (the fused
+        // full_step path has no logits output to reply with).
+        let rounds = McastScheme::BoverK.rounds(k);
+        let mut ops = Vec::with_capacity(2 + rounds * 7);
+        ops.push(StepOp::ConvFwd);
+        for r in 0..rounds {
+            ops.push(StepOp::PostActs { round: r });
+            ops.push(StepOp::InferGather { round: r });
+            ops.push(StepOp::FcFwd { seg: 0, round: r });
+            ops.push(StepOp::ShardGather { seg: 0, round: r });
+            ops.push(StepOp::FcFwd { seg: 1, round: r });
+            ops.push(StepOp::ShardGather { seg: 1, round: r });
+            ops.push(StepOp::HeadLogits { round: r });
+        }
+        // Barrier markers keep the mp/avg span accessors well-formed;
+        // the averaging span is empty (serving never averages).
+        let mid = ops.len();
+        ops.push(StepOp::Barrier(BarrierId::Mid));
+        let end = ops.len();
+        ops.push(StepOp::Barrier(BarrierId::End));
+        StepProgram { ops, mid, end, rounds, overlap: false }
+    }
+
     /// The full op list, in execution order.
     pub fn ops(&self) -> &[StepOp] {
         &self.ops
@@ -401,6 +454,9 @@ pub(crate) struct RankState {
     gh0_partial: Option<HostTensor>,
     g_h0l: Option<HostTensor>,
     gbatch_partial: Option<HostTensor>,
+    /// Per-round `[B, num_classes]` logits appended by
+    /// [`StepOp::HeadLogits`] (forward-only programs; empty otherwise).
+    logits: Vec<HostTensor>,
 }
 
 impl RankState {
@@ -461,11 +517,20 @@ impl RankState {
             gh0_partial: None,
             g_h0l: None,
             gbatch_partial: None,
+            logits: Vec::new(),
         }
     }
 
     fn plans(&self) -> &GroupPlans {
         self.plans.as_ref().expect("segmented program op on the fused mp=1 path")
+    }
+
+    /// Drain the per-round serving logits accumulated by
+    /// [`StepOp::HeadLogits`], leaving the state ready for the next
+    /// forward-only step. Round r's tensor holds the assembled batch
+    /// [r·size, (r+1)·size) of every member (B/K assembly order).
+    pub(crate) fn take_logits(&mut self) -> Vec<HostTensor> {
+        std::mem::take(&mut self.logits)
     }
 }
 
@@ -505,6 +570,11 @@ fn op_span(op: StepOp) -> Option<(OpKind, u32, u32)> {
         StepOp::PostLabels { round } => Some((OpKind::PostLabels, round as u32, 0)),
         StepOp::PostActs { round } => Some((OpKind::PostActs, round as u32, 0)),
         StepOp::ModuloGather { round } => Some((OpKind::ModuloGather, round as u32, 0)),
+        // Serving ops reuse the training kinds so the metrics.json /
+        // trace schema stays closed (a serving InferGather is the take
+        // half of a ModuloGather; HeadLogits is the head matmul).
+        StepOp::InferGather { round } => Some((OpKind::ModuloGather, round as u32, 0)),
+        StepOp::HeadLogits { round } => Some((OpKind::HeadStep, round as u32, 0)),
         StepOp::FcFwd { seg, round } => Some((OpKind::FcFwd, round as u32, seg as u32)),
         StepOp::ShardGather { seg, round } => Some((OpKind::ShardGather, round as u32, seg as u32)),
         StepOp::HeadStep { round } => Some((OpKind::HeadStep, round as u32, 0)),
@@ -646,6 +716,18 @@ fn exec_op_inner(
             st.labs = Some(labs);
             Ok(())
         }
+        StepOp::InferGather { round } => {
+            // Serving take: activations only — no labels ride a
+            // forward-only step. Same tag lane as ModuloGather's act
+            // half, so the wire schedule matches training's.
+            let assembled = {
+                let p = st.plans();
+                let act = st.act.as_ref().expect("ConvFwd precedes InferGather");
+                p.modulo.gather_fwd_rank(fabric, st.gi, act, round, Tag::new(1, round, st.gid))?
+            };
+            st.assembled = Some(assembled);
+            Ok(())
+        }
         StepOp::FcFwd { seg, round: _ } => {
             let out = {
                 let p = st.plans();
@@ -713,6 +795,25 @@ fn exec_op_inner(
             w.loss_acc += loss;
             w.accumulate_fc_grads(&[(4, g4), (5, g5)]);
             st.gh1_full = Some(gh1);
+            Ok(())
+        }
+        StepOp::HeadLogits { round: _ } => {
+            let out = {
+                let h1 = st.h1.as_ref().expect("ShardGather{1} precedes HeadLogits");
+                let t = Timer::start();
+                let out = ctx
+                    .rt
+                    .run(
+                        "head_logits",
+                        &[w.fc_params[4].clone(), w.fc_params[5].clone(), h1.clone()],
+                    )?
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("head_logits returned no output"))?;
+                w.compute_secs += t.elapsed_secs();
+                out
+            };
+            st.logits.push(out);
             Ok(())
         }
         StepOp::ShardBwd { seg, round } => {
@@ -989,6 +1090,67 @@ mod tests {
         )
         .unwrap();
         StepProgram::compile(&schedule, scheme, false, overlap)
+    }
+
+    fn forward_program(n: usize, mp: usize) -> StepProgram {
+        let rt = RuntimeClient::native().unwrap();
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp, ..Default::default() },
+        )
+        .unwrap();
+        let topo = GmpTopology::new(n, mp).unwrap();
+        let schedule = StepSchedule::compile_with_algo(
+            &net,
+            topo,
+            &rt.manifest,
+            false,
+            McastScheme::BoverK,
+            CollectiveAlgo::Ring,
+        )
+        .unwrap();
+        StepProgram::compile_forward(&schedule)
+    }
+
+    #[test]
+    fn forward_program_shape() {
+        let p = forward_program(4, 2);
+        assert_eq!(p.rounds, 2);
+        // Forward-only: no labels, no backward, no averaging, no fused
+        // full-step — only the forward half plus the logits head.
+        for op in p.ops() {
+            assert!(
+                matches!(
+                    op,
+                    StepOp::ConvFwd
+                        | StepOp::PostActs { .. }
+                        | StepOp::InferGather { .. }
+                        | StepOp::FcFwd { .. }
+                        | StepOp::ShardGather { .. }
+                        | StepOp::HeadLogits { .. }
+                        | StepOp::Barrier(_)
+                ),
+                "unexpected op in forward program: {op:?}"
+            );
+        }
+        let count = |f: &dyn Fn(&StepOp) -> bool| p.ops().iter().filter(|&o| f(o)).count();
+        assert_eq!(count(&|o| matches!(o, StepOp::InferGather { .. })), 2);
+        assert_eq!(count(&|o| matches!(o, StepOp::HeadLogits { .. })), 2);
+        assert_eq!(count(&|o| matches!(o, StepOp::ShardGather { .. })), 4);
+        // The averaging span is empty; both barrier markers survive so
+        // the span accessors stay well-formed.
+        assert!(p.avg_span().is_empty());
+        assert_eq!(p.ops().last(), Some(&StepOp::Barrier(BarrierId::End)));
+        // mp=1 still compiles the segmented single-round pipeline (the
+        // fused path has no logits output).
+        let p1 = forward_program(2, 1);
+        assert_eq!(p1.rounds, 1);
+        assert_eq!(count(&|o| matches!(o, StepOp::FullStep)), 0);
+        assert_eq!(
+            p1.ops().iter().filter(|o| matches!(o, StepOp::HeadLogits { .. })).count(),
+            1
+        );
     }
 
     #[test]

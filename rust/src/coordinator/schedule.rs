@@ -374,6 +374,36 @@ impl StepSchedule {
     pub fn avg_bytes_per_member(&self) -> u64 {
         self.avg_phases.iter().map(|p| p.times * p.per_member.bytes_out).sum()
     }
+
+    /// Forward-only (serving) bytes a single member pushes per step:
+    /// the modulo activation exchange *without* its label column (no
+    /// label rides a forward-only step) plus the shard-allgather
+    /// forward phases. Serving always runs scheme B/K; the shard term
+    /// reuses the compiled phases because their per-step total is
+    /// scheme-invariant (k rounds of B rows ≡ one round of B·K rows).
+    /// Zero for k = 1 — a single-member group exchanges nothing.
+    pub fn infer_bytes_per_member(&self) -> u64 {
+        let k = self.topo.mp;
+        if k <= 1 {
+            return 0;
+        }
+        let size = (self.batch / k).max(1);
+        let modulo = (k * (k - 1) * size * self.boundary_width * 4) as u64;
+        let shard: u64 = self
+            .mp_phases
+            .iter()
+            .filter(|p| p.category == CommCategory::ShardFwd)
+            .map(|p| p.times * p.per_member.bytes_out)
+            .sum();
+        modulo + shard
+    }
+
+    /// Forward-only bytes per served request — the per-request network
+    /// price of sharding. One step serves k·B requests across k
+    /// members, so this is the member volume over B.
+    pub fn infer_bytes_per_request(&self) -> f64 {
+        self.infer_bytes_per_member() as f64 / self.batch.max(1) as f64
+    }
 }
 
 #[cfg(test)]
@@ -415,6 +445,30 @@ mod tests {
         .unwrap();
         let topo = GmpTopology::new(n, mp).unwrap();
         StepSchedule::compile(&net, topo, &manifest(batch, &[1, 2, 4, 8])).unwrap()
+    }
+
+    #[test]
+    fn infer_volume_is_forward_only() {
+        let s = schedule(2, 2, 32);
+        let total = |cat: CommCategory| -> u64 {
+            s.mp_phases
+                .iter()
+                .filter(|p| p.category == cat)
+                .map(|p| p.times * p.per_member.bytes_out)
+                .sum()
+        };
+        // Serving volume = modulo fwd minus the label column, plus the
+        // shard allgathers; no backward phases.
+        let label_bytes = 2 * ((32 / 2) * 4) as u64; // rounds × size × 4
+        assert_eq!(
+            s.infer_bytes_per_member(),
+            total(CommCategory::ModuloFwd) - label_bytes + total(CommCategory::ShardFwd)
+        );
+        assert!(s.infer_bytes_per_member() < s.mp_bytes_per_member());
+        let per_req = s.infer_bytes_per_request();
+        assert!((per_req * 32.0 - s.infer_bytes_per_member() as f64).abs() < 1e-6);
+        // A single-member group exchanges nothing.
+        assert_eq!(schedule(2, 1, 32).infer_bytes_per_member(), 0);
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! | [`coordinator`] | GMP topology, modulo/shard plans, step schedule, the compiled step-program IR + one executor for every engine (with overlapped execution), model averaging, threaded + sequential cluster engines, multi-process rank driver, elastic shrink-and-continue recovery |
 //! | [`runtime`] | artifact manifest + native segment executor, host tensors |
 //! | [`store`] | durable event-sourced runs: append-only CRC-framed event log, fingerprinted checkpoint artifacts, the `--run-dir` layout with kill-resume and branching, a tail-follower for live observation |
+//! | [`serve`] | sharded batched inference over the fabric: forward-only step programs, deadline-aware admission with typed overload rejections, replica balancing with failure drain, and the open-loop load generator |
 //! | [`obs`] | per-op tracing: span ring buffers behind the shared step-program executor, `metrics.json` snapshots, Chrome-trace export, measured-vs-predicted cost-model report |
 //! | [`data`] | CIFAR-10 loader + synthetic generator, batching |
 //! | [`train`] | SGD, trainer loop, metrics, memory accounting |
@@ -63,6 +64,7 @@ pub mod data;
 pub mod model;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod train;
 pub mod util;

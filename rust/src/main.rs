@@ -22,6 +22,12 @@
 //! splitbrain watch    <run-dir> [--follow|--once] [--interval-ms 500] [--plain]
 //!                     [--stall-secs N] [--dead-secs N] # liveness thresholds
 //!                                       # live progress view over a durable run
+//! splitbrain serve    --run-dir DIR [--resume-step K] | --manifest run.json
+//!                     [--port 7070] [--replicas 1] [--max-batch B] [--max-delay-ms 5]
+//!                     [--queue-depth 256]   # sharded batched inference frontend
+//! splitbrain loadgen  [--addr 127.0.0.1:7070] [--rate 500] [--requests 1000]
+//!                     [--deadline-ms 0] [--seed 7] [--out BENCH_serving.json]
+//!                                       # open-loop Poisson load + latency report
 //! ```
 //!
 //! Every configuration flag is a [`SessionBuilder`] setter; the flags
@@ -81,12 +87,14 @@ fn main() -> Result<()> {
         Some("profile") => cmd_profile(&args),
         Some("plan") => cmd_plan(&args),
         Some("watch") => cmd_watch(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some(other) => bail!(
-            "unknown subcommand {other:?} (try: train, launch, worker, sweep, inspect, memory, profile, plan, watch)"
+            "unknown subcommand {other:?} (try: train, launch, worker, sweep, inspect, memory, profile, plan, watch, serve, loadgen)"
         ),
         None => {
             eprintln!(
-                "usage: splitbrain <train|launch|worker|sweep|inspect|memory|profile|plan|watch> [--flags]"
+                "usage: splitbrain <train|launch|worker|sweep|inspect|memory|profile|plan|watch|serve|loadgen> [--flags]"
             );
             Ok(())
         }
@@ -737,13 +745,54 @@ fn cmd_profile_run_dir(args: &Args, dir: &std::path::Path) -> Result<()> {
     })?;
     let rt = RuntimeClient::load(args.str_or("artifacts", "artifacts"))?;
     let plan = SessionBuilder::from_manifest(&manifest_text)?.validate(&rt)?;
+    // Serving surface first (`splitbrain serve --run-dir` refreshes
+    // serve_status.json here): the plan's forward-only predictions
+    // against the frontend's measured counters.
+    let serving = std::fs::read_to_string(dir.join("serve_status.json"))
+        .ok()
+        .and_then(|t| splitbrain::api::ServeStatus::parse(&t).ok());
+    if let Some(s) = &serving {
+        let est = plan.serving();
+        println!("=== serving: predicted vs measured ===");
+        println!(
+            "predicted: {:.2} MB/rank inference memory ({:.1}% below training), \
+             {} exchange bytes/step/member ({:.1} bytes/request), {} requests/step",
+            est.memory.total_mb(),
+            est.memory_saving * 100.0,
+            est.step_bytes_per_member,
+            est.bytes_per_request,
+            est.requests_per_step,
+        );
+        let per_batch =
+            if s.batches > 0 { s.replied as f64 / s.batches as f64 } else { 0.0 };
+        println!(
+            "measured:  {:.1} req/s over {:.0}s — {} replied / {} received, \
+             {:.1} requests/batch, {}/{} replicas live (mp={})",
+            s.reqs_per_sec,
+            s.uptime_secs,
+            s.replied,
+            s.received,
+            per_batch,
+            s.replicas_live,
+            s.replicas,
+            s.mp
+        );
+    }
     let metrics_path = dir.join("metrics.json");
-    let metrics_text = std::fs::read_to_string(&metrics_path).with_context(|| {
-        format!(
-            "reading {} — produce it with `--trace` (launch merges it once the workers exit)",
-            metrics_path.display()
-        )
-    })?;
+    let metrics_text = match std::fs::read_to_string(&metrics_path) {
+        Ok(t) => t,
+        // A serve run dir carries a status surface but no trace — the
+        // serving comparison above is the whole report.
+        Err(_) if serving.is_some() => return Ok(()),
+        Err(e) => {
+            return Err(anyhow::Error::from(e)).with_context(|| {
+                format!(
+                    "reading {} — produce it with `--trace` (launch merges it once the workers exit)",
+                    metrics_path.display()
+                )
+            })
+        }
+    };
     let metrics = Metrics::parse(&metrics_text)?;
     let report = profile(plan.schedule(), &plan.cluster_config().net, &metrics);
     print!("{}", report.render());
@@ -899,6 +948,118 @@ fn cmd_watch(args: &Args) -> Result<()> {
     }
 }
 
+/// `splitbrain serve`: host a trained run (or a fresh model from a
+/// manifest) for sharded batched inference. Every replica is one
+/// k-rank MP group running the forward-only step program — the same
+/// compiled schedule, the same executor, the same kernels as training,
+/// so served logits are bit-identical to `Session::evaluate()`. The
+/// process serves until killed; with `--run-dir` it refreshes
+/// `serve_status.json` there for `splitbrain watch` / `profile`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use splitbrain::serve::{ServeConfig, ServeModel, Server};
+    use splitbrain::store::RunDir;
+    // Deliberately not `known_flags(..)`: the run configuration comes
+    // from the manifest/run dir, never from serve flags.
+    args.check_known(&[
+        "manifest", "run-dir", "resume-step", "port", "replicas", "max-batch", "max-delay-ms",
+        "queue-depth", "kill-replica-after", "artifacts", "compute-threads",
+    ])?;
+    let run_dir = args.str_or("run-dir", "");
+    let manifest = args.str_or("manifest", "");
+    let mut model = match (run_dir, manifest) {
+        ("", "") => bail!(
+            "serve needs --run-dir DIR (newest valid checkpoint) or --manifest run.json \
+             (fresh seeded weights, for smoke tests)"
+        ),
+        (_, m) if !run_dir.is_empty() && !m.is_empty() => {
+            bail!("--run-dir and --manifest are mutually exclusive")
+        }
+        (dir, "") => {
+            let resume = match args.has("resume-step") {
+                true => Some(args.usize_or("resume-step", 0)?),
+                false => None,
+            };
+            ServeModel::from_run_dir(dir, resume)?
+        }
+        ("", path) => {
+            if args.has("resume-step") {
+                bail!("--resume-step requires --run-dir");
+            }
+            ServeModel::from_manifest_file(path)?
+        }
+        _ => unreachable!("all (run_dir, manifest) cases covered"),
+    };
+    if args.has("artifacts") {
+        model = model.with_artifacts(args.str_or("artifacts", "artifacts"));
+    }
+    let cfg = ServeConfig {
+        addr: format!("127.0.0.1:{}", args.u64_or("port", 7070)?),
+        replicas: args.usize_or("replicas", 1)?.max(1),
+        // 0 = "whatever one serving step holds": the frontend clamps to
+        // the k·B step capacity.
+        max_batch: match args.usize_or("max-batch", 0)? {
+            0 => usize::MAX,
+            n => n,
+        },
+        max_delay_ms: args.u64_or("max-delay-ms", 5)?,
+        queue_depth: args.usize_or("queue-depth", 256)?,
+        status_path: match run_dir {
+            "" => None,
+            d => Some(RunDir::open(d)?.serve_status_path()),
+        },
+        kill_replica_after: match args.has("kill-replica-after") {
+            true => Some(args.usize_or("kill-replica-after", 0)?),
+            false => None,
+        },
+    };
+    let (mp, step, replicas) = (model.mp(), model.step, cfg.replicas);
+    let server = Server::start(model, cfg)?;
+    println!(
+        "serving on {} — {replicas} replica(s) x mp={mp}, model step {step} (Ctrl-C to stop)",
+        server.addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `splitbrain loadgen`: open-loop Poisson load against a serving
+/// frontend. Exits nonzero if any reply carried wrong-shape logits or
+/// no reply arrived at all — the CI smoke gate rides the exit code.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use splitbrain::serve::{run_loadgen, LoadgenConfig};
+    args.check_known(&[
+        "addr", "rate", "requests", "deadline-ms", "seed", "out", "config", "compute-threads",
+    ])?;
+    let cfg = LoadgenConfig {
+        addr: args.str_or("addr", "127.0.0.1:7070").to_string(),
+        rate: args.f32_or("rate", 500.0)? as f64,
+        requests: args.usize_or("requests", 1000)?,
+        deadline_ms: args.u64_or("deadline-ms", 0)? as u32,
+        seed: args.u64_or("seed", 7)?,
+    };
+    let report = run_loadgen(&cfg)?;
+    println!("{}", report.render());
+    match args.str_or("out", "") {
+        "" => {}
+        path => {
+            let doc = format!(
+                "{{\"bench\": \"serving\", \"results\": [\n{}\n]}}\n",
+                report.bench_row(args.str_or("config", "serve"))
+            );
+            std::fs::write(path, doc).with_context(|| format!("writing {path}"))?;
+            println!("wrote {path}");
+        }
+    }
+    if report.wrong_shape > 0 {
+        bail!("{} reply(ies) carried wrong-shape logits", report.wrong_shape);
+    }
+    if report.replies == 0 {
+        bail!("no replies received (sent {}, all rejected or dropped)", report.sent);
+    }
+    Ok(())
+}
+
 /// One plain-mode progress line — append-only, diff-friendly, stable
 /// enough for CI to grep.
 fn progress_line(watcher: &splitbrain::api::Watcher, live: splitbrain::api::Liveness, frontier: u64) -> String {
@@ -915,8 +1076,17 @@ fn progress_line(watcher: &splitbrain::api::Watcher, live: splitbrain::api::Live
         Some(s) => s.to_string(),
         None => "-".to_string(),
     };
+    // Serving frontends only (serve_status.json present) — empty for
+    // every training dir, so existing CI greps see identical lines.
+    let serving = match watcher.serve_status() {
+        Some(s) => format!(
+            "  serving {:.1} req/s {}/{} live",
+            s.reqs_per_sec, s.replicas_live, s.replicas
+        ),
+        None => String::new(),
+    };
     format!(
-        "[watch] step {steps}  loss {loss}  workers {} mp={}  ckpt {ckpt}  frontier {frontier}B  {live}",
+        "[watch] step {steps}  loss {loss}  workers {} mp={}  ckpt {ckpt}  frontier {frontier}B  {live}{serving}",
         st.n_workers, st.mp
     )
 }
@@ -978,6 +1148,22 @@ fn render_status(dir: &str, watcher: &splitbrain::api::Watcher) -> String {
         if !phases.is_empty() {
             let _ = writeln!(out, "phases:  {}", phases.join(", "));
         }
+    }
+    // Serving frontends only (serve_status.json present) — a server
+    // appends no training events, so without this block an idle one
+    // would render as a silent stalled run. The golden fixture is a
+    // training dir, so the pinned bytes are intact.
+    if let Some(s) = watcher.serve_status() {
+        let _ = writeln!(
+            out,
+            "serving: {:.1} req/s  {} replied / {} received  {} in flight  {} rejected",
+            s.reqs_per_sec, s.replied, s.received, s.inflight, s.rejected
+        );
+        let _ = writeln!(
+            out,
+            "replicas: {}/{} live (mp={}), {} batches served, up {:.0}s",
+            s.replicas_live, s.replicas, s.mp, s.batches, s.uptime_secs
+        );
     }
     let lost = if st.lost_ranks.is_empty() {
         String::new()

@@ -208,6 +208,14 @@ pub fn native_manifest() -> Result<Manifest> {
     head(&mut s, "head_step", b, true);
     head(&mut s, "head_fwd", b, false);
 
+    // head_logits: the serving head — raw logits only, no labels, no
+    // loss. Same matmul + bias as `head_core`, so the forward-only
+    // serving program is bit-identical to the training-side heads.
+    s.push_str("artifact head_logits file=<native> sha256=native\n");
+    s.push_str(&format!(
+        "in fw2 float32 1024,{NUM_CLASSES}\nin fb2 float32 {NUM_CLASSES}\nin h1 float32 {b},1024\nout logits float32 {b},{NUM_CLASSES}\nend\n"
+    ));
+
     // FC shard segments per group size (and BK variants for k > 1).
     let fc_seg = |s: &mut String, idx: usize, k: usize, rows: usize, suffix: &str| {
         let (din, full) = FC_DIMS[idx];
@@ -250,6 +258,7 @@ pub fn execute(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         "full_step" => full_step(&inputs[..14], &inputs[14..20], &inputs[20], &inputs[21]),
         "full_eval" => full_eval(&inputs[..14], &inputs[14..20], &inputs[20], &inputs[21]),
         "head_fwd" => head_fwd(&inputs[0], &inputs[1], &inputs[2], &inputs[3]),
+        "head_logits" => head_logits(&inputs[0], &inputs[1], &inputs[2]),
         n if n == "head_step" || n.starts_with("head_step_bk") => {
             head_step(&inputs[0], &inputs[1], &inputs[2], &inputs[3])
         }
@@ -594,6 +603,18 @@ fn head_fwd(
         HostTensor::f32(vec![], vec![loss]),
         HostTensor::i32(vec![], vec![correct]),
     ])
+}
+
+/// Serving head: raw logits (`h1 @ w2 + b2`), no labels, no loss. The
+/// logit computation is [`head_core`]'s first two lines verbatim, so
+/// the forward-only serving program's replies are bit-identical to the
+/// logits every training-side head computes internally.
+fn head_logits(w2: &HostTensor, b2: &HostTensor, h1: &HostTensor) -> Result<Vec<HostTensor>> {
+    let rows = h1.shape[0];
+    let nc = w2.shape[1];
+    let mut logits = matmul(h1.as_f32(), w2.as_f32(), rows, w2.shape[0], nc);
+    add_bias(&mut logits, b2.as_f32(), rows, nc);
+    Ok(vec![HostTensor::f32(vec![rows, nc], logits)])
 }
 
 /// `argmax(logits, axis=-1) == label` count; first maximum wins on

@@ -1,0 +1,684 @@
+//! The serving engine: a checkpointed model plus replica groups that
+//! run the forward-only step program over the fabric.
+//!
+//! A **replica** is one MP group of `k` ranks — the serving analogue of
+//! a training DP group. Rank 0 is the *leader*: it owns the job queue,
+//! splits each admitted batch into per-member row slices, posts them
+//! over the in-process fabric on the serving control lane, runs its own
+//! row slice through [`StepProgram::compile_forward`]'s op sequence,
+//! and replies with per-request logits. Ranks 1..k are *members*: they
+//! park on the control mailbox and execute the identical op sequence on
+//! their slice, so every exchange (`InferGather`, `ShardGather`) is the
+//! same `exec_op` arithmetic the training forward pass runs —
+//! bit-identical logits by construction, which `tests/serve_parity.rs`
+//! pins against [`Session::evaluate`].
+//!
+//! Failure semantics: any fabric error (a typed
+//! [`PeerLost`](crate::comm::fault::PeerLost) from a take timeout, a
+//! [`StepAborted`](crate::comm::fault::StepAborted) teardown) kills the
+//! whole replica — the leader marks itself dead, requeues the in-flight
+//! job so the frontend re-dispatches it to a surviving replica, and
+//! shuts its members down. Idle replicas stay alive because the leader
+//! posts [`protocol::OP_HEARTBEAT`] keep-alives whenever no work
+//! arrives within a quarter of the take timeout (each fabric take
+//! computes a fresh deadline, so a heartbeat interval below the timeout
+//! keeps parked members from presuming the leader lost).
+//!
+//! [`Session::evaluate`]: crate::api::Session
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::api::{RunManifest, SessionBuilder};
+use crate::comm::fabric::Fabric;
+use crate::comm::transport::wire::Message;
+use crate::comm::transport::Transport;
+use crate::coordinator::cluster::plan_topology;
+use crate::coordinator::program::{run_rank_span, ExecCtx, RankHooks, RankState};
+use crate::coordinator::worker::{init_full_params, Worker};
+use crate::coordinator::{ClusterConfig, McastScheme, StepProgram};
+use crate::data::Batch;
+use crate::runtime::{HostTensor, RuntimeClient};
+use crate::serve::frontend::ServeStats;
+use crate::serve::protocol::{
+    ctrl_tag, done_tag, IMG_FLOATS, OP_HEARTBEAT, OP_SHUTDOWN, OP_WORK,
+};
+use crate::store::{load_artifact, RunDir};
+use crate::Result;
+
+/// A model loaded for serving: the cluster configuration it was trained
+/// under plus the full (unsharded) parameter set every replica shards
+/// on spawn — exactly how [`Cluster`](crate::coordinator::Cluster)
+/// builds its workers, so the served network is the trained network.
+#[derive(Clone)]
+pub struct ServeModel {
+    /// Cluster configuration. The scheme is forced to B/K: the fixed
+    /// per-rank artifacts serve `B` rows per round, and serving has no
+    /// reason to stage the aggregated B·K batch.
+    pub cfg: ClusterConfig,
+    /// Training steps the loaded checkpoint captures (0 = fresh init).
+    pub step: usize,
+    /// 14 full conv tensors (w,b × 7), checkpoint order.
+    pub conv: Vec<HostTensor>,
+    /// 6 full FC tensors (fw0,fb0,fw1,fb1,fw2,fb2), checkpoint order.
+    pub fc: Vec<HostTensor>,
+    /// Artifact directory for the runtime; `None` = the native backend.
+    pub artifacts: Option<String>,
+}
+
+impl ServeModel {
+    /// Serve a fresh (untrained) model from a run-manifest JSON text —
+    /// the smoke path when no checkpoint exists yet.
+    pub fn from_manifest_text(text: &str) -> Result<ServeModel> {
+        let cfg = SessionBuilder::from_manifest(text)?.cluster_config()?;
+        Ok(Self::fresh(cfg))
+    }
+
+    /// [`from_manifest_text`](Self::from_manifest_text), reading the
+    /// JSON from a file.
+    pub fn from_manifest_file(path: impl AsRef<Path>) -> Result<ServeModel> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::from_manifest_text(&text)
+    }
+
+    /// Serve the model persisted in a run directory: the run's own
+    /// manifest fixes the configuration, and the newest checkpoint
+    /// whose fingerprint matches it supplies the weights
+    /// (`resume_step` pins a specific checkpoint instead).
+    pub fn from_run_dir(dir: impl AsRef<Path>, resume_step: Option<usize>) -> Result<ServeModel> {
+        let rd = RunDir::open(dir.as_ref())?;
+        let text = rd.manifest_json()?;
+        let manifest = RunManifest::parse(&text)?;
+        let mut cfg = SessionBuilder::from_manifest(&text)?.cluster_config()?;
+        cfg.scheme = McastScheme::BoverK;
+        let art = match resume_step {
+            Some(step) => {
+                let art = load_artifact(rd.checkpoint_path(step))
+                    .with_context(|| format!("loading checkpoint for step {step}"))?;
+                if art.manifest_fingerprint != manifest.fingerprint() {
+                    bail!(
+                        "checkpoint at step {step} belongs to a different manifest \
+                         (fingerprint {:016x} != {:016x})",
+                        art.manifest_fingerprint,
+                        manifest.fingerprint()
+                    );
+                }
+                art
+            }
+            None => rd
+                .latest_valid_checkpoint(manifest.fingerprint())?
+                .ok_or_else(|| {
+                    anyhow!(
+                        "run dir {} has no valid checkpoint matching its manifest — \
+                         train first, or serve the manifest for a fresh model",
+                        rd.root().display()
+                    )
+                })?,
+        };
+        let global = art.state.global;
+        if global.len() != 20 {
+            bail!(
+                "checkpoint global state has {} tensors (expected 14 conv + 6 fc)",
+                global.len()
+            );
+        }
+        let mut tensors: Vec<HostTensor> = global.into_iter().map(|(_, t)| t).collect();
+        let fc = tensors.split_off(14);
+        Ok(ServeModel { cfg, step: art.step, conv: tensors, fc, artifacts: None })
+    }
+
+    fn fresh(mut cfg: ClusterConfig) -> ServeModel {
+        cfg.scheme = McastScheme::BoverK;
+        let (conv, fc) = init_full_params(cfg.seed);
+        ServeModel { cfg, step: 0, conv, fc, artifacts: None }
+    }
+
+    /// Use AOT artifacts from `dir` instead of the native backend.
+    pub fn with_artifacts(mut self, dir: impl Into<String>) -> ServeModel {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// MP group size `k` — the rank count of every replica.
+    pub fn mp(&self) -> usize {
+        self.cfg.mp.max(1)
+    }
+
+    pub(crate) fn runtime(&self) -> Result<RuntimeClient> {
+        match &self.artifacts {
+            Some(dir) => RuntimeClient::load(dir),
+            None => RuntimeClient::native(),
+        }
+    }
+
+    /// Per-step request capacity `k·B`: each of the `k` members
+    /// contributes one artifact batch of `B` rows to the forward step.
+    pub fn capacity(&self) -> Result<usize> {
+        let rt = self.runtime()?;
+        Ok(self.mp() * rt.manifest.batch)
+    }
+}
+
+/// One admitted request riding through the engine.
+pub struct InferRequest {
+    /// Client-assigned request id, echoed verbatim on the reply.
+    pub id: u64,
+    /// Absolute expiry; the batcher drops expired requests *before*
+    /// dispatch with [`REASON_DEADLINE`](super::protocol::REASON_DEADLINE).
+    pub deadline: Option<Instant>,
+    /// `[32, 32, 3]` f32 image.
+    pub image: HostTensor,
+    /// Where the reply (or rejection) goes — the owning connection's
+    /// writer, or a test harness collector.
+    pub reply: Sender<Message>,
+}
+
+/// Handle to one spawned replica: a `k`-rank forward-only group on its
+/// own fabric, fed jobs through a bounded channel (the per-replica
+/// in-flight cap the round-robin balancer respects).
+pub struct Replica {
+    /// Replica index (0-based), for status and logs.
+    pub id: usize,
+    job_tx: Option<SyncSender<Vec<InferRequest>>>,
+    dead: Arc<AtomicBool>,
+    batches: Arc<AtomicUsize>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Replica {
+    /// Spawn the replica's runner thread. Jobs that were in flight when
+    /// the replica dies come back through `requeue`; `kill_after`
+    /// (dev/CI fault hook) kills the replica after it has served that
+    /// many batches, exercising the drain path under load.
+    pub fn spawn(
+        model: Arc<ServeModel>,
+        id: usize,
+        requeue: Sender<Vec<InferRequest>>,
+        kill_after: Option<usize>,
+        stats: Arc<ServeStats>,
+    ) -> Replica {
+        let (job_tx, job_rx) = sync_channel::<Vec<InferRequest>>(1);
+        let dead = Arc::new(AtomicBool::new(false));
+        let batches = Arc::new(AtomicUsize::new(0));
+        let handle = {
+            let dead = dead.clone();
+            let batches = batches.clone();
+            std::thread::spawn(move || {
+                if let Err(e) =
+                    replica_loop(&model, id, job_rx, &requeue, kill_after, &batches, &stats)
+                {
+                    eprintln!("splitbrain serve: replica {id} down: {e:#}");
+                }
+                dead.store(true, Ordering::SeqCst);
+            })
+        };
+        Replica { id, job_tx: Some(job_tx), dead, batches, handle: Some(handle) }
+    }
+
+    /// Submit a job without blocking. `Err` hands the job back when the
+    /// replica is dead or its in-flight slot is full, so the caller can
+    /// try the next replica.
+    pub fn try_submit(&self, job: Vec<InferRequest>) -> std::result::Result<(), Vec<InferRequest>> {
+        if self.is_dead() {
+            return Err(job);
+        }
+        match &self.job_tx {
+            Some(tx) => match tx.try_send(job) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => Err(job),
+            },
+            None => Err(job),
+        }
+    }
+
+    /// True once the replica has failed or shut down; the balancer
+    /// skips dead replicas and the status surface counts live ones.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Shared liveness flag, for status threads that outlive `&self`.
+    pub fn dead_flag(&self) -> Arc<AtomicBool> {
+        self.dead.clone()
+    }
+
+    /// Batches served so far.
+    pub fn batches(&self) -> usize {
+        self.batches.load(Ordering::SeqCst)
+    }
+
+    /// Drain and join: closes the job channel (the leader then shuts
+    /// its members down) and waits for the runner to exit.
+    pub fn shutdown(&mut self) {
+        self.job_tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Replica {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Everything the leader and members share for the replica's lifetime.
+struct ReplicaShared<'a> {
+    rt: &'a RuntimeClient,
+    fabric: &'a Fabric,
+    topo: &'a crate::coordinator::GmpTopology,
+    schedule: &'a crate::coordinator::StepSchedule,
+    program: &'a StepProgram,
+    cfg: &'a ClusterConfig,
+    b: usize,
+}
+
+impl ReplicaShared<'_> {
+    /// The per-step execution context — serving always runs scheme B/K,
+    /// never averages, and traces nothing (the frontend owns metrics).
+    fn ctx(&self, step: usize) -> ExecCtx<'_> {
+        ExecCtx {
+            rt: self.rt,
+            transport: self.fabric as &dyn Transport,
+            topo: self.topo,
+            schedule: self.schedule,
+            scheme: McastScheme::BoverK,
+            algo: self.cfg.collectives,
+            batch: self.b,
+            averaging: false,
+            step,
+            tracer: None,
+        }
+    }
+
+    /// Wrap one member's row slice as a step batch. Labels are zeros:
+    /// no label rides a forward-only step (and the exchange ships
+    /// activations only), but [`RankState`] wants a label column to
+    /// exist.
+    fn slice_batch(&self, rows: Vec<f32>) -> Batch {
+        Batch {
+            images: HostTensor::f32(vec![self.b, 32, 32, 3], rows),
+            labels: HostTensor::i32(vec![self.b], vec![0; self.b]),
+        }
+    }
+}
+
+fn replica_loop(
+    model: &ServeModel,
+    id: usize,
+    job_rx: Receiver<Vec<InferRequest>>,
+    requeue: &Sender<Vec<InferRequest>>,
+    kill_after: Option<usize>,
+    batches: &AtomicUsize,
+    stats: &ServeStats,
+) -> Result<()> {
+    let rt = model.runtime()?;
+    let cfg = &model.cfg;
+    let k = model.mp();
+    let (topo, _net, schedule) = plan_topology(&rt, cfg, k, k)?;
+    let b = schedule.batch;
+    let boundary = schedule.boundary_width.max(1);
+    let program = StepProgram::compile_forward(&schedule);
+    let fabric = Fabric::new(k).with_timeout_ms(cfg.take_timeout_ms);
+    let mut workers: Vec<Worker> = (0..k)
+        .map(|r| {
+            Worker::new(r, &topo, &model.conv, &model.fc, b, boundary, cfg.lr, cfg.momentum, cfg.clip_norm)
+        })
+        .collect::<Result<_>>()?;
+    let shared = ReplicaShared {
+        rt: &rt,
+        fabric: &fabric,
+        topo: &topo,
+        schedule: &schedule,
+        program: &program,
+        cfg,
+        b,
+    };
+    let heartbeat = Duration::from_millis((cfg.take_timeout_ms / 4).max(1));
+
+    let members = workers.split_off(1);
+    let mut leader = workers.pop().expect("rank 0 worker");
+    std::thread::scope(|s| {
+        for (i, mut w) in members.into_iter().enumerate() {
+            let rank = i + 1;
+            let shared = &shared;
+            s.spawn(move || {
+                // A member error (PeerLost on a gather, step abort) is
+                // the leader's to report: it sees the same failure on
+                // its own take and owns the requeue.
+                let _ = member_loop(rank, &mut w, shared);
+            });
+        }
+        leader_loop(&mut leader, &shared, id, job_rx, requeue, kill_after, batches, stats)
+    })
+}
+
+fn member_loop(rank: usize, w: &mut Worker, shared: &ReplicaShared<'_>) -> Result<()> {
+    let hooks = RankHooks::none();
+    loop {
+        let msg = shared.fabric.take_blocking(rank, 0, ctrl_tag())?;
+        let op = msg.first().copied().unwrap_or(OP_SHUTDOWN);
+        if op == OP_SHUTDOWN {
+            return Ok(());
+        }
+        if op == OP_HEARTBEAT {
+            continue;
+        }
+        let step = msg[1] as usize;
+        let batch = shared.slice_batch(msg[2..].to_vec());
+        let ctx = shared.ctx(step);
+        let mut st = RankState::new(rank, shared.program, &batch, &ctx);
+        run_rank_span(shared.program.mp_span(), rank, w, &batch, &mut st, &ctx, &hooks)?;
+        shared.fabric.post(rank, 0, done_tag(), vec![1.0]);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn leader_loop(
+    w: &mut Worker,
+    shared: &ReplicaShared<'_>,
+    id: usize,
+    job_rx: Receiver<Vec<InferRequest>>,
+    requeue: &Sender<Vec<InferRequest>>,
+    kill_after: Option<usize>,
+    batches: &AtomicUsize,
+    stats: &ServeStats,
+) -> Result<()> {
+    let k = shared.topo.mp;
+    let mut step = 0usize;
+    loop {
+        let job = match job_rx.recv_timeout(
+            Duration::from_millis((shared.cfg.take_timeout_ms / 4).max(1)),
+        ) {
+            Ok(job) => job,
+            Err(RecvTimeoutError::Timeout) => {
+                // Idle keep-alive: a fresh mailbox message renews the
+                // parked members' per-take deadlines, so an idle-but-
+                // healthy replica is never presumed lost.
+                for dst in 1..k {
+                    shared.fabric.post(0, dst, ctrl_tag(), vec![OP_HEARTBEAT]);
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                for dst in 1..k {
+                    shared.fabric.post(0, dst, ctrl_tag(), vec![OP_SHUTDOWN]);
+                }
+                return Ok(());
+            }
+        };
+        if let Some(n) = kill_after {
+            if batches.load(Ordering::SeqCst) >= n {
+                // Dev/CI fault hook: die mid-load. The in-flight job
+                // goes back to the frontend, which drains it to a
+                // surviving replica — no request is answered wrongly,
+                // it is re-served or typed-rejected.
+                stats.inflight.fetch_sub(job.len(), Ordering::SeqCst);
+                let _ = requeue.send(job);
+                for dst in 1..k {
+                    shared.fabric.post(0, dst, ctrl_tag(), vec![OP_SHUTDOWN]);
+                }
+                bail!("replica {id} killed by --kill-replica-after {n}");
+            }
+        }
+        step += 1;
+        match serve_step(w, shared, step, &job) {
+            Ok(logits) => {
+                reply_job(job, &logits, shared.b, k, stats);
+                batches.fetch_add(1, Ordering::SeqCst);
+                stats.batches.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(e) => {
+                stats.inflight.fetch_sub(job.len(), Ordering::SeqCst);
+                let _ = requeue.send(job);
+                for dst in 1..k {
+                    shared.fabric.post(0, dst, ctrl_tag(), vec![OP_SHUTDOWN]);
+                }
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// One forward step: scatter the padded super-batch, run the leader's
+/// slice, and collect the end-of-step barrier. Returns the per-round
+/// `[B, num_classes]` logits of the **assembled** batch.
+fn serve_step(
+    w: &mut Worker,
+    shared: &ReplicaShared<'_>,
+    step: usize,
+    job: &[InferRequest],
+) -> Result<Vec<HostTensor>> {
+    let k = shared.topo.mp;
+    let b = shared.b;
+    let cap = k * b;
+    debug_assert!(job.len() <= cap, "job of {} exceeds step capacity {cap}", job.len());
+    shared.fabric.begin_step(step);
+    // Padded super-batch, member-major: request q is member q/B's local
+    // row q%B. Padding rows are zeros — they run through the same
+    // forward (row-independent) and their logits are simply unread.
+    let mut flat = vec![0f32; cap * IMG_FLOATS];
+    for (q, r) in job.iter().enumerate() {
+        flat[q * IMG_FLOATS..(q + 1) * IMG_FLOATS].copy_from_slice(r.image.as_f32());
+    }
+    for dst in 1..k {
+        let mut payload = Vec::with_capacity(2 + b * IMG_FLOATS);
+        payload.push(OP_WORK);
+        payload.push(step as f32);
+        payload.extend_from_slice(&flat[dst * b * IMG_FLOATS..(dst + 1) * b * IMG_FLOATS]);
+        shared.fabric.post(0, dst, ctrl_tag(), payload);
+    }
+    flat.truncate(b * IMG_FLOATS);
+    let batch = shared.slice_batch(flat);
+    let ctx = shared.ctx(step);
+    let hooks = RankHooks::none();
+    let mut st = RankState::new(0, shared.program, &batch, &ctx);
+    run_rank_span(shared.program.mp_span(), 0, w, &batch, &mut st, &ctx, &hooks)?;
+    let logits = st.take_logits();
+    // End-of-step barrier: every member finished its span, so all
+    // step-internal mail is drained and the exchange tags are free for
+    // the next step.
+    for src in 1..k {
+        shared.fabric.take_blocking(0, src, done_tag())?;
+    }
+    Ok(logits)
+}
+
+/// Map each request back to its logits row and send the reply.
+///
+/// B/K assembly order: member `j`'s local row `i` lands in round
+/// `i / size` at assembled row `j·size + i % size`, where
+/// `size = B/k` (for k=1, round 0 row `i`).
+fn reply_job(
+    job: Vec<InferRequest>,
+    logits: &[HostTensor],
+    b: usize,
+    k: usize,
+    stats: &ServeStats,
+) {
+    let size = (b / k).max(1);
+    let n = job.len();
+    for (q, req) in job.into_iter().enumerate() {
+        let (j, i) = (q / b, q % b);
+        let (round, row) = (i / size, j * size + i % size);
+        let lt = &logits[round];
+        let nc = lt.shape[1];
+        let row_data = lt.as_f32()[row * nc..(row + 1) * nc].to_vec();
+        let _ = req
+            .reply
+            .send(Message::Reply { id: req.id, logits: HostTensor::f32(vec![nc], row_data) });
+        stats.replied.fetch_add(1, Ordering::SeqCst);
+    }
+    stats.inflight.fetch_sub(n, Ordering::SeqCst);
+}
+
+/// Run `images` through a one-shot replica and return one
+/// `[num_classes]` logits tensor per image, in order — the in-process
+/// serving path the parity suite compares against
+/// [`Session::evaluate`](crate::api::Session::evaluate) and against the
+/// TCP frontend.
+pub fn infer_inproc(model: &ServeModel, images: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let cap = model.capacity()?;
+    let shared_model = Arc::new(model.clone());
+    let (requeue_tx, requeue_rx) = std::sync::mpsc::channel();
+    let stats = Arc::new(ServeStats::new());
+    let mut replica = Replica::spawn(shared_model, 0, requeue_tx, None, stats);
+    let (tx, rx) = std::sync::mpsc::channel::<Message>();
+    for (q0, chunk) in images.chunks(cap).enumerate() {
+        let mut job: Vec<InferRequest> = chunk
+            .iter()
+            .enumerate()
+            .map(|(i, img)| InferRequest {
+                id: (q0 * cap + i) as u64,
+                deadline: None,
+                image: HostTensor::f32(vec![32, 32, 3], img.as_f32().to_vec()),
+                reply: tx.clone(),
+            })
+            .collect();
+        loop {
+            match replica.try_submit(job) {
+                Ok(()) => break,
+                Err(back) => {
+                    if replica.is_dead() {
+                        bail!("in-proc serving replica died mid-batch");
+                    }
+                    job = back;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+    drop(tx);
+    let mut out: Vec<Option<HostTensor>> = (0..images.len()).map(|_| None).collect();
+    for _ in 0..images.len() {
+        match rx.recv() {
+            Ok(Message::Reply { id, logits }) => out[id as usize] = Some(logits),
+            Ok(other) => bail!("unexpected in-proc serving reply: {other:?}"),
+            Err(_) => {
+                let _ = requeue_rx.try_recv();
+                bail!("in-proc serving replica died before all replies arrived");
+            }
+        }
+    }
+    replica.shutdown();
+    out.into_iter()
+        .enumerate()
+        .map(|(i, o)| o.ok_or_else(|| anyhow!("no reply for image {i}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(mp: usize) -> ServeModel {
+        let cfg = ClusterConfig { n_workers: mp.max(1), mp, ..Default::default() };
+        ServeModel::fresh(cfg)
+    }
+
+    #[test]
+    fn fresh_model_has_full_tensor_sets() {
+        let m = model(2);
+        assert_eq!(m.conv.len(), 14);
+        assert_eq!(m.fc.len(), 6);
+        assert_eq!(m.step, 0);
+        assert_eq!(m.cfg.scheme, McastScheme::BoverK);
+    }
+
+    #[test]
+    fn capacity_is_k_times_artifact_batch() {
+        let b = RuntimeClient::native().unwrap().manifest.batch;
+        assert_eq!(model(1).capacity().unwrap(), b);
+        assert_eq!(model(2).capacity().unwrap(), 2 * b);
+        assert_eq!(model(4).capacity().unwrap(), 4 * b);
+    }
+
+    #[test]
+    fn inproc_inference_returns_per_image_logits() {
+        let m = model(2);
+        let cap = m.capacity().unwrap();
+        // One full step plus a partial second step.
+        let n = cap + 3;
+        let images: Vec<HostTensor> = (0..n)
+            .map(|i| {
+                HostTensor::f32(
+                    vec![32, 32, 3],
+                    (0..IMG_FLOATS).map(|p| ((i * 31 + p) % 255) as f32 / 255.0).collect(),
+                )
+            })
+            .collect();
+        let logits = infer_inproc(&m, &images).unwrap();
+        assert_eq!(logits.len(), n);
+        for l in &logits {
+            assert_eq!(l.shape.len(), 1);
+            assert!(l.numel() >= 2);
+            assert!(l.as_f32().iter().all(|v| v.is_finite()));
+        }
+        // Distinct inputs produce distinct logits; identical inputs
+        // produce bitwise-identical logits regardless of which step or
+        // member slot served them.
+        assert_ne!(logits[0].as_f32(), logits[1].as_f32());
+        let again = infer_inproc(&m, &images[..1]).unwrap();
+        assert_eq!(again[0].as_f32(), logits[0].as_f32());
+    }
+
+    #[test]
+    fn dead_replica_rejects_submissions() {
+        let m = Arc::new(model(1));
+        let (requeue_tx, _requeue_rx) = std::sync::mpsc::channel();
+        let stats = Arc::new(ServeStats::new());
+        let mut r = Replica::spawn(m, 0, requeue_tx, Some(0), stats);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let job = vec![InferRequest {
+            id: 0,
+            deadline: None,
+            image: HostTensor::f32(vec![32, 32, 3], vec![0.0; IMG_FLOATS]),
+            reply: tx,
+        }];
+        // kill_after=0 kills on the first job; the job must come back
+        // (possibly after the runner notices), and later submissions
+        // must be refused.
+        let mut job = match r.try_submit(job) {
+            Ok(()) => Vec::new(),
+            Err(back) => back,
+        };
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !r.is_dead() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(r.is_dead(), "kill_after=0 replica never died");
+        if job.is_empty() {
+            job = vec![InferRequest {
+                id: 1,
+                deadline: None,
+                image: HostTensor::f32(vec![32, 32, 3], vec![0.0; IMG_FLOATS]),
+                reply: std::sync::mpsc::channel().0,
+            }];
+        }
+        assert!(r.try_submit(job).is_err());
+        r.shutdown();
+    }
+
+    #[test]
+    fn run_dir_loading_requires_checkpoint() {
+        let dir = std::env::temp_dir().join(format!("sb-serve-nockpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ClusterConfig { n_workers: 2, mp: 2, ..Default::default() };
+        let manifest = RunManifest::from_config(&cfg, 1).to_json();
+        RunDir::create(&dir, &manifest).unwrap();
+        let err = ServeModel::from_run_dir(&dir, None).unwrap_err();
+        assert!(err.to_string().contains("no valid checkpoint"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,484 @@
+//! The serving frontend: TCP accept loop, bounded admission, the
+//! deadline-aware batcher, round-robin replica dispatch, and the
+//! `serve_status.json` status surface the watcher renders.
+//!
+//! Request lifecycle (see `docs/ARCHITECTURE.md` §Serving):
+//!
+//! ```text
+//! client ──Predict──▶ reader ──try_send──▶ admission queue (bounded)
+//!                       │ full                     │
+//!                       ▼                          ▼
+//!              Overloaded(queue-full)       batcher: close at
+//!                                           max_batch or max_delay
+//!                                                  │ expired →
+//!                                                  │ Overloaded(deadline)
+//!                                                  ▼
+//!                                    round-robin over live replicas
+//!                                                  │ none live →
+//!                                                  │ Overloaded(draining)
+//!                                                  ▼
+//!                                    replica leader: forward step
+//!                                                  │
+//! client ◀──Reply(logits)───────────── per-request rows
+//! ```
+//!
+//! Admission is *bounded*: past `queue_depth` waiting requests the
+//! reader rejects immediately with a typed
+//! [`REASON_QUEUE_FULL`](super::protocol::REASON_QUEUE_FULL) — the
+//! server sheds load, it never grows an unbounded queue. Deadlines are
+//! honored *before* compute: the batcher drops expired requests at
+//! batch close, so no step cycles are spent on an answer nobody is
+//! waiting for.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::comm::transport::wire::{read_frame, Message};
+use crate::obs::LogHistogram;
+use crate::runtime::{DType, HostTensor};
+use crate::serve::engine::{InferRequest, Replica, ServeModel};
+use crate::serve::protocol::{IMG_FLOATS, REASON_DEADLINE, REASON_DRAINING, REASON_QUEUE_FULL};
+use crate::Result;
+
+/// Frontend configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP bind address; port 0 binds an ephemeral port (read it back
+    /// from [`Server::addr`]).
+    pub addr: String,
+    /// Replica engines to spawn — independent k-rank MP groups, the
+    /// serving analogue of the training DP groups.
+    pub replicas: usize,
+    /// Batch-close size cap, clamped to the k·B step capacity.
+    pub max_batch: usize,
+    /// Batch-close age cap: an open batch dispatches after this many
+    /// milliseconds even if not full.
+    pub max_delay_ms: u64,
+    /// Bounded admission-queue depth; beyond it requests are rejected
+    /// with [`REASON_QUEUE_FULL`].
+    pub queue_depth: usize,
+    /// Where to write `serve_status.json` (typically the run dir);
+    /// `None` disables the status surface.
+    pub status_path: Option<PathBuf>,
+    /// Dev/CI fault hook: kill replica 0 after it has served this many
+    /// batches, exercising the drain path under load.
+    pub kill_replica_after: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            replicas: 1,
+            max_batch: usize::MAX,
+            max_delay_ms: 5,
+            queue_depth: 256,
+            status_path: None,
+            kill_replica_after: None,
+        }
+    }
+}
+
+/// Shared serving counters — written by the reader threads, the
+/// batcher, and the replica engines; snapshotted by the status writer.
+pub struct ServeStats {
+    /// Predict frames accepted off sockets.
+    pub received: AtomicUsize,
+    /// Replies sent (one logits row each).
+    pub replied: AtomicUsize,
+    /// Rejections: admission queue full.
+    pub rejected_queue: AtomicUsize,
+    /// Rejections: deadline expired before compute.
+    pub rejected_deadline: AtomicUsize,
+    /// Rejections: no live replica / draining.
+    pub rejected_draining: AtomicUsize,
+    /// Forward steps served across all replicas.
+    pub batches: AtomicUsize,
+    /// Requests dispatched to a replica and not yet replied.
+    pub inflight: AtomicUsize,
+    /// Batch-occupancy histogram (requests per dispatched batch).
+    pub occupancy: Mutex<LogHistogram>,
+    /// Server start time, for req/s.
+    pub started: Instant,
+}
+
+impl ServeStats {
+    /// Fresh zeroed counters.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> ServeStats {
+        ServeStats {
+            received: AtomicUsize::new(0),
+            replied: AtomicUsize::new(0),
+            rejected_queue: AtomicUsize::new(0),
+            rejected_deadline: AtomicUsize::new(0),
+            rejected_draining: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            occupancy: Mutex::new(LogHistogram::new()),
+            started: Instant::now(),
+        }
+    }
+
+    /// Render the status surface as one JSON object (the
+    /// `serve_status.json` schema `splitbrain watch` reads).
+    pub fn to_json(&self, mp: usize, replicas: usize, replicas_live: usize) -> String {
+        let uptime = self.started.elapsed().as_secs_f64();
+        let replied = self.replied.load(Ordering::SeqCst);
+        let rps = if uptime > 0.0 { replied as f64 / uptime } else { 0.0 };
+        format!(
+            concat!(
+                "{{\"serving\":true,\"mp\":{},\"replicas\":{},\"replicas_live\":{},",
+                "\"received\":{},\"replied\":{},\"rejected_queue\":{},",
+                "\"rejected_deadline\":{},\"rejected_draining\":{},\"batches\":{},",
+                "\"inflight\":{},\"uptime_secs\":{:.3},\"reqs_per_sec\":{:.3},",
+                "\"occupancy\":{}}}"
+            ),
+            mp,
+            replicas,
+            replicas_live,
+            self.received.load(Ordering::SeqCst),
+            replied,
+            self.rejected_queue.load(Ordering::SeqCst),
+            self.rejected_deadline.load(Ordering::SeqCst),
+            self.rejected_draining.load(Ordering::SeqCst),
+            self.batches.load(Ordering::SeqCst),
+            self.inflight.load(Ordering::SeqCst),
+            uptime,
+            rps,
+            self.occupancy.lock().unwrap().to_json(),
+        )
+    }
+}
+
+/// A running serving frontend. Dropping (or calling
+/// [`shutdown`](Server::shutdown)) drains the replicas and joins every
+/// service thread; connection readers exit when their clients
+/// disconnect.
+pub struct Server {
+    addr: SocketAddr,
+    stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+    dead_flags: Vec<Arc<AtomicBool>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn the replicas, and start serving. Returns once the
+    /// listener is accepting.
+    pub fn start(model: ServeModel, cfg: ServeConfig) -> Result<Server> {
+        let cap = model.capacity()?;
+        let mp = model.mp();
+        let max_batch = cfg.max_batch.clamp(1, cap);
+        let model = Arc::new(model);
+        let stats = Arc::new(ServeStats::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let (requeue_tx, requeue_rx) = std::sync::mpsc::channel::<Vec<InferRequest>>();
+        let replicas: Vec<Replica> = (0..cfg.replicas.max(1))
+            .map(|i| {
+                Replica::spawn(
+                    model.clone(),
+                    i,
+                    requeue_tx.clone(),
+                    if i == 0 { cfg.kill_replica_after } else { None },
+                    stats.clone(),
+                )
+            })
+            .collect();
+        let dead_flags: Vec<Arc<AtomicBool>> = replicas.iter().map(|r| r.dead_flag()).collect();
+
+        let (admit_tx, admit_rx) = sync_channel::<InferRequest>(cfg.queue_depth.max(1));
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding serving frontend to {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+
+        let mut threads = Vec::new();
+        threads.push({
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || accept_loop(listener, admit_tx, stats, shutdown))
+        });
+        threads.push({
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            let max_delay = Duration::from_millis(cfg.max_delay_ms.max(1));
+            std::thread::spawn(move || {
+                batcher_loop(admit_rx, requeue_rx, replicas, max_batch, max_delay, stats, shutdown)
+            })
+        });
+        if let Some(path) = cfg.status_path.clone() {
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            let flags = dead_flags.clone();
+            let n_replicas = cfg.replicas.max(1);
+            threads.push(std::thread::spawn(move || {
+                while !shutdown.load(Ordering::SeqCst) {
+                    let live = flags.iter().filter(|f| !f.load(Ordering::SeqCst)).count();
+                    write_status(&path, &stats.to_json(mp, n_replicas, live));
+                    std::thread::sleep(Duration::from_millis(500));
+                }
+                let live = flags.iter().filter(|f| !f.load(Ordering::SeqCst)).count();
+                write_status(&path, &stats.to_json(mp, n_replicas, live));
+            }));
+        }
+        Ok(Server { addr, stats, shutdown, dead_flags, threads })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared counters, for tests and the CLI.
+    pub fn stats(&self) -> Arc<ServeStats> {
+        self.stats.clone()
+    }
+
+    /// Replicas still alive.
+    pub fn replicas_live(&self) -> usize {
+        self.dead_flags.iter().filter(|f| !f.load(Ordering::SeqCst)).count()
+    }
+
+    /// Stop accepting, drain the replicas, and join every service
+    /// thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Atomic status publish: write-then-rename so the watcher never reads
+/// a torn JSON document.
+fn write_status(path: &std::path::Path, json: &str) {
+    let tmp = path.with_extension("json.tmp");
+    if std::fs::write(&tmp, json).is_ok() {
+        let _ = std::fs::rename(&tmp, path);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    admit: SyncSender<InferRequest>,
+    stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let admit = admit.clone();
+                let stats = stats.clone();
+                std::thread::spawn(move || handle_conn(stream, admit, stats));
+            }
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Per-connection service: a reader loop on the calling thread plus a
+/// writer thread that serializes replies (engine threads and the
+/// batcher both feed it through the request's `reply` sender).
+fn handle_conn(stream: TcpStream, admit: SyncSender<InferRequest>, stats: Arc<ServeStats>) {
+    let _ = stream.set_nodelay(true);
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Message>();
+    let writer = match stream.try_clone() {
+        Ok(mut w) => std::thread::spawn(move || {
+            for msg in reply_rx {
+                if w.write_all(&msg.encode()).is_err() {
+                    break;
+                }
+            }
+        }),
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            // Clean EOF or a broken socket: the client is gone either way.
+            Ok(None) | Err(_) => break,
+        };
+        let (id, deadline_ms, image) = match Message::decode(&frame) {
+            Ok(Message::Predict { id, deadline_ms, image }) => (id, deadline_ms, image),
+            // Anything else on a client socket is a protocol violation.
+            Ok(_) | Err(_) => break,
+        };
+        stats.received.fetch_add(1, Ordering::SeqCst);
+        if image.dtype != DType::F32 || image.numel() != IMG_FLOATS {
+            // Malformed tensor: not an overload condition, a broken
+            // client — drop the connection.
+            break;
+        }
+        let image = HostTensor::f32(vec![32, 32, 3], image.as_f32().to_vec());
+        let deadline = (deadline_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
+        let req = InferRequest { id, deadline, image, reply: reply_tx.clone() };
+        if let Err(TrySendError::Full(req)) | Err(TrySendError::Disconnected(req)) =
+            admit.try_send(req)
+        {
+            stats.rejected_queue.fetch_add(1, Ordering::SeqCst);
+            let _ = req.reply.send(Message::Overloaded { id, reason: REASON_QUEUE_FULL });
+        }
+    }
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+/// Reject every request in `batch` with `reason`.
+fn reject_all(batch: Vec<InferRequest>, reason: u32, stats: &ServeStats) {
+    for req in batch {
+        match reason {
+            REASON_DEADLINE => stats.rejected_deadline.fetch_add(1, Ordering::SeqCst),
+            REASON_DRAINING => stats.rejected_draining.fetch_add(1, Ordering::SeqCst),
+            _ => stats.rejected_queue.fetch_add(1, Ordering::SeqCst),
+        };
+        let _ = req.reply.send(Message::Overloaded { id: req.id, reason });
+    }
+}
+
+/// The batcher: form batches from the admission queue (requeued work
+/// first), enforce deadlines at batch close, and round-robin dispatch
+/// over live replicas.
+fn batcher_loop(
+    admit_rx: Receiver<InferRequest>,
+    requeue_rx: Receiver<Vec<InferRequest>>,
+    mut replicas: Vec<Replica>,
+    max_batch: usize,
+    max_delay: Duration,
+    stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let poll = Duration::from_millis(20);
+    let mut backlog: VecDeque<InferRequest> = VecDeque::new();
+    let mut rr = 0usize;
+    'serve: loop {
+        // Work handed back by a dying replica gets priority: those
+        // requests have already waited one dispatch.
+        while let Ok(job) = requeue_rx.try_recv() {
+            for req in job {
+                backlog.push_front(req);
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut batch: Vec<InferRequest> = Vec::with_capacity(max_batch);
+        while batch.len() < max_batch {
+            match backlog.pop_front() {
+                Some(req) => batch.push(req),
+                None => break,
+            }
+        }
+        if batch.is_empty() {
+            match admit_rx.recv_timeout(poll) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Deadline-aware close: wait for more work until the batch is
+        // full or its oldest admitted request has aged max_delay.
+        let close = Instant::now() + max_delay;
+        while batch.len() < max_batch {
+            let left = close.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match admit_rx.recv_timeout(left) {
+                Ok(req) => batch.push(req),
+                Err(_) => break,
+            }
+        }
+        // Expired requests are dropped here — before any compute.
+        let now = Instant::now();
+        let (batch, expired): (Vec<_>, Vec<_>) = batch
+            .into_iter()
+            .partition(|r| r.deadline.map(|d| now <= d).unwrap_or(true));
+        reject_all(expired, REASON_DEADLINE, &stats);
+        if batch.is_empty() {
+            continue;
+        }
+        let mut job = batch;
+        loop {
+            let live: Vec<usize> = (0..replicas.len()).filter(|&i| !replicas[i].is_dead()).collect();
+            if live.is_empty() {
+                reject_all(job, REASON_DRAINING, &stats);
+                continue 'serve;
+            }
+            let len = job.len();
+            let mut placed = false;
+            for attempt in 0..live.len() {
+                let i = live[(rr + attempt) % live.len()];
+                match replicas[i].try_submit(job) {
+                    Ok(()) => {
+                        rr = rr.wrapping_add(1);
+                        stats.inflight.fetch_add(len, Ordering::SeqCst);
+                        stats.occupancy.lock().unwrap().record(len as u64);
+                        placed = true;
+                        job = Vec::new();
+                        break;
+                    }
+                    Err(back) => job = back,
+                }
+            }
+            if placed {
+                break;
+            }
+            // Every live replica's in-flight slot is full: yield,
+            // pick up any requeued work, and retry.
+            if shutdown.load(Ordering::SeqCst) {
+                reject_all(job, REASON_DRAINING, &stats);
+                break 'serve;
+            }
+            while let Ok(j) = requeue_rx.try_recv() {
+                for req in j {
+                    backlog.push_front(req);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // Drain: refuse whatever is still queued, then stop the replicas.
+    let mut leftovers: Vec<InferRequest> = backlog.into_iter().collect();
+    while let Ok(req) = admit_rx.try_recv() {
+        leftovers.push(req);
+    }
+    while let Ok(job) = requeue_rx.try_recv() {
+        leftovers.extend(job);
+    }
+    reject_all(leftovers, REASON_DRAINING, &stats);
+    for r in &mut replicas {
+        r.shutdown();
+    }
+}

@@ -1,0 +1,335 @@
+//! Open-loop load generator for the serving frontend.
+//!
+//! Arrivals are Poisson: inter-arrival gaps are drawn as
+//! `-ln(1-U)/rate`, and the writer thread keeps sending on schedule
+//! whether or not replies have come back — *open loop*, so a slow
+//! server sees real queue pressure instead of the self-throttling a
+//! closed loop would apply. The reader thread stamps each reply
+//! against its send time; the report carries p50/p95/p99 latency,
+//! completed-request throughput, a log₂ latency histogram, and typed
+//! rejection counts (queue-full / deadline / draining), plus a
+//! wrong-shape counter the CI smoke gate pins at zero.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+
+use crate::comm::transport::wire::{read_frame, Message};
+use crate::obs::LogHistogram;
+use crate::runtime::{DType, HostTensor};
+use crate::serve::protocol::{IMG_FLOATS, REASON_DEADLINE, REASON_DRAINING, REASON_QUEUE_FULL};
+use crate::util::Rng;
+use crate::Result;
+
+/// Load-generator configuration.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Serving frontend address, e.g. `127.0.0.1:7070`.
+    pub addr: String,
+    /// Target arrival rate, requests/second (Poisson).
+    pub rate: f64,
+    /// Total requests to send.
+    pub requests: usize,
+    /// Per-request deadline in milliseconds (0 = none).
+    pub deadline_ms: u32,
+    /// Arrival-process and payload seed.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            rate: 500.0,
+            requests: 1000,
+            deadline_ms: 0,
+            seed: 7,
+        }
+    }
+}
+
+/// What one load-generation run measured.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Requests sent.
+    pub sent: usize,
+    /// Well-formed logits replies received.
+    pub replies: usize,
+    /// Rejections by reason.
+    pub rejected_queue: usize,
+    /// Deadline-expired rejections.
+    pub rejected_deadline: usize,
+    /// Draining rejections (no live replica).
+    pub rejected_draining: usize,
+    /// Replies whose logits were not a finite rank-1 f32 vector — the
+    /// CI smoke gate requires this to be zero.
+    pub wrong_shape: usize,
+    /// Median reply latency, milliseconds.
+    pub p50_ms: f64,
+    /// 95th-percentile reply latency, milliseconds.
+    pub p95_ms: f64,
+    /// 99th-percentile reply latency, milliseconds.
+    pub p99_ms: f64,
+    /// Completed replies per second of wall clock.
+    pub reqs_per_sec: f64,
+    /// Wall-clock seconds from first send to last reply.
+    pub elapsed_secs: f64,
+    /// log₂ latency histogram (microseconds).
+    pub latency_hist: LogHistogram,
+}
+
+impl LoadgenReport {
+    /// One `BENCH_serving.json` row (the schema `tools/bench_compare.py`
+    /// gates: `reqs_per_sec` must not drop, `p99_ms` must not inflate).
+    pub fn bench_row(&self, config: &str) -> String {
+        format!(
+            concat!(
+                "{{\"config\": \"{}\", \"sent\": {}, \"replies\": {}, ",
+                "\"rejected_queue\": {}, \"rejected_deadline\": {}, ",
+                "\"rejected_draining\": {}, \"wrong_shape\": {}, ",
+                "\"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, ",
+                "\"reqs_per_sec\": {:.2}, \"elapsed_secs\": {:.3}}}"
+            ),
+            config,
+            self.sent,
+            self.replies,
+            self.rejected_queue,
+            self.rejected_deadline,
+            self.rejected_draining,
+            self.wrong_shape,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.reqs_per_sec,
+            self.elapsed_secs,
+        )
+    }
+
+    /// Human-readable summary for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "sent {}  replies {}  rejected {} (queue {} / deadline {} / draining {})  \
+             wrong-shape {}\nlatency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  \
+             throughput {:.1} req/s  elapsed {:.2} s",
+            self.sent,
+            self.replies,
+            self.rejected_queue + self.rejected_deadline + self.rejected_draining,
+            self.rejected_queue,
+            self.rejected_deadline,
+            self.rejected_draining,
+            self.wrong_shape,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.reqs_per_sec,
+            self.elapsed_secs,
+        )
+    }
+}
+
+/// Sorted-vector percentile (nearest-rank on the sorted sample).
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Deterministic payload for request `id`: cheap to produce, distinct
+/// per request, and in the normalized [0, 1] pixel range.
+fn request_image(id: u64) -> HostTensor {
+    let data: Vec<f32> =
+        (0..IMG_FLOATS).map(|p| ((id as usize * 131 + p * 7) % 256) as f32 / 255.0).collect();
+    HostTensor::f32(vec![32, 32, 3], data)
+}
+
+/// Run one open-loop load generation against a serving frontend.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.rate <= 0.0 {
+        bail!("loadgen rate must be positive (got {})", cfg.rate);
+    }
+    if cfg.requests == 0 {
+        bail!("loadgen needs at least one request");
+    }
+    let stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting loadgen to {}", cfg.addr))?;
+    let _ = stream.set_nodelay(true);
+    let mut write_half = stream.try_clone().context("cloning loadgen socket")?;
+
+    let n = cfg.requests;
+    let sent_at: Arc<Mutex<Vec<Option<Instant>>>> = Arc::new(Mutex::new(vec![None; n]));
+    let start = Instant::now();
+
+    let writer = {
+        let sent_at = sent_at.clone();
+        let cfg = cfg.clone();
+        std::thread::spawn(move || -> Result<usize> {
+            let mut rng = Rng::new(cfg.seed);
+            let mut next = Instant::now();
+            for id in 0..n as u64 {
+                let now = Instant::now();
+                if next > now {
+                    std::thread::sleep(next - now);
+                }
+                let gap = -(1.0 - rng.uniform_f64()).ln() / cfg.rate;
+                next += Duration::from_secs_f64(gap);
+                let msg = Message::Predict {
+                    id,
+                    deadline_ms: cfg.deadline_ms,
+                    image: request_image(id),
+                };
+                sent_at.lock().unwrap()[id as usize] = Some(Instant::now());
+                write_half
+                    .write_all(&msg.encode())
+                    .with_context(|| format!("sending request {id}"))?;
+            }
+            Ok(n)
+        })
+    };
+
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(n);
+    let mut hist = LogHistogram::new();
+    let (mut replies, mut wrong_shape) = (0usize, 0usize);
+    let (mut rej_queue, mut rej_deadline, mut rej_draining) = (0usize, 0usize, 0usize);
+    let mut reader = BufReader::new(stream);
+    let mut outstanding = n;
+    while outstanding > 0 {
+        let frame = match read_frame(&mut reader)? {
+            Some(f) => f,
+            None => break, // server closed before all replies arrived
+        };
+        let now = Instant::now();
+        match Message::decode(&frame)? {
+            Message::Reply { id, logits } => {
+                outstanding -= 1;
+                replies += 1;
+                let ok = logits.dtype == DType::F32
+                    && logits.shape.len() == 1
+                    && logits.numel() >= 2
+                    && logits.as_f32().iter().all(|v| v.is_finite());
+                if !ok {
+                    wrong_shape += 1;
+                }
+                if let Some(Some(t)) = sent_at.lock().unwrap().get(id as usize) {
+                    let lat = now.duration_since(*t);
+                    latencies_ms.push(lat.as_secs_f64() * 1e3);
+                    hist.record(lat.as_micros() as u64);
+                }
+            }
+            Message::Overloaded { reason, .. } => {
+                outstanding -= 1;
+                match reason {
+                    REASON_QUEUE_FULL => rej_queue += 1,
+                    REASON_DEADLINE => rej_deadline += 1,
+                    REASON_DRAINING => rej_draining += 1,
+                    _ => rej_queue += 1,
+                }
+            }
+            other => bail!("unexpected frame from serving frontend: {other:?}"),
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let sent = match writer.join() {
+        Ok(Ok(sent)) => sent,
+        Ok(Err(e)) => return Err(e.context("loadgen writer failed")),
+        Err(_) => bail!("loadgen writer panicked"),
+    };
+
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let reqs_per_sec = if elapsed > 0.0 { replies as f64 / elapsed } else { 0.0 };
+    Ok(LoadgenReport {
+        sent,
+        replies,
+        rejected_queue: rej_queue,
+        rejected_deadline: rej_deadline,
+        rejected_draining: rej_draining,
+        wrong_shape,
+        p50_ms: percentile(&latencies_ms, 0.50),
+        p95_ms: percentile(&latencies_ms, 0.95),
+        p99_ms: percentile(&latencies_ms, 0.99),
+        reqs_per_sec,
+        elapsed_secs: elapsed,
+        latency_hist: hist,
+    })
+}
+
+/// Drain helper used by in-process harnesses: collect `n` messages
+/// from a reply channel with a timeout, for admission tests that do
+/// not ride TCP.
+pub fn collect_replies(
+    rx: &Receiver<Message>,
+    n: usize,
+    timeout: Duration,
+) -> Result<Vec<Message>> {
+    let deadline = Instant::now() + timeout;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            bail!("timed out after collecting {}/{n} replies", out.len());
+        }
+        match rx.recv_timeout(left) {
+            Ok(msg) => out.push(msg),
+            Err(RecvTimeoutError::Timeout) => {
+                bail!("timed out after collecting {}/{n} replies", out.len())
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("reply channel closed after {}/{n} replies", out.len())
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.99), 3.0);
+    }
+
+    #[test]
+    fn request_images_are_normalized_and_distinct() {
+        let a = request_image(0);
+        let b = request_image(1);
+        assert_eq!(a.shape, vec![32, 32, 3]);
+        assert!(a.as_f32().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_ne!(a.as_f32(), b.as_f32());
+    }
+
+    #[test]
+    fn bench_row_is_valid_json() {
+        let r = LoadgenReport {
+            sent: 10,
+            replies: 9,
+            rejected_queue: 1,
+            rejected_deadline: 0,
+            rejected_draining: 0,
+            wrong_shape: 0,
+            p50_ms: 1.5,
+            p95_ms: 2.5,
+            p99_ms: 3.5,
+            reqs_per_sec: 123.4,
+            elapsed_secs: 0.08,
+            latency_hist: LogHistogram::new(),
+        };
+        let row = r.bench_row("serve_mp2");
+        let doc = crate::util::json::Json::parse(&row).unwrap();
+        assert_eq!(doc.get("config").unwrap().as_str().unwrap(), "serve_mp2");
+        assert_eq!(doc.get("replies").unwrap().as_u64().unwrap(), 9);
+        assert!(doc.get("p99_ms").unwrap().as_f64().unwrap() > 3.0);
+        assert!(r.render().contains("p99"));
+    }
+}

@@ -1,0 +1,36 @@
+//! Serving subsystem: sharded batched inference over the fabric, with
+//! deadline-aware admission.
+//!
+//! Training and serving share one compute path: [`engine`] compiles a
+//! **forward-only** step program from the same
+//! [`StepSchedule`](crate::coordinator::StepSchedule) the trainer runs
+//! ([`StepProgram::compile_forward`](crate::coordinator::StepProgram::compile_forward)),
+//! and executes it through the same `exec_op` arithmetic — conv
+//! forward, modulo B/K activation exchange, column-sharded FC with
+//! shard allgathers, head logits — so a served prediction is
+//! bit-identical to the training forward pass on the same weights
+//! (pinned by `tests/serve_parity.rs`).
+//!
+//! The moving parts:
+//!
+//! * [`engine`] — [`ServeModel`] (checkpoint/manifest loading) and
+//!   [`Replica`]: one k-rank MP group per replica on its own in-proc
+//!   fabric, leader-driven over a heartbeat-kept control lane;
+//! * [`frontend`] — [`Server`]: TCP accept loop over the shared wire
+//!   framing, bounded admission with typed `Overloaded` rejections,
+//!   the deadline-aware batcher, round-robin replica balancing with
+//!   failed-replica drain, and the `serve_status.json` surface
+//!   `splitbrain watch` renders;
+//! * [`loadgen`] — the open-loop Poisson load generator behind
+//!   `splitbrain loadgen` and `benches/serving.rs`;
+//! * [`protocol`] — rejection-reason codes and the fabric control
+//!   opcodes.
+
+pub mod engine;
+pub mod frontend;
+pub mod loadgen;
+pub mod protocol;
+
+pub use engine::{infer_inproc, InferRequest, Replica, ServeModel};
+pub use frontend::{ServeConfig, ServeStats, Server};
+pub use loadgen::{collect_replies, run_loadgen, LoadgenConfig, LoadgenReport};

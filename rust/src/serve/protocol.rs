@@ -1,0 +1,98 @@
+//! Serving protocol constants: the rejection-reason codes carried by
+//! [`Message::Overloaded`] replies and the fabric control lane a
+//! replica leader drives its MP-group members over.
+//!
+//! The request/reply frames themselves live in the shared wire module
+//! ([`crate::comm::transport::wire`]) — serving reuses the training
+//! transport's length-prefixed CRC-checked framing, it only adds the
+//! `Predict` / `Reply` / `Overloaded` kinds. This module owns what is
+//! serving-specific: why a request was rejected, and the in-fabric
+//! control opcodes that never appear on a client socket.
+//!
+//! [`Message::Overloaded`]: crate::comm::transport::wire::Message::Overloaded
+
+use crate::comm::fabric::Tag;
+
+/// Rejected at admission: the bounded request queue was full. The
+/// client should back off — the server sheds load instead of growing
+/// an unbounded queue.
+pub const REASON_QUEUE_FULL: u32 = 1;
+
+/// Rejected at batch close: the request's deadline expired while it
+/// waited, so it was dropped *before* any compute was spent on it.
+pub const REASON_DEADLINE: u32 = 2;
+
+/// Rejected at dispatch: no live replica remains (or the server is
+/// shutting down) — the cluster is draining.
+pub const REASON_DRAINING: u32 = 3;
+
+/// Human-readable name for an [`Message::Overloaded`] reason code.
+///
+/// [`Message::Overloaded`]: crate::comm::transport::wire::Message::Overloaded
+pub fn reason_name(reason: u32) -> &'static str {
+    match reason {
+        REASON_QUEUE_FULL => "queue-full",
+        REASON_DEADLINE => "deadline-expired",
+        REASON_DRAINING => "draining",
+        _ => "unknown",
+    }
+}
+
+/// Tag phase of the serving control lane. Training steps use phases
+/// 1–7; serving control rides a disjoint lane so a serve fabric can
+/// never alias a training exchange.
+pub const SERVE_PHASE: u16 = 8;
+
+/// Leader → member control channel: WORK / HEARTBEAT / SHUTDOWN
+/// messages, one mailbox per member.
+pub fn ctrl_tag() -> Tag {
+    Tag::new(SERVE_PHASE, 0, 0)
+}
+
+/// Member → leader end-of-step acknowledgement — the serving BSP
+/// barrier that guarantees all step-internal mail drained before the
+/// next step reuses the exchange tags.
+pub fn done_tag() -> Tag {
+    Tag::new(SERVE_PHASE, 0, 1)
+}
+
+/// Control opcode: run one forward step. Payload layout is
+/// `[OP_WORK, step, B·3072 image floats]` — this member's row slice of
+/// the padded super-batch.
+pub const OP_WORK: f32 = 1.0;
+
+/// Control opcode: liveness keep-alive. The leader posts one whenever
+/// it has been idle for a quarter of the take timeout, so a parked
+/// member's fresh per-take deadline never expires just because no
+/// traffic arrived — an idle-but-healthy serving group stays up.
+pub const OP_HEARTBEAT: f32 = 2.0;
+
+/// Control opcode: drain and exit the member loop.
+pub const OP_SHUTDOWN: f32 = 3.0;
+
+/// Floats per request image (`32 × 32 × 3` NHWC, the VGG-11 input).
+pub const IMG_FLOATS: usize = 32 * 32 * 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reasons_are_distinct_and_named() {
+        assert_ne!(REASON_QUEUE_FULL, REASON_DEADLINE);
+        assert_ne!(REASON_DEADLINE, REASON_DRAINING);
+        assert_eq!(reason_name(REASON_QUEUE_FULL), "queue-full");
+        assert_eq!(reason_name(REASON_DEADLINE), "deadline-expired");
+        assert_eq!(reason_name(REASON_DRAINING), "draining");
+        assert_eq!(reason_name(99), "unknown");
+    }
+
+    #[test]
+    fn control_tags_do_not_alias() {
+        assert_ne!(ctrl_tag(), done_tag());
+        // Disjoint from every training-phase tag lane.
+        for phase in 1..=7u16 {
+            assert_ne!(ctrl_tag(), Tag::new(phase, 0, 0));
+        }
+    }
+}

@@ -230,6 +230,14 @@ impl RunDir {
         self.root.join("metrics.json")
     }
 
+    /// The serving frontend's status surface (`splitbrain serve
+    /// --run-dir`), rewritten atomically while the server is up; the
+    /// watcher reads it to render serving throughput instead of
+    /// misreading an idle server as a stalled training run.
+    pub fn serve_status_path(&self) -> PathBuf {
+        self.root.join("serve_status.json")
+    }
+
     /// Launch-engine per-process Chrome-trace file for `opid`; the
     /// launcher merges these into [`trace_path`](RunDir::trace_path)
     /// once every worker exits.

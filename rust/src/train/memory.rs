@@ -60,6 +60,23 @@ impl MemoryReport {
         MemoryReport { params, grads: params, optimizer: params, activations }
     }
 
+    /// Forward-only (serving) accounting: the same parameter and
+    /// activation staging as training, but no gradients and no
+    /// optimizer (momentum) state — the Fig.-7c-style saving an
+    /// inference replica banks on top of the shard saving. Serving
+    /// always runs scheme B/K.
+    pub fn inference_of(net: &TransformedNet, b: usize) -> MemoryReport {
+        MemoryReport { grads: 0, optimizer: 0, ..Self::of_scheme(net, b, McastScheme::BoverK) }
+    }
+
+    /// Fraction of the training footprint a forward-only replica
+    /// avoids (grads + optimizer over the training total).
+    pub fn inference_saving(net: &TransformedNet, b: usize) -> f64 {
+        let train = Self::of(net, b);
+        let infer = Self::inference_of(net, b);
+        1.0 - infer.total() as f64 / train.total() as f64
+    }
+
     /// Total bytes.
     pub fn total(&self) -> usize {
         self.params + self.grads + self.optimizer + self.activations
@@ -124,6 +141,25 @@ mod tests {
         let m1 = report(1);
         let m2 = report(2);
         assert!(m2.activations > m1.activations);
+    }
+
+    #[test]
+    fn inference_drops_grads_and_optimizer() {
+        let net = partition_network(
+            &vgg11(),
+            vec![32, 32, 3],
+            &PartitionConfig { mp: 2, ..Default::default() },
+        )
+        .unwrap();
+        let train = MemoryReport::of(&net, 32);
+        let infer = MemoryReport::inference_of(&net, 32);
+        assert_eq!(infer.params, train.params);
+        assert_eq!(infer.activations, train.activations);
+        assert_eq!(infer.grads, 0);
+        assert_eq!(infer.optimizer, 0);
+        let saving = MemoryReport::inference_saving(&net, 32);
+        // grads + optimizer = 2/3 of param-dominated training memory.
+        assert!(saving > 0.5 && saving < 0.7, "saving {saving}");
     }
 
     #[test]

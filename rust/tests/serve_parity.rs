@@ -1,0 +1,328 @@
+//! Serving acceptance battery.
+//!
+//! The contract under test: the serving subsystem is **the training
+//! forward pass behind a socket** — served logits are bitwise
+//! identical to what `Session::evaluate()` computes on the same
+//! checkpoint, for every MP width and for both the in-process and the
+//! TCP path — and the frontend's admission control degrades *typed*:
+//! a full queue, an expired deadline and a dying replica each produce
+//! an `Overloaded` reply (or a drained re-dispatch), never a wrong
+//! answer and never unbounded queue growth.
+
+use std::io::{BufReader, Write as _};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use splitbrain::api::{RunManifest, SessionBuilder};
+use splitbrain::comm::transport::wire::{read_frame, Message};
+use splitbrain::coordinator::ClusterConfig;
+use splitbrain::data::{Dataset, SyntheticCifar};
+use splitbrain::runtime::{HostTensor, RuntimeClient};
+use splitbrain::serve::{
+    infer_inproc, run_loadgen, LoadgenConfig, ServeConfig, ServeModel, Server,
+};
+
+const SEED: u64 = 123;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sb-serve-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A fresh (untrained, seeded) serving model of the given MP width —
+/// the same full parameter set for every `mp`, so cross-width logits
+/// comparisons are meaningful.
+fn fresh_model(mp: usize) -> ServeModel {
+    let cfg = ClusterConfig { n_workers: mp.max(1), mp, seed: SEED, ..Default::default() };
+    let manifest = RunManifest::from_config(&cfg, 1).to_json();
+    ServeModel::from_manifest_text(&manifest).unwrap()
+}
+
+/// Deterministic request payload `i` (distinct per request, [0,1]).
+fn img(i: usize) -> HostTensor {
+    let data: Vec<f32> =
+        (0..32 * 32 * 3).map(|p| ((i * 131 + p * 7) % 256) as f32 / 255.0).collect();
+    HostTensor::f32(vec![32, 32, 3], data)
+}
+
+fn bits(t: &HostTensor) -> Vec<u32> {
+    t.as_f32().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Replicates the native head's loss/argmax math (`head_core` +
+/// `count_correct`) from per-request logits rows, in the same f32 op
+/// order, so the comparison against `full_eval` is bitwise.
+fn loss_and_correct(rows: &[HostTensor], labels: &[i32]) -> (f64, i64) {
+    let n = rows.len();
+    let mut loss = 0.0f64;
+    let mut correct = 0i64;
+    for (ri, t) in rows.iter().enumerate() {
+        let row = t.as_f32();
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row {
+            if v > mx {
+                mx = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - mx).exp();
+        }
+        let lse = mx + sum.ln();
+        loss -= (row[labels[ri] as usize] - lse) as f64;
+        let mut best = 0usize;
+        for j in 1..row.len() {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == labels[ri] {
+            correct += 1;
+        }
+    }
+    (((loss / n as f64) as f32) as f64, correct)
+}
+
+// ---------------------------------------------------------------------------
+// Parity.
+
+/// The tentpole guarantee: one model, three shardings, identical bits.
+/// The request count deliberately avoids every capacity multiple so
+/// the padded partial-batch path is exercised at each width.
+#[test]
+fn logits_bitwise_identical_across_mp_widths() {
+    let images: Vec<HostTensor> = (0..11).map(img).collect();
+    let reference = infer_inproc(&fresh_model(1), &images).unwrap();
+    assert_eq!(reference.len(), images.len());
+    for mp in [2usize, 4] {
+        let logits = infer_inproc(&fresh_model(mp), &images).unwrap();
+        for (i, (a, b)) in reference.iter().zip(logits.iter()).enumerate() {
+            assert_eq!(a.shape, b.shape, "mp={mp} request {i} shape");
+            assert_eq!(bits(a), bits(b), "mp={mp} request {i} logits diverge from mp=1");
+        }
+    }
+}
+
+/// Serving a trained run dir reproduces `Session::evaluate()` exactly:
+/// the checkpoint the server loads and the forward it runs are the
+/// training ones, so loss and accuracy derived from served logits
+/// match evaluate's to the last bit.
+#[test]
+fn served_logits_match_session_evaluate_on_trained_checkpoint() {
+    let dir = tmp_dir("parity");
+    let rt = RuntimeClient::native().unwrap();
+    let data: Arc<dyn Dataset> = Arc::new(SyntheticCifar::new(64, SEED));
+    let mut session = SessionBuilder::new()
+        .workers(2)
+        .mp(2)
+        .steps(4)
+        .avg_period(2)
+        .seed(SEED)
+        .dataset_size(64)
+        .run_dir(&dir)
+        .validate(&rt)
+        .unwrap()
+        .start_with_dataset(data.clone())
+        .unwrap();
+    session.run().unwrap();
+    let n_batches = 2;
+    let batch = rt.manifest.batch;
+    let (eval_loss, eval_acc) = session.evaluate(data.as_ref(), n_batches).unwrap();
+    drop(session);
+
+    let model = ServeModel::from_run_dir(&dir, None).unwrap();
+    assert_eq!(model.step, 4, "server should load the final checkpoint");
+    let mut total_loss = 0.0f64;
+    let mut total_correct = 0i64;
+    for bi in 0..n_batches {
+        let idx: Vec<usize> = (0..batch).map(|i| (bi * batch + i) % data.len()).collect();
+        let gathered = data.gather(&idx);
+        let images: Vec<HostTensor> = gathered
+            .images
+            .as_f32()
+            .chunks(32 * 32 * 3)
+            .map(|c| HostTensor::f32(vec![32, 32, 3], c.to_vec()))
+            .collect();
+        let logits = infer_inproc(&model, &images).unwrap();
+        let (loss, correct) = loss_and_correct(&logits, gathered.labels.as_i32());
+        total_loss += loss;
+        total_correct += correct;
+    }
+    let served_loss = total_loss / n_batches as f64;
+    let served_acc = total_correct as f64 / (n_batches * batch) as f64;
+    assert_eq!(
+        eval_loss.to_bits(),
+        served_loss.to_bits(),
+        "loss from served logits diverges from evaluate(): {eval_loss} vs {served_loss}"
+    );
+    assert_eq!(eval_acc.to_bits(), served_acc.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The TCP path returns the same bits as the in-process path: framing,
+/// batching and replica dispatch are transport, not math.
+#[test]
+fn tcp_replies_bitwise_match_inproc() {
+    let images: Vec<HostTensor> = (0..5).map(img).collect();
+    let model = fresh_model(2);
+    let reference = infer_inproc(&model, &images).unwrap();
+
+    let server = Server::start(model, ServeConfig::default()).unwrap();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut write_half = stream.try_clone().unwrap();
+    for (i, image) in images.iter().enumerate() {
+        let msg = Message::Predict { id: i as u64, deadline_ms: 0, image: image.clone() };
+        write_half.write_all(&msg.encode()).unwrap();
+    }
+    let mut reader = BufReader::new(stream);
+    let mut got: Vec<Option<HostTensor>> = vec![None; images.len()];
+    for _ in 0..images.len() {
+        let frame = read_frame(&mut reader).unwrap().expect("server closed early");
+        match Message::decode(&frame).unwrap() {
+            Message::Reply { id, logits } => got[id as usize] = Some(logits),
+            other => panic!("expected Reply, got {other:?}"),
+        }
+    }
+    server.shutdown();
+    for (i, (a, b)) in reference.iter().zip(got.iter()).enumerate() {
+        let b = b.as_ref().expect("missing reply");
+        assert_eq!(bits(a), bits(b), "request {i}: TCP logits diverge from in-proc");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission control.
+
+/// A full admission queue produces typed `Overloaded(queue-full)`
+/// rejections, and every request still gets exactly one outcome.
+#[test]
+fn full_queue_rejects_typed_never_grows() {
+    let server = Server::start(
+        fresh_model(1),
+        ServeConfig {
+            queue_depth: 1,
+            max_batch: 1,
+            max_delay_ms: 0,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        rate: 1e6, // instantaneous burst: the queue must overflow
+        requests: 24,
+        deadline_ms: 0,
+        seed: SEED,
+    })
+    .unwrap();
+    server.shutdown();
+    assert_eq!(report.sent, 24);
+    assert!(report.rejected_queue >= 1, "burst at depth 1 must overflow: {report:?}");
+    assert_eq!(report.wrong_shape, 0);
+    assert_eq!(
+        report.replies
+            + report.rejected_queue
+            + report.rejected_deadline
+            + report.rejected_draining,
+        report.sent,
+        "every request gets exactly one outcome: {report:?}"
+    );
+}
+
+/// A request whose deadline expired while batching is rejected
+/// *before* compute: typed `Overloaded(deadline)`, zero batches run.
+#[test]
+fn expired_deadline_is_dropped_before_compute() {
+    let server = Server::start(
+        fresh_model(1),
+        ServeConfig { max_delay_ms: 150, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut write_half = stream.try_clone().unwrap();
+    let msg = Message::Predict { id: 9, deadline_ms: 1, image: img(0) };
+    write_half.write_all(&msg.encode()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let frame = read_frame(&mut reader).unwrap().expect("server closed early");
+    match Message::decode(&frame).unwrap() {
+        Message::Overloaded { id, reason } => {
+            assert_eq!(id, 9);
+            assert_eq!(reason, splitbrain::serve::protocol::REASON_DEADLINE);
+        }
+        other => panic!("expected deadline rejection, got {other:?}"),
+    }
+    let stats = server.stats();
+    assert_eq!(stats.rejected_deadline.load(std::sync::atomic::Ordering::SeqCst), 1);
+    assert_eq!(
+        stats.batches.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "an expired request must never reach a replica"
+    );
+    server.shutdown();
+}
+
+/// Killing a replica mid-load drains its in-flight work back through
+/// the surviving replica: no wrong answers, no lost requests, and the
+/// frontend reports one live replica afterwards.
+#[test]
+fn replica_kill_mid_load_drains_without_wrong_answers() {
+    let server = Server::start(
+        fresh_model(1),
+        ServeConfig {
+            replicas: 2,
+            max_batch: 8,
+            kill_replica_after: Some(1),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let report = run_loadgen(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        rate: 2000.0,
+        requests: 40,
+        deadline_ms: 0,
+        seed: SEED,
+    })
+    .unwrap();
+    assert_eq!(report.wrong_shape, 0, "a dying replica must never produce a wrong answer");
+    assert!(report.replies >= 1);
+    assert_eq!(
+        report.replies
+            + report.rejected_queue
+            + report.rejected_deadline
+            + report.rejected_draining,
+        report.sent,
+        "drain must not lose requests: {report:?}"
+    );
+    assert_eq!(server.replicas_live(), 1, "replica 0 was killed by the fault hook");
+    server.shutdown();
+}
+
+/// Regression test for the idle-connection fix: a serving MP group
+/// sits idle far past the fabric take timeout, and the leader's
+/// heartbeats keep the parked members from presuming it lost. Without
+/// them the first idle gap would kill the replica.
+#[test]
+fn idle_server_survives_fabric_take_timeout() {
+    let mut model = fresh_model(2);
+    model.cfg.take_timeout_ms = 150;
+    let server = Server::start(model, ServeConfig::default()).unwrap();
+    let cfg = LoadgenConfig {
+        addr: server.addr().to_string(),
+        rate: 1000.0,
+        requests: 8,
+        deadline_ms: 0,
+        seed: SEED,
+    };
+    let warm = run_loadgen(&cfg).unwrap();
+    assert_eq!(warm.replies, 8);
+    // Idle for many multiples of the take timeout.
+    std::thread::sleep(Duration::from_millis(1200));
+    assert_eq!(server.replicas_live(), 1, "idle must not kill a healthy replica");
+    let after = run_loadgen(&cfg).unwrap();
+    assert_eq!(after.replies, 8, "replica must still serve after the idle gap: {after:?}");
+    assert_eq!(after.wrong_shape, 0);
+    server.shutdown();
+}

@@ -1,10 +1,14 @@
 #!/usr/bin/env python3
-"""Compare a fresh BENCH_throughput.json against the committed baseline.
+"""Compare a fresh bench JSON against the committed baseline.
 
 Usage: bench_compare.py BASELINE FRESH OUT
 
-The CI bench-smoke job runs the throughput bench into FRESH and calls
-this script with the repo's committed BASELINE. Two modes:
+Handles both bench families by row shape: training rows carry
+`steps_per_sec` (BENCH_throughput.json, gated on steps/sec) and
+serving rows carry `reqs_per_sec` + `p99_ms` (BENCH_serving.json,
+gated on throughput *drop* and p99 latency *rise*). The CI bench-smoke
+and serving-smoke jobs run the matching bench into FRESH and call this
+script with the repo's committed BASELINE. Two modes:
 
 * **Seed mode** — the baseline has no results (the committed file is
   the unblessed placeholder, or a config is brand new). The script
@@ -75,6 +79,42 @@ def main():
             f = fresh_rows.get(config)
             if f is None:
                 failures.append(f"{config}: present in baseline, missing from fresh run")
+                continue
+            if "reqs_per_sec" in b:
+                # Serving row: throughput must not drop, p99 must not rise.
+                rel = (f["reqs_per_sec"] - b["reqs_per_sec"]) / b["reqs_per_sec"]
+                p99_rel = (
+                    (f["p99_ms"] - b["p99_ms"]) / b["p99_ms"] if b.get("p99_ms") else 0.0
+                )
+                rows.append(
+                    {
+                        "config": config,
+                        "baseline_reqs_per_sec": b["reqs_per_sec"],
+                        "fresh_reqs_per_sec": f["reqs_per_sec"],
+                        "delta": rel,
+                        "baseline_p99_ms": b.get("p99_ms"),
+                        "fresh_p99_ms": f.get("p99_ms"),
+                        "p99_delta": p99_rel,
+                    }
+                )
+                bad = rel < -MAX_REGRESSION or p99_rel > MAX_REGRESSION
+                print(
+                    f"bench_compare: {config}: {b['reqs_per_sec']:.1f} -> "
+                    f"{f['reqs_per_sec']:.1f} req/s ({rel:+.1%}), "
+                    f"p99 {b.get('p99_ms', 0):.2f} -> {f.get('p99_ms', 0):.2f} ms "
+                    f"({p99_rel:+.1%}) {'FAIL' if bad else 'ok'}"
+                )
+                if rel < -MAX_REGRESSION:
+                    failures.append(
+                        f"{config}: req/s regressed {rel:+.1%} (limit -{MAX_REGRESSION:.0%})"
+                    )
+                if p99_rel > MAX_REGRESSION:
+                    failures.append(
+                        f"{config}: p99 latency rose {p99_rel:+.1%} "
+                        f"(limit +{MAX_REGRESSION:.0%})"
+                    )
+                if f.get("wrong_shape", 0):
+                    failures.append(f"{config}: {f['wrong_shape']} wrong-shape replies")
                 continue
             rel = (f["steps_per_sec"] - b["steps_per_sec"]) / b["steps_per_sec"]
             rows.append(
